@@ -1,0 +1,28 @@
+//! Figure 1 — layer-by-layer activation-distribution drift of the quantized
+//! stream, GPTQ vs Norm-Tweaking, written as CSV + ASCII chart.
+//!
+//! ```text
+//! cargo run --release --example figure1_drift [-- nt-small]
+//! ```
+
+use normtweak::report::repro::{figure1, ReproCtx};
+
+fn main() -> normtweak::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "nt-small".to_string());
+    let artifacts = std::env::var("NT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let ctx = ReproCtx::new(&artifacts)?;
+    let table = figure1(&ctx, &model)?;
+    println!("{}", table.ascii());
+
+    // CSV for external plotting
+    let out = std::path::Path::new(&artifacts).join("experiments");
+    std::fs::create_dir_all(&out)?;
+    let csv_path = out.join(format!("figure1_{model}.csv"));
+    let mut csv = String::from("layer,gptq_delta_mu,nt_delta_mu\n");
+    for row in &table.rows {
+        csv.push_str(&format!("{},{},{}\n", row[0], row[1], row[2]));
+    }
+    std::fs::write(&csv_path, csv)?;
+    eprintln!("csv written to {}", csv_path.display());
+    Ok(())
+}

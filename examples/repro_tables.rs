@@ -1,0 +1,95 @@
+//! Regenerate every table and figure of the paper's evaluation section.
+//!
+//! ```text
+//! cargo run --release --example repro_tables               # quick set (nt-tiny/nt-small)
+//! cargo run --release --example repro_tables -- --full     # all models incl. nt-medium
+//! cargo run --release --example repro_tables -- --table 2  # one table only
+//! ```
+//!
+//! Output: ASCII to stdout + markdown appended to artifacts/experiments/.
+
+use normtweak::report::repro::{self, ReproCtx};
+use normtweak::report::{save_record, Table};
+
+fn main() -> normtweak::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let full = args.iter().any(|a| a == "--full");
+    let only: Option<String> = args
+        .iter()
+        .position(|a| a == "--table")
+        .and_then(|i| args.get(i + 1).cloned());
+
+    let artifacts = std::env::var("NT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let ctx = ReproCtx::new(&artifacts)?;
+
+    // model sets per table (runtime grows with model size)
+    let t2_models: Vec<&str> = if full {
+        vec!["nt-tiny", "nt-small", "nt-small-rms", "nt-medium"]
+    } else {
+        vec!["nt-tiny", "nt-small"]
+    };
+    let small = ["nt-small"];
+    let t9_models: Vec<&str> = if full {
+        vec!["nt-small", "nt-small-rms"]
+    } else {
+        vec!["nt-small"]
+    };
+
+    let mut md = String::new();
+    let mut emit = |t: Table| {
+        println!("{}", t.ascii());
+        md.push_str(&t.markdown());
+        md.push('\n');
+    };
+
+    let want = |id: &str| only.as_deref().map(|o| o == id).unwrap_or(true);
+
+    if want("1") {
+        emit(repro::table1());
+    }
+    if want("fig1") {
+        emit(repro::figure1(&ctx, "nt-small")?);
+    }
+    if want("2") {
+        emit(repro::table2(&ctx, &t2_models)?);
+    }
+    if want("3") {
+        emit(repro::table3(&ctx, &t2_models)?);
+    }
+    if want("4") {
+        emit(repro::table4(&ctx, &small)?);
+    }
+    if want("5") {
+        emit(repro::table5(&ctx, "nt-small")?);
+    }
+    if want("6") {
+        emit(repro::table6(&ctx, "nt-small", &[1, 4, 10, 20, 50])?);
+    }
+    if want("7") {
+        emit(repro::table7(&ctx, "nt-small", full)?);
+    }
+    if want("8") {
+        emit(repro::table8(&ctx, "nt-small")?);
+    }
+    if want("9") {
+        emit(repro::table9(&ctx, &t9_models)?);
+    }
+    if want("10") {
+        emit(repro::table10(&ctx, "nt-small")?);
+    }
+
+    let out_dir = std::path::Path::new(&artifacts).join("experiments");
+    std::fs::create_dir_all(&out_dir)?;
+    let path = out_dir.join("tables.md");
+    std::fs::write(&path, &md)?;
+    save_record(
+        &artifacts,
+        "repro_meta",
+        &normtweak::util::json::obj(vec![
+            ("full", normtweak::util::json::Json::Bool(full)),
+            ("tables_md", normtweak::util::json::s(path.display().to_string())),
+        ]),
+    )?;
+    eprintln!("markdown written to {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Serving example: quantize (or load) a model and serve batched traffic,
+//! reporting latency percentiles and throughput — the deployment story.
+//!
+//! ```text
+//! cargo run --release --example serve_quantized [-- nt-small [n_requests]]
+//! ```
+
+use std::time::Instant;
+
+use normtweak::calib::CalibSet;
+use normtweak::coordinator::{quantize_model, PipelineConfig, QuantMethod, QuantModel};
+use normtweak::model::ModelWeights;
+use normtweak::quant::QuantScheme;
+use normtweak::runtime::Runtime;
+use normtweak::serve::{channel, serve_loop, ServeConfig};
+use normtweak::tweak::TweakConfig;
+
+fn main() -> normtweak::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "nt-small".to_string());
+    let n_requests: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(48);
+    let artifacts = std::env::var("NT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+
+    let runtime = Runtime::new(&artifacts)?;
+    let weights = ModelWeights::load_from_dir(&model, &artifacts)?;
+
+    // quantize W4 + NT for serving
+    let stream = normtweak::calib::corpus::token_stream(
+        &normtweak::calib::corpus::wiki_syn(),
+        runtime.manifest.calib_batch * weights.config.seq,
+    );
+    let calib = CalibSet::from_stream(&stream, runtime.manifest.calib_batch,
+                                      weights.config.seq, "wiki-syn")?;
+    let cfg = PipelineConfig::new(QuantMethod::Gptq, QuantScheme::w4_perchannel())
+        .with_tweak(TweakConfig::default());
+    eprintln!("quantizing {model} for serving...");
+    let (qm, _) = quantize_model(&runtime, &weights, &calib, &cfg)?;
+    let server_model = QuantModel::new(&runtime, &qm)?;
+
+    // drive concurrent traffic
+    let n_clients = 4;
+    let (handle, rx) = channel();
+    let latencies = std::sync::Mutex::new(Vec::<u128>::new());
+    let t0 = Instant::now();
+    let stats = std::thread::scope(|s| {
+        for c in 0..n_clients {
+            let h = handle.clone();
+            let lat = &latencies;
+            s.spawn(move || {
+                for i in 0..n_requests / n_clients {
+                    let prompt = vec![1, (8 + (c * 37 + i * 11) % 480) as i32];
+                    let t = Instant::now();
+                    if h.submit(prompt, 16).is_ok() {
+                        lat.lock().unwrap().push(t.elapsed().as_micros());
+                    }
+                }
+            });
+        }
+        drop(handle);
+        serve_loop(
+            &server_model,
+            ServeConfig { max_batch: 8, batch_window: std::time::Duration::from_millis(10) },
+            rx,
+        )
+    })?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut lat = latencies.into_inner().unwrap();
+    lat.sort_unstable();
+    let pct = |p: usize| lat[(lat.len() * p / 100).min(lat.len() - 1)] as f64 / 1000.0;
+    println!("\n== serve_quantized: {model}, {} requests, {n_clients} clients ==", stats.served);
+    println!("throughput: {:.1} req/s  ({:.1} tok/s generated)",
+             stats.served as f64 / wall,
+             (stats.served * 16) as f64 / wall);
+    println!("latency:    p50 {:.0} ms   p90 {:.0} ms   p99 {:.0} ms", pct(50), pct(90), pct(99));
+    println!("batching:   mean {:.2}, max {} (from {} batches)",
+             stats.mean_batch(), stats.max_batch_seen, stats.batches);
+    Ok(())
+}

@@ -1,0 +1,240 @@
+"""AOT export: lower every L2 graph to HLO *text* + write the manifest.
+
+HLO text (NOT `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate links) rejects; the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Exported graph inventory (see DESIGN.md §4): per model —
+
+    embed.b{B}                 tokens -> x0
+    block_fwd.b{B}             float block forward (fOut stream)
+    block_fwd_q.{grp}.b{B}     quantized block forward (qOut stream, eval)
+    block_taps.b{CB}           GPTQ Hessian tap activations
+    head.b{B}                  final norm + tied logits
+    channel_stats.b{CB}        float-target (mu, var)
+    tweak_step.{grp}           fused NT iteration (loss+grad+Adam)
+    tweak_step_mse / _kl       Table-9 loss ablation (nt-small, pc only)
+    xtx.{K}                    Gram matrix for Hessian accumulation
+
+{grp} ∈ {pc (per-channel), g64 (group=64)} — the paper's two quant grains.
+Inference graphs use the Pallas kernels; tweak graphs use the (pytest-
+equivalent) jnp oracles because pallas_call has no VJP.
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import BATCH_BUCKETS, CALIB_BATCH, MODELS, ModelConfig
+
+F32, I8, I32 = "f32", "i8", "i32"
+_JNP = {F32: jnp.float32, I8: jnp.int8, I32: jnp.int32}
+
+# eval/gen bucket + calibration bucket (B=1 is padded up by the coordinator)
+EXPORT_BUCKETS = [b for b in BATCH_BUCKETS if b in (8, CALIB_BATCH)]
+
+GROUPS = {"pc": 0, "g64": 64}   # 0 == per-channel (group = K)
+
+
+def spec(shape, dtype=F32):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def arg(name, shape, dtype=F32):
+    return {"name": name, **spec(shape, dtype)}
+
+
+def to_hlo_text(fn, in_specs):
+    shaped = [jax.ShapeDtypeStruct(tuple(s["shape"]), _JNP[s["dtype"]])
+              for s in in_specs]
+    # keep_unused: the manifest promises every declared input is a real
+    # parameter (block_taps, e.g., never touches wfc2 — jit would DCE it and
+    # the Rust side would feed more buffers than the executable expects)
+    lowered = jax.jit(fn, keep_unused=True).lower(*shaped)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+# --- per-graph arg builders ---------------------------------------------------
+
+
+def float_weight_args(cfg: ModelConfig):
+    d, ff = cfg.d_model, cfg.d_ff
+    out = [arg("ln1.g", (d,))]
+    if cfg.norm == "layernorm":
+        out.append(arg("ln1.b", (d,)))
+    out += [arg("attn.wqkv", (d, 3 * d)), arg("attn.bqkv", (3 * d,)),
+            arg("attn.wproj", (d, d)), arg("attn.bproj", (d,)),
+            arg("ln2.g", (d,))]
+    if cfg.norm == "layernorm":
+        out.append(arg("ln2.b", (d,)))
+    out += [arg("mlp.wfc1", (d, ff)), arg("mlp.bfc1", (ff,)),
+            arg("mlp.wfc2", (ff, d)), arg("mlp.bfc2", (d,))]
+    return out
+
+
+def qweight_args(cfg: ModelConfig, group: int):
+    d, ff = cfg.d_model, cfg.d_ff
+
+    def g_of(k):
+        return 1 if group == 0 else k // group
+
+    out = [arg("ln1.g", (d,))]
+    if cfg.norm == "layernorm":
+        out.append(arg("ln1.b", (d,)))
+    out += [arg("attn.wqkv.codes", (d, 3 * d), I8),
+            arg("attn.wqkv.scales", (g_of(d), 3 * d)),
+            arg("attn.bqkv", (3 * d,)),
+            arg("attn.wproj.codes", (d, d), I8),
+            arg("attn.wproj.scales", (g_of(d), d)),
+            arg("attn.bproj", (d,)),
+            arg("ln2.g", (d,))]
+    if cfg.norm == "layernorm":
+        out.append(arg("ln2.b", (d,)))
+    out += [arg("mlp.wfc1.codes", (d, ff), I8),
+            arg("mlp.wfc1.scales", (g_of(d), ff)),
+            arg("mlp.bfc1", (ff,)),
+            arg("mlp.wfc2.codes", (ff, d), I8),
+            arg("mlp.wfc2.scales", (g_of(ff), d)),
+            arg("mlp.bfc2", (d,))]
+    return out
+
+
+def norm_param_args(cfg: ModelConfig, prefix: str):
+    d = cfg.d_model
+    names = (("ln1.g", "ln1.b", "ln2.g", "ln2.b") if cfg.norm == "layernorm"
+             else ("ln1.g", "ln2.g"))
+    return [arg(f"{prefix}{n}", (d,)) for n in names]
+
+
+def graph_defs(cfg: ModelConfig):
+    """Yield (name, fn, input_args, n_outputs) for every graph of a model."""
+    d, ff, v, s = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq
+    cb = CALIB_BATCH
+
+    for b in EXPORT_BUCKETS:
+        yield (f"embed.b{b}",
+               lambda toks, te, pe, cfg=cfg: (M.embed(cfg, toks, te, pe),),
+               [arg("tokens", (b, s), I32), arg("tok_emb", (v, d)),
+                arg("pos_emb", (s, d))])
+
+        wargs = float_weight_args(cfg)
+        yield (f"block_fwd.b{b}",
+               lambda x, *w, cfg=cfg: (M.block_fwd(cfg, x, list(w)),),
+               [arg("x", (b, s, d))] + wargs)
+
+        yield (f"head.b{b}",
+               (lambda x, *rest, cfg=cfg:
+                (M.head(cfg, x, list(rest[:-1]), rest[-1]),)),
+               ([arg("x", (b, s, d)), arg("lnf.g", (d,))]
+                + ([arg("lnf.b", (d,))] if cfg.norm == "layernorm" else [])
+                + [arg("tok_emb", (v, d))]))
+
+        for gname, group in GROUPS.items():
+            yield (f"block_fwd_q.{gname}.b{b}",
+                   lambda x, *w, cfg=cfg: (M.block_fwd_q(cfg, x, list(w)),),
+                   [arg("x", (b, s, d))] + qweight_args(cfg, group))
+
+    yield (f"block_taps.b{cb}",
+           lambda x, *w, cfg=cfg: M.block_taps(cfg, x, list(w)),
+           [arg("x", (cb, s, d))] + float_weight_args(cfg))
+
+    yield (f"channel_stats.b{cb}",
+           lambda x: M.channel_stats_graph(x),
+           [arg("x", (cb, s, d))])
+
+    n_np = 4 if cfg.norm == "layernorm" else 2
+    for gname, group in GROUPS.items():
+        qa = qweight_args(cfg, group)
+
+        def tweak_fn(x, *rest, cfg=cfg, nq=len(qa), n_np=n_np):
+            qw = list(rest[:nq])
+            ms = list(rest[nq:nq + n_np])
+            vs = list(rest[nq + n_np:nq + 2 * n_np])
+            mu_f, var_f, lr, t = rest[nq + 2 * n_np:]
+            return M.tweak_step(cfg, x, qw, ms, vs, mu_f, var_f, lr, t)
+
+        yield (f"tweak_step.{gname}",
+               tweak_fn,
+               ([arg("x", (cb, s, d))] + qa
+                + norm_param_args(cfg, "m.") + norm_param_args(cfg, "v.")
+                + [arg("mu_f", (d,)), arg("var_f", (d,)),
+                   arg("lr", (1,)), arg("t", (1,))]))
+
+    # Table-9 loss-ablation graphs (nt-small only, per-channel)
+    if cfg.name == "nt-small":
+        qa = qweight_args(cfg, 0)
+        for lname, lfn in (("mse", M.tweak_step_mse), ("kl", M.tweak_step_kl)):
+            def abl_fn(x, *rest, cfg=cfg, nq=len(qa), n_np=n_np, lfn=lfn):
+                qw = list(rest[:nq])
+                ms = list(rest[nq:nq + n_np])
+                vs = list(rest[nq + n_np:nq + 2 * n_np])
+                y_f, lr, t = rest[nq + 2 * n_np:]
+                return lfn(cfg, x, qw, ms, vs, y_f, lr, t)
+
+            yield (f"tweak_step_{lname}.pc",
+                   abl_fn,
+                   ([arg("x", (cb, s, d))] + qa
+                    + norm_param_args(cfg, "m.") + norm_param_args(cfg, "v.")
+                    + [arg("y_f", (cb, s, d)), arg("lr", (1,)),
+                       arg("t", (1,))]))
+
+    rows = cb * s
+    for k in sorted({d, ff}):
+        yield (f"xtx.k{k}",
+               lambda x2d: (M.xtx(x2d),),
+               [arg("x", (rows, k))])
+
+
+def export_model(cfg: ModelConfig, out_dir: str, manifest: dict):
+    for name, fn, in_args in graph_defs(cfg):
+        t0 = time.time()
+        fname = f"{cfg.name}.{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        text = to_hlo_text(fn, in_args)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["graphs"].append({
+            "model": cfg.name, "name": name, "file": fname,
+            "inputs": in_args,
+        })
+        print(f"[aot] {cfg.name}.{name}: {len(text) // 1024}KB "
+              f"({time.time() - t0:.1f}s)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=list(MODELS))
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {
+        "format": 1,
+        "calib_batch": CALIB_BATCH,
+        "buckets": EXPORT_BUCKETS,
+        "groups": GROUPS,
+        "models": {name: {
+            "n_layer": c.n_layer, "d_model": c.d_model, "n_head": c.n_head,
+            "d_ff": c.d_ff, "vocab": c.vocab, "seq": c.seq, "norm": c.norm,
+        } for name, c in MODELS.items() if name in args.models},
+        "graphs": [],
+    }
+    for name in args.models:
+        export_model(MODELS[name], args.out, manifest)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest: {len(manifest['graphs'])} graphs")
+
+
+if __name__ == "__main__":
+    main()

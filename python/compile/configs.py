@@ -1,0 +1,109 @@
+"""Model size / architecture registry shared by model.py, aot.py and train.py.
+
+The Rust side carries the same registry in `rust/src/model/config.rs`; the two
+are cross-checked through `artifacts/manifest.json` (shapes) and the `.ntz`
+checkpoints (tensor names).
+"""
+
+from dataclasses import dataclass, field
+
+
+# --- vocabulary layout (mirrored exactly in rust/src/calib/vocab.rs) ---------
+#
+# The synthetic "multilingual" vocabulary reproduces the corpus-share vs
+# vocab-share mismatch of Table 1 of the paper: the top-5 languages dominate
+# the *corpus* (~78%) but own a small slice of the *vocabulary* (~24%), the
+# long tail of languages owns the rest of the vocab.
+
+VOCAB_SIZE = 2048
+
+PAD, BOS, EOS, SEP, PERIOD, BIND, QUERY, UNK = 0, 1, 2, 3, 4, 5, 6, 7
+N_SPECIAL = 8
+
+
+@dataclass(frozen=True)
+class Lang:
+    name: str
+    lo: int          # vocab bucket [lo, hi)
+    hi: int
+    corpus_share: float  # share of the synthetic training corpus
+    salt: int        # grammar hash salt (u64)
+
+
+# Top-5 "languages" + a 12-language tail sharing one big bucket.
+LANGS = [
+    Lang("en",  8,    168,  0.40, 0x9E3779B97F4A7C15),
+    Lang("zhs", 168,  200,  0.18, 0xBF58476D1CE4E5B9),
+    Lang("fr",  200,  328,  0.10, 0x94D049BB133111EB),
+    Lang("es",  328,  424,  0.06, 0xD6E8FEB86659FD93),
+    Lang("pt",  424,  488,  0.04, 0xA5A5A5A5A5A5A5A5),
+    # tail languages (low corpus share, huge vocab share — the mismatch)
+    Lang("t0",  488,  618,  0.03, 0x0123456789ABCDEF),
+    Lang("t1",  618,  748,  0.03, 0xFEDCBA9876543210),
+    Lang("t2",  748,  878,  0.02, 0x1111111111111111),
+    Lang("t3",  878,  1008, 0.02, 0x2222222222222222),
+    Lang("t4",  1008, 1138, 0.02, 0x3333333333333333),
+    Lang("t5",  1138, 1268, 0.02, 0x4444444444444444),
+    Lang("t6",  1268, 1398, 0.02, 0x5555555555555555),
+    Lang("t7",  1398, 1528, 0.01, 0x6666666666666666),
+    Lang("t8",  1528, 1658, 0.01, 0x7777777777777777),
+    Lang("t9",  1658, 1788, 0.01, 0x8888888888888888),
+    Lang("t10", 1788, 1918, 0.01, 0x9999999999999999),
+    Lang("t11", 1918, 2048, 0.02, 0xAAAAAAAAAAAAAAAA),
+]
+
+TOP_LANGS = [l.name for l in LANGS[:5]]
+
+assert abs(sum(l.corpus_share for l in LANGS) - 1.0) < 1e-9
+assert LANGS[-1].hi == VOCAB_SIZE
+
+
+# --- model architecture registry ---------------------------------------------
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layer: int
+    d_model: int
+    n_head: int
+    d_ff: int
+    vocab: int = VOCAB_SIZE
+    seq: int = 128           # max sequence length (pos-emb size); the
+                             # scaled-down analog of the paper's 2048
+    norm: str = "layernorm"  # "layernorm" | "rmsnorm"
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_head
+
+    def param_names(self) -> list[str]:
+        """Canonical checkpoint tensor names (must match rust model registry)."""
+        names = ["tok_emb", "pos_emb"]
+        for i in range(self.n_layer):
+            p = f"block{i}."
+            names += [p + "ln1.g", p + "attn.wqkv", p + "attn.bqkv",
+                      p + "attn.wproj", p + "attn.bproj",
+                      p + "ln2.g", p + "mlp.wfc1", p + "mlp.bfc1",
+                      p + "mlp.wfc2", p + "mlp.bfc2"]
+            if self.norm == "layernorm":
+                names.insert(names.index(p + "attn.wqkv"), p + "ln1.b")
+                names.insert(names.index(p + "mlp.wfc1"), p + "ln2.b")
+        names += ["lnf.g"]
+        if self.norm == "layernorm":
+            names += ["lnf.b"]
+        return names
+
+
+MODELS = {
+    "nt-tiny": ModelConfig("nt-tiny", n_layer=2, d_model=128, n_head=4, d_ff=512),
+    "nt-small": ModelConfig("nt-small", n_layer=4, d_model=256, n_head=8, d_ff=1024),
+    "nt-small-rms": ModelConfig("nt-small-rms", n_layer=4, d_model=256, n_head=8,
+                                d_ff=1024, norm="rmsnorm"),
+    "nt-medium": ModelConfig("nt-medium", n_layer=6, d_model=384, n_head=8, d_ff=1536),
+}
+
+# Batch buckets for which block-level graphs are exported.  The coordinator
+# pads the calibration/eval batch to the nearest bucket.
+BATCH_BUCKETS = [1, 8, 32]
+# The tweak_step / xtx graphs only exist at the calibration bucket.
+CALIB_BATCH = 32

@@ -1,0 +1,229 @@
+"""Deterministic synthetic multilingual corpus.
+
+This module is mirrored *bit-for-bit* by ``rust/src/calib/corpus.rs``; the
+cross-check test (`rust/tests/corpus_crosscheck.rs` vs golden tokens written
+by ``make artifacts``) keeps the two in lock-step.
+
+Design (see DESIGN.md §2):
+
+* 17 "languages" over disjoint vocab buckets; the top-5 dominate the corpus
+  (~78%) but own only ~24% of the vocabulary — reproducing the Table-1
+  corpus-vs-vocab mismatch that motivates GenData-V2.
+* Each language has a deterministic *successor grammar*: with probability
+  ~0.85 the next word is ``succ(w) = lo + mix(w * K + salt) % B``; otherwise
+  random in-bucket.  A small transformer learns this structure quickly, so
+  quantization damage is measurable.
+* **Recall sequences** are the LAMBADA-syn analog: key/value bindings early in
+  the sequence must be recalled at the end (`QUERY k -> v`).  Last-token
+  accuracy on held-out recall sequences is our Table-2 metric.
+* Three held-out corpora ("wiki-syn", "ptb-syn", "c4-syn") use different
+  language mixes / document statistics — the cross-dataset generalization axis
+  of Table 8.
+
+All randomness is a splitmix64 stream — identical u64 semantics in Python
+(masked) and Rust (wrapping).
+"""
+
+from dataclasses import dataclass
+
+from .configs import (BIND, BOS, EOS, LANGS, PERIOD, QUERY, VOCAB_SIZE, Lang)
+
+MASK = (1 << 64) - 1
+MIX_K = 0x2545F4914F6CDD1D
+
+
+class SplitMix64:
+    """splitmix64 PRNG — mirrored by rust/src/calib/rng.rs."""
+
+    def __init__(self, seed: int):
+        self.state = seed & MASK
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+        return (z ^ (z >> 31)) & MASK
+
+    def below(self, n: int) -> int:
+        """Uniform in [0, n) via simple modulo (bias negligible for n << 2^64)."""
+        return self.next_u64() % n
+
+    def chance(self, num: int, den: int) -> bool:
+        """True with probability num/den."""
+        return self.below(den) < num
+
+
+def mix64(x: int) -> int:
+    """Stateless avalanche hash (same finalizer as splitmix64)."""
+    z = x & MASK
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return (z ^ (z >> 31)) & MASK
+
+
+def successor(word: int, lang: Lang) -> int:
+    """Deterministic grammar successor of `word` inside `lang`'s bucket."""
+    b = lang.hi - lang.lo
+    return lang.lo + mix64((word * MIX_K + lang.salt) & MASK) % b
+
+
+def sentence(rng: SplitMix64, lang: Lang) -> list[int]:
+    """One grammar sentence: 4..11 words, 85% successor / 15% random, PERIOD."""
+    b = lang.hi - lang.lo
+    n = 4 + rng.below(8)
+    w = lang.lo + rng.below(b)
+    out = [w]
+    for _ in range(n - 1):
+        if rng.chance(85, 100):
+            w = successor(w, lang)
+        else:
+            w = lang.lo + rng.below(b)
+        out.append(w)
+    out.append(PERIOD)
+    return out
+
+
+def recall_sequence(rng: SplitMix64, lang: Lang, n_bind: int = 2,
+                    filler_sents: int = 1) -> list[int]:
+    """LAMBADA-syn item: bindings, filler, then QUERY key -> value.
+
+    Layout: BOS k1 v1 BIND k2 v2 BIND <filler> QUERY k_r v_r EOS
+    The final `v_r` is deterministically recoverable only from the binding
+    stated 10-20 tokens earlier — the long-range dependency that makes this
+    the LAMBADA analog (an induction capability that low-bit quantization
+    measurably destroys).
+    """
+    b = lang.hi - lang.lo
+    keys: list[int] = []
+    vals: list[int] = []
+    # distinct keys so the query is unambiguous
+    while len(keys) < n_bind:
+        k = lang.lo + rng.below(b)
+        if k not in keys:
+            keys.append(k)
+            vals.append(lang.lo + rng.below(b))
+    out = [BOS]
+    for k, v in zip(keys, vals):
+        out += [k, v, BIND]
+    for _ in range(filler_sents):
+        out += sentence(rng, lang)
+    r = rng.below(n_bind)
+    out += [QUERY, keys[r], vals[r], EOS]
+    return out
+
+
+@dataclass(frozen=True)
+class MixSpec:
+    """A corpus = a language mix + document shape + recall share."""
+    name: str
+    seed: int
+    # per-language weight overrides; None -> use Lang.corpus_share
+    weights: tuple[float, ...] | None = None
+    recall_permille: int = 150   # share of recall sequences, out of 1000
+    doc_min: int = 64
+    doc_max: int = 256
+
+
+def _mix_weights(spec: MixSpec) -> list[float]:
+    if spec.weights is None:
+        return [l.corpus_share for l in LANGS]
+    assert len(spec.weights) == len(LANGS)
+    return list(spec.weights)
+
+
+def pick_lang(rng: SplitMix64, weights: list[float]) -> Lang:
+    """Weighted language choice using integer per-mille thresholds.
+
+    Integer arithmetic keeps Python/Rust behaviour identical.
+    """
+    permille = [int(w * 1000) for w in weights]
+    total = sum(permille)
+    r = rng.below(total)
+    acc = 0
+    for lang, p in zip(LANGS, permille):
+        acc += p
+        if r < acc:
+            return lang
+    return LANGS[-1]
+
+
+def document(rng: SplitMix64, lang: Lang, spec: MixSpec) -> list[int]:
+    """One document: BOS, sentences (or a recall block), EOS."""
+    if rng.below(1000) < spec.recall_permille:
+        return recall_sequence(rng, lang)
+    target = spec.doc_min + rng.below(spec.doc_max - spec.doc_min)
+    out = [BOS]
+    while len(out) < target:
+        out += sentence(rng, lang)
+    out.append(EOS)
+    return out
+
+
+def token_stream(spec: MixSpec, n_tokens: int) -> list[int]:
+    """Concatenate documents until at least n_tokens; truncate exactly."""
+    rng = SplitMix64(spec.seed)
+    weights = _mix_weights(spec)
+    out: list[int] = []
+    while len(out) < n_tokens:
+        lang = pick_lang(rng, weights)
+        out += document(rng, lang, spec)
+    return out[:n_tokens]
+
+
+# --- the named corpora --------------------------------------------------------
+
+def _w(d: dict[str, float]) -> tuple[float, ...]:
+    """Build a full weight vector from a sparse {lang: weight} dict."""
+    rest = [l for l in LANGS if l.name not in d]
+    leftover = max(0.0, 1.0 - sum(d.values()))
+    per = leftover / len(rest) if rest else 0.0
+    return tuple(d.get(l.name, per) for l in LANGS)
+
+
+TRAIN_SPEC = MixSpec("train", seed=0xC0FFEE)
+
+# Held-out corpora with distinct distributions (Table 8's dataset axis).
+WIKI_SYN = MixSpec("wiki-syn", seed=0x71C1, weights=_w({"en": 0.70, "fr": 0.15}),
+                   recall_permille=150, doc_min=96, doc_max=256)
+PTB_SYN = MixSpec("ptb-syn", seed=0x97B2, weights=_w({"en": 0.45, "zhs": 0.30, "es": 0.15}),
+                  recall_permille=100, doc_min=48, doc_max=128)
+C4_SYN = MixSpec("c4-syn", seed=0xC4C4,
+                 weights=_w({"en": 0.25, "zhs": 0.15, "fr": 0.15, "es": 0.12, "pt": 0.10}),
+                 recall_permille=250, doc_min=64, doc_max=224)
+
+EVAL_SPECS = {"wiki-syn": WIKI_SYN, "ptb-syn": PTB_SYN, "c4-syn": C4_SYN}
+
+
+def lambada_syn(seed: int, n_items: int, seq: int) -> tuple[list[list[int]], list[int]]:
+    """The LAMBADA-syn eval set: successor-cloze items + answer positions.
+
+    Each item is `BOS + <grammar sentence prefix>` whose final transition is
+    forced to the deterministic grammar successor; the answer token is
+    recoverable only from the association tables the model stores in its
+    weights (the analog of LAMBADA's knowledge-demanding last word; see
+    DESIGN.md §2 — a true long-range binding-recall variant exists in the
+    corpus as `recall_sequence` but is not learnable within the build-time
+    training budget, so the capability axis retained is *weight-stored
+    knowledge recall*, which low-bit quantization measurably destroys).
+
+    Returns (items, answer_pos) where items[i][answer_pos[i]] is the target
+    and everything before it is context.  Drawn from top-5 languages only
+    (the capability the models actually master).
+    """
+    rng = SplitMix64(seed)
+    items: list[list[int]] = []
+    pos: list[int] = []
+    while len(items) < n_items:
+        lang = LANGS[rng.below(5)]
+        sent = sentence(rng, lang)[:-1]  # drop PERIOD
+        seqt = [BOS] + sent
+        if len(seqt) > seq:
+            continue
+        # force the final transition to be deterministic
+        seqt[-1] = successor(seqt[-2], lang)
+        p = len(seqt) - 1
+        padded = seqt + [0] * (seq - len(seqt))
+        items.append(padded)
+        pos.append(p)
+    return items, pos

@@ -1,0 +1,55 @@
+"""Emit corpus goldens + eval datasets consumed by the Rust side.
+
+Writes:
+    artifacts/corpus_golden.ntz   first-N token prefixes of every named corpus
+                                  (the Python↔Rust generator lock-step check)
+    artifacts/lambada_syn.ntz     the LAMBADA-syn eval set (tokens + answer pos)
+    artifacts/table1.json         corpus-share vs vocab-share stats (Table 1)
+"""
+
+import argparse
+import json
+
+import numpy as np
+
+from . import ntz
+from .configs import LANGS, VOCAB_SIZE
+from .corpus import (C4_SYN, PTB_SYN, TRAIN_SPEC, WIKI_SYN, lambada_syn,
+                     token_stream)
+
+GOLDEN_N = 4096
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+
+    tensors = {}
+    for spec in (TRAIN_SPEC, WIKI_SYN, PTB_SYN, C4_SYN):
+        toks = np.array(token_stream(spec, GOLDEN_N), dtype=np.int32)
+        tensors[f"golden.{spec.name}"] = toks
+    ntz.save(f"{args.out}/corpus_golden.ntz", tensors)
+
+    items, pos = lambada_syn(seed=0x1A3B, n_items=256, seq=128)
+    ntz.save(f"{args.out}/lambada_syn.ntz", {
+        "tokens": np.array(items, dtype=np.int32),
+        "answer_pos": np.array(pos, dtype=np.int32),
+    })
+
+    # Table 1 analog: corpus share (by construction) vs vocab share
+    table1 = []
+    for lang in LANGS[:5]:
+        table1.append({
+            "lang": lang.name,
+            "corpus_share": lang.corpus_share,
+            "vocab_tokens": lang.hi - lang.lo,
+            "vocab_share": (lang.hi - lang.lo) / VOCAB_SIZE,
+        })
+    with open(f"{args.out}/table1.json", "w") as f:
+        json.dump(table1, f, indent=1)
+    print(f"[datagen] wrote corpus goldens, lambada-syn (256 items), table1")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Blocked causal attention Pallas kernel (flash-attention style).
+
+TPU re-think of the CUDA flash kernel: the (block_q, d_head) query tile and
+the running (m, l, acc) softmax state live in VMEM; KV tiles stream in along
+the innermost grid axis.  Because the grid's last axis iterates KV blocks,
+pl.when-gated initialization + accumulator revisiting express the online
+softmax without scratch semaphores — the structure a Mosaic lowering would
+pipeline with double-buffered DMA.
+
+Causality is handled at tile granularity: KV tiles strictly above the
+diagonal are skipped via a mask of -inf contributions (tile-level `pl.when`
+early-out is not available under revisiting, so we mask; XLA DCEs the
+all-masked tiles under interpret=True anyway for our sizes).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale,
+            block_q, block_k, n_kv):
+    kv_idx = pl.program_id(2)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                   # [bq, dh]
+    k = k_ref[0]                                   # [bk, dh]
+    v = v_ref[0]                                   # [bk, dh]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    # causal mask at element granularity
+    q_idx = pl.program_id(1)
+    q_pos = q_idx * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (q.shape[0], k.shape[0]), 0)
+    k_pos = kv_idx * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                        (q.shape[0], k.shape[0]), 1)
+    s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # [bq, 1]
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_cur)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur
+
+    @pl.when(kv_idx == n_kv - 1)
+    def _finalize():
+        # guard rows that saw only masked tiles (l == 0 cannot happen for
+        # causal q>=0, but keep the kernel total)
+        l = l_ref[...]
+        o_ref[0] = acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def attention(q, k, v, *, block_q=64, block_k=64):
+    """Causal MHA: q,k,v f32[B,H,S,Dh] -> f32[B,H,S,Dh]."""
+    b, h, s, dh = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0
+    scale = 1.0 / (dh ** 0.5)
+    bh = b * h
+    qf = q.reshape(bh, s, dh)
+    kf = k.reshape(bh, s, dh)
+    vf = v.reshape(bh, s, dh)
+    n_kv = s // block_k
+    grid = (bh, s // block_q, n_kv)
+    kern = functools.partial(_kernel, scale=scale, block_q=block_q,
+                             block_k=block_k, n_kv=n_kv)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((block_q, 1), lambda g, i, j: (i, 0)),
+            pl.BlockSpec((block_q, 1), lambda g, i, j: (i, 0)),
+            pl.BlockSpec((block_q, dh), lambda g, i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, dh), jnp.float32),
+            jax.ShapeDtypeStruct((s, 1), jnp.float32),        # running max
+            jax.ShapeDtypeStruct((s, 1), jnp.float32),        # running sum
+            jax.ShapeDtypeStruct((s, dh), jnp.float32),       # accumulator
+        ],
+        interpret=True,
+    )(qf, kf, vf)[0]
+    return out.reshape(b, h, s, dh)

@@ -1,0 +1,52 @@
+"""Pallas per-channel mean/variance kernel — the reduction inside L_dist.
+
+Grid steps stripe the row dimension; each step reduces a (block_rows, C)
+stripe on the VPU and accumulates sum / sum-of-squares into revisited VMEM
+accumulators (the TPU analog of a CUDA blockwise shared-memory reduction).
+Mean/var finalization happens outside the kernel (cheap, O(C)).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, sum_ref, sq_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        sq_ref[...] = jnp.zeros_like(sq_ref)
+
+    xb = x_ref[...]
+    sum_ref[...] += xb.sum(axis=0, keepdims=True)
+    sq_ref[...] += (xb * xb).sum(axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def channel_stats(x, *, block_rows=256):
+    """x f32[..., C] -> (mu f32[C], var f32[C]) over all leading dims."""
+    c = x.shape[-1]
+    flat = x.reshape(-1, c)
+    nrows = flat.shape[0]
+    block_rows = min(block_rows, nrows)
+    # pad rows to a multiple of the stripe; padded zeros are corrected below
+    pad = (-nrows) % block_rows
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad, c), flat.dtype)], axis=0)
+    grid = (flat.shape[0] // block_rows,)
+    s, sq = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, c), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, c), lambda i: (0, 0)),
+                   pl.BlockSpec((1, c), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((1, c), jnp.float32),
+                   jax.ShapeDtypeStruct((1, c), jnp.float32)],
+        interpret=True,
+    )(flat)
+    # padded rows contribute 0 to both accumulators; divide by true count
+    mu = s[0] / nrows
+    var = sq[0] / nrows - mu * mu
+    return mu, var

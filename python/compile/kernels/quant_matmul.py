@@ -1,0 +1,87 @@
+"""Pallas dequantize-matmul kernel — the quantized-inference hot path.
+
+TPU mapping of the paper's CUDA int4/int2 GEMM (see DESIGN.md
+§Hardware-Adaptation): integer weight codes + per-(group, out-channel) scales
+stream HBM→VMEM tile by tile; the weight tile is dequantized in VMEM by the
+VPU and fed to the MXU as f32 (bf16 on real hardware).  BlockSpec expresses
+the HBM↔VMEM schedule the CUDA version did with threadblocks + shared memory.
+
+VMEM budget per grid step (f32 words):
+    x tile   bm*bk      = 64*128 =  8K
+    code tile bk*bn (i8) = 128*128 = 16KB as i8
+    scale row 1*bn
+    out tile bm*bn      = 64*128 =  8K
+→ ~100 KB, leaving headroom for double buffering in a 16 MB VMEM.
+
+Constraint: group_size % block_k == 0 so each K-tile falls in one scale group.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, c_ref, s_ref, o_ref):
+    # k is the innermost grid axis: zero the accumulator on the first step,
+    # accumulate partial products after.
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = c_ref[...].astype(jnp.float32) * s_ref[...]      # dequant in VMEM
+    o_ref[...] += jnp.dot(x_ref[...], w,
+                          preferred_element_type=jnp.float32)
+
+
+def _tile(desired: int, dim: int) -> int:
+    """Largest divisor of `dim` that is <= desired (tiles must cover dim)."""
+    b = min(desired, dim)
+    while dim % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("group_size", "block_m",
+                                             "block_n", "block_k"))
+def quant_matmul(x, codes, scales, *, group_size=None,
+                 block_m=256, block_n=256, block_k=64):
+    # §Perf: default tiles were (64, 128, 64); under CPU-interpret the grid
+    # lowers to an XLA while loop whose per-step overhead dominates, and on
+    # real hardware larger tiles amortize the DMA setup. (256, 256, 64)
+    # cuts grid steps ~8x while staying inside the VMEM budget documented
+    # above (256*64 + 64*256 + 256*256 f32 ≈ 390 KB per step, double-
+    # buffered < 1 MB of a 16 MB VMEM). Tiles snap down to divisors of the
+    # actual dims.
+    """x f32[M,K] @ dequant(codes i8[K,N], scales f32[G,N]) -> f32[M,N]."""
+    m, k = x.shape
+    kc, n = codes.shape
+    g = scales.shape[0]
+    assert kc == k, (kc, k)
+    if group_size is None:
+        group_size = k // g
+    assert g * group_size == k, "scales incompatible with group_size"
+
+    block_m = _tile(block_m, m)
+    block_n = _tile(block_n, n)
+    block_k = _tile(min(block_k, group_size), k)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+    assert group_size % block_k == 0, "K tile must not straddle a scale group"
+
+    grid = (m // block_m, n // block_n, k // block_k)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            # scale row of the group this K tile belongs to
+            pl.BlockSpec((1, block_n),
+                         lambda i, j, kk, gs=group_size // block_k:
+                         (kk // gs, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,   # CPU PJRT cannot run Mosaic custom-calls
+    )(x, codes, scales)

@@ -1,0 +1,100 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness contracts: pytest (with hypothesis shape sweeps)
+asserts each kernel in this package matches its oracle to tight tolerance.
+The L2 model can be built against either implementation (`use_pallas` flag),
+which is itself a tested equivalence.
+"""
+
+import jax.numpy as jnp
+
+
+def quant_matmul(x, codes, scales):
+    """Dequantize-then-matmul oracle.
+
+    x:      f32[M, K]
+    codes:  i8 [K, N]  symmetric integer codes
+    scales: f32[G, N]  per-(group, out-channel) scales, G = K // group_size
+    returns f32[M, N] = x @ (codes * scales_expanded)
+    """
+    k, n = codes.shape
+    g = scales.shape[0]
+    group = k // g
+    w = codes.astype(jnp.float32).reshape(g, group, n) * scales[:, None, :]
+    return x @ w.reshape(k, n)
+
+
+def channel_stats(x):
+    """Per-channel mean and (population) variance over all leading dims.
+
+    x: f32[..., C] -> (mu f32[C], var f32[C])
+    """
+    flat = x.reshape(-1, x.shape[-1])
+    mu = flat.mean(axis=0)
+    var = ((flat - mu) ** 2).mean(axis=0)
+    return mu, var
+
+
+def layernorm(x, g, b, eps=1e-5):
+    """Row-wise LayerNorm with affine: f32[..., C] -> f32[..., C]."""
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def rmsnorm(x, g, eps=1e-5):
+    """Row-wise RMSNorm (no mean subtraction, no beta) — the LLaMa variant."""
+    ms = (x * x).mean(axis=-1, keepdims=True)
+    return x / jnp.sqrt(ms + eps) * g
+
+
+def rtn_quantize(w, bits, group_size):
+    """Symmetric round-to-nearest per-(group, out-channel) quantization.
+
+    w: f32[K, N]; group along K.  Returns (codes i8[K,N], scales f32[G,N]).
+    qmax = 2^(bits-1) - 1 (symmetric, zero-point-free — the
+    FasterTransformer-compatible scheme the paper uses).
+    """
+    k, n = w.shape
+    assert k % group_size == 0
+    g = k // group_size
+    qmax = float(2 ** (bits - 1) - 1)
+    wg = w.reshape(g, group_size, n)
+    amax = jnp.max(jnp.abs(wg), axis=1)            # [G, N]
+    scales = jnp.where(amax > 0, amax / qmax, 1.0)
+    codes = jnp.clip(jnp.round(wg / scales[:, None, :]), -qmax, qmax)
+    return codes.reshape(k, n).astype(jnp.int8), scales.astype(jnp.float32)
+
+
+def dequantize(codes, scales):
+    """Inverse of rtn_quantize's packing: f32[K, N] from codes + group scales."""
+    k, n = codes.shape
+    g = scales.shape[0]
+    group = k // g
+    w = codes.astype(jnp.float32).reshape(g, group, n) * scales[:, None, :]
+    return w.reshape(k, n)
+
+
+def attention(q, k, v, causal=True):
+    """Multi-head scaled-dot-product attention oracle.
+
+    q, k, v: f32[B, H, S, Dh] -> f32[B, H, S, Dh]
+    """
+    dh = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(dh))
+    if causal:
+        s = q.shape[2]
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def dist_loss(mu_f, var_f, mu_q, var_q):
+    """The paper's channel-wise distribution loss (Eq. 2).
+
+    L = 1/C * sum_c ( ||mu_f^c - mu_q^c||_2 + ||var_f^c - var_q^c||_2 );
+    the L2 norm of a scalar is its absolute value.
+    """
+    return (jnp.abs(mu_f - mu_q) + jnp.abs(var_f - var_q)).mean()

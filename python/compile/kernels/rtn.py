@@ -1,0 +1,47 @@
+"""Pallas RTN quantization kernel — symmetric per-(group, out-channel).
+
+Each grid step owns one (group_size, block_n) weight tile: an abs-max VPU
+reduction over the group axis produces the scale row, then the tile is
+rounded and clipped in VMEM.  Grid steps are fully independent (no revisits),
+so this kernel pipelines perfectly on real hardware.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _make_kernel(qmax):
+    def _kernel(w_ref, c_ref, s_ref):
+        w = w_ref[...]
+        amax = jnp.abs(w).max(axis=0, keepdims=True)        # [1, bn]
+        scale = jnp.where(amax > 0, amax / qmax, 1.0)
+        codes = jnp.clip(jnp.round(w / scale), -qmax, qmax)
+        c_ref[...] = codes.astype(jnp.int8)
+        s_ref[...] = scale.astype(jnp.float32)
+    return _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size", "block_n"))
+def rtn_quantize(w, *, bits, group_size, block_n=128):
+    """w f32[K, N] -> (codes i8[K, N], scales f32[K//group_size, N])."""
+    k, n = w.shape
+    assert k % group_size == 0, (k, group_size)
+    g = k // group_size
+    block_n = min(block_n, n)
+    assert n % block_n == 0
+    qmax = float(2 ** (bits - 1) - 1)
+    grid = (g, n // block_n)
+    codes, scales = pl.pallas_call(
+        _make_kernel(qmax),
+        grid=grid,
+        in_specs=[pl.BlockSpec((group_size, block_n), lambda i, j: (i, j))],
+        out_specs=[pl.BlockSpec((group_size, block_n), lambda i, j: (i, j)),
+                   pl.BlockSpec((1, block_n), lambda i, j: (i, j))],
+        out_shape=[jax.ShapeDtypeStruct((k, n), jnp.int8),
+                   jax.ShapeDtypeStruct((g, n), jnp.float32)],
+        interpret=True,
+    )(w)
+    return codes, scales

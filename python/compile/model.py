@@ -1,0 +1,423 @@
+"""L2 — the JAX transformer and the Norm-Tweaking compute graphs.
+
+Everything here is *build-time only*: `aot.py` lowers these functions once to
+HLO text; the Rust coordinator composes them layer by layer at runtime
+(embed → block_fwd[_q] × L → head), which is exactly the structure Algorithm 1
+needs (the float and quantized streams advance one transformer layer at a
+time, with weights as graph *arguments* so quantization can swap them).
+
+Weight calling convention (must match rust/src/model/registry.rs and the
+manifest): per block, in order —
+
+  layernorm: ln1.g ln1.b  attn.wqkv attn.bqkv attn.wproj attn.bproj
+             ln2.g ln2.b  mlp.wfc1 mlp.bfc1 mlp.wfc2 mlp.bfc2
+  rmsnorm:   same without ln1.b / ln2.b
+
+Quantized blocks replace each weight matrix `w*` with (codes i8, scales f32).
+
+Differentiability note: the `tweak_step` graph (loss + grad + Adam fused) is
+built on the pure-jnp oracles because `pallas_call` has no VJP; the Pallas
+kernels serve the inference graphs.  Kernel≡oracle is pytest-enforced, so the
+two paths are numerically interchangeable.
+"""
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import ref
+from .kernels.attention import attention as pallas_attention
+from .kernels.norms import layernorm as pallas_layernorm
+from .kernels.norms import rmsnorm as pallas_rmsnorm
+from .kernels.quant_matmul import quant_matmul as pallas_quant_matmul
+
+# ---------------------------------------------------------------------------
+# weight plumbing
+
+
+def n_block_weights(cfg: ModelConfig) -> int:
+    return 12 if cfg.norm == "layernorm" else 10
+
+
+def n_block_qweights(cfg: ModelConfig) -> int:
+    # each of the 4 weight matrices becomes (codes, scales)
+    return n_block_weights(cfg) + 4
+
+
+@dataclass
+class BlockWeights:
+    """Float weights of one transformer block, in canonical order."""
+    ln1_g: jax.Array
+    ln1_b: jax.Array | None
+    wqkv: jax.Array
+    bqkv: jax.Array
+    wproj: jax.Array
+    bproj: jax.Array
+    ln2_g: jax.Array
+    ln2_b: jax.Array | None
+    wfc1: jax.Array
+    bfc1: jax.Array
+    wfc2: jax.Array
+    bfc2: jax.Array
+
+    @staticmethod
+    def from_flat(cfg: ModelConfig, flat):
+        if cfg.norm == "layernorm":
+            (ln1_g, ln1_b, wqkv, bqkv, wproj, bproj,
+             ln2_g, ln2_b, wfc1, bfc1, wfc2, bfc2) = flat
+        else:
+            (ln1_g, wqkv, bqkv, wproj, bproj,
+             ln2_g, wfc1, bfc1, wfc2, bfc2) = flat
+            ln1_b = ln2_b = None
+        return BlockWeights(ln1_g, ln1_b, wqkv, bqkv, wproj, bproj,
+                            ln2_g, ln2_b, wfc1, bfc1, wfc2, bfc2)
+
+
+@dataclass
+class BlockQWeights:
+    """Quantized weights of one block: (codes, scales) per matrix + norms."""
+    ln1_g: jax.Array
+    ln1_b: jax.Array | None
+    cqkv: jax.Array
+    sqkv: jax.Array
+    bqkv: jax.Array
+    cproj: jax.Array
+    sproj: jax.Array
+    bproj: jax.Array
+    ln2_g: jax.Array
+    ln2_b: jax.Array | None
+    cfc1: jax.Array
+    sfc1: jax.Array
+    bfc1: jax.Array
+    cfc2: jax.Array
+    sfc2: jax.Array
+    bfc2: jax.Array
+
+    @staticmethod
+    def from_flat(cfg: ModelConfig, flat):
+        if cfg.norm == "layernorm":
+            (ln1_g, ln1_b, cqkv, sqkv, bqkv, cproj, sproj, bproj,
+             ln2_g, ln2_b, cfc1, sfc1, bfc1, cfc2, sfc2, bfc2) = flat
+        else:
+            (ln1_g, cqkv, sqkv, bqkv, cproj, sproj, bproj,
+             ln2_g, cfc1, sfc1, bfc1, cfc2, sfc2, bfc2) = flat
+            ln1_b = ln2_b = None
+        return BlockQWeights(ln1_g, ln1_b, cqkv, sqkv, bqkv, cproj, sproj,
+                             bproj, ln2_g, ln2_b, cfc1, sfc1, bfc1,
+                             cfc2, sfc2, bfc2)
+
+
+# ---------------------------------------------------------------------------
+# primitive wrappers (pallas vs oracle)
+
+
+def _norm(cfg, x, g, b, use_pallas):
+    if cfg.norm == "layernorm":
+        if use_pallas:
+            return pallas_layernorm(x, g, b)
+        return ref.layernorm(x, g, b)
+    if use_pallas:
+        return pallas_rmsnorm(x, g)
+    return ref.rmsnorm(x, g)
+
+
+def _attn(q, k, v, use_pallas):
+    if use_pallas:
+        return pallas_attention(q, k, v)
+    return ref.attention(q, k, v)
+
+
+def _qmm(x2d, codes, scales, use_pallas):
+    if use_pallas:
+        return pallas_quant_matmul(x2d, codes, scales)
+    return ref.quant_matmul(x2d, codes, scales)
+
+
+def _gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+
+
+def _attention_mix(cfg: ModelConfig, x, qkv):
+    """Split fused qkv [B,S,3d] into heads, attend, merge back to [B,S,d]."""
+    b, s, _ = x.shape
+    h, dh = cfg.n_head, cfg.d_head
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):
+        return t.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+
+    return None, heads(q), heads(k), heads(v)
+
+
+def block_fwd(cfg: ModelConfig, x, flat_weights, use_pallas=True):
+    """Float transformer block: pre-norm attention + pre-norm MLP."""
+    w = BlockWeights.from_flat(cfg, flat_weights)
+    b, s, d = x.shape
+
+    h1 = _norm(cfg, x, w.ln1_g, w.ln1_b, use_pallas)
+    qkv = (h1.reshape(b * s, d) @ w.wqkv + w.bqkv).reshape(b, s, 3 * d)
+    _, q, k, v = _attention_mix(cfg, x, qkv)
+    a = _attn(q, k, v, use_pallas)
+    a = a.transpose(0, 2, 1, 3).reshape(b, s, d)
+    x = x + (a.reshape(b * s, d) @ w.wproj + w.bproj).reshape(b, s, d)
+
+    h2 = _norm(cfg, x, w.ln2_g, w.ln2_b, use_pallas)
+    f = _gelu(h2.reshape(b * s, d) @ w.wfc1 + w.bfc1)
+    x = x + (f @ w.wfc2 + w.bfc2).reshape(b, s, d)
+    return x
+
+
+def block_taps(cfg: ModelConfig, x, flat_weights, use_pallas=True):
+    """The four linear-layer *input* activations (GPTQ Hessian taps).
+
+    Returns (t_qkv [B,S,d], t_proj [B,S,d], t_fc1 [B,S,d], t_fc2 [B,S,ff]):
+    the tensors whose Gram matrices are the OBS Hessians for wqkv, wproj,
+    wfc1, wfc2 respectively.
+    """
+    w = BlockWeights.from_flat(cfg, flat_weights)
+    b, s, d = x.shape
+
+    t_qkv = _norm(cfg, x, w.ln1_g, w.ln1_b, use_pallas)
+    qkv = (t_qkv.reshape(b * s, d) @ w.wqkv + w.bqkv).reshape(b, s, 3 * d)
+    _, q, k, v = _attention_mix(cfg, x, qkv)
+    a = _attn(q, k, v, use_pallas)
+    t_proj = a.transpose(0, 2, 1, 3).reshape(b, s, d)
+    x = x + (t_proj.reshape(b * s, d) @ w.wproj + w.bproj).reshape(b, s, d)
+
+    t_fc1 = _norm(cfg, x, w.ln2_g, w.ln2_b, use_pallas)
+    t_fc2 = _gelu(t_fc1.reshape(b * s, d) @ w.wfc1 + w.bfc1).reshape(b, s, cfg.d_ff)
+    return t_qkv, t_proj, t_fc1, t_fc2
+
+
+def block_fwd_q(cfg: ModelConfig, x, flat_qweights, use_pallas=True):
+    """Quantized transformer block: dequant-matmul for all four linears."""
+    w = BlockQWeights.from_flat(cfg, flat_qweights)
+    b, s, d = x.shape
+
+    h1 = _norm(cfg, x, w.ln1_g, w.ln1_b, use_pallas)
+    qkv = (_qmm(h1.reshape(b * s, d), w.cqkv, w.sqkv, use_pallas)
+           + w.bqkv).reshape(b, s, 3 * d)
+    _, q, k, v = _attention_mix(cfg, x, qkv)
+    a = _attn(q, k, v, use_pallas)
+    a = a.transpose(0, 2, 1, 3).reshape(b, s, d)
+    x = x + (_qmm(a.reshape(b * s, d), w.cproj, w.sproj, use_pallas)
+             + w.bproj).reshape(b, s, d)
+
+    h2 = _norm(cfg, x, w.ln2_g, w.ln2_b, use_pallas)
+    f = _gelu(_qmm(h2.reshape(b * s, d), w.cfc1, w.sfc1, use_pallas) + w.bfc1)
+    x = x + (_qmm(f, w.cfc2, w.sfc2, use_pallas) + w.bfc2).reshape(b, s, d)
+    return x
+
+
+def embed(cfg: ModelConfig, tokens, tok_emb, pos_emb):
+    """tokens i32[B,S] -> x0 f32[B,S,d]."""
+    s = tokens.shape[1]
+    return tok_emb[tokens] + pos_emb[:s][None, :, :]
+
+
+def head(cfg: ModelConfig, x, lnf_flat, tok_emb, use_pallas=True):
+    """Final norm + tied-embedding logits: x[B,S,d] -> logits f32[B,S,V]."""
+    if cfg.norm == "layernorm":
+        g, bb = lnf_flat
+    else:
+        (g,) = lnf_flat
+        bb = None
+    h = _norm(cfg, x, g, bb, use_pallas)
+    return h @ tok_emb.T
+
+
+def model_fwd(cfg: ModelConfig, tokens, params: dict, use_pallas=False):
+    """Full float forward from a name->array dict (training / golden logits)."""
+    x = embed(cfg, tokens, params["tok_emb"], params["pos_emb"])
+    for i in range(cfg.n_layer):
+        p = f"block{i}."
+        if cfg.norm == "layernorm":
+            flat = [params[p + n] for n in
+                    ("ln1.g", "ln1.b", "attn.wqkv", "attn.bqkv", "attn.wproj",
+                     "attn.bproj", "ln2.g", "ln2.b", "mlp.wfc1", "mlp.bfc1",
+                     "mlp.wfc2", "mlp.bfc2")]
+        else:
+            flat = [params[p + n] for n in
+                    ("ln1.g", "attn.wqkv", "attn.bqkv", "attn.wproj",
+                     "attn.bproj", "ln2.g", "mlp.wfc1", "mlp.bfc1",
+                     "mlp.wfc2", "mlp.bfc2")]
+        x = block_fwd(cfg, x, flat, use_pallas=use_pallas)
+    lnf = ([params["lnf.g"], params["lnf.b"]] if cfg.norm == "layernorm"
+           else [params["lnf.g"]])
+    return head(cfg, x, lnf, params["tok_emb"], use_pallas=use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# the Norm-Tweaking step (Algorithm 1 lines 11-15, fused into one XLA call)
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def _norm_param_names(cfg: ModelConfig):
+    if cfg.norm == "layernorm":
+        return ("ln1_g", "ln1_b", "ln2_g", "ln2_b")
+    return ("ln1_g", "ln2_g")
+
+
+def tweak_step(cfg: ModelConfig, x, flat_qweights, adam_m, adam_v,
+               mu_f, var_f, lr, t):
+    """One fused tweak iteration.
+
+    Inputs:
+      x             f32[B,S,d]   layer input (the *quantized* stream qOut_{l-1})
+      flat_qweights               quantized block weights (norm params inside
+                                  are the *current* tweakable values)
+      adam_m/adam_v list[f32[d]] Adam state per norm param
+      mu_f, var_f   f32[d]       target channel stats of the float output
+      lr            f32[1]       learning rate (layer-scheduled by L3)
+      t             f32[1]       1-based Adam timestep
+
+    Returns: (new norm params..., new m..., new v..., loss f32[1])
+
+    The whole thing — quant fwd, channel stats, L_dist, backward, Adam — is
+    one XLA executable, so L3's inner loop is a single PJRT call per iter.
+    """
+    w = BlockQWeights.from_flat(cfg, flat_qweights)
+    names = _norm_param_names(cfg)
+    theta = [getattr(w, n) for n in names]
+
+    def loss_fn(theta_list):
+        for n, v_ in zip(names, theta_list):
+            setattr(w, n, v_)
+        flat = _qweights_to_flat(cfg, w)
+        y = block_fwd_q(cfg, x, flat, use_pallas=False)  # oracle path: differentiable
+        mu_q, var_q = ref.channel_stats(y)
+        return ref.dist_loss(mu_f, var_f, mu_q, var_q)
+
+    loss, grads = jax.value_and_grad(loss_fn)(theta)
+
+    lr0 = lr.reshape(())
+    tt = t.reshape(())
+    bc1 = 1.0 - ADAM_B1 ** tt
+    bc2 = 1.0 - ADAM_B2 ** tt
+    new_theta, new_m, new_v = [], [], []
+    for th, g, m, v in zip(theta, grads, adam_m, adam_v):
+        m2 = ADAM_B1 * m + (1 - ADAM_B1) * g
+        v2 = ADAM_B2 * v + (1 - ADAM_B2) * (g * g)
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        new_theta.append(th - lr0 * mhat / (jnp.sqrt(vhat) + ADAM_EPS))
+        new_m.append(m2)
+        new_v.append(v2)
+    return tuple(new_theta) + tuple(new_m) + tuple(new_v) + (loss.reshape(1),)
+
+
+def _qweights_to_flat(cfg: ModelConfig, w: BlockQWeights):
+    if cfg.norm == "layernorm":
+        return [w.ln1_g, w.ln1_b, w.cqkv, w.sqkv, w.bqkv, w.cproj, w.sproj,
+                w.bproj, w.ln2_g, w.ln2_b, w.cfc1, w.sfc1, w.bfc1,
+                w.cfc2, w.sfc2, w.bfc2]
+    return [w.ln1_g, w.cqkv, w.sqkv, w.bqkv, w.cproj, w.sproj, w.bproj,
+            w.ln2_g, w.cfc1, w.sfc1, w.bfc1, w.cfc2, w.sfc2, w.bfc2]
+
+
+def channel_stats_graph(x):
+    """Standalone (mu, var) graph used to compute float-stream targets."""
+    mu, var = ref.channel_stats(x)
+    return mu, var
+
+
+def xtx(x2d):
+    """Gram matrix X^T X for GPTQ Hessian accumulation. x2d f32[N,K]."""
+    return x2d.T @ x2d
+
+
+# convenience: alternative tweak losses for the Table-9 ablation -------------
+
+def tweak_step_mse(cfg, x, flat_qweights, adam_m, adam_v, y_f, lr, t):
+    """Ablation variant: point-wise MSE to the float output tensor."""
+    w = BlockQWeights.from_flat(cfg, flat_qweights)
+    names = _norm_param_names(cfg)
+    theta = [getattr(w, n) for n in names]
+
+    def loss_fn(theta_list):
+        for n, v_ in zip(names, theta_list):
+            setattr(w, n, v_)
+        y = block_fwd_q(cfg, x, _qweights_to_flat(cfg, w), use_pallas=False)
+        return ((y - y_f) ** 2).mean()
+
+    loss, grads = jax.value_and_grad(loss_fn)(theta)
+    return _adam_apply(theta, grads, adam_m, adam_v, lr, t, loss)
+
+
+def tweak_step_kl(cfg, x, flat_qweights, adam_m, adam_v, y_f, lr, t):
+    """Ablation variant: KL divergence over channel softmax distributions."""
+    w = BlockQWeights.from_flat(cfg, flat_qweights)
+    names = _norm_param_names(cfg)
+    theta = [getattr(w, n) for n in names]
+
+    def loss_fn(theta_list):
+        for n, v_ in zip(names, theta_list):
+            setattr(w, n, v_)
+        y = block_fwd_q(cfg, x, _qweights_to_flat(cfg, w), use_pallas=False)
+        pf = jax.nn.log_softmax(y_f, axis=-1)
+        pq = jax.nn.log_softmax(y, axis=-1)
+        return (jnp.exp(pf) * (pf - pq)).sum(-1).mean()
+
+    loss, grads = jax.value_and_grad(loss_fn)(theta)
+    return _adam_apply(theta, grads, adam_m, adam_v, lr, t, loss)
+
+
+def _adam_apply(theta, grads, adam_m, adam_v, lr, t, loss):
+    lr0 = lr.reshape(())
+    tt = t.reshape(())
+    bc1 = 1.0 - ADAM_B1 ** tt
+    bc2 = 1.0 - ADAM_B2 ** tt
+    new_theta, new_m, new_v = [], [], []
+    for th, g, m, v in zip(theta, grads, adam_m, adam_v):
+        m2 = ADAM_B1 * m + (1 - ADAM_B1) * g
+        v2 = ADAM_B2 * v + (1 - ADAM_B2) * (g * g)
+        new_theta.append(th - lr0 * (m2 / bc1) / (jnp.sqrt(v2 / bc2) + ADAM_EPS))
+        new_m.append(m2)
+        new_v.append(v2)
+    return tuple(new_theta) + tuple(new_m) + tuple(new_v) + (loss.reshape(1),)
+
+
+# ---------------------------------------------------------------------------
+# initialization (used by train.py)
+
+
+def init_params(cfg: ModelConfig, seed: int) -> dict:
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4 + 8 * cfg.n_layer)
+    d, ff, v, s = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq
+    std = 0.02
+    p = {
+        "tok_emb": jax.random.normal(ks[0], (v, d)) * std,
+        "pos_emb": jax.random.normal(ks[1], (s, d)) * std,
+        "lnf.g": jnp.ones((d,)),
+    }
+    if cfg.norm == "layernorm":
+        p["lnf.b"] = jnp.zeros((d,))
+    ki = 2
+    for i in range(cfg.n_layer):
+        pre = f"block{i}."
+        p[pre + "ln1.g"] = jnp.ones((d,))
+        p[pre + "ln2.g"] = jnp.ones((d,))
+        if cfg.norm == "layernorm":
+            p[pre + "ln1.b"] = jnp.zeros((d,))
+            p[pre + "ln2.b"] = jnp.zeros((d,))
+        p[pre + "attn.wqkv"] = jax.random.normal(ks[ki], (d, 3 * d)) * std
+        p[pre + "attn.bqkv"] = jnp.zeros((3 * d,))
+        p[pre + "attn.wproj"] = (jax.random.normal(ks[ki + 1], (d, d))
+                                 * std / (2 * cfg.n_layer) ** 0.5)
+        p[pre + "attn.bproj"] = jnp.zeros((d,))
+        p[pre + "mlp.wfc1"] = jax.random.normal(ks[ki + 2], (d, ff)) * std
+        p[pre + "mlp.bfc1"] = jnp.zeros((ff,))
+        p[pre + "mlp.wfc2"] = (jax.random.normal(ks[ki + 3], (ff, d))
+                               * std / (2 * cfg.n_layer) ** 0.5)
+        p[pre + "mlp.bfc2"] = jnp.zeros((d,))
+        ki += 4
+    return {k: v.astype(jnp.float32) for k, v in p.items()}

@@ -1,0 +1,62 @@
+"""`.ntz` — the tiny tensor-archive format shared between Python and Rust.
+
+Layout (little-endian):
+
+    magic   b"NTZ1"
+    u32     n_tensors
+    per tensor:
+        u32         name_len
+        bytes       name (utf-8)
+        u8          dtype   (0=f32, 1=i8, 2=u8, 3=i32, 4=i64)
+        u32         ndim
+        u64 * ndim  dims
+        bytes       raw data (C order)
+
+Rust counterpart: ``rust/src/tensor/ntz.rs`` (round-trip tested on both sides).
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"NTZ1"
+
+_DTYPES = {0: np.float32, 1: np.int8, 2: np.uint8, 3: np.int32, 4: np.int64}
+_CODES = {np.dtype(v): k for k, v in _DTYPES.items()}
+
+
+def save(path: str, tensors: dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype == np.float64:
+                arr = arr.astype(np.float32)
+            code = _CODES[arr.dtype]
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", code))
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(arr.tobytes())
+
+
+def load(path: str) -> dict[str, np.ndarray]:
+    out: dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, f"{path}: bad magic"
+        (n,) = struct.unpack("<I", f.read(4))
+        for _ in range(n):
+            (nl,) = struct.unpack("<I", f.read(4))
+            name = f.read(nl).decode("utf-8")
+            (code,) = struct.unpack("<B", f.read(1))
+            (ndim,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{ndim}Q", f.read(8 * ndim))
+            dt = np.dtype(_DTYPES[code])
+            count = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(count * dt.itemsize), dtype=dt)
+            out[name] = data.reshape(dims).copy()
+    return out

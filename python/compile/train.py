@@ -1,0 +1,150 @@
+"""Build-time pretraining of the synthetic-corpus models.
+
+The paper quantizes *pretrained* LLMs; quantization damage (and Norm
+Tweaking's repair) is only measurable on a model that has actual capability.
+This script trains the registry models on the synthetic multilingual corpus
+(next-token cross-entropy, Adam) and writes:
+
+    artifacts/weights_<model>.ntz      float checkpoints (tensor registry)
+    artifacts/train_log_<model>.json   loss curve + final holdout metrics
+    artifacts/golden_<model>.ntz       (tokens, logits) parity pair for the
+                                       Rust artifact-composition test
+
+Run once via `make artifacts`.  Never on the request path.
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ntz
+from .configs import MODELS, VOCAB_SIZE
+from .corpus import TRAIN_SPEC, WIKI_SYN, lambada_syn, token_stream
+from .model import init_params, model_fwd
+
+B1, B2, EPS = 0.9, 0.999, 1e-8
+
+# per-model training budget (steps tuned for CPU build time)
+STEPS = {"nt-tiny": 500, "nt-small": 1000, "nt-small-rms": 1000, "nt-medium": 800}
+BATCH = {"nt-tiny": 16, "nt-small": 16, "nt-small-rms": 16, "nt-medium": 12}
+LR = 3e-4
+
+
+def chunks(stream: np.ndarray, seq: int, batch: int, rng: np.random.Generator):
+    """Sample random seq-length windows from the token stream."""
+    n = len(stream) - seq - 1
+    idx = rng.integers(0, n, size=batch)
+    x = np.stack([stream[i:i + seq] for i in idx]).astype(np.int32)
+    y = np.stack([stream[i + 1:i + seq + 1] for i in idx]).astype(np.int32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+def make_step(cfg):
+    def loss_fn(params, x, y):
+        logits = model_fwd(cfg, x, params, use_pallas=False)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+        return -ll.mean()
+
+    @jax.jit
+    def step(params, m, v, t, x, y):
+        loss, g = jax.value_and_grad(loss_fn)(params, x, y)
+        new_p, new_m, new_v = {}, {}, {}
+        bc1 = 1.0 - B1 ** t
+        bc2 = 1.0 - B2 ** t
+        for k in params:
+            m2 = B1 * m[k] + (1 - B1) * g[k]
+            v2 = B2 * v[k] + (1 - B2) * g[k] ** 2
+            new_p[k] = params[k] - LR * (m2 / bc1) / (jnp.sqrt(v2 / bc2) + EPS)
+            new_m[k], new_v[k] = m2, v2
+        return new_p, new_m, new_v, loss
+
+    return step, jax.jit(loss_fn)
+
+
+def lambada_acc(cfg, params, n_items=64, seed=0xACC):
+    """Quick recall-task accuracy (the fp32 reference point for Table 2)."""
+    items, pos = lambada_syn(seed, n_items, cfg.seq)
+    toks = jnp.asarray(np.array(items, dtype=np.int32))
+    logits = model_fwd(cfg, toks, params, use_pallas=False)
+    correct = 0
+    for i, p in enumerate(pos):
+        pred = int(jnp.argmax(logits[i, p - 1]))
+        if pred == items[i][p]:
+            correct += 1
+    return correct / n_items
+
+
+def train_model(name: str, out_dir: str, steps: int | None = None):
+    cfg = MODELS[name]
+    steps = steps or STEPS[name]
+    batch = BATCH[name]
+    print(f"[train] {name}: {cfg.n_layer}L d={cfg.d_model} norm={cfg.norm} "
+          f"steps={steps} batch={batch}")
+
+    stream = np.array(token_stream(TRAIN_SPEC, 400_000), dtype=np.int32)
+    holdout = np.array(token_stream(WIKI_SYN, 20_000), dtype=np.int32)
+    rng = np.random.default_rng(0xDEC0DE)
+
+    params = init_params(cfg, seed=1234)
+    m = {k: jnp.zeros_like(x) for k, x in params.items()}
+    v = {k: jnp.zeros_like(x) for k, x in params.items()}
+    step, loss_fn = make_step(cfg)
+
+    log = {"model": name, "steps": steps, "batch": batch, "lr": LR,
+           "loss_curve": []}
+    t0 = time.time()
+    for it in range(1, steps + 1):
+        x, y = chunks(stream, cfg.seq, batch, rng)
+        params, m, v, loss = step(params, m, v, float(it), x, y)
+        if it % 25 == 0 or it == 1:
+            log["loss_curve"].append([it, float(loss)])
+            print(f"  step {it:4d}  loss {float(loss):.4f}  "
+                  f"({time.time() - t0:.0f}s)")
+
+    hx, hy = chunks(holdout, cfg.seq, 8, np.random.default_rng(7))
+    log["holdout_loss"] = float(loss_fn(params, hx, hy))
+    log["lambada_syn_acc_fp32"] = lambada_acc(cfg, params)
+    log["train_seconds"] = time.time() - t0
+    print(f"  holdout loss {log['holdout_loss']:.4f}  "
+          f"lambada-syn acc {log['lambada_syn_acc_fp32']:.3f}")
+
+    np_params = {k: np.asarray(x) for k, x in params.items()}
+    ntz.save(f"{out_dir}/weights_{name}.ntz", np_params)
+    with open(f"{out_dir}/train_log_{name}.json", "w") as f:
+        json.dump(log, f, indent=1)
+
+    # parity golden: 2 random sequences + their logits
+    gt = jnp.asarray(rng.integers(0, VOCAB_SIZE, size=(2, cfg.seq)),
+                     dtype=jnp.int32)
+    gl = model_fwd(cfg, gt, params, use_pallas=False)
+    ntz.save(f"{out_dir}/golden_{name}.ntz",
+             {"tokens": np.asarray(gt).astype(np.int32),
+              "logits": np.asarray(gl)})
+    return log
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=list(MODELS))
+    ap.add_argument("--steps", type=int, default=None,
+                    help="override step count (smoke runs)")
+    ap.add_argument("--force", action="store_true",
+                    help="retrain even if a checkpoint exists")
+    args = ap.parse_args()
+    for name in args.models:
+        out = f"{args.out}/weights_{name}.ntz"
+        if os.path.exists(out) and not args.force:
+            print(f"[train] {name}: {out} exists, skipping (use --force)")
+            continue
+        train_model(name, args.out, args.steps)
+
+
+if __name__ == "__main__":
+    main()

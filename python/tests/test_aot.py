@@ -1,0 +1,96 @@
+"""AOT export contract: graph inventory, HLO-text validity, manifest
+consistency (fast checks on nt-tiny only — the full export is `make
+artifacts`)."""
+
+import json
+
+import pytest
+
+from compile import aot
+from compile.configs import MODELS
+
+
+@pytest.fixture(scope="module")
+def tiny_graphs():
+    cfg = MODELS["nt-tiny"]
+    return list(aot.graph_defs(cfg))
+
+
+def test_graph_inventory(tiny_graphs):
+    names = [g[0] for g in tiny_graphs]
+    for b in aot.EXPORT_BUCKETS:
+        assert f"embed.b{b}" in names
+        assert f"block_fwd.b{b}" in names
+        assert f"head.b{b}" in names
+        for grp in aot.GROUPS:
+            assert f"block_fwd_q.{grp}.b{b}" in names
+    assert "block_taps.b32" in names
+    assert "channel_stats.b32" in names
+    assert "tweak_step.pc" in names
+    assert "tweak_step.g64" in names
+    assert "xtx.k128" in names and "xtx.k512" in names
+
+
+def test_tweak_ablation_graphs_only_for_small():
+    small = [g[0] for g in aot.graph_defs(MODELS["nt-small"])]
+    tiny = [g[0] for g in aot.graph_defs(MODELS["nt-tiny"])]
+    assert "tweak_step_mse.pc" in small and "tweak_step_kl.pc" in small
+    assert "tweak_step_mse.pc" not in tiny
+
+
+def test_arg_counts(tiny_graphs):
+    by_name = {g[0]: g for g in tiny_graphs}
+    # layernorm block: x + 12 float weights
+    assert len(by_name["block_fwd.b8"][2]) == 13
+    # quant block: x + 16 qweights
+    assert len(by_name["block_fwd_q.pc.b8"][2]) == 17
+    # tweak: x + 16 qweights + 4 m + 4 v + mu + var + lr + t
+    assert len(by_name["tweak_step.pc"][2]) == 1 + 16 + 8 + 4
+
+
+def test_rms_arg_counts():
+    by_name = {g[0]: g for g in aot.graph_defs(MODELS["nt-small-rms"])}
+    assert len(by_name["block_fwd.b8"][2]) == 11
+    assert len(by_name["block_fwd_q.pc.b8"][2]) == 15
+    assert len(by_name["tweak_step.pc"][2]) == 1 + 14 + 4 + 4
+
+
+def test_scales_shapes_differ_by_group(tiny_graphs):
+    by_name = {g[0]: g for g in tiny_graphs}
+    pc = {a["name"]: a for a in by_name["block_fwd_q.pc.b8"][2]}
+    g64 = {a["name"]: a for a in by_name["block_fwd_q.g64.b8"][2]}
+    assert pc["attn.wqkv.scales"]["shape"] == [1, 384]
+    assert g64["attn.wqkv.scales"]["shape"] == [2, 384]  # 128/64
+    assert pc["attn.wqkv.codes"]["dtype"] == "i8"
+
+
+def test_one_graph_lowers_to_parseable_hlo():
+    cfg = MODELS["nt-tiny"]
+    for name, fn, in_args in aot.graph_defs(cfg):
+        if name == "channel_stats.b32":
+            text = aot.to_hlo_text(fn, in_args)
+            assert "HloModule" in text
+            assert "ENTRY" in text
+            return
+    pytest.fail("channel_stats graph missing")
+
+
+def test_manifest_matches_exports(tmp_path):
+    # export just nt-tiny and verify manifest ↔ files
+    import subprocess
+    import sys
+    out = str(tmp_path)
+    aot.main.__globals__  # keep linters quiet
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", out, "--models", "nt-tiny"],
+        check=True,
+        cwd=str(__import__("pathlib").Path(__file__).parent.parent),
+    )
+    manifest = json.load(open(f"{out}/manifest.json"))
+    assert manifest["format"] == 1
+    assert "nt-tiny" in manifest["models"]
+    for g in manifest["graphs"]:
+        assert (tmp_path / g["file"]).exists(), g["file"]
+        for a in g["inputs"]:
+            assert a["dtype"] in ("f32", "i8", "i32")
+            assert all(d > 0 for d in a["shape"])

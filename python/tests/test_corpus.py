@@ -1,0 +1,111 @@
+"""Corpus generator: determinism, distributional properties, and the
+Table-1 mismatch the GenData-V2 scheme exploits."""
+
+import numpy as np
+import pytest
+
+from compile.configs import LANGS, VOCAB_SIZE, BOS, EOS, PERIOD
+from compile.corpus import (C4_SYN, PTB_SYN, TRAIN_SPEC, WIKI_SYN, SplitMix64,
+                            lambada_syn, mix64, pick_lang, recall_sequence,
+                            sentence, successor, token_stream)
+
+
+def test_splitmix_reference_values():
+    # lock the PRNG: these values must match rust/src/calib/rng.rs
+    r = SplitMix64(0)
+    first = [r.next_u64() for _ in range(3)]
+    r2 = SplitMix64(0)
+    assert [r2.next_u64() for _ in range(3)] == first
+    assert all(0 <= v < 2 ** 64 for v in first)
+    assert len(set(first)) == 3
+
+
+def test_mix64_is_stable():
+    assert mix64(42) == mix64(42)
+    assert mix64(42) != mix64(43)
+
+
+def test_langs_cover_vocab():
+    assert LANGS[0].lo == 8
+    for a, b in zip(LANGS, LANGS[1:]):
+        assert a.hi == b.lo
+    assert LANGS[-1].hi == VOCAB_SIZE
+
+
+def test_table1_mismatch():
+    corpus5 = sum(l.corpus_share for l in LANGS[:5])
+    vocab5 = sum(l.hi - l.lo for l in LANGS[:5]) / VOCAB_SIZE
+    assert corpus5 > 0.7
+    assert vocab5 < 0.3
+
+
+def test_stream_deterministic_and_in_range():
+    a = token_stream(TRAIN_SPEC, 5000)
+    b = token_stream(TRAIN_SPEC, 5000)
+    assert a == b
+    assert all(0 <= t < VOCAB_SIZE for t in a)
+
+
+def test_specs_differ():
+    streams = [token_stream(s, 2000) for s in (TRAIN_SPEC, WIKI_SYN, PTB_SYN, C4_SYN)]
+    for i in range(len(streams)):
+        for j in range(i + 1, len(streams)):
+            assert streams[i] != streams[j]
+
+
+def test_corpus_share_realized():
+    toks = np.array(token_stream(TRAIN_SPEC, 100_000))
+    en = ((toks >= 8) & (toks < 168)).sum()
+    content = (toks >= 8).sum()
+    share = en / content
+    assert 0.3 < share < 0.5, share  # configured 0.40
+
+
+def test_sentence_follows_grammar():
+    rng = SplitMix64(3)
+    lang = LANGS[0]
+    hits = 0
+    total = 0
+    for _ in range(200):
+        s = sentence(rng, lang)
+        assert s[-1] == PERIOD
+        for a, b in zip(s[:-2], s[1:-1]):
+            total += 1
+            if successor(a, lang) == b:
+                hits += 1
+    assert 0.75 < hits / total < 0.95  # 85% designed determinism
+
+
+def test_recall_sequence_layout():
+    rng = SplitMix64(4)
+    s = recall_sequence(rng, LANGS[1])
+    assert s[0] == BOS
+    assert s[-1] == EOS
+    # answer (index -2) equals the value bound to the queried key (index -3)
+    k_r = s[-3]
+    vals = {s[1]: s[2], s[4]: s[5]}
+    assert s[-2] == vals[k_r]
+
+
+def test_lambada_syn_is_successor_cloze():
+    items, pos = lambada_syn(9, 32, 128)
+    for item, p in zip(items, pos):
+        prev, ans = item[p - 1], item[p]
+        lang = next(l for l in LANGS if l.lo <= prev < l.hi)
+        assert ans == successor(prev, lang)
+        assert all(t == 0 for t in item[p + 1:])  # padding after the answer
+
+
+def test_pick_lang_respects_weights():
+    rng = SplitMix64(11)
+    weights = [0.0] * len(LANGS)
+    weights[2] = 1.0  # all mass on fr
+    for _ in range(100):
+        assert pick_lang(rng, weights).name == "fr"
+
+
+def test_wiki_en_heavy():
+    toks = np.array(token_stream(WIKI_SYN, 30_000))
+    en = ((toks >= 8) & (toks < 168)).sum()
+    content = (toks >= 8).sum()
+    assert en / content > 0.55

@@ -1,0 +1,204 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle, with
+hypothesis sweeping shapes — the core numeric contract of the stack."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import attention
+from compile.kernels.channel_stats import channel_stats
+from compile.kernels.norms import layernorm, rmsnorm
+from compile.kernels.quant_matmul import quant_matmul
+from compile.kernels.rtn import rtn_quantize
+
+RNG = np.random.default_rng(0)
+
+
+def randf(*shape):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# quant_matmul
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.sampled_from([8, 32, 64]),
+    k=st.sampled_from([64, 128, 256]),
+    n=st.sampled_from([64, 128]),
+    bits=st.sampled_from([2, 4, 8]),
+    group_div=st.sampled_from([1, 2, 4]),
+)
+def test_quant_matmul_matches_ref(m, k, n, bits, group_div):
+    group = k // group_div
+    w = randf(k, n)
+    codes, scales = ref.rtn_quantize(w, bits, group)
+    x = randf(m, k)
+    got = quant_matmul(x, codes, scales, group_size=group)
+    want = ref.quant_matmul(x, codes, scales)
+    np.testing.assert_allclose(got, want, atol=2e-4, rtol=1e-4)
+
+
+def test_quant_matmul_rejects_straddling_groups():
+    # block_k must not straddle a scale group
+    w = randf(64, 64)
+    codes, scales = ref.rtn_quantize(w, 4, 16)
+    x = randf(8, 64)
+    got = quant_matmul(x, codes, scales, group_size=16, block_k=16)
+    np.testing.assert_allclose(got, ref.quant_matmul(x, codes, scales),
+                               atol=2e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# rtn kernel
+
+@settings(max_examples=10, deadline=None)
+@given(
+    k=st.sampled_from([64, 128, 512]),
+    n=st.sampled_from([64, 128]),
+    bits=st.sampled_from([2, 3, 4, 8]),
+    group_div=st.sampled_from([1, 2, 8]),
+)
+def test_rtn_kernel_matches_ref(k, n, bits, group_div):
+    group = max(k // group_div, 8)
+    if k % group:
+        group = k
+    w = randf(k, n)
+    c1, s1 = rtn_quantize(w, bits=bits, group_size=group)
+    c2, s2 = ref.rtn_quantize(w, bits, group)
+    np.testing.assert_allclose(s1, s2, rtol=1e-5)
+    # XLA may fuse the two paths differently; a last-ulp scale difference can
+    # flip a code sitting exactly on a rounding boundary — allow a tiny
+    # fraction of off-by-one codes, nothing more.
+    diff = np.abs(np.asarray(c1, dtype=np.int32) - np.asarray(c2, dtype=np.int32))
+    assert diff.max() <= 1
+    assert (diff > 0).mean() < 1e-3
+
+
+def test_rtn_error_bound():
+    w = randf(128, 64)
+    c, s = rtn_quantize(w, bits=4, group_size=128)
+    deq = ref.dequantize(c, s)
+    err = np.abs(np.asarray(w) - np.asarray(deq))
+    bound = np.asarray(s)[0][None, :] / 2 + 1e-6
+    assert (err <= bound).all()
+
+
+# ---------------------------------------------------------------------------
+# channel stats
+
+@settings(max_examples=10, deadline=None)
+@given(
+    rows=st.sampled_from([16, 100, 256, 1000]),
+    c=st.sampled_from([32, 128, 384]),
+)
+def test_channel_stats_matches_ref(rows, c):
+    x = randf(rows, c)
+    mu, var = channel_stats(x)
+    mu_r, var_r = ref.channel_stats(x)
+    np.testing.assert_allclose(mu, mu_r, atol=1e-5)
+    np.testing.assert_allclose(var, var_r, atol=1e-4)
+
+
+def test_channel_stats_3d_input():
+    x = randf(4, 32, 64)
+    mu, var = channel_stats(x)
+    mu_r, var_r = ref.channel_stats(x)
+    np.testing.assert_allclose(mu, mu_r, atol=1e-5)
+    np.testing.assert_allclose(var, var_r, atol=1e-4)
+
+
+def test_channel_stats_padding_correct():
+    # rows deliberately not a multiple of the stripe
+    x = randf(257, 16)
+    mu, var = channel_stats(x, block_rows=64)
+    mu_r, var_r = ref.channel_stats(x)
+    np.testing.assert_allclose(mu, mu_r, atol=1e-5)
+    np.testing.assert_allclose(var, var_r, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+@settings(max_examples=10, deadline=None)
+@given(
+    rows=st.sampled_from([8, 64, 200]),
+    c=st.sampled_from([64, 128, 384]),
+)
+def test_layernorm_matches_ref(rows, c):
+    x = randf(rows, c)
+    g = randf(c)
+    b = randf(c)
+    np.testing.assert_allclose(layernorm(x, g, b), ref.layernorm(x, g, b),
+                               atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    rows=st.sampled_from([8, 64, 200]),
+    c=st.sampled_from([64, 128, 384]),
+)
+def test_rmsnorm_matches_ref(rows, c):
+    x = randf(rows, c)
+    g = randf(c)
+    np.testing.assert_allclose(rmsnorm(x, g), ref.rmsnorm(x, g),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_norms_3d():
+    x = randf(2, 17, 96)
+    g = randf(96)
+    b = randf(96)
+    np.testing.assert_allclose(layernorm(x, g, b), ref.layernorm(x, g, b),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# attention
+
+@settings(max_examples=8, deadline=None)
+@given(
+    b=st.sampled_from([1, 2]),
+    h=st.sampled_from([2, 4]),
+    s=st.sampled_from([64, 128]),
+    dh=st.sampled_from([16, 32, 64]),
+)
+def test_attention_matches_ref(b, h, s, dh):
+    q = randf(b, h, s, dh)
+    k = randf(b, h, s, dh)
+    v = randf(b, h, s, dh)
+    got = attention(q, k, v)
+    want = ref.attention(q, k, v)
+    np.testing.assert_allclose(got, want, atol=2e-4, rtol=1e-3)
+
+
+def test_attention_is_causal():
+    # future tokens must not influence earlier outputs
+    b, h, s, dh = 1, 2, 64, 16
+    q, k, v = randf(b, h, s, dh), randf(b, h, s, dh), randf(b, h, s, dh)
+    out1 = np.asarray(attention(q, k, v))
+    k2 = k.at[:, :, -1, :].set(99.0)
+    v2 = v.at[:, :, -1, :].set(-99.0)
+    out2 = np.asarray(attention(q, k2, v2))
+    np.testing.assert_allclose(out1[:, :, :-1], out2[:, :, :-1], atol=1e-5)
+    assert np.abs(out1[:, :, -1] - out2[:, :, -1]).max() > 1e-3
+
+
+def test_attention_blocked_equals_unblocked():
+    b, h, s, dh = 1, 2, 128, 32
+    q, k, v = randf(b, h, s, dh), randf(b, h, s, dh), randf(b, h, s, dh)
+    a = attention(q, k, v, block_q=32, block_k=32)
+    bfull = attention(q, k, v, block_q=128, block_k=128)
+    np.testing.assert_allclose(a, bfull, atol=2e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# dist loss oracle sanity (mirrors rust tweak::loss tests)
+
+def test_dist_loss_zero_iff_stats_match():
+    x = randf(64, 32)
+    mu, var = ref.channel_stats(x)
+    assert float(ref.dist_loss(mu, var, mu, var)) == 0.0
+    assert float(ref.dist_loss(mu, var, mu + 0.5, var)) == pytest.approx(0.5, abs=1e-5)

@@ -1,0 +1,200 @@
+"""L2 correctness: block/model forwards, pallas≡oracle paths, quantized
+blocks, and the fused tweak_step (gradient direction + Adam arithmetic)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.configs import MODELS
+from compile.kernels import ref
+
+CFG = MODELS["nt-tiny"]
+RMS = MODELS["nt-small-rms"]
+RNG = np.random.default_rng(7)
+
+
+def randf(*shape):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32))
+
+
+def flat_weights(cfg, params, i=0):
+    p = f"block{i}."
+    if cfg.norm == "layernorm":
+        names = ("ln1.g", "ln1.b", "attn.wqkv", "attn.bqkv", "attn.wproj",
+                 "attn.bproj", "ln2.g", "ln2.b", "mlp.wfc1", "mlp.bfc1",
+                 "mlp.wfc2", "mlp.bfc2")
+    else:
+        names = ("ln1.g", "attn.wqkv", "attn.bqkv", "attn.wproj",
+                 "attn.bproj", "ln2.g", "mlp.wfc1", "mlp.bfc1",
+                 "mlp.wfc2", "mlp.bfc2")
+    return [params[p + n] for n in names]
+
+
+def quantize_flat(cfg, flat, bits=4):
+    d = cfg.d_model
+    if cfg.norm == "layernorm":
+        (g1, b1, wqkv, bqkv, wproj, bproj, g2, b2, wfc1, bfc1, wfc2, bfc2) = flat
+    else:
+        (g1, wqkv, bqkv, wproj, bproj, g2, wfc1, bfc1, wfc2, bfc2) = flat
+        b1 = b2 = None
+    cq, sq = ref.rtn_quantize(wqkv, bits, d)
+    cp, sp = ref.rtn_quantize(wproj, bits, d)
+    c1, s1 = ref.rtn_quantize(wfc1, bits, d)
+    c2, s2 = ref.rtn_quantize(wfc2, bits, cfg.d_ff)
+    if cfg.norm == "layernorm":
+        return [g1, b1, cq, sq, bqkv, cp, sp, bproj, g2, b2, c1, s1, bfc1,
+                c2, s2, bfc2]
+    return [g1, cq, sq, bqkv, cp, sp, bproj, g2, c1, s1, bfc1, c2, s2, bfc2]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, 0)
+
+
+@pytest.fixture(scope="module")
+def params_rms():
+    return M.init_params(RMS, 0)
+
+
+def test_init_params_registry(params):
+    assert set(params.keys()) == set(CFG.param_names())
+    assert params["tok_emb"].shape == (CFG.vocab, CFG.d_model)
+
+
+def test_block_fwd_pallas_equals_ref(params):
+    flat = flat_weights(CFG, params)
+    x = randf(2, CFG.seq, CFG.d_model)
+    a = M.block_fwd(CFG, x, flat, use_pallas=False)
+    b = M.block_fwd(CFG, x, flat, use_pallas=True)
+    np.testing.assert_allclose(a, b, atol=2e-4, rtol=1e-3)
+
+
+def test_block_fwd_q_pallas_equals_ref(params):
+    qflat = quantize_flat(CFG, flat_weights(CFG, params))
+    x = randf(2, CFG.seq, CFG.d_model)
+    a = M.block_fwd_q(CFG, x, qflat, use_pallas=False)
+    b = M.block_fwd_q(CFG, x, qflat, use_pallas=True)
+    np.testing.assert_allclose(a, b, atol=2e-4, rtol=1e-3)
+
+
+def test_rms_model_block(params_rms):
+    flat = flat_weights(RMS, params_rms)
+    assert len(flat) == 10
+    x = randf(1, RMS.seq, RMS.d_model)
+    y = M.block_fwd(RMS, x, flat, use_pallas=False)
+    assert y.shape == x.shape
+    qflat = quantize_flat(RMS, flat)
+    yq = M.block_fwd_q(RMS, x, qflat, use_pallas=False)
+    assert yq.shape == x.shape
+    # quantization error is present but bounded
+    assert 0 < float(jnp.abs(y - yq).max()) < 10.0
+
+
+def test_taps_shapes_and_first_tap_is_ln1(params):
+    flat = flat_weights(CFG, params)
+    x = randf(2, CFG.seq, CFG.d_model)
+    t_qkv, t_proj, t_fc1, t_fc2 = M.block_taps(CFG, x, flat, use_pallas=False)
+    assert t_fc2.shape == (2, CFG.seq, CFG.d_ff)
+    expect = ref.layernorm(x, flat[0], flat[1])
+    np.testing.assert_allclose(t_qkv, expect, atol=1e-5)
+
+
+def test_head_and_embed(params):
+    toks = jnp.asarray(RNG.integers(0, CFG.vocab, size=(2, CFG.seq)), dtype=jnp.int32)
+    x = M.embed(CFG, toks, params["tok_emb"], params["pos_emb"])
+    assert x.shape == (2, CFG.seq, CFG.d_model)
+    logits = M.head(CFG, x, [params["lnf.g"], params["lnf.b"]],
+                    params["tok_emb"], use_pallas=False)
+    assert logits.shape == (2, CFG.seq, CFG.vocab)
+
+
+def test_model_fwd_composes(params):
+    """embed -> blocks -> head composed by hand equals model_fwd."""
+    toks = jnp.asarray(RNG.integers(0, CFG.vocab, size=(1, CFG.seq)), dtype=jnp.int32)
+    want = M.model_fwd(CFG, toks, params, use_pallas=False)
+    x = M.embed(CFG, toks, params["tok_emb"], params["pos_emb"])
+    for i in range(CFG.n_layer):
+        x = M.block_fwd(CFG, x, flat_weights(CFG, params, i), use_pallas=False)
+    got = M.head(CFG, x, [params["lnf.g"], params["lnf.b"]],
+                 params["tok_emb"], use_pallas=False)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# tweak_step
+
+def tweak_setup(params):
+    flat = flat_weights(CFG, params)
+    qflat = quantize_flat(CFG, flat, bits=2)
+    x = randf(2, CFG.seq, CFG.d_model)
+    y_f = M.block_fwd(CFG, x, flat, use_pallas=False)
+    mu_f, var_f = ref.channel_stats(y_f)
+    d = CFG.d_model
+    m0 = [jnp.zeros(d)] * 4
+    v0 = [jnp.zeros(d)] * 4
+    return flat, qflat, x, y_f, mu_f, var_f, m0, v0
+
+
+def test_tweak_step_reduces_loss(params):
+    _, qflat, x, _, mu_f, var_f, m, v = tweak_setup(params)
+    qf = list(qflat)
+    losses = []
+    t = 1.0
+    for _ in range(6):
+        out = M.tweak_step(CFG, x, qf, m, v, mu_f, var_f,
+                           jnp.asarray([2e-3]), jnp.asarray([t]))
+        th = out[:4]
+        m = list(out[4:8])
+        v = list(out[8:12])
+        losses.append(float(out[-1][0]))
+        qf[0], qf[1], qf[8], qf[9] = th
+        t += 1
+    assert losses[-1] < losses[0], losses
+
+
+def test_tweak_step_only_norm_params_change(params):
+    _, qflat, x, _, mu_f, var_f, m, v = tweak_setup(params)
+    out = M.tweak_step(CFG, x, qflat, m, v, mu_f, var_f,
+                       jnp.asarray([1e-3]), jnp.asarray([1.0]))
+    # outputs: 4 thetas + 4 m + 4 v + loss — codes/scales are not returned,
+    # i.e. frozen by construction (Algorithm 1 line 10)
+    assert len(out) == 13
+    for th, orig in zip(out[:4], (qflat[0], qflat[1], qflat[8], qflat[9])):
+        assert th.shape == orig.shape
+        assert float(jnp.abs(th - orig).max()) > 0  # something moved
+
+
+def test_tweak_step_adam_matches_manual(params):
+    """One step with beta-corrected Adam must equal the hand formula."""
+    _, qflat, x, _, mu_f, var_f, m, v = tweak_setup(params)
+    lr = 1e-3
+
+    def loss_fn(theta):
+        qf = list(qflat)
+        qf[0], qf[1], qf[8], qf[9] = theta
+        y = M.block_fwd_q(CFG, x, qf, use_pallas=False)
+        mu_q, var_q = ref.channel_stats(y)
+        return ref.dist_loss(mu_f, var_f, mu_q, var_q)
+
+    theta0 = [qflat[0], qflat[1], qflat[8], qflat[9]]
+    grads = jax.grad(loss_fn)(theta0)
+    out = M.tweak_step(CFG, x, qflat, m, v, mu_f, var_f,
+                       jnp.asarray([lr]), jnp.asarray([1.0]))
+    for th0, g, th1 in zip(theta0, grads, out[:4]):
+        m1 = 0.1 * g
+        v1 = 0.001 * g * g
+        mhat = m1 / (1 - 0.9)
+        vhat = v1 / (1 - 0.999)
+        want = th0 - lr * mhat / (jnp.sqrt(vhat) + 1e-8)
+        np.testing.assert_allclose(th1, want, atol=1e-5, rtol=1e-4)
+
+
+def test_tweak_step_mse_and_kl_variants(params):
+    _, qflat, x, y_f, _, _, m, v = tweak_setup(params)
+    for fn in (M.tweak_step_mse, M.tweak_step_kl):
+        out = fn(CFG, x, qflat, m, v, y_f, jnp.asarray([1e-3]), jnp.asarray([1.0]))
+        assert len(out) == 13
+        assert float(out[-1][0]) > 0.0

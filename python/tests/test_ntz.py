@@ -1,0 +1,48 @@
+"""The .ntz archive format (python side; the Rust side has its own
+round-trip tests, and corpus_crosscheck.rs proves cross-language reads)."""
+
+import numpy as np
+import pytest
+
+from compile import ntz
+
+
+def test_roundtrip(tmp_path):
+    path = str(tmp_path / "t.ntz")
+    tensors = {
+        "f": np.random.default_rng(0).normal(size=(3, 4)).astype(np.float32),
+        "i8": np.array([-128, 0, 127], dtype=np.int8),
+        "u8": np.array([0, 255], dtype=np.uint8),
+        "i32": np.array([[1, -1]], dtype=np.int32),
+        "i64": np.array([2 ** 40], dtype=np.int64),
+    }
+    ntz.save(path, tensors)
+    back = ntz.load(path)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+        assert back[k].dtype == tensors[k].dtype
+
+
+def test_f64_downcast(tmp_path):
+    path = str(tmp_path / "t.ntz")
+    ntz.save(path, {"x": np.array([1.5], dtype=np.float64)})
+    assert ntz.load(path)["x"].dtype == np.float32
+
+
+def test_single_and_empty(tmp_path):
+    # the stack uses rank>=1 tensors only (scalars travel as shape [1])
+    path = str(tmp_path / "t.ntz")
+    ntz.save(path, {"s": np.array([3.5], dtype=np.float32),
+                    "e": np.zeros((0,), dtype=np.float32)})
+    back = ntz.load(path)
+    assert back["s"].shape == (1,)
+    assert float(back["s"][0]) == 3.5
+    assert back["e"].shape == (0,)
+
+
+def test_bad_magic(tmp_path):
+    path = tmp_path / "bad.ntz"
+    path.write_bytes(b"JUNKxxxx")
+    with pytest.raises(AssertionError):
+        ntz.load(str(path))

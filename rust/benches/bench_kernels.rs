@@ -1,0 +1,73 @@
+//! Runtime-graph latency: embed / block_fwd / block_fwd_q / head / stats
+//! executions through PJRT (the per-layer costs every pipeline step pays).
+//! Requires `make artifacts`.
+
+use normtweak::coordinator::{FloatModel, QuantModel};
+use normtweak::model::ModelWeights;
+use normtweak::quant::QuantScheme;
+use normtweak::runtime::Runtime;
+use normtweak::tensor::Tensor;
+use normtweak::util::bench::{bench_for, black_box};
+use std::time::Duration;
+
+fn main() {
+    let artifacts = std::env::var("NT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&artifacts).join("manifest.json").exists() {
+        eprintln!("[skip] run `make artifacts` first");
+        return;
+    }
+    println!("== bench_kernels ==");
+    let rt = Runtime::new(&artifacts).unwrap();
+    let budget = Duration::from_millis(600);
+
+    for model in ["nt-tiny", "nt-small", "nt-medium"] {
+        let Ok(w) = ModelWeights::load_from_dir(model, &artifacts) else {
+            eprintln!("[skip] weights for {model} missing");
+            continue;
+        };
+        let fm = FloatModel::new(&rt, &w).unwrap();
+        let cfg = &w.config;
+        let toks = Tensor::i32(&[8, cfg.seq], vec![42; 8 * cfg.seq]);
+        let x = Tensor::randn(&[8, cfg.seq, cfg.d_model], 3, 1.0);
+        let tokens_per = (8 * cfg.seq) as f64;
+
+        let r = bench_for(&format!("{model} embed.b8"), budget, || {
+            black_box(fm.embed(&toks).unwrap());
+        });
+        println!("{}  [{:.0} ktok/s]", r.report(), r.throughput(tokens_per) / 1e3);
+
+        let r = bench_for(&format!("{model} block_fwd.b8"), budget, || {
+            black_box(fm.block_fwd(0, &x).unwrap());
+        });
+        println!("{}  [{:.0} ktok/s]", r.report(), r.throughput(tokens_per) / 1e3);
+
+        // quantized block (W4 per-channel, RTN is fine for timing)
+        let stream = normtweak::calib::corpus::token_stream(
+            &normtweak::calib::corpus::wiki_syn(),
+            rt.manifest.calib_batch * cfg.seq,
+        );
+        let calib = normtweak::calib::CalibSet::from_stream(
+            &stream, rt.manifest.calib_batch, cfg.seq, "wiki-syn").unwrap();
+        let pcfg = normtweak::coordinator::PipelineConfig::new(
+            normtweak::coordinator::QuantMethod::Rtn, QuantScheme::w4_perchannel());
+        let (qm, _) =
+            normtweak::coordinator::quantize_model(&rt, &w, &calib, &pcfg).unwrap();
+        let qr = QuantModel::new(&rt, &qm).unwrap();
+        let r = bench_for(&format!("{model} block_fwd_q.pc.b8"), budget, || {
+            black_box(qr.block_fwd_q(0, &x).unwrap());
+        });
+        println!("{}  [{:.0} ktok/s]", r.report(), r.throughput(tokens_per) / 1e3);
+
+        let r = bench_for(&format!("{model} head.b8"), budget, || {
+            black_box(fm.head(&x).unwrap());
+        });
+        println!("{}  [{:.0} ktok/s]", r.report(), r.throughput(tokens_per) / 1e3);
+
+        let xc = Tensor::randn(&[rt.manifest.calib_batch, cfg.seq, cfg.d_model], 4, 1.0);
+        let r = bench_for(&format!("{model} channel_stats.b32"), budget, || {
+            black_box(fm.channel_stats(&xc).unwrap());
+        });
+        println!("{}", r.report());
+        println!();
+    }
+}

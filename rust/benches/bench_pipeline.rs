@@ -1,0 +1,53 @@
+//! Table-3 analog as a benchmark: full Algorithm-1 wall time, GPTQ vs
+//! GPTQ+NT per model — the paper's "tweaking cost" claim (overhead < 2x).
+//! Requires `make artifacts`.
+
+use std::time::Instant;
+
+use normtweak::calib::CalibSet;
+use normtweak::coordinator::{quantize_model, PipelineConfig, QuantMethod};
+use normtweak::model::ModelWeights;
+use normtweak::quant::QuantScheme;
+use normtweak::runtime::Runtime;
+use normtweak::tweak::TweakConfig;
+
+fn main() {
+    let artifacts = std::env::var("NT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&artifacts).join("manifest.json").exists() {
+        eprintln!("[skip] run `make artifacts` first");
+        return;
+    }
+    println!("== bench_pipeline (Table 3: quantization runtime) ==");
+    let rt = Runtime::new(&artifacts).unwrap();
+
+    for model in ["nt-tiny", "nt-small"] {
+        let Ok(w) = ModelWeights::load_from_dir(model, &artifacts) else {
+            continue;
+        };
+        let stream = normtweak::calib::corpus::token_stream(
+            &normtweak::calib::corpus::wiki_syn(),
+            rt.manifest.calib_batch * w.config.seq,
+        );
+        let calib = CalibSet::from_stream(&stream, rt.manifest.calib_batch,
+                                          w.config.seq, "wiki-syn").unwrap();
+
+        // warm the executable cache so we time the pipeline, not compilation
+        let warm = PipelineConfig::new(QuantMethod::Gptq, QuantScheme::w4_perchannel())
+            .with_tweak(TweakConfig::default());
+        quantize_model(&rt, &w, &calib, &warm).unwrap();
+
+        let t0 = Instant::now();
+        let cfg = PipelineConfig::new(QuantMethod::Gptq, QuantScheme::w4_perchannel());
+        quantize_model(&rt, &w, &calib, &cfg).unwrap();
+        let plain = t0.elapsed();
+
+        let t1 = Instant::now();
+        quantize_model(&rt, &w, &calib, &warm).unwrap();
+        let tweaked = t1.elapsed();
+
+        println!(
+            "{model:<14} GPTQ {plain:>8.2?}   GPTQ+NT {tweaked:>8.2?}   overhead {:+.0}%",
+            (tweaked.as_secs_f64() / plain.as_secs_f64() - 1.0) * 100.0
+        );
+    }
+}

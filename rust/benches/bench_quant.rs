@@ -1,0 +1,56 @@
+//! Quantization-substrate throughput: RTN / OmniQuant / GPTQ / pack-unpack
+//! per layer size (the CPU-side cost of Algorithm 1's line 9).
+
+use normtweak::quant::gptq::{GptqParams, Hessian};
+use normtweak::quant::{gptq, omniquant, rtn, QuantScheme};
+use normtweak::tensor::{matmul, pack_codes, transpose2d, unpack_codes, Tensor};
+use normtweak::util::bench::{bench_for, black_box};
+use std::time::Duration;
+
+fn main() {
+    println!("== bench_quant ==");
+    let budget = Duration::from_millis(400);
+
+    for (k, n, label) in [(256usize, 768usize, "qkv d=256"),
+                          (1024, 256, "fc2 d=256"),
+                          (1536, 384, "fc2 d=384")] {
+        let w = Tensor::randn(&[k, n], 7, 1.0);
+        let elems = (k * n) as f64;
+
+        for scheme in [QuantScheme::w4_perchannel(), QuantScheme::w2_g64()] {
+            let tag = format!("rtn {label} w{}{}", scheme.bits,
+                              if scheme.group_size.is_some() { "g64" } else { "" });
+            let r = bench_for(&tag, budget, || {
+                black_box(rtn::quantize(&w, &scheme).unwrap());
+            });
+            println!("{}  [{:.1} Melem/s]", r.report(), r.throughput(elems) / 1e6);
+        }
+
+        let r = bench_for(&format!("omniquant {label} w2g64"), budget, || {
+            black_box(omniquant::quantize(&w, &QuantScheme::w2_g64()).unwrap());
+        });
+        println!("{}  [{:.1} Melem/s]", r.report(), r.throughput(elems) / 1e6);
+
+        // GPTQ with a real (correlated) Hessian
+        let x = Tensor::randn(&[512, k], 8, 1.0);
+        let xtx = matmul(&transpose2d(&x).unwrap(), &x).unwrap();
+        let mut h = Hessian::new(k);
+        h.accumulate(&xtx, 512).unwrap();
+        let r = bench_for(&format!("gptq {label} w4"), Duration::from_millis(800), || {
+            black_box(
+                gptq::quantize(&w, &h, &QuantScheme::w4_perchannel(),
+                               &GptqParams::default())
+                .unwrap(),
+            );
+        });
+        println!("{}  [{:.1} Melem/s]", r.report(), r.throughput(elems) / 1e6);
+
+        let q = rtn::quantize(&w, &QuantScheme::w4_perchannel()).unwrap();
+        let r = bench_for(&format!("pack+unpack {label} 4bit"), budget, || {
+            let p = pack_codes(&q.codes, 4).unwrap();
+            black_box(unpack_codes(&p));
+        });
+        println!("{}  [{:.1} Melem/s]", r.report(), r.throughput(elems) / 1e6);
+        println!();
+    }
+}

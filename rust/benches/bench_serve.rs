@@ -1,0 +1,73 @@
+//! Serving throughput/latency of the quantized model under synthetic load
+//! (batched vs unbatched — the dynamic batcher's win).
+//! Requires `make artifacts`.
+
+use std::time::{Duration, Instant};
+
+use normtweak::calib::CalibSet;
+use normtweak::coordinator::{quantize_model, PipelineConfig, QuantMethod, QuantModel};
+use normtweak::model::ModelWeights;
+use normtweak::quant::QuantScheme;
+use normtweak::runtime::Runtime;
+use normtweak::serve::{channel, serve_loop, ServeConfig};
+
+fn drive(model: &QuantModel, max_batch: usize, n_requests: usize) -> (f64, f64) {
+    let (handle, rx) = channel();
+    let lat = std::sync::Mutex::new(Vec::<u128>::new());
+    let t0 = Instant::now();
+    let stats = std::thread::scope(|s| {
+        for c in 0..4 {
+            let h = handle.clone();
+            let lat = &lat;
+            s.spawn(move || {
+                for i in 0..n_requests / 4 {
+                    let prompt = vec![1, (8 + (c * 31 + i * 13) % 150) as i32];
+                    let t = Instant::now();
+                    if h.submit(prompt, 8).is_ok() {
+                        lat.lock().unwrap().push(t.elapsed().as_micros());
+                    }
+                }
+            });
+        }
+        drop(handle);
+        serve_loop(
+            model,
+            ServeConfig { max_batch, batch_window: Duration::from_millis(10) },
+            rx,
+        )
+    })
+    .unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    let mut l = lat.into_inner().unwrap();
+    l.sort_unstable();
+    let p50 = l[l.len() / 2] as f64 / 1000.0;
+    (stats.served as f64 / wall, p50)
+}
+
+fn main() {
+    let artifacts = std::env::var("NT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&artifacts).join("manifest.json").exists() {
+        eprintln!("[skip] run `make artifacts` first");
+        return;
+    }
+    println!("== bench_serve ==");
+    let rt = Runtime::new(&artifacts).unwrap();
+    let w = ModelWeights::load_from_dir("nt-tiny", &artifacts).unwrap();
+    let stream = normtweak::calib::corpus::token_stream(
+        &normtweak::calib::corpus::wiki_syn(),
+        rt.manifest.calib_batch * w.config.seq,
+    );
+    let calib = CalibSet::from_stream(&stream, rt.manifest.calib_batch,
+                                      w.config.seq, "wiki-syn").unwrap();
+    let cfg = PipelineConfig::new(QuantMethod::Rtn, QuantScheme::w4_perchannel());
+    let (qm, _) = quantize_model(&rt, &w, &calib, &cfg).unwrap();
+    let model = QuantModel::new(&rt, &qm).unwrap();
+
+    // warm the executable cache
+    drive(&model, 8, 8);
+
+    for max_batch in [1usize, 4, 8] {
+        let (rps, p50) = drive(&model, max_batch, 32);
+        println!("max_batch {max_batch}: {rps:>6.1} req/s   p50 {p50:>7.1} ms");
+    }
+}

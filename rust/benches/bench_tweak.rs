@@ -1,0 +1,79 @@
+//! Tweak-step hot path: the fused XLA tweak iteration and its CPU-side
+//! components (codes unpack, loss reference, Adam mirror).
+//! Requires `make artifacts`.
+
+use normtweak::calib::CalibSet;
+use normtweak::coordinator::{quantize_model, FloatModel, PipelineConfig, QuantMethod};
+use normtweak::model::ModelWeights;
+use normtweak::quant::QuantScheme;
+use normtweak::runtime::Runtime;
+use normtweak::tensor::Tensor;
+use normtweak::tweak::adam::AdamState;
+use normtweak::tweak::tweaker::{TweakTarget, Tweaker};
+use normtweak::tweak::{loss, TweakConfig};
+use normtweak::util::bench::{bench, bench_for, black_box};
+use std::time::Duration;
+
+fn main() {
+    let artifacts = std::env::var("NT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&artifacts).join("manifest.json").exists() {
+        eprintln!("[skip] run `make artifacts` first");
+        return;
+    }
+    println!("== bench_tweak ==");
+    let rt = Runtime::new(&artifacts).unwrap();
+    let model = "nt-small";
+    let w = ModelWeights::load_from_dir(model, &artifacts).unwrap();
+    let cfg = &w.config;
+
+    // build a quantized model to tweak
+    let stream = normtweak::calib::corpus::token_stream(
+        &normtweak::calib::corpus::wiki_syn(),
+        rt.manifest.calib_batch * cfg.seq,
+    );
+    let calib = CalibSet::from_stream(&stream, rt.manifest.calib_batch,
+                                      cfg.seq, "wiki-syn").unwrap();
+    let pcfg = PipelineConfig::new(QuantMethod::Gptq, QuantScheme::w4_perchannel());
+    let (qm, _) = quantize_model(&rt, &w, &calib, &pcfg).unwrap();
+
+    let fm = FloatModel::new(&rt, &w).unwrap();
+    let x = fm.embed(&calib.tokens).unwrap();
+    let y_f = fm.block_fwd(0, &x).unwrap();
+    let (mu, var) = fm.channel_stats(&y_f).unwrap();
+
+    // the fused tweak_step executable (one PJRT call = one Adam iteration)
+    let tweaker = Tweaker::new(&rt, model, "pc",
+                               TweakConfig { iters: 1, ..TweakConfig::default() });
+    let mut blk = qm.blocks[0].clone();
+    let target = TweakTarget::Stats { mu: mu.clone(), var: var.clone() };
+    let r = bench(&format!("{model} tweak_step (fused XLA)"), 2, 12, || {
+        black_box(
+            tweaker
+                .tweak_layer(&mut blk, cfg.norm, &x, &target, 1e-3)
+                .unwrap(),
+        );
+    });
+    println!("{}", r.report());
+
+    // CPU-side components
+    let budget = Duration::from_millis(300);
+    let r = bench_for("codes unpack (qkv)", budget, || {
+        black_box(qm.blocks[0].qkv.codes_tensor());
+    });
+    println!("{}", r.report());
+
+    let a = Tensor::randn(&[rt.manifest.calib_batch * cfg.seq, cfg.d_model], 1, 1.0);
+    let b = Tensor::randn(&[rt.manifest.calib_batch * cfg.seq, cfg.d_model], 2, 1.0);
+    let r = bench_for("dist_loss CPU reference", budget, || {
+        black_box(loss::dist_loss(&a, &b).unwrap());
+    });
+    println!("{}", r.report());
+
+    let mut adam = AdamState::new(4, cfg.d_model);
+    let mut theta: Vec<Tensor> = (0..4).map(|i| Tensor::randn(&[cfg.d_model], i, 1.0)).collect();
+    let grads: Vec<Tensor> = (0..4).map(|i| Tensor::randn(&[cfg.d_model], 10 + i, 0.1)).collect();
+    let r = bench_for("adam CPU mirror (4 params)", budget, || {
+        adam.apply_cpu(&mut theta, &grads, 1e-3);
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,266 @@
+//! Synthetic multilingual corpus — bit-for-bit mirror of
+//! `python/compile/corpus.py` (cross-checked against goldens in
+//! `rust/tests/corpus_crosscheck.rs`).
+
+use super::rng::{mix64, SplitMix64, MIX_K};
+use super::vocab::{Lang, BOS, EOS, LANGS, PERIOD, QUERY};
+use crate::calib::vocab::BIND;
+
+/// Deterministic grammar successor of `word` inside `lang`'s bucket.
+pub fn successor(word: u32, lang: &Lang) -> u32 {
+    let b = (lang.hi - lang.lo) as u64;
+    lang.lo + (mix64((word as u64).wrapping_mul(MIX_K).wrapping_add(lang.salt)) % b) as u32
+}
+
+/// One grammar sentence: 4..11 words, 85% successor / 15% random, PERIOD.
+pub fn sentence(rng: &mut SplitMix64, lang: &Lang) -> Vec<i32> {
+    let b = (lang.hi - lang.lo) as u64;
+    let n = 4 + rng.below(8);
+    let mut w = lang.lo + rng.below(b) as u32;
+    let mut out = vec![w as i32];
+    for _ in 0..n - 1 {
+        if rng.chance(85, 100) {
+            w = successor(w, lang);
+        } else {
+            w = lang.lo + rng.below(b) as u32;
+        }
+        out.push(w as i32);
+    }
+    out.push(PERIOD);
+    out
+}
+
+/// Binding-recall sequence (present in the corpus; see DESIGN.md §2 on why
+/// the headline metric uses successor-cloze instead).
+pub fn recall_sequence(rng: &mut SplitMix64, lang: &Lang) -> Vec<i32> {
+    let n_bind = 2usize;
+    let filler_sents = 1usize;
+    let b = (lang.hi - lang.lo) as u64;
+    let mut keys: Vec<u32> = Vec::new();
+    let mut vals: Vec<u32> = Vec::new();
+    while keys.len() < n_bind {
+        let k = lang.lo + rng.below(b) as u32;
+        if !keys.contains(&k) {
+            keys.push(k);
+            vals.push(lang.lo + rng.below(b) as u32);
+        }
+    }
+    let mut out = vec![BOS];
+    for (k, v) in keys.iter().zip(&vals) {
+        out.extend([*k as i32, *v as i32, BIND]);
+    }
+    for _ in 0..filler_sents {
+        out.extend(sentence(rng, lang));
+    }
+    let r = rng.below(n_bind as u64) as usize;
+    out.extend([QUERY, keys[r] as i32, vals[r] as i32, EOS]);
+    out
+}
+
+/// A corpus spec: language mix + document shape + recall share
+/// (mirror of `corpus.MixSpec`).
+#[derive(Debug, Clone)]
+pub struct MixSpec {
+    pub name: &'static str,
+    pub seed: u64,
+    pub weights: Option<Vec<f64>>,
+    pub recall_permille: u64,
+    pub doc_min: u64,
+    pub doc_max: u64,
+}
+
+impl MixSpec {
+    fn mix_weights(&self) -> Vec<f64> {
+        match &self.weights {
+            Some(w) => w.clone(),
+            None => LANGS.iter().map(|l| l.corpus_share).collect(),
+        }
+    }
+}
+
+/// Weighted language choice via integer per-mille thresholds
+/// (mirror of `corpus.pick_lang` — integer arithmetic keeps the two
+/// implementations identical).
+pub fn pick_lang<'a>(rng: &mut SplitMix64, weights: &[f64]) -> &'a Lang {
+    let permille: Vec<u64> = weights.iter().map(|w| (w * 1000.0) as u64).collect();
+    let total: u64 = permille.iter().sum();
+    let r = rng.below(total);
+    let mut acc = 0u64;
+    for (lang, p) in LANGS.iter().zip(&permille) {
+        acc += p;
+        if r < acc {
+            return lang;
+        }
+    }
+    LANGS.last().unwrap()
+}
+
+/// One document: BOS, sentences (or a recall block), EOS.
+pub fn document(rng: &mut SplitMix64, lang: &Lang, spec: &MixSpec) -> Vec<i32> {
+    if rng.below(1000) < spec.recall_permille {
+        return recall_sequence(rng, lang);
+    }
+    let target = (spec.doc_min + rng.below(spec.doc_max - spec.doc_min)) as usize;
+    let mut out = vec![BOS];
+    while out.len() < target {
+        out.extend(sentence(rng, lang));
+    }
+    out.push(EOS);
+    out
+}
+
+/// Concatenate documents until at least `n_tokens`; truncate exactly.
+pub fn token_stream(spec: &MixSpec, n_tokens: usize) -> Vec<i32> {
+    let mut rng = SplitMix64::new(spec.seed);
+    let weights = spec.mix_weights();
+    let mut out: Vec<i32> = Vec::with_capacity(n_tokens + 512);
+    while out.len() < n_tokens {
+        let lang = pick_lang(&mut rng, &weights);
+        out.extend(document(&mut rng, lang, spec));
+    }
+    out.truncate(n_tokens);
+    out
+}
+
+/// Build a full weight vector from sparse (name, weight) pairs
+/// (mirror of `corpus._w` — leftover spread evenly over the rest).
+fn w(pairs: &[(&str, f64)]) -> Vec<f64> {
+    let named: f64 = pairs.iter().map(|(_, v)| v).sum();
+    let rest_count = LANGS.iter().filter(|l| !pairs.iter().any(|(n, _)| *n == l.name)).count();
+    let per = if rest_count > 0 { (1.0 - named).max(0.0) / rest_count as f64 } else { 0.0 };
+    LANGS
+        .iter()
+        .map(|l| {
+            pairs
+                .iter()
+                .find(|(n, _)| *n == l.name)
+                .map(|(_, v)| *v)
+                .unwrap_or(per)
+        })
+        .collect()
+}
+
+/// The named corpora (mirrors of TRAIN_SPEC / WIKI_SYN / PTB_SYN / C4_SYN).
+pub fn train_spec() -> MixSpec {
+    MixSpec { name: "train", seed: 0xC0FFEE, weights: None,
+              recall_permille: 150, doc_min: 64, doc_max: 256 }
+}
+
+pub fn wiki_syn() -> MixSpec {
+    MixSpec { name: "wiki-syn", seed: 0x71C1,
+              weights: Some(w(&[("en", 0.70), ("fr", 0.15)])),
+              recall_permille: 150, doc_min: 96, doc_max: 256 }
+}
+
+pub fn ptb_syn() -> MixSpec {
+    MixSpec { name: "ptb-syn", seed: 0x97B2,
+              weights: Some(w(&[("en", 0.45), ("zhs", 0.30), ("es", 0.15)])),
+              recall_permille: 100, doc_min: 48, doc_max: 128 }
+}
+
+pub fn c4_syn() -> MixSpec {
+    MixSpec { name: "c4-syn", seed: 0xC4C4,
+              weights: Some(w(&[("en", 0.25), ("zhs", 0.15), ("fr", 0.15),
+                                ("es", 0.12), ("pt", 0.10)])),
+              recall_permille: 250, doc_min: 64, doc_max: 224 }
+}
+
+/// Look up a named eval corpus spec.
+pub fn spec_by_name(name: &str) -> Option<MixSpec> {
+    match name {
+        "train" => Some(train_spec()),
+        "wiki-syn" => Some(wiki_syn()),
+        "ptb-syn" => Some(ptb_syn()),
+        "c4-syn" => Some(c4_syn()),
+        _ => None,
+    }
+}
+
+/// Successor-cloze items (the LAMBADA-syn set) — mirror of
+/// `corpus.lambada_syn`. Returns (tokens [n, seq] row-major, answer_pos).
+pub fn lambada_syn(seed: u64, n_items: usize, seq: usize) -> (Vec<i32>, Vec<usize>) {
+    let mut rng = SplitMix64::new(seed);
+    let mut items: Vec<i32> = Vec::with_capacity(n_items * seq);
+    let mut pos = Vec::with_capacity(n_items);
+    while pos.len() < n_items {
+        let lang = &LANGS[rng.below(5) as usize];
+        let mut sent = sentence(&mut rng, lang);
+        sent.pop(); // drop PERIOD
+        let mut seqt = vec![BOS];
+        seqt.extend(sent);
+        if seqt.len() > seq {
+            continue;
+        }
+        let n = seqt.len();
+        seqt[n - 1] = successor(seqt[n - 2] as u32, lang) as i32;
+        pos.push(n - 1);
+        items.extend(&seqt);
+        items.extend(std::iter::repeat(0).take(seq - n));
+    }
+    (items, pos)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_deterministic() {
+        let a = token_stream(&train_spec(), 1000);
+        let b = token_stream(&train_spec(), 1000);
+        assert_eq!(a, b);
+        let c = token_stream(&wiki_syn(), 1000);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn tokens_in_range() {
+        for spec in [train_spec(), wiki_syn(), ptb_syn(), c4_syn()] {
+            for &t in token_stream(&spec, 2000).iter() {
+                assert!((0..2048).contains(&t), "token {t} out of range");
+            }
+        }
+    }
+
+    #[test]
+    fn successor_stays_in_bucket() {
+        let lang = &LANGS[0];
+        for w_ in lang.lo..lang.lo + 20 {
+            let s = successor(w_, lang);
+            assert!(s >= lang.lo && s < lang.hi);
+        }
+    }
+
+    #[test]
+    fn wiki_is_en_heavy() {
+        let toks = token_stream(&wiki_syn(), 20_000);
+        let en = toks
+            .iter()
+            .filter(|&&t| (8..168).contains(&t))
+            .count() as f64;
+        let content = toks.iter().filter(|&&t| t >= 8).count() as f64;
+        assert!(en / content > 0.5, "en share {}", en / content);
+    }
+
+    #[test]
+    fn lambada_syn_answers_are_successors() {
+        let (items, pos) = lambada_syn(7, 16, 128);
+        for (i, &p) in pos.iter().enumerate() {
+            let row = &items[i * 128..(i + 1) * 128];
+            let prev = row[p - 1] as u32;
+            let ans = row[p] as u32;
+            let lang = crate::calib::vocab::lang_of_token(prev as i32).unwrap();
+            assert_eq!(ans, successor(prev, lang));
+        }
+    }
+
+    #[test]
+    fn sentence_shape() {
+        let mut rng = SplitMix64::new(1);
+        for _ in 0..50 {
+            let s = sentence(&mut rng, &LANGS[2]);
+            assert!(s.len() >= 5 && s.len() <= 12);
+            assert_eq!(*s.last().unwrap(), PERIOD);
+        }
+    }
+}

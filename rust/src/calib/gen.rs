@@ -1,0 +1,119 @@
+//! GenData: the paper's self-generated calibration scheme (LLM-QAT two-stage
+//! generation), with the V2 language-scope restriction on the first token.
+//!
+//! * **V1** — first token uniform over the whole content vocabulary (the
+//!   official LLM-QAT recipe).
+//! * **V2** — first token restricted to the top-language buckets, weighted
+//!   by corpus share (the paper's improvement, motivated by the Table-1
+//!   corpus-vs-vocab mismatch: uniform vocab sampling lands in the
+//!   low-resource tail ~76% of the time).
+
+use crate::calib::rng::SplitMix64;
+use crate::calib::vocab::{BOS, LANGS, N_SPECIAL, N_TOP_LANGS, VOCAB_SIZE};
+use crate::error::Result;
+use crate::eval::generate::{generate, SampleConfig};
+use crate::eval::LanguageModel;
+use crate::tensor::Tensor;
+
+use super::CalibSet;
+
+/// Which first-token scheme to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GenVariant {
+    V1,
+    V2,
+}
+
+impl GenVariant {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            GenVariant::V1 => "gen-v1",
+            GenVariant::V2 => "gen-v2",
+        }
+    }
+}
+
+/// Draw the first content token per the variant's restriction.
+pub fn first_token(variant: GenVariant, rng: &mut SplitMix64) -> i32 {
+    match variant {
+        GenVariant::V1 => (N_SPECIAL + rng.below((VOCAB_SIZE - N_SPECIAL) as u64) as u32) as i32,
+        GenVariant::V2 => {
+            // weighted by corpus share over the top languages
+            let top = &LANGS[..N_TOP_LANGS];
+            let permille: Vec<u64> = top.iter().map(|l| (l.corpus_share * 1000.0) as u64).collect();
+            let total: u64 = permille.iter().sum();
+            let r = rng.below(total);
+            let mut acc = 0;
+            for (lang, p) in top.iter().zip(&permille) {
+                acc += p;
+                if r < acc {
+                    return (lang.lo + rng.below((lang.hi - lang.lo) as u64) as u32) as i32;
+                }
+            }
+            (top[0].lo) as i32
+        }
+    }
+}
+
+/// Generate an `n × seq` calibration set from the model itself.
+pub fn generate_calib(
+    model: &dyn LanguageModel,
+    variant: GenVariant,
+    n: usize,
+    seq: usize,
+    seed: u64,
+) -> Result<CalibSet> {
+    let mut rng = SplitMix64::new(seed);
+    let prompts: Vec<Vec<i32>> = (0..n)
+        .map(|_| vec![BOS, first_token(variant, &mut rng)])
+        .collect();
+    let cfg = SampleConfig { temperature: 1.0, stochastic_prefix: 5, seed };
+    let seqs = generate(model, &prompts, seq, &cfg)?;
+    let mut flat = Vec::with_capacity(n * seq);
+    for s in &seqs {
+        flat.extend(s);
+    }
+    Ok(CalibSet {
+        tokens: Tensor::i32(&[n, seq], flat),
+        source: variant.tag().to_string(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v2_stays_in_top_buckets() {
+        let mut rng = SplitMix64::new(1);
+        let top_hi = LANGS[N_TOP_LANGS - 1].hi;
+        for _ in 0..500 {
+            let t = first_token(GenVariant::V2, &mut rng) as u32;
+            assert!(t >= N_SPECIAL && t < top_hi, "token {t} outside top langs");
+        }
+    }
+
+    #[test]
+    fn v1_covers_tail() {
+        let mut rng = SplitMix64::new(2);
+        let top_hi = LANGS[N_TOP_LANGS - 1].hi;
+        let tail = (0..500)
+            .filter(|_| (first_token(GenVariant::V1, &mut rng) as u32) >= top_hi)
+            .count();
+        // tail owns ~76% of the vocab, so uniform sampling should land there often
+        assert!(tail > 300, "only {tail}/500 in tail");
+    }
+
+    #[test]
+    fn v2_weighted_toward_en() {
+        let mut rng = SplitMix64::new(3);
+        let en = (0..1000)
+            .filter(|_| {
+                let t = first_token(GenVariant::V2, &mut rng) as u32;
+                (8..168).contains(&t)
+            })
+            .count();
+        // en has 40/78 of the top-language mass
+        assert!(en > 350 && en < 700, "en count {en}");
+    }
+}

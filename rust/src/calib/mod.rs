@@ -1,0 +1,46 @@
+//! Calibration data: the synthetic multilingual corpus (bit-for-bit mirror
+//! of the Python generator), the paper's self-generation scheme (GenData
+//! V1/V2 with the language-scope restriction), and the random-Gaussian
+//! baseline of Table 8.
+
+pub mod corpus;
+pub mod gen;
+pub mod random;
+pub mod rng;
+pub mod vocab;
+
+use crate::error::Result;
+use crate::tensor::Tensor;
+
+/// A calibration set: `n` token sequences of fixed length.
+#[derive(Debug, Clone)]
+pub struct CalibSet {
+    /// i32 [n, seq]
+    pub tokens: Tensor,
+    /// provenance tag used in reports ("gen-v2", "wiki-syn", ...)
+    pub source: String,
+}
+
+impl CalibSet {
+    pub fn n_samples(&self) -> usize {
+        self.tokens.shape[0]
+    }
+
+    pub fn seq(&self) -> usize {
+        self.tokens.shape[1]
+    }
+
+    /// Build from a flat token stream, chunked into consecutive windows —
+    /// how the paper samples calibration text from a real dataset.
+    pub fn from_stream(stream: &[i32], n: usize, seq: usize, source: &str) -> Result<Self> {
+        let need = n * seq;
+        if stream.len() < need {
+            return Err(crate::error::Error::msg(format!(
+                "stream too short: {} < {need}",
+                stream.len()
+            )));
+        }
+        let tokens = Tensor::i32(&[n, seq], stream[..need].to_vec());
+        Ok(CalibSet { tokens, source: source.to_string() })
+    }
+}

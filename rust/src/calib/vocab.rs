@@ -1,0 +1,137 @@
+//! Vocabulary layout — mirror of `python/compile/configs.py`.
+//!
+//! Reproduces the paper's Table-1 mismatch: top-5 languages dominate the
+//! corpus (~78%) but own ~24% of the vocabulary.
+
+pub const VOCAB_SIZE: u32 = 2048;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const SEP: i32 = 3;
+pub const PERIOD: i32 = 4;
+pub const BIND: i32 = 5;
+pub const QUERY: i32 = 6;
+pub const UNK: i32 = 7;
+pub const N_SPECIAL: u32 = 8;
+
+/// One synthetic language: vocab bucket + corpus share + grammar salt.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Lang {
+    pub name: &'static str,
+    pub lo: u32,
+    pub hi: u32,
+    pub corpus_share: f64,
+    pub salt: u64,
+}
+
+/// The 17-language registry (5 dominant + 12 tail).
+pub const LANGS: &[Lang] = &[
+    Lang { name: "en", lo: 8, hi: 168, corpus_share: 0.40, salt: 0x9E3779B97F4A7C15 },
+    Lang { name: "zhs", lo: 168, hi: 200, corpus_share: 0.18, salt: 0xBF58476D1CE4E5B9 },
+    Lang { name: "fr", lo: 200, hi: 328, corpus_share: 0.10, salt: 0x94D049BB133111EB },
+    Lang { name: "es", lo: 328, hi: 424, corpus_share: 0.06, salt: 0xD6E8FEB86659FD93 },
+    Lang { name: "pt", lo: 424, hi: 488, corpus_share: 0.04, salt: 0xA5A5A5A5A5A5A5A5 },
+    Lang { name: "t0", lo: 488, hi: 618, corpus_share: 0.03, salt: 0x0123456789ABCDEF },
+    Lang { name: "t1", lo: 618, hi: 748, corpus_share: 0.03, salt: 0xFEDCBA9876543210 },
+    Lang { name: "t2", lo: 748, hi: 878, corpus_share: 0.02, salt: 0x1111111111111111 },
+    Lang { name: "t3", lo: 878, hi: 1008, corpus_share: 0.02, salt: 0x2222222222222222 },
+    Lang { name: "t4", lo: 1008, hi: 1138, corpus_share: 0.02, salt: 0x3333333333333333 },
+    Lang { name: "t5", lo: 1138, hi: 1268, corpus_share: 0.02, salt: 0x4444444444444444 },
+    Lang { name: "t6", lo: 1268, hi: 1398, corpus_share: 0.02, salt: 0x5555555555555555 },
+    Lang { name: "t7", lo: 1398, hi: 1528, corpus_share: 0.01, salt: 0x6666666666666666 },
+    Lang { name: "t8", lo: 1528, hi: 1658, corpus_share: 0.01, salt: 0x7777777777777777 },
+    Lang { name: "t9", lo: 1658, hi: 1788, corpus_share: 0.01, salt: 0x8888888888888888 },
+    Lang { name: "t10", lo: 1788, hi: 1918, corpus_share: 0.01, salt: 0x9999999999999999 },
+    Lang { name: "t11", lo: 1918, hi: 2048, corpus_share: 0.02, salt: 0xAAAAAAAAAAAAAAAA },
+];
+
+pub const N_TOP_LANGS: usize = 5;
+
+/// Map a token id to the language bucket owning it (None for specials).
+pub fn lang_of_token(tok: i32) -> Option<&'static Lang> {
+    let t = tok as u32;
+    LANGS.iter().find(|l| t >= l.lo && t < l.hi)
+}
+
+/// Render a token as a readable pseudo-word (subjective-eval display).
+pub fn token_to_word(tok: i32) -> String {
+    match tok {
+        PAD => "<pad>".into(),
+        BOS => "<s>".into(),
+        EOS => "</s>".into(),
+        SEP => "<sep>".into(),
+        PERIOD => ".".into(),
+        BIND => ":=".into(),
+        QUERY => "?".into(),
+        UNK => "<unk>".into(),
+        t => match lang_of_token(t) {
+            Some(l) => {
+                // stable consonant-vowel pseudo-word; the two trailing
+                // syllables encode the token id in base 75 (15 consonants x
+                // 5 vowels), which is injective for vocab < 5625 — adjacent
+                // tokens can never render identically
+                let consonants = b"bcdfgklmnprstvz";
+                let vowels = b"aeiou";
+                let x = crate::calib::rng::mix64(t as u64);
+                let mut w = String::new();
+                w.push(consonants[(x % 15) as usize] as char);
+                w.push(vowels[((x / 15) % 5) as usize] as char);
+                let tid = t as usize;
+                for digit in [tid % 75, (tid / 75) % 75] {
+                    w.push(consonants[digit % 15] as char);
+                    w.push(vowels[(digit / 15) % 5] as char);
+                }
+                format!("{}_{w}", l.name)
+            }
+            None => format!("<tok{t}>"),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shares_sum_to_one() {
+        let s: f64 = LANGS.iter().map(|l| l.corpus_share).sum();
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn buckets_are_contiguous_and_cover_vocab() {
+        assert_eq!(LANGS[0].lo, N_SPECIAL);
+        for w in LANGS.windows(2) {
+            assert_eq!(w[0].hi, w[1].lo);
+        }
+        assert_eq!(LANGS.last().unwrap().hi, VOCAB_SIZE);
+    }
+
+    #[test]
+    fn table1_mismatch_holds() {
+        // top-5 corpus share ~78%, vocab share < 30% — the paper's Table 1
+        let corpus: f64 = LANGS[..5].iter().map(|l| l.corpus_share).sum();
+        let vocab: f64 = LANGS[..5]
+            .iter()
+            .map(|l| (l.hi - l.lo) as f64)
+            .sum::<f64>()
+            / VOCAB_SIZE as f64;
+        assert!(corpus > 0.7, "corpus share {corpus}");
+        assert!(vocab < 0.3, "vocab share {vocab}");
+    }
+
+    #[test]
+    fn lang_lookup() {
+        assert_eq!(lang_of_token(10).unwrap().name, "en");
+        assert_eq!(lang_of_token(170).unwrap().name, "zhs");
+        assert!(lang_of_token(3).is_none());
+    }
+
+    #[test]
+    fn words_are_stable_and_distinct() {
+        assert_eq!(token_to_word(42), token_to_word(42));
+        assert_ne!(token_to_word(42), token_to_word(43));
+        assert!(token_to_word(42).starts_with("en_"));
+    }
+}

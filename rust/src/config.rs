@@ -1,0 +1,232 @@
+//! Run configuration (TOML-subset; parsed by `util::tomlmini`).
+//!
+//! ```toml
+//! [run]
+//! model = "nt-small"
+//! artifacts = "artifacts"
+//!
+//! [quant]
+//! method = "gptq"          # rtn | gptq | smoothquant | awq | omniquant
+//! bits = 4
+//! group = 0                # 0 = per-channel
+//! act_bits = 0             # 0 = float activations
+//!
+//! [tweak]
+//! enabled = true
+//! iters = 4
+//! lr0 = 1e-3
+//! lr_scale = 1.0
+//! loss = "dist"            # dist | mse | kl
+//!
+//! [calib]
+//! source = "gen-v2"        # gen-v1 | gen-v2 | random | wiki-syn | ptb-syn | c4-syn | train
+//! n_samples = 32
+//!
+//! [eval]
+//! lambada = true
+//! ppl = ["wiki-syn", "c4-syn"]
+//! tasks = []
+//! ```
+
+use crate::coordinator::QuantMethod;
+use crate::error::{Error, Result};
+use crate::quant::QuantScheme;
+use crate::tweak::tweaker::LossKind;
+use crate::tweak::TweakConfig;
+use crate::util::tomlmini::TomlDoc;
+
+#[derive(Debug, Clone)]
+pub struct RunSection {
+    pub model: String,
+    pub artifacts: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct QuantSection {
+    pub method: String,
+    pub bits: u8,
+    pub group: usize,
+    pub act_bits: u8,
+}
+
+#[derive(Debug, Clone)]
+pub struct TweakSection {
+    pub enabled: bool,
+    pub iters: usize,
+    pub lr0: f32,
+    pub lr_scale: f32,
+    pub loss: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct CalibSection {
+    pub source: String,
+    pub n_samples: usize,
+    pub seed: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct EvalSection {
+    pub lambada: bool,
+    pub ppl: Vec<String>,
+    pub tasks: Vec<String>,
+    pub ppl_tokens: usize,
+}
+
+/// The full parsed configuration (every field has a default).
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub run: RunSection,
+    pub quant: QuantSection,
+    pub tweak: TweakSection,
+    pub calib: CalibSection,
+    pub eval: EvalSection,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            run: RunSection { model: "nt-small".into(), artifacts: "artifacts".into() },
+            quant: QuantSection { method: "gptq".into(), bits: 4, group: 0, act_bits: 0 },
+            tweak: TweakSection {
+                enabled: true,
+                iters: 4,
+                lr0: 1e-3,
+                lr_scale: 1.0,
+                loss: "dist".into(),
+            },
+            calib: CalibSection { source: "gen-v2".into(), n_samples: 32, seed: 0xCA11B },
+            eval: EvalSection { lambada: true, ppl: vec![], tasks: vec![], ppl_tokens: 8192 },
+        }
+    }
+}
+
+impl Config {
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text)?;
+        let mut c = Config::default();
+        let gs = |sec: &str, key: &str| doc.get(sec, key).and_then(|v| v.as_str().map(String::from));
+        let gu = |sec: &str, key: &str| doc.get(sec, key).and_then(|v| v.as_usize());
+        let gf = |sec: &str, key: &str| doc.get(sec, key).and_then(|v| v.as_f32());
+        let gb = |sec: &str, key: &str| doc.get(sec, key).and_then(|v| v.as_bool());
+        let ga = |sec: &str, key: &str| {
+            doc.get(sec, key).and_then(|v| v.as_str_arr().map(|a| a.to_vec()))
+        };
+
+        if let Some(v) = gs("run", "model") { c.run.model = v; }
+        if let Some(v) = gs("run", "artifacts") { c.run.artifacts = v; }
+        if let Some(v) = gs("quant", "method") { c.quant.method = v; }
+        if let Some(v) = gu("quant", "bits") { c.quant.bits = v as u8; }
+        if let Some(v) = gu("quant", "group") { c.quant.group = v; }
+        if let Some(v) = gu("quant", "act_bits") { c.quant.act_bits = v as u8; }
+        if let Some(v) = gb("tweak", "enabled") { c.tweak.enabled = v; }
+        if let Some(v) = gu("tweak", "iters") { c.tweak.iters = v; }
+        if let Some(v) = gf("tweak", "lr0") { c.tweak.lr0 = v; }
+        if let Some(v) = gf("tweak", "lr_scale") { c.tweak.lr_scale = v; }
+        if let Some(v) = gs("tweak", "loss") { c.tweak.loss = v; }
+        if let Some(v) = gs("calib", "source") { c.calib.source = v; }
+        if let Some(v) = gu("calib", "n_samples") { c.calib.n_samples = v; }
+        if let Some(v) = doc.get("calib", "seed").and_then(|v| v.as_u64()) { c.calib.seed = v; }
+        if let Some(v) = gb("eval", "lambada") { c.eval.lambada = v; }
+        if let Some(v) = ga("eval", "ppl") { c.eval.ppl = v; }
+        if let Some(v) = ga("eval", "tasks") { c.eval.tasks = v; }
+        if let Some(v) = gu("eval", "ppl_tokens") { c.eval.ppl_tokens = v; }
+        Ok(c)
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        Self::from_toml(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn method(&self) -> Result<QuantMethod> {
+        Ok(match self.quant.method.as_str() {
+            "rtn" => QuantMethod::Rtn,
+            "gptq" => QuantMethod::Gptq,
+            "smoothquant" => QuantMethod::SmoothQuant,
+            "awq" => QuantMethod::Awq,
+            "omniquant" => QuantMethod::OmniQuant,
+            other => return Err(Error::Config(format!("unknown method {other}"))),
+        })
+    }
+
+    pub fn scheme(&self) -> QuantScheme {
+        QuantScheme {
+            bits: self.quant.bits,
+            group_size: if self.quant.group == 0 { None } else { Some(self.quant.group) },
+        }
+    }
+
+    pub fn tweak_config(&self) -> Result<Option<TweakConfig>> {
+        if !self.tweak.enabled {
+            return Ok(None);
+        }
+        let loss = match self.tweak.loss.as_str() {
+            "dist" => LossKind::Dist,
+            "mse" => LossKind::Mse,
+            "kl" => LossKind::Kl,
+            other => return Err(Error::Config(format!("unknown loss {other}"))),
+        };
+        Ok(Some(TweakConfig {
+            iters: self.tweak.iters,
+            lr0: self.tweak.lr0,
+            lr_scale: self.tweak.lr_scale,
+            loss,
+        }))
+    }
+
+    pub fn act_bits(&self) -> Option<u8> {
+        if self.quant.act_bits == 0 { None } else { Some(self.quant.act_bits) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_parse() {
+        let c = Config::from_toml("").unwrap();
+        assert_eq!(c.run.model, "nt-small");
+        assert_eq!(c.method().unwrap(), QuantMethod::Gptq);
+        assert!(c.tweak_config().unwrap().is_some());
+        assert_eq!(c.scheme().bits, 4);
+        assert!(c.act_bits().is_none());
+    }
+
+    #[test]
+    fn full_toml_parses() {
+        let c = Config::from_toml(
+            r#"
+            [run]
+            model = "nt-tiny"
+            [quant]
+            method = "smoothquant"
+            bits = 2
+            group = 64
+            act_bits = 8
+            [tweak]
+            enabled = false
+            [calib]
+            source = "wiki-syn"
+            [eval]
+            ppl = ["wiki-syn", "c4-syn"]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.run.model, "nt-tiny");
+        assert_eq!(c.method().unwrap(), QuantMethod::SmoothQuant);
+        assert_eq!(c.scheme().group_size, Some(64));
+        assert_eq!(c.act_bits(), Some(8));
+        assert!(c.tweak_config().unwrap().is_none());
+        assert_eq!(c.calib.source, "wiki-syn");
+        assert_eq!(c.eval.ppl.len(), 2);
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        let c = Config::from_toml("[quant]\nmethod = \"zap\"").unwrap();
+        assert!(c.method().is_err());
+        let c = Config::from_toml("[tweak]\nloss = \"zap\"").unwrap();
+        assert!(c.tweak_config().is_err());
+    }
+}

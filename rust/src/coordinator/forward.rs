@@ -1,0 +1,295 @@
+//! Model execution over the AOT graphs: float and quantized runners.
+//!
+//! Both runners compose `embed → block × L → head` from per-layer graphs —
+//! exactly the granularity Algorithm 1 needs — with batch padding to the
+//! exported buckets.
+
+use crate::calib::vocab::PAD;
+use crate::error::{Error, Result};
+use crate::eval::LanguageModel;
+use crate::model::{ModelConfig, ModelWeights, NormKind, QuantizedModel};
+use crate::quant::act::fake_quant_per_row;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+/// Pad a [B, ...] tensor up to `bucket` rows (zeros); returns (padded, b).
+pub fn pad_batch(t: &Tensor, bucket: usize) -> Result<Tensor> {
+    let b = t.shape[0];
+    if b == bucket {
+        return Ok(t.clone());
+    }
+    if b > bucket {
+        return Err(Error::Shape(format!("batch {b} > bucket {bucket}")));
+    }
+    let per = t.numel() / b;
+    let mut shape = t.shape.clone();
+    shape[0] = bucket;
+    Ok(match &t.data {
+        crate::tensor::Storage::F32(v) => {
+            let mut d = v.clone();
+            d.resize(bucket * per, 0.0);
+            Tensor::f32(&shape, d)
+        }
+        crate::tensor::Storage::I32(v) => {
+            let mut d = v.clone();
+            d.resize(bucket * per, PAD);
+            Tensor::i32(&shape, d)
+        }
+        _ => return Err(Error::Shape("pad_batch: unsupported dtype".into())),
+    })
+}
+
+fn slice_batch(t: Tensor, b: usize) -> Tensor {
+    if t.shape[0] == b {
+        return t;
+    }
+    let per = t.numel() / t.shape[0];
+    let mut shape = t.shape.clone();
+    shape[0] = b;
+    match t.data {
+        crate::tensor::Storage::F32(v) => Tensor::f32(&shape, v[..b * per].to_vec()),
+        crate::tensor::Storage::I32(v) => Tensor::i32(&shape, v[..b * per].to_vec()),
+        _ => unreachable!("slice_batch on unsupported dtype"),
+    }
+}
+
+/// Float model runner (the `fOut` stream + FP16-analog baseline evals).
+pub struct FloatModel<'rt, 'w> {
+    pub runtime: &'rt Runtime,
+    pub weights: &'w ModelWeights,
+}
+
+impl<'rt, 'w> FloatModel<'rt, 'w> {
+    pub fn new(runtime: &'rt Runtime, weights: &'w ModelWeights) -> Result<Self> {
+        runtime.manifest.verify_model(&weights.config)?;
+        Ok(FloatModel { runtime, weights })
+    }
+
+    fn name(&self) -> &str {
+        &self.weights.config.name
+    }
+
+    /// tokens i32[B, S] → x0 f32[B, S, d] (padded internally to a bucket).
+    pub fn embed(&self, tokens: &Tensor) -> Result<Tensor> {
+        let b = tokens.shape[0];
+        let bucket = self.runtime.manifest.bucket_for(b)?;
+        let padded = pad_batch(tokens, bucket)?;
+        let outs = self.runtime.run(
+            self.name(),
+            &format!("embed.b{bucket}"),
+            &[&padded, self.weights.get("tok_emb")?, self.weights.get("pos_emb")?],
+        )?;
+        Ok(slice_batch(outs.into_iter().next().unwrap(), b))
+    }
+
+    /// One float block forward.
+    pub fn block_fwd(&self, layer: usize, x: &Tensor) -> Result<Tensor> {
+        let b = x.shape[0];
+        let bucket = self.runtime.manifest.bucket_for(b)?;
+        let padded = pad_batch(x, bucket)?;
+        let bw = self.weights.block(layer)?;
+        let mut args = vec![&padded];
+        args.extend(bw.flat());
+        let outs = self
+            .runtime
+            .run(self.name(), &format!("block_fwd.b{bucket}"), &args)?;
+        Ok(slice_batch(outs.into_iter().next().unwrap(), b))
+    }
+
+    /// The four GPTQ tap activations of a layer (calib bucket only).
+    pub fn block_taps(&self, layer: usize, x: &Tensor) -> Result<Vec<Tensor>> {
+        let cb = self.runtime.manifest.calib_batch;
+        if x.shape[0] != cb {
+            return Err(Error::Shape(format!(
+                "taps need the calib batch {cb}, got {}",
+                x.shape[0]
+            )));
+        }
+        let bw = self.weights.block(layer)?;
+        let mut args = vec![x];
+        args.extend(bw.flat());
+        self.runtime
+            .run(self.name(), &format!("block_taps.b{cb}"), &args)
+    }
+
+    /// Final norm + tied logits.
+    pub fn head(&self, x: &Tensor) -> Result<Tensor> {
+        let b = x.shape[0];
+        let bucket = self.runtime.manifest.bucket_for(b)?;
+        let padded = pad_batch(x, bucket)?;
+        let mut args = vec![&padded, self.weights.get("lnf.g")?];
+        if self.weights.config.norm == NormKind::LayerNorm {
+            args.push(self.weights.get("lnf.b")?);
+        }
+        args.push(self.weights.get("tok_emb")?);
+        let outs = self
+            .runtime
+            .run(self.name(), &format!("head.b{bucket}"), &args)?;
+        Ok(slice_batch(outs.into_iter().next().unwrap(), b))
+    }
+
+    /// Per-channel (mu, var) of an activation tensor via the stats graph.
+    pub fn channel_stats(&self, x: &Tensor) -> Result<(Tensor, Tensor)> {
+        let cb = self.runtime.manifest.calib_batch;
+        let outs = self
+            .runtime
+            .run(self.name(), &format!("channel_stats.b{cb}"), &[x])?;
+        let mut it = outs.into_iter();
+        Ok((it.next().unwrap(), it.next().unwrap()))
+    }
+}
+
+impl LanguageModel for FloatModel<'_, '_> {
+    fn config(&self) -> &ModelConfig {
+        &self.weights.config
+    }
+
+    fn logits(&self, tokens: &Tensor) -> Result<Tensor> {
+        let mut x = self.embed(tokens)?;
+        for l in 0..self.weights.config.n_layer {
+            x = self.block_fwd(l, &x)?;
+        }
+        self.head(&x)
+    }
+}
+
+/// Quantized model runner (the `qOut` stream + quantized evals/serving).
+///
+/// `act_bits` (Some(8)/Some(4)) applies dynamic per-token activation
+/// fake-quant to every block input and the head input — the joint W+A modes
+/// of Tables 4 and 10.
+pub struct QuantModel<'rt, 'q> {
+    pub runtime: &'rt Runtime,
+    pub model: &'q QuantizedModel,
+    pub act_bits: Option<u8>,
+}
+
+impl<'rt, 'q> QuantModel<'rt, 'q> {
+    pub fn new(runtime: &'rt Runtime, model: &'q QuantizedModel) -> Result<Self> {
+        runtime.manifest.verify_model(&model.config)?;
+        Ok(QuantModel { runtime, model, act_bits: None })
+    }
+
+    pub fn with_act_bits(mut self, bits: Option<u8>) -> Self {
+        self.act_bits = bits;
+        self
+    }
+
+    fn name(&self) -> &str {
+        &self.model.config.name
+    }
+
+    fn group_tag(&self) -> &'static str {
+        self.model.scheme.group_tag()
+    }
+
+    pub fn embed(&self, tokens: &Tensor) -> Result<Tensor> {
+        let b = tokens.shape[0];
+        let bucket = self.runtime.manifest.bucket_for(b)?;
+        let padded = pad_batch(tokens, bucket)?;
+        let outs = self.runtime.run(
+            self.name(),
+            &format!("embed.b{bucket}"),
+            &[&padded, &self.model.tok_emb, &self.model.pos_emb],
+        )?;
+        Ok(slice_batch(outs.into_iter().next().unwrap(), b))
+    }
+
+    /// One quantized block forward (with optional activation fake-quant).
+    pub fn block_fwd_q(&self, layer: usize, x: &Tensor) -> Result<Tensor> {
+        let xq = match self.act_bits {
+            Some(bits) => fake_quant_per_row(x, bits)?,
+            None => x.clone(),
+        };
+        let b = xq.shape[0];
+        let bucket = self.runtime.manifest.bucket_for(b)?;
+        let padded = pad_batch(&xq, bucket)?;
+        let blk = &self.model.blocks[layer];
+
+        let cqkv = blk.qkv.codes_tensor();
+        let cproj = blk.proj.codes_tensor();
+        let cfc1 = blk.fc1.codes_tensor();
+        let cfc2 = blk.fc2.codes_tensor();
+
+        let mut args: Vec<&Tensor> = vec![&padded, &blk.ln1_g];
+        if let Some(b1) = &blk.ln1_b {
+            args.push(b1);
+        }
+        args.extend([&cqkv, &blk.qkv.scales, &blk.qkv.bias,
+                     &cproj, &blk.proj.scales, &blk.proj.bias, &blk.ln2_g]);
+        if let Some(b2) = &blk.ln2_b {
+            args.push(b2);
+        }
+        args.extend([&cfc1, &blk.fc1.scales, &blk.fc1.bias,
+                     &cfc2, &blk.fc2.scales, &blk.fc2.bias]);
+
+        let outs = self.runtime.run(
+            self.name(),
+            &format!("block_fwd_q.{}.b{bucket}", self.group_tag()),
+            &args,
+        )?;
+        Ok(slice_batch(outs.into_iter().next().unwrap(), b))
+    }
+
+    pub fn head(&self, x: &Tensor) -> Result<Tensor> {
+        let xq = match self.act_bits {
+            Some(bits) => fake_quant_per_row(x, bits)?,
+            None => x.clone(),
+        };
+        let b = xq.shape[0];
+        let bucket = self.runtime.manifest.bucket_for(b)?;
+        let padded = pad_batch(&xq, bucket)?;
+        let mut args = vec![&padded, &self.model.lnf_g];
+        if let Some(bb) = &self.model.lnf_b {
+            args.push(bb);
+        }
+        args.push(&self.model.tok_emb);
+        let outs = self
+            .runtime
+            .run(self.name(), &format!("head.b{bucket}"), &args)?;
+        Ok(slice_batch(outs.into_iter().next().unwrap(), b))
+    }
+}
+
+impl LanguageModel for QuantModel<'_, '_> {
+    fn config(&self) -> &ModelConfig {
+        &self.model.config
+    }
+
+    fn logits(&self, tokens: &Tensor) -> Result<Tensor> {
+        let mut x = self.embed(tokens)?;
+        for l in 0..self.model.config.n_layer {
+            x = self.block_fwd_q(l, &x)?;
+        }
+        self.head(&x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_and_slice_roundtrip() {
+        let t = Tensor::f32(&[3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let p = pad_batch(&t, 8).unwrap();
+        assert_eq!(p.shape, vec![8, 2]);
+        assert_eq!(p.as_f32().unwrap()[..6], [1., 2., 3., 4., 5., 6.]);
+        assert_eq!(p.as_f32().unwrap()[6..], [0.0; 10]);
+        let s = slice_batch(p, 3);
+        assert_eq!(s, t);
+    }
+
+    #[test]
+    fn pad_tokens_uses_pad_id() {
+        let t = Tensor::i32(&[1, 3], vec![5, 6, 7]);
+        let p = pad_batch(&t, 2).unwrap();
+        assert_eq!(p.as_i32().unwrap(), &[5, 6, 7, PAD, PAD, PAD]);
+    }
+
+    #[test]
+    fn pad_rejects_oversize() {
+        let t = Tensor::zeros(&[4, 2]);
+        assert!(pad_batch(&t, 2).is_err());
+    }
+}

@@ -1,0 +1,37 @@
+//! GPTQ Hessian collection: tap the four linear-layer inputs of a block on
+//! the (quantized-stream) calibration batch and accumulate `2 XᵀX` via the
+//! AOT `xtx` graph — the Gram matmul stays inside XLA.
+
+use crate::error::Result;
+use crate::quant::gptq::Hessian;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+use super::forward::FloatModel;
+
+/// Hessians for (wqkv, wproj, wfc1, wfc2) of one layer, from the current
+/// quantized-stream input `x_q`.
+pub fn collect_hessians(
+    fm: &FloatModel,
+    runtime: &Runtime,
+    layer: usize,
+    x_q: &Tensor,
+) -> Result<[Hessian; 4]> {
+    let taps = fm.block_taps(layer, x_q)?;
+    let model = &fm.weights.config.name;
+    let mut out: Vec<Hessian> = Vec::with_capacity(4);
+    for tap in &taps {
+        let k = *tap.shape.last().unwrap();
+        let rows: usize = tap.numel() / k;
+        let flat = tap.clone().reshape(&[rows, k])?;
+        let xtx = runtime
+            .run(model, &format!("xtx.k{k}"), &[&flat])?
+            .into_iter()
+            .next()
+            .unwrap();
+        let mut h = Hessian::new(k);
+        h.accumulate(&xtx, rows)?;
+        out.push(h);
+    }
+    Ok(out.try_into().expect("4 taps"))
+}

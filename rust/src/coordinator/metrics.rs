@@ -1,0 +1,106 @@
+//! Pipeline observability: per-layer records that back Figure 1 (activation
+//! drift) and Table 3 (runtime).
+
+use crate::util::json::{arr, n, obj, s, Json};
+
+/// Per-layer measurements taken while the pipeline runs.
+#[derive(Debug, Clone)]
+pub struct LayerMetrics {
+    pub layer: usize,
+    /// mean |mu_f - mu_q| over channels of the layer *output* (Figure 1's y-axis)
+    pub delta_mu: f32,
+    /// mean |var_f - var_q| over channels
+    pub delta_var: f32,
+    /// Eq. 2 loss before tweaking (if tweaked)
+    pub loss_before: Option<f32>,
+    /// Eq. 2 loss after the last tweak iteration
+    pub loss_after: Option<f32>,
+    pub lr_used: Option<f32>,
+    pub quant_millis: u128,
+    pub tweak_millis: u128,
+}
+
+impl LayerMetrics {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("layer", n(self.layer as f64)),
+            ("delta_mu", n(self.delta_mu as f64)),
+            ("delta_var", n(self.delta_var as f64)),
+            ("loss_before", self.loss_before.map(|x| n(x as f64)).unwrap_or(Json::Null)),
+            ("loss_after", self.loss_after.map(|x| n(x as f64)).unwrap_or(Json::Null)),
+            ("lr_used", self.lr_used.map(|x| n(x as f64)).unwrap_or(Json::Null)),
+            ("quant_millis", n(self.quant_millis as f64)),
+            ("tweak_millis", n(self.tweak_millis as f64)),
+        ])
+    }
+}
+
+/// Whole-run measurements.
+#[derive(Debug, Clone, Default)]
+pub struct PipelineMetrics {
+    pub model: String,
+    pub method: String,
+    pub bits: u8,
+    pub group: Option<usize>,
+    pub tweaked: bool,
+    pub calib_source: String,
+    pub layers: Vec<LayerMetrics>,
+    pub total_millis: u128,
+    /// packed quantized bytes / float bytes of the same matrices
+    pub compression_ratio: f32,
+}
+
+impl PipelineMetrics {
+    /// Figure-1 series: (layer, delta_mu) pairs.
+    pub fn drift_series(&self) -> Vec<(usize, f32)> {
+        self.layers.iter().map(|l| (l.layer, l.delta_mu)).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("model", s(self.model.clone())),
+            ("method", s(self.method.clone())),
+            ("bits", n(self.bits as f64)),
+            ("group", self.group.map(|g| n(g as f64)).unwrap_or(Json::Null)),
+            ("tweaked", Json::Bool(self.tweaked)),
+            ("calib_source", s(self.calib_source.clone())),
+            ("total_millis", n(self.total_millis as f64)),
+            ("compression_ratio", n(self.compression_ratio as f64)),
+            ("layers", arr(self.layers.iter().map(|l| l.to_json()).collect())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrips() {
+        let m = PipelineMetrics {
+            model: "nt-tiny".into(),
+            method: "gptq".into(),
+            bits: 4,
+            group: Some(64),
+            tweaked: true,
+            calib_source: "gen-v2".into(),
+            layers: vec![LayerMetrics {
+                layer: 0,
+                delta_mu: 0.5,
+                delta_var: 0.1,
+                loss_before: Some(1.0),
+                loss_after: Some(0.5),
+                lr_used: Some(1e-3),
+                quant_millis: 10,
+                tweak_millis: 5,
+            }],
+            total_millis: 15,
+            compression_ratio: 0.125,
+        };
+        let j = m.to_json().emit();
+        let back = Json::parse(&j).unwrap();
+        assert_eq!(back.get("model").unwrap().as_str().unwrap(), "nt-tiny");
+        assert_eq!(back.get("layers").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(m.drift_series(), vec![(0, 0.5)]);
+    }
+}

@@ -1,0 +1,52 @@
+//! L3 coordination: the Algorithm-1 quantization pipeline.
+//!
+//! The coordinator owns the two activation streams over the calibration
+//! batch — float (`fOut`) and quantized (`qOut`) — and advances them one
+//! transformer layer at a time: quantize layer *l* (RTN/GPTQ/SmoothQuant/
+//! AWQ/OmniQuant), optionally norm-tweak it against the float stream's
+//! channel statistics, then feed `qOut_l` forward (Algorithm 1 line 6).
+
+mod forward;
+mod hessian;
+mod metrics;
+mod pipeline;
+
+pub use forward::{pad_batch, FloatModel, QuantModel};
+pub use hessian::collect_hessians;
+pub use metrics::{LayerMetrics, PipelineMetrics};
+pub use pipeline::{quantize_model, PipelineConfig, QuantMethod};
+
+use crate::calib::corpus::spec_by_name;
+use crate::calib::gen::{generate_calib, GenVariant};
+use crate::calib::random::random_calib;
+use crate::calib::{corpus, CalibSet};
+use crate::error::{Error, Result};
+use crate::model::ModelWeights;
+use crate::runtime::Runtime;
+
+/// Build a calibration set from a named source:
+/// `gen-v1` / `gen-v2` (model self-generation), `random`, or one of the
+/// named corpora (`train`, `wiki-syn`, `ptb-syn`, `c4-syn`).
+pub fn build_calib(
+    runtime: &Runtime,
+    weights: &ModelWeights,
+    source: &str,
+    n: usize,
+    seed: u64,
+) -> Result<CalibSet> {
+    let seq = weights.config.seq;
+    match source {
+        "gen-v1" | "gen-v2" => {
+            let variant = if source == "gen-v1" { GenVariant::V1 } else { GenVariant::V2 };
+            let fm = FloatModel::new(runtime, weights)?;
+            generate_calib(&fm, variant, n, seq, seed)
+        }
+        "random" => Ok(random_calib(&corpus::train_spec(), n, seq, seed)),
+        name => {
+            let spec = spec_by_name(name)
+                .ok_or_else(|| Error::Config(format!("unknown calib source {name}")))?;
+            let stream = corpus::token_stream(&spec, n * seq);
+            CalibSet::from_stream(&stream, n, seq, name)
+        }
+    }
+}

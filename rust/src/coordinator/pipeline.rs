@@ -1,0 +1,299 @@
+//! Algorithm 1 — the layer-by-layer PTQ + Norm-Tweaking pipeline.
+
+use std::time::Instant;
+
+use crate::calib::CalibSet;
+use crate::error::{Error, Result};
+use crate::model::{ModelWeights, QuantLinear, QuantizedBlock, QuantizedModel};
+use crate::quant::{awq, gptq, omniquant, rtn, smoothquant, QuantScheme, QuantizedWeight};
+use crate::runtime::Runtime;
+use crate::tensor::{mean_var_channels, pack_codes, Tensor};
+use crate::tweak::tweaker::{LossKind, TweakTarget};
+use crate::tweak::{LayerLrScheduler, TweakConfig, Tweaker};
+
+use super::forward::{FloatModel, QuantModel};
+use super::hessian::collect_hessians;
+use super::metrics::{LayerMetrics, PipelineMetrics};
+
+/// Which PTQ algorithm hosts the (optional) norm tweaking.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantMethod {
+    Rtn,
+    Gptq,
+    /// SmoothQuant: outlier migration folded into the preceding norms, then
+    /// RTN weights; pair with `act_bits` at eval time for W4A8.
+    SmoothQuant,
+    /// AWQ-lite: activation-aware scaling on the norm-fed linears.
+    Awq,
+    /// OmniQuant-lite: grid-searched weight clipping.
+    OmniQuant,
+}
+
+impl QuantMethod {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            QuantMethod::Rtn => "rtn",
+            QuantMethod::Gptq => "gptq",
+            QuantMethod::SmoothQuant => "smoothquant",
+            QuantMethod::Awq => "awq",
+            QuantMethod::OmniQuant => "omniquant",
+        }
+    }
+}
+
+/// Full pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub method: QuantMethod,
+    pub scheme: QuantScheme,
+    /// None = plain PTQ; Some = PTQ + Norm Tweaking
+    pub tweak: Option<TweakConfig>,
+    pub gptq: gptq::GptqParams,
+    pub smooth_alpha: f32,
+}
+
+impl PipelineConfig {
+    pub fn new(method: QuantMethod, scheme: QuantScheme) -> Self {
+        PipelineConfig {
+            method,
+            scheme,
+            tweak: None,
+            gptq: gptq::GptqParams::default(),
+            smooth_alpha: 0.5,
+        }
+    }
+
+    pub fn with_tweak(mut self, t: TweakConfig) -> Self {
+        self.tweak = Some(t);
+        self
+    }
+}
+
+fn to_quant_linear(qw: QuantizedWeight, bias: Tensor, scheme: &QuantScheme) -> Result<QuantLinear> {
+    Ok(QuantLinear {
+        k: qw.k,
+        n: qw.n,
+        packed: pack_codes(&qw.codes, scheme.pack_bits())
+            .map_err(|e| Error::Quant(format!("pack: {e}")))?,
+        scales: Tensor::f32(&[qw.g, qw.n], qw.scales),
+        bias,
+    })
+}
+
+/// Run Algorithm 1: quantize `weights` with `cfg` against `calib`,
+/// returning the quantized model + pipeline metrics.
+pub fn quantize_model(
+    runtime: &Runtime,
+    weights: &ModelWeights,
+    calib: &CalibSet,
+    cfg: &PipelineConfig,
+) -> Result<(QuantizedModel, PipelineMetrics)> {
+    let t_total = Instant::now();
+    let mcfg = weights.config.clone();
+    let cb = runtime.manifest.calib_batch;
+    if calib.n_samples() != cb {
+        return Err(Error::msg(format!(
+            "calibration set has {} samples; pipeline graphs need {cb}",
+            calib.n_samples()
+        )));
+    }
+
+    let fm = FloatModel::new(runtime, weights)?;
+    let mut qmodel = QuantizedModel::scaffold(weights, cfg.scheme)?;
+    let tweaker = cfg.tweak.map(|t| {
+        Tweaker::new(runtime, &mcfg.name, cfg.scheme.group_tag(), t)
+    });
+    let lr_sched = cfg
+        .tweak
+        .map(|t| LayerLrScheduler::new(t.lr0, t.lr_scale, mcfg.n_layer));
+
+    let mut metrics = PipelineMetrics {
+        model: mcfg.name.clone(),
+        method: cfg.method.as_str().to_string(),
+        bits: cfg.scheme.bits,
+        group: cfg.scheme.group_size,
+        tweaked: cfg.tweak.is_some(),
+        calib_source: calib.source.clone(),
+        ..Default::default()
+    };
+
+    // line 1 (calibration data) happened upstream; set up the two streams
+    let mut x_f = fm.embed(&calib.tokens)?; // float stream
+    let mut x_q = x_f.clone();              // quantized stream (Alg. 1 line 6)
+
+    for layer in 0..mcfg.n_layer {
+        let t_layer = Instant::now();
+
+        // ---- float output + targets (Alg. 1 line 8) -------------------------
+        let y_f = fm.block_fwd(layer, &x_f)?;
+        let (mu_f, var_f) = fm.channel_stats(&y_f)?;
+
+        // ---- quantize the four linears (Alg. 1 line 9) ----------------------
+        let bw = weights.block(layer)?;
+        let mut ln1_g = bw.ln1_g.clone();
+        let mut ln1_b = bw.ln1_b.cloned();
+        let mut ln2_g = bw.ln2_g.clone();
+        let mut ln2_b = bw.ln2_b.cloned();
+
+        let (qqkv, qproj, qfc1, qfc2) = match cfg.method {
+            QuantMethod::Rtn => (
+                rtn::quantize(bw.wqkv, &cfg.scheme)?,
+                rtn::quantize(bw.wproj, &cfg.scheme)?,
+                rtn::quantize(bw.wfc1, &cfg.scheme)?,
+                rtn::quantize(bw.wfc2, &cfg.scheme)?,
+            ),
+            QuantMethod::OmniQuant => (
+                omniquant::quantize(bw.wqkv, &cfg.scheme)?,
+                omniquant::quantize(bw.wproj, &cfg.scheme)?,
+                omniquant::quantize(bw.wfc1, &cfg.scheme)?,
+                omniquant::quantize(bw.wfc2, &cfg.scheme)?,
+            ),
+            QuantMethod::Gptq => {
+                let hs = collect_hessians(&fm, runtime, layer, &x_q)?;
+                (
+                    gptq::quantize(bw.wqkv, &hs[0], &cfg.scheme, &cfg.gptq)?,
+                    gptq::quantize(bw.wproj, &hs[1], &cfg.scheme, &cfg.gptq)?,
+                    gptq::quantize(bw.wfc1, &hs[2], &cfg.scheme, &cfg.gptq)?,
+                    gptq::quantize(bw.wfc2, &hs[3], &cfg.scheme, &cfg.gptq)?,
+                )
+            }
+            QuantMethod::SmoothQuant => {
+                // taps give the activation ranges feeding each linear
+                let taps = fm.block_taps(layer, &x_q)?;
+                let mk_stats = |t: &Tensor| -> Result<smoothquant::ActStats> {
+                    let k = *t.shape.last().unwrap();
+                    let mut st = smoothquant::ActStats::new(k);
+                    st.update(&t.clone().reshape(&[t.numel() / k, k])?)?;
+                    Ok(st)
+                };
+                let sp = smoothquant::SmoothParams { alpha: cfg.smooth_alpha };
+                // migrate the norm-fed linears (qkv via ln1, fc1 via ln2)
+                let s_qkv = smoothquant::smoothing_factors(bw.wqkv, &mk_stats(&taps[0])?, &sp)?;
+                let w_qkv = smoothquant::scale_weight(bw.wqkv, &s_qkv)?;
+                let (g1, b1) = smoothquant::fold_into_norm(&ln1_g, ln1_b.as_ref(), &s_qkv)?;
+                ln1_g = g1;
+                ln1_b = b1;
+                let s_fc1 = smoothquant::smoothing_factors(bw.wfc1, &mk_stats(&taps[2])?, &sp)?;
+                let w_fc1 = smoothquant::scale_weight(bw.wfc1, &s_fc1)?;
+                let (g2, b2) = smoothquant::fold_into_norm(&ln2_g, ln2_b.as_ref(), &s_fc1)?;
+                ln2_g = g2;
+                ln2_b = b2;
+                (
+                    rtn::quantize(&w_qkv, &cfg.scheme)?,
+                    rtn::quantize(bw.wproj, &cfg.scheme)?,
+                    rtn::quantize(&w_fc1, &cfg.scheme)?,
+                    rtn::quantize(bw.wfc2, &cfg.scheme)?,
+                )
+            }
+            QuantMethod::Awq => {
+                let taps = fm.block_taps(layer, &x_q)?;
+                let mk = |t: &Tensor| -> Result<(smoothquant::ActStats, Tensor)> {
+                    let k = *t.shape.last().unwrap();
+                    let flat = t.clone().reshape(&[t.numel() / k, k])?;
+                    let mut st = smoothquant::ActStats::new(k);
+                    st.update(&flat)?;
+                    // subsample rows for the grid-search objective
+                    let rows = flat.shape[0].min(64);
+                    let v = flat.as_f32()?[..rows * k].to_vec();
+                    Ok((st, Tensor::f32(&[rows, k], v)))
+                };
+                let (st_qkv, xs_qkv) = mk(&taps[0])?;
+                let r_qkv = awq::quantize(bw.wqkv, &st_qkv, &xs_qkv, &cfg.scheme)?;
+                let (g1, b1) =
+                    smoothquant::fold_into_norm(&ln1_g, ln1_b.as_ref(), &r_qkv.in_scales)?;
+                ln1_g = g1;
+                ln1_b = b1;
+                let (st_fc1, xs_fc1) = mk(&taps[2])?;
+                let r_fc1 = awq::quantize(bw.wfc1, &st_fc1, &xs_fc1, &cfg.scheme)?;
+                let (g2, b2) =
+                    smoothquant::fold_into_norm(&ln2_g, ln2_b.as_ref(), &r_fc1.in_scales)?;
+                ln2_g = g2;
+                ln2_b = b2;
+                (
+                    r_qkv.qw,
+                    rtn::quantize(bw.wproj, &cfg.scheme)?,
+                    r_fc1.qw,
+                    rtn::quantize(bw.wfc2, &cfg.scheme)?,
+                )
+            }
+        };
+        let quant_millis = t_layer.elapsed().as_millis();
+
+        // ---- assemble the quantized block (Alg. 1 line 10: freeze linears) --
+        let mut blk = QuantizedBlock {
+            ln1_g,
+            ln1_b,
+            qkv: to_quant_linear(qqkv, bw.bqkv.clone(), &cfg.scheme)?,
+            proj: to_quant_linear(qproj, bw.bproj.clone(), &cfg.scheme)?,
+            ln2_g,
+            ln2_b,
+            fc1: to_quant_linear(qfc1, bw.bfc1.clone(), &cfg.scheme)?,
+            fc2: to_quant_linear(qfc2, bw.bfc2.clone(), &cfg.scheme)?,
+        };
+
+        // ---- norm tweaking (Alg. 1 lines 11-15) ------------------------------
+        let t_tweak = Instant::now();
+        let mut loss_before = None;
+        let mut loss_after = None;
+        let mut lr_used = None;
+        if let (Some(tw), Some(sched)) = (&tweaker, &lr_sched) {
+            let lr = sched.lr(layer);
+            let target = match tw.config.loss {
+                LossKind::Dist => TweakTarget::Stats {
+                    mu: mu_f.clone(),
+                    var: var_f.clone(),
+                },
+                _ => TweakTarget::Full { y_f: y_f.clone() },
+            };
+            let outcome = tw.tweak_layer(&mut blk, mcfg.norm, &x_q, &target, lr)?;
+            loss_before = outcome.losses.first().copied();
+            loss_after = outcome.losses.last().copied();
+            lr_used = Some(lr);
+        }
+        let tweak_millis = t_tweak.elapsed().as_millis();
+
+        // ---- advance the two streams (Alg. 1 lines 4-7) ----------------------
+        qmodel.blocks.push(blk);
+        let qm_view = QuantModel::new(runtime, &qmodel)?;
+        let y_q = qm_view.block_fwd_q(layer, &x_q)?;
+
+        // Figure-1 drift of this layer's output
+        let (mu_q, var_q) = mean_var_channels(&y_q)?;
+        let mu_f_v = mu_f.as_f32()?;
+        let var_f_v = var_f.as_f32()?;
+        let d = mu_q.len();
+        let delta_mu = (0..d)
+            .map(|i| (mu_f_v[i] - mu_q[i]).abs())
+            .sum::<f32>()
+            / d as f32;
+        let delta_var = (0..d)
+            .map(|i| (var_f_v[i] - var_q[i]).abs())
+            .sum::<f32>()
+            / d as f32;
+
+        if std::env::var_os("NT_QUIET").is_none() {
+            eprintln!(
+                "[pipeline] layer {layer}: Δμ={delta_mu:.5} loss {loss_before:?} -> \
+                 {loss_after:?} ({quant_millis} ms quant, {tweak_millis} ms tweak)"
+            );
+        }
+        metrics.layers.push(LayerMetrics {
+            layer,
+            delta_mu,
+            delta_var,
+            loss_before,
+            loss_after,
+            lr_used,
+            quant_millis,
+            tweak_millis,
+        });
+
+        x_f = y_f;
+        x_q = y_q;
+    }
+
+    metrics.total_millis = t_total.elapsed().as_millis();
+    metrics.compression_ratio =
+        qmodel.quantized_bytes() as f32 / qmodel.float_bytes() as f32;
+    Ok((qmodel, metrics))
+}

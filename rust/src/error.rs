@@ -1,0 +1,71 @@
+//! Crate-wide error and result types.
+
+use thiserror::Error;
+
+/// All errors surfaced by the normtweak library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Wrapper around errors from the `xla` PJRT crate.
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    /// I/O failure (artifact files, checkpoints, corpora).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// JSON (manifest / report) parse or encode failure.
+    #[error("json error: {0}")]
+    Json(String),
+
+    /// TOML config parse failure.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Shape mismatch in tensor operations.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    /// Bad or unsupported quantization configuration.
+    #[error("quantization error: {0}")]
+    Quant(String),
+
+    /// A required AOT artifact is missing or inconsistent with the manifest.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// Numerical failure (e.g. Cholesky of a non-PD Hessian).
+    #[error("numerical error: {0}")]
+    Numerical(String),
+
+    /// Evaluation harness failure.
+    #[error("eval error: {0}")]
+    Eval(String),
+
+    /// Serving-loop failure.
+    #[error("serve error: {0}")]
+    Serve(String),
+
+    /// Checkpoint format failure.
+    #[error("checkpoint error: {0}")]
+    Checkpoint(String),
+
+    /// Anything else.
+    #[error("{0}")]
+    Msg(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+impl Error {
+    /// Convenience constructor for ad-hoc errors.
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error::Msg(m.into())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,146 @@
+//! Batched text generation over any [`LanguageModel`] — used by the GenData
+//! calibration scheme, the subjective eval, and the serving loop.
+//!
+//! Full-context recompute per step (no KV cache: the AOT graphs are
+//! fixed-shape; S=128 keeps this affordable — documented in DESIGN.md).
+
+use crate::calib::rng::SplitMix64;
+use crate::error::Result;
+use crate::tensor::Tensor;
+
+use super::{argmax, LanguageModel};
+
+/// Sampling configuration for one generation run.
+#[derive(Debug, Clone, Copy)]
+pub struct SampleConfig {
+    /// softmax temperature for the stochastic stage (0 = greedy everywhere)
+    pub temperature: f32,
+    /// number of leading tokens sampled stochastically (LLM-QAT's stage 1);
+    /// everything after is greedy (stage 2)
+    pub stochastic_prefix: usize,
+    pub seed: u64,
+}
+
+impl Default for SampleConfig {
+    fn default() -> Self {
+        SampleConfig { temperature: 1.0, stochastic_prefix: 4, seed: 0x5EED }
+    }
+}
+
+/// Generate continuations for a batch of prompts.
+///
+/// `prompts[i]` is the existing token prefix of row i; all rows are extended
+/// to `target_len` tokens.  Returns the full sequences.
+pub fn generate(
+    model: &dyn LanguageModel,
+    prompts: &[Vec<i32>],
+    target_len: usize,
+    cfg: &SampleConfig,
+) -> Result<Vec<Vec<i32>>> {
+    let seq = model.config().seq;
+    let vocab = model.config().vocab;
+    assert!(target_len <= seq);
+    let b = prompts.len();
+    let mut rng = SplitMix64::new(cfg.seed);
+    let mut seqs: Vec<Vec<i32>> = prompts.to_vec();
+    let min_len = seqs.iter().map(|s| s.len()).min().unwrap_or(0);
+    assert!(min_len >= 1, "prompts must be non-empty");
+
+    let mut cur = min_len;
+    while cur < target_len {
+        // pad all rows to seq, run one batched forward
+        let mut toks = Vec::with_capacity(b * seq);
+        for s in &seqs {
+            let mut row = s.clone();
+            row.resize(seq, 0);
+            toks.extend(row);
+        }
+        let logits = model.logits(&Tensor::i32(&[b, seq], toks))?;
+        let lv = logits.as_f32()?;
+        for (i, s) in seqs.iter_mut().enumerate() {
+            if s.len() > cur {
+                continue; // this row is ahead (longer prompt)
+            }
+            let pos = s.len() - 1;
+            let row = &lv[(i * seq + pos) * vocab..(i * seq + pos) * vocab + vocab];
+            let new_tok = if s.len() < prompts[i].len().max(cfg.stochastic_prefix)
+                && cfg.temperature > 0.0
+            {
+                sample_temperature(row, cfg.temperature, &mut rng)
+            } else {
+                argmax(row) as i32
+            };
+            s.push(new_tok);
+        }
+        cur += 1;
+    }
+    Ok(seqs)
+}
+
+/// Temperature sampling from a logits row.
+fn sample_temperature(row: &[f32], temp: f32, rng: &mut SplitMix64) -> i32 {
+    let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let weights: Vec<f64> = row
+        .iter()
+        .map(|&v| (((v - m) / temp) as f64).exp())
+        .collect();
+    let total: f64 = weights.iter().sum();
+    let r = (rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64 * total;
+    let mut acc = 0.0;
+    for (i, w) in weights.iter().enumerate() {
+        acc += w;
+        if r < acc {
+            return i as i32;
+        }
+    }
+    (row.len() - 1) as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    /// Fake model that always prefers token (last_token + 1) % vocab.
+    struct Incrementing(ModelConfig);
+
+    impl LanguageModel for Incrementing {
+        fn config(&self) -> &ModelConfig {
+            &self.0
+        }
+
+        fn logits(&self, tokens: &Tensor) -> Result<Tensor> {
+            let (b, s) = (tokens.shape[0], tokens.shape[1]);
+            let v = self.0.vocab;
+            let tv = tokens.as_i32()?;
+            let mut out = vec![0.0f32; b * s * v];
+            for i in 0..b {
+                for t in 0..s {
+                    let next = ((tv[i * s + t] + 1) as usize) % v;
+                    out[(i * s + t) * v + next] = 10.0;
+                }
+            }
+            Ok(Tensor::f32(&[b, s, v], out))
+        }
+    }
+
+    #[test]
+    fn greedy_generation_follows_model() {
+        let cfg = ModelConfig::builtin("nt-tiny").unwrap();
+        let m = Incrementing(cfg);
+        let cfg = SampleConfig { temperature: 0.0, stochastic_prefix: 0, seed: 1 };
+        let out = generate(&m, &[vec![5], vec![10, 11]], 6, &cfg).unwrap();
+        assert_eq!(out[0], vec![5, 6, 7, 8, 9, 10]);
+        assert_eq!(out[1], vec![10, 11, 12, 13, 14, 15]);
+    }
+
+    #[test]
+    fn sampling_deterministic_per_seed() {
+        let cfg = ModelConfig::builtin("nt-tiny").unwrap();
+        let m = Incrementing(cfg);
+        let sc = SampleConfig { temperature: 1.0, stochastic_prefix: 4, seed: 9 };
+        let a = generate(&m, &[vec![3]], 8, &sc).unwrap();
+        let b = generate(&m, &[vec![3]], 8, &sc).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,89 @@
+//! LAMBADA-syn: last-token accuracy on successor-cloze items (Table 2's
+//! metric — see DESIGN.md §2 for the substitution rationale).
+
+use crate::calib::corpus::lambada_syn;
+use crate::error::Result;
+use crate::tensor::Tensor;
+
+use super::{argmax, LanguageModel};
+
+/// The eval set: tokens + answer positions.
+#[derive(Debug, Clone)]
+pub struct LambadaSet {
+    /// i32 [N, S]
+    pub tokens: Tensor,
+    pub answer_pos: Vec<usize>,
+}
+
+impl LambadaSet {
+    /// Generate deterministically (same items as `artifacts/lambada_syn.ntz`).
+    pub fn generate(seed: u64, n_items: usize, seq: usize) -> Self {
+        let (items, pos) = lambada_syn(seed, n_items, seq);
+        LambadaSet {
+            tokens: Tensor::i32(&[n_items, seq], items),
+            answer_pos: pos,
+        }
+    }
+
+    /// The standard set used across the experiment tables.
+    pub fn standard(seq: usize) -> Self {
+        Self::generate(0x1A3B, 256, seq)
+    }
+
+    pub fn len(&self) -> usize {
+        self.answer_pos.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.answer_pos.is_empty()
+    }
+}
+
+/// Accuracy (%) of `model` on the set, batched at `batch` items per call.
+pub fn accuracy(model: &dyn LanguageModel, set: &LambadaSet, batch: usize) -> Result<f32> {
+    let n = set.len();
+    let seq = set.tokens.shape[1];
+    let vocab = model.config().vocab;
+    let toks = set.tokens.as_i32()?;
+    let mut correct = 0usize;
+    let mut i = 0;
+    while i < n {
+        let b = batch.min(n - i);
+        let chunk = Tensor::i32(&[b, seq], toks[i * seq..(i + b) * seq].to_vec());
+        let logits = model.logits(&chunk)?;
+        let lv = logits.as_f32()?;
+        for r in 0..b {
+            let p = set.answer_pos[i + r];
+            let row = &lv[(r * seq + (p - 1)) * vocab..(r * seq + (p - 1)) * vocab + vocab];
+            let pred = argmax(row) as i32;
+            let truth = toks[(i + r) * seq + p];
+            if pred == truth {
+                correct += 1;
+            }
+        }
+        i += b;
+    }
+    Ok(100.0 * correct as f32 / n as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_generation_deterministic() {
+        let a = LambadaSet::generate(1, 8, 64);
+        let b = LambadaSet::generate(1, 8, 64);
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.answer_pos, b.answer_pos);
+        assert_eq!(a.len(), 8);
+    }
+
+    #[test]
+    fn answers_within_sequence() {
+        let s = LambadaSet::standard(128);
+        for &p in &s.answer_pos {
+            assert!(p > 0 && p < 128);
+        }
+    }
+}

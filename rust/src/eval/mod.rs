@@ -1,0 +1,58 @@
+//! Evaluation harness: LAMBADA-syn accuracy, perplexity, the multi-task
+//! multiple-choice suite (LM-Eval-Harness analog), generation, and the
+//! subjective-eval scorer.
+
+pub mod generate;
+pub mod lambada;
+pub mod ppl;
+pub mod subjective;
+pub mod tasks;
+
+use crate::error::Result;
+use crate::model::ModelConfig;
+use crate::tensor::Tensor;
+
+/// Anything that maps token batches to logits — implemented by the float
+/// and quantized runners in `coordinator::forward`.
+pub trait LanguageModel {
+    fn config(&self) -> &ModelConfig;
+    /// tokens i32[B, S] → logits f32[B, S, V]
+    fn logits(&self, tokens: &Tensor) -> Result<Tensor>;
+}
+
+/// Log-softmax over the last dim of a logits row.
+pub(crate) fn log_softmax_row(row: &[f32]) -> Vec<f32> {
+    let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let lse = m + row.iter().map(|&v| (v - m).exp()).sum::<f32>().ln();
+    row.iter().map(|&v| v - lse).collect()
+}
+
+/// Argmax index of a slice.
+pub(crate) fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let ls = log_softmax_row(&[1.0, 2.0, 3.0]);
+        let total: f32 = ls.iter().map(|v| v.exp()).sum();
+        assert!((total - 1.0).abs() < 1e-5);
+        assert!(ls[2] > ls[1] && ls[1] > ls[0]);
+    }
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 5.0, 2.0]), 1);
+        assert_eq!(argmax(&[3.0]), 0);
+    }
+}

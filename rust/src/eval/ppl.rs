@@ -1,0 +1,92 @@
+//! Perplexity on the held-out synthetic corpora (Tables 8 and 10).
+
+use crate::calib::corpus::{spec_by_name, token_stream};
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+use super::{log_softmax_row, LanguageModel};
+
+/// Perplexity of `model` over `n_tokens` of the named corpus
+/// ("wiki-syn" | "ptb-syn" | "c4-syn" | "train"), evaluated in
+/// non-overlapping windows of the model's sequence length.
+pub fn perplexity(model: &dyn LanguageModel, corpus: &str, n_tokens: usize,
+                  batch: usize) -> Result<f32> {
+    let spec = spec_by_name(corpus)
+        .ok_or_else(|| Error::Eval(format!("unknown corpus {corpus}")))?;
+    let stream = token_stream(&spec, n_tokens + 1);
+    perplexity_on_stream(model, &stream, batch)
+}
+
+/// Perplexity over an explicit token stream.
+pub fn perplexity_on_stream(model: &dyn LanguageModel, stream: &[i32],
+                            batch: usize) -> Result<f32> {
+    let seq = model.config().seq;
+    let vocab = model.config().vocab;
+    let n_windows = (stream.len() - 1) / seq;
+    if n_windows == 0 {
+        return Err(Error::Eval("stream shorter than one window".into()));
+    }
+    let mut total_nll = 0.0f64;
+    let mut total_tokens = 0usize;
+    let mut w = 0;
+    while w < n_windows {
+        let b = batch.min(n_windows - w);
+        let mut toks = Vec::with_capacity(b * seq);
+        for r in 0..b {
+            let off = (w + r) * seq;
+            toks.extend(&stream[off..off + seq]);
+        }
+        let chunk = Tensor::i32(&[b, seq], toks);
+        let logits = model.logits(&chunk)?;
+        let lv = logits.as_f32()?;
+        for r in 0..b {
+            let off = (w + r) * seq;
+            for t in 0..seq - 1 {
+                let target = stream[off + t + 1];
+                let row = &lv[(r * seq + t) * vocab..(r * seq + t) * vocab + vocab];
+                let ls = log_softmax_row(row);
+                total_nll -= ls[target as usize] as f64;
+                total_tokens += 1;
+            }
+        }
+        w += b;
+    }
+    Ok(((total_nll / total_tokens as f64).exp()) as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    /// A uniform-logits fake model: PPL must equal vocab size.
+    struct Uniform(ModelConfig);
+
+    impl LanguageModel for Uniform {
+        fn config(&self) -> &ModelConfig {
+            &self.0
+        }
+
+        fn logits(&self, tokens: &Tensor) -> Result<Tensor> {
+            let b = tokens.shape[0];
+            let s = tokens.shape[1];
+            Ok(Tensor::zeros(&[b, s, self.0.vocab]))
+        }
+    }
+
+    #[test]
+    fn uniform_model_ppl_is_vocab() {
+        let cfg = ModelConfig::builtin("nt-tiny").unwrap();
+        let v = cfg.vocab as f32;
+        let m = Uniform(cfg);
+        let ppl = perplexity(&m, "wiki-syn", 1024, 4).unwrap();
+        assert!((ppl - v).abs() / v < 0.01, "ppl {ppl} vs vocab {v}");
+    }
+
+    #[test]
+    fn unknown_corpus_errors() {
+        let cfg = ModelConfig::builtin("nt-tiny").unwrap();
+        let m = Uniform(cfg);
+        assert!(perplexity(&m, "nope", 512, 4).is_err());
+    }
+}

@@ -1,0 +1,266 @@
+//! The multi-task multiple-choice suite — our LM-Eval-Harness analog
+//! (Tables 7 / 11).
+//!
+//! Each task is a generator of (context, candidates, answer_idx) items scored
+//! by length-normalized continuation log-likelihood — the exact scoring rule
+//! the harness uses for HellaSwag/PIQA/etc.  Task grammars differ in
+//! structure and language mix so the suite probes distinct capabilities:
+//!
+//! | task           | analog     | structure                                  |
+//! |----------------|------------|--------------------------------------------|
+//! | hellaswag-syn  | HellaSwag  | 4-way sentence continuation (en)           |
+//! | piqa-syn       | PIQA       | 2-way continuation, physical-chain grammar |
+//! | winogrande-syn | WinoGrande | 2-way binding disambiguation               |
+//! | openbookqa-syn | OpenBookQA | 4-way cross-language successor lookup      |
+//! | boolq-syn      | BoolQ      | 2-way grammatical-vs-corrupted judgement   |
+
+use crate::calib::corpus::{sentence, successor};
+use crate::calib::rng::SplitMix64;
+use crate::calib::vocab::{BOS, LANGS, PERIOD};
+use crate::error::Result;
+use crate::tensor::Tensor;
+
+use super::{log_softmax_row, LanguageModel};
+
+/// One multiple-choice item.
+#[derive(Debug, Clone)]
+pub struct McItem {
+    pub context: Vec<i32>,
+    pub candidates: Vec<Vec<i32>>,
+    pub answer: usize,
+}
+
+/// A named task = a bag of items.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub name: &'static str,
+    pub items: Vec<McItem>,
+}
+
+pub const TASK_NAMES: &[&str] = &[
+    "hellaswag-syn",
+    "piqa-syn",
+    "winogrande-syn",
+    "openbookqa-syn",
+    "boolq-syn",
+];
+
+/// Build a task by name with `n` items.
+pub fn build_task(name: &str, n: usize, seed: u64) -> Task {
+    let mut rng = SplitMix64::new(seed ^ 0x7A5C);
+    let mut items = Vec::with_capacity(n);
+    while items.len() < n {
+        let item = match name {
+            "hellaswag-syn" => hellaswag_item(&mut rng, 4),
+            "piqa-syn" => hellaswag_item(&mut rng, 2),
+            "winogrande-syn" => winogrande_item(&mut rng),
+            "openbookqa-syn" => openbook_item(&mut rng),
+            "boolq-syn" => boolq_item(&mut rng),
+            _ => panic!("unknown task {name}"),
+        };
+        items.push(item);
+    }
+    Task { name: TASK_NAMES.iter().find(|t| **t == name).unwrap(), items }
+}
+
+/// 4-way (or 2-way) continuation: the true continuation follows the grammar
+/// successor chain; distractors are random in-bucket chains.
+fn hellaswag_item(rng: &mut SplitMix64, n_cand: usize) -> McItem {
+    let lang = &LANGS[rng.below(2) as usize]; // en/zhs — well-learned
+    let b = (lang.hi - lang.lo) as u64;
+    let mut ctx = vec![BOS];
+    let mut s = sentence(rng, lang);
+    s.pop(); // drop PERIOD
+    ctx.extend(&s);
+    let mut w = *ctx.last().unwrap() as u32;
+    // true continuation: 3 successor steps
+    let mut truth = Vec::new();
+    for _ in 0..3 {
+        w = successor(w, lang);
+        truth.push(w as i32);
+    }
+    let mut candidates = vec![truth];
+    for _ in 1..n_cand {
+        let mut c = Vec::new();
+        for _ in 0..3 {
+            c.push((lang.lo + rng.below(b) as u32) as i32);
+        }
+        candidates.push(c);
+    }
+    // rotate the answer position deterministically
+    let answer = (rng.below(n_cand as u64)) as usize;
+    candidates.swap(0, answer);
+    McItem { context: ctx, candidates, answer }
+}
+
+/// 2-way binding disambiguation: which value was bound to the queried key.
+fn winogrande_item(rng: &mut SplitMix64) -> McItem {
+    let lang = &LANGS[rng.below(5) as usize];
+    let b = (lang.hi - lang.lo) as u64;
+    let k1 = (lang.lo + rng.below(b) as u32) as i32;
+    let mut k2 = k1;
+    while k2 == k1 {
+        k2 = (lang.lo + rng.below(b) as u32) as i32;
+    }
+    // values follow the grammar: v = succ(k) — learnable without induction
+    let v1 = successor(k1 as u32, lang) as i32;
+    let v2 = successor(k2 as u32, lang) as i32;
+    let ctx = vec![BOS, k1, v1, PERIOD, k2, v2, PERIOD, k1];
+    let answer = (rng.below(2)) as usize;
+    let mut candidates = vec![vec![v1], vec![v2]];
+    if answer == 1 {
+        candidates.swap(0, 1);
+    }
+    McItem { context: ctx, candidates, answer }
+}
+
+/// 4-way "knowledge lookup": context names a token, candidates are successor
+/// chains in *different* languages; only the in-bucket one is grammatical.
+fn openbook_item(rng: &mut SplitMix64) -> McItem {
+    let li = rng.below(5) as usize;
+    let lang = &LANGS[li];
+    let b = (lang.hi - lang.lo) as u64;
+    let w0 = lang.lo + rng.below(b) as u32;
+    let ctx = vec![BOS, w0 as i32];
+    let truth = vec![successor(w0, lang) as i32, successor(successor(w0, lang), lang) as i32];
+    let mut candidates = vec![truth];
+    for off in 1..4usize {
+        let ol = &LANGS[(li + off) % 5];
+        let ob = (ol.hi - ol.lo) as u64;
+        let x = ol.lo + rng.below(ob) as u32;
+        candidates.push(vec![x as i32, successor(x, ol) as i32]);
+    }
+    let answer = (rng.below(4)) as usize;
+    candidates.swap(0, answer);
+    McItem { context: ctx, candidates, answer }
+}
+
+/// 2-way judgement: grammatical successor pair vs corrupted pair.
+fn boolq_item(rng: &mut SplitMix64) -> McItem {
+    let lang = &LANGS[rng.below(5) as usize];
+    let b = (lang.hi - lang.lo) as u64;
+    let mut ctx = vec![BOS];
+    let mut s = sentence(rng, lang);
+    s.pop();
+    ctx.extend(&s);
+    let w = *ctx.last().unwrap() as u32;
+    let good = vec![successor(w, lang) as i32, PERIOD];
+    let bad = vec![(lang.lo + rng.below(b) as u32) as i32, PERIOD];
+    let answer = (rng.below(2)) as usize;
+    let candidates = if answer == 0 { vec![good, bad] } else { vec![bad, good] };
+    // for boolq-syn the "correct" option is always the grammatical one
+    let answer = candidates
+        .iter()
+        .position(|c| c[0] == successor(w, lang) as i32)
+        .unwrap();
+    McItem { context: ctx, candidates, answer }
+}
+
+/// Score a task: length-normalized continuation log-likelihood ranking.
+pub fn score_task(model: &dyn LanguageModel, task: &Task, batch: usize) -> Result<f32> {
+    let seq = model.config().seq;
+    let vocab = model.config().vocab;
+
+    // flatten every (context ++ candidate) into one padded row
+    struct Row {
+        item: usize,
+        cand: usize,
+        ctx_len: usize,
+        cand_len: usize,
+    }
+    let mut rows_meta = Vec::new();
+    let mut rows: Vec<i32> = Vec::new();
+    for (ii, item) in task.items.iter().enumerate() {
+        for (ci, cand) in item.candidates.iter().enumerate() {
+            let mut row = item.context.clone();
+            row.extend(cand);
+            assert!(row.len() <= seq, "item too long");
+            rows_meta.push(Row {
+                item: ii,
+                cand: ci,
+                ctx_len: item.context.len(),
+                cand_len: cand.len(),
+            });
+            row.resize(seq, 0);
+            rows.extend(row);
+        }
+    }
+
+    let n_rows = rows_meta.len();
+    let mut scores = vec![vec![f32::NEG_INFINITY; 8]; task.items.len()];
+    let mut r = 0;
+    while r < n_rows {
+        let b = batch.min(n_rows - r);
+        let chunk = Tensor::i32(&[b, seq], rows[r * seq..(r + b) * seq].to_vec());
+        let logits = model.logits(&chunk)?;
+        let lv = logits.as_f32()?;
+        for i in 0..b {
+            let meta = &rows_meta[r + i];
+            let mut ll = 0.0f32;
+            for t in 0..meta.cand_len {
+                let pos = meta.ctx_len + t; // token being predicted
+                let row = &lv[(i * seq + pos - 1) * vocab..(i * seq + pos - 1) * vocab + vocab];
+                let ls = log_softmax_row(row);
+                let target = rows[(r + i) * seq + pos] as usize;
+                ll += ls[target];
+            }
+            scores[meta.item][meta.cand] = ll / meta.cand_len as f32;
+        }
+        r += b;
+    }
+
+    let mut correct = 0usize;
+    for (ii, item) in task.items.iter().enumerate() {
+        let s = &scores[ii][..item.candidates.len()];
+        let best = s
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if best == item.answer {
+            correct += 1;
+        }
+    }
+    Ok(100.0 * correct as f32 / task.items.len() as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tasks_generate_deterministically() {
+        for name in TASK_NAMES {
+            let a = build_task(name, 8, 42);
+            let b = build_task(name, 8, 42);
+            assert_eq!(a.items.len(), 8);
+            for (x, y) in a.items.iter().zip(&b.items) {
+                assert_eq!(x.context, y.context);
+                assert_eq!(x.answer, y.answer);
+            }
+        }
+    }
+
+    #[test]
+    fn answers_in_range() {
+        for name in TASK_NAMES {
+            for item in build_task(name, 16, 7).items {
+                assert!(item.answer < item.candidates.len());
+                assert!(!item.context.is_empty());
+                assert!(item.context.len() + item.candidates.iter().map(|c| c.len()).max().unwrap() <= 128);
+            }
+        }
+    }
+
+    #[test]
+    fn hellaswag_truth_is_successor_chain() {
+        let t = build_task("hellaswag-syn", 8, 3);
+        for item in &t.items {
+            let w = *item.context.last().unwrap() as u32;
+            let lang = crate::calib::vocab::lang_of_token(w as i32).unwrap();
+            let truth = &item.candidates[item.answer];
+            assert_eq!(truth[0], successor(w, lang) as i32);
+        }
+    }
+}

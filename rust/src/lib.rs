@@ -1,0 +1,36 @@
+//! # normtweak
+//!
+//! Reproduction of **"Norm Tweaking: High-Performance Low-Bit Quantization of
+//! Large Language Models"** (AAAI 2024) as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! * **L1** — Pallas kernels (build-time Python, `python/compile/kernels/`):
+//!   dequant-matmul, channel stats, fused norms.
+//! * **L2** — JAX graphs (`python/compile/model.py`), AOT-lowered to HLO text
+//!   artifacts consumed by the Rust runtime.
+//! * **L3** — this crate: the quantization pipeline coordinator (Algorithm 1
+//!   of the paper), quantization substrates (RTN / GPTQ / SmoothQuant /
+//!   AWQ-lite / OmniQuant-lite), calibration-data generation, the norm-tweak
+//!   engine, and the evaluation harness.
+//!
+//! Python never runs on the request path: `make artifacts` lowers all compute
+//! graphs once; the Rust binary is self-contained afterwards.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment index.
+
+pub mod calib;
+pub mod config;
+pub mod util;
+pub mod coordinator;
+pub mod error;
+pub mod eval;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod serve;
+pub mod tensor;
+pub mod tweak;
+
+pub use config::Config;
+pub use error::{Error, Result};

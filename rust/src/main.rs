@@ -1,0 +1,259 @@
+//! `normtweak` CLI — quantize, evaluate, generate, and serve.
+//!
+//! ```text
+//! normtweak quantize [--config cfg.toml] [--model M] [--out path]
+//! normtweak eval     [--checkpoint path | --float] [--ppl a,b] [--tasks x,y]
+//! normtweak generate [--n 4] [--len 48]
+//! normtweak serve    [--checkpoint path] [--requests 64] [--clients 4]
+//! ```
+
+use normtweak::calib::vocab::BOS;
+use normtweak::coordinator::{build_calib, quantize_model, FloatModel, PipelineConfig, QuantModel};
+use normtweak::eval::{lambada, ppl, subjective, tasks};
+use normtweak::model::{ModelConfig, ModelWeights, QuantizedModel};
+use normtweak::report::{f2, f4, save_record, Table};
+use normtweak::runtime::Runtime;
+use normtweak::Config;
+
+/// Tiny flag parser: `--key value` pairs + a leading subcommand.
+struct Args {
+    cmd: String,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Self {
+        let mut argv = std::env::args().skip(1);
+        let cmd = argv.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = std::collections::HashMap::new();
+        let mut key: Option<String> = None;
+        for a in argv {
+            if let Some(k) = a.strip_prefix("--") {
+                // bare boolean flags get "true"
+                if let Some(prev) = key.take() {
+                    flags.insert(prev, "true".to_string());
+                }
+                key = Some(k.to_string());
+            } else if let Some(k) = key.take() {
+                flags.insert(k, a);
+            }
+        }
+        if let Some(prev) = key.take() {
+            flags.insert(prev, "true".to_string());
+        }
+        Args { cmd, flags }
+    }
+
+    fn get(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(|s| s.as_str())
+    }
+
+    fn get_or(&self, k: &str, default: &str) -> String {
+        self.get(k).unwrap_or(default).to_string()
+    }
+
+    fn get_usize(&self, k: &str, default: usize) -> usize {
+        self.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn has(&self, k: &str) -> bool {
+        self.flags.contains_key(k)
+    }
+}
+
+const HELP: &str = "normtweak — Norm Tweaking PTQ (AAAI 2024 reproduction)
+
+USAGE:
+  normtweak quantize [--config cfg.toml] [--model M] [--method gptq] [--bits 4]
+                     [--group 0] [--no-tweak] [--calib gen-v2] [--out path]
+  normtweak eval     [--checkpoint path | --float] [--model M]
+                     [--ppl wiki-syn,c4-syn] [--tasks hellaswag-syn,...]
+  normtweak generate [--model M] [--n 4] [--len 48]
+  normtweak serve    [--checkpoint path] [--requests 64] [--clients 4]
+  normtweak help
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> normtweak::Result<()> {
+    let args = Args::parse();
+    if args.cmd == "help" || args.cmd == "--help" {
+        print!("{HELP}");
+        return Ok(());
+    }
+
+    let mut cfg = match args.get("config") {
+        Some(p) => Config::load(p)?,
+        None => Config::default(),
+    };
+    if let Some(m) = args.get("model") {
+        cfg.run.model = m.to_string();
+    }
+    if let Some(a) = args.get("artifacts") {
+        cfg.run.artifacts = a.to_string();
+    }
+    if let Some(m) = args.get("method") {
+        cfg.quant.method = m.to_string();
+    }
+    if let Some(b) = args.get("bits") {
+        cfg.quant.bits = b.parse().map_err(|_| normtweak::Error::Config("bad --bits".into()))?;
+    }
+    if let Some(g) = args.get("group") {
+        cfg.quant.group = g.parse().map_err(|_| normtweak::Error::Config("bad --group".into()))?;
+    }
+    if args.has("no-tweak") {
+        cfg.tweak.enabled = false;
+    }
+    if let Some(c) = args.get("calib") {
+        cfg.calib.source = c.to_string();
+    }
+    if let Some(p) = args.get("ppl") {
+        cfg.eval.ppl = p.split(',').map(String::from).collect();
+    }
+    if let Some(t) = args.get("tasks") {
+        cfg.eval.tasks = t.split(',').map(String::from).collect();
+    }
+
+    let runtime = Runtime::new(&cfg.run.artifacts)?;
+    let weights = ModelWeights::load_from_dir(&cfg.run.model, &cfg.run.artifacts)?;
+
+    match args.cmd.as_str() {
+        "quantize" => {
+            let out = args.get_or("out", "artifacts/quantized.ntz");
+            let calib = build_calib(&runtime, &weights, &cfg.calib.source,
+                                    cfg.calib.n_samples, cfg.calib.seed)?;
+            let mut pcfg = PipelineConfig::new(cfg.method()?, cfg.scheme());
+            if let Some(t) = cfg.tweak_config()? {
+                pcfg = pcfg.with_tweak(t);
+            }
+            let (qm, metrics) = quantize_model(&runtime, &weights, &calib, &pcfg)?;
+            qm.save(&out)?;
+            save_record(&cfg.run.artifacts, "last_quantize", &metrics.to_json())?;
+            println!(
+                "quantized {} with {}{} -> {out} ({}x compression, {} ms)",
+                cfg.run.model,
+                metrics.method,
+                if metrics.tweaked { "+NT" } else { "" },
+                f2(1.0 / metrics.compression_ratio),
+                metrics.total_millis
+            );
+        }
+        "eval" => {
+            let float = args.has("float");
+            let checkpoint = args.get_or("checkpoint", "artifacts/quantized.ntz");
+            let mut table = Table::new(
+                &format!("eval: {} ({})", cfg.run.model,
+                         if float { "fp32" } else { checkpoint.as_str() }),
+                &["metric", "value"],
+            );
+            let run_evals = |m: &dyn normtweak::eval::LanguageModel,
+                             table: &mut Table| -> normtweak::Result<()> {
+                if cfg.eval.lambada {
+                    let set = lambada::LambadaSet::standard(m.config().seq);
+                    let acc = lambada::accuracy(m, &set, 8)?;
+                    table.push(vec!["lambada-syn acc %".into(), f4(acc)]);
+                }
+                for corpus in &cfg.eval.ppl {
+                    let p = ppl::perplexity(m, corpus, cfg.eval.ppl_tokens, 8)?;
+                    table.push(vec![format!("ppl {corpus}"), f4(p)]);
+                }
+                for tname in &cfg.eval.tasks {
+                    let t = tasks::build_task(tname, 64, 0xE7A1);
+                    let acc = tasks::score_task(m, &t, 8)?;
+                    table.push(vec![format!("{tname} acc %"), f2(acc)]);
+                }
+                Ok(())
+            };
+            if float {
+                let fm = FloatModel::new(&runtime, &weights)?;
+                run_evals(&fm, &mut table)?;
+            } else {
+                let mcfg = ModelConfig::builtin(&cfg.run.model)?;
+                let qm = QuantizedModel::load(mcfg, &checkpoint)?;
+                let qr = QuantModel::new(&runtime, &qm)?.with_act_bits(cfg.act_bits());
+                run_evals(&qr, &mut table)?;
+            }
+            print!("{}", table.ascii());
+        }
+        "generate" => {
+            let n = args.get_usize("n", 4);
+            let len = args.get_usize("len", 48);
+            let fm = FloatModel::new(&runtime, &weights)?;
+            let prompt = vec![BOS, 42];
+            for (text, rep) in subjective::subjective_eval(&fm, &prompt, n, len)? {
+                println!("[succ {:.0}% viol {}] {}",
+                         rep.successor_rate * 100.0, rep.bucket_violations, text);
+            }
+        }
+        "serve" => {
+            let checkpoint = args.get_or("checkpoint", "artifacts/quantized.ntz");
+            let n_requests = args.get_usize("requests", 64);
+            let n_clients = args.get_usize("clients", 4);
+            let mcfg = ModelConfig::builtin(&cfg.run.model)?;
+            let qm = QuantizedModel::load(mcfg, &checkpoint)?;
+            let qr = QuantModel::new(&runtime, &qm)?;
+            serve_demo(&qr, n_requests, n_clients)?;
+        }
+        other => {
+            eprintln!("unknown command `{other}`\n{HELP}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}
+
+/// Drive the serving loop with synthetic concurrent traffic and report
+/// latency percentiles + throughput.
+fn serve_demo(
+    model: &dyn normtweak::eval::LanguageModel,
+    n_requests: usize,
+    n_clients: usize,
+) -> normtweak::Result<()> {
+    use normtweak::serve::{channel, serve_loop, ServeConfig};
+
+    let (handle, rx) = channel();
+    let t0 = std::time::Instant::now();
+    let latencies = std::sync::Mutex::new(Vec::new());
+    let stats = std::thread::scope(|s| {
+        for c in 0..n_clients {
+            let handle = handle.clone();
+            let latencies = &latencies;
+            s.spawn(move || {
+                for i in 0..n_requests / n_clients {
+                    let prompt = vec![BOS, (8 + (c * 31 + i * 13) % 480) as i32];
+                    let t = std::time::Instant::now();
+                    if handle.submit(prompt, 16).is_ok() {
+                        latencies.lock().unwrap().push(t.elapsed().as_micros());
+                    }
+                }
+            });
+        }
+        drop(handle); // server exits when the last client clone drops
+        serve_loop(model, ServeConfig::default(), rx)
+    })?;
+
+    let wall = t0.elapsed().as_secs_f64();
+    let mut lat = latencies.into_inner().unwrap();
+    lat.sort_unstable();
+    if lat.is_empty() {
+        return Err(normtweak::Error::Serve("no requests completed".into()));
+    }
+    let p50 = lat[lat.len() / 2] as f64 / 1000.0;
+    let p99 = lat[(lat.len() * 99 / 100).min(lat.len() - 1)] as f64 / 1000.0;
+    println!(
+        "served {} requests in {:.1}s ({:.1} req/s): p50 {:.0} ms, p99 {:.0} ms, \
+         mean batch {:.1}",
+        stats.served,
+        wall,
+        stats.served as f64 / wall,
+        p50,
+        p99,
+        stats.mean_batch()
+    );
+    Ok(())
+}

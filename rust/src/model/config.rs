@@ -1,0 +1,151 @@
+//! Architecture registry — mirror of `python/compile/configs.py::MODELS`.
+
+use crate::error::{Error, Result};
+
+/// Which normalization the model uses. LayerNorm covers the BLOOM/OPT/GLM
+/// family of the paper; RMSNorm covers LLaMa.  Norm Tweaking updates gamma
+/// and (for LayerNorm) beta.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NormKind {
+    LayerNorm,
+    RmsNorm,
+}
+
+impl NormKind {
+    pub fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "layernorm" => Ok(NormKind::LayerNorm),
+            "rmsnorm" => Ok(NormKind::RmsNorm),
+            other => Err(Error::Config(format!("unknown norm kind {other}"))),
+        }
+    }
+
+    /// Number of tweakable norm parameter vectors per block (g[, b] per norm × 2 norms).
+    pub fn n_tweak_params(self) -> usize {
+        match self {
+            NormKind::LayerNorm => 4,
+            NormKind::RmsNorm => 2,
+        }
+    }
+}
+
+/// One model architecture (mirrors the Python dataclass field-for-field).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub n_layer: usize,
+    pub d_model: usize,
+    pub n_head: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub norm: NormKind,
+}
+
+impl ModelConfig {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_head
+    }
+
+    /// Total float parameter count (tied embeddings counted once).
+    pub fn n_params(&self) -> usize {
+        let d = self.d_model;
+        let ff = self.d_ff;
+        let per_block = d * 3 * d + 3 * d     // qkv
+            + d * d + d                        // proj
+            + d * ff + ff + ff * d + d         // mlp
+            + match self.norm {
+                NormKind::LayerNorm => 4 * d,
+                NormKind::RmsNorm => 2 * d,
+            };
+        self.vocab * d + self.seq * d
+            + self.n_layer * per_block
+            + match self.norm {
+                NormKind::LayerNorm => 2 * d,
+                NormKind::RmsNorm => d,
+            }
+    }
+
+    /// The four quantizable linear layers of a block: (name, K, N).
+    pub fn linear_shapes(&self) -> [(&'static str, usize, usize); 4] {
+        let d = self.d_model;
+        let ff = self.d_ff;
+        [
+            ("attn.wqkv", d, 3 * d),
+            ("attn.wproj", d, d),
+            ("mlp.wfc1", d, ff),
+            ("mlp.wfc2", ff, d),
+        ]
+    }
+}
+
+/// The built-in registry (kept in sync with Python; `manifest.json` is the
+/// cross-check — `Runtime::verify_model` compares both).
+pub const MODEL_REGISTRY: &[(&str, usize, usize, usize, usize, &str)] = &[
+    // name, n_layer, d_model, n_head, d_ff, norm
+    ("nt-tiny", 2, 128, 4, 512, "layernorm"),
+    ("nt-small", 4, 256, 8, 1024, "layernorm"),
+    ("nt-small-rms", 4, 256, 8, 1024, "rmsnorm"),
+    ("nt-medium", 6, 384, 8, 1536, "layernorm"),
+];
+
+pub const VOCAB_SIZE: usize = 2048;
+pub const SEQ_LEN: usize = 128;
+
+impl ModelConfig {
+    /// Look up a built-in architecture by name.
+    pub fn builtin(name: &str) -> Result<Self> {
+        for &(n, l, d, h, ff, norm) in MODEL_REGISTRY {
+            if n == name {
+                return Ok(ModelConfig {
+                    name: n.to_string(),
+                    n_layer: l,
+                    d_model: d,
+                    n_head: h,
+                    d_ff: ff,
+                    vocab: VOCAB_SIZE,
+                    seq: SEQ_LEN,
+                    norm: NormKind::from_str(norm)?,
+                });
+            }
+        }
+        Err(Error::Config(format!("unknown model {name}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_lookup() {
+        let c = ModelConfig::builtin("nt-small").unwrap();
+        assert_eq!(c.n_layer, 4);
+        assert_eq!(c.d_model, 256);
+        assert_eq!(c.norm, NormKind::LayerNorm);
+        assert!(ModelConfig::builtin("nope").is_err());
+    }
+
+    #[test]
+    fn rms_variant() {
+        let c = ModelConfig::builtin("nt-small-rms").unwrap();
+        assert_eq!(c.norm, NormKind::RmsNorm);
+        assert_eq!(c.norm.n_tweak_params(), 2);
+    }
+
+    #[test]
+    fn param_count_sane() {
+        // nt-small ≈ 3.8M params
+        let c = ModelConfig::builtin("nt-small").unwrap();
+        let n = c.n_params();
+        assert!(n > 3_000_000 && n < 5_000_000, "{n}");
+    }
+
+    #[test]
+    fn linear_shapes() {
+        let c = ModelConfig::builtin("nt-tiny").unwrap();
+        let ls = c.linear_shapes();
+        assert_eq!(ls[0], ("attn.wqkv", 128, 384));
+        assert_eq!(ls[3], ("mlp.wfc2", 512, 128));
+    }
+}

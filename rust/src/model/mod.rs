@@ -1,0 +1,11 @@
+//! Model definition: architecture configs, the parameter registry
+//! (canonical tensor naming shared with Python), float checkpoints, and the
+//! quantized-model container.
+
+mod config;
+mod quantized;
+mod weights;
+
+pub use config::{ModelConfig, NormKind, MODEL_REGISTRY};
+pub use quantized::{QuantLinear, QuantizedBlock, QuantizedModel};
+pub use weights::{BlockWeights, ModelWeights};

@@ -1,0 +1,346 @@
+//! Quantized model container: packed low-bit weights + float norms/biases.
+//!
+//! This is the deployable artifact Norm Tweaking produces — codes are stored
+//! *bit-packed* (the real memory reduction), unpacked to i8 lazily when fed
+//! to the PJRT `block_fwd_q` graphs (the CPU plugin has no sub-byte dtypes).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::quant::QuantScheme;
+use crate::tensor::{load_ntz, pack_codes, save_ntz, unpack_codes, PackedCodes, Tensor};
+
+use super::config::{ModelConfig, NormKind};
+use super::weights::ModelWeights;
+
+/// One quantized linear layer: packed codes + per-(group, out-channel) scales.
+#[derive(Debug, Clone)]
+pub struct QuantLinear {
+    /// logical shape [K, N]
+    pub k: usize,
+    pub n: usize,
+    pub packed: PackedCodes,
+    /// f32 [G, N] where G = K / group_size
+    pub scales: Tensor,
+    pub bias: Tensor,
+}
+
+impl QuantLinear {
+    /// Unpack to the i8 codes tensor the AOT graphs expect.
+    pub fn codes_tensor(&self) -> Tensor {
+        Tensor::i8(&[self.k, self.n], unpack_codes(&self.packed))
+    }
+
+    /// Dequantize to a float weight matrix (tests / CPU fallback).
+    pub fn dequantize(&self) -> Result<Tensor> {
+        let codes = unpack_codes(&self.packed);
+        let sc = self.scales.as_f32()?;
+        let g = self.scales.shape[0];
+        let group = self.k / g;
+        let mut w = vec![0.0f32; self.k * self.n];
+        for kk in 0..self.k {
+            let gi = kk / group;
+            for nn in 0..self.n {
+                w[kk * self.n + nn] =
+                    codes[kk * self.n + nn] as f32 * sc[gi * self.n + nn];
+            }
+        }
+        Ok(Tensor::f32(&[self.k, self.n], w))
+    }
+
+    /// Packed memory footprint in bytes (codes + scales + bias).
+    pub fn nbytes(&self) -> usize {
+        self.packed.data.len() + self.scales.nbytes() + self.bias.nbytes()
+    }
+}
+
+/// One quantized transformer block (norm params stay float — they are what
+/// Norm Tweaking updates).
+#[derive(Debug, Clone)]
+pub struct QuantizedBlock {
+    pub ln1_g: Tensor,
+    pub ln1_b: Option<Tensor>,
+    pub qkv: QuantLinear,
+    pub proj: QuantLinear,
+    pub ln2_g: Tensor,
+    pub ln2_b: Option<Tensor>,
+    pub fc1: QuantLinear,
+    pub fc2: QuantLinear,
+}
+
+impl QuantizedBlock {
+    /// The tweakable norm parameter vectors, in tweak_step argument order.
+    pub fn norm_params(&self) -> Vec<&Tensor> {
+        match (&self.ln1_b, &self.ln2_b) {
+            (Some(b1), Some(b2)) => vec![&self.ln1_g, b1, &self.ln2_g, b2],
+            _ => vec![&self.ln1_g, &self.ln2_g],
+        }
+    }
+
+    /// Replace the tweakable norm params (inverse of [`norm_params`]).
+    pub fn set_norm_params(&mut self, params: Vec<Tensor>) -> Result<()> {
+        let has_beta = self.ln1_b.is_some();
+        let need = if has_beta { 4 } else { 2 };
+        if params.len() != need {
+            return Err(Error::Quant(format!(
+                "expected {need} norm params, got {}",
+                params.len()
+            )));
+        }
+        let mut it = params.into_iter();
+        self.ln1_g = it.next().unwrap();
+        if has_beta {
+            self.ln1_b = Some(it.next().unwrap());
+        }
+        self.ln2_g = it.next().unwrap();
+        if has_beta {
+            self.ln2_b = Some(it.next().unwrap());
+        }
+        Ok(())
+    }
+}
+
+/// A fully quantized model: embeddings/head stay float (as in the paper —
+/// only the transformer Linear layers are quantized).
+#[derive(Debug, Clone)]
+pub struct QuantizedModel {
+    pub config: ModelConfig,
+    pub scheme: QuantScheme,
+    pub tok_emb: Tensor,
+    pub pos_emb: Tensor,
+    pub lnf_g: Tensor,
+    pub lnf_b: Option<Tensor>,
+    pub blocks: Vec<QuantizedBlock>,
+}
+
+impl QuantizedModel {
+    /// Packed parameter bytes of the quantized weight matrices only.
+    pub fn quantized_bytes(&self) -> usize {
+        self.blocks
+            .iter()
+            .map(|b| b.qkv.nbytes() + b.proj.nbytes() + b.fc1.nbytes() + b.fc2.nbytes())
+            .sum()
+    }
+
+    /// Float bytes the same matrices would occupy.
+    pub fn float_bytes(&self) -> usize {
+        self.config
+            .linear_shapes()
+            .iter()
+            .map(|(_, k, n)| k * n * 4)
+            .sum::<usize>()
+            * self.config.n_layer
+    }
+
+    /// Serialize to `.ntz` (codes packed as u8 + meta tensors).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut t = BTreeMap::new();
+        t.insert("meta.bits".into(), Tensor::i32(&[1], vec![self.scheme.bits as i32]));
+        t.insert(
+            "meta.group".into(),
+            Tensor::i32(&[1], vec![self.scheme.group_size.unwrap_or(0) as i32]),
+        );
+        t.insert("tok_emb".into(), self.tok_emb.clone());
+        t.insert("pos_emb".into(), self.pos_emb.clone());
+        t.insert("lnf.g".into(), self.lnf_g.clone());
+        if let Some(b) = &self.lnf_b {
+            t.insert("lnf.b".into(), b.clone());
+        }
+        for (i, blk) in self.blocks.iter().enumerate() {
+            let p = format!("block{i}.");
+            t.insert(format!("{p}ln1.g"), blk.ln1_g.clone());
+            t.insert(format!("{p}ln2.g"), blk.ln2_g.clone());
+            if let Some(b) = &blk.ln1_b {
+                t.insert(format!("{p}ln1.b"), b.clone());
+            }
+            if let Some(b) = &blk.ln2_b {
+                t.insert(format!("{p}ln2.b"), b.clone());
+            }
+            for (name, q) in [("attn.wqkv", &blk.qkv), ("attn.wproj", &blk.proj),
+                              ("mlp.wfc1", &blk.fc1), ("mlp.wfc2", &blk.fc2)] {
+                t.insert(format!("{p}{name}.packed"),
+                         Tensor::u8(&[q.packed.data.len()], q.packed.data.clone()));
+                t.insert(format!("{p}{name}.shape"),
+                         Tensor::i32(&[2], vec![q.k as i32, q.n as i32]));
+                t.insert(format!("{p}{name}.scales"), q.scales.clone());
+                t.insert(format!("{p}{name}.bias"), q.bias.clone());
+            }
+        }
+        save_ntz(path, &t)
+    }
+
+    /// Load a serialized quantized model.
+    pub fn load(config: ModelConfig, path: impl AsRef<Path>) -> Result<Self> {
+        let t = load_ntz(path)?;
+        let get = |n: &str| -> Result<&Tensor> {
+            t.get(n).ok_or_else(|| Error::Checkpoint(format!("missing {n}")))
+        };
+        let bits = get("meta.bits")?.as_i32()?[0] as u8;
+        let group = get("meta.group")?.as_i32()?[0] as usize;
+        let scheme = QuantScheme {
+            bits,
+            group_size: if group == 0 { None } else { Some(group) },
+        };
+        let ln = config.norm == NormKind::LayerNorm;
+        let mut blocks = Vec::new();
+        for i in 0..config.n_layer {
+            let p = format!("block{i}.");
+            let linear = |name: &str| -> Result<QuantLinear> {
+                let shape = get(&format!("{p}{name}.shape"))?.as_i32()?;
+                let (k, n) = (shape[0] as usize, shape[1] as usize);
+                let data = get(&format!("{p}{name}.packed"))?.as_u8()?.to_vec();
+                Ok(QuantLinear {
+                    k,
+                    n,
+                    packed: PackedCodes { bits, len: k * n, data },
+                    scales: get(&format!("{p}{name}.scales"))?.clone(),
+                    bias: get(&format!("{p}{name}.bias"))?.clone(),
+                })
+            };
+            blocks.push(QuantizedBlock {
+                ln1_g: get(&format!("{p}ln1.g"))?.clone(),
+                ln1_b: if ln { Some(get(&format!("{p}ln1.b"))?.clone()) } else { None },
+                qkv: linear("attn.wqkv")?,
+                proj: linear("attn.wproj")?,
+                ln2_g: get(&format!("{p}ln2.g"))?.clone(),
+                ln2_b: if ln { Some(get(&format!("{p}ln2.b"))?.clone()) } else { None },
+                fc1: linear("mlp.wfc1")?,
+                fc2: linear("mlp.wfc2")?,
+            });
+        }
+        Ok(QuantizedModel {
+            scheme,
+            tok_emb: get("tok_emb")?.clone(),
+            pos_emb: get("pos_emb")?.clone(),
+            lnf_g: get("lnf.g")?.clone(),
+            lnf_b: if ln { Some(get("lnf.b")?.clone()) } else { None },
+            blocks,
+            config,
+        })
+    }
+
+    /// Carry the float (non-quantized) tensors over from a float checkpoint.
+    pub fn scaffold(w: &ModelWeights, scheme: QuantScheme) -> Result<Self> {
+        Ok(QuantizedModel {
+            config: w.config.clone(),
+            scheme,
+            tok_emb: w.get("tok_emb")?.clone(),
+            pos_emb: w.get("pos_emb")?.clone(),
+            lnf_g: w.get("lnf.g")?.clone(),
+            lnf_b: match w.config.norm {
+                NormKind::LayerNorm => Some(w.get("lnf.b")?.clone()),
+                NormKind::RmsNorm => None,
+            },
+            blocks: Vec::with_capacity(w.config.n_layer),
+        })
+    }
+}
+
+/// Helper for tests and external quantizers: build a [`QuantLinear`] from
+/// raw codes (the pipeline's `to_quant_linear` constructs directly).
+#[allow(dead_code)]
+pub fn quant_linear_from(
+    codes: &[i8],
+    k: usize,
+    n: usize,
+    scales: Tensor,
+    bias: Tensor,
+    bits: u8,
+) -> Result<QuantLinear> {
+    Ok(QuantLinear {
+        k,
+        n,
+        packed: pack_codes(codes, bits)?,
+        scales,
+        bias,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QuantScheme;
+
+    fn mk_linear(k: usize, n: usize, bits: u8) -> QuantLinear {
+        let qmax = ((1i32 << (bits - 1)) - 1) as usize;
+        let codes: Vec<i8> = (0..k * n)
+            .map(|i| ((i % (2 * qmax + 1)) as i32 - qmax as i32) as i8)
+            .collect();
+        quant_linear_from(&codes, k, n, Tensor::ones(&[1, n]), Tensor::zeros(&[n]), bits).unwrap()
+    }
+
+    #[test]
+    fn dequant_roundtrip_identity_scales() {
+        let q = mk_linear(8, 4, 4);
+        let w = q.dequantize().unwrap();
+        let codes = q.codes_tensor();
+        for i in 0..32 {
+            assert_eq!(w.as_f32().unwrap()[i], codes.as_i8().unwrap()[i] as f32);
+        }
+    }
+
+    #[test]
+    fn memory_reduction() {
+        let q2 = mk_linear(64, 64, 2);
+        let q4 = mk_linear(64, 64, 4);
+        // packed codes: 2-bit = numel/4 bytes, 4-bit = numel/2
+        assert_eq!(q2.packed.data.len(), 64 * 64 / 4);
+        assert_eq!(q4.packed.data.len(), 64 * 64 / 2);
+    }
+
+    #[test]
+    fn quantized_model_save_load() {
+        let cfg = ModelConfig::builtin("nt-tiny").unwrap();
+        let w = ModelWeights::random(cfg.clone(), 5);
+        let scheme = QuantScheme { bits: 4, group_size: None };
+        let mut qm = QuantizedModel::scaffold(&w, scheme).unwrap();
+        let d = cfg.d_model;
+        let ff = cfg.d_ff;
+        for i in 0..cfg.n_layer {
+            let b = w.block(i).unwrap();
+            qm.blocks.push(QuantizedBlock {
+                ln1_g: b.ln1_g.clone(),
+                ln1_b: b.ln1_b.cloned(),
+                qkv: mk_linear(d, 3 * d, 4),
+                proj: mk_linear(d, d, 4),
+                ln2_g: b.ln2_g.clone(),
+                ln2_b: b.ln2_b.cloned(),
+                fc1: mk_linear(d, ff, 4),
+                fc2: mk_linear(ff, d, 4),
+            });
+        }
+        let dir = std::env::temp_dir().join("nt_qmodel_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("q.ntz");
+        qm.save(&path).unwrap();
+        let back = QuantizedModel::load(cfg, &path).unwrap();
+        assert_eq!(back.scheme.bits, 4);
+        assert_eq!(back.blocks.len(), qm.blocks.len());
+        assert_eq!(back.blocks[0].qkv.packed, qm.blocks[0].qkv.packed);
+        assert_eq!(back.blocks[1].fc2.scales, qm.blocks[1].fc2.scales);
+    }
+
+    #[test]
+    fn norm_param_roundtrip() {
+        let cfg = ModelConfig::builtin("nt-tiny").unwrap();
+        let w = ModelWeights::random(cfg.clone(), 5);
+        let b = w.block(0).unwrap();
+        let mut blk = QuantizedBlock {
+            ln1_g: b.ln1_g.clone(),
+            ln1_b: b.ln1_b.cloned(),
+            qkv: mk_linear(cfg.d_model, 3 * cfg.d_model, 4),
+            proj: mk_linear(cfg.d_model, cfg.d_model, 4),
+            ln2_g: b.ln2_g.clone(),
+            ln2_b: b.ln2_b.cloned(),
+            fc1: mk_linear(cfg.d_model, cfg.d_ff, 4),
+            fc2: mk_linear(cfg.d_ff, cfg.d_model, 4),
+        };
+        assert_eq!(blk.norm_params().len(), 4);
+        let new: Vec<Tensor> = (0..4).map(|i| Tensor::randn(&[cfg.d_model], i, 1.0)).collect();
+        blk.set_norm_params(new.clone()).unwrap();
+        assert_eq!(blk.ln1_g, new[0]);
+        assert_eq!(blk.ln2_b.as_ref().unwrap(), &new[3]);
+        assert!(blk.set_norm_params(vec![Tensor::zeros(&[4])]).is_err());
+    }
+}

@@ -1,0 +1,226 @@
+//! Float model weights: load/save `.ntz` checkpoints, canonical per-block
+//! views matching the AOT graphs' argument order.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::tensor::{load_ntz, save_ntz, Tensor};
+
+use super::config::{ModelConfig, NormKind};
+
+/// The full float parameter set of a model, keyed by canonical names
+/// (`tok_emb`, `pos_emb`, `block{i}.ln1.g`, ..., `lnf.g[, lnf.b]`).
+#[derive(Debug, Clone)]
+pub struct ModelWeights {
+    pub config: ModelConfig,
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+/// Borrowed view of one block's float weights in AOT argument order.
+#[derive(Debug)]
+pub struct BlockWeights<'a> {
+    pub ln1_g: &'a Tensor,
+    pub ln1_b: Option<&'a Tensor>,
+    pub wqkv: &'a Tensor,
+    pub bqkv: &'a Tensor,
+    pub wproj: &'a Tensor,
+    pub bproj: &'a Tensor,
+    pub ln2_g: &'a Tensor,
+    pub ln2_b: Option<&'a Tensor>,
+    pub wfc1: &'a Tensor,
+    pub bfc1: &'a Tensor,
+    pub wfc2: &'a Tensor,
+    pub bfc2: &'a Tensor,
+}
+
+impl<'a> BlockWeights<'a> {
+    /// Flatten into the AOT `block_fwd` argument order.
+    pub fn flat(&self) -> Vec<&'a Tensor> {
+        let mut v = vec![self.ln1_g];
+        if let Some(b) = self.ln1_b {
+            v.push(b);
+        }
+        v.extend([self.wqkv, self.bqkv, self.wproj, self.bproj, self.ln2_g]);
+        if let Some(b) = self.ln2_b {
+            v.push(b);
+        }
+        v.extend([self.wfc1, self.bfc1, self.wfc2, self.bfc2]);
+        v
+    }
+}
+
+impl ModelWeights {
+    /// Load `artifacts/weights_<model>.ntz` and validate the registry.
+    pub fn load(config: ModelConfig, path: impl AsRef<Path>) -> Result<Self> {
+        let tensors = load_ntz(path)?;
+        let w = ModelWeights { config, tensors };
+        w.validate()?;
+        Ok(w)
+    }
+
+    /// Load by model name from an artifacts directory.
+    pub fn load_from_dir(name: &str, artifacts: impl AsRef<Path>) -> Result<Self> {
+        let config = ModelConfig::builtin(name)?;
+        let path = artifacts.as_ref().join(format!("weights_{name}.ntz"));
+        Self::load(config, path)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        save_ntz(path, &self.tensors)
+    }
+
+    /// Every expected tensor present with the right shape.
+    pub fn validate(&self) -> Result<()> {
+        let c = &self.config;
+        let d = c.d_model;
+        let expect = |name: &str, shape: &[usize]| -> Result<()> {
+            let t = self
+                .tensors
+                .get(name)
+                .ok_or_else(|| Error::Checkpoint(format!("missing tensor {name}")))?;
+            if t.shape != shape {
+                return Err(Error::Checkpoint(format!(
+                    "{name}: shape {:?}, expected {shape:?}",
+                    t.shape
+                )));
+            }
+            Ok(())
+        };
+        expect("tok_emb", &[c.vocab, d])?;
+        expect("pos_emb", &[c.seq, d])?;
+        expect("lnf.g", &[d])?;
+        if c.norm == NormKind::LayerNorm {
+            expect("lnf.b", &[d])?;
+        }
+        for i in 0..c.n_layer {
+            let p = format!("block{i}.");
+            expect(&format!("{p}ln1.g"), &[d])?;
+            expect(&format!("{p}ln2.g"), &[d])?;
+            if c.norm == NormKind::LayerNorm {
+                expect(&format!("{p}ln1.b"), &[d])?;
+                expect(&format!("{p}ln2.b"), &[d])?;
+            }
+            expect(&format!("{p}attn.wqkv"), &[d, 3 * d])?;
+            expect(&format!("{p}attn.bqkv"), &[3 * d])?;
+            expect(&format!("{p}attn.wproj"), &[d, d])?;
+            expect(&format!("{p}attn.bproj"), &[d])?;
+            expect(&format!("{p}mlp.wfc1"), &[d, c.d_ff])?;
+            expect(&format!("{p}mlp.bfc1"), &[c.d_ff])?;
+            expect(&format!("{p}mlp.wfc2"), &[c.d_ff, d])?;
+            expect(&format!("{p}mlp.bfc2"), &[d])?;
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| Error::Checkpoint(format!("missing tensor {name}")))
+    }
+
+    /// Borrowed per-block view.
+    pub fn block(&self, i: usize) -> Result<BlockWeights<'_>> {
+        let p = format!("block{i}.");
+        let ln = self.config.norm == NormKind::LayerNorm;
+        Ok(BlockWeights {
+            ln1_g: self.get(&format!("{p}ln1.g"))?,
+            ln1_b: if ln { Some(self.get(&format!("{p}ln1.b"))?) } else { None },
+            wqkv: self.get(&format!("{p}attn.wqkv"))?,
+            bqkv: self.get(&format!("{p}attn.bqkv"))?,
+            wproj: self.get(&format!("{p}attn.wproj"))?,
+            bproj: self.get(&format!("{p}attn.bproj"))?,
+            ln2_g: self.get(&format!("{p}ln2.g"))?,
+            ln2_b: if ln { Some(self.get(&format!("{p}ln2.b"))?) } else { None },
+            wfc1: self.get(&format!("{p}mlp.wfc1"))?,
+            bfc1: self.get(&format!("{p}mlp.bfc1"))?,
+            wfc2: self.get(&format!("{p}mlp.wfc2"))?,
+            bfc2: self.get(&format!("{p}mlp.bfc2"))?,
+        })
+    }
+
+    /// Deterministic random weights for tests (valid registry, no training).
+    pub fn random(config: ModelConfig, seed: u64) -> Self {
+        let d = config.d_model;
+        let ff = config.d_ff;
+        let mut t = BTreeMap::new();
+        let mut s = seed;
+        let mut next = |shape: &[usize], scale: f32| {
+            s += 1;
+            Tensor::randn(shape, s, scale)
+        };
+        t.insert("tok_emb".into(), next(&[config.vocab, d], 0.02));
+        t.insert("pos_emb".into(), next(&[config.seq, d], 0.02));
+        t.insert("lnf.g".into(), Tensor::ones(&[d]));
+        if config.norm == NormKind::LayerNorm {
+            t.insert("lnf.b".into(), Tensor::zeros(&[d]));
+        }
+        for i in 0..config.n_layer {
+            let p = format!("block{i}.");
+            t.insert(format!("{p}ln1.g"), Tensor::ones(&[d]));
+            t.insert(format!("{p}ln2.g"), Tensor::ones(&[d]));
+            if config.norm == NormKind::LayerNorm {
+                t.insert(format!("{p}ln1.b"), Tensor::zeros(&[d]));
+                t.insert(format!("{p}ln2.b"), Tensor::zeros(&[d]));
+            }
+            t.insert(format!("{p}attn.wqkv"), next(&[d, 3 * d], 0.02));
+            t.insert(format!("{p}attn.bqkv"), Tensor::zeros(&[3 * d]));
+            t.insert(format!("{p}attn.wproj"), next(&[d, d], 0.02));
+            t.insert(format!("{p}attn.bproj"), Tensor::zeros(&[d]));
+            t.insert(format!("{p}mlp.wfc1"), next(&[d, ff], 0.02));
+            t.insert(format!("{p}mlp.bfc1"), Tensor::zeros(&[ff]));
+            t.insert(format!("{p}mlp.wfc2"), next(&[ff, d], 0.02));
+            t.insert(format!("{p}mlp.bfc2"), Tensor::zeros(&[d]));
+        }
+        ModelWeights { config, tensors: t }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_weights_validate() {
+        let c = ModelConfig::builtin("nt-tiny").unwrap();
+        let w = ModelWeights::random(c, 0);
+        w.validate().unwrap();
+        let b = w.block(0).unwrap();
+        assert_eq!(b.flat().len(), 12);
+    }
+
+    #[test]
+    fn rms_block_has_10_args() {
+        let c = ModelConfig::builtin("nt-small-rms").unwrap();
+        let w = ModelWeights::random(c, 0);
+        assert_eq!(w.block(0).unwrap().flat().len(), 10);
+    }
+
+    #[test]
+    fn validate_catches_missing() {
+        let c = ModelConfig::builtin("nt-tiny").unwrap();
+        let mut w = ModelWeights::random(c, 0);
+        w.tensors.remove("block1.mlp.wfc2");
+        assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_bad_shape() {
+        let c = ModelConfig::builtin("nt-tiny").unwrap();
+        let mut w = ModelWeights::random(c, 0);
+        w.tensors.insert("lnf.g".into(), Tensor::zeros(&[7]));
+        assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let c = ModelConfig::builtin("nt-tiny").unwrap();
+        let w = ModelWeights::random(c.clone(), 3);
+        let dir = std::env::temp_dir().join("nt_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.ntz");
+        w.save(&path).unwrap();
+        let back = ModelWeights::load(c, &path).unwrap();
+        assert_eq!(w.tensors, back.tensors);
+    }
+}

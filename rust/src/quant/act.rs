@@ -1,0 +1,80 @@
+//! Activation fake-quantization — the "A8"/"A4" half of W4A8 / W4A4 modes.
+//!
+//! Per-tensor dynamic symmetric quantization of activations, applied between
+//! layers by the coordinator when a joint weight+activation mode is active
+//! (Table 4's SmoothQuant rows and Table 10's W4A4 row).  Fake-quant
+//! (quantize→dequantize in f32) matches what the paper's evaluation measures:
+//! accuracy under the quantized numerics, independent of kernel dtype.
+
+use crate::error::Result;
+use crate::tensor::Tensor;
+
+/// Fake-quantize a tensor to `bits` with one symmetric per-tensor scale.
+pub fn fake_quant_tensor(x: &Tensor, bits: u8) -> Result<Tensor> {
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    let v = x.as_f32()?;
+    let amax = v.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+    if amax == 0.0 {
+        return Ok(x.clone());
+    }
+    let scale = amax / qmax;
+    let out: Vec<f32> = v
+        .iter()
+        .map(|&x| (x / scale).round().clamp(-qmax, qmax) * scale)
+        .collect();
+    Ok(Tensor { shape: x.shape.clone(), data: crate::tensor::Tensor::f32(&x.shape, out).data })
+}
+
+/// Fake-quantize per row (token) — the dynamic per-token scheme SmoothQuant
+/// deploys for activations.
+pub fn fake_quant_per_row(x: &Tensor, bits: u8) -> Result<Tensor> {
+    let c = *x.shape.last().unwrap();
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    let v = x.as_f32()?;
+    let mut out = vec![0.0f32; v.len()];
+    for (orow, irow) in out.chunks_mut(c).zip(v.chunks_exact(c)) {
+        let amax = irow.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+        if amax == 0.0 {
+            continue;
+        }
+        let scale = amax / qmax;
+        for (o, &i) in orow.iter_mut().zip(irow) {
+            *o = (i / scale).round().clamp(-qmax, qmax) * scale;
+        }
+    }
+    Ok(Tensor::f32(&x.shape, out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a8_error_small() {
+        let x = Tensor::randn(&[16, 32], 2, 1.0);
+        let q = fake_quant_tensor(&x, 8).unwrap();
+        let amax = x.as_f32().unwrap().iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+        let step = amax / 127.0;
+        for (a, b) in x.as_f32().unwrap().iter().zip(q.as_f32().unwrap()) {
+            assert!((a - b).abs() <= step / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn per_row_scales_independently() {
+        // row 2 has a big outlier; per-row quant keeps row 1 precise
+        let x = Tensor::f32(&[2, 2], vec![0.1, 0.2, 100.0, 0.2]);
+        let qt = fake_quant_tensor(&x, 4).unwrap();
+        let qr = fake_quant_per_row(&x, 4).unwrap();
+        let et = (qt.as_f32().unwrap()[0] - 0.1).abs();
+        let er = (qr.as_f32().unwrap()[0] - 0.1).abs();
+        assert!(er < et, "per-row {er} should beat per-tensor {et}");
+    }
+
+    #[test]
+    fn zero_tensor_passthrough() {
+        let x = Tensor::zeros(&[4, 4]);
+        assert_eq!(fake_quant_tensor(&x, 8).unwrap(), x);
+        assert_eq!(fake_quant_per_row(&x, 8).unwrap(), x);
+    }
+}

@@ -1,0 +1,154 @@
+//! AWQ-lite (Lin et al. 2023): activation-aware per-channel weight scaling.
+//!
+//! AWQ's observation: the ~1% of weight channels fed by high-magnitude
+//! activations matter most; scaling those channels up before quantization
+//! (and folding the inverse into the activations) protects them.  We
+//! implement the grid-searched power-law variant: `s_j = amax_j^α`, α swept
+//! on a small grid against the layer reconstruction error on calibration
+//! activations — the Table-10 "AWQ" comparison row.
+
+use crate::error::Result;
+use crate::tensor::Tensor;
+
+use super::smoothquant::ActStats;
+use super::{rtn, QuantScheme, QuantizedWeight};
+
+/// Grid of migration strengths searched per layer (AWQ reference uses 20
+/// points in [0,1]; 8 is enough at our scale).
+pub const ALPHA_GRID: &[f32] = &[0.0, 0.15, 0.3, 0.45, 0.6, 0.75, 0.9, 1.0];
+
+/// Result: the quantized weight *plus* the input-channel scales the runtime
+/// must fold into the preceding op (same contract as SmoothQuant).
+#[derive(Debug, Clone)]
+pub struct AwqResult {
+    pub qw: QuantizedWeight,
+    pub in_scales: Vec<f32>,
+    pub alpha: f32,
+}
+
+/// Quantize with the best activation-aware scaling found on the grid.
+///
+/// `x_sample` is a [rows, K] calibration activation slice used to score
+/// reconstruction error `|| x W - x' Q ||²`.
+pub fn quantize(
+    w: &Tensor,
+    act: &ActStats,
+    x_sample: &Tensor,
+    scheme: &QuantScheme,
+) -> Result<AwqResult> {
+    let k = w.shape[0];
+    let n = w.shape[1];
+    let wv = w.as_f32()?;
+    let xv = x_sample.as_f32()?;
+    let rows = x_sample.shape[0];
+
+    let mut best: Option<AwqResult> = None;
+    let mut best_err = f64::INFINITY;
+
+    for &alpha in ALPHA_GRID {
+        // s_j = amax_j^alpha, normalized so mean(s) == 1 (keeps scale sane)
+        let mut s: Vec<f32> = act
+            .amax
+            .iter()
+            .map(|&a| a.max(1e-5).powf(alpha))
+            .collect();
+        let mean = s.iter().sum::<f32>() / k as f32;
+        for v in s.iter_mut() {
+            *v /= mean;
+            *v = v.max(1e-4);
+        }
+
+        // scaled weight
+        let mut ws = vec![0.0f32; k * n];
+        for j in 0..k {
+            for col in 0..n {
+                ws[j * n + col] = wv[j * n + col] * s[j];
+            }
+        }
+        let qw = rtn::quantize(&Tensor::f32(&[k, n], ws), scheme)?;
+        let deq = qw.dequantize();
+
+        // reconstruction error on the sample: x@W vs (x/s)@deq
+        let mut err = 0.0f64;
+        for r in 0..rows {
+            let xrow = &xv[r * k..(r + 1) * k];
+            for col in 0..n {
+                let mut y0 = 0.0f64;
+                let mut y1 = 0.0f64;
+                for j in 0..k {
+                    y0 += xrow[j] as f64 * wv[j * n + col] as f64;
+                    y1 += (xrow[j] / s[j]) as f64 * deq[j * n + col] as f64;
+                }
+                let d = y0 - y1;
+                err += d * d;
+            }
+        }
+        if err < best_err {
+            best_err = err;
+            best = Some(AwqResult { qw, in_scales: s, alpha });
+        }
+    }
+    Ok(best.expect("non-empty grid"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outlier_setup() -> (Tensor, ActStats, Tensor) {
+        // channel 0 carries big activations
+        let k = 16;
+        let n = 8;
+        let w = Tensor::randn(&[k, n], 3, 1.0);
+        let mut xv = Tensor::randn(&[32, k], 4, 0.5).as_f32().unwrap().to_vec();
+        for r in 0..32 {
+            xv[r * k] *= 20.0;
+        }
+        let x = Tensor::f32(&[32, k], xv);
+        let mut st = ActStats::new(k);
+        st.update(&x).unwrap();
+        (w, st, x)
+    }
+
+    #[test]
+    fn picks_nonzero_alpha_for_outliers() {
+        let (w, st, x) = outlier_setup();
+        let r = quantize(&w, &st, &x, &QuantScheme::w2_g64()).unwrap();
+        assert!(r.alpha > 0.0, "should protect outlier channels");
+        assert!(r.in_scales[0] > r.in_scales[1]);
+    }
+
+    #[test]
+    fn beats_plain_rtn_on_outliers() {
+        let (w, st, x) = outlier_setup();
+        let scheme = QuantScheme { bits: 2, group_size: Some(16) };
+        let awq = quantize(&w, &st, &x, &scheme).unwrap();
+        let plain = rtn::quantize(&w, &scheme).unwrap();
+
+        let err = |deq: &[f32], s: Option<&[f32]>| -> f64 {
+            let xv = x.as_f32().unwrap();
+            let wv = w.as_f32().unwrap();
+            let (k, n) = (16, 8);
+            let mut e = 0.0f64;
+            for r in 0..32 {
+                for col in 0..n {
+                    let mut y0 = 0.0f64;
+                    let mut y1 = 0.0f64;
+                    for j in 0..k {
+                        y0 += xv[r * k + j] as f64 * wv[j * n + col] as f64;
+                        let xs = match s {
+                            Some(sv) => xv[r * k + j] / sv[j],
+                            None => xv[r * k + j],
+                        };
+                        y1 += xs as f64 * deq[j * n + col] as f64;
+                    }
+                    e += (y0 - y1) * (y0 - y1);
+                }
+            }
+            e
+        };
+        let e_awq = err(&awq.qw.dequantize(), Some(&awq.in_scales));
+        let e_rtn = err(&plain.dequantize(), None);
+        assert!(e_awq < e_rtn, "awq {e_awq:.3} vs rtn {e_rtn:.3}");
+    }
+}

@@ -1,0 +1,145 @@
+//! Quantization substrates: the PTQ algorithms Norm Tweaking plugs into.
+//!
+//! * [`rtn`] — round-to-nearest symmetric quantization (the paper's Table 4
+//!   weakest baseline, and the primitive every other method builds on).
+//! * [`gptq`] — Hessian-based OBS reconstruction (Frantar et al. 2022): the
+//!   paper's main host algorithm. Pure-Rust Cholesky + blocked update.
+//! * [`smoothquant`] — activation-outlier migration (Xiao et al. 2023) for
+//!   joint W+A quantization (Table 4's W4A8 rows).
+//! * [`awq`] — activation-aware per-channel weight scaling (AWQ-lite), the
+//!   Table-10 comparison row.
+//! * [`omniquant`] — grid-searched per-channel weight clipping
+//!   (OmniQuant-lite, the learnable-weight-clipping reproduction), the
+//!   Table-10 host.
+//! * [`act`] — activation fake-quantization helpers (W4A8 / W4A4 modes).
+
+pub mod act;
+pub mod awq;
+pub mod gptq;
+pub mod omniquant;
+pub mod rtn;
+pub mod smoothquant;
+
+use crate::error::{Error, Result};
+
+/// Weight quantization scheme: bit width + optional group size along K.
+/// `group_size = None` means per-channel (one scale per output column over
+/// the whole K dim) — the FasterTransformer-deployable scheme; the paper's
+/// 2-bit results use fine-grained groups of 64.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QuantScheme {
+    pub bits: u8,
+    pub group_size: Option<usize>,
+}
+
+impl QuantScheme {
+    pub fn w4_perchannel() -> Self {
+        QuantScheme { bits: 4, group_size: None }
+    }
+
+    pub fn w2_g64() -> Self {
+        QuantScheme { bits: 2, group_size: Some(64) }
+    }
+
+    pub fn w3_g64() -> Self {
+        QuantScheme { bits: 3, group_size: Some(64) }
+    }
+
+    /// Symmetric integer ceiling: 2^(bits-1) - 1.
+    pub fn qmax(&self) -> f32 {
+        ((1i32 << (self.bits - 1)) - 1) as f32
+    }
+
+    /// Storage width for bit-packing (3-bit stores in 4-bit slots).
+    pub fn pack_bits(&self) -> u8 {
+        match self.bits {
+            2 => 2,
+            3 | 4 => 4,
+            8 => 8,
+            _ => 8,
+        }
+    }
+
+    /// Effective group length for a K dimension.
+    pub fn group_for(&self, k: usize) -> usize {
+        self.group_size.unwrap_or(k).min(k)
+    }
+
+    pub fn validate(&self, k: usize) -> Result<()> {
+        if ![2, 3, 4, 8].contains(&self.bits) {
+            return Err(Error::Quant(format!("unsupported bit width {}", self.bits)));
+        }
+        let g = self.group_for(k);
+        if k % g != 0 {
+            return Err(Error::Quant(format!("K={k} not divisible by group {g}")));
+        }
+        Ok(())
+    }
+
+    /// Manifest group tag for artifact lookup ("pc" or "g64").
+    pub fn group_tag(&self) -> &'static str {
+        match self.group_size {
+            None => "pc",
+            Some(64) => "g64",
+            Some(_) => "g64", // nearest exported grain
+        }
+    }
+}
+
+/// Result of quantizing one weight matrix.
+#[derive(Debug, Clone)]
+pub struct QuantizedWeight {
+    /// i8 codes, logical shape [K, N], row-major
+    pub codes: Vec<i8>,
+    pub k: usize,
+    pub n: usize,
+    /// f32 [G, N]
+    pub scales: Vec<f32>,
+    pub g: usize,
+}
+
+impl QuantizedWeight {
+    /// Dequantize back to f32 (row-major [K, N]).
+    pub fn dequantize(&self) -> Vec<f32> {
+        let group = self.k / self.g;
+        let mut w = vec![0.0f32; self.k * self.n];
+        for kk in 0..self.k {
+            let gi = kk / group;
+            for nn in 0..self.n {
+                w[kk * self.n + nn] =
+                    self.codes[kk * self.n + nn] as f32 * self.scales[gi * self.n + nn];
+            }
+        }
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_helpers() {
+        let s = QuantScheme::w4_perchannel();
+        assert_eq!(s.qmax(), 7.0);
+        assert_eq!(s.group_for(256), 256);
+        assert_eq!(s.group_tag(), "pc");
+        let s2 = QuantScheme::w2_g64();
+        assert_eq!(s2.qmax(), 1.0);
+        assert_eq!(s2.group_for(256), 64);
+        assert_eq!(s2.group_tag(), "g64");
+    }
+
+    #[test]
+    fn validate_rejects_bad() {
+        assert!(QuantScheme { bits: 5, group_size: None }.validate(64).is_err());
+        assert!(QuantScheme { bits: 4, group_size: Some(48) }.validate(64).is_err());
+        assert!(QuantScheme { bits: 4, group_size: Some(32) }.validate(64).is_ok());
+    }
+
+    #[test]
+    fn pack_bits_mapping() {
+        assert_eq!(QuantScheme { bits: 3, group_size: None }.pack_bits(), 4);
+        assert_eq!(QuantScheme::w2_g64().pack_bits(), 2);
+    }
+}

@@ -1,0 +1,105 @@
+//! Round-to-nearest symmetric quantization — the primitive of every PTQ
+//! method here, and the Table-4 "RTN" baseline on its own.
+//!
+//! Mirrors the Pallas `rtn_quantize` kernel / `ref.rtn_quantize` oracle
+//! exactly (same qmax, same zero-amax convention), which the cross-layer
+//! integration test verifies through the runtime.
+
+use crate::error::Result;
+use crate::tensor::Tensor;
+use crate::util::parallel::par_chunks_mut;
+
+use super::{QuantScheme, QuantizedWeight};
+
+/// Quantize `w` (f32 [K, N], row-major) per `scheme`.
+pub fn quantize(w: &Tensor, scheme: &QuantScheme) -> Result<QuantizedWeight> {
+    let k = w.shape[0];
+    let n = w.shape[1];
+    scheme.validate(k)?;
+    let group = scheme.group_for(k);
+    let g = k / group;
+    let qmax = scheme.qmax();
+    let wv = w.as_f32()?;
+
+    let mut scales = vec![0.0f32; g * n];
+    // per group: amax over the group rows, per column
+    par_chunks_mut(&mut scales, n, |gi, srow| {
+        for (j, s) in srow.iter_mut().enumerate() {
+            let mut amax = 0.0f32;
+            for kk in gi * group..(gi + 1) * group {
+                amax = amax.max(wv[kk * n + j].abs());
+            }
+            *s = if amax > 0.0 { amax / qmax } else { 1.0 };
+        }
+    });
+
+    let mut codes = vec![0i8; k * n];
+    {
+        let scales_ref = &scales;
+        par_chunks_mut(&mut codes, n, |kk, crow| {
+            let gi = kk / group;
+            for (j, c) in crow.iter_mut().enumerate() {
+                let q = (wv[kk * n + j] / scales_ref[gi * n + j]).round();
+                *c = q.clamp(-qmax, qmax) as i8;
+            }
+        });
+    }
+
+    Ok(QuantizedWeight { codes, k, n, scales, g })
+}
+
+/// Quantize a single column group in isolation (used by GPTQ's inner loop).
+pub fn quantize_value(x: f32, scale: f32, qmax: f32) -> (i8, f32) {
+    let q = (x / scale).round().clamp(-qmax, qmax);
+    (q as i8, q * scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perchannel_error_bound() {
+        // |w - deq(w)| <= scale/2 for every element (RTN's defining property)
+        let w = Tensor::randn(&[64, 32], 9, 1.0);
+        let s = QuantScheme::w4_perchannel();
+        let q = quantize(&w, &s).unwrap();
+        let deq = q.dequantize();
+        let wv = w.as_f32().unwrap();
+        for j in 0..32 {
+            let scale = q.scales[j];
+            for kk in 0..64 {
+                let err = (wv[kk * 32 + j] - deq[kk * 32 + j]).abs();
+                assert!(err <= scale / 2.0 + 1e-6, "err {err} scale {scale}");
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_matches_manual() {
+        let w = Tensor::f32(&[4, 1], vec![1.0, -2.0, 8.0, 0.5]);
+        let s = QuantScheme { bits: 4, group_size: Some(2) };
+        let q = quantize(&w, &s).unwrap();
+        assert_eq!(q.g, 2);
+        // group0 amax=2 -> scale 2/7; group1 amax=8 -> scale 8/7
+        assert!((q.scales[0] - 2.0 / 7.0).abs() < 1e-6);
+        assert!((q.scales[1] - 8.0 / 7.0).abs() < 1e-6);
+        assert_eq!(q.codes[0], (1.0 / (2.0 / 7.0) as f32).round() as i8);
+        assert_eq!(q.codes[2], 7);
+    }
+
+    #[test]
+    fn zero_group_gets_unit_scale() {
+        let w = Tensor::zeros(&[8, 4]);
+        let q = quantize(&w, &QuantScheme::w4_perchannel()).unwrap();
+        assert!(q.scales.iter().all(|&s| s == 1.0));
+        assert!(q.codes.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn w2_codes_in_range() {
+        let w = Tensor::randn(&[64, 16], 3, 2.0);
+        let q = quantize(&w, &QuantScheme::w2_g64()).unwrap();
+        assert!(q.codes.iter().all(|&c| (-1..=1).contains(&c)));
+    }
+}

@@ -1,0 +1,180 @@
+//! SmoothQuant (Xiao et al. 2023): migrate activation outliers into weights.
+//!
+//! For a linear `y = x W`, pick per-input-channel factors
+//! `s_j = max|x_j|^α / max|w_j|^(1-α)` and rewrite `y = (x / s)(s W)` — the
+//! scaled activations are then quantizable to 8 bits while the weight picks
+//! up the (weight-friendly) outliers.  The transform is numerically exact in
+//! float; quantization then happens on the transformed pair.
+//!
+//! Our deployment folds `1/s` into the *preceding* LayerNorm's gamma/beta
+//! exactly as the paper does, which is also why SmoothQuant composes so
+//! naturally with Norm Tweaking — both treat the norm affine as the
+//! distribution-control surface.
+
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+/// Per-input-channel activation absolute maxima for one linear layer,
+/// accumulated over calibration batches.
+#[derive(Debug, Clone)]
+pub struct ActStats {
+    pub amax: Vec<f32>,
+}
+
+impl ActStats {
+    pub fn new(k: usize) -> Self {
+        ActStats { amax: vec![0.0; k] }
+    }
+
+    /// Fold in a batch of activations `x [rows, K]`.
+    pub fn update(&mut self, x: &Tensor) -> Result<()> {
+        let k = self.amax.len();
+        if x.shape.last() != Some(&k) {
+            return Err(Error::Shape(format!(
+                "act stats: {:?} vs K={k}",
+                x.shape
+            )));
+        }
+        let v = x.as_f32()?;
+        for row in v.chunks_exact(k) {
+            for (a, &x) in self.amax.iter_mut().zip(row) {
+                *a = a.max(x.abs());
+            }
+        }
+        Ok(())
+    }
+}
+
+/// SmoothQuant migration strength (paper default 0.5).
+#[derive(Debug, Clone, Copy)]
+pub struct SmoothParams {
+    pub alpha: f32,
+}
+
+impl Default for SmoothParams {
+    fn default() -> Self {
+        SmoothParams { alpha: 0.5 }
+    }
+}
+
+/// Compute the per-input-channel smoothing factors `s` for weight `w [K, N]`.
+pub fn smoothing_factors(w: &Tensor, act: &ActStats, p: &SmoothParams) -> Result<Vec<f32>> {
+    let k = w.shape[0];
+    let n = w.shape[1];
+    if act.amax.len() != k {
+        return Err(Error::Shape("act stats K mismatch".into()));
+    }
+    let wv = w.as_f32()?;
+    let mut s = vec![1.0f32; k];
+    for j in 0..k {
+        let mut wmax = 0.0f32;
+        for col in 0..n {
+            wmax = wmax.max(wv[j * n + col].abs());
+        }
+        let a = act.amax[j].max(1e-5);
+        let wm = wmax.max(1e-5);
+        s[j] = (a.powf(p.alpha) / wm.powf(1.0 - p.alpha)).max(1e-5);
+    }
+    Ok(s)
+}
+
+/// Apply the migration: returns `s W` (weight rows scaled **up** by s).
+/// The caller must divide the *activations* by `s` — done by folding `1/s`
+/// into the preceding norm's affine via [`fold_into_norm`].
+pub fn scale_weight(w: &Tensor, s: &[f32]) -> Result<Tensor> {
+    let k = w.shape[0];
+    let n = w.shape[1];
+    let wv = w.as_f32()?;
+    let mut out = vec![0.0f32; k * n];
+    for j in 0..k {
+        for col in 0..n {
+            out[j * n + col] = wv[j * n + col] * s[j];
+        }
+    }
+    Ok(Tensor::f32(&[k, n], out))
+}
+
+/// Fold `1/s` into a norm affine: gamma' = gamma / s, beta' = beta / s.
+/// (The norm's output feeds the linear, so dividing its affine by `s`
+/// divides the activations by `s` exactly.)
+pub fn fold_into_norm(
+    gamma: &Tensor,
+    beta: Option<&Tensor>,
+    s: &[f32],
+) -> Result<(Tensor, Option<Tensor>)> {
+    let g = gamma.as_f32()?;
+    if g.len() != s.len() {
+        return Err(Error::Shape("fold: gamma/s length mismatch".into()));
+    }
+    let g2: Vec<f32> = g.iter().zip(s).map(|(x, f)| x / f).collect();
+    let b2 = match beta {
+        Some(b) => Some(Tensor::f32(
+            &[s.len()],
+            b.as_f32()?.iter().zip(s).map(|(x, f)| x / f).collect(),
+        )),
+        None => None,
+    };
+    Ok((Tensor::f32(&[s.len()], g2), b2))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{matmul, max_abs_diff};
+
+    #[test]
+    fn transform_is_exact_in_float() {
+        // (x / s) @ (s W) == x @ W
+        let x = Tensor::randn(&[8, 16], 1, 2.0);
+        let w = Tensor::randn(&[16, 12], 2, 1.0);
+        let mut stats = ActStats::new(16);
+        stats.update(&x).unwrap();
+        let s = smoothing_factors(&w, &stats, &SmoothParams::default()).unwrap();
+        let ws = scale_weight(&w, &s).unwrap();
+
+        let xs = {
+            let xv = x.as_f32().unwrap();
+            let mut out = vec![0.0f32; 8 * 16];
+            for r in 0..8 {
+                for j in 0..16 {
+                    out[r * 16 + j] = xv[r * 16 + j] / s[j];
+                }
+            }
+            Tensor::f32(&[8, 16], out)
+        };
+        let y0 = matmul(&x, &w).unwrap();
+        let y1 = matmul(&xs, &ws).unwrap();
+        assert!(max_abs_diff(&y0, &y1).unwrap() < 1e-4);
+    }
+
+    #[test]
+    fn factors_shrink_activation_range() {
+        // an outlier activation channel should get s > 1 (activation shrunk)
+        let mut stats = ActStats::new(4);
+        let x = Tensor::f32(&[2, 4], vec![100.0, 1.0, 1.0, 1.0, -90.0, 0.5, 1.0, 0.2]);
+        stats.update(&x).unwrap();
+        let w = Tensor::ones(&[4, 3]);
+        let s = smoothing_factors(&w, &stats, &SmoothParams::default()).unwrap();
+        assert!(s[0] > 5.0, "outlier channel factor {}", s[0]);
+        assert!(s[1] <= 1.5);
+    }
+
+    #[test]
+    fn fold_into_norm_matches_division() {
+        let gamma = Tensor::f32(&[3], vec![1.0, 2.0, 3.0]);
+        let beta = Tensor::f32(&[3], vec![0.5, -0.5, 0.0]);
+        let s = vec![2.0, 4.0, 0.5];
+        let (g2, b2) = fold_into_norm(&gamma, Some(&beta), &s).unwrap();
+        assert_eq!(g2.as_f32().unwrap(), &[0.5, 0.5, 6.0]);
+        assert_eq!(b2.unwrap().as_f32().unwrap(), &[0.25, -0.125, 0.0]);
+    }
+
+    #[test]
+    fn act_stats_accumulate_max() {
+        let mut st = ActStats::new(2);
+        st.update(&Tensor::f32(&[1, 2], vec![1.0, -3.0])).unwrap();
+        st.update(&Tensor::f32(&[1, 2], vec![-2.0, 1.0])).unwrap();
+        assert_eq!(st.amax, vec![2.0, 3.0]);
+        assert!(st.update(&Tensor::zeros(&[1, 3])).is_err());
+    }
+}

@@ -1,0 +1,143 @@
+//! Experiment reporting: ASCII tables matching the paper's layout + JSON
+//! records appended to `artifacts/experiments/`.
+
+pub mod repro;
+
+use std::path::Path;
+
+use crate::error::Result;
+use crate::util::json::Json;
+
+/// A printable table (rows of strings, first row = header).
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<String>) {
+        self.rows.push(row);
+    }
+
+    /// Render as a GitHub-flavored markdown table.
+    pub fn markdown(&self) -> String {
+        let mut out = format!("### {}\n\n", self.title);
+        out += &format!("| {} |\n", self.header.join(" | "));
+        out += &format!("|{}|\n", self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        for r in &self.rows {
+            out += &format!("| {} |\n", r.join(" | "));
+        }
+        out
+    }
+
+    /// Render with aligned columns for terminal output.
+    pub fn ascii(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = format!("== {} ==\n", self.title);
+        out += &fmt_row(&self.header);
+        out += "\n";
+        out += &"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1));
+        out += "\n";
+        for r in &self.rows {
+            out += &fmt_row(r);
+            out += "\n";
+        }
+        out
+    }
+}
+
+/// Persist a JSON experiment record under `artifacts/experiments/`.
+pub fn save_record(dir: impl AsRef<Path>, name: &str, record: &Json) -> Result<()> {
+    let dir = dir.as_ref().join("experiments");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(path, record.emit())?;
+    Ok(())
+}
+
+impl Table {
+    /// JSON form of the table (for experiment records).
+    pub fn to_json(&self) -> Json {
+        use crate::util::json::{arr, obj, s};
+        obj(vec![
+            ("title", s(self.title.clone())),
+            ("header", arr(self.header.iter().map(|h| s(h.clone())).collect())),
+            ("rows", arr(self
+                .rows
+                .iter()
+                .map(|r| arr(r.iter().map(|c| s(c.clone())).collect()))
+                .collect())),
+        ])
+    }
+}
+
+/// Format a float like the paper's tables (4 decimals).
+pub fn f4(x: f32) -> String {
+    format!("{x:.4}")
+}
+
+/// Format a float with 2 decimals.
+pub fn f2(x: f32) -> String {
+    format!("{x:.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_and_ascii_render() {
+        let mut t = Table::new("Demo", &["a", "bb"]);
+        t.push(vec!["1".into(), "2".into()]);
+        let md = t.markdown();
+        assert!(md.contains("| a | bb |"));
+        assert!(md.contains("| 1 | 2 |"));
+        let a = t.ascii();
+        assert!(a.contains("Demo"));
+    }
+
+    #[test]
+    fn record_saves_json() {
+        use crate::util::json::{n, obj};
+        let dir = std::env::temp_dir().join("nt_report_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        save_record(&dir, "t", &obj(vec![("x", n(1.0))])).unwrap();
+        let back = std::fs::read_to_string(dir.join("experiments/t.json")).unwrap();
+        assert!(back.contains("\"x\""));
+    }
+
+    #[test]
+    fn table_to_json() {
+        let mut t = Table::new("T", &["c"]);
+        t.push(vec!["v".into()]);
+        let j = t.to_json().emit();
+        assert!(j.contains("\"title\":\"T\""));
+    }
+}

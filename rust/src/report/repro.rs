@@ -1,0 +1,376 @@
+//! The experiment harness: one function per paper table/figure (DESIGN.md §5
+//! maps each to its source).  `examples/repro_tables.rs` is the CLI.
+
+use std::time::Instant;
+
+use crate::calib::vocab::{LANGS, VOCAB_SIZE};
+use crate::calib::CalibSet;
+use crate::coordinator::{build_calib, quantize_model, FloatModel, PipelineConfig,
+                         PipelineMetrics, QuantMethod, QuantModel};
+use crate::error::Result;
+use crate::eval::{lambada, ppl, subjective, tasks, LanguageModel};
+use crate::model::{ModelWeights, QuantizedModel};
+use crate::quant::QuantScheme;
+use crate::runtime::Runtime;
+use crate::tweak::tweaker::LossKind;
+use crate::tweak::TweakConfig;
+
+use super::{f2, f4, Table};
+
+/// Everything a table run needs.
+pub struct ReproCtx {
+    pub runtime: Runtime,
+    /// number of lambada-syn items per accuracy point
+    pub n_eval: usize,
+    /// tokens per PPL point
+    pub ppl_tokens: usize,
+}
+
+impl ReproCtx {
+    pub fn new(artifacts: impl AsRef<std::path::Path>) -> Result<Self> {
+        Ok(ReproCtx {
+            runtime: Runtime::new(artifacts)?,
+            n_eval: 256,
+            ppl_tokens: 4096,
+        })
+    }
+
+    pub fn weights(&self, model: &str) -> Result<ModelWeights> {
+        ModelWeights::load_from_dir(model, &self.runtime.manifest.dir)
+    }
+
+    pub fn calib(&self, w: &ModelWeights, source: &str) -> Result<CalibSet> {
+        build_calib(&self.runtime, w, source, self.runtime.manifest.calib_batch, 0xCA11B)
+    }
+
+    pub fn quantize(
+        &self,
+        w: &ModelWeights,
+        method: QuantMethod,
+        scheme: QuantScheme,
+        tweak: Option<TweakConfig>,
+        calib: &CalibSet,
+    ) -> Result<(QuantizedModel, PipelineMetrics)> {
+        let mut cfg = PipelineConfig::new(method, scheme);
+        if let Some(t) = tweak {
+            cfg = cfg.with_tweak(t);
+        }
+        quantize_model(&self.runtime, w, calib, &cfg)
+    }
+
+    pub fn lambada_acc(&self, m: &dyn LanguageModel) -> Result<f32> {
+        let set = lambada::LambadaSet::generate(0x1A3B, self.n_eval, m.config().seq);
+        lambada::accuracy(m, &set, 8)
+    }
+
+    pub fn ppl(&self, m: &dyn LanguageModel, corpus: &str) -> Result<f32> {
+        ppl::perplexity(m, corpus, self.ppl_tokens, 8)
+    }
+
+    fn nt(&self) -> TweakConfig {
+        TweakConfig::default()
+    }
+}
+
+/// Table 1 — corpus-share vs vocab-share mismatch of the top languages.
+pub fn table1() -> Table {
+    let mut t = Table::new(
+        "Table 1 — corpus vs vocabulary share (the GenData-V2 motivation)",
+        &["language", "corpus share", "vocab tokens", "vocab share"],
+    );
+    for l in &LANGS[..5] {
+        t.push(vec![
+            l.name.to_string(),
+            f2(l.corpus_share as f32 * 100.0) + "%",
+            (l.hi - l.lo).to_string(),
+            f2((l.hi - l.lo) as f32 / VOCAB_SIZE as f32 * 100.0) + "%",
+        ]);
+    }
+    let top_c: f64 = LANGS[..5].iter().map(|l| l.corpus_share).sum();
+    let top_v: u32 = LANGS[..5].iter().map(|l| l.hi - l.lo).sum();
+    t.push(vec![
+        "top-5 total".into(),
+        f2(top_c as f32 * 100.0) + "%",
+        top_v.to_string(),
+        f2(top_v as f32 / VOCAB_SIZE as f32 * 100.0) + "%",
+    ]);
+    t
+}
+
+/// Table 2 — LAMBADA-syn accuracy: FP32 / W4 / W2, GPTQ vs GPTQ+NT.
+pub fn table2(ctx: &ReproCtx, models: &[&str]) -> Result<Table> {
+    let mut t = Table::new(
+        "Table 2 — LAMBADA-syn accuracy (%), GPTQ vs Norm-Tweaking",
+        &["model", "FP32", "W4 GPTQ", "W4 +NT", "W2g64 GPTQ", "W2g64 +NT"],
+    );
+    for model in models {
+        let w = ctx.weights(model)?;
+        let calib = ctx.calib(&w, "gen-v2")?;
+        let fm = FloatModel::new(&ctx.runtime, &w)?;
+        let fp = ctx.lambada_acc(&fm)?;
+        let mut row = vec![model.to_string(), f4(fp)];
+        for scheme in [QuantScheme::w4_perchannel(), QuantScheme::w2_g64()] {
+            for tweak in [None, Some(ctx.nt())] {
+                let (qm, _) = ctx.quantize(&w, QuantMethod::Gptq, scheme, tweak, &calib)?;
+                let qr = QuantModel::new(&ctx.runtime, &qm)?;
+                row.push(f4(ctx.lambada_acc(&qr)?));
+            }
+        }
+        t.push(row);
+    }
+    Ok(t)
+}
+
+/// Table 3 — quantization runtime, GPTQ vs GPTQ+NT (seconds).
+pub fn table3(ctx: &ReproCtx, models: &[&str]) -> Result<Table> {
+    let mut t = Table::new(
+        "Table 3 — quantization runtime (s)",
+        &["model", "GPTQ", "GPTQ+NT", "overhead"],
+    );
+    for model in models {
+        let w = ctx.weights(model)?;
+        let calib = ctx.calib(&w, "gen-v2")?;
+        let t0 = Instant::now();
+        ctx.quantize(&w, QuantMethod::Gptq, QuantScheme::w4_perchannel(), None, &calib)?;
+        let plain = t0.elapsed().as_secs_f32();
+        let t1 = Instant::now();
+        ctx.quantize(&w, QuantMethod::Gptq, QuantScheme::w4_perchannel(),
+                     Some(ctx.nt()), &calib)?;
+        let tweaked = t1.elapsed().as_secs_f32();
+        t.push(vec![
+            model.to_string(),
+            f2(plain),
+            f2(tweaked),
+            format!("{}%", f2((tweaked / plain - 1.0) * 100.0)),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Table 4 — NT on RTN (W4) and SmoothQuant (W4A8).
+pub fn table4(ctx: &ReproCtx, models: &[&str]) -> Result<Table> {
+    let mut t = Table::new(
+        "Table 4 — Norm-Tweaking on other PTQ methods (LAMBADA-syn acc %)",
+        &["model", "FP32", "RTN W4", "RTN+NT W4", "SQ W4A8", "SQ+NT W4A8"],
+    );
+    for model in models {
+        let w = ctx.weights(model)?;
+        let calib = ctx.calib(&w, "gen-v2")?;
+        let fm = FloatModel::new(&ctx.runtime, &w)?;
+        let mut row = vec![model.to_string(), f4(ctx.lambada_acc(&fm)?)];
+        let scheme = QuantScheme::w4_perchannel();
+        for tweak in [None, Some(ctx.nt())] {
+            let (qm, _) = ctx.quantize(&w, QuantMethod::Rtn, scheme, tweak, &calib)?;
+            let qr = QuantModel::new(&ctx.runtime, &qm)?;
+            row.push(f4(ctx.lambada_acc(&qr)?));
+        }
+        for tweak in [None, Some(ctx.nt())] {
+            let (qm, _) =
+                ctx.quantize(&w, QuantMethod::SmoothQuant, scheme, tweak, &calib)?;
+            let qr = QuantModel::new(&ctx.runtime, &qm)?.with_act_bits(Some(8));
+            row.push(f4(ctx.lambada_acc(&qr)?));
+        }
+        t.push(row);
+    }
+    Ok(t)
+}
+
+/// Table 5 — subjective generation quality (mechanically scored).
+pub fn table5(ctx: &ReproCtx, model: &str) -> Result<Table> {
+    let w = ctx.weights(model)?;
+    let calib = ctx.calib(&w, "gen-v2")?;
+    let prompt = vec![1, 42]; // BOS + an "en" token: "Beijing is..." analog
+    let mut t = Table::new(
+        "Table 5 — generation quality from a fixed prompt",
+        &["model", "succ-rate %", "bucket violations", "3-gram loops", "sample"],
+    );
+    let clip = |s: &str| {
+        let short: String = s.chars().take(48).collect();
+        format!("{short}…")
+    };
+
+    let fm = FloatModel::new(&ctx.runtime, &w)?;
+    let evals = subjective::subjective_eval(&fm, &prompt, 2, 48)?;
+    let (text, rep) = &evals[0];
+    t.push(vec!["FP32".into(), f2(rep.successor_rate * 100.0),
+                rep.bucket_violations.to_string(),
+                rep.repetition_loops.to_string(), clip(text)]);
+
+    for (label, tweak) in [("GPTQ (2-bit)", None), ("Norm-Tweaking (2-bit)", Some(ctx.nt()))] {
+        let (qm, _) = ctx.quantize(&w, QuantMethod::Gptq, QuantScheme::w2_g64(),
+                                   tweak, &calib)?;
+        let qr = QuantModel::new(&ctx.runtime, &qm)?;
+        let evals = subjective::subjective_eval(&qr, &prompt, 2, 48)?;
+        let (text, rep) = &evals[0];
+        t.push(vec![label.into(), f2(rep.successor_rate * 100.0),
+                    rep.bucket_violations.to_string(),
+                    rep.repetition_loops.to_string(), clip(text)]);
+    }
+    Ok(t)
+}
+
+/// Table 6 — tweaking-iterations ablation.
+pub fn table6(ctx: &ReproCtx, model: &str, iters: &[usize]) -> Result<Table> {
+    let w = ctx.weights(model)?;
+    let calib = ctx.calib(&w, "gen-v2")?;
+    let mut t = Table::new(
+        "Table 6 — effect of tweaking iterations (LAMBADA-syn acc %)",
+        &["iters", "acc"],
+    );
+    for &it in iters {
+        let tweak = TweakConfig { iters: it, ..ctx.nt() };
+        let (qm, _) = ctx.quantize(&w, QuantMethod::Gptq, QuantScheme::w4_perchannel(),
+                                   Some(tweak), &calib)?;
+        let qr = QuantModel::new(&ctx.runtime, &qm)?;
+        t.push(vec![it.to_string(), f4(ctx.lambada_acc(&qr)?)]);
+    }
+    Ok(t)
+}
+
+/// Table 7 — the multi-task suite at 2 bits (and FP32/4-bit for Table 11).
+pub fn table7(ctx: &ReproCtx, model: &str, include_w4: bool) -> Result<Table> {
+    let w = ctx.weights(model)?;
+    let calib = ctx.calib(&w, "gen-v2")?;
+    let mut header = vec!["precision".to_string()];
+    header.extend(tasks::TASK_NAMES.iter().map(|s| s.to_string()));
+    let mut t = Table::new(
+        "Table 7/11 — LM-harness-syn task accuracy (%)",
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    let score_all = |m: &dyn LanguageModel, label: &str,
+                     t: &mut Table| -> Result<()> {
+        let mut row = vec![label.to_string()];
+        for name in tasks::TASK_NAMES {
+            let task = tasks::build_task(name, 64, 0xE7A1);
+            row.push(f2(tasks::score_task(m, &task, 8)?));
+        }
+        t.push(row);
+        Ok(())
+    };
+    let fm = FloatModel::new(&ctx.runtime, &w)?;
+    score_all(&fm, &format!("{model} (FP32)"), &mut t)?;
+    let mut schemes = vec![(QuantScheme::w2_g64(), "2-bit")];
+    if include_w4 {
+        schemes.push((QuantScheme::w4_perchannel(), "4-bit"));
+    }
+    for (scheme, tag) in schemes {
+        for (label, tweak) in [("GPTQ", None), ("Norm-Tweak", Some(ctx.nt()))] {
+            let (qm, _) = ctx.quantize(&w, QuantMethod::Gptq, scheme, tweak, &calib)?;
+            let qr = QuantModel::new(&ctx.runtime, &qm)?;
+            score_all(&qr, &format!("w/ {label} ({tag})"), &mut t)?;
+        }
+    }
+    Ok(t)
+}
+
+/// Table 8 — calibration-data ablation (PPL matrix).
+pub fn table8(ctx: &ReproCtx, model: &str) -> Result<Table> {
+    let w = ctx.weights(model)?;
+    let mut t = Table::new(
+        "Table 8 — calibration data vs held-out PPL (GPTQ+NT)",
+        &["calibration", "wiki-syn", "ptb-syn", "c4-syn"],
+    );
+    for source in ["wiki-syn", "ptb-syn", "c4-syn", "random", "gen-v1", "gen-v2"] {
+        let calib = ctx.calib(&w, source)?;
+        let (qm, _) = ctx.quantize(&w, QuantMethod::Gptq, QuantScheme::w2_g64(),
+                                   Some(ctx.nt()), &calib)?;
+        let qr = QuantModel::new(&ctx.runtime, &qm)?;
+        let mut row = vec![source.to_string()];
+        for eval_set in ["wiki-syn", "ptb-syn", "c4-syn"] {
+            row.push(f4(ctx.ppl(&qr, eval_set)?));
+        }
+        t.push(row);
+    }
+    Ok(t)
+}
+
+/// Table 9 — tweak-loss ablation (L_MSE vs L_KL vs L_dist).
+pub fn table9(ctx: &ReproCtx, models: &[&str]) -> Result<Table> {
+    let mut t = Table::new(
+        "Table 9 — loss-function ablation (LAMBADA-syn acc %)",
+        &["model", "L_MSE", "L_KL", "L_dist"],
+    );
+    for model in models {
+        let w = ctx.weights(model)?;
+        let calib = ctx.calib(&w, "gen-v2")?;
+        let mut row = vec![model.to_string()];
+        for loss in [LossKind::Mse, LossKind::Kl, LossKind::Dist] {
+            let tweak = TweakConfig { loss, ..ctx.nt() };
+            let (qm, _) = ctx.quantize(&w, QuantMethod::Gptq,
+                                       QuantScheme::w4_perchannel(), Some(tweak), &calib)?;
+            let qr = QuantModel::new(&ctx.runtime, &qm)?;
+            row.push(f4(ctx.lambada_acc(&qr)?));
+        }
+        t.push(row);
+    }
+    Ok(t)
+}
+
+/// Table 10 — NT on OmniQuant (+AWQ row): PPL wiki-syn / c4-syn.
+pub fn table10(ctx: &ReproCtx, model: &str) -> Result<Table> {
+    let w = ctx.weights(model)?;
+    let calib = ctx.calib(&w, "gen-v2")?;
+    let mut t = Table::new(
+        "Table 10 — OmniQuant ± NT (PPL wiki-syn / c4-syn, lower is better)",
+        &["method", "W2A16g64", "W3A16g64", "W4A4"],
+    );
+    let modes: [(QuantScheme, Option<u8>); 3] = [
+        (QuantScheme::w2_g64(), None),
+        (QuantScheme::w3_g64(), None),
+        (QuantScheme::w4_perchannel(), Some(4)),
+    ];
+    let run = |method: QuantMethod, tweak: Option<TweakConfig>| -> Result<Vec<String>> {
+        let mut cells = Vec::new();
+        for (scheme, act) in &modes {
+            let (qm, _) = ctx.quantize(&w, method, *scheme, tweak, &calib)?;
+            let qr = QuantModel::new(&ctx.runtime, &qm)?.with_act_bits(*act);
+            cells.push(format!(
+                "{} / {}",
+                f2(ctx.ppl(&qr, "wiki-syn")?),
+                f2(ctx.ppl(&qr, "c4-syn")?)
+            ));
+        }
+        Ok(cells)
+    };
+    let mut awq = vec!["AWQ".to_string()];
+    awq.extend(run(QuantMethod::Awq, None)?);
+    t.push(awq);
+    let mut oq = vec!["OmniQuant".to_string()];
+    oq.extend(run(QuantMethod::OmniQuant, None)?);
+    t.push(oq);
+    let mut oqnt = vec!["w/ NT".to_string()];
+    oqnt.extend(run(QuantMethod::OmniQuant, Some(ctx.nt()))?);
+    t.push(oqnt);
+    Ok(t)
+}
+
+/// Figure 1 — per-layer activation drift Δμ, GPTQ vs GPTQ+NT.
+pub fn figure1(ctx: &ReproCtx, model: &str) -> Result<Table> {
+    let w = ctx.weights(model)?;
+    let calib = ctx.calib(&w, "gen-v2")?;
+    let scheme = QuantScheme::w2_g64();
+    let (_, m_plain) = ctx.quantize(&w, QuantMethod::Gptq, scheme, None, &calib)?;
+    let (_, m_nt) = ctx.quantize(&w, QuantMethod::Gptq, scheme, Some(ctx.nt()), &calib)?;
+    let mut t = Table::new(
+        "Figure 1 — per-layer activation drift Δμ (GPTQ vs Norm-Tweaking, W2)",
+        &["layer", "GPTQ Δμ", "NT Δμ", "bar (GPTQ=#, NT=*)"],
+    );
+    let peak = m_plain
+        .layers
+        .iter()
+        .map(|l| l.delta_mu)
+        .fold(1e-9f32, f32::max);
+    for (a, b) in m_plain.layers.iter().zip(&m_nt.layers) {
+        let bars = |v: f32, ch: char| {
+            let n = ((v / peak) * 30.0).round() as usize;
+            std::iter::repeat(ch).take(n.max(1)).collect::<String>()
+        };
+        t.push(vec![
+            a.layer.to_string(),
+            format!("{:.5}", a.delta_mu),
+            format!("{:.5}", b.delta_mu),
+            format!("{} | {}", bars(a.delta_mu, '#'), bars(b.delta_mu, '*')),
+        ]);
+    }
+    Ok(t)
+}

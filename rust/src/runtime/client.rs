@@ -1,0 +1,137 @@
+//! The PJRT runtime: one CPU client, an executable cache keyed by
+//! (model, graph), argument validation against the manifest, and a uniform
+//! multi-output execute.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use xla::{HloModuleProto, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+use super::literal::{check_spec, literal_to_tensor, tensor_to_literal};
+use super::manifest::ArtifactManifest;
+
+/// Cache key: (model name, graph name).
+pub type GraphKey = (String, String);
+
+/// Runtime statistics (observability for the §Perf pass).
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub compiles: usize,
+    pub executions: usize,
+    pub exec_nanos: u128,
+}
+
+/// PJRT CPU runtime with compiled-executable caching.
+pub struct Runtime {
+    client: PjRtClient,
+    pub manifest: ArtifactManifest,
+    cache: Mutex<HashMap<GraphKey, std::sync::Arc<PjRtLoadedExecutable>>>,
+    stats: Mutex<RuntimeStats>,
+    /// skip per-call shape/dtype validation (hot-path opt; validated once)
+    pub validate_args: bool,
+}
+
+impl Runtime {
+    /// Create the CPU client and load the manifest from `artifacts/`.
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = ArtifactManifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu().map_err(|e| Error::Xla(e.to_string()))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(RuntimeStats::default()),
+            validate_args: true,
+        })
+    }
+
+    /// Load + compile a graph (cached).
+    pub fn executable(
+        &self,
+        model: &str,
+        graph: &str,
+    ) -> Result<std::sync::Arc<PjRtLoadedExecutable>> {
+        let key = (model.to_string(), graph.to_string());
+        if let Some(e) = self.cache.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        let entry = self.manifest.graph(model, graph)?;
+        let path = self.manifest.path_of(entry);
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Artifact("bad path".into()))?,
+        )
+        .map_err(|e| Error::Artifact(format!("{}: {e}", path.display())))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Xla(format!("compile {model}.{graph}: {e}")))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        self.stats.lock().unwrap().compiles += 1;
+        Ok(exe)
+    }
+
+    /// Execute a graph with tensor args; returns all outputs (the AOT side
+    /// always lowers with `return_tuple=True`).
+    pub fn run(&self, model: &str, graph: &str, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        if self.validate_args {
+            let entry = self.manifest.graph(model, graph)?;
+            if entry.inputs.len() != args.len() {
+                return Err(Error::Shape(format!(
+                    "{model}.{graph}: {} args given, {} expected",
+                    args.len(),
+                    entry.inputs.len()
+                )));
+            }
+            for (spec, t) in entry.inputs.iter().zip(args) {
+                check_spec(t, &spec.shape, &spec.dtype).map_err(|e| {
+                    Error::Shape(format!("{model}.{graph} arg `{}`: {e}", spec.name))
+                })?;
+            }
+        }
+        let exe = self.executable(model, graph)?;
+        let literals: Vec<xla::Literal> =
+            args.iter().map(|t| tensor_to_literal(t)).collect::<Result<_>>()?;
+
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Xla(format!("execute {model}.{graph}: {e}")))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Xla(e.to_string()))?;
+        let outs = tuple
+            .to_tuple()
+            .map_err(|e| Error::Xla(e.to_string()))?;
+        let tensors: Vec<Tensor> =
+            outs.iter().map(literal_to_tensor).collect::<Result<_>>()?;
+
+        let mut s = self.stats.lock().unwrap();
+        s.executions += 1;
+        s.exec_nanos += t0.elapsed().as_nanos();
+        Ok(tensors)
+    }
+
+    /// Snapshot of runtime counters.
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Pre-compile a set of graphs (warm-up before timed sections).
+    pub fn warmup(&self, model: &str, graphs: &[&str]) -> Result<()> {
+        for g in graphs {
+            self.executable(model, g)?;
+        }
+        Ok(())
+    }
+}

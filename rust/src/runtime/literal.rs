@@ -1,0 +1,100 @@
+//! Tensor ⇄ PJRT literal conversion (single contiguous copies, no per-element
+//! marshalling — this is on the per-layer hot path).
+
+use xla::{ElementType, Literal};
+
+use crate::error::{Error, Result};
+use crate::tensor::{DType, Storage, Tensor};
+
+fn as_bytes<T: Copy>(v: &[T]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v))
+    }
+}
+
+/// Build a PJRT literal from a tensor (one memcpy).
+pub fn tensor_to_literal(t: &Tensor) -> Result<Literal> {
+    let (ty, bytes): (ElementType, &[u8]) = match &t.data {
+        Storage::F32(v) => (ElementType::F32, as_bytes(v)),
+        Storage::I8(v) => (ElementType::S8, as_bytes(v)),
+        Storage::U8(v) => (ElementType::U8, as_bytes(v)),
+        Storage::I32(v) => (ElementType::S32, as_bytes(v)),
+        Storage::I64(v) => (ElementType::S64, as_bytes(v)),
+    };
+    Literal::create_from_shape_and_untyped_data(ty, &t.shape, bytes)
+        .map_err(|e| Error::Xla(e.to_string()))
+}
+
+/// Read a PJRT literal back into a tensor (one copy out).
+pub fn literal_to_tensor(l: &Literal) -> Result<Tensor> {
+    let shape = l
+        .array_shape()
+        .map_err(|e| Error::Xla(e.to_string()))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let ty = l.ty().map_err(|e| Error::Xla(e.to_string()))?;
+    let data = match ty {
+        ElementType::F32 => Storage::F32(l.to_vec::<f32>().map_err(xe)?),
+        ElementType::S8 => Storage::I8(l.to_vec::<i8>().map_err(xe)?),
+        ElementType::U8 => Storage::U8(l.to_vec::<u8>().map_err(xe)?),
+        ElementType::S32 => Storage::I32(l.to_vec::<i32>().map_err(xe)?),
+        ElementType::S64 => Storage::I64(l.to_vec::<i64>().map_err(xe)?),
+        other => {
+            return Err(Error::Xla(format!("unsupported literal type {other:?}")))
+        }
+    };
+    Ok(Tensor { shape: dims, data })
+}
+
+fn xe(e: xla::Error) -> Error {
+    Error::Xla(e.to_string())
+}
+
+/// Check a tensor against a manifest IoSpec (shape + dtype).
+pub fn check_spec(t: &Tensor, shape: &[usize], dtype: &str) -> Result<()> {
+    let want = match dtype {
+        "f32" => DType::F32,
+        "i8" => DType::I8,
+        "i32" => DType::I32,
+        "u8" => DType::U8,
+        other => return Err(Error::Artifact(format!("manifest dtype {other}?"))),
+    };
+    if t.dtype() != want || t.shape != shape {
+        return Err(Error::Shape(format!(
+            "arg mismatch: tensor {:?}/{:?} vs spec {:?}/{}",
+            t.shape,
+            t.dtype(),
+            shape,
+            dtype
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = Tensor::f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let l = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&l).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn roundtrip_i8_i32() {
+        let t = Tensor::i8(&[4], vec![-7, 0, 1, 7]);
+        assert_eq!(literal_to_tensor(&tensor_to_literal(&t).unwrap()).unwrap(), t);
+        let t = Tensor::i32(&[2, 2], vec![1, -2, 3, -4]);
+        assert_eq!(literal_to_tensor(&tensor_to_literal(&t).unwrap()).unwrap(), t);
+    }
+
+    #[test]
+    fn spec_check() {
+        let t = Tensor::zeros(&[2, 2]);
+        assert!(check_spec(&t, &[2, 2], "f32").is_ok());
+        assert!(check_spec(&t, &[2, 2], "i8").is_err());
+        assert!(check_spec(&t, &[4], "f32").is_err());
+    }
+}

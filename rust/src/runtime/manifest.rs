@@ -1,0 +1,251 @@
+//! `artifacts/manifest.json` — the contract between `aot.py` and the runtime
+//! (parsed with the in-tree JSON parser; serde is unavailable offline).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::model::ModelConfig;
+use crate::util::json::Json;
+
+/// Shape + dtype of one graph input (as exported by aot.py).
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One exported graph.
+#[derive(Debug, Clone)]
+pub struct GraphEntry {
+    pub model: String,
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ManifestModel {
+    pub n_layer: usize,
+    pub d_model: usize,
+    pub n_head: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub norm: String,
+}
+
+/// The parsed manifest plus the artifacts directory it came from.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub calib_batch: usize,
+    pub buckets: Vec<usize>,
+    pub models: HashMap<String, ManifestModel>,
+    pub graphs: Vec<GraphEntry>,
+    index: HashMap<(String, String), usize>,
+}
+
+fn need<'a>(j: &'a Json, key: &str) -> Result<&'a Json> {
+    j.get(key)
+        .ok_or_else(|| Error::Artifact(format!("manifest: missing key `{key}`")))
+}
+
+fn need_usize(j: &Json, key: &str) -> Result<usize> {
+    need(j, key)?
+        .as_usize()
+        .ok_or_else(|| Error::Artifact(format!("manifest: `{key}` not a number")))
+}
+
+fn need_str(j: &Json, key: &str) -> Result<String> {
+    Ok(need(j, key)?
+        .as_str()
+        .ok_or_else(|| Error::Artifact(format!("manifest: `{key}` not a string")))?
+        .to_string())
+}
+
+impl ArtifactManifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            Error::Artifact(format!(
+                "missing manifest.json in {} — run `make artifacts` ({e})",
+                dir.display()
+            ))
+        })?;
+        let root = Json::parse(&text).map_err(|e| Error::Artifact(format!("manifest: {e}")))?;
+        if need_usize(&root, "format")? != 1 {
+            return Err(Error::Artifact("manifest format != 1".into()));
+        }
+        let calib_batch = need_usize(&root, "calib_batch")?;
+        let buckets = need(&root, "buckets")?
+            .as_arr()
+            .ok_or_else(|| Error::Artifact("buckets not an array".into()))?
+            .iter()
+            .filter_map(|b| b.as_usize())
+            .collect();
+
+        let mut models = HashMap::new();
+        for (name, m) in need(&root, "models")?
+            .as_obj()
+            .ok_or_else(|| Error::Artifact("models not an object".into()))?
+        {
+            models.insert(
+                name.clone(),
+                ManifestModel {
+                    n_layer: need_usize(m, "n_layer")?,
+                    d_model: need_usize(m, "d_model")?,
+                    n_head: need_usize(m, "n_head")?,
+                    d_ff: need_usize(m, "d_ff")?,
+                    vocab: need_usize(m, "vocab")?,
+                    seq: need_usize(m, "seq")?,
+                    norm: need_str(m, "norm")?,
+                },
+            );
+        }
+
+        let mut graphs = Vec::new();
+        for g in need(&root, "graphs")?
+            .as_arr()
+            .ok_or_else(|| Error::Artifact("graphs not an array".into()))?
+        {
+            let mut inputs = Vec::new();
+            for i in need(g, "inputs")?
+                .as_arr()
+                .ok_or_else(|| Error::Artifact("inputs not an array".into()))?
+            {
+                inputs.push(IoSpec {
+                    name: need_str(i, "name")?,
+                    shape: need(i, "shape")?
+                        .as_arr()
+                        .ok_or_else(|| Error::Artifact("shape not an array".into()))?
+                        .iter()
+                        .filter_map(|d| d.as_usize())
+                        .collect(),
+                    dtype: need_str(i, "dtype")?,
+                });
+            }
+            graphs.push(GraphEntry {
+                model: need_str(g, "model")?,
+                name: need_str(g, "name")?,
+                file: need_str(g, "file")?,
+                inputs,
+            });
+        }
+
+        let mut index = HashMap::new();
+        for (i, g) in graphs.iter().enumerate() {
+            index.insert((g.model.clone(), g.name.clone()), i);
+        }
+        Ok(ArtifactManifest { dir, calib_batch, buckets, models, graphs, index })
+    }
+
+    /// Find a graph by (model, graph-name).
+    pub fn graph(&self, model: &str, name: &str) -> Result<&GraphEntry> {
+        self.index
+            .get(&(model.to_string(), name.to_string()))
+            .map(|&i| &self.graphs[i])
+            .ok_or_else(|| Error::Artifact(format!("no graph {model}.{name} in manifest")))
+    }
+
+    /// Absolute path of a graph's HLO text file.
+    pub fn path_of(&self, g: &GraphEntry) -> PathBuf {
+        self.dir.join(&g.file)
+    }
+
+    /// Verify a Rust-side model config against the manifest's record.
+    pub fn verify_model(&self, cfg: &ModelConfig) -> Result<()> {
+        let m = self
+            .models
+            .get(&cfg.name)
+            .ok_or_else(|| Error::Artifact(format!("model {} not in manifest", cfg.name)))?;
+        let norm = match cfg.norm {
+            crate::model::NormKind::LayerNorm => "layernorm",
+            crate::model::NormKind::RmsNorm => "rmsnorm",
+        };
+        if m.n_layer != cfg.n_layer
+            || m.d_model != cfg.d_model
+            || m.n_head != cfg.n_head
+            || m.d_ff != cfg.d_ff
+            || m.vocab != cfg.vocab
+            || m.seq != cfg.seq
+            || m.norm != norm
+        {
+            return Err(Error::Artifact(format!(
+                "model {} config mismatch between Rust registry and manifest",
+                cfg.name
+            )));
+        }
+        Ok(())
+    }
+
+    /// Smallest exported batch bucket that fits `n` (error if none).
+    pub fn bucket_for(&self, n: usize) -> Result<usize> {
+        self.buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= n)
+            .min()
+            .ok_or_else(|| Error::Artifact(format!("batch {n} exceeds largest bucket")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        let json = r#"{
+            "format": 1, "calib_batch": 32, "buckets": [8, 32],
+            "groups": {"pc": 0, "g64": 64},
+            "models": {"nt-tiny": {"n_layer": 2, "d_model": 128, "n_head": 4,
+                        "d_ff": 512, "vocab": 2048, "seq": 128, "norm": "layernorm"}},
+            "graphs": [{"model": "nt-tiny", "name": "embed.b8",
+                        "file": "nt-tiny.embed.b8.hlo.txt",
+                        "inputs": [{"name": "tokens", "shape": [8, 128], "dtype": "i32"}]}]
+        }"#;
+        std::fs::write(dir.join("manifest.json"), json).unwrap();
+    }
+
+    #[test]
+    fn load_and_lookup() {
+        let dir = std::env::temp_dir().join("nt_manifest_test");
+        write_fixture(&dir);
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.calib_batch, 32);
+        let g = m.graph("nt-tiny", "embed.b8").unwrap();
+        assert_eq!(g.inputs[0].dtype, "i32");
+        assert_eq!(g.inputs[0].shape, vec![8, 128]);
+        assert!(m.graph("nt-tiny", "nope").is_err());
+    }
+
+    #[test]
+    fn verify_model_checks_fields() {
+        let dir = std::env::temp_dir().join("nt_manifest_test2");
+        write_fixture(&dir);
+        let m = ArtifactManifest::load(&dir).unwrap();
+        let cfg = ModelConfig::builtin("nt-tiny").unwrap();
+        m.verify_model(&cfg).unwrap();
+        let mut bad = cfg;
+        bad.d_model = 96;
+        assert!(m.verify_model(&bad).is_err());
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let dir = std::env::temp_dir().join("nt_manifest_test3");
+        write_fixture(&dir);
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.bucket_for(1).unwrap(), 8);
+        assert_eq!(m.bucket_for(8).unwrap(), 8);
+        assert_eq!(m.bucket_for(9).unwrap(), 32);
+        assert!(m.bucket_for(33).is_err());
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(ArtifactManifest::load("/definitely/missing").is_err());
+    }
+}

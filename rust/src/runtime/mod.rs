@@ -1,0 +1,14 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from the
+//! coordinator's hot path.
+//!
+//! Python never runs here — `make artifacts` produced `artifacts/*.hlo.txt`
+//! plus `manifest.json`; this module turns them into cached
+//! `PjRtLoadedExecutable`s and shuttles [`Tensor`]s in/out as literals.
+
+mod client;
+mod literal;
+mod manifest;
+
+pub use client::{GraphKey, Runtime};
+pub use literal::{literal_to_tensor, tensor_to_literal};
+pub use manifest::{ArtifactManifest, GraphEntry, IoSpec};

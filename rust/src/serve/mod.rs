@@ -1,0 +1,164 @@
+//! Batched inference serving over a quantized model.
+//!
+//! A minimal but real dynamic batcher: client threads submit requests on an
+//! mpsc channel; the serving loop drains up to `max_batch` of them (waiting
+//! at most `batch_window` for stragglers), runs one batched generation, and
+//! answers each request on its own reply channel.  This is the deployment
+//! story of the paper — the quantized model serving traffic — and the
+//! harness behind `bench_serve` / `examples/serve_quantized.rs`.
+//!
+//! (std-thread based: the async ecosystem is unavailable offline, and the
+//! PJRT client is single-process anyway — the batcher, not the executor, is
+//! the interesting part.)
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::eval::generate::{generate, SampleConfig};
+use crate::eval::LanguageModel;
+
+/// One generation request.
+pub struct Request {
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    pub enqueued: Instant,
+    pub reply: mpsc::Sender<Response>,
+}
+
+/// The server's answer.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub tokens: Vec<i32>,
+    /// time from submit to batch start
+    pub queue_micros: u128,
+    /// generation wall time of the batch this request rode in
+    pub gen_micros: u128,
+    pub batch_size: usize,
+}
+
+/// Server tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    pub max_batch: usize,
+    pub batch_window: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_batch: 8, batch_window: Duration::from_millis(2) }
+    }
+}
+
+/// Handle for submitting requests (cloneable across client threads).
+#[derive(Clone)]
+pub struct ServeHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+impl ServeHandle {
+    /// Submit a prompt and block until the response arrives.
+    pub fn submit(&self, prompt: Vec<i32>, max_new: usize) -> Result<Response> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request { prompt, max_new, enqueued: Instant::now(), reply })
+            .map_err(|_| Error::Serve("server stopped".into()))?;
+        rx.recv().map_err(|_| Error::Serve("server dropped request".into()))
+    }
+
+    /// Submit without waiting; returns the reply receiver.
+    pub fn submit_async(
+        &self,
+        prompt: Vec<i32>,
+        max_new: usize,
+    ) -> Result<mpsc::Receiver<Response>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request { prompt, max_new, enqueued: Instant::now(), reply })
+            .map_err(|_| Error::Serve("server stopped".into()))?;
+        Ok(rx)
+    }
+}
+
+/// Aggregate serving statistics.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    pub served: usize,
+    pub batches: usize,
+    pub total_gen_micros: u128,
+    pub max_batch_seen: usize,
+}
+
+impl ServeStats {
+    pub fn mean_batch(&self) -> f32 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.served as f32 / self.batches as f32
+        }
+    }
+}
+
+/// Build the (handle, receiver) pair for a serving loop.
+pub fn channel() -> (ServeHandle, mpsc::Receiver<Request>) {
+    let (tx, rx) = mpsc::channel();
+    (ServeHandle { tx }, rx)
+}
+
+/// Run the serving loop on the current thread until every handle is dropped.
+pub fn serve_loop(
+    model: &dyn LanguageModel,
+    cfg: ServeConfig,
+    rx: mpsc::Receiver<Request>,
+) -> Result<ServeStats> {
+    let mut stats = ServeStats::default();
+    loop {
+        // block for the first request of the batch
+        let Ok(first) = rx.recv() else {
+            return Ok(stats);
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + cfg.batch_window;
+        while batch.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(_) => break,
+            }
+        }
+
+        let t0 = Instant::now();
+        let seq = model.config().seq;
+        let target = batch
+            .iter()
+            .map(|r| (r.prompt.len() + r.max_new).min(seq))
+            .max()
+            .unwrap();
+        let prompts: Vec<Vec<i32>> = batch.iter().map(|r| r.prompt.clone()).collect();
+        let outs = generate(
+            model,
+            &prompts,
+            target,
+            &SampleConfig { temperature: 0.0, stochastic_prefix: 0, seed: 0 },
+        )?;
+        let gen_micros = t0.elapsed().as_micros();
+        let bs = batch.len();
+        stats.batches += 1;
+        stats.total_gen_micros += gen_micros;
+        stats.max_batch_seen = stats.max_batch_seen.max(bs);
+        for (req, tokens) in batch.into_iter().zip(outs) {
+            let want = (req.prompt.len() + req.max_new).min(seq);
+            let resp = Response {
+                tokens: tokens[..want].to_vec(),
+                queue_micros: (t0 - req.enqueued).as_micros(),
+                gen_micros,
+                batch_size: bs,
+            };
+            let _ = req.reply.send(resp);
+            stats.served += 1;
+        }
+    }
+}

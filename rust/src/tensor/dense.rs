@@ -1,0 +1,261 @@
+//! Dense row-major tensor over f32 / i8 / u8 / i32 / i64 storage.
+
+use crate::error::{Error, Result};
+
+/// Element type of a [`Tensor`]. Codes match the `.ntz` on-disk format and
+/// the Python side (`python/compile/ntz.py`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I8,
+    U8,
+    I32,
+    I64,
+}
+
+impl DType {
+    pub fn code(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::I8 => 1,
+            DType::U8 => 2,
+            DType::I32 => 3,
+            DType::I64 => 4,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Result<Self> {
+        Ok(match c {
+            0 => DType::F32,
+            1 => DType::I8,
+            2 => DType::U8,
+            3 => DType::I32,
+            4 => DType::I64,
+            _ => return Err(Error::msg(format!("unknown dtype code {c}"))),
+        })
+    }
+
+    pub fn size_of(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 | DType::U8 => 1,
+            DType::I64 => 8,
+        }
+    }
+}
+
+/// Typed storage backing a tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Storage {
+    F32(Vec<f32>),
+    I8(Vec<i8>),
+    U8(Vec<u8>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+}
+
+impl Storage {
+    pub fn len(&self) -> usize {
+        match self {
+            Storage::F32(v) => v.len(),
+            Storage::I8(v) => v.len(),
+            Storage::U8(v) => v.len(),
+            Storage::I32(v) => v.len(),
+            Storage::I64(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Storage::F32(_) => DType::F32,
+            Storage::I8(_) => DType::I8,
+            Storage::U8(_) => DType::U8,
+            Storage::I32(_) => DType::I32,
+            Storage::I64(_) => DType::I64,
+        }
+    }
+}
+
+/// A dense row-major (C-order) tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Storage,
+}
+
+impl Tensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data: Storage::F32(data) }
+    }
+
+    pub fn i8(shape: &[usize], data: Vec<i8>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data: Storage::I8(data) }
+    }
+
+    pub fn u8(shape: &[usize], data: Vec<u8>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data: Storage::U8(data) }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data: Storage::I32(data) }
+    }
+
+    pub fn i64(shape: &[usize], data: Vec<i64>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data: Storage::I64(data) }
+    }
+
+    /// All-zeros f32 tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor::f32(shape, vec![0.0; shape.iter().product()])
+    }
+
+    /// All-ones f32 tensor.
+    pub fn ones(shape: &[usize]) -> Self {
+        Tensor::f32(shape, vec![1.0; shape.iter().product()])
+    }
+
+    /// Deterministic pseudo-random f32 tensor in [-scale, scale] (tests/benches).
+    pub fn randn(shape: &[usize], seed: u64, scale: f32) -> Self {
+        let n: usize = shape.iter().product();
+        let mut rng = crate::calib::rng::SplitMix64::new(seed);
+        let data = (0..n)
+            .map(|_| {
+                // sum of 4 uniforms ~ approx gaussian, centered
+                let s: f32 = (0..4)
+                    .map(|_| (rng.next_u64() >> 40) as f32 / (1u64 << 24) as f32)
+                    .sum();
+                (s - 2.0) * scale
+            })
+            .collect();
+        Tensor::f32(shape, data)
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.data.dtype()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Borrow as f32 slice; error if not F32.
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Storage::F32(v) => Ok(v),
+            other => Err(Error::Shape(format!("expected f32, got {:?}", other.dtype()))),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            Storage::F32(v) => Ok(v),
+            other => Err(Error::Shape(format!("expected f32, got {:?}", other.dtype()))),
+        }
+    }
+
+    pub fn as_i8(&self) -> Result<&[i8]> {
+        match &self.data {
+            Storage::I8(v) => Ok(v),
+            other => Err(Error::Shape(format!("expected i8, got {:?}", other.dtype()))),
+        }
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        match &self.data {
+            Storage::U8(v) => Ok(v),
+            other => Err(Error::Shape(format!("expected u8, got {:?}", other.dtype()))),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Storage::I32(v) => Ok(v),
+            other => Err(Error::Shape(format!("expected i32, got {:?}", other.dtype()))),
+        }
+    }
+
+    /// Reshape in place (numel must match).
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.numel() {
+            return Err(Error::Shape(format!(
+                "reshape {:?} -> {:?}: numel mismatch",
+                self.shape, shape
+            )));
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Row `i` of a 2-D f32 tensor.
+    pub fn row(&self, i: usize) -> Result<&[f32]> {
+        if self.rank() != 2 {
+            return Err(Error::Shape("row() needs rank 2".into()));
+        }
+        let cols = self.shape[1];
+        Ok(&self.as_f32()?[i * cols..(i + 1) * cols])
+    }
+
+    /// Memory footprint of the raw data in bytes.
+    pub fn nbytes(&self) -> usize {
+        self.numel() * self.dtype().size_of()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_accessors() {
+        let t = Tensor::f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.rank(), 2);
+        assert_eq!(t.dtype(), DType::F32);
+        assert_eq!(t.row(1).unwrap(), &[4., 5., 6.]);
+        assert_eq!(t.nbytes(), 24);
+    }
+
+    #[test]
+    fn reshape_checks_numel() {
+        let t = Tensor::zeros(&[4, 4]);
+        assert!(t.clone().reshape(&[2, 8]).is_ok());
+        assert!(t.reshape(&[3, 5]).is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_data_mismatch_panics() {
+        let _ = Tensor::f32(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn dtype_roundtrip() {
+        for d in [DType::F32, DType::I8, DType::U8, DType::I32, DType::I64] {
+            assert_eq!(DType::from_code(d.code()).unwrap(), d);
+        }
+        assert!(DType::from_code(99).is_err());
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        let a = Tensor::randn(&[16], 42, 1.0);
+        let b = Tensor::randn(&[16], 42, 1.0);
+        assert_eq!(a, b);
+        let c = Tensor::randn(&[16], 43, 1.0);
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,15 @@
+//! Minimal dense tensor types for the coordinator's CPU-side bookkeeping.
+//!
+//! The heavy math runs inside AOT-compiled XLA executables; this module only
+//! needs enough to hold weights/activations, quantize/pack them, move them in
+//! and out of PJRT literals, and verify numerics in tests.
+
+mod dense;
+mod ntz;
+mod ops;
+mod pack;
+
+pub use dense::{DType, Storage, Tensor};
+pub use ntz::{load_ntz, save_ntz};
+pub use ops::{allclose, matmul, max_abs_diff, mean_var_channels, transpose2d};
+pub use pack::{pack_codes, packed_len, unpack_codes, PackedCodes};

@@ -1,0 +1,148 @@
+//! `.ntz` tensor archive reader/writer — mirror of `python/compile/ntz.py`.
+//!
+//! Layout (little-endian):
+//! `b"NTZ1" | u32 n | per tensor: u32 name_len, name, u8 dtype, u32 ndim,
+//!  u64*ndim dims, raw data (C order)`.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+use super::dense::{DType, Storage, Tensor};
+
+const MAGIC: &[u8; 4] = b"NTZ1";
+
+/// Load every tensor in an `.ntz` archive, keyed by name.
+pub fn load_ntz(path: impl AsRef<Path>) -> Result<BTreeMap<String, Tensor>> {
+    let bytes = std::fs::read(path.as_ref()).map_err(|e| {
+        Error::Checkpoint(format!("{}: {e}", path.as_ref().display()))
+    })?;
+    let mut r = &bytes[..];
+
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::Checkpoint(format!(
+            "{}: bad magic {magic:?}",
+            path.as_ref().display()
+        )));
+    }
+    let n = read_u32(&mut r)?;
+    let mut out = BTreeMap::new();
+    for _ in 0..n {
+        let name_len = read_u32(&mut r)? as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name)
+            .map_err(|e| Error::Checkpoint(format!("bad tensor name: {e}")))?;
+        let mut code = [0u8; 1];
+        r.read_exact(&mut code)?;
+        let dtype = DType::from_code(code[0])?;
+        let ndim = read_u32(&mut r)? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u64(&mut r)? as usize);
+        }
+        let count: usize = shape.iter().product();
+        let nbytes = count * dtype.size_of();
+        let mut raw = vec![0u8; nbytes];
+        r.read_exact(&mut raw)?;
+        let data = decode(dtype, &raw);
+        out.insert(name, Tensor { shape, data });
+    }
+    Ok(out)
+}
+
+/// Save tensors to an `.ntz` archive (sorted by name for determinism).
+pub fn save_ntz(path: impl AsRef<Path>, tensors: &BTreeMap<String, Tensor>) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        f.write_all(&[t.dtype().code()])?;
+        f.write_all(&(t.rank() as u32).to_le_bytes())?;
+        for d in &t.shape {
+            f.write_all(&(*d as u64).to_le_bytes())?;
+        }
+        f.write_all(&encode(&t.data))?;
+    }
+    f.flush()?;
+    Ok(())
+}
+
+fn read_u32(r: &mut &[u8]) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut &[u8]) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn decode(dtype: DType, raw: &[u8]) -> Storage {
+    match dtype {
+        DType::F32 => Storage::F32(
+            raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+        ),
+        DType::I8 => Storage::I8(raw.iter().map(|&b| b as i8).collect()),
+        DType::U8 => Storage::U8(raw.to_vec()),
+        DType::I32 => Storage::I32(
+            raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+        ),
+        DType::I64 => Storage::I64(
+            raw.chunks_exact(8).map(|c| i64::from_le_bytes(c.try_into().unwrap())).collect(),
+        ),
+    }
+}
+
+fn encode(s: &Storage) -> Vec<u8> {
+    match s {
+        Storage::F32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        Storage::I8(v) => v.iter().map(|&x| x as u8).collect(),
+        Storage::U8(v) => v.clone(),
+        Storage::I32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        Storage::I64(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_dtypes() {
+        let dir = std::env::temp_dir().join("ntz_test_roundtrip");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ntz");
+        let mut m = BTreeMap::new();
+        m.insert("a".to_string(), Tensor::f32(&[2, 3], vec![1., -2., 3.5, 0., 5., 6.]));
+        m.insert("b".to_string(), Tensor::i8(&[4], vec![-7, 0, 7, 127]));
+        m.insert("c".to_string(), Tensor::u8(&[2], vec![0, 255]));
+        m.insert("d".to_string(), Tensor::i32(&[2, 2], vec![1, -1, 1 << 20, 0]));
+        m.insert("e".to_string(), Tensor::i64(&[1], vec![-(1i64 << 40)]));
+        save_ntz(&path, &m).unwrap();
+        let back = load_ntz(&path).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(load_ntz("/nonexistent/definitely/missing.ntz").is_err());
+    }
+
+    #[test]
+    fn bad_magic_errors() {
+        let dir = std::env::temp_dir().join("ntz_test_badmagic");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ntz");
+        std::fs::write(&path, b"NOPE\x00\x00\x00\x00").unwrap();
+        assert!(load_ntz(&path).is_err());
+    }
+}

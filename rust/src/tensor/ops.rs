@@ -1,0 +1,152 @@
+//! CPU reference math used by quantization substrates and tests.
+//!
+//! These are *not* the hot path (XLA executables are) — they back GPTQ's
+//! Hessian algebra, SmoothQuant's scale migration, unit tests, and the
+//! pure-Rust fallbacks.  `matmul` is rayon-parallel because GPTQ's weight
+//! reconstruction calls it on full layers.
+
+use crate::error::{Error, Result};
+use crate::util::parallel::par_chunks_mut;
+
+use super::dense::Tensor;
+
+/// Row-major matmul: `a [M,K] @ b [K,N] -> [M,N]` (threaded over rows).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    if a.rank() != 2 || b.rank() != 2 || a.shape[1] != b.shape[0] {
+        return Err(Error::Shape(format!(
+            "matmul {:?} x {:?}",
+            a.shape, b.shape
+        )));
+    }
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let n = b.shape[1];
+    let av = a.as_f32()?;
+    let bv = b.as_f32()?;
+    let mut out = vec![0.0f32; m * n];
+    par_chunks_mut(&mut out, n, |i, row| {
+        let arow = &av[i * k..(i + 1) * k];
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &bv[kk * n..(kk + 1) * n];
+            for (j, r) in row.iter_mut().enumerate() {
+                *r += aik * brow[j];
+            }
+        }
+    });
+    Ok(Tensor::f32(&[m, n], out))
+}
+
+/// Transpose a 2-D f32 tensor.
+pub fn transpose2d(a: &Tensor) -> Result<Tensor> {
+    if a.rank() != 2 {
+        return Err(Error::Shape("transpose2d needs rank 2".into()));
+    }
+    let (m, n) = (a.shape[0], a.shape[1]);
+    let av = a.as_f32()?;
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            out[j * m + i] = av[i * n + j];
+        }
+    }
+    Ok(Tensor::f32(&[n, m], out))
+}
+
+/// Per-channel (last-dim) mean and population variance over leading dims —
+/// CPU mirror of the `channel_stats` kernel / Eq. 2's reduction.
+pub fn mean_var_channels(x: &Tensor) -> Result<(Vec<f32>, Vec<f32>)> {
+    let c = *x.shape.last().ok_or_else(|| Error::Shape("empty shape".into()))?;
+    let rows = x.numel() / c;
+    let v = x.as_f32()?;
+    let mut mean = vec![0.0f64; c];
+    let mut sq = vec![0.0f64; c];
+    for r in 0..rows {
+        let row = &v[r * c..(r + 1) * c];
+        for (j, &val) in row.iter().enumerate() {
+            mean[j] += val as f64;
+            sq[j] += (val as f64) * (val as f64);
+        }
+    }
+    let nf = rows as f64;
+    let mu: Vec<f32> = mean.iter().map(|&s| (s / nf) as f32).collect();
+    let var: Vec<f32> = sq
+        .iter()
+        .zip(&mu)
+        .map(|(&s, &m)| (s / nf - (m as f64) * (m as f64)) as f32)
+        .collect();
+    Ok((mu, var))
+}
+
+/// Max absolute elementwise difference between two same-shape f32 tensors.
+pub fn max_abs_diff(a: &Tensor, b: &Tensor) -> Result<f32> {
+    if a.shape != b.shape {
+        return Err(Error::Shape(format!("{:?} vs {:?}", a.shape, b.shape)));
+    }
+    let (av, bv) = (a.as_f32()?, b.as_f32()?);
+    Ok(av
+        .iter()
+        .zip(bv)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max))
+}
+
+/// True when every element differs by at most `atol + rtol * |b|`.
+pub fn allclose(a: &Tensor, b: &Tensor, atol: f32, rtol: f32) -> Result<bool> {
+    if a.shape != b.shape {
+        return Err(Error::Shape(format!("{:?} vs {:?}", a.shape, b.shape)));
+    }
+    let (av, bv) = (a.as_f32()?, b.as_f32()?);
+    Ok(av
+        .iter()
+        .zip(bv)
+        .all(|(x, y)| (x - y).abs() <= atol + rtol * y.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::f32(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::f32(&[2, 2], vec![1., 1., 1., 1.]);
+        let c = matmul(&a, &b).unwrap();
+        assert_eq!(c.as_f32().unwrap(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matmul_shape_error() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 3]);
+        assert!(matmul(&a, &b).is_err());
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Tensor::randn(&[3, 5], 1, 1.0);
+        let t = transpose2d(&a).unwrap();
+        assert_eq!(t.shape, vec![5, 3]);
+        let back = transpose2d(&t).unwrap();
+        assert_eq!(a, back);
+    }
+
+    #[test]
+    fn mean_var_known() {
+        // columns: [1,3] -> mu 2 var 1 ; [2,2] -> mu 2 var 0
+        let x = Tensor::f32(&[2, 2], vec![1., 2., 3., 2.]);
+        let (mu, var) = mean_var_channels(&x).unwrap();
+        assert_eq!(mu, vec![2., 2.]);
+        assert_eq!(var, vec![1., 0.]);
+    }
+
+    #[test]
+    fn allclose_and_maxdiff() {
+        let a = Tensor::f32(&[3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::f32(&[3], vec![1.0, 2.0, 3.001]);
+        assert!(allclose(&a, &b, 1e-2, 0.0).unwrap());
+        assert!(!allclose(&a, &b, 1e-5, 0.0).unwrap());
+        assert!((max_abs_diff(&a, &b).unwrap() - 0.001).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,88 @@
+//! Adam state for the tweaked norm parameters.
+//!
+//! The actual update is fused inside the `tweak_step` XLA graph; this module
+//! owns the m/v tensors between iterations and provides a CPU mirror of the
+//! update rule so tests can verify the graph's arithmetic.
+
+use crate::tensor::Tensor;
+
+pub const B1: f32 = 0.9;
+pub const B2: f32 = 0.999;
+pub const EPS: f32 = 1e-8;
+
+/// Adam moments for one layer's tweakable parameters.
+#[derive(Debug, Clone)]
+pub struct AdamState {
+    pub m: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+    /// 1-based timestep (as the graph expects in its `t` input)
+    pub t: f32,
+}
+
+impl AdamState {
+    /// Zero-initialized state for parameter vectors of length `d`.
+    pub fn new(n_params: usize, d: usize) -> Self {
+        AdamState {
+            m: (0..n_params).map(|_| Tensor::zeros(&[d])).collect(),
+            v: (0..n_params).map(|_| Tensor::zeros(&[d])).collect(),
+            t: 1.0,
+        }
+    }
+
+    pub fn advance(&mut self) {
+        self.t += 1.0;
+    }
+
+    /// CPU mirror of one Adam update (test oracle for the XLA graph).
+    pub fn apply_cpu(&mut self, theta: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        let bc1 = 1.0 - B1.powf(self.t);
+        let bc2 = 1.0 - B2.powf(self.t);
+        for i in 0..theta.len() {
+            let g = grads[i].as_f32().unwrap();
+            let m = self.m[i].as_f32_mut().unwrap();
+            let v = self.v[i].as_f32_mut().unwrap();
+            let th = theta[i].as_f32_mut().unwrap();
+            for j in 0..th.len() {
+                m[j] = B1 * m[j] + (1.0 - B1) * g[j];
+                v[j] = B2 * v[j] + (1.0 - B2) * g[j] * g[j];
+                let mhat = m[j] / bc1;
+                let vhat = v[j] / bc2;
+                th[j] -= lr * mhat / (vhat.sqrt() + EPS);
+            }
+        }
+        self.advance();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_moves_against_gradient() {
+        let mut st = AdamState::new(1, 4);
+        let mut theta = vec![Tensor::zeros(&[4])];
+        let grads = vec![Tensor::f32(&[4], vec![1.0, -1.0, 2.0, 0.0])];
+        st.apply_cpu(&mut theta, &grads, 0.1);
+        let th = theta[0].as_f32().unwrap();
+        // adam's first step is ~ -lr * sign(g)
+        assert!((th[0] + 0.1).abs() < 1e-3);
+        assert!((th[1] - 0.1).abs() < 1e-3);
+        assert!(th[3] == 0.0);
+        assert_eq!(st.t, 2.0);
+    }
+
+    #[test]
+    fn repeated_steps_converge_quadratic() {
+        // minimize (x - 3)^2 with adam; should approach 3
+        let mut st = AdamState::new(1, 1);
+        let mut theta = vec![Tensor::zeros(&[1])];
+        for _ in 0..500 {
+            let x = theta[0].as_f32().unwrap()[0];
+            let g = vec![Tensor::f32(&[1], vec![2.0 * (x - 3.0)])];
+            st.apply_cpu(&mut theta, &g, 0.05);
+        }
+        let x = theta[0].as_f32().unwrap()[0];
+        assert!((x - 3.0).abs() < 0.1, "x = {x}");
+    }
+}

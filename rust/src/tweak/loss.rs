@@ -1,0 +1,119 @@
+//! Tweaking losses — CPU references mirroring the L2 graphs.
+//!
+//! The deployed loss is Eq. 2 of the paper:
+//! `L_dist = 1/C Σ_c ( |μ_f^c − μ_q^c| + |σ²_f^c − σ²_q^c| )`
+//! (channel-wise mean/variance alignment — relaxed on purpose: point-wise
+//! alignment overfits the calibration set, see Table 9).
+
+use crate::error::{Error, Result};
+use crate::tensor::{mean_var_channels, Tensor};
+
+/// Eq. 2 on precomputed channel stats.
+pub fn dist_loss_stats(mu_f: &[f32], var_f: &[f32], mu_q: &[f32], var_q: &[f32]) -> f32 {
+    let c = mu_f.len();
+    let mut total = 0.0f64;
+    for i in 0..c {
+        total += (mu_f[i] - mu_q[i]).abs() as f64;
+        total += (var_f[i] - var_q[i]).abs() as f64;
+    }
+    (total / c as f64) as f32
+}
+
+/// Eq. 2 on raw activations (reduces to channel stats first).
+pub fn dist_loss(y_f: &Tensor, y_q: &Tensor) -> Result<f32> {
+    if y_f.shape != y_q.shape {
+        return Err(Error::Shape(format!("{:?} vs {:?}", y_f.shape, y_q.shape)));
+    }
+    let (mu_f, var_f) = mean_var_channels(y_f)?;
+    let (mu_q, var_q) = mean_var_channels(y_q)?;
+    Ok(dist_loss_stats(&mu_f, &var_f, &mu_q, &var_q))
+}
+
+/// Point-wise MSE (Table 9 ablation).
+pub fn mse_loss(y_f: &Tensor, y_q: &Tensor) -> Result<f32> {
+    if y_f.shape != y_q.shape {
+        return Err(Error::Shape(format!("{:?} vs {:?}", y_f.shape, y_q.shape)));
+    }
+    let (a, b) = (y_f.as_f32()?, y_q.as_f32()?);
+    let s: f64 = a.iter().zip(b).map(|(x, y)| ((x - y) as f64).powi(2)).sum();
+    Ok((s / a.len() as f64) as f32)
+}
+
+/// Channel-softmax KL divergence (Table 9 ablation).
+pub fn kl_loss(y_f: &Tensor, y_q: &Tensor) -> Result<f32> {
+    if y_f.shape != y_q.shape {
+        return Err(Error::Shape(format!("{:?} vs {:?}", y_f.shape, y_q.shape)));
+    }
+    let c = *y_f.shape.last().unwrap();
+    let (a, b) = (y_f.as_f32()?, y_q.as_f32()?);
+    let rows = a.len() / c;
+    let mut total = 0.0f64;
+    for r in 0..rows {
+        let fa = &a[r * c..(r + 1) * c];
+        let fb = &b[r * c..(r + 1) * c];
+        let lsa = log_softmax(fa);
+        let lsb = log_softmax(fb);
+        for i in 0..c {
+            total += (lsa[i].exp() * (lsa[i] - lsb[i])) as f64;
+        }
+    }
+    Ok((total / rows as f64) as f32)
+}
+
+fn log_softmax(x: &[f32]) -> Vec<f32> {
+    let m = x.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let lse = m + x.iter().map(|&v| (v - m).exp()).sum::<f32>().ln();
+    x.iter().map(|&v| v - lse).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dist_loss_zero_for_identical() {
+        let x = Tensor::randn(&[4, 8], 1, 1.0);
+        assert_eq!(dist_loss(&x, &x).unwrap(), 0.0);
+        assert_eq!(mse_loss(&x, &x).unwrap(), 0.0);
+        assert!(kl_loss(&x, &x).unwrap().abs() < 1e-6);
+    }
+
+    #[test]
+    fn dist_loss_detects_mean_shift() {
+        let x = Tensor::randn(&[64, 8], 1, 1.0);
+        let mut shifted = x.clone();
+        for v in shifted.as_f32_mut().unwrap() {
+            *v += 0.5;
+        }
+        let l = dist_loss(&x, &shifted).unwrap();
+        assert!((l - 0.5).abs() < 0.05, "loss {l}");
+    }
+
+    #[test]
+    fn dist_loss_invariant_to_permutation_within_channel() {
+        // Eq. 2 only sees per-channel stats: permuting rows changes nothing
+        let x = Tensor::f32(&[3, 2], vec![1., 10., 2., 20., 3., 30.]);
+        let y = Tensor::f32(&[3, 2], vec![3., 30., 1., 10., 2., 20.]);
+        assert!(dist_loss(&x, &y).unwrap().abs() < 1e-6);
+        // ... while MSE (point-wise) does change
+        assert!(mse_loss(&x, &y).unwrap() > 0.5);
+    }
+
+    #[test]
+    fn stats_form_matches_raw_form() {
+        let a = Tensor::randn(&[32, 16], 2, 1.0);
+        let b = Tensor::randn(&[32, 16], 3, 1.0);
+        let (mu_f, var_f) = mean_var_channels(&a).unwrap();
+        let (mu_q, var_q) = mean_var_channels(&b).unwrap();
+        let l1 = dist_loss(&a, &b).unwrap();
+        let l2 = dist_loss_stats(&mu_f, &var_f, &mu_q, &var_q);
+        assert!((l1 - l2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn kl_positive_for_different() {
+        let a = Tensor::randn(&[8, 16], 4, 1.0);
+        let b = Tensor::randn(&[8, 16], 5, 1.0);
+        assert!(kl_loss(&a, &b).unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! Norm Tweaking — the paper's contribution.
+//!
+//! * [`loss`] — the channel-wise distribution loss (Eq. 2) + the MSE/KL
+//!   ablation losses (Table 9), CPU reference implementations.
+//! * [`adam`] — Adam state management (the XLA `tweak_step` graph applies
+//!   the update; this mirrors it for tests and owns the m/v tensors).
+//! * [`scheduler`] — the layer-level learning-rate step scheduler (Eq. 3).
+//! * [`tweaker`] — drives the fused `tweak_step` executable per layer
+//!   (Algorithm 1 lines 11–15).
+
+pub mod adam;
+pub mod loss;
+pub mod scheduler;
+pub mod tweaker;
+
+pub use scheduler::LayerLrScheduler;
+pub use tweaker::{TweakConfig, TweakOutcome, Tweaker};

@@ -1,0 +1,95 @@
+//! Micro-benchmark harness (criterion stand-in) used by `rust/benches/`.
+//!
+//! Warmup + timed iterations, reporting mean / p50 / min per iteration and a
+//! derived throughput line.  Deliberately simple: wall-clock monotonic time,
+//! enough samples to be stable on an otherwise idle CI box.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's collected timings.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10.3?} mean  {:>10.3?} p50  {:>10.3?} min  ({} iters)",
+            self.name, self.mean, self.p50, self.min, self.iters
+        )
+    }
+
+    /// items/second at the mean time, given items-per-iteration.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean.as_secs_f64()
+    }
+}
+
+/// Time `f` with `warmup` untimed runs then `iters` timed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    times.sort_unstable();
+    let total: Duration = times.iter().sum();
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: total / iters as u32,
+        p50: times[iters / 2],
+        min: times[0],
+    }
+}
+
+/// Time an operation for at least `budget`, auto-scaling iterations.
+pub fn bench_for<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // calibrate
+    let t0 = Instant::now();
+    f();
+    let one = t0.elapsed().max(Duration::from_micros(1));
+    let iters = ((budget.as_secs_f64() / one.as_secs_f64()).ceil() as usize).clamp(3, 1000);
+    bench(name, 1, iters, f)
+}
+
+/// Prevent the optimizer from discarding a value (std::hint wrapper).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 1, 5, || {
+            let mut s = 0u64;
+            for i in 0..10_000 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.min <= r.p50 && r.p50 <= r.mean * 3);
+        assert!(r.report().contains("spin"));
+    }
+
+    #[test]
+    fn bench_for_scales_iters() {
+        let r = bench_for("quick", Duration::from_millis(5), || {
+            black_box(1 + 1);
+        });
+        assert!(r.iters >= 3);
+    }
+}

@@ -1,0 +1,9 @@
+//! In-tree replacements for the usual ecosystem crates (the image builds
+//! fully offline with only the `xla` closure cached): a scoped thread pool,
+//! a JSON value parser/emitter, a TOML-subset parser, and a micro-bench
+//! harness used by `rust/benches/`.
+
+pub mod bench;
+pub mod json;
+pub mod parallel;
+pub mod tomlmini;

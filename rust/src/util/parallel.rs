@@ -1,0 +1,105 @@
+//! Scoped data-parallel helpers over `std::thread` (rayon stand-in).
+
+use std::sync::Mutex;
+
+/// Number of worker threads to use for `n_items` of work.
+pub fn n_threads(n_items: usize) -> usize {
+    std::thread::available_parallelism()
+        .map(|x| x.get())
+        .unwrap_or(1)
+        .min(n_items)
+        .max(1)
+}
+
+/// Apply `f(chunk_index, chunk)` over `data.chunks_mut(chunk)` in parallel
+/// (work-stealing via a shared iterator).
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n_chunks = data.len().div_ceil(chunk.max(1));
+    let threads = n_threads(n_chunks);
+    if threads <= 1 || n_chunks <= 1 {
+        for (i, c) in data.chunks_mut(chunk.max(1)).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    let work = Mutex::new(data.chunks_mut(chunk).enumerate());
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let item = work.lock().unwrap().next();
+                match item {
+                    Some((i, c)) => f(i, c),
+                    None => break,
+                }
+            });
+        }
+    });
+}
+
+/// Parallel map over `0..n`, collecting results in index order.
+pub fn par_map<R, F>(n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let threads = n_threads(n);
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let slots = Mutex::new(out.iter_mut().enumerate());
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let slot = slots.lock().unwrap().next();
+                match slot {
+                    Some((i, cell)) => {
+                        *cell = Some(f(i));
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    out.into_iter().map(|x| x.expect("filled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_everything() {
+        let mut v = vec![0u32; 1003];
+        par_chunks_mut(&mut v, 64, |i, c| {
+            for x in c.iter_mut() {
+                *x = i as u32 + 1;
+            }
+        });
+        assert!(v.iter().all(|&x| x > 0));
+        assert_eq!(v[0], 1);
+        assert_eq!(v[64], 2);
+        assert_eq!(*v.last().unwrap(), 16); // chunk 15 -> value 16
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let out = par_map(100, |i| i * i);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i * i);
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let out: Vec<usize> = par_map(0, |i| i);
+        assert!(out.is_empty());
+        let mut v = vec![1];
+        par_chunks_mut(&mut v, 8, |_, c| c[0] = 9);
+        assert_eq!(v, vec![9]);
+    }
+}

@@ -1,0 +1,195 @@
+//! TOML-subset parser for run configs: `[section]` headers and
+//! `key = value` lines (strings, ints, floats, bools, flat string arrays).
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    StrArr(Vec<String>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<f32> {
+        match self {
+            TomlValue::Float(f) => Some(*f as f32),
+            TomlValue::Int(i) => Some(*i as f32),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str_arr(&self) -> Option<&[String]> {
+        match self {
+            TomlValue::StrArr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: section -> key -> value (top-level keys in section "").
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| Error::Config(format!("line {}: bad section", lineno + 1)))?;
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| Error::Config(format!("line {}: expected key = value", lineno + 1)))?;
+            let value = parse_value(v.trim())
+                .map_err(|e| Error::Config(format!("line {}: {e}", lineno + 1)))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // only strip # outside quotes
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Result<TomlValue> {
+    if let Some(rest) = v.strip_prefix('"') {
+        let s = rest
+            .strip_suffix('"')
+            .ok_or_else(|| Error::Config("unterminated string".into()))?;
+        return Ok(TomlValue::Str(s.to_string()));
+    }
+    if v == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if v == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = v.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| Error::Config("unterminated array".into()))?;
+        let mut out = Vec::new();
+        for item in inner.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            match parse_value(item)? {
+                TomlValue::Str(s) => out.push(s),
+                _ => return Err(Error::Config("only string arrays supported".into())),
+            }
+        }
+        return Ok(TomlValue::StrArr(out));
+    }
+    if let Ok(i) = v.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = v.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(Error::Config(format!("cannot parse value '{v}'")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+            top = 1
+            [run]
+            model = "nt-small"   # comment
+            steps = 42
+            lr = 1e-3
+            on = true
+            sets = ["a", "b"]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top").unwrap().as_usize(), Some(1));
+        assert_eq!(doc.get("run", "model").unwrap().as_str(), Some("nt-small"));
+        assert_eq!(doc.get("run", "steps").unwrap().as_usize(), Some(42));
+        assert!((doc.get("run", "lr").unwrap().as_f32().unwrap() - 1e-3).abs() < 1e-9);
+        assert_eq!(doc.get("run", "on").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.get("run", "sets").unwrap().as_str_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = TomlDoc::parse("k = \"a#b\"").unwrap();
+        assert_eq!(doc.get("", "k").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_reported_with_line() {
+        let err = TomlDoc::parse("[run\n").unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+        assert!(TomlDoc::parse("x ~ 1").is_err());
+        assert!(TomlDoc::parse("x = zap").is_err());
+    }
+}

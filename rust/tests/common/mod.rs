@@ -1,0 +1,30 @@
+//! Shared helpers for integration tests: artifact discovery + graceful skip
+//! when `make artifacts` has not run yet.
+
+use normtweak::model::ModelWeights;
+use normtweak::runtime::Runtime;
+
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Load the runtime, or None (with a notice) when artifacts are absent —
+/// integration tests become no-ops instead of failures pre-`make artifacts`.
+pub fn runtime_or_skip() -> Option<Runtime> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("[skip] no artifacts at {} — run `make artifacts`", dir.display());
+        return None;
+    }
+    Some(Runtime::new(dir).expect("runtime"))
+}
+
+/// Load a trained model's weights, or skip if the checkpoint is missing.
+pub fn weights_or_skip(name: &str) -> Option<ModelWeights> {
+    let dir = artifacts_dir();
+    if !dir.join(format!("weights_{name}.ntz")).exists() {
+        eprintln!("[skip] no weights for {name} — run `make artifacts`");
+        return None;
+    }
+    Some(ModelWeights::load_from_dir(name, dir).expect("weights"))
+}

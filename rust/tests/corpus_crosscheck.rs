@@ -1,0 +1,49 @@
+//! Python ↔ Rust corpus generator lock-step: the Rust mirror must reproduce
+//! the Python goldens token-for-token (the foundation of every cross-language
+//! experiment in the repo).
+
+mod common;
+
+use normtweak::calib::corpus::{c4_syn, lambada_syn, ptb_syn, token_stream, train_spec, wiki_syn};
+use normtweak::tensor::load_ntz;
+
+#[test]
+fn streams_match_python_goldens() {
+    let dir = common::artifacts_dir();
+    let path = dir.join("corpus_golden.ntz");
+    if !path.exists() {
+        eprintln!("[skip] corpus_golden.ntz missing — run `make artifacts`");
+        return;
+    }
+    let goldens = load_ntz(path).unwrap();
+    for spec in [train_spec(), wiki_syn(), ptb_syn(), c4_syn()] {
+        let golden = goldens
+            .get(&format!("golden.{}", spec.name))
+            .unwrap_or_else(|| panic!("golden for {}", spec.name));
+        let want = golden.as_i32().unwrap();
+        let got = token_stream(&spec, want.len());
+        assert_eq!(got.len(), want.len(), "{}: length mismatch", spec.name);
+        for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+            assert_eq!(g, w, "{}: divergence at token {i}", spec.name);
+        }
+    }
+}
+
+#[test]
+fn lambada_set_matches_python_golden() {
+    let dir = common::artifacts_dir();
+    let path = dir.join("lambada_syn.ntz");
+    if !path.exists() {
+        eprintln!("[skip] lambada_syn.ntz missing — run `make artifacts`");
+        return;
+    }
+    let t = load_ntz(path).unwrap();
+    let tokens = t.get("tokens").unwrap();
+    let pos = t.get("answer_pos").unwrap();
+    let n = tokens.shape[0];
+    let seq = tokens.shape[1];
+    let (got_items, got_pos) = lambada_syn(0x1A3B, n, seq);
+    assert_eq!(got_items, tokens.as_i32().unwrap());
+    let want_pos: Vec<usize> = pos.as_i32().unwrap().iter().map(|&p| p as usize).collect();
+    assert_eq!(got_pos, want_pos);
+}

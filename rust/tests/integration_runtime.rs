@@ -1,0 +1,91 @@
+//! Runtime integration: AOT artifacts load, compile, execute, and the
+//! composed Rust pipeline (embed → blocks → head) reproduces the Python
+//! golden logits — the end-to-end numeric parity proof for the whole stack.
+
+mod common;
+
+use normtweak::coordinator::FloatModel;
+use normtweak::eval::LanguageModel;
+use normtweak::tensor::{load_ntz, matmul, mean_var_channels, transpose2d, Tensor};
+
+#[test]
+fn golden_logits_parity() {
+    let Some(rt) = common::runtime_or_skip() else { return };
+    let Some(w) = common::weights_or_skip("nt-tiny") else { return };
+    let golden = load_ntz(common::artifacts_dir().join("golden_nt-tiny.ntz")).unwrap();
+    let tokens = golden.get("tokens").unwrap();
+    let want = golden.get("logits").unwrap();
+
+    let fm = FloatModel::new(&rt, &w).unwrap();
+    let got = fm.logits(tokens).unwrap();
+    assert_eq!(got.shape, want.shape);
+    let gv = got.as_f32().unwrap();
+    let wv = want.as_f32().unwrap();
+    let max_diff = gv
+        .iter()
+        .zip(wv)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(
+        max_diff < 5e-3,
+        "rust-composed logits deviate from python golden: {max_diff}"
+    );
+}
+
+#[test]
+fn channel_stats_graph_matches_cpu() {
+    let Some(rt) = common::runtime_or_skip() else { return };
+    let Some(w) = common::weights_or_skip("nt-tiny") else { return };
+    let fm = FloatModel::new(&rt, &w).unwrap();
+    let cb = rt.manifest.calib_batch;
+    let x = Tensor::randn(&[cb, w.config.seq, w.config.d_model], 3, 1.0);
+    let (mu, var) = fm.channel_stats(&x).unwrap();
+    let (mu_cpu, var_cpu) = mean_var_channels(&x).unwrap();
+    for (a, b) in mu.as_f32().unwrap().iter().zip(&mu_cpu) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+    for (a, b) in var.as_f32().unwrap().iter().zip(&var_cpu) {
+        assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn xtx_graph_matches_cpu_matmul() {
+    let Some(rt) = common::runtime_or_skip() else { return };
+    let cb = rt.manifest.calib_batch;
+    let k = 128usize; // nt-tiny d_model
+    let rows = cb * 128;
+    let x = Tensor::randn(&[rows, k], 5, 0.5);
+    let got = rt.run("nt-tiny", &format!("xtx.k{k}"), &[&x]).unwrap();
+    let want = matmul(&transpose2d(&x).unwrap(), &x).unwrap();
+    let gv = got[0].as_f32().unwrap();
+    let wv = want.as_f32().unwrap();
+    for (a, b) in gv.iter().zip(wv) {
+        assert!((a - b).abs() <= 1e-2 + 1e-4 * b.abs(), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(rt) = common::runtime_or_skip() else { return };
+    let Some(w) = common::weights_or_skip("nt-tiny") else { return };
+    let fm = FloatModel::new(&rt, &w).unwrap();
+    let toks = Tensor::i32(&[1, w.config.seq], vec![1; w.config.seq]);
+    let _ = fm.logits(&toks).unwrap();
+    let compiles_after_first = rt.stats().compiles;
+    let _ = fm.logits(&toks).unwrap();
+    assert_eq!(rt.stats().compiles, compiles_after_first, "no recompiles");
+    assert!(rt.cached() >= 3); // embed + block_fwd + head at least
+}
+
+#[test]
+fn arg_validation_catches_mistakes() {
+    let Some(rt) = common::runtime_or_skip() else { return };
+    // wrong arg count
+    let x = Tensor::zeros(&[1, 1]);
+    assert!(rt.run("nt-tiny", "channel_stats.b32", &[&x, &x]).is_err());
+    // wrong shape
+    assert!(rt.run("nt-tiny", "channel_stats.b32", &[&x]).is_err());
+    // unknown graph
+    assert!(rt.run("nt-tiny", "nope", &[&x]).is_err());
+}

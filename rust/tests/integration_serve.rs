@@ -1,0 +1,75 @@
+//! Serving loop: dynamic batching correctness under concurrent traffic.
+
+mod common;
+
+use normtweak::calib::CalibSet;
+use normtweak::coordinator::{quantize_model, PipelineConfig, QuantMethod, QuantModel};
+use normtweak::quant::QuantScheme;
+use normtweak::serve::{channel, serve_loop, ServeConfig};
+
+#[test]
+fn concurrent_requests_all_answered_and_batched() {
+    let Some(rt) = common::runtime_or_skip() else { return };
+    let Some(w) = common::weights_or_skip("nt-tiny") else { return };
+    // quick RTN quantization to get a servable model
+    let stream = normtweak::calib::corpus::token_stream(
+        &normtweak::calib::corpus::wiki_syn(),
+        rt.manifest.calib_batch * w.config.seq,
+    );
+    let calib = CalibSet::from_stream(&stream, rt.manifest.calib_batch,
+                                      w.config.seq, "wiki-syn").unwrap();
+    let cfg = PipelineConfig::new(QuantMethod::Rtn, QuantScheme::w4_perchannel());
+    let (qm, _) = quantize_model(&rt, &w, &calib, &cfg).unwrap();
+    let model = QuantModel::new(&rt, &qm).unwrap();
+
+    let (handle, rx) = channel();
+    let n_clients = 4;
+    let per_client = 6;
+    let stats = std::thread::scope(|s| {
+        for c in 0..n_clients {
+            let h = handle.clone();
+            s.spawn(move || {
+                for i in 0..per_client {
+                    let prompt = vec![1, (8 + (c * 31 + i * 7) % 150) as i32];
+                    let resp = h.submit(prompt.clone(), 8).expect("response");
+                    assert_eq!(resp.tokens.len(), prompt.len() + 8);
+                    assert_eq!(&resp.tokens[..2], &prompt[..]);
+                    assert!(resp.batch_size >= 1);
+                }
+            });
+        }
+        drop(handle);
+        serve_loop(
+            &model,
+            ServeConfig { max_batch: 8, batch_window: std::time::Duration::from_millis(20) },
+            rx,
+        )
+    })
+    .unwrap();
+
+    assert_eq!(stats.served, n_clients * per_client);
+    // with 4 concurrent clients and a 20ms window, some batching must occur
+    assert!(stats.max_batch_seen >= 2, "never batched: {stats:?}");
+    assert!(stats.batches < stats.served, "no batch ever had more than 1");
+}
+
+#[test]
+fn serve_deterministic_per_prompt() {
+    let Some(rt) = common::runtime_or_skip() else { return };
+    let Some(w) = common::weights_or_skip("nt-tiny") else { return };
+    let fm = normtweak::coordinator::FloatModel::new(&rt, &w).unwrap();
+
+    let (handle, rx) = channel();
+    let results = std::thread::scope(|s| {
+        let h = handle.clone();
+        let t = s.spawn(move || {
+            let a = h.submit(vec![1, 42], 8).unwrap();
+            let b = h.submit(vec![1, 42], 8).unwrap();
+            (a.tokens, b.tokens)
+        });
+        drop(handle);
+        serve_loop(&fm, ServeConfig::default(), rx).unwrap();
+        t.join().unwrap()
+    });
+    assert_eq!(results.0, results.1, "greedy serving must be deterministic");
+}

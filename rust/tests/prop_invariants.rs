@@ -1,0 +1,216 @@
+//! Property-based tests over the coordinator's invariants (hand-rolled
+//! generator loops over SplitMix64 — proptest is unavailable offline; each
+//! property sweeps many random cases and shrink-prints the failing seed).
+
+mod common;
+
+use normtweak::calib::rng::SplitMix64;
+use normtweak::calib::CalibSet;
+use normtweak::coordinator::pad_batch;
+use normtweak::quant::gptq::{cholesky_lower, invert_lower, GptqParams, Hessian};
+use normtweak::quant::{gptq, rtn, smoothquant, QuantScheme};
+use normtweak::tensor::{matmul, pack_codes, transpose2d, unpack_codes, Tensor};
+use normtweak::tweak::LayerLrScheduler;
+
+const CASES: usize = 50;
+
+fn rand_tensor(rng: &mut SplitMix64, shape: &[usize], scale: f32) -> Tensor {
+    Tensor::randn(shape, rng.next_u64(), scale)
+}
+
+#[test]
+fn prop_pack_unpack_roundtrip() {
+    let mut rng = SplitMix64::new(0xA11CE);
+    for case in 0..CASES {
+        let bits = [2u8, 4, 8][rng.below(3) as usize];
+        let qmax = ((1i32 << (bits - 1)) - 1) as i64;
+        let len = 1 + rng.below(300) as usize;
+        let codes: Vec<i8> = (0..len)
+            .map(|_| ((rng.below((2 * qmax + 1) as u64) as i64) - qmax) as i8)
+            .collect();
+        let packed = pack_codes(&codes, bits).unwrap();
+        assert_eq!(unpack_codes(&packed), codes, "case {case} bits {bits}");
+        // packed size is exactly ceil(len * bits / 8)
+        assert_eq!(packed.data.len(), (len * bits as usize).div_ceil(8));
+    }
+}
+
+#[test]
+fn prop_rtn_error_bounded_by_half_scale() {
+    let mut rng = SplitMix64::new(0xB0B);
+    for case in 0..CASES {
+        let k = 8 * (1 + rng.below(8)) as usize;
+        let n = 4 * (1 + rng.below(8)) as usize;
+        let bits = [2u8, 3, 4, 8][rng.below(4) as usize];
+        let group = if rng.chance(1, 2) { None } else { Some(k) };
+        let scheme = QuantScheme { bits, group_size: group };
+        let w = rand_tensor(&mut rng, &[k, n], 2.0);
+        let q = rtn::quantize(&w, &scheme).unwrap();
+        let deq = q.dequantize();
+        let wv = w.as_f32().unwrap();
+        let g = scheme.group_for(k);
+        for kk in 0..k {
+            for col in 0..n {
+                let scale = q.scales[(kk / g) * n + col];
+                let err = (wv[kk * n + col] - deq[kk * n + col]).abs();
+                assert!(
+                    err <= scale / 2.0 + 1e-5,
+                    "case {case}: err {err} > scale/2 {scale}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_gptq_identity_hessian_equals_rtn() {
+    let mut rng = SplitMix64::new(0xCAFE);
+    for case in 0..20 {
+        let k = 8 * (1 + rng.below(4)) as usize;
+        let n = 4 * (1 + rng.below(4)) as usize;
+        let w = rand_tensor(&mut rng, &[k, n], 1.0);
+        let scheme = QuantScheme::w4_perchannel();
+        let qg = gptq::quantize(&w, &Hessian::identity(k), &scheme,
+                                &GptqParams::default()).unwrap();
+        let qr = rtn::quantize(&w, &scheme).unwrap();
+        assert_eq!(qg.codes, qr.codes, "case {case}");
+    }
+}
+
+#[test]
+fn prop_cholesky_reconstructs() {
+    let mut rng = SplitMix64::new(0xD1CE);
+    for case in 0..20 {
+        let k = 2 + rng.below(12) as usize;
+        // A = B Bᵀ + k*I is symmetric positive definite
+        let b = rand_tensor(&mut rng, &[k, k], 1.0);
+        let bt = transpose2d(&b).unwrap();
+        let mut a = matmul(&b, &bt).unwrap();
+        for i in 0..k {
+            a.as_f32_mut().unwrap()[i * k + i] += k as f32;
+        }
+        let a64: Vec<f64> = a.as_f32().unwrap().iter().map(|&x| x as f64).collect();
+        let l = cholesky_lower(&a64, k).expect("PD");
+        // L Lᵀ == A
+        for i in 0..k {
+            for j in 0..k {
+                let mut s = 0.0;
+                for p in 0..k {
+                    s += l[i * k + p] * l[j * k + p];
+                }
+                assert!((s - a64[i * k + j]).abs() < 1e-3, "case {case}");
+            }
+        }
+        // L · L⁻¹ == I
+        let linv = invert_lower(&l, k);
+        for i in 0..k {
+            for j in 0..=i {
+                let mut s = 0.0;
+                for p in 0..k {
+                    s += l[i * k + p] * linv[p * k + j];
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((s - want).abs() < 1e-8, "case {case}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_smoothquant_transform_exact() {
+    let mut rng = SplitMix64::new(0xFACE);
+    for case in 0..20 {
+        let k = 4 * (1 + rng.below(6)) as usize;
+        let n = 4 * (1 + rng.below(6)) as usize;
+        let rows = 4 + rng.below(12) as usize;
+        let x = rand_tensor(&mut rng, &[rows, k], 2.0);
+        let w = rand_tensor(&mut rng, &[k, n], 1.0);
+        let mut st = smoothquant::ActStats::new(k);
+        st.update(&x).unwrap();
+        let alpha = 0.1 + 0.8 * (rng.below(100) as f32 / 100.0);
+        let s = smoothquant::smoothing_factors(&w, &st, &smoothquant::SmoothParams { alpha })
+            .unwrap();
+        let ws = smoothquant::scale_weight(&w, &s).unwrap();
+        // (x/s) @ (s*w) == x @ w
+        let xv = x.as_f32().unwrap();
+        let mut xs = vec![0.0f32; rows * k];
+        for r in 0..rows {
+            for j in 0..k {
+                xs[r * k + j] = xv[r * k + j] / s[j];
+            }
+        }
+        let y0 = matmul(&x, &w).unwrap();
+        let y1 = matmul(&Tensor::f32(&[rows, k], xs), &ws).unwrap();
+        let d = normtweak::tensor::max_abs_diff(&y0, &y1).unwrap();
+        assert!(d < 1e-3, "case {case}: {d}");
+    }
+}
+
+#[test]
+fn prop_scheduler_monotone_and_bounded() {
+    let mut rng = SplitMix64::new(0x5EED);
+    for _ in 0..CASES {
+        let lr0 = 1e-6 + (rng.below(1000) as f32) * 1e-6;
+        let scale = (rng.below(300) as f32) / 100.0;
+        let layers = 1 + rng.below(32) as usize;
+        let s = LayerLrScheduler::new(lr0, scale, layers);
+        let mut prev = 0.0;
+        for i in 0..layers {
+            let lr = s.lr(i);
+            assert!(lr >= prev);
+            assert!(lr >= lr0 && lr <= lr0 * (1.0 + scale) + 1e-12);
+            prev = lr;
+        }
+    }
+}
+
+#[test]
+fn prop_calibset_never_drops_or_duplicates() {
+    let mut rng = SplitMix64::new(0xFEED);
+    for _ in 0..CASES {
+        let n = 1 + rng.below(16) as usize;
+        let seq = 8 * (1 + rng.below(8)) as usize;
+        let stream: Vec<i32> = (0..n * seq + rng.below(64) as usize)
+            .map(|_| rng.below(2048) as i32)
+            .collect();
+        let cs = CalibSet::from_stream(&stream, n, seq, "t").unwrap();
+        assert_eq!(cs.tokens.as_i32().unwrap(), &stream[..n * seq]);
+        // too-short stream must error, not truncate silently
+        assert!(CalibSet::from_stream(&stream[..n * seq - 1], n, seq, "t").is_err());
+    }
+}
+
+#[test]
+fn prop_pad_batch_preserves_rows() {
+    let mut rng = SplitMix64::new(0xBEAD);
+    for _ in 0..CASES {
+        let b = 1 + rng.below(8) as usize;
+        let bucket = b + rng.below(8) as usize;
+        let cols = 1 + rng.below(16) as usize;
+        let t = rand_tensor(&mut rng, &[b, cols], 1.0);
+        let p = pad_batch(&t, bucket).unwrap();
+        assert_eq!(p.shape, vec![bucket, cols]);
+        assert_eq!(&p.as_f32().unwrap()[..b * cols], t.as_f32().unwrap());
+        assert!(p.as_f32().unwrap()[b * cols..].iter().all(|&x| x == 0.0));
+    }
+}
+
+#[test]
+fn prop_omniquant_never_worse_than_rtn() {
+    let mut rng = SplitMix64::new(0x0111);
+    for case in 0..20 {
+        let k = 16 * (1 + rng.below(4)) as usize;
+        let n = 4 * (1 + rng.below(4)) as usize;
+        let bits = [2u8, 3, 4][rng.below(3) as usize];
+        let scheme = QuantScheme { bits, group_size: None };
+        let w = rand_tensor(&mut rng, &[k, n], 1.5);
+        let qo = normtweak::quant::omniquant::quantize(&w, &scheme).unwrap();
+        let qr = rtn::quantize(&w, &scheme).unwrap();
+        let mse = |q: &normtweak::quant::QuantizedWeight| -> f64 {
+            let deq = q.dequantize();
+            w.as_f32().unwrap().iter().zip(&deq)
+                .map(|(a, b)| ((a - b) as f64).powi(2)).sum()
+        };
+        assert!(mse(&qo) <= mse(&qr) + 1e-9, "case {case}");
+    }
+}
