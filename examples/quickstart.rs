@@ -10,7 +10,7 @@
 //! ```
 
 use normtweak::coordinator::{build_calib, quantize_model, FloatModel, PipelineConfig,
-                             QuantMethod, QuantModel};
+                             QuantModel};
 use normtweak::eval::{lambada, ppl};
 use normtweak::model::ModelWeights;
 use normtweak::quant::QuantScheme;
@@ -43,10 +43,10 @@ fn main() -> normtweak::Result<()> {
     let scheme = QuantScheme::w4_perchannel();
     let (q_plain, m_plain) = quantize_model(
         &runtime, &weights, &calib,
-        &PipelineConfig::new(QuantMethod::Gptq, scheme))?;
+        &PipelineConfig::new("gptq", scheme))?;
     let (q_nt, m_nt) = quantize_model(
         &runtime, &weights, &calib,
-        &PipelineConfig::new(QuantMethod::Gptq, scheme).with_tweak(TweakConfig::default()))?;
+        &PipelineConfig::new("gptq", scheme).with_tweak(TweakConfig::default()))?;
     println!(
         "\nquantized twice: GPTQ {}s, GPTQ+NT {}s ({}x weight compression)",
         f2(m_plain.total_millis as f32 / 1000.0),

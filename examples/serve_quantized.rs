@@ -8,7 +8,7 @@
 use std::time::Instant;
 
 use normtweak::calib::CalibSet;
-use normtweak::coordinator::{quantize_model, PipelineConfig, QuantMethod, QuantModel};
+use normtweak::coordinator::{quantize_model, PipelineConfig, QuantModel};
 use normtweak::model::ModelWeights;
 use normtweak::quant::QuantScheme;
 use normtweak::runtime::Runtime;
@@ -33,7 +33,7 @@ fn main() -> normtweak::Result<()> {
     );
     let calib = CalibSet::from_stream(&stream, runtime.manifest.calib_batch,
                                       weights.config.seq, "wiki-syn")?;
-    let cfg = PipelineConfig::new(QuantMethod::Gptq, QuantScheme::w4_perchannel())
+    let cfg = PipelineConfig::new("gptq", QuantScheme::w4_perchannel())
         .with_tweak(TweakConfig::default());
     eprintln!("quantizing {model} for serving...");
     let (qm, _) = quantize_model(&runtime, &weights, &calib, &cfg)?;

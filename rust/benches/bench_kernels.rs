@@ -49,7 +49,7 @@ fn main() {
         let calib = normtweak::calib::CalibSet::from_stream(
             &stream, rt.manifest.calib_batch, cfg.seq, "wiki-syn").unwrap();
         let pcfg = normtweak::coordinator::PipelineConfig::new(
-            normtweak::coordinator::QuantMethod::Rtn, QuantScheme::w4_perchannel());
+            "rtn", QuantScheme::w4_perchannel());
         let (qm, _) =
             normtweak::coordinator::quantize_model(&rt, &w, &calib, &pcfg).unwrap();
         let qr = QuantModel::new(&rt, &qm).unwrap();

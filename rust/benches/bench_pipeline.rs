@@ -5,7 +5,7 @@
 use std::time::Instant;
 
 use normtweak::calib::CalibSet;
-use normtweak::coordinator::{quantize_model, PipelineConfig, QuantMethod};
+use normtweak::coordinator::{quantize_model, PipelineConfig};
 use normtweak::model::ModelWeights;
 use normtweak::quant::QuantScheme;
 use normtweak::runtime::Runtime;
@@ -32,12 +32,12 @@ fn main() {
                                           w.config.seq, "wiki-syn").unwrap();
 
         // warm the executable cache so we time the pipeline, not compilation
-        let warm = PipelineConfig::new(QuantMethod::Gptq, QuantScheme::w4_perchannel())
+        let warm = PipelineConfig::new("gptq", QuantScheme::w4_perchannel())
             .with_tweak(TweakConfig::default());
         quantize_model(&rt, &w, &calib, &warm).unwrap();
 
         let t0 = Instant::now();
-        let cfg = PipelineConfig::new(QuantMethod::Gptq, QuantScheme::w4_perchannel());
+        let cfg = PipelineConfig::new("gptq", QuantScheme::w4_perchannel());
         quantize_model(&rt, &w, &calib, &cfg).unwrap();
         let plain = t0.elapsed();
 

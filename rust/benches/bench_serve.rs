@@ -5,7 +5,7 @@
 use std::time::{Duration, Instant};
 
 use normtweak::calib::CalibSet;
-use normtweak::coordinator::{quantize_model, PipelineConfig, QuantMethod, QuantModel};
+use normtweak::coordinator::{quantize_model, PipelineConfig, QuantModel};
 use normtweak::model::ModelWeights;
 use normtweak::quant::QuantScheme;
 use normtweak::runtime::Runtime;
@@ -59,7 +59,7 @@ fn main() {
     );
     let calib = CalibSet::from_stream(&stream, rt.manifest.calib_batch,
                                       w.config.seq, "wiki-syn").unwrap();
-    let cfg = PipelineConfig::new(QuantMethod::Rtn, QuantScheme::w4_perchannel());
+    let cfg = PipelineConfig::new("rtn", QuantScheme::w4_perchannel());
     let (qm, _) = quantize_model(&rt, &w, &calib, &cfg).unwrap();
     let model = QuantModel::new(&rt, &qm).unwrap();
 

@@ -3,7 +3,7 @@
 //! Requires `make artifacts`.
 
 use normtweak::calib::CalibSet;
-use normtweak::coordinator::{quantize_model, FloatModel, PipelineConfig, QuantMethod};
+use normtweak::coordinator::{quantize_model, FloatModel, PipelineConfig};
 use normtweak::model::ModelWeights;
 use normtweak::quant::QuantScheme;
 use normtweak::runtime::Runtime;
@@ -33,7 +33,7 @@ fn main() {
     );
     let calib = CalibSet::from_stream(&stream, rt.manifest.calib_batch,
                                       cfg.seq, "wiki-syn").unwrap();
-    let pcfg = PipelineConfig::new(QuantMethod::Gptq, QuantScheme::w4_perchannel());
+    let pcfg = PipelineConfig::new("gptq", QuantScheme::w4_perchannel());
     let (qm, _) = quantize_model(&rt, &w, &calib, &pcfg).unwrap();
 
     let fm = FloatModel::new(&rt, &w).unwrap();

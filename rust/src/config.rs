@@ -6,10 +6,13 @@
 //! artifacts = "artifacts"
 //!
 //! [quant]
-//! method = "gptq"          # rtn | gptq | smoothquant | awq | omniquant
+//! method = "gptq"          # any registered quantizer plugin, or a
+//!                          # composition: "smoothquant+gptq" (see
+//!                          # `normtweak help` for the registry table)
 //! bits = 4
 //! group = 0                # 0 = per-channel
 //! act_bits = 0             # 0 = float activations
+//! layer_bits = ["0:8"]     # per-layer bit overrides, "layer:bits"
 //!
 //! [tweak]
 //! enabled = true
@@ -28,8 +31,8 @@
 //! tasks = []
 //! ```
 
-use crate::coordinator::QuantMethod;
 use crate::error::{Error, Result};
+use crate::quant::quantizer::validate_spec;
 use crate::quant::QuantScheme;
 use crate::tweak::tweaker::LossKind;
 use crate::tweak::TweakConfig;
@@ -47,6 +50,8 @@ pub struct QuantSection {
     pub bits: u8,
     pub group: usize,
     pub act_bits: u8,
+    /// Per-layer bit-width overrides as `"layer:bits"` entries.
+    pub layer_bits: Vec<String>,
 }
 
 #[derive(Debug, Clone)]
@@ -87,7 +92,13 @@ impl Default for Config {
     fn default() -> Self {
         Config {
             run: RunSection { model: "nt-small".into(), artifacts: "artifacts".into() },
-            quant: QuantSection { method: "gptq".into(), bits: 4, group: 0, act_bits: 0 },
+            quant: QuantSection {
+                method: "gptq".into(),
+                bits: 4,
+                group: 0,
+                act_bits: 0,
+                layer_bits: vec![],
+            },
             tweak: TweakSection {
                 enabled: true,
                 iters: 4,
@@ -119,6 +130,7 @@ impl Config {
         if let Some(v) = gu("quant", "bits") { c.quant.bits = v as u8; }
         if let Some(v) = gu("quant", "group") { c.quant.group = v; }
         if let Some(v) = gu("quant", "act_bits") { c.quant.act_bits = v as u8; }
+        if let Some(v) = ga("quant", "layer_bits") { c.quant.layer_bits = v; }
         if let Some(v) = gb("tweak", "enabled") { c.tweak.enabled = v; }
         if let Some(v) = gu("tweak", "iters") { c.tweak.iters = v; }
         if let Some(v) = gf("tweak", "lr0") { c.tweak.lr0 = v; }
@@ -138,15 +150,32 @@ impl Config {
         Self::from_toml(&std::fs::read_to_string(path)?)
     }
 
-    pub fn method(&self) -> Result<QuantMethod> {
-        Ok(match self.quant.method.as_str() {
-            "rtn" => QuantMethod::Rtn,
-            "gptq" => QuantMethod::Gptq,
-            "smoothquant" => QuantMethod::SmoothQuant,
-            "awq" => QuantMethod::Awq,
-            "omniquant" => QuantMethod::OmniQuant,
-            other => return Err(Error::Config(format!("unknown method {other}"))),
-        })
+    /// Validate the method spec against the quantizer registry and return
+    /// its canonical name (compositions like `"smoothquant+gptq"` included).
+    pub fn method(&self) -> Result<String> {
+        validate_spec(&self.quant.method)
+    }
+
+    /// Parse `layer_bits` overrides into per-layer schemes sharing the base
+    /// scheme's group grain.
+    pub fn layer_schemes(&self) -> Result<Vec<(usize, QuantScheme)>> {
+        let base = self.scheme();
+        let mut out = Vec::new();
+        for spec in &self.quant.layer_bits {
+            let (l, b) = spec.split_once(':').ok_or_else(|| {
+                Error::Config(format!(
+                    "layer_bits entry `{spec}` must be `layer:bits`, e.g. \"0:8\""
+                ))
+            })?;
+            let layer: usize = l.trim().parse().map_err(|_| {
+                Error::Config(format!("bad layer index in layer_bits entry `{spec}`"))
+            })?;
+            let bits: u8 = b.trim().parse().map_err(|_| {
+                Error::Config(format!("bad bit width in layer_bits entry `{spec}`"))
+            })?;
+            out.push((layer, QuantScheme { bits, group_size: base.group_size }));
+        }
+        Ok(out)
     }
 
     pub fn scheme(&self) -> QuantScheme {
@@ -187,10 +216,11 @@ mod tests {
     fn defaults_parse() {
         let c = Config::from_toml("").unwrap();
         assert_eq!(c.run.model, "nt-small");
-        assert_eq!(c.method().unwrap(), QuantMethod::Gptq);
+        assert_eq!(c.method().unwrap(), "gptq");
         assert!(c.tweak_config().unwrap().is_some());
         assert_eq!(c.scheme().bits, 4);
         assert!(c.act_bits().is_none());
+        assert!(c.layer_schemes().unwrap().is_empty());
     }
 
     #[test]
@@ -214,7 +244,7 @@ mod tests {
         )
         .unwrap();
         assert_eq!(c.run.model, "nt-tiny");
-        assert_eq!(c.method().unwrap(), QuantMethod::SmoothQuant);
+        assert_eq!(c.method().unwrap(), "smoothquant");
         assert_eq!(c.scheme().group_size, Some(64));
         assert_eq!(c.act_bits(), Some(8));
         assert!(c.tweak_config().unwrap().is_none());
@@ -228,5 +258,27 @@ mod tests {
         assert!(c.method().is_err());
         let c = Config::from_toml("[tweak]\nloss = \"zap\"").unwrap();
         assert!(c.tweak_config().is_err());
+    }
+
+    #[test]
+    fn composed_method_validates() {
+        let c = Config::from_toml("[quant]\nmethod = \"smoothquant+gptq\"").unwrap();
+        assert_eq!(c.method().unwrap(), "smoothquant+gptq");
+        let c = Config::from_toml("[quant]\nmethod = \"smoothquant+zap\"").unwrap();
+        assert!(c.method().is_err());
+    }
+
+    #[test]
+    fn layer_bits_parse_and_reject() {
+        let c = Config::from_toml(
+            "[quant]\nbits = 2\ngroup = 64\nlayer_bits = [\"0:8\", \"3:4\"]",
+        )
+        .unwrap();
+        let overrides = c.layer_schemes().unwrap();
+        assert_eq!(overrides.len(), 2);
+        assert_eq!(overrides[0], (0, QuantScheme { bits: 8, group_size: Some(64) }));
+        assert_eq!(overrides[1], (3, QuantScheme { bits: 4, group_size: Some(64) }));
+        let c = Config::from_toml("[quant]\nlayer_bits = [\"zap\"]").unwrap();
+        assert!(c.layer_schemes().is_err());
     }
 }

@@ -179,7 +179,7 @@ impl<'rt, 'q> QuantModel<'rt, 'q> {
         &self.model.config.name
     }
 
-    fn group_tag(&self) -> &'static str {
+    fn group_tag(&self) -> String {
         self.model.scheme.group_tag()
     }
 

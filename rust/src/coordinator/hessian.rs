@@ -1,13 +1,39 @@
-//! GPTQ Hessian collection: tap the four linear-layer inputs of a block on
-//! the (quantized-stream) calibration batch and accumulate `2 XᵀX` via the
-//! AOT `xtx` graph — the Gram matmul stays inside XLA.
+//! GPTQ Hessian collection: accumulate `2 XᵀX` Gram matrices of the linear
+//! inputs. The quantizer plugin API requests these lazily per linear through
+//! `LayerContext::take_hessian`, which routes here — via the AOT `xtx` graph
+//! when a runtime is live, or a CPU matmul for offline/test contexts.
 
 use crate::error::Result;
 use crate::quant::gptq::Hessian;
 use crate::runtime::Runtime;
-use crate::tensor::Tensor;
+use crate::tensor::{matmul, transpose2d, Tensor};
 
 use super::forward::FloatModel;
+
+/// Hessian of one flattened `[rows, K]` activation tap through the AOT
+/// `xtx` graph — the Gram matmul stays inside XLA.
+pub fn hessian_from_tap(runtime: &Runtime, model: &str, flat: &Tensor) -> Result<Hessian> {
+    let rows = flat.shape[0];
+    let k = flat.shape[1];
+    let xtx = runtime
+        .run(model, &format!("xtx.k{k}"), &[flat])?
+        .into_iter()
+        .next()
+        .unwrap();
+    let mut h = Hessian::new(k);
+    h.accumulate(&xtx, rows)?;
+    Ok(h)
+}
+
+/// CPU fallback for contexts without a runtime (registry parity tests).
+pub fn hessian_from_tap_cpu(flat: &Tensor) -> Result<Hessian> {
+    let rows = flat.shape[0];
+    let k = flat.shape[1];
+    let xtx = matmul(&transpose2d(flat)?, flat)?;
+    let mut h = Hessian::new(k);
+    h.accumulate(&xtx, rows)?;
+    Ok(h)
+}
 
 /// Hessians for (wqkv, wproj, wfc1, wfc2) of one layer, from the current
 /// quantized-stream input `x_q`.
@@ -24,14 +50,7 @@ pub fn collect_hessians(
         let k = *tap.shape.last().unwrap();
         let rows: usize = tap.numel() / k;
         let flat = tap.clone().reshape(&[rows, k])?;
-        let xtx = runtime
-            .run(model, &format!("xtx.k{k}"), &[&flat])?
-            .into_iter()
-            .next()
-            .unwrap();
-        let mut h = Hessian::new(k);
-        h.accumulate(&xtx, rows)?;
-        out.push(h);
+        out.push(hessian_from_tap(runtime, model, &flat)?);
     }
     Ok(out.try_into().expect("4 taps"))
 }

@@ -2,9 +2,10 @@
 //!
 //! The coordinator owns the two activation streams over the calibration
 //! batch — float (`fOut`) and quantized (`qOut`) — and advances them one
-//! transformer layer at a time: quantize layer *l* (RTN/GPTQ/SmoothQuant/
-//! AWQ/OmniQuant), optionally norm-tweak it against the float stream's
-//! channel statistics, then feed `qOut_l` forward (Algorithm 1 line 6).
+//! transformer layer at a time: quantize layer *l* through the resolved
+//! `Quantizer` plugin (`crate::quant::quantizer`), optionally norm-tweak it
+//! against the float stream's channel statistics, then feed `qOut_l`
+//! forward (Algorithm 1 line 6).
 
 mod forward;
 mod hessian;
@@ -12,9 +13,9 @@ mod metrics;
 mod pipeline;
 
 pub use forward::{pad_batch, FloatModel, QuantModel};
-pub use hessian::collect_hessians;
+pub use hessian::{collect_hessians, hessian_from_tap, hessian_from_tap_cpu};
 pub use metrics::{LayerMetrics, PipelineMetrics};
-pub use pipeline::{quantize_model, PipelineConfig, QuantMethod};
+pub use pipeline::{quantize_model, PipelineConfig};
 
 use crate::calib::corpus::spec_by_name;
 use crate::calib::gen::{generate_calib, GenVariant};

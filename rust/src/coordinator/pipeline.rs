@@ -1,65 +1,52 @@
 //! Algorithm 1 — the layer-by-layer PTQ + Norm-Tweaking pipeline.
+//!
+//! The host PTQ method is a [`Quantizer`] plugin resolved from
+//! `PipelineConfig::method` through the string-keyed registry
+//! (`crate::quant::quantizer`); the pipeline itself is method-agnostic — it
+//! builds a [`LayerContext`] per block and lets the plugin pull whatever
+//! side inputs it declares (Hessians, activation taps, norm folds).
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use crate::calib::CalibSet;
 use crate::error::{Error, Result};
 use crate::model::{ModelWeights, QuantLinear, QuantizedBlock, QuantizedModel};
-use crate::quant::{awq, gptq, omniquant, rtn, smoothquant, QuantScheme, QuantizedWeight};
+use crate::quant::quantizer::{resolve, LayerContext, Quantizer, QuantizerParams};
+use crate::quant::{QuantScheme, QuantizedWeight};
 use crate::runtime::Runtime;
 use crate::tensor::{mean_var_channels, pack_codes, Tensor};
 use crate::tweak::tweaker::{LossKind, TweakTarget};
 use crate::tweak::{LayerLrScheduler, TweakConfig, Tweaker};
 
 use super::forward::{FloatModel, QuantModel};
-use super::hessian::collect_hessians;
 use super::metrics::{LayerMetrics, PipelineMetrics};
-
-/// Which PTQ algorithm hosts the (optional) norm tweaking.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum QuantMethod {
-    Rtn,
-    Gptq,
-    /// SmoothQuant: outlier migration folded into the preceding norms, then
-    /// RTN weights; pair with `act_bits` at eval time for W4A8.
-    SmoothQuant,
-    /// AWQ-lite: activation-aware scaling on the norm-fed linears.
-    Awq,
-    /// OmniQuant-lite: grid-searched weight clipping.
-    OmniQuant,
-}
-
-impl QuantMethod {
-    pub fn as_str(&self) -> &'static str {
-        match self {
-            QuantMethod::Rtn => "rtn",
-            QuantMethod::Gptq => "gptq",
-            QuantMethod::SmoothQuant => "smoothquant",
-            QuantMethod::Awq => "awq",
-            QuantMethod::OmniQuant => "omniquant",
-        }
-    }
-}
 
 /// Full pipeline configuration.
 #[derive(Debug, Clone)]
 pub struct PipelineConfig {
-    pub method: QuantMethod,
+    /// Quantizer spec resolved through the plugin registry: any registered
+    /// name, or a `+`-composition such as `"smoothquant+gptq"`.
+    pub method: String,
     pub scheme: QuantScheme,
     /// None = plain PTQ; Some = PTQ + Norm Tweaking
     pub tweak: Option<TweakConfig>,
-    pub gptq: gptq::GptqParams,
-    pub smooth_alpha: f32,
+    /// Tunables handed to plugin constructors (GPTQ damping, smooth alpha).
+    pub params: QuantizerParams,
+    /// Per-layer scheme overrides (mixed precision). Overrides must share
+    /// the base scheme's group grain — the AOT forward graphs are compiled
+    /// per grain — but may change the bit width freely.
+    pub layer_schemes: BTreeMap<usize, QuantScheme>,
 }
 
 impl PipelineConfig {
-    pub fn new(method: QuantMethod, scheme: QuantScheme) -> Self {
+    pub fn new(method: impl Into<String>, scheme: QuantScheme) -> Self {
         PipelineConfig {
-            method,
+            method: method.into(),
             scheme,
             tweak: None,
-            gptq: gptq::GptqParams::default(),
-            smooth_alpha: 0.5,
+            params: QuantizerParams::default(),
+            layer_schemes: BTreeMap::new(),
         }
     }
 
@@ -67,13 +54,46 @@ impl PipelineConfig {
         self.tweak = Some(t);
         self
     }
+
+    /// Override the quantization scheme for one layer (mixed precision).
+    pub fn with_layer_scheme(mut self, layer: usize, scheme: QuantScheme) -> Self {
+        self.layer_schemes.insert(layer, scheme);
+        self
+    }
+
+    /// The scheme in effect for `layer`.
+    pub fn scheme_for(&self, layer: usize) -> QuantScheme {
+        self.layer_schemes.get(&layer).copied().unwrap_or(self.scheme)
+    }
+
+    fn validate(&self, n_layer: usize) -> Result<()> {
+        let base_tag = self.scheme.group_tag();
+        for (&layer, s) in &self.layer_schemes {
+            if layer >= n_layer {
+                return Err(Error::Config(format!(
+                    "layer scheme override for layer {layer}, model has {n_layer}"
+                )));
+            }
+            if s.group_tag() != base_tag {
+                return Err(Error::Config(format!(
+                    "layer {layer} scheme grain {} != base grain {base_tag} \
+                     (forward graphs are compiled per grain)",
+                    s.group_tag()
+                )));
+            }
+            s.pack_bits()?;
+        }
+        self.scheme.pack_bits()?;
+        Ok(())
+    }
 }
 
 fn to_quant_linear(qw: QuantizedWeight, bias: Tensor, scheme: &QuantScheme) -> Result<QuantLinear> {
+    let bits = scheme.pack_bits()?;
     Ok(QuantLinear {
         k: qw.k,
         n: qw.n,
-        packed: pack_codes(&qw.codes, scheme.pack_bits())
+        packed: pack_codes(&qw.codes, bits)
             .map_err(|e| Error::Quant(format!("pack: {e}")))?,
         scales: Tensor::f32(&[qw.g, qw.n], qw.scales),
         bias,
@@ -97,11 +117,13 @@ pub fn quantize_model(
             calib.n_samples()
         )));
     }
+    cfg.validate(mcfg.n_layer)?;
+    let quantizer: Box<dyn Quantizer> = resolve(&cfg.method, &cfg.params)?;
 
     let fm = FloatModel::new(runtime, weights)?;
     let mut qmodel = QuantizedModel::scaffold(weights, cfg.scheme)?;
     let tweaker = cfg.tweak.map(|t| {
-        Tweaker::new(runtime, &mcfg.name, cfg.scheme.group_tag(), t)
+        Tweaker::new(runtime, &mcfg.name, &cfg.scheme.group_tag(), t)
     });
     let lr_sched = cfg
         .tweak
@@ -109,7 +131,7 @@ pub fn quantize_model(
 
     let mut metrics = PipelineMetrics {
         model: mcfg.name.clone(),
-        method: cfg.method.as_str().to_string(),
+        method: quantizer.name().to_string(),
         bits: cfg.scheme.bits,
         group: cfg.scheme.group_size,
         tweaked: cfg.tweak.is_some(),
@@ -123,112 +145,31 @@ pub fn quantize_model(
 
     for layer in 0..mcfg.n_layer {
         let t_layer = Instant::now();
+        let scheme = cfg.scheme_for(layer);
 
         // ---- float output + targets (Alg. 1 line 8) -------------------------
         let y_f = fm.block_fwd(layer, &x_f)?;
         let (mu_f, var_f) = fm.channel_stats(&y_f)?;
 
         // ---- quantize the four linears (Alg. 1 line 9) ----------------------
+        // One trait call replaces the per-method dispatch: the plugin pulls
+        // taps/Hessians lazily and folds norm scales through the context.
         let bw = weights.block(layer)?;
-        let mut ln1_g = bw.ln1_g.clone();
-        let mut ln1_b = bw.ln1_b.cloned();
-        let mut ln2_g = bw.ln2_g.clone();
-        let mut ln2_b = bw.ln2_b.cloned();
-
-        let (qqkv, qproj, qfc1, qfc2) = match cfg.method {
-            QuantMethod::Rtn => (
-                rtn::quantize(bw.wqkv, &cfg.scheme)?,
-                rtn::quantize(bw.wproj, &cfg.scheme)?,
-                rtn::quantize(bw.wfc1, &cfg.scheme)?,
-                rtn::quantize(bw.wfc2, &cfg.scheme)?,
-            ),
-            QuantMethod::OmniQuant => (
-                omniquant::quantize(bw.wqkv, &cfg.scheme)?,
-                omniquant::quantize(bw.wproj, &cfg.scheme)?,
-                omniquant::quantize(bw.wfc1, &cfg.scheme)?,
-                omniquant::quantize(bw.wfc2, &cfg.scheme)?,
-            ),
-            QuantMethod::Gptq => {
-                let hs = collect_hessians(&fm, runtime, layer, &x_q)?;
-                (
-                    gptq::quantize(bw.wqkv, &hs[0], &cfg.scheme, &cfg.gptq)?,
-                    gptq::quantize(bw.wproj, &hs[1], &cfg.scheme, &cfg.gptq)?,
-                    gptq::quantize(bw.wfc1, &hs[2], &cfg.scheme, &cfg.gptq)?,
-                    gptq::quantize(bw.wfc2, &hs[3], &cfg.scheme, &cfg.gptq)?,
-                )
-            }
-            QuantMethod::SmoothQuant => {
-                // taps give the activation ranges feeding each linear
-                let taps = fm.block_taps(layer, &x_q)?;
-                let mk_stats = |t: &Tensor| -> Result<smoothquant::ActStats> {
-                    let k = *t.shape.last().unwrap();
-                    let mut st = smoothquant::ActStats::new(k);
-                    st.update(&t.clone().reshape(&[t.numel() / k, k])?)?;
-                    Ok(st)
-                };
-                let sp = smoothquant::SmoothParams { alpha: cfg.smooth_alpha };
-                // migrate the norm-fed linears (qkv via ln1, fc1 via ln2)
-                let s_qkv = smoothquant::smoothing_factors(bw.wqkv, &mk_stats(&taps[0])?, &sp)?;
-                let w_qkv = smoothquant::scale_weight(bw.wqkv, &s_qkv)?;
-                let (g1, b1) = smoothquant::fold_into_norm(&ln1_g, ln1_b.as_ref(), &s_qkv)?;
-                ln1_g = g1;
-                ln1_b = b1;
-                let s_fc1 = smoothquant::smoothing_factors(bw.wfc1, &mk_stats(&taps[2])?, &sp)?;
-                let w_fc1 = smoothquant::scale_weight(bw.wfc1, &s_fc1)?;
-                let (g2, b2) = smoothquant::fold_into_norm(&ln2_g, ln2_b.as_ref(), &s_fc1)?;
-                ln2_g = g2;
-                ln2_b = b2;
-                (
-                    rtn::quantize(&w_qkv, &cfg.scheme)?,
-                    rtn::quantize(bw.wproj, &cfg.scheme)?,
-                    rtn::quantize(&w_fc1, &cfg.scheme)?,
-                    rtn::quantize(bw.wfc2, &cfg.scheme)?,
-                )
-            }
-            QuantMethod::Awq => {
-                let taps = fm.block_taps(layer, &x_q)?;
-                let mk = |t: &Tensor| -> Result<(smoothquant::ActStats, Tensor)> {
-                    let k = *t.shape.last().unwrap();
-                    let flat = t.clone().reshape(&[t.numel() / k, k])?;
-                    let mut st = smoothquant::ActStats::new(k);
-                    st.update(&flat)?;
-                    // subsample rows for the grid-search objective
-                    let rows = flat.shape[0].min(64);
-                    let v = flat.as_f32()?[..rows * k].to_vec();
-                    Ok((st, Tensor::f32(&[rows, k], v)))
-                };
-                let (st_qkv, xs_qkv) = mk(&taps[0])?;
-                let r_qkv = awq::quantize(bw.wqkv, &st_qkv, &xs_qkv, &cfg.scheme)?;
-                let (g1, b1) =
-                    smoothquant::fold_into_norm(&ln1_g, ln1_b.as_ref(), &r_qkv.in_scales)?;
-                ln1_g = g1;
-                ln1_b = b1;
-                let (st_fc1, xs_fc1) = mk(&taps[2])?;
-                let r_fc1 = awq::quantize(bw.wfc1, &st_fc1, &xs_fc1, &cfg.scheme)?;
-                let (g2, b2) =
-                    smoothquant::fold_into_norm(&ln2_g, ln2_b.as_ref(), &r_fc1.in_scales)?;
-                ln2_g = g2;
-                ln2_b = b2;
-                (
-                    r_qkv.qw,
-                    rtn::quantize(bw.wproj, &cfg.scheme)?,
-                    r_fc1.qw,
-                    rtn::quantize(bw.wfc2, &cfg.scheme)?,
-                )
-            }
-        };
+        let mut ctx = LayerContext::new(&fm, layer, &x_q, bw, scheme);
+        let bq = quantizer.quantize_layer(&mut ctx)?;
+        let norms = ctx.into_norms();
         let quant_millis = t_layer.elapsed().as_millis();
 
         // ---- assemble the quantized block (Alg. 1 line 10: freeze linears) --
         let mut blk = QuantizedBlock {
-            ln1_g,
-            ln1_b,
-            qkv: to_quant_linear(qqkv, bw.bqkv.clone(), &cfg.scheme)?,
-            proj: to_quant_linear(qproj, bw.bproj.clone(), &cfg.scheme)?,
-            ln2_g,
-            ln2_b,
-            fc1: to_quant_linear(qfc1, bw.bfc1.clone(), &cfg.scheme)?,
-            fc2: to_quant_linear(qfc2, bw.bfc2.clone(), &cfg.scheme)?,
+            ln1_g: norms.ln1_g,
+            ln1_b: norms.ln1_b,
+            qkv: to_quant_linear(bq.qkv, bw.bqkv.clone(), &scheme)?,
+            proj: to_quant_linear(bq.proj, bw.bproj.clone(), &scheme)?,
+            ln2_g: norms.ln2_g,
+            ln2_b: norms.ln2_b,
+            fc1: to_quant_linear(bq.fc1, bw.bfc1.clone(), &scheme)?,
+            fc2: to_quant_linear(bq.fc2, bw.bfc2.clone(), &scheme)?,
         };
 
         // ---- norm tweaking (Alg. 1 lines 11-15) ------------------------------
@@ -296,4 +237,31 @@ pub fn quantize_model(
     metrics.compression_ratio =
         qmodel.quantized_bytes() as f32 / qmodel.float_bytes() as f32;
     Ok((qmodel, metrics))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_for_prefers_override() {
+        let cfg = PipelineConfig::new("rtn", QuantScheme::w2_g64())
+            .with_layer_scheme(1, QuantScheme::w3_g64());
+        assert_eq!(cfg.scheme_for(0), QuantScheme::w2_g64());
+        assert_eq!(cfg.scheme_for(1), QuantScheme::w3_g64());
+        assert_eq!(cfg.scheme_for(2), QuantScheme::w2_g64());
+    }
+
+    #[test]
+    fn validate_rejects_mixed_grain_and_bad_layers() {
+        let cfg = PipelineConfig::new("rtn", QuantScheme::w2_g64())
+            .with_layer_scheme(0, QuantScheme::w4_perchannel());
+        assert!(cfg.validate(4).is_err()); // pc grain under a g64 base
+        let cfg = PipelineConfig::new("rtn", QuantScheme::w2_g64())
+            .with_layer_scheme(9, QuantScheme::w3_g64());
+        assert!(cfg.validate(4).is_err()); // layer out of range
+        let cfg = PipelineConfig::new("rtn", QuantScheme::w2_g64())
+            .with_layer_scheme(3, QuantScheme::w3_g64());
+        assert!(cfg.validate(4).is_ok());
+    }
 }

@@ -9,9 +9,10 @@
 //! * **L2** — JAX graphs (`python/compile/model.py`), AOT-lowered to HLO text
 //!   artifacts consumed by the Rust runtime.
 //! * **L3** — this crate: the quantization pipeline coordinator (Algorithm 1
-//!   of the paper), quantization substrates (RTN / GPTQ / SmoothQuant /
-//!   AWQ-lite / OmniQuant-lite), calibration-data generation, the norm-tweak
-//!   engine, and the evaluation harness.
+//!   of the paper), the open `Quantizer` plugin registry (RTN / GPTQ /
+//!   SmoothQuant / AWQ-lite / OmniQuant-lite, plus `+`-compositions like
+//!   `smoothquant+gptq` — see `quant::quantizer`), calibration-data
+//!   generation, the norm-tweak engine, and the evaluation harness.
 //!
 //! Python never runs on the request path: `make artifacts` lowers all compute
 //! graphs once; the Rust binary is self-contained afterwards.

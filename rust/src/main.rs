@@ -15,15 +15,38 @@ use normtweak::report::{f2, f4, save_record, Table};
 use normtweak::runtime::Runtime;
 use normtweak::Config;
 
+/// Flags every subcommand accepts.
+const GLOBAL_FLAGS: &[&str] = &["config", "model", "artifacts"];
+
+/// Per-command flag allowlist; None = unknown command.
+fn allowed_flags(cmd: &str) -> Option<&'static [&'static str]> {
+    match cmd {
+        "quantize" => Some(&["method", "bits", "group", "layer-bits", "no-tweak",
+                             "calib", "out"]),
+        "eval" => Some(&["checkpoint", "float", "ppl", "tasks"]),
+        "generate" => Some(&["n", "len"]),
+        "serve" => Some(&["checkpoint", "requests", "clients"]),
+        "help" | "--help" => Some(&[]),
+        _ => None,
+    }
+}
+
 /// Tiny flag parser: `--key value` pairs + a leading subcommand.
+/// Strict: positional stragglers and flags outside the command's allowlist
+/// are rejected with a pointer at `normtweak help` instead of being
+/// silently dropped.
 struct Args {
     cmd: String,
     flags: std::collections::HashMap<String, String>,
 }
 
 impl Args {
-    fn parse() -> Self {
-        let mut argv = std::env::args().skip(1);
+    fn parse() -> normtweak::Result<Self> {
+        Self::from_iter(std::env::args().skip(1))
+    }
+
+    fn from_iter(argv: impl Iterator<Item = String>) -> normtweak::Result<Self> {
+        let mut argv = argv;
         let cmd = argv.next().unwrap_or_else(|| "help".to_string());
         let mut flags = std::collections::HashMap::new();
         let mut key: Option<String> = None;
@@ -36,12 +59,35 @@ impl Args {
                 key = Some(k.to_string());
             } else if let Some(k) = key.take() {
                 flags.insert(k, a);
+            } else {
+                return Err(normtweak::Error::Config(format!(
+                    "unexpected positional argument `{a}` (flags are `--key value`); \
+                     see `normtweak help`"
+                )));
             }
         }
         if let Some(prev) = key.take() {
             flags.insert(prev, "true".to_string());
         }
-        Args { cmd, flags }
+        let args = Args { cmd, flags };
+        args.validate()?;
+        Ok(args)
+    }
+
+    fn validate(&self) -> normtweak::Result<()> {
+        let Some(allowed) = allowed_flags(&self.cmd) else {
+            // unknown command: reported (with help) by the dispatch below
+            return Ok(());
+        };
+        for k in self.flags.keys() {
+            if !allowed.contains(&k.as_str()) && !GLOBAL_FLAGS.contains(&k.as_str()) {
+                return Err(normtweak::Error::Config(format!(
+                    "unknown flag `--{k}` for `normtweak {}`; see `normtweak help`",
+                    self.cmd
+                )));
+            }
+        }
+        Ok(())
     }
 
     fn get(&self, k: &str) -> Option<&str> {
@@ -65,13 +111,26 @@ const HELP: &str = "normtweak — Norm Tweaking PTQ (AAAI 2024 reproduction)
 
 USAGE:
   normtweak quantize [--config cfg.toml] [--model M] [--method gptq] [--bits 4]
-                     [--group 0] [--no-tweak] [--calib gen-v2] [--out path]
+                     [--group 0] [--layer-bits 0:8,11:8] [--no-tweak]
+                     [--calib gen-v2] [--out path]
   normtweak eval     [--checkpoint path | --float] [--model M]
                      [--ppl wiki-syn,c4-syn] [--tasks hellaswag-syn,...]
   normtweak generate [--model M] [--n 4] [--len 48]
   normtweak serve    [--checkpoint path] [--requests 64] [--clients 4]
   normtweak help
 ";
+
+/// The `--method` registry table, rendered from the live plugin registry.
+fn print_method_table() {
+    println!("METHODS (--method; compose stages with `+`, e.g. smoothquant+gptq):");
+    for r in normtweak::quant::registry() {
+        println!("  {:<14} {}", r.name, r.summary);
+    }
+    println!(
+        "  a+b            run a's preprocessing, then quantize with b \
+         (any registered names)"
+    );
+}
 
 fn main() {
     if let Err(e) = run() {
@@ -81,9 +140,11 @@ fn main() {
 }
 
 fn run() -> normtweak::Result<()> {
-    let args = Args::parse();
+    let args = Args::parse()?;
     if args.cmd == "help" || args.cmd == "--help" {
         print!("{HELP}");
+        println!();
+        print_method_table();
         return Ok(());
     }
 
@@ -105,6 +166,9 @@ fn run() -> normtweak::Result<()> {
     }
     if let Some(g) = args.get("group") {
         cfg.quant.group = g.parse().map_err(|_| normtweak::Error::Config("bad --group".into()))?;
+    }
+    if let Some(lb) = args.get("layer-bits") {
+        cfg.quant.layer_bits = lb.split(',').map(String::from).collect();
     }
     if args.has("no-tweak") {
         cfg.tweak.enabled = false;
@@ -128,6 +192,9 @@ fn run() -> normtweak::Result<()> {
             let calib = build_calib(&runtime, &weights, &cfg.calib.source,
                                     cfg.calib.n_samples, cfg.calib.seed)?;
             let mut pcfg = PipelineConfig::new(cfg.method()?, cfg.scheme());
+            for (layer, scheme) in cfg.layer_schemes()? {
+                pcfg = pcfg.with_layer_scheme(layer, scheme);
+            }
             if let Some(t) = cfg.tweak_config()? {
                 pcfg = pcfg.with_tweak(t);
             }
@@ -200,7 +267,7 @@ fn run() -> normtweak::Result<()> {
             serve_demo(&qr, n_requests, n_clients)?;
         }
         other => {
-            eprintln!("unknown command `{other}`\n{HELP}");
+            eprintln!("unknown command `{other}`; see `normtweak help`\n{HELP}");
             std::process::exit(2);
         }
     }
@@ -256,4 +323,45 @@ fn serve_demo(
         stats.mean_batch()
     );
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(argv: &[&str]) -> normtweak::Result<Args> {
+        Args::from_iter(argv.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn strict_parser_accepts_known_flags() {
+        let a = parse(&["quantize", "--method", "smoothquant+gptq", "--bits", "4",
+                        "--no-tweak"]).unwrap();
+        assert_eq!(a.cmd, "quantize");
+        assert_eq!(a.get("method"), Some("smoothquant+gptq"));
+        assert!(a.has("no-tweak"));
+    }
+
+    #[test]
+    fn strict_parser_rejects_unknown_flag() {
+        let err = parse(&["quantize", "--frobnicate", "1"]).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("--frobnicate") && msg.contains("normtweak help"), "{msg}");
+        // a flag valid for one command is rejected for another
+        assert!(parse(&["serve", "--method", "gptq"]).is_err());
+    }
+
+    #[test]
+    fn strict_parser_rejects_positional_stragglers() {
+        let err = parse(&["eval", "stray"]).unwrap_err();
+        assert!(format!("{err}").contains("stray"));
+        // value consumed by a pending key is not a straggler
+        assert!(parse(&["eval", "--checkpoint", "q.ntz"]).is_ok());
+    }
+
+    #[test]
+    fn unknown_command_defers_to_dispatch() {
+        // unknown commands pass parsing (dispatch prints help + exits 2)
+        assert!(parse(&["frob", "--config", "x"]).is_ok());
+    }
 }

@@ -163,6 +163,10 @@ impl QuantizedModel {
                          Tensor::u8(&[q.packed.data.len()], q.packed.data.clone()));
                 t.insert(format!("{p}{name}.shape"),
                          Tensor::i32(&[2], vec![q.k as i32, q.n as i32]));
+                // per-linear pack width: layers may override the model-level
+                // bit width (mixed precision via `PipelineConfig::scheme_for`)
+                t.insert(format!("{p}{name}.pbits"),
+                         Tensor::i32(&[1], vec![q.packed.bits as i32]));
                 t.insert(format!("{p}{name}.scales"), q.scales.clone());
                 t.insert(format!("{p}{name}.bias"), q.bias.clone());
             }
@@ -190,10 +194,17 @@ impl QuantizedModel {
                 let shape = get(&format!("{p}{name}.shape"))?.as_i32()?;
                 let (k, n) = (shape[0] as usize, shape[1] as usize);
                 let data = get(&format!("{p}{name}.packed"))?.as_u8()?.to_vec();
+                // pre-mixed-precision checkpoints have no pbits tensor: fall
+                // back to the model-level *storage* width (3-bit codes pack
+                // into 4-bit slots, so raw `bits` would misalign the unpack)
+                let pbits = match t.get(&format!("{p}{name}.pbits")) {
+                    Some(v) => v.as_i32()?[0] as u8,
+                    None => scheme.pack_bits()?,
+                };
                 Ok(QuantLinear {
                     k,
                     n,
-                    packed: PackedCodes { bits, len: k * n, data },
+                    packed: PackedCodes { bits: pbits, len: k * n, data },
                     scales: get(&format!("{p}{name}.scales"))?.clone(),
                     bias: get(&format!("{p}{name}.bias"))?.clone(),
                 })

@@ -18,7 +18,10 @@ pub struct ModelWeights {
 }
 
 /// Borrowed view of one block's float weights in AOT argument order.
-#[derive(Debug)]
+/// All fields are shared borrows, so the view is freely `Copy`able (the
+/// pipeline hands one copy to the quantizer's `LayerContext` and keeps one
+/// for assembling biases).
+#[derive(Debug, Clone, Copy)]
 pub struct BlockWeights<'a> {
     pub ln1_g: &'a Tensor,
     pub ln1_b: Option<&'a Tensor>,

@@ -10,20 +10,61 @@
 use crate::error::Result;
 use crate::tensor::Tensor;
 
+use super::quantizer::{rtn_block, BlockQuant, LayerContext, Linear, Quantizer, Requirements};
 use super::smoothquant::ActStats;
 use super::{rtn, QuantScheme, QuantizedWeight};
+
+/// AWQ-lite as a registry plugin. The grid search runs in preprocess: pick
+/// the best per-channel scaling on the norm-fed linears, install the scaled
+/// weight, fold `1/s` into the preceding norm. The terminal RTN then
+/// reproduces the searched quantization exactly — and any composed terminal
+/// (`awq+gptq`) reconstructs the same scaled weights instead.
+pub struct AwqQuantizer;
+
+impl Quantizer for AwqQuantizer {
+    fn name(&self) -> &str {
+        "awq"
+    }
+
+    fn requirements(&self) -> Requirements {
+        Requirements { hessians: false, act_taps: true }
+    }
+
+    fn preprocess(&self, ctx: &mut LayerContext) -> Result<()> {
+        for lin in [Linear::Qkv, Linear::Fc1] {
+            let flat = ctx.tap(lin)?;
+            let k = flat.shape[1];
+            let mut stats = ActStats::new(k);
+            stats.update(&flat)?;
+            // subsample rows for the grid-search objective
+            let rows = flat.shape[0].min(64);
+            let sample = Tensor::f32(&[rows, k], flat.as_f32()?[..rows * k].to_vec());
+            let r = quantize(ctx.weight(lin), &stats, &sample, &ctx.scheme)?;
+            ctx.set_weight(lin, r.scaled_w);
+            ctx.fold_input_scales(lin, &r.in_scales)?;
+        }
+        Ok(())
+    }
+
+    fn quantize_block(&self, ctx: &mut LayerContext) -> Result<BlockQuant> {
+        rtn_block(ctx)
+    }
+}
 
 /// Grid of migration strengths searched per layer (AWQ reference uses 20
 /// points in [0,1]; 8 is enough at our scale).
 pub const ALPHA_GRID: &[f32] = &[0.0, 0.15, 0.3, 0.45, 0.6, 0.75, 0.9, 1.0];
 
 /// Result: the quantized weight *plus* the input-channel scales the runtime
-/// must fold into the preceding op (same contract as SmoothQuant).
+/// must fold into the preceding op (same contract as SmoothQuant), and the
+/// scaled float weight the search quantized (so callers composing AWQ as a
+/// preprocess stage reuse it instead of rescaling).
 #[derive(Debug, Clone)]
 pub struct AwqResult {
     pub qw: QuantizedWeight,
     pub in_scales: Vec<f32>,
     pub alpha: f32,
+    pub scaled_w: Tensor,
 }
 
 /// Quantize with the best activation-aware scaling found on the grid.
@@ -65,7 +106,8 @@ pub fn quantize(
                 ws[j * n + col] = wv[j * n + col] * s[j];
             }
         }
-        let qw = rtn::quantize(&Tensor::f32(&[k, n], ws), scheme)?;
+        let scaled_w = Tensor::f32(&[k, n], ws);
+        let qw = rtn::quantize(&scaled_w, scheme)?;
         let deq = qw.dequantize();
 
         // reconstruction error on the sample: x@W vs (x/s)@deq
@@ -85,7 +127,7 @@ pub fn quantize(
         }
         if err < best_err {
             best_err = err;
-            best = Some(AwqResult { qw, in_scales: s, alpha });
+            best = Some(AwqResult { qw, in_scales: s, alpha, scaled_w });
         }
     }
     Ok(best.expect("non-empty grid"))

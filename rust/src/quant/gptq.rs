@@ -14,7 +14,38 @@ use crate::error::{Error, Result};
 use crate::tensor::Tensor;
 use crate::util::parallel::{par_chunks_mut, par_map};
 
+use super::quantizer::{BlockQuant, LayerContext, Quantizer, Requirements, LINEARS};
 use super::{rtn, QuantScheme, QuantizedWeight};
+
+/// GPTQ as a registry plugin: consumes a per-linear Hessian, no raw taps.
+pub struct GptqQuantizer {
+    pub params: GptqParams,
+}
+
+impl Quantizer for GptqQuantizer {
+    fn name(&self) -> &str {
+        "gptq"
+    }
+
+    fn requirements(&self) -> Requirements {
+        Requirements { hessians: true, act_taps: false }
+    }
+
+    fn quantize_block(&self, ctx: &mut LayerContext) -> Result<BlockQuant> {
+        let mut out = Vec::with_capacity(4);
+        for lin in LINEARS {
+            let h = ctx.take_hessian(lin)?;
+            out.push(quantize(ctx.weight(lin), &h, &ctx.scheme, &self.params)?);
+        }
+        let mut it = out.into_iter();
+        Ok(BlockQuant {
+            qkv: it.next().unwrap(),
+            proj: it.next().unwrap(),
+            fc1: it.next().unwrap(),
+            fc2: it.next().unwrap(),
+        })
+    }
+}
 
 /// Accumulated Hessian for one linear layer: `H = 2 Σ XᵀX` over calibration
 /// batches (X = the layer's input activations, rows = tokens).

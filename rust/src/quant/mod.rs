@@ -1,4 +1,12 @@
-//! Quantization substrates: the PTQ algorithms Norm Tweaking plugs into.
+//! Quantization substrates behind the open [`Quantizer`] plugin API.
+//!
+//! Norm Tweaking treats its host PTQ method as a *plugin*: the pipeline
+//! resolves a string spec through [`quantizer::registry`] and drives the
+//! resulting trait object one transformer block at a time via a
+//! [`quantizer::LayerContext`] that lazily provides float weights,
+//! activation taps, per-linear Hessians, and the norm-fold hook.
+//!
+//! Built-in plugins (see each module for the algorithm):
 //!
 //! * [`rtn`] — round-to-nearest symmetric quantization (the paper's Table 4
 //!   weakest baseline, and the primitive every other method builds on).
@@ -12,13 +20,35 @@
 //!   (OmniQuant-lite, the learnable-weight-clipping reproduction), the
 //!   Table-10 host.
 //! * [`act`] — activation fake-quantization helpers (W4A8 / W4A4 modes).
+//!
+//! # Registering a new method
+//!
+//! Implement [`quantizer::Quantizer`] in a new file under `quant/` and add
+//! one `Registration` row to [`quantizer::REGISTRY`] — the name is then
+//! valid everywhere a method spec is accepted: `--method`, config files,
+//! and `+`-compositions.
+//!
+//! # Composed methods
+//!
+//! `a+b` chains preprocess stages left-to-right and quantizes with the last
+//! stage: `smoothquant+gptq` migrates activation outliers into the norms,
+//! then GPTQ reconstructs the smoothed weights against Hessians of the
+//! smoothed inputs. See [`quantizer`] for the full contract.
+//!
+//! [`Quantizer`]: quantizer::Quantizer
 
 pub mod act;
 pub mod awq;
 pub mod gptq;
 pub mod omniquant;
+pub mod quantizer;
 pub mod rtn;
 pub mod smoothquant;
+
+pub use quantizer::{
+    registry, resolve, BlockQuant, LayerContext, Linear, NormState, Quantizer, QuantizerParams,
+    Requirements,
+};
 
 use crate::error::{Error, Result};
 
@@ -51,12 +81,15 @@ impl QuantScheme {
     }
 
     /// Storage width for bit-packing (3-bit stores in 4-bit slots).
-    pub fn pack_bits(&self) -> u8 {
+    /// Unsupported widths fail loudly instead of silently widening to 8.
+    pub fn pack_bits(&self) -> Result<u8> {
         match self.bits {
-            2 => 2,
-            3 | 4 => 4,
-            8 => 8,
-            _ => 8,
+            2 => Ok(2),
+            3 | 4 => Ok(4),
+            8 => Ok(8),
+            other => Err(Error::Quant(format!(
+                "no packed storage width for {other}-bit codes (supported: 2, 3, 4, 8)"
+            ))),
         }
     }
 
@@ -76,12 +109,14 @@ impl QuantScheme {
         Ok(())
     }
 
-    /// Manifest group tag for artifact lookup ("pc" or "g64").
-    pub fn group_tag(&self) -> &'static str {
+    /// Manifest group tag for artifact lookup: `"pc"` or the real grain
+    /// (`"g64"`, `"g128"`, ...). A grain without exported graphs then fails
+    /// loudly at graph lookup instead of silently loading a mismatched
+    /// `g64` artifact.
+    pub fn group_tag(&self) -> String {
         match self.group_size {
-            None => "pc",
-            Some(64) => "g64",
-            Some(_) => "g64", // nearest exported grain
+            None => "pc".to_string(),
+            Some(g) => format!("g{g}"),
         }
     }
 }
@@ -139,7 +174,22 @@ mod tests {
 
     #[test]
     fn pack_bits_mapping() {
-        assert_eq!(QuantScheme { bits: 3, group_size: None }.pack_bits(), 4);
-        assert_eq!(QuantScheme::w2_g64().pack_bits(), 2);
+        assert_eq!(QuantScheme { bits: 3, group_size: None }.pack_bits().unwrap(), 4);
+        assert_eq!(QuantScheme::w2_g64().pack_bits().unwrap(), 2);
+        assert_eq!(QuantScheme { bits: 8, group_size: None }.pack_bits().unwrap(), 8);
+    }
+
+    #[test]
+    fn pack_bits_rejects_unsupported_width() {
+        // 5-bit silently widening to 8 used to corrupt compression accounting
+        assert!(QuantScheme { bits: 5, group_size: None }.pack_bits().is_err());
+        assert!(QuantScheme { bits: 16, group_size: None }.pack_bits().is_err());
+    }
+
+    #[test]
+    fn group_tag_emits_real_grain() {
+        // Some(128) used to collapse to "g64" and load mismatched artifacts
+        assert_eq!(QuantScheme { bits: 4, group_size: Some(128) }.group_tag(), "g128");
+        assert_eq!(QuantScheme { bits: 4, group_size: Some(32) }.group_tag(), "g32");
     }
 }

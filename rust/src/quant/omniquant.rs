@@ -12,7 +12,30 @@ use crate::error::Result;
 use crate::tensor::Tensor;
 use crate::util::parallel::par_chunks_mut;
 
+use super::quantizer::{BlockQuant, LayerContext, Linear, Quantizer, Requirements};
 use super::{QuantScheme, QuantizedWeight};
+
+/// OmniQuant-lite as a registry plugin: weight-only clipping, no side inputs.
+pub struct OmniQuantizer;
+
+impl Quantizer for OmniQuantizer {
+    fn name(&self) -> &str {
+        "omniquant"
+    }
+
+    fn requirements(&self) -> Requirements {
+        Requirements::none()
+    }
+
+    fn quantize_block(&self, ctx: &mut LayerContext) -> Result<BlockQuant> {
+        Ok(BlockQuant {
+            qkv: quantize(ctx.weight(Linear::Qkv), &ctx.scheme)?,
+            proj: quantize(ctx.weight(Linear::Proj), &ctx.scheme)?,
+            fc1: quantize(ctx.weight(Linear::Fc1), &ctx.scheme)?,
+            fc2: quantize(ctx.weight(Linear::Fc2), &ctx.scheme)?,
+        })
+    }
+}
 
 /// Clip-ratio grid (1.0 == plain RTN). The low end matters at 2-3 bits,
 /// where OmniQuant's learned clipping converges to aggressive values.

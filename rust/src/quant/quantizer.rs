@@ -1,0 +1,687 @@
+//! The open `Quantizer` plugin API: every PTQ method is a composable plugin.
+//!
+//! The paper's central claim is that norm tweaking *layers onto* any host
+//! PTQ method.  This module makes that architectural: a [`Quantizer`] is a
+//! trait object resolved from a string spec (`"gptq"`, `"smoothquant+gptq"`,
+//! ...) through the [`registry`], and the pipeline drives it through a
+//! [`LayerContext`] that lazily provides everything a method may need —
+//! the float weight view, per-linear Hessians, activation taps, and a
+//! uniform [`LayerContext::fold_input_scales`] hook so outlier-migration
+//! methods never touch `ln1_g`/`ln2_g` by hand.
+//!
+//! # Plugin contract
+//!
+//! A plugin runs in two phases per transformer block:
+//!
+//! 1. [`Quantizer::preprocess`] — optional float-domain rewriting: scale
+//!    weights ([`LayerContext::set_weight`]) and migrate the inverse scales
+//!    into the preceding norm ([`LayerContext::fold_input_scales`]).
+//!    SmoothQuant and AWQ live entirely here, which is what makes them
+//!    composable *pre-stages* for any reconstruction method.
+//! 2. [`Quantizer::quantize_block`] — produce the four [`QuantizedWeight`]s
+//!    from the context's current (possibly preprocessed) weights.
+//!
+//! Composition `a+b` chains every stage's `preprocess` in order and then
+//! runs the *last* stage's `quantize_block`: `smoothquant+gptq` smooths the
+//! activations and lets GPTQ reconstruct the smoothed weights against
+//! Hessians of the smoothed inputs (the context rescales taps after a fold,
+//! so lazily-built Hessians stay consistent).
+//!
+//! # Registering a new method
+//!
+//! ```text
+//! 1. implement `Quantizer` for your type (one new file in `quant/`);
+//! 2. add a `Registration { name, summary, build }` row to `REGISTRY`.
+//! ```
+//! The name is immediately valid in `--method`, in config files, and in any
+//! `+`-composition.
+
+use crate::coordinator::{hessian_from_tap, hessian_from_tap_cpu, FloatModel};
+use crate::error::{Error, Result};
+use crate::model::BlockWeights;
+use crate::tensor::Tensor;
+
+use super::gptq::Hessian;
+use super::smoothquant::{fold_into_norm, ActStats};
+use super::{awq, gptq, omniquant, rtn, smoothquant, QuantScheme, QuantizedWeight};
+
+/// Identifies one of a block's four linears (also the tap/Hessian index).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Linear {
+    Qkv = 0,
+    Proj = 1,
+    Fc1 = 2,
+    Fc2 = 3,
+}
+
+/// Block-quantization order: matches the AOT tap / Hessian layout.
+pub const LINEARS: [Linear; 4] = [Linear::Qkv, Linear::Proj, Linear::Fc1, Linear::Fc2];
+
+impl Linear {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Linear::Qkv => "qkv",
+            Linear::Proj => "proj",
+            Linear::Fc1 => "fc1",
+            Linear::Fc2 => "fc2",
+        }
+    }
+}
+
+/// What side inputs a plugin consumes. Purely declarative — the context
+/// collects lazily either way — but the registry parity suite asserts the
+/// declaration matches actual consumption, so plugins cannot silently
+/// trigger (or claim) expensive Hessian collection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Requirements {
+    /// per-linear `2 XᵀX` Hessians of the calibration inputs
+    pub hessians: bool,
+    /// raw activation taps feeding each linear
+    pub act_taps: bool,
+}
+
+impl Requirements {
+    pub fn none() -> Self {
+        Requirements::default()
+    }
+
+    pub fn union(self, other: Requirements) -> Requirements {
+        Requirements {
+            hessians: self.hessians || other.hessians,
+            act_taps: self.act_taps || other.act_taps,
+        }
+    }
+}
+
+/// Result of quantizing one block: the four linears in AOT order.
+#[derive(Debug, Clone)]
+pub struct BlockQuant {
+    pub qkv: QuantizedWeight,
+    pub proj: QuantizedWeight,
+    pub fc1: QuantizedWeight,
+    pub fc2: QuantizedWeight,
+}
+
+/// The pending norm affine of a block. Plugins fold input scales into it
+/// through the context; the pipeline turns it into the quantized block's
+/// norm parameters (which norm tweaking then optimizes further).
+#[derive(Debug, Clone)]
+pub struct NormState {
+    pub ln1_g: Tensor,
+    pub ln1_b: Option<Tensor>,
+    pub ln2_g: Tensor,
+    pub ln2_b: Option<Tensor>,
+}
+
+enum TapSource<'a> {
+    /// Production: taps via the float model's AOT `block_taps` graph,
+    /// Hessians via the runtime `xtx` graph.
+    Live {
+        fm: &'a FloatModel<'a, 'a>,
+        layer: usize,
+        x_q: &'a Tensor,
+    },
+    /// Tests / offline: precomputed taps, CPU Gram matrices.
+    Static { taps: Vec<Tensor> },
+}
+
+/// Per-layer view handed to a [`Quantizer`]: float weights (with preprocess
+/// overrides), lazy activation taps and Hessians, and the norm-fold hook.
+pub struct LayerContext<'a> {
+    source: TapSource<'a>,
+    pub scheme: QuantScheme,
+    weights: BlockWeights<'a>,
+    overrides: [Option<Tensor>; 4],
+    in_scales: [Option<Vec<f32>>; 4],
+    norms: NormState,
+    taps: Option<Vec<Tensor>>,
+    taps_used: bool,
+    hessians_used: bool,
+}
+
+fn norm_state(bw: &BlockWeights) -> NormState {
+    NormState {
+        ln1_g: bw.ln1_g.clone(),
+        ln1_b: bw.ln1_b.cloned(),
+        ln2_g: bw.ln2_g.clone(),
+        ln2_b: bw.ln2_b.cloned(),
+    }
+}
+
+impl<'a> LayerContext<'a> {
+    /// Production context: taps/Hessians computed through the runtime from
+    /// the quantized-stream input `x_q` (Algorithm 1 keeps the error model
+    /// honest by calibrating layer `l` on the *quantized* prefix).
+    pub fn new(
+        fm: &'a FloatModel<'a, 'a>,
+        layer: usize,
+        x_q: &'a Tensor,
+        weights: BlockWeights<'a>,
+        scheme: QuantScheme,
+    ) -> Self {
+        let norms = norm_state(&weights);
+        LayerContext {
+            source: TapSource::Live { fm, layer, x_q },
+            scheme,
+            weights,
+            overrides: [None, None, None, None],
+            in_scales: [None, None, None, None],
+            norms,
+            taps: None,
+            taps_used: false,
+            hessians_used: false,
+        }
+    }
+
+    /// Offline context with precomputed taps (one `[rows, K]` activation
+    /// tensor per linear, in [`LINEARS`] order). Hessians fall back to CPU
+    /// Gram matrices — no runtime or AOT artifacts needed.
+    pub fn with_static_taps(
+        weights: BlockWeights<'a>,
+        taps: Vec<Tensor>,
+        scheme: QuantScheme,
+    ) -> Self {
+        let norms = norm_state(&weights);
+        LayerContext {
+            source: TapSource::Static { taps },
+            scheme,
+            weights,
+            overrides: [None, None, None, None],
+            in_scales: [None, None, None, None],
+            norms,
+            taps: None,
+            taps_used: false,
+            hessians_used: false,
+        }
+    }
+
+    /// Current float weight of a linear: the preprocess override if one was
+    /// installed, else the original checkpoint view.
+    pub fn weight(&self, lin: Linear) -> &Tensor {
+        if let Some(t) = &self.overrides[lin as usize] {
+            return t;
+        }
+        match lin {
+            Linear::Qkv => self.weights.wqkv,
+            Linear::Proj => self.weights.wproj,
+            Linear::Fc1 => self.weights.wfc1,
+            Linear::Fc2 => self.weights.wfc2,
+        }
+    }
+
+    /// Replace the effective float weight of a linear (preprocess stages:
+    /// outlier migration, clipping, ...).
+    pub fn set_weight(&mut self, lin: Linear, w: Tensor) {
+        self.overrides[lin as usize] = Some(w);
+    }
+
+    fn ensure_taps(&mut self) -> Result<()> {
+        if self.taps.is_none() {
+            let taps = match &self.source {
+                TapSource::Live { fm, layer, x_q } => fm.block_taps(*layer, x_q)?,
+                TapSource::Static { taps } => taps.clone(),
+            };
+            if taps.len() != 4 {
+                return Err(Error::Quant(format!(
+                    "expected 4 activation taps, got {}",
+                    taps.len()
+                )));
+            }
+            self.taps = Some(taps);
+        }
+        Ok(())
+    }
+
+    /// Flattened `[rows, K]` activation feeding `lin`, with any folded input
+    /// scales already applied (so taps stay consistent with the rewritten
+    /// norm affine after a preprocess fold).
+    fn tap_inner(&mut self, lin: Linear) -> Result<Tensor> {
+        self.ensure_taps()?;
+        let i = lin as usize;
+        let t = self.taps.as_ref().unwrap()[i].clone();
+        let k = *t
+            .shape
+            .last()
+            .ok_or_else(|| Error::Quant("tap has empty shape".into()))?;
+        let rows = t.numel() / k;
+        let mut flat = t.reshape(&[rows, k])?;
+        if let Some(s) = &self.in_scales[i] {
+            let v = flat.as_f32_mut()?;
+            for r in 0..rows {
+                for (j, &f) in s.iter().enumerate() {
+                    v[r * k + j] /= f;
+                }
+            }
+        }
+        Ok(flat)
+    }
+
+    /// The activation tap feeding `lin` (flattened to `[rows, K]`).
+    pub fn tap(&mut self, lin: Linear) -> Result<Tensor> {
+        self.taps_used = true;
+        self.tap_inner(lin)
+    }
+
+    /// Per-input-channel abs-max statistics of the tap feeding `lin`.
+    pub fn act_stats(&mut self, lin: Linear) -> Result<ActStats> {
+        let flat = self.tap(lin)?;
+        let mut st = ActStats::new(flat.shape[1]);
+        st.update(&flat)?;
+        Ok(st)
+    }
+
+    /// Hessian `2 XᵀX` of the inputs feeding `lin`, built fresh from the
+    /// (scale-corrected) tap. Owned so reconstruction methods can hold it
+    /// while reading the weight view.
+    pub fn take_hessian(&mut self, lin: Linear) -> Result<Hessian> {
+        self.hessians_used = true;
+        let flat = self.tap_inner(lin)?;
+        match &self.source {
+            TapSource::Live { fm, .. } => {
+                hessian_from_tap(fm.runtime, &fm.weights.config.name, &flat)
+            }
+            TapSource::Static { .. } => hessian_from_tap_cpu(&flat),
+        }
+    }
+
+    /// Migrate per-input-channel scales `s` out of the activations feeding
+    /// `lin`: folds `1/s` into the preceding norm affine and records `s` so
+    /// later tap/Hessian requests see the rescaled inputs. Only the two
+    /// norm-fed linears (`qkv` via ln1, `fc1` via ln2) accept a fold.
+    pub fn fold_input_scales(&mut self, lin: Linear, s: &[f32]) -> Result<()> {
+        match lin {
+            Linear::Qkv => {
+                let (g, b) = fold_into_norm(&self.norms.ln1_g, self.norms.ln1_b.as_ref(), s)?;
+                self.norms.ln1_g = g;
+                self.norms.ln1_b = b;
+            }
+            Linear::Fc1 => {
+                let (g, b) = fold_into_norm(&self.norms.ln2_g, self.norms.ln2_b.as_ref(), s)?;
+                self.norms.ln2_g = g;
+                self.norms.ln2_b = b;
+            }
+            Linear::Proj | Linear::Fc2 => {
+                return Err(Error::Quant(format!(
+                    "fold_input_scales: `{}` is not norm-fed (only qkv/fc1 can absorb \
+                     input scales into a preceding norm)",
+                    lin.as_str()
+                )));
+            }
+        }
+        let i = lin as usize;
+        match &mut self.in_scales[i] {
+            Some(acc) => {
+                if acc.len() != s.len() {
+                    return Err(Error::Quant(format!(
+                        "fold_input_scales: scale length {} != earlier fold {}",
+                        s.len(),
+                        acc.len()
+                    )));
+                }
+                for (a, &f) in acc.iter_mut().zip(s) {
+                    *a *= f;
+                }
+            }
+            None => self.in_scales[i] = Some(s.to_vec()),
+        }
+        Ok(())
+    }
+
+    /// Accumulated input scales folded out of `lin`'s activations, if any.
+    pub fn input_scales(&self, lin: Linear) -> Option<&[f32]> {
+        self.in_scales[lin as usize].as_deref()
+    }
+
+    /// The pending (possibly fold-rewritten) norm affine.
+    pub fn norms(&self) -> &NormState {
+        &self.norms
+    }
+
+    /// Consume the context, yielding the final norm affine for the block.
+    pub fn into_norms(self) -> NormState {
+        self.norms
+    }
+
+    /// Whether any tap was consumed through the public API (parity checks).
+    pub fn taps_used(&self) -> bool {
+        self.taps_used
+    }
+
+    /// Whether any Hessian was consumed (parity checks).
+    pub fn hessians_used(&self) -> bool {
+        self.hessians_used
+    }
+}
+
+/// A PTQ method as a composable plugin. See the module docs for the
+/// two-phase contract and the registration recipe.
+pub trait Quantizer {
+    /// Canonical registry name (composed plugins join with `+`).
+    fn name(&self) -> &str;
+
+    /// Side inputs this plugin consumes across both phases.
+    fn requirements(&self) -> Requirements;
+
+    /// Optional float-domain preprocessing (outlier migration, scaling).
+    fn preprocess(&self, _ctx: &mut LayerContext) -> Result<()> {
+        Ok(())
+    }
+
+    /// Quantize the four linears from the context's current weights.
+    fn quantize_block(&self, ctx: &mut LayerContext) -> Result<BlockQuant>;
+
+    /// Convenience: run both phases.
+    fn quantize_layer(&self, ctx: &mut LayerContext) -> Result<BlockQuant> {
+        self.preprocess(ctx)?;
+        self.quantize_block(ctx)
+    }
+}
+
+/// RTN over all four linears of the context — the shared terminal stage for
+/// preprocess-only plugins and the baseline every method is measured against.
+pub fn rtn_block(ctx: &LayerContext) -> Result<BlockQuant> {
+    Ok(BlockQuant {
+        qkv: rtn::quantize(ctx.weight(Linear::Qkv), &ctx.scheme)?,
+        proj: rtn::quantize(ctx.weight(Linear::Proj), &ctx.scheme)?,
+        fc1: rtn::quantize(ctx.weight(Linear::Fc1), &ctx.scheme)?,
+        fc2: rtn::quantize(ctx.weight(Linear::Fc2), &ctx.scheme)?,
+    })
+}
+
+/// `a+b+...`: chain every stage's preprocess, quantize with the last stage.
+pub struct Composed {
+    name: String,
+    parts: Vec<Box<dyn Quantizer>>,
+}
+
+impl Composed {
+    pub fn new(parts: Vec<Box<dyn Quantizer>>) -> Result<Self> {
+        if parts.is_empty() {
+            return Err(Error::Config("empty quantizer composition".into()));
+        }
+        let name = parts
+            .iter()
+            .map(|p| p.name().to_string())
+            .collect::<Vec<_>>()
+            .join("+");
+        Ok(Composed { name, parts })
+    }
+}
+
+impl Quantizer for Composed {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn requirements(&self) -> Requirements {
+        self.parts
+            .iter()
+            .fold(Requirements::none(), |acc, p| acc.union(p.requirements()))
+    }
+
+    fn preprocess(&self, ctx: &mut LayerContext) -> Result<()> {
+        for p in &self.parts {
+            p.preprocess(ctx)?;
+        }
+        Ok(())
+    }
+
+    fn quantize_block(&self, ctx: &mut LayerContext) -> Result<BlockQuant> {
+        self.parts
+            .last()
+            .expect("composition is non-empty")
+            .quantize_block(ctx)
+    }
+}
+
+/// Tunables threaded to plugin constructors at resolve time.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct QuantizerParams {
+    pub gptq: gptq::GptqParams,
+    pub smooth: smoothquant::SmoothParams,
+}
+
+/// One registry row: a buildable, documented plugin.
+pub struct Registration {
+    pub name: &'static str,
+    pub summary: &'static str,
+    pub build: fn(&QuantizerParams) -> Box<dyn Quantizer>,
+}
+
+fn build_rtn(_p: &QuantizerParams) -> Box<dyn Quantizer> {
+    Box::new(rtn::RtnQuantizer)
+}
+
+fn build_gptq(p: &QuantizerParams) -> Box<dyn Quantizer> {
+    Box::new(gptq::GptqQuantizer { params: p.gptq })
+}
+
+fn build_smoothquant(p: &QuantizerParams) -> Box<dyn Quantizer> {
+    Box::new(smoothquant::SmoothQuantizer { params: p.smooth })
+}
+
+fn build_awq(_p: &QuantizerParams) -> Box<dyn Quantizer> {
+    Box::new(awq::AwqQuantizer)
+}
+
+fn build_omniquant(_p: &QuantizerParams) -> Box<dyn Quantizer> {
+    Box::new(omniquant::OmniQuantizer)
+}
+
+/// The built-in plugins. Adding a method is one new row here.
+pub const REGISTRY: &[Registration] = &[
+    Registration {
+        name: "rtn",
+        summary: "round-to-nearest symmetric (the baseline primitive)",
+        build: build_rtn,
+    },
+    Registration {
+        name: "gptq",
+        summary: "Hessian-based OBS reconstruction (Frantar et al. 2022)",
+        build: build_gptq,
+    },
+    Registration {
+        name: "smoothquant",
+        summary: "activation-outlier migration into the preceding norm (W+A)",
+        build: build_smoothquant,
+    },
+    Registration {
+        name: "awq",
+        summary: "activation-aware weight scaling, grid-searched per layer",
+        build: build_awq,
+    },
+    Registration {
+        name: "omniquant",
+        summary: "grid-searched per-channel weight clipping (LWC-lite)",
+        build: build_omniquant,
+    },
+];
+
+/// All registered plugins.
+pub fn registry() -> &'static [Registration] {
+    REGISTRY
+}
+
+/// Registered plugin names, in registry order.
+pub fn registered_names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|r| r.name).collect()
+}
+
+/// Resolve a method spec (`"gptq"`, `"smoothquant+gptq"`, ...) into a
+/// runnable plugin. Unknown names error with the registered list.
+pub fn resolve(spec: &str, params: &QuantizerParams) -> Result<Box<dyn Quantizer>> {
+    let mut parts: Vec<Box<dyn Quantizer>> = Vec::new();
+    for raw in spec.split('+') {
+        let name = raw.trim();
+        if name.is_empty() {
+            return Err(Error::Config(format!(
+                "empty stage in quantizer spec `{spec}` (compose as `smoothquant+gptq`)"
+            )));
+        }
+        let reg = REGISTRY.iter().find(|r| r.name == name).ok_or_else(|| {
+            Error::Config(format!(
+                "unknown quantizer `{name}` (registered: {}); compose with `+`, \
+                 e.g. `smoothquant+gptq`",
+                registered_names().join(", ")
+            ))
+        })?;
+        parts.push((reg.build)(params));
+    }
+    if parts.len() == 1 {
+        Ok(parts.pop().unwrap())
+    } else {
+        Ok(Box::new(Composed::new(parts)?))
+    }
+}
+
+/// Validate a spec and return its canonical name (used by `Config::method`).
+pub fn validate_spec(spec: &str) -> Result<String> {
+    let q = resolve(spec, &QuantizerParams::default())?;
+    Ok(q.name().to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture(d: usize, ff: usize) -> (Vec<Tensor>, Vec<Tensor>) {
+        // owned (weights+norms, taps); tests borrow a BlockWeights from it
+        let weights = vec![
+            Tensor::ones(&[d]),                   // ln1_g
+            Tensor::zeros(&[d]),                  // ln1_b
+            Tensor::randn(&[d, 3 * d], 1, 0.5),   // wqkv
+            Tensor::zeros(&[3 * d]),              // bqkv
+            Tensor::randn(&[d, d], 2, 0.5),       // wproj
+            Tensor::zeros(&[d]),                  // bproj
+            Tensor::ones(&[d]),                   // ln2_g
+            Tensor::zeros(&[d]),                  // ln2_b
+            Tensor::randn(&[d, ff], 3, 0.5),      // wfc1
+            Tensor::zeros(&[ff]),                 // bfc1
+            Tensor::randn(&[ff, d], 4, 0.5),      // wfc2
+            Tensor::zeros(&[d]),                  // bfc2
+        ];
+        let taps = vec![
+            Tensor::randn(&[8, d], 11, 1.0),
+            Tensor::randn(&[8, d], 12, 1.0),
+            Tensor::randn(&[8, d], 13, 1.0),
+            Tensor::randn(&[8, ff], 14, 1.0),
+        ];
+        (weights, taps)
+    }
+
+    fn block_view(w: &[Tensor]) -> BlockWeights<'_> {
+        BlockWeights {
+            ln1_g: &w[0],
+            ln1_b: Some(&w[1]),
+            wqkv: &w[2],
+            bqkv: &w[3],
+            wproj: &w[4],
+            bproj: &w[5],
+            ln2_g: &w[6],
+            ln2_b: Some(&w[7]),
+            wfc1: &w[8],
+            bfc1: &w[9],
+            wfc2: &w[10],
+            bfc2: &w[11],
+        }
+    }
+
+    #[test]
+    fn resolve_known_and_composed() {
+        let p = QuantizerParams::default();
+        assert_eq!(resolve("gptq", &p).unwrap().name(), "gptq");
+        let c = resolve("smoothquant+gptq", &p).unwrap();
+        assert_eq!(c.name(), "smoothquant+gptq");
+        let req = c.requirements();
+        assert!(req.hessians && req.act_taps);
+    }
+
+    #[test]
+    fn resolve_rejects_unknown_and_empty() {
+        let p = QuantizerParams::default();
+        assert!(resolve("zap", &p).is_err());
+        assert!(resolve("gptq+zap", &p).is_err());
+        assert!(resolve("", &p).is_err());
+        assert!(resolve("gptq+", &p).is_err());
+        let msg = format!("{}", resolve("zap", &p).unwrap_err());
+        assert!(msg.contains("rtn") && msg.contains("gptq"), "{msg}");
+    }
+
+    #[test]
+    fn validate_spec_canonicalizes() {
+        assert_eq!(validate_spec(" smoothquant + gptq ").unwrap(), "smoothquant+gptq");
+        assert!(validate_spec("nope").is_err());
+    }
+
+    #[test]
+    fn fold_rejects_non_norm_fed() {
+        let (w, taps) = fixture(8, 16);
+        let mut ctx = LayerContext::with_static_taps(
+            block_view(&w),
+            taps,
+            QuantScheme::w4_perchannel(),
+        );
+        let s = vec![2.0f32; 8];
+        assert!(ctx.fold_input_scales(Linear::Proj, &s).is_err());
+        assert!(ctx.fold_input_scales(Linear::Qkv, &s).is_ok());
+        assert_eq!(ctx.norms().ln1_g.as_f32().unwrap()[0], 0.5);
+        assert_eq!(ctx.input_scales(Linear::Qkv).unwrap()[0], 2.0);
+    }
+
+    #[test]
+    fn fold_rescales_taps_and_hessian() {
+        let (w, taps) = fixture(8, 16);
+        let raw0 = taps[0].as_f32().unwrap()[0];
+        let mut ctx = LayerContext::with_static_taps(
+            block_view(&w),
+            taps,
+            QuantScheme::w4_perchannel(),
+        );
+        let s = vec![4.0f32; 8];
+        ctx.fold_input_scales(Linear::Qkv, &s).unwrap();
+        let tap = ctx.tap(Linear::Qkv).unwrap();
+        assert!((tap.as_f32().unwrap()[0] - raw0 / 4.0).abs() < 1e-6);
+        // Hessian of scaled inputs shrinks by s² = 16
+        let h = ctx.take_hessian(Linear::Qkv).unwrap();
+        assert_eq!(h.k, 8);
+        assert!(ctx.hessians_used() && ctx.taps_used());
+    }
+
+    #[test]
+    fn usage_flags_start_clean_and_track() {
+        let (w, taps) = fixture(8, 16);
+        let mut ctx = LayerContext::with_static_taps(
+            block_view(&w),
+            taps,
+            QuantScheme::w4_perchannel(),
+        );
+        assert!(!ctx.taps_used() && !ctx.hessians_used());
+        ctx.take_hessian(Linear::Fc2).unwrap();
+        // hessian consumption must not count as tap consumption
+        assert!(ctx.hessians_used() && !ctx.taps_used());
+    }
+
+    #[test]
+    fn weight_override_shadows_checkpoint_view() {
+        let (w, taps) = fixture(8, 16);
+        let mut ctx = LayerContext::with_static_taps(
+            block_view(&w),
+            taps,
+            QuantScheme::w4_perchannel(),
+        );
+        let orig = ctx.weight(Linear::Qkv).clone();
+        ctx.set_weight(Linear::Qkv, Tensor::zeros(&[8, 24]));
+        assert_ne!(ctx.weight(Linear::Qkv), &orig);
+        assert_eq!(ctx.weight(Linear::Qkv).as_f32().unwrap()[0], 0.0);
+    }
+
+    #[test]
+    fn registry_names_are_unique() {
+        let names = registered_names();
+        for (i, a) in names.iter().enumerate() {
+            for b in &names[i + 1..] {
+                assert_ne!(a, b);
+            }
+        }
+    }
+}

@@ -9,7 +9,25 @@ use crate::error::Result;
 use crate::tensor::Tensor;
 use crate::util::parallel::par_chunks_mut;
 
+use super::quantizer::{rtn_block, BlockQuant, LayerContext, Quantizer, Requirements};
 use super::{QuantScheme, QuantizedWeight};
+
+/// RTN as a registry plugin: no side inputs, straight rounding.
+pub struct RtnQuantizer;
+
+impl Quantizer for RtnQuantizer {
+    fn name(&self) -> &str {
+        "rtn"
+    }
+
+    fn requirements(&self) -> Requirements {
+        Requirements::none()
+    }
+
+    fn quantize_block(&self, ctx: &mut LayerContext) -> Result<BlockQuant> {
+        rtn_block(ctx)
+    }
+}
 
 /// Quantize `w` (f32 [K, N], row-major) per `scheme`.
 pub fn quantize(w: &Tensor, scheme: &QuantScheme) -> Result<QuantizedWeight> {

@@ -14,6 +14,41 @@
 use crate::error::{Error, Result};
 use crate::tensor::Tensor;
 
+use super::quantizer::{rtn_block, BlockQuant, LayerContext, Linear, Quantizer, Requirements};
+
+/// SmoothQuant as a registry plugin. The migration is pure preprocessing —
+/// scale the norm-fed weights, fold `1/s` into the preceding norm through
+/// the context — so it composes as a pre-stage for any terminal method
+/// (`smoothquant+gptq`); standalone it finishes with RTN.
+pub struct SmoothQuantizer {
+    pub params: SmoothParams,
+}
+
+impl Quantizer for SmoothQuantizer {
+    fn name(&self) -> &str {
+        "smoothquant"
+    }
+
+    fn requirements(&self) -> Requirements {
+        Requirements { hessians: false, act_taps: true }
+    }
+
+    fn preprocess(&self, ctx: &mut LayerContext) -> Result<()> {
+        for lin in [Linear::Qkv, Linear::Fc1] {
+            let stats = ctx.act_stats(lin)?;
+            let s = smoothing_factors(ctx.weight(lin), &stats, &self.params)?;
+            let scaled = scale_weight(ctx.weight(lin), &s)?;
+            ctx.set_weight(lin, scaled);
+            ctx.fold_input_scales(lin, &s)?;
+        }
+        Ok(())
+    }
+
+    fn quantize_block(&self, ctx: &mut LayerContext) -> Result<BlockQuant> {
+        rtn_block(ctx)
+    }
+}
+
 /// Per-input-channel activation absolute maxima for one linear layer,
 /// accumulated over calibration batches.
 #[derive(Debug, Clone)]

@@ -6,7 +6,7 @@ use std::time::Instant;
 use crate::calib::vocab::{LANGS, VOCAB_SIZE};
 use crate::calib::CalibSet;
 use crate::coordinator::{build_calib, quantize_model, FloatModel, PipelineConfig,
-                         PipelineMetrics, QuantMethod, QuantModel};
+                         PipelineMetrics, QuantModel};
 use crate::error::Result;
 use crate::eval::{lambada, ppl, subjective, tasks, LanguageModel};
 use crate::model::{ModelWeights, QuantizedModel};
@@ -46,7 +46,7 @@ impl ReproCtx {
     pub fn quantize(
         &self,
         w: &ModelWeights,
-        method: QuantMethod,
+        method: &str,
         scheme: QuantScheme,
         tweak: Option<TweakConfig>,
         calib: &CalibSet,
@@ -111,7 +111,7 @@ pub fn table2(ctx: &ReproCtx, models: &[&str]) -> Result<Table> {
         let mut row = vec![model.to_string(), f4(fp)];
         for scheme in [QuantScheme::w4_perchannel(), QuantScheme::w2_g64()] {
             for tweak in [None, Some(ctx.nt())] {
-                let (qm, _) = ctx.quantize(&w, QuantMethod::Gptq, scheme, tweak, &calib)?;
+                let (qm, _) = ctx.quantize(&w, "gptq", scheme, tweak, &calib)?;
                 let qr = QuantModel::new(&ctx.runtime, &qm)?;
                 row.push(f4(ctx.lambada_acc(&qr)?));
             }
@@ -131,10 +131,10 @@ pub fn table3(ctx: &ReproCtx, models: &[&str]) -> Result<Table> {
         let w = ctx.weights(model)?;
         let calib = ctx.calib(&w, "gen-v2")?;
         let t0 = Instant::now();
-        ctx.quantize(&w, QuantMethod::Gptq, QuantScheme::w4_perchannel(), None, &calib)?;
+        ctx.quantize(&w, "gptq", QuantScheme::w4_perchannel(), None, &calib)?;
         let plain = t0.elapsed().as_secs_f32();
         let t1 = Instant::now();
-        ctx.quantize(&w, QuantMethod::Gptq, QuantScheme::w4_perchannel(),
+        ctx.quantize(&w, "gptq", QuantScheme::w4_perchannel(),
                      Some(ctx.nt()), &calib)?;
         let tweaked = t1.elapsed().as_secs_f32();
         t.push(vec![
@@ -160,13 +160,13 @@ pub fn table4(ctx: &ReproCtx, models: &[&str]) -> Result<Table> {
         let mut row = vec![model.to_string(), f4(ctx.lambada_acc(&fm)?)];
         let scheme = QuantScheme::w4_perchannel();
         for tweak in [None, Some(ctx.nt())] {
-            let (qm, _) = ctx.quantize(&w, QuantMethod::Rtn, scheme, tweak, &calib)?;
+            let (qm, _) = ctx.quantize(&w, "rtn", scheme, tweak, &calib)?;
             let qr = QuantModel::new(&ctx.runtime, &qm)?;
             row.push(f4(ctx.lambada_acc(&qr)?));
         }
         for tweak in [None, Some(ctx.nt())] {
             let (qm, _) =
-                ctx.quantize(&w, QuantMethod::SmoothQuant, scheme, tweak, &calib)?;
+                ctx.quantize(&w, "smoothquant", scheme, tweak, &calib)?;
             let qr = QuantModel::new(&ctx.runtime, &qm)?.with_act_bits(Some(8));
             row.push(f4(ctx.lambada_acc(&qr)?));
         }
@@ -197,7 +197,7 @@ pub fn table5(ctx: &ReproCtx, model: &str) -> Result<Table> {
                 rep.repetition_loops.to_string(), clip(text)]);
 
     for (label, tweak) in [("GPTQ (2-bit)", None), ("Norm-Tweaking (2-bit)", Some(ctx.nt()))] {
-        let (qm, _) = ctx.quantize(&w, QuantMethod::Gptq, QuantScheme::w2_g64(),
+        let (qm, _) = ctx.quantize(&w, "gptq", QuantScheme::w2_g64(),
                                    tweak, &calib)?;
         let qr = QuantModel::new(&ctx.runtime, &qm)?;
         let evals = subjective::subjective_eval(&qr, &prompt, 2, 48)?;
@@ -219,7 +219,7 @@ pub fn table6(ctx: &ReproCtx, model: &str, iters: &[usize]) -> Result<Table> {
     );
     for &it in iters {
         let tweak = TweakConfig { iters: it, ..ctx.nt() };
-        let (qm, _) = ctx.quantize(&w, QuantMethod::Gptq, QuantScheme::w4_perchannel(),
+        let (qm, _) = ctx.quantize(&w, "gptq", QuantScheme::w4_perchannel(),
                                    Some(tweak), &calib)?;
         let qr = QuantModel::new(&ctx.runtime, &qm)?;
         t.push(vec![it.to_string(), f4(ctx.lambada_acc(&qr)?)]);
@@ -255,7 +255,7 @@ pub fn table7(ctx: &ReproCtx, model: &str, include_w4: bool) -> Result<Table> {
     }
     for (scheme, tag) in schemes {
         for (label, tweak) in [("GPTQ", None), ("Norm-Tweak", Some(ctx.nt()))] {
-            let (qm, _) = ctx.quantize(&w, QuantMethod::Gptq, scheme, tweak, &calib)?;
+            let (qm, _) = ctx.quantize(&w, "gptq", scheme, tweak, &calib)?;
             let qr = QuantModel::new(&ctx.runtime, &qm)?;
             score_all(&qr, &format!("w/ {label} ({tag})"), &mut t)?;
         }
@@ -272,7 +272,7 @@ pub fn table8(ctx: &ReproCtx, model: &str) -> Result<Table> {
     );
     for source in ["wiki-syn", "ptb-syn", "c4-syn", "random", "gen-v1", "gen-v2"] {
         let calib = ctx.calib(&w, source)?;
-        let (qm, _) = ctx.quantize(&w, QuantMethod::Gptq, QuantScheme::w2_g64(),
+        let (qm, _) = ctx.quantize(&w, "gptq", QuantScheme::w2_g64(),
                                    Some(ctx.nt()), &calib)?;
         let qr = QuantModel::new(&ctx.runtime, &qm)?;
         let mut row = vec![source.to_string()];
@@ -296,7 +296,7 @@ pub fn table9(ctx: &ReproCtx, models: &[&str]) -> Result<Table> {
         let mut row = vec![model.to_string()];
         for loss in [LossKind::Mse, LossKind::Kl, LossKind::Dist] {
             let tweak = TweakConfig { loss, ..ctx.nt() };
-            let (qm, _) = ctx.quantize(&w, QuantMethod::Gptq,
+            let (qm, _) = ctx.quantize(&w, "gptq",
                                        QuantScheme::w4_perchannel(), Some(tweak), &calib)?;
             let qr = QuantModel::new(&ctx.runtime, &qm)?;
             row.push(f4(ctx.lambada_acc(&qr)?));
@@ -319,7 +319,7 @@ pub fn table10(ctx: &ReproCtx, model: &str) -> Result<Table> {
         (QuantScheme::w3_g64(), None),
         (QuantScheme::w4_perchannel(), Some(4)),
     ];
-    let run = |method: QuantMethod, tweak: Option<TweakConfig>| -> Result<Vec<String>> {
+    let run = |method: &str, tweak: Option<TweakConfig>| -> Result<Vec<String>> {
         let mut cells = Vec::new();
         for (scheme, act) in &modes {
             let (qm, _) = ctx.quantize(&w, method, *scheme, tweak, &calib)?;
@@ -333,13 +333,13 @@ pub fn table10(ctx: &ReproCtx, model: &str) -> Result<Table> {
         Ok(cells)
     };
     let mut awq = vec!["AWQ".to_string()];
-    awq.extend(run(QuantMethod::Awq, None)?);
+    awq.extend(run("awq", None)?);
     t.push(awq);
     let mut oq = vec!["OmniQuant".to_string()];
-    oq.extend(run(QuantMethod::OmniQuant, None)?);
+    oq.extend(run("omniquant", None)?);
     t.push(oq);
     let mut oqnt = vec!["w/ NT".to_string()];
-    oqnt.extend(run(QuantMethod::OmniQuant, Some(ctx.nt()))?);
+    oqnt.extend(run("omniquant", Some(ctx.nt()))?);
     t.push(oqnt);
     Ok(t)
 }
@@ -349,8 +349,8 @@ pub fn figure1(ctx: &ReproCtx, model: &str) -> Result<Table> {
     let w = ctx.weights(model)?;
     let calib = ctx.calib(&w, "gen-v2")?;
     let scheme = QuantScheme::w2_g64();
-    let (_, m_plain) = ctx.quantize(&w, QuantMethod::Gptq, scheme, None, &calib)?;
-    let (_, m_nt) = ctx.quantize(&w, QuantMethod::Gptq, scheme, Some(ctx.nt()), &calib)?;
+    let (_, m_plain) = ctx.quantize(&w, "gptq", scheme, None, &calib)?;
+    let (_, m_nt) = ctx.quantize(&w, "gptq", scheme, Some(ctx.nt()), &calib)?;
     let mut t = Table::new(
         "Figure 1 — per-layer activation drift Δμ (GPTQ vs Norm-Tweaking, W2)",
         &["layer", "GPTQ Δμ", "NT Δμ", "bar (GPTQ=#, NT=*)"],

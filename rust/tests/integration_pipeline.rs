@@ -5,7 +5,7 @@
 mod common;
 
 use normtweak::calib::CalibSet;
-use normtweak::coordinator::{build_calib, quantize_model, PipelineConfig, QuantMethod, QuantModel};
+use normtweak::coordinator::{build_calib, quantize_model, PipelineConfig, QuantModel};
 use normtweak::eval::LanguageModel;
 use normtweak::model::{ModelConfig, QuantizedModel};
 use normtweak::quant::QuantScheme;
@@ -27,10 +27,10 @@ fn gptq_plus_tweak_runs_and_reduces_drift() {
     let calib = calib_from_corpus(&rt, w.config.seq);
     let scheme = QuantScheme::w2_g64();
 
-    let plain = PipelineConfig::new(QuantMethod::Gptq, scheme);
+    let plain = PipelineConfig::new("gptq", scheme);
     let (_, m_plain) = quantize_model(&rt, &w, &calib, &plain).unwrap();
 
-    let tweaked = PipelineConfig::new(QuantMethod::Gptq, scheme)
+    let tweaked = PipelineConfig::new("gptq", scheme)
         .with_tweak(TweakConfig::default());
     let (qm, m_tweak) = quantize_model(&rt, &w, &calib, &tweaked).unwrap();
 
@@ -78,18 +78,54 @@ fn all_methods_run_on_tiny() {
     let Some(rt) = common::runtime_or_skip() else { return };
     let Some(w) = common::weights_or_skip("nt-tiny") else { return };
     let calib = calib_from_corpus(&rt, w.config.seq);
-    for method in [QuantMethod::Rtn, QuantMethod::SmoothQuant,
-                   QuantMethod::Awq, QuantMethod::OmniQuant] {
+    // every registered plugin plus a composed spec (smoothing pre-stage,
+    // GPTQ reconstruction) must dispatch through the registry end-to-end
+    for method in ["rtn", "smoothquant", "awq", "omniquant", "smoothquant+gptq"] {
         let cfg = PipelineConfig::new(method, QuantScheme::w4_perchannel());
         let (qm, metrics) = quantize_model(&rt, &w, &calib, &cfg)
-            .unwrap_or_else(|e| panic!("{method:?}: {e}"));
+            .unwrap_or_else(|e| panic!("{method}: {e}"));
         assert_eq!(qm.blocks.len(), w.config.n_layer);
-        assert_eq!(metrics.method, method.as_str());
+        assert_eq!(metrics.method, method);
         // every method must produce a runnable model
         let qr = QuantModel::new(&rt, &qm).unwrap();
         let toks = Tensor::i32(&[1, w.config.seq], vec![2; w.config.seq]);
         qr.logits(&toks).unwrap();
     }
+}
+
+#[test]
+fn unknown_method_fails_loudly() {
+    let Some(rt) = common::runtime_or_skip() else { return };
+    let Some(w) = common::weights_or_skip("nt-tiny") else { return };
+    let calib = calib_from_corpus(&rt, w.config.seq);
+    let cfg = PipelineConfig::new("zap", QuantScheme::w4_perchannel());
+    let err = quantize_model(&rt, &w, &calib, &cfg).unwrap_err();
+    assert!(format!("{err}").contains("unknown quantizer"));
+}
+
+#[test]
+fn per_layer_scheme_override_runs() {
+    let Some(rt) = common::runtime_or_skip() else { return };
+    let Some(w) = common::weights_or_skip("nt-tiny") else { return };
+    let calib = calib_from_corpus(&rt, w.config.seq);
+    // first layer kept at 8 bits, rest at the base 2-bit g64 grain
+    let base = QuantScheme::w2_g64();
+    let cfg = PipelineConfig::new("rtn", base)
+        .with_layer_scheme(0, QuantScheme { bits: 8, group_size: Some(64) });
+    let (qm, _) = quantize_model(&rt, &w, &calib, &cfg).unwrap();
+    assert_eq!(qm.blocks[0].qkv.packed.bits, 8);
+    assert_eq!(qm.blocks[1].qkv.packed.bits, 2);
+    // mixed-precision checkpoints round-trip the per-linear pack width
+    let dir = std::env::temp_dir().join("nt_mixed_precision");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("q.ntz");
+    qm.save(&path).unwrap();
+    let back = QuantizedModel::load(ModelConfig::builtin("nt-tiny").unwrap(), &path).unwrap();
+    assert_eq!(back.blocks[0].qkv.packed.bits, 8);
+    assert_eq!(back.blocks[0].qkv.packed, qm.blocks[0].qkv.packed);
+    let qr = QuantModel::new(&rt, &back).unwrap();
+    let toks = Tensor::i32(&[1, w.config.seq], vec![4; w.config.seq]);
+    qr.logits(&toks).unwrap();
 }
 
 #[test]
@@ -108,7 +144,7 @@ fn generated_calibration_feeds_pipeline() {
         let first = toks[i * seq + 1];
         assert!(first >= 8 && first < top_hi, "sample {i}: first token {first}");
     }
-    let cfg = PipelineConfig::new(QuantMethod::Rtn, QuantScheme::w4_perchannel())
+    let cfg = PipelineConfig::new("rtn", QuantScheme::w4_perchannel())
         .with_tweak(TweakConfig::default());
     let (_, metrics) = quantize_model(&rt, &w, &calib, &cfg).unwrap();
     assert_eq!(metrics.calib_source, "gen-v2");
@@ -119,7 +155,7 @@ fn act_quant_mode_runs() {
     let Some(rt) = common::runtime_or_skip() else { return };
     let Some(w) = common::weights_or_skip("nt-tiny") else { return };
     let calib = calib_from_corpus(&rt, w.config.seq);
-    let cfg = PipelineConfig::new(QuantMethod::SmoothQuant, QuantScheme::w4_perchannel());
+    let cfg = PipelineConfig::new("smoothquant", QuantScheme::w4_perchannel());
     let (qm, _) = quantize_model(&rt, &w, &calib, &cfg).unwrap();
     let qr = QuantModel::new(&rt, &qm).unwrap().with_act_bits(Some(8));
     let toks = Tensor::i32(&[1, w.config.seq], vec![3; w.config.seq]);

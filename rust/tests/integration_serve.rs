@@ -3,7 +3,7 @@
 mod common;
 
 use normtweak::calib::CalibSet;
-use normtweak::coordinator::{quantize_model, PipelineConfig, QuantMethod, QuantModel};
+use normtweak::coordinator::{quantize_model, PipelineConfig, QuantModel};
 use normtweak::quant::QuantScheme;
 use normtweak::serve::{channel, serve_loop, ServeConfig};
 
@@ -18,7 +18,7 @@ fn concurrent_requests_all_answered_and_batched() {
     );
     let calib = CalibSet::from_stream(&stream, rt.manifest.calib_batch,
                                       w.config.seq, "wiki-syn").unwrap();
-    let cfg = PipelineConfig::new(QuantMethod::Rtn, QuantScheme::w4_perchannel());
+    let cfg = PipelineConfig::new("rtn", QuantScheme::w4_perchannel());
     let (qm, _) = quantize_model(&rt, &w, &calib, &cfg).unwrap();
     let model = QuantModel::new(&rt, &qm).unwrap();
 
