@@ -17,7 +17,11 @@ Exported graph inventory (see DESIGN.md §4): per model —
     tweak_step_mse / _kl       Table-9 loss ablation (nt-small, pc only)
     xtx.{K}                    Gram matrix for Hessian accumulation
 
-{grp} ∈ {pc (per-channel), g64 (group=64)} — the paper's two quant grains.
+{grp} ranges over the exported quantization grains, default
+pc (per-channel) / g32 / g64 / g128 — the paper's two grains plus the
+fine/coarse sweep neighbours.  Override with `--groups pc,g64`; whatever is
+exported is recorded under the manifest's `groups` key, which the Rust
+runtime parses to reject unexported grains at pipeline startup.
 Inference graphs use the Pallas kernels; tweak graphs use the (pytest-
 equivalent) jnp oracles because pallas_call has no VJP.
 """
@@ -40,7 +44,42 @@ _JNP = {F32: jnp.float32, I8: jnp.int8, I32: jnp.int32}
 # eval/gen bucket + calibration bucket (B=1 is padded up by the coordinator)
 EXPORT_BUCKETS = [b for b in BATCH_BUCKETS if b in (8, CALIB_BATCH)]
 
-GROUPS = {"pc": 0, "g64": 64}   # 0 == per-channel (group = K)
+# Exported quantization grains: tag -> group size (0 == per-channel, i.e.
+# one scale group spanning K).  Every tag here gets a `block_fwd_q` variant
+# per bucket and one `tweak_step` variant; the dict is recorded verbatim in
+# the manifest so the runtime knows exactly what was exported.
+GROUPS = {"pc": 0, "g32": 32, "g64": 64, "g128": 128}
+
+
+def parse_groups(spec: str) -> dict:
+    """`"pc,g32,g64"` -> {"pc": 0, "g32": 32, "g64": 64} (strict)."""
+    out = {}
+    for tag in spec.split(","):
+        tag = tag.strip()
+        if not tag:
+            continue
+        if tag == "pc":
+            out[tag] = 0
+        elif tag.startswith("g") and tag[1:].isdigit() and int(tag[1:]) > 0:
+            # canonicalize (g064 -> g64): the runtime derives tags as
+            # `g{size}` from the scheme, so only that spelling resolves
+            out[f"g{int(tag[1:])}"] = int(tag[1:])
+        else:
+            raise ValueError(
+                f"bad grain tag {tag!r} (want `pc` or `g<N>`, e.g. g64)")
+    if not out:
+        raise ValueError("empty grain list")
+    return out
+
+
+def check_groups(cfg: ModelConfig, groups: dict) -> None:
+    """Every grouped grain must divide both matmul K dims (d_model, d_ff)."""
+    for tag, group in groups.items():
+        for k in (cfg.d_model, cfg.d_ff):
+            if group and k % group:
+                raise ValueError(
+                    f"{cfg.name}: grain {tag} (group={group}) does not "
+                    f"divide K={k}")
 
 
 def spec(shape, dtype=F32):
@@ -116,8 +155,15 @@ def norm_param_args(cfg: ModelConfig, prefix: str):
     return [arg(f"{prefix}{n}", (d,)) for n in names]
 
 
-def graph_defs(cfg: ModelConfig):
-    """Yield (name, fn, input_args, n_outputs) for every graph of a model."""
+def graph_defs(cfg: ModelConfig, groups: dict = None):
+    """Yield (name, fn, input_args, n_outputs) for every graph of a model.
+
+    `groups` maps grain tags to group sizes (default: the full GROUPS
+    sweep); one `block_fwd_q` per (grain, bucket) and one `tweak_step` per
+    grain are emitted.
+    """
+    groups = GROUPS if groups is None else groups
+    check_groups(cfg, groups)
     d, ff, v, s = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq
     cb = CALIB_BATCH
 
@@ -139,7 +185,7 @@ def graph_defs(cfg: ModelConfig):
                 + ([arg("lnf.b", (d,))] if cfg.norm == "layernorm" else [])
                 + [arg("tok_emb", (v, d))]))
 
-        for gname, group in GROUPS.items():
+        for gname, group in groups.items():
             yield (f"block_fwd_q.{gname}.b{b}",
                    lambda x, *w, cfg=cfg: (M.block_fwd_q(cfg, x, list(w)),),
                    [arg("x", (b, s, d))] + qweight_args(cfg, group))
@@ -153,7 +199,7 @@ def graph_defs(cfg: ModelConfig):
            [arg("x", (cb, s, d))])
 
     n_np = 4 if cfg.norm == "layernorm" else 2
-    for gname, group in GROUPS.items():
+    for gname, group in groups.items():
         qa = qweight_args(cfg, group)
 
         def tweak_fn(x, *rest, cfg=cfg, nq=len(qa), n_np=n_np):
@@ -170,8 +216,9 @@ def graph_defs(cfg: ModelConfig):
                 + [arg("mu_f", (d,)), arg("var_f", (d,)),
                    arg("lr", (1,)), arg("t", (1,))]))
 
-    # Table-9 loss-ablation graphs (nt-small only, per-channel)
-    if cfg.name == "nt-small":
+    # Table-9 loss-ablation graphs (nt-small only, per-channel — they need
+    # the pc forward graphs, so they ride along only when pc is exported)
+    if cfg.name == "nt-small" and "pc" in groups:
         qa = qweight_args(cfg, 0)
         for lname, lfn in (("mse", M.tweak_step_mse), ("kl", M.tweak_step_kl)):
             def abl_fn(x, *rest, cfg=cfg, nq=len(qa), n_np=n_np, lfn=lfn):
@@ -195,8 +242,9 @@ def graph_defs(cfg: ModelConfig):
                [arg("x", (rows, k))])
 
 
-def export_model(cfg: ModelConfig, out_dir: str, manifest: dict):
-    for name, fn, in_args in graph_defs(cfg):
+def export_model(cfg: ModelConfig, out_dir: str, manifest: dict,
+                 groups: dict = None):
+    for name, fn, in_args in graph_defs(cfg, groups):
         t0 = time.time()
         fname = f"{cfg.name}.{name}.hlo.txt"
         path = os.path.join(out_dir, fname)
@@ -215,14 +263,20 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="../artifacts")
     ap.add_argument("--models", nargs="*", default=list(MODELS))
+    ap.add_argument("--groups", default=",".join(GROUPS),
+                    help="comma-separated grain tags to export "
+                         "(pc or g<N>; default: %(default)s)")
     args = ap.parse_args()
+    groups = parse_groups(args.groups)
+    for name in args.models:
+        check_groups(MODELS[name], groups)
     os.makedirs(args.out, exist_ok=True)
 
     manifest = {
         "format": 1,
         "calib_batch": CALIB_BATCH,
         "buckets": EXPORT_BUCKETS,
-        "groups": GROUPS,
+        "groups": groups,
         "models": {name: {
             "n_layer": c.n_layer, "d_model": c.d_model, "n_head": c.n_head,
             "d_ff": c.d_ff, "vocab": c.vocab, "seq": c.seq, "norm": c.norm,
@@ -230,7 +284,7 @@ def main():
         "graphs": [],
     }
     for name in args.models:
-        export_model(MODELS[name], args.out, manifest)
+        export_model(MODELS[name], args.out, manifest, groups)
     with open(os.path.join(args.out, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
     print(f"[aot] manifest: {len(manifest['graphs'])} graphs")

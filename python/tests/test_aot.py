@@ -18,6 +18,9 @@ def tiny_graphs():
 
 def test_graph_inventory(tiny_graphs):
     names = [g[0] for g in tiny_graphs]
+    # the paper's grains plus the sweep neighbours must stay exported;
+    # additions (the documented one-GROUPS-entry recipe) are fine
+    assert {"pc", "g32", "g64", "g128"} <= set(aot.GROUPS)
     for b in aot.EXPORT_BUCKETS:
         assert f"embed.b{b}" in names
         assert f"block_fwd.b{b}" in names
@@ -26,9 +29,39 @@ def test_graph_inventory(tiny_graphs):
             assert f"block_fwd_q.{grp}.b{b}" in names
     assert "block_taps.b32" in names
     assert "channel_stats.b32" in names
-    assert "tweak_step.pc" in names
-    assert "tweak_step.g64" in names
+    for grp in aot.GROUPS:
+        assert f"tweak_step.{grp}" in names
     assert "xtx.k128" in names and "xtx.k512" in names
+
+
+def test_graph_defs_honours_group_subset():
+    cfg = MODELS["nt-tiny"]
+    names = [g[0] for g in aot.graph_defs(cfg, {"g64": 64})]
+    assert "block_fwd_q.g64.b8" in names and "tweak_step.g64" in names
+    assert not any(".pc" in n or ".g32" in n or ".g128" in n for n in names)
+    # the pc-only ablation graphs are gated on pc actually being exported
+    small = [g[0] for g in aot.graph_defs(MODELS["nt-small"], {"g64": 64})]
+    assert "tweak_step_mse.pc" not in small
+
+
+def test_parse_groups_strict():
+    assert aot.parse_groups("pc,g32, g128") == {"pc": 0, "g32": 32,
+                                                "g128": 128}
+    # canonicalized: the runtime only ever derives `g{size}` spellings
+    assert aot.parse_groups("g064") == {"g64": 64}
+    with pytest.raises(ValueError):
+        aot.parse_groups("g0")
+    with pytest.raises(ValueError):
+        aot.parse_groups("grain64")
+    with pytest.raises(ValueError):
+        aot.parse_groups("")
+
+
+def test_check_groups_rejects_nondividing_grain():
+    with pytest.raises(ValueError, match="does not divide"):
+        aot.check_groups(MODELS["nt-tiny"], {"g48": 48})  # 128 % 48 != 0
+    with pytest.raises(ValueError, match="does not divide"):
+        list(aot.graph_defs(MODELS["nt-tiny"], {"g256": 256}))  # > d_model
 
 
 def test_tweak_ablation_graphs_only_for_small():
@@ -57,10 +90,17 @@ def test_rms_arg_counts():
 
 def test_scales_shapes_differ_by_group(tiny_graphs):
     by_name = {g[0]: g for g in tiny_graphs}
+
+    def scales(grp, name):
+        args = {a["name"]: a for a in by_name[f"block_fwd_q.{grp}.b8"][2]}
+        return args[name]["shape"]
+
+    assert scales("pc", "attn.wqkv.scales") == [1, 384]
+    assert scales("g32", "attn.wqkv.scales") == [4, 384]   # 128/32
+    assert scales("g64", "attn.wqkv.scales") == [2, 384]   # 128/64
+    assert scales("g128", "attn.wqkv.scales") == [1, 384]  # 128/128
+    assert scales("g32", "mlp.wfc2.scales") == [16, 128]   # 512/32
     pc = {a["name"]: a for a in by_name["block_fwd_q.pc.b8"][2]}
-    g64 = {a["name"]: a for a in by_name["block_fwd_q.g64.b8"][2]}
-    assert pc["attn.wqkv.scales"]["shape"] == [1, 384]
-    assert g64["attn.wqkv.scales"]["shape"] == [2, 384]  # 128/64
     assert pc["attn.wqkv.codes"]["dtype"] == "i8"
 
 
@@ -76,21 +116,33 @@ def test_one_graph_lowers_to_parseable_hlo():
 
 
 def test_manifest_matches_exports(tmp_path):
-    # export just nt-tiny and verify manifest ↔ files
+    # export just nt-tiny (pc + g32 via the CLI override) and verify
+    # manifest ↔ files plus the schema the Rust runtime parses
     import subprocess
     import sys
     out = str(tmp_path)
     aot.main.__globals__  # keep linters quiet
     subprocess.run(
-        [sys.executable, "-m", "compile.aot", "--out", out, "--models", "nt-tiny"],
+        [sys.executable, "-m", "compile.aot", "--out", out,
+         "--models", "nt-tiny", "--groups", "pc,g32"],
         check=True,
         cwd=str(__import__("pathlib").Path(__file__).parent.parent),
     )
     manifest = json.load(open(f"{out}/manifest.json"))
     assert manifest["format"] == 1
     assert "nt-tiny" in manifest["models"]
+    assert all(isinstance(b, int) and b > 0 for b in manifest["buckets"])
+    # the exported-grain record the runtime validates schemes against
+    assert manifest["groups"] == {"pc": 0, "g32": 32}
+    names = [g["name"] for g in manifest["graphs"]]
+    assert "tweak_step.g32" in names and "block_fwd_q.g32.b8" in names
+    assert not any(".g64" in n or ".g128" in n for n in names)
     for g in manifest["graphs"]:
         assert (tmp_path / g["file"]).exists(), g["file"]
+        # every grain-specialized graph's tag must be a manifest-level grain
+        parts = g["name"].split(".")
+        if parts[0] in ("block_fwd_q", "tweak_step"):
+            assert parts[1] in manifest["groups"], g["name"]
         for a in g["inputs"]:
             assert a["dtype"] in ("f32", "i8", "i32")
             assert all(d > 0 for d in a["shape"])

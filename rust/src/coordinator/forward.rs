@@ -151,6 +151,10 @@ impl LanguageModel for FloatModel<'_, '_> {
         }
         self.head(&x)
     }
+
+    fn max_batch(&self) -> Option<usize> {
+        self.runtime.manifest.max_bucket()
+    }
 }
 
 /// Quantized model runner (the `qOut` stream + quantized evals/serving).
@@ -167,6 +171,10 @@ pub struct QuantModel<'rt, 'q> {
 impl<'rt, 'q> QuantModel<'rt, 'q> {
     pub fn new(runtime: &'rt Runtime, model: &'q QuantizedModel) -> Result<Self> {
         runtime.manifest.verify_model(&model.config)?;
+        // a checkpoint quantized against differently-exported artifacts
+        // (e.g. re-exported with a narrower --groups list) must fail here,
+        // not at graph lookup inside the first served batch
+        runtime.validate_grain(&model.scheme.group_tag())?;
         Ok(QuantModel { runtime, model, act_bits: None })
     }
 
@@ -262,6 +270,10 @@ impl LanguageModel for QuantModel<'_, '_> {
             x = self.block_fwd_q(l, &x)?;
         }
         self.head(&x)
+    }
+
+    fn max_batch(&self) -> Option<usize> {
+        self.runtime.manifest.max_bucket()
     }
 }
 

@@ -15,7 +15,7 @@ mod pipeline;
 pub use forward::{pad_batch, FloatModel, QuantModel};
 pub use hessian::{collect_hessians, hessian_from_tap, hessian_from_tap_cpu};
 pub use metrics::{LayerMetrics, PipelineMetrics};
-pub use pipeline::{quantize_model, PipelineConfig};
+pub use pipeline::{quantize_model, validate_scheme_artifacts, PipelineConfig};
 
 use crate::calib::corpus::spec_by_name;
 use crate::calib::gen::{generate_calib, GenVariant};

@@ -14,7 +14,7 @@ use crate::error::{Error, Result};
 use crate::model::{ModelWeights, QuantLinear, QuantizedBlock, QuantizedModel};
 use crate::quant::quantizer::{resolve, LayerContext, Quantizer, QuantizerParams};
 use crate::quant::{QuantScheme, QuantizedWeight};
-use crate::runtime::Runtime;
+use crate::runtime::{ArtifactManifest, Runtime};
 use crate::tensor::{mean_var_channels, pack_codes, Tensor};
 use crate::tweak::tweaker::{LossKind, TweakTarget};
 use crate::tweak::{LayerLrScheduler, TweakConfig, Tweaker};
@@ -88,6 +88,37 @@ impl PipelineConfig {
     }
 }
 
+/// Fail-fast artifact validation, run at pipeline startup: the scheme's
+/// grain must have exported graph variants, and the tweak loss's
+/// `tweak_step*` graph must exist for this model — one clear
+/// [`Error::Artifact`] listing what the manifest exports, instead of a
+/// graph-lookup failure deep inside the tweak loop.
+pub fn validate_scheme_artifacts(
+    manifest: &ArtifactManifest,
+    model: &str,
+    cfg: &PipelineConfig,
+) -> Result<()> {
+    let tag = cfg.scheme.group_tag();
+    manifest.validate_grain(&tag)?;
+    if let Some(t) = cfg.tweak {
+        let graph = t.loss.graph_name(&tag);
+        if manifest.graph(model, &graph).is_err() {
+            let note = match t.loss {
+                LossKind::Dist => "",
+                _ => "; the Mse/Kl ablation graphs are exported per-channel \
+                      for nt-small only",
+            };
+            return Err(Error::Artifact(format!(
+                "tweak loss {:?} at grain `{tag}` needs graph `{model}.{graph}`, \
+                 which is not in the manifest (exported grains: {}{note})",
+                t.loss,
+                manifest.grain_tags().join(", ")
+            )));
+        }
+    }
+    Ok(())
+}
+
 fn to_quant_linear(qw: QuantizedWeight, bias: Tensor, scheme: &QuantScheme) -> Result<QuantLinear> {
     let bits = scheme.pack_bits()?;
     Ok(QuantLinear {
@@ -118,6 +149,7 @@ pub fn quantize_model(
         )));
     }
     cfg.validate(mcfg.n_layer)?;
+    validate_scheme_artifacts(&runtime.manifest, &mcfg.name, cfg)?;
     let quantizer: Box<dyn Quantizer> = resolve(&cfg.method, &cfg.params)?;
 
     let fm = FloatModel::new(runtime, weights)?;

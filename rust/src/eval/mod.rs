@@ -18,6 +18,12 @@ pub trait LanguageModel {
     fn config(&self) -> &ModelConfig;
     /// tokens i32[B, S] → logits f32[B, S, V]
     fn logits(&self, tokens: &Tensor) -> Result<Tensor>;
+    /// Largest batch `logits` accepts in one call (`None` = unbounded).
+    /// Runners backed by fixed-shape AOT graphs report the largest exported
+    /// batch bucket; the serving loop splits oversized drains to fit.
+    fn max_batch(&self) -> Option<usize> {
+        None
+    }
 }
 
 /// Log-softmax over the last dim of a logits row.

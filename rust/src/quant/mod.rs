@@ -35,6 +35,24 @@
 //! then GPTQ reconstructs the smoothed weights against Hessians of the
 //! smoothed inputs. See [`quantizer`] for the full contract.
 //!
+//! # Quantization grains
+//!
+//! [`QuantScheme::group_size`] picks the scale grain along K: `None` is
+//! per-channel (tag `pc`), `Some(g)` is group-`g` (tag `g{g}`). The AOT
+//! exporter compiles one `block_fwd_q`/`tweak_step` graph variant per grain
+//! and records the set under the manifest's `groups` key; the default
+//! export covers `pc`/`g32`/`g64`/`g128`. At pipeline startup the requested
+//! scheme's grain is checked against that record
+//! (`coordinator::validate_scheme_artifacts`), so an unexported grain fails
+//! immediately with the list of what *is* exported.
+//!
+//! **Adding a new grain** is one `GROUPS` entry in `python/compile/aot.py`
+//! (e.g. `"g16": 16` — the tag must be `g{size}` and the size must divide
+//! every model's `d_model` and `d_ff`) followed by a re-export
+//! (`make artifacts`, or `python -m compile.aot --groups pc,g16,...`). No
+//! Rust change is needed: [`QuantScheme::group_tag`] derives the tag from
+//! `group_size`, and the runtime learns the exported set from the manifest.
+//!
 //! [`Quantizer`]: quantizer::Quantizer
 
 pub mod act;
@@ -75,6 +93,16 @@ impl QuantScheme {
         QuantScheme { bits: 3, group_size: Some(64) }
     }
 
+    /// Finest exported grain (the FPTQ-style fine-grained end of the sweep).
+    pub fn w2_g32() -> Self {
+        QuantScheme { bits: 2, group_size: Some(32) }
+    }
+
+    /// Coarsest exported grouped grain (GPTQ's deployment default).
+    pub fn w4_g128() -> Self {
+        QuantScheme { bits: 4, group_size: Some(128) }
+    }
+
     /// Symmetric integer ceiling: 2^(bits-1) - 1.
     pub fn qmax(&self) -> f32 {
         ((1i32 << (self.bits - 1)) - 1) as f32
@@ -110,9 +138,11 @@ impl QuantScheme {
     }
 
     /// Manifest group tag for artifact lookup: `"pc"` or the real grain
-    /// (`"g64"`, `"g128"`, ...). A grain without exported graphs then fails
-    /// loudly at graph lookup instead of silently loading a mismatched
-    /// `g64` artifact.
+    /// (`"g64"`, `"g128"`, ...). The tag is checked against the manifest's
+    /// exported-grain record at pipeline startup
+    /// (`coordinator::validate_scheme_artifacts`), so a grain without
+    /// exported graphs fails fast with the exported list instead of dying
+    /// at graph lookup mid-run.
     pub fn group_tag(&self) -> String {
         match self.group_size {
             None => "pc".to_string(),
@@ -163,6 +193,8 @@ mod tests {
         assert_eq!(s2.qmax(), 1.0);
         assert_eq!(s2.group_for(256), 64);
         assert_eq!(s2.group_tag(), "g64");
+        assert_eq!(QuantScheme::w2_g32().group_tag(), "g32");
+        assert_eq!(QuantScheme::w4_g128().group_tag(), "g128");
     }
 
     #[test]

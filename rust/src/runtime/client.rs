@@ -134,4 +134,11 @@ impl Runtime {
         }
         Ok(())
     }
+
+    /// Fail unless `tag` has exported graph variants (the error lists what
+    /// the manifest does export). Runners call this at construction so an
+    /// unexported grain dies before any graph is compiled.
+    pub fn validate_grain(&self, tag: &str) -> Result<()> {
+        self.manifest.validate_grain(tag)
+    }
 }

@@ -1,7 +1,7 @@
 //! `artifacts/manifest.json` — the contract between `aot.py` and the runtime
 //! (parsed with the in-tree JSON parser; serde is unavailable offline).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};
 
 use crate::error::{Error, Result};
@@ -42,6 +42,11 @@ pub struct ArtifactManifest {
     pub dir: PathBuf,
     pub calib_batch: usize,
     pub buckets: Vec<usize>,
+    /// Exported quantization grains: tag (`"pc"`, `"g32"`, ...) -> group
+    /// size (0 = per-channel). Every tag has `block_fwd_q.{tag}.b*` and
+    /// `tweak_step.{tag}` graph variants on disk; schemes with any other
+    /// grain are rejected at pipeline startup via [`Self::validate_grain`].
+    pub groups: BTreeMap<String, usize>,
     pub models: HashMap<String, ManifestModel>,
     pub graphs: Vec<GraphEntry>,
     index: HashMap<(String, String), usize>,
@@ -79,12 +84,45 @@ impl ArtifactManifest {
             return Err(Error::Artifact("manifest format != 1".into()));
         }
         let calib_batch = need_usize(&root, "calib_batch")?;
-        let buckets = need(&root, "buckets")?
+        let mut buckets = Vec::new();
+        for b in need(&root, "buckets")?
             .as_arr()
             .ok_or_else(|| Error::Artifact("buckets not an array".into()))?
-            .iter()
-            .filter_map(|b| b.as_usize())
-            .collect();
+        {
+            // strict: a silently dropped bucket would shift every
+            // bucket_for() decision instead of failing the load
+            buckets.push(b.as_usize().ok_or_else(|| {
+                Error::Artifact("manifest: non-numeric entry in `buckets`".into())
+            })?);
+        }
+        if buckets.is_empty() {
+            return Err(Error::Artifact("manifest: empty `buckets`".into()));
+        }
+
+        let mut groups = BTreeMap::new();
+        for (tag, size) in need(&root, "groups")?
+            .as_obj()
+            .ok_or_else(|| Error::Artifact("groups not an object".into()))?
+        {
+            let size = size.as_usize().ok_or_else(|| {
+                Error::Artifact(format!("manifest: group `{tag}` not a number"))
+            })?;
+            // the tag is derived from the size at lookup time
+            // (QuantScheme::group_tag), so a drifted record like
+            // {"g32": 64} would pass validation here and die at PJRT
+            // shape mismatch mid-run — reject it at load instead
+            let expected = if size == 0 { "pc".to_string() } else { format!("g{size}") };
+            if *tag != expected {
+                return Err(Error::Artifact(format!(
+                    "manifest: group tag `{tag}` inconsistent with size {size} \
+                     (expected `{expected}`)"
+                )));
+            }
+            groups.insert(tag.clone(), size);
+        }
+        if groups.is_empty() {
+            return Err(Error::Artifact("manifest: empty `groups`".into()));
+        }
 
         let mut models = HashMap::new();
         for (name, m) in need(&root, "models")?
@@ -115,16 +153,19 @@ impl ArtifactManifest {
                 .as_arr()
                 .ok_or_else(|| Error::Artifact("inputs not an array".into()))?
             {
-                inputs.push(IoSpec {
-                    name: need_str(i, "name")?,
-                    shape: need(i, "shape")?
-                        .as_arr()
-                        .ok_or_else(|| Error::Artifact("shape not an array".into()))?
-                        .iter()
-                        .filter_map(|d| d.as_usize())
-                        .collect(),
-                    dtype: need_str(i, "dtype")?,
-                });
+                let name = need_str(i, "name")?;
+                let mut shape = Vec::new();
+                for d in need(i, "shape")?
+                    .as_arr()
+                    .ok_or_else(|| Error::Artifact("shape not an array".into()))?
+                {
+                    shape.push(d.as_usize().ok_or_else(|| {
+                        Error::Artifact(format!(
+                            "manifest: non-numeric dim in shape of `{name}`"
+                        ))
+                    })?);
+                }
+                inputs.push(IoSpec { name, shape, dtype: need_str(i, "dtype")? });
             }
             graphs.push(GraphEntry {
                 model: need_str(g, "model")?,
@@ -138,7 +179,35 @@ impl ArtifactManifest {
         for (i, g) in graphs.iter().enumerate() {
             index.insert((g.model.clone(), g.name.clone()), i);
         }
-        Ok(ArtifactManifest { dir, calib_batch, buckets, models, graphs, index })
+        Ok(ArtifactManifest { dir, calib_batch, buckets, groups, models, graphs, index })
+    }
+
+    /// The exported grain tags, sorted (`["g32", "g64", "pc"]`).
+    pub fn grain_tags(&self) -> Vec<&str> {
+        self.groups.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Whether `tag` has exported graph variants.
+    pub fn has_grain(&self, tag: &str) -> bool {
+        self.groups.contains_key(tag)
+    }
+
+    /// Reject a grain tag with no exported graphs — the fail-fast gate the
+    /// pipeline runs at startup instead of dying mid-tweak at graph lookup.
+    pub fn validate_grain(&self, tag: &str) -> Result<()> {
+        if self.has_grain(tag) {
+            return Ok(());
+        }
+        Err(Error::Artifact(format!(
+            "quant grain `{tag}` has no exported graphs (manifest exports: {}) — \
+             re-run the AOT export with `--groups` including `{tag}`",
+            self.grain_tags().join(", ")
+        )))
+    }
+
+    /// Largest exported batch bucket (manifests always have ≥ 1 bucket).
+    pub fn max_bucket(&self) -> Option<usize> {
+        self.buckets.iter().copied().max()
     }
 
     /// Find a graph by (model, graph-name).
@@ -195,8 +264,12 @@ impl ArtifactManifest {
 mod tests {
     use super::*;
 
-    fn write_fixture(dir: &Path) {
+    fn write_manifest(dir: &Path, json: &str) {
         std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), json).unwrap();
+    }
+
+    fn write_fixture(dir: &Path) {
         let json = r#"{
             "format": 1, "calib_batch": 32, "buckets": [8, 32],
             "groups": {"pc": 0, "g64": 64},
@@ -206,7 +279,7 @@ mod tests {
                         "file": "nt-tiny.embed.b8.hlo.txt",
                         "inputs": [{"name": "tokens", "shape": [8, 128], "dtype": "i32"}]}]
         }"#;
-        std::fs::write(dir.join("manifest.json"), json).unwrap();
+        write_manifest(dir, json);
     }
 
     #[test]
@@ -247,5 +320,121 @@ mod tests {
     #[test]
     fn missing_dir_errors() {
         assert!(ArtifactManifest::load("/definitely/missing").is_err());
+    }
+
+    #[test]
+    fn groups_parsed_and_grain_validated() {
+        let dir = std::env::temp_dir().join("nt_manifest_groups");
+        write_fixture(&dir);
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.groups.get("pc"), Some(&0));
+        assert_eq!(m.groups.get("g64"), Some(&64));
+        assert_eq!(m.grain_tags(), vec!["g64", "pc"]);
+        assert!(m.has_grain("g64") && !m.has_grain("g128"));
+        m.validate_grain("pc").unwrap();
+        let err = m.validate_grain("g128").unwrap_err().to_string();
+        assert!(err.contains("g128") && err.contains("g64, pc"), "{err}");
+        assert_eq!(m.max_bucket(), Some(32));
+    }
+
+    #[test]
+    fn multi_grain_manifest_loads() {
+        let dir = std::env::temp_dir().join("nt_manifest_multigrain");
+        write_manifest(
+            &dir,
+            r#"{
+            "format": 1, "calib_batch": 32, "buckets": [8, 32],
+            "groups": {"pc": 0, "g32": 32, "g64": 64, "g128": 128},
+            "models": {}, "graphs": []
+        }"#,
+        );
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.grain_tags(), vec!["g128", "g32", "g64", "pc"]);
+        m.validate_grain("g32").unwrap();
+        m.validate_grain("g128").unwrap();
+    }
+
+    #[test]
+    fn malformed_buckets_rejected() {
+        // a dropped bucket used to silently shift every bucket_for() answer
+        let dir = std::env::temp_dir().join("nt_manifest_badbucket");
+        write_manifest(
+            &dir,
+            r#"{
+            "format": 1, "calib_batch": 32, "buckets": [8, "32"],
+            "groups": {"pc": 0}, "models": {}, "graphs": []
+        }"#,
+        );
+        let err = ArtifactManifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("buckets"), "{err}");
+
+        // empty buckets would make every batch oversized at serve time
+        let dir = std::env::temp_dir().join("nt_manifest_emptybuckets");
+        write_manifest(
+            &dir,
+            r#"{"format": 1, "calib_batch": 32, "buckets": [],
+                "groups": {"pc": 0}, "models": {}, "graphs": []}"#,
+        );
+        let err = ArtifactManifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("buckets"), "{err}");
+    }
+
+    #[test]
+    fn malformed_or_missing_groups_rejected() {
+        let dir = std::env::temp_dir().join("nt_manifest_badgroup");
+        write_manifest(
+            &dir,
+            r#"{
+            "format": 1, "calib_batch": 32, "buckets": [8],
+            "groups": {"pc": 0, "g64": "sixty-four"}, "models": {}, "graphs": []
+        }"#,
+        );
+        let err = ArtifactManifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("g64"), "{err}");
+
+        let dir = std::env::temp_dir().join("nt_manifest_nogroups");
+        write_manifest(
+            &dir,
+            r#"{"format": 1, "calib_batch": 32, "buckets": [8],
+                "models": {}, "graphs": []}"#,
+        );
+        let err = ArtifactManifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("groups"), "{err}");
+
+        let dir = std::env::temp_dir().join("nt_manifest_emptygroups");
+        write_manifest(
+            &dir,
+            r#"{"format": 1, "calib_batch": 32, "buckets": [8],
+                "groups": {}, "models": {}, "graphs": []}"#,
+        );
+        assert!(ArtifactManifest::load(&dir).is_err());
+
+        // a drifted tag↔size pair would pass grain validation and then die
+        // at PJRT shape mismatch mid-run
+        let dir = std::env::temp_dir().join("nt_manifest_drifted");
+        write_manifest(
+            &dir,
+            r#"{"format": 1, "calib_batch": 32, "buckets": [8],
+                "groups": {"g32": 64}, "models": {}, "graphs": []}"#,
+        );
+        let err = ArtifactManifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("`g32`") && err.contains("64"), "{err}");
+    }
+
+    #[test]
+    fn malformed_shape_rejected() {
+        let dir = std::env::temp_dir().join("nt_manifest_badshape");
+        write_manifest(
+            &dir,
+            r#"{
+            "format": 1, "calib_batch": 32, "buckets": [8],
+            "groups": {"pc": 0}, "models": {},
+            "graphs": [{"model": "m", "name": "g", "file": "f",
+                        "inputs": [{"name": "x", "shape": [8, null],
+                                    "dtype": "f32"}]}]
+        }"#,
+        );
+        let err = ArtifactManifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("shape") && err.contains("`x`"), "{err}");
     }
 }

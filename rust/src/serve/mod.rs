@@ -105,60 +105,159 @@ pub fn channel() -> (ServeHandle, mpsc::Receiver<Request>) {
     (ServeHandle { tx }, rx)
 }
 
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::tensor::Tensor;
+
+    /// Mock with an optional hard batch ceiling, like an AOT runner whose
+    /// largest exported bucket is `cap`: anything bigger is the old
+    /// mid-batch `Error::Artifact` failure. `cap: None` models an
+    /// unbounded executor (the trait default).
+    struct Bucketed {
+        cfg: ModelConfig,
+        cap: Option<usize>,
+    }
+
+    impl LanguageModel for Bucketed {
+        fn config(&self) -> &ModelConfig {
+            &self.cfg
+        }
+
+        fn logits(&self, tokens: &Tensor) -> Result<Tensor> {
+            let (b, s) = (tokens.shape[0], tokens.shape[1]);
+            if b > self.cap.unwrap_or(usize::MAX) {
+                return Err(Error::Msg(format!("batch {b} exceeds largest bucket")));
+            }
+            Ok(Tensor::f32(&[b, s, self.cfg.vocab],
+                           vec![0.0; b * s * self.cfg.vocab]))
+        }
+
+        fn max_batch(&self) -> Option<usize> {
+            self.cap
+        }
+    }
+
+    #[test]
+    fn oversized_drain_is_chunked_to_max_batch() {
+        let model =
+            Bucketed { cfg: ModelConfig::builtin("nt-tiny").unwrap(), cap: Some(2) };
+        let (handle, rx) = channel();
+        let replies: Vec<_> = (0..5)
+            .map(|_| handle.submit_async(vec![1, 2], 2).unwrap())
+            .collect();
+        drop(handle);
+        // max_batch 8 > the model's bucket: the drain of 5 must split 2/2/1
+        let stats = serve_loop(
+            &model,
+            ServeConfig { max_batch: 8, batch_window: Duration::from_millis(100) },
+            rx,
+        )
+        .unwrap();
+        assert_eq!(stats.served, 5);
+        assert_eq!(stats.max_batch_seen, 2);
+        for rx in replies {
+            let resp = rx.recv().expect("every rider answered");
+            assert_eq!(resp.tokens.len(), 4);
+            assert!(resp.batch_size <= 2);
+        }
+    }
+
+    #[test]
+    fn unbounded_model_is_not_chunked() {
+        // max_batch() == None (the trait default): the whole drain rides
+        // in one batch
+        let model = Bucketed { cfg: ModelConfig::builtin("nt-tiny").unwrap(), cap: None };
+        let (handle, rx) = channel();
+        let replies: Vec<_> = (0..3)
+            .map(|_| handle.submit_async(vec![1], 1).unwrap())
+            .collect();
+        drop(handle);
+        let stats = serve_loop(
+            &model,
+            ServeConfig { max_batch: 8, batch_window: Duration::from_millis(100) },
+            rx,
+        )
+        .unwrap();
+        assert_eq!(stats.served, 3);
+        assert_eq!(stats.batches, 1, "unbounded model must not be chunked");
+        for rx in replies {
+            assert_eq!(rx.recv().expect("answered").batch_size, 3);
+        }
+    }
+}
+
 /// Run the serving loop on the current thread until every handle is dropped.
+///
+/// A drain larger than the model's [`LanguageModel::max_batch`] (the
+/// largest exported AOT batch bucket) is split into bucket-sized chunks and
+/// generated chunk by chunk — an over-eager `max_batch` in [`ServeConfig`]
+/// degrades to more batches instead of failing every rider with an
+/// artifact error.
 pub fn serve_loop(
     model: &dyn LanguageModel,
     cfg: ServeConfig,
     rx: mpsc::Receiver<Request>,
 ) -> Result<ServeStats> {
     let mut stats = ServeStats::default();
+    let chunk_cap = model.max_batch().unwrap_or(usize::MAX).max(1);
     loop {
         // block for the first request of the batch
         let Ok(first) = rx.recv() else {
             return Ok(stats);
         };
-        let mut batch = vec![first];
+        let mut pending = vec![first];
         let deadline = Instant::now() + cfg.batch_window;
-        while batch.len() < cfg.max_batch {
+        while pending.len() < cfg.max_batch {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
             match rx.recv_timeout(deadline - now) {
-                Ok(r) => batch.push(r),
+                Ok(r) => pending.push(r),
                 Err(_) => break,
             }
         }
 
-        let t0 = Instant::now();
-        let seq = model.config().seq;
-        let target = batch
-            .iter()
-            .map(|r| (r.prompt.len() + r.max_new).min(seq))
-            .max()
-            .unwrap();
-        let prompts: Vec<Vec<i32>> = batch.iter().map(|r| r.prompt.clone()).collect();
-        let outs = generate(
-            model,
-            &prompts,
-            target,
-            &SampleConfig { temperature: 0.0, stochastic_prefix: 0, seed: 0 },
-        )?;
-        let gen_micros = t0.elapsed().as_micros();
-        let bs = batch.len();
-        stats.batches += 1;
-        stats.total_gen_micros += gen_micros;
-        stats.max_batch_seen = stats.max_batch_seen.max(bs);
-        for (req, tokens) in batch.into_iter().zip(outs) {
-            let want = (req.prompt.len() + req.max_new).min(seq);
-            let resp = Response {
-                tokens: tokens[..want].to_vec(),
-                queue_micros: (t0 - req.enqueued).as_micros(),
-                gen_micros,
-                batch_size: bs,
+        while !pending.is_empty() {
+            let rest = if pending.len() > chunk_cap {
+                pending.split_off(chunk_cap)
+            } else {
+                Vec::new()
             };
-            let _ = req.reply.send(resp);
-            stats.served += 1;
+            let batch = std::mem::replace(&mut pending, rest);
+
+            let t0 = Instant::now();
+            let seq = model.config().seq;
+            let target = batch
+                .iter()
+                .map(|r| (r.prompt.len() + r.max_new).min(seq))
+                .max()
+                .unwrap();
+            let prompts: Vec<Vec<i32>> = batch.iter().map(|r| r.prompt.clone()).collect();
+            let outs = generate(
+                model,
+                &prompts,
+                target,
+                &SampleConfig { temperature: 0.0, stochastic_prefix: 0, seed: 0 },
+            )?;
+            let gen_micros = t0.elapsed().as_micros();
+            let bs = batch.len();
+            stats.batches += 1;
+            stats.total_gen_micros += gen_micros;
+            stats.max_batch_seen = stats.max_batch_seen.max(bs);
+            for (req, tokens) in batch.into_iter().zip(outs) {
+                let want = (req.prompt.len() + req.max_new).min(seq);
+                let resp = Response {
+                    tokens: tokens[..want].to_vec(),
+                    queue_micros: (t0 - req.enqueued).as_micros(),
+                    gen_micros,
+                    batch_size: bs,
+                };
+                let _ = req.reply.send(resp);
+                stats.served += 1;
+            }
         }
     }
 }

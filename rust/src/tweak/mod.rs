@@ -14,4 +14,4 @@ pub mod scheduler;
 pub mod tweaker;
 
 pub use scheduler::LayerLrScheduler;
-pub use tweaker::{TweakConfig, TweakOutcome, Tweaker};
+pub use tweaker::{LossKind, TweakConfig, TweakOutcome, Tweaker};

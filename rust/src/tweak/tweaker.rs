@@ -21,12 +21,32 @@ pub enum LossKind {
 }
 
 impl LossKind {
+    /// The `tweak_step*` graph this loss drives, at the scheme's grain.
+    ///
+    /// Grain-honest for the ablation losses too: `Mse`/`Kl` used to
+    /// hardcode `.pc`, which fed per-channel graphs grouped scale tensors
+    /// and died at PJRT argument mismatch. Whether the named graph was
+    /// actually exported is checked up front by the pipeline
+    /// (`validate_scheme_artifacts`), not discovered mid-tweak here.
     pub fn graph_name(&self, group_tag: &str) -> String {
         match self {
             LossKind::Dist => format!("tweak_step.{group_tag}"),
-            LossKind::Mse => "tweak_step_mse.pc".to_string(),
-            LossKind::Kl => "tweak_step_kl.pc".to_string(),
+            LossKind::Mse => format!("tweak_step_mse.{group_tag}"),
+            LossKind::Kl => format!("tweak_step_kl.{group_tag}"),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn graph_name_tracks_grain_for_all_losses() {
+        assert_eq!(LossKind::Dist.graph_name("g32"), "tweak_step.g32");
+        // the ablation losses used to hardcode `.pc` at every grain
+        assert_eq!(LossKind::Mse.graph_name("g64"), "tweak_step_mse.g64");
+        assert_eq!(LossKind::Kl.graph_name("pc"), "tweak_step_kl.pc");
     }
 }
 

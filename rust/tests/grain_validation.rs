@@ -1,0 +1,101 @@
+//! Offline (no PJRT, no artifacts) coverage of the grain-generic AOT
+//! contract: manifests with multiple grains load with their `groups` record,
+//! and the pipeline's graph-resolution path accepts exactly the exported
+//! grains — failing at startup with the exported-grain list, never at
+//! mid-run graph lookup.
+
+use normtweak::coordinator::{validate_scheme_artifacts, PipelineConfig};
+use normtweak::quant::QuantScheme;
+use normtweak::runtime::ArtifactManifest;
+use normtweak::tweak::{LossKind, TweakConfig};
+
+/// A manifest exporting pc/g32/g128 (note: no g64) for nt-tiny, with the
+/// per-grain tweak graphs plus the pc-only Mse ablation graph.
+/// `unique` keeps concurrently running tests off each other's fixture file.
+fn multigrain_manifest(unique: &str) -> ArtifactManifest {
+    let dir = std::env::temp_dir().join(format!("nt_grain_validation_{unique}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    let graph = |name: &str| {
+        format!(
+            r#"{{"model": "nt-tiny", "name": "{name}",
+                 "file": "nt-tiny.{name}.hlo.txt",
+                 "inputs": [{{"name": "x", "shape": [32, 128, 128],
+                             "dtype": "f32"}}]}}"#
+        )
+    };
+    let graphs = ["tweak_step.pc", "tweak_step.g32", "tweak_step.g128",
+                  "tweak_step_mse.pc"]
+        .map(graph)
+        .join(",\n");
+    let json = format!(
+        r#"{{
+        "format": 1, "calib_batch": 32, "buckets": [8, 32],
+        "groups": {{"pc": 0, "g32": 32, "g128": 128}},
+        "models": {{"nt-tiny": {{"n_layer": 2, "d_model": 128, "n_head": 4,
+                    "d_ff": 512, "vocab": 2048, "seq": 128,
+                    "norm": "layernorm"}}}},
+        "graphs": [{graphs}]
+    }}"#
+    );
+    std::fs::write(dir.join("manifest.json"), json).unwrap();
+    ArtifactManifest::load(&dir).unwrap()
+}
+
+#[test]
+fn manifest_records_multiple_grains() {
+    let m = multigrain_manifest("records");
+    assert_eq!(m.grain_tags(), vec!["g128", "g32", "pc"]);
+    assert_eq!(m.groups["g32"], 32);
+    assert_eq!(m.groups["g128"], 128);
+    m.validate_grain("g32").unwrap();
+    m.validate_grain("g128").unwrap();
+    assert!(m.validate_grain("g64").is_err());
+}
+
+#[test]
+fn exported_grains_pass_pipeline_graph_resolution() {
+    let m = multigrain_manifest("resolution");
+    // the ISSUE's two sweep schemes resolve their graphs up front
+    for scheme in [QuantScheme::w2_g32(), QuantScheme::w4_g128()] {
+        let plain = PipelineConfig::new("rtn", scheme);
+        validate_scheme_artifacts(&m, "nt-tiny", &plain).unwrap();
+        let tweaked = PipelineConfig::new("gptq", scheme)
+            .with_tweak(TweakConfig::default());
+        validate_scheme_artifacts(&m, "nt-tiny", &tweaked).unwrap();
+    }
+}
+
+#[test]
+fn unexported_grain_fails_fast_listing_exports() {
+    let m = multigrain_manifest("unexported");
+    // g64 is not in this manifest: both plain and tweaked runs must die at
+    // startup with the exported-grain list, not at graph lookup mid-run
+    for cfg in [
+        PipelineConfig::new("rtn", QuantScheme::w2_g64()),
+        PipelineConfig::new("gptq", QuantScheme::w2_g64())
+            .with_tweak(TweakConfig::default()),
+    ] {
+        let err = validate_scheme_artifacts(&m, "nt-tiny", &cfg).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("`g64`"), "{msg}");
+        assert!(msg.contains("g128, g32, pc"), "{msg}");
+    }
+}
+
+#[test]
+fn ablation_loss_requires_its_grain_specific_graph() {
+    let m = multigrain_manifest("ablation");
+    let mse = TweakConfig { loss: LossKind::Mse, ..TweakConfig::default() };
+    // pc has the exported Mse ablation graph...
+    let pc = PipelineConfig::new("rtn", QuantScheme::w4_perchannel())
+        .with_tweak(mse);
+    validate_scheme_artifacts(&m, "nt-tiny", &pc).unwrap();
+    // ...grouped grains do not: error up front, naming the missing graph
+    let g32 = PipelineConfig::new("rtn", QuantScheme::w2_g32()).with_tweak(mse);
+    let msg = format!("{}", validate_scheme_artifacts(&m, "nt-tiny", &g32).unwrap_err());
+    assert!(msg.contains("tweak_step_mse.g32"), "{msg}");
+    let kl = TweakConfig { loss: LossKind::Kl, ..TweakConfig::default() };
+    let g128 = PipelineConfig::new("rtn", QuantScheme::w4_g128()).with_tweak(kl);
+    let msg = format!("{}", validate_scheme_artifacts(&m, "nt-tiny", &g128).unwrap_err());
+    assert!(msg.contains("tweak_step_kl.g128"), "{msg}");
+}

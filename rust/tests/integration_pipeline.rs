@@ -94,6 +94,63 @@ fn all_methods_run_on_tiny() {
 }
 
 #[test]
+fn non_g64_grains_run_end_to_end_or_fail_at_startup() {
+    let Some(rt) = common::runtime_or_skip() else { return };
+    let Some(w) = common::weights_or_skip("nt-tiny") else { return };
+    let calib = calib_from_corpus(&rt, w.config.seq);
+    // the acceptance contract: a g32/g128 scheme either resolves real
+    // exported graphs end-to-end, or fails at pipeline startup listing the
+    // manifest's exported grains — never at mid-run graph lookup
+    for scheme in [QuantScheme::w2_g32(), QuantScheme::w4_g128()] {
+        let tag = scheme.group_tag();
+        let cfg = PipelineConfig::new("rtn", scheme)
+            .with_tweak(TweakConfig::default());
+        match quantize_model(&rt, &w, &calib, &cfg) {
+            Ok((qm, metrics)) => {
+                assert!(rt.manifest.has_grain(&tag), "{tag} ran but unexported?");
+                assert_eq!(metrics.group, scheme.group_size);
+                let qr = QuantModel::new(&rt, &qm).unwrap();
+                let toks = Tensor::i32(&[1, w.config.seq], vec![2; w.config.seq]);
+                let logits = qr.logits(&toks).unwrap();
+                assert_eq!(logits.shape, vec![1, w.config.seq, w.config.vocab]);
+            }
+            Err(e) => {
+                assert!(!rt.manifest.has_grain(&tag), "{tag} exported but failed: {e}");
+                let msg = format!("{e}");
+                assert!(
+                    msg.contains(&tag) && msg.contains("exported"),
+                    "startup error must list exported grains: {msg}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn ablation_loss_on_model_without_its_graph_fails_at_startup() {
+    let Some(rt) = common::runtime_or_skip() else { return };
+    let Some(w) = common::weights_or_skip("nt-tiny") else { return };
+    let calib = calib_from_corpus(&rt, w.config.seq);
+    // nt-tiny has no Mse/Kl ablation graphs (nt-small only): requesting
+    // --loss mse must error up front naming the missing graph, not at PJRT
+    // argument-count mismatch mid-tweak
+    let cfg = PipelineConfig::new("rtn", QuantScheme::w2_g64()).with_tweak(
+        normtweak::tweak::TweakConfig {
+            loss: normtweak::tweak::LossKind::Mse,
+            ..Default::default()
+        },
+    );
+    let err = quantize_model(&rt, &w, &calib, &cfg).unwrap_err();
+    let msg = format!("{err}");
+    // (either the missing ablation graph, or — under a re-export that
+    // dropped g64 entirely — the missing grain; both are startup errors)
+    assert!(
+        msg.contains("tweak_step_mse.g64") || msg.contains("no exported graphs"),
+        "{msg}"
+    );
+}
+
+#[test]
 fn unknown_method_fails_loudly() {
     let Some(rt) = common::runtime_or_skip() else { return };
     let Some(w) = common::weights_or_skip("nt-tiny") else { return };
