@@ -77,6 +77,9 @@ fn main() -> normtweak::Result<()> {
     if want("10") {
         emit(repro::table10(&ctx, "nt-small")?);
     }
+    if want("plan") {
+        emit(repro::table_plan(&ctx, "nt-small", 2.25)?);
+    }
 
     let out_dir = std::path::Path::new(&artifacts).join("experiments");
     std::fs::create_dir_all(&out_dir)?;

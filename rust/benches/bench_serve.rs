@@ -11,7 +11,7 @@ use normtweak::quant::QuantScheme;
 use normtweak::runtime::Runtime;
 use normtweak::serve::{channel, serve_loop, ServeConfig};
 
-fn drive(model: &QuantModel, max_batch: usize, n_requests: usize) -> (f64, f64) {
+fn drive(model: &QuantModel, max_batch: usize, n_requests: usize) -> (f64, f64, f64) {
     let (handle, rx) = channel();
     let lat = std::sync::Mutex::new(Vec::<u128>::new());
     let t0 = Instant::now();
@@ -41,7 +41,7 @@ fn drive(model: &QuantModel, max_batch: usize, n_requests: usize) -> (f64, f64) 
     let mut l = lat.into_inner().unwrap();
     l.sort_unstable();
     let p50 = l[l.len() / 2] as f64 / 1000.0;
-    (stats.served as f64 / wall, p50)
+    (stats.served as f64 / wall, p50, stats.mean_queue_micros() / 1000.0)
 }
 
 fn main() {
@@ -67,7 +67,10 @@ fn main() {
     drive(&model, 8, 8);
 
     for max_batch in [1usize, 4, 8] {
-        let (rps, p50) = drive(&model, max_batch, 32);
-        println!("max_batch {max_batch}: {rps:>6.1} req/s   p50 {p50:>7.1} ms");
+        let (rps, p50, queue) = drive(&model, max_batch, 32);
+        println!(
+            "max_batch {max_batch}: {rps:>6.1} req/s   p50 {p50:>7.1} ms   \
+             mean queue {queue:>7.1} ms"
+        );
     }
 }

@@ -157,10 +157,12 @@ impl Config {
     }
 
     /// Parse `layer_bits` overrides into per-layer schemes sharing the base
-    /// scheme's group grain.
+    /// scheme's group grain. A layer index may appear at most once —
+    /// letting the last entry win silently hid typos in hand-typed lists.
     pub fn layer_schemes(&self) -> Result<Vec<(usize, QuantScheme)>> {
         let base = self.scheme();
         let mut out = Vec::new();
+        let mut seen = std::collections::BTreeSet::new();
         for spec in &self.quant.layer_bits {
             let (l, b) = spec.split_once(':').ok_or_else(|| {
                 Error::Config(format!(
@@ -173,6 +175,12 @@ impl Config {
             let bits: u8 = b.trim().parse().map_err(|_| {
                 Error::Config(format!("bad bit width in layer_bits entry `{spec}`"))
             })?;
+            if !seen.insert(layer) {
+                return Err(Error::Config(format!(
+                    "duplicate layer index {layer} in layer_bits (entry `{spec}`); \
+                     each layer may be overridden once"
+                )));
+            }
             out.push((layer, QuantScheme { bits, group_size: base.group_size }));
         }
         Ok(out)
@@ -189,12 +197,7 @@ impl Config {
         if !self.tweak.enabled {
             return Ok(None);
         }
-        let loss = match self.tweak.loss.as_str() {
-            "dist" => LossKind::Dist,
-            "mse" => LossKind::Mse,
-            "kl" => LossKind::Kl,
-            other => return Err(Error::Config(format!("unknown loss {other}"))),
-        };
+        let loss = LossKind::from_str(&self.tweak.loss)?;
         Ok(Some(TweakConfig {
             iters: self.tweak.iters,
             lr0: self.tweak.lr0,
@@ -279,6 +282,17 @@ mod tests {
         assert_eq!(overrides[0], (0, QuantScheme { bits: 8, group_size: Some(64) }));
         assert_eq!(overrides[1], (3, QuantScheme { bits: 4, group_size: Some(64) }));
         let c = Config::from_toml("[quant]\nlayer_bits = [\"zap\"]").unwrap();
+        assert!(c.layer_schemes().is_err());
+    }
+
+    #[test]
+    fn duplicate_layer_bits_rejected() {
+        // the last entry used to win silently, hiding typos like 0:8,0:2
+        let c = Config::from_toml("[quant]\nlayer_bits = [\"0:8\", \"0:2\"]").unwrap();
+        let err = c.layer_schemes().unwrap_err();
+        assert!(format!("{err}").contains("duplicate layer index 0"), "{err}");
+        // same layer, same bits is still a duplicate
+        let c = Config::from_toml("[quant]\nlayer_bits = [\"3:4\", \"3:4\"]").unwrap();
         assert!(c.layer_schemes().is_err());
     }
 }

@@ -44,6 +44,9 @@ pub struct PipelineMetrics {
     pub group: Option<usize>,
     pub tweaked: bool,
     pub calib_source: String,
+    /// provenance of the mixed-precision plan, when `layer_schemes` came
+    /// from the automatic planner (None for uniform or hand-typed schemes)
+    pub plan: Option<String>,
     pub layers: Vec<LayerMetrics>,
     pub total_millis: u128,
     /// packed quantized bytes / float bytes of the same matrices
@@ -64,6 +67,7 @@ impl PipelineMetrics {
             ("group", self.group.map(|g| n(g as f64)).unwrap_or(Json::Null)),
             ("tweaked", Json::Bool(self.tweaked)),
             ("calib_source", s(self.calib_source.clone())),
+            ("plan", self.plan.clone().map(s).unwrap_or(Json::Null)),
             ("total_millis", n(self.total_millis as f64)),
             ("compression_ratio", n(self.compression_ratio as f64)),
             ("layers", arr(self.layers.iter().map(|l| l.to_json()).collect())),
@@ -84,6 +88,7 @@ mod tests {
             group: Some(64),
             tweaked: true,
             calib_source: "gen-v2".into(),
+            plan: Some("auto-bits 2.25: model=nt-tiny".into()),
             layers: vec![LayerMetrics {
                 layer: 0,
                 delta_mu: 0.5,
@@ -101,6 +106,12 @@ mod tests {
         let back = Json::parse(&j).unwrap();
         assert_eq!(back.get("model").unwrap().as_str().unwrap(), "nt-tiny");
         assert_eq!(back.get("layers").unwrap().as_arr().unwrap().len(), 1);
+        assert!(back
+            .get("plan")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("auto-bits"));
         assert_eq!(m.drift_series(), vec![(0, 0.5)]);
     }
 }

@@ -37,6 +37,10 @@ pub struct PipelineConfig {
     /// the base scheme's group grain — the AOT forward graphs are compiled
     /// per grain — but may change the bit width freely.
     pub layer_schemes: BTreeMap<usize, QuantScheme>,
+    /// Provenance note when `layer_schemes` came from the automatic
+    /// mixed-precision planner (`crate::policy`); echoed into
+    /// `PipelineMetrics` and the persisted experiment records.
+    pub plan_note: Option<String>,
 }
 
 impl PipelineConfig {
@@ -47,6 +51,7 @@ impl PipelineConfig {
             tweak: None,
             params: QuantizerParams::default(),
             layer_schemes: BTreeMap::new(),
+            plan_note: None,
         }
     }
 
@@ -61,12 +66,22 @@ impl PipelineConfig {
         self
     }
 
+    /// Record where an automatically planned `layer_schemes` came from.
+    pub fn with_plan_note(mut self, note: impl Into<String>) -> Self {
+        self.plan_note = Some(note.into());
+        self
+    }
+
     /// The scheme in effect for `layer`.
     pub fn scheme_for(&self, layer: usize) -> QuantScheme {
         self.layer_schemes.get(&layer).copied().unwrap_or(self.scheme)
     }
 
-    fn validate(&self, n_layer: usize) -> Result<()> {
+    /// Check every layer override against the model depth and the base
+    /// scheme's grain/pack-width constraints. Public so the planner's test
+    /// suite (and callers assembling plans by hand) can prove an emitted
+    /// plan is legal without running the pipeline.
+    pub fn validate(&self, n_layer: usize) -> Result<()> {
         let base_tag = self.scheme.group_tag();
         for (&layer, s) in &self.layer_schemes {
             if layer >= n_layer {
@@ -168,6 +183,7 @@ pub fn quantize_model(
         group: cfg.scheme.group_size,
         tweaked: cfg.tweak.is_some(),
         calib_source: calib.source.clone(),
+        plan: cfg.plan_note.clone(),
         ..Default::default()
     };
 

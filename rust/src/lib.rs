@@ -12,7 +12,8 @@
 //!   of the paper), the open `Quantizer` plugin registry (RTN / GPTQ /
 //!   SmoothQuant / AWQ-lite / OmniQuant-lite, plus `+`-compositions like
 //!   `smoothquant+gptq` — see `quant::quantizer`), calibration-data
-//!   generation, the norm-tweak engine, and the evaluation harness.
+//!   generation, the norm-tweak engine, the sensitivity-driven
+//!   mixed-precision policy (`policy`), and the evaluation harness.
 //!
 //! Python never runs on the request path: `make artifacts` lowers all compute
 //! graphs once; the Rust binary is self-contained afterwards.
@@ -26,6 +27,7 @@ pub mod coordinator;
 pub mod error;
 pub mod eval;
 pub mod model;
+pub mod policy;
 pub mod quant;
 pub mod report;
 pub mod runtime;

@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! normtweak quantize [--config cfg.toml] [--model M] [--out path]
+//! normtweak plan     --target-bits 2.25 [--candidates 2,3,4,8] [--out path]
 //! normtweak eval     [--checkpoint path | --float] [--ppl a,b] [--tasks x,y]
 //! normtweak generate [--n 4] [--len 48]
 //! normtweak serve    [--checkpoint path] [--requests 64] [--clients 4]
@@ -11,8 +12,13 @@ use normtweak::calib::vocab::BOS;
 use normtweak::coordinator::{build_calib, quantize_model, FloatModel, PipelineConfig, QuantModel};
 use normtweak::eval::{lambada, ppl, subjective, tasks};
 use normtweak::model::{ModelConfig, ModelWeights, QuantizedModel};
+use normtweak::policy::{
+    BitBudgetPlanner, SensitivityConfig, SensitivityProfile, SensitivityProfiler,
+};
 use normtweak::report::{f2, f4, save_record, Table};
 use normtweak::runtime::Runtime;
+use normtweak::tweak::LossKind;
+use normtweak::util::json;
 use normtweak::Config;
 
 /// Flags every subcommand accepts.
@@ -22,7 +28,9 @@ const GLOBAL_FLAGS: &[&str] = &["config", "model", "artifacts"];
 fn allowed_flags(cmd: &str) -> Option<&'static [&'static str]> {
     match cmd {
         "quantize" => Some(&["method", "bits", "group", "layer-bits", "no-tweak",
-                             "calib", "out"]),
+                             "calib", "out", "auto-bits", "profile"]),
+        "plan" => Some(&["method", "bits", "group", "calib", "target-bits",
+                         "candidates", "loss", "profile", "out"]),
         "eval" => Some(&["checkpoint", "float", "ppl", "tasks"]),
         "generate" => Some(&["n", "len"]),
         "serve" => Some(&["checkpoint", "requests", "clients"]),
@@ -112,13 +120,67 @@ const HELP: &str = "normtweak — Norm Tweaking PTQ (AAAI 2024 reproduction)
 USAGE:
   normtweak quantize [--config cfg.toml] [--model M] [--method gptq] [--bits 4]
                      [--group 0] [--layer-bits 0:8,11:8] [--no-tweak]
+                     [--auto-bits 2.25] [--profile sensitivity.json]
                      [--calib gen-v2] [--out path]
+  normtweak plan     --target-bits 2.25 [--model M] [--method gptq] [--bits 2]
+                     [--group 64] [--candidates 2,3,4,8] [--loss dist]
+                     [--calib gen-v2] [--profile path] [--out sensitivity.json]
   normtweak eval     [--checkpoint path | --float] [--model M]
                      [--ppl wiki-syn,c4-syn] [--tasks hellaswag-syn,...]
   normtweak generate [--model M] [--n 4] [--len 48]
   normtweak serve    [--checkpoint path] [--requests 64] [--clients 4]
   normtweak help
+
+AUTOMATIC MIXED PRECISION:
+  `plan` measures per-layer quantization sensitivity over the calibration
+  set (trial-quantizing each block at every --candidates width with the
+  configured --method), persists the profile to sensitivity.json (--out),
+  and prints the greedy allocation whose mean width fits --target-bits.
+  `quantize --auto-bits B` runs the same planner — reusing an existing
+  sensitivity.json (or --profile PATH) instead of re-profiling — and feeds
+  the resulting per-layer overrides straight into the pipeline.
 ";
+
+/// A reused `sensitivity.json` must actually describe the model being
+/// planned: a stale profile from another model would silently leave the
+/// uncovered layers at the base scheme (grain mismatches are caught later
+/// by the planner itself).
+fn check_profile_matches(
+    profile: &SensitivityProfile,
+    path: &str,
+    mcfg: &normtweak::model::ModelConfig,
+) -> normtweak::Result<()> {
+    if profile.model != mcfg.name {
+        return Err(normtweak::Error::Config(format!(
+            "profile {path} was measured on model `{}` but this run targets `{}`; \
+             re-run `normtweak plan` (or delete the stale profile)",
+            profile.model, mcfg.name
+        )));
+    }
+    if profile.layers.len() != mcfg.n_layer {
+        return Err(normtweak::Error::Config(format!(
+            "profile {path} covers {} layers but `{}` has {}; re-profile",
+            profile.layers.len(),
+            mcfg.name,
+            mcfg.n_layer
+        )));
+    }
+    Ok(())
+}
+
+/// Parse `--candidates 2,3,4,8` into candidate bit widths.
+fn parse_candidates(spec: &str) -> normtweak::Result<Vec<u8>> {
+    spec.split(',')
+        .map(|t| {
+            t.trim().parse::<u8>().map_err(|_| {
+                normtweak::Error::Config(format!(
+                    "bad candidate bit width `{}` in --candidates",
+                    t.trim()
+                ))
+            })
+        })
+        .collect()
+}
 
 /// The `--method` registry table, rendered from the live plugin registry.
 fn print_method_table() {
@@ -195,6 +257,49 @@ fn run() -> normtweak::Result<()> {
             for (layer, scheme) in cfg.layer_schemes()? {
                 pcfg = pcfg.with_layer_scheme(layer, scheme);
             }
+            if let Some(budget) = args.get("auto-bits") {
+                if !cfg.quant.layer_bits.is_empty() {
+                    return Err(normtweak::Error::Config(
+                        "--auto-bits is mutually exclusive with --layer-bits / \
+                         [quant] layer_bits: the planner emits the per-layer \
+                         overrides itself"
+                            .into(),
+                    ));
+                }
+                let target: f32 = budget
+                    .parse()
+                    .map_err(|_| normtweak::Error::Config("bad --auto-bits".into()))?;
+                let default_profile = format!("{}/sensitivity.json", cfg.run.artifacts);
+                let ppath = args.get_or("profile", &default_profile);
+                let profile = if std::path::Path::new(&ppath).exists() {
+                    let p = SensitivityProfile::load(&ppath)?;
+                    check_profile_matches(&p, &ppath, &weights.config)?;
+                    println!("auto-bits: reusing profile {ppath} ({})", p.provenance());
+                    p
+                } else {
+                    let mut scfg = SensitivityConfig::new(cfg.method()?, cfg.scheme());
+                    scfg.loss = LossKind::from_str(&cfg.tweak.loss)?;
+                    let p = SensitivityProfiler::new(&runtime, &weights, scfg)
+                        .profile(&calib)?;
+                    p.save(&ppath)?;
+                    println!("auto-bits: profiled {} layers -> {ppath}", p.layers.len());
+                    p
+                };
+                let plan = BitBudgetPlanner::new(cfg.scheme(), target).plan(&profile)?;
+                println!(
+                    "auto-bits plan: mean {:.3} bits (target {target}); --layer-bits {}",
+                    plan.mean_bits,
+                    plan.layer_bits_string()
+                );
+                for (layer, scheme) in &plan.schemes {
+                    pcfg = pcfg.with_layer_scheme(*layer, *scheme);
+                }
+                pcfg = pcfg.with_plan_note(format!(
+                    "auto-bits {target}: mean {:.3} bits from {}",
+                    plan.mean_bits,
+                    profile.provenance()
+                ));
+            }
             if let Some(t) = cfg.tweak_config()? {
                 pcfg = pcfg.with_tweak(t);
             }
@@ -209,6 +314,79 @@ fn run() -> normtweak::Result<()> {
                 f2(1.0 / metrics.compression_ratio),
                 metrics.total_millis
             );
+        }
+        "plan" => {
+            let target: f32 = args
+                .get("target-bits")
+                .ok_or_else(|| {
+                    normtweak::Error::Config(
+                        "plan needs --target-bits <avg bits>, e.g. --target-bits 2.25"
+                            .into(),
+                    )
+                })?
+                .parse()
+                .map_err(|_| normtweak::Error::Config("bad --target-bits".into()))?;
+            let base = cfg.scheme();
+            let default_out = format!("{}/sensitivity.json", cfg.run.artifacts);
+            let out = args.get_or("out", &default_out);
+            let profile = match args.get("profile") {
+                Some(p) => {
+                    // the profiling knobs have no effect on a reused profile:
+                    // reject them instead of silently planning under other
+                    // settings than the user asked for
+                    for flag in ["candidates", "loss", "calib", "out"] {
+                        if args.has(flag) {
+                            return Err(normtweak::Error::Config(format!(
+                                "--{flag} has no effect when reusing --profile {p}; \
+                                 drop --profile to re-measure with it"
+                            )));
+                        }
+                    }
+                    let prof = SensitivityProfile::load(p)?;
+                    check_profile_matches(&prof, p, &weights.config)?;
+                    println!("loaded profile {p} ({})", prof.provenance());
+                    prof
+                }
+                None => {
+                    let mut scfg = SensitivityConfig::new(cfg.method()?, base);
+                    scfg.loss = LossKind::from_str(&cfg.tweak.loss)?;
+                    if let Some(l) = args.get("loss") {
+                        scfg.loss = LossKind::from_str(l)?;
+                    }
+                    if let Some(c) = args.get("candidates") {
+                        scfg.candidate_bits = parse_candidates(c)?;
+                    }
+                    let calib = build_calib(&runtime, &weights, &cfg.calib.source,
+                                            cfg.calib.n_samples, cfg.calib.seed)?;
+                    let prof = SensitivityProfiler::new(&runtime, &weights, scfg)
+                        .profile(&calib)?;
+                    prof.save(&out)?;
+                    println!(
+                        "profiled {} layers -> {out} ({})",
+                        prof.layers.len(),
+                        prof.provenance()
+                    );
+                    prof
+                }
+            };
+            let plan = BitBudgetPlanner::new(base, target).plan(&profile)?;
+            let table = normtweak::report::repro::plan_table(&profile, &plan, target);
+            print!("{}", table.ascii());
+            println!(
+                "mean {:.3} bits <= target {target}; --layer-bits {}",
+                plan.mean_bits,
+                plan.layer_bits_string()
+            );
+            save_record(
+                &cfg.run.artifacts,
+                "last_plan",
+                &json::obj(vec![
+                    ("profile", json::s(profile.provenance())),
+                    ("target_bits", json::n(target as f64)),
+                    ("mean_bits", json::n(plan.mean_bits as f64)),
+                    ("layer_bits", json::s(plan.layer_bits_string())),
+                ]),
+            )?;
         }
         "eval" => {
             let float = args.has("float");
@@ -314,12 +492,13 @@ fn serve_demo(
     let p99 = lat[(lat.len() * 99 / 100).min(lat.len() - 1)] as f64 / 1000.0;
     println!(
         "served {} requests in {:.1}s ({:.1} req/s): p50 {:.0} ms, p99 {:.0} ms, \
-         mean batch {:.1}",
+         mean queue {:.1} ms, mean batch {:.1}",
         stats.served,
         wall,
         stats.served as f64 / wall,
         p50,
         p99,
+        stats.mean_queue_micros() / 1000.0,
         stats.mean_batch()
     );
     Ok(())
@@ -363,5 +542,33 @@ mod tests {
     fn unknown_command_defers_to_dispatch() {
         // unknown commands pass parsing (dispatch prints help + exits 2)
         assert!(parse(&["frob", "--config", "x"]).is_ok());
+    }
+
+    #[test]
+    fn plan_and_auto_bits_flags_parse() {
+        let a = parse(&["plan", "--target-bits", "2.25", "--candidates", "2,3,4,8",
+                        "--loss", "mse"]).unwrap();
+        assert_eq!(a.get("target-bits"), Some("2.25"));
+        assert_eq!(a.get("loss"), Some("mse"));
+        let a = parse(&["quantize", "--auto-bits", "2.5", "--profile", "p.json"]).unwrap();
+        assert!(a.has("auto-bits"));
+        // plan-only flags stay rejected elsewhere
+        assert!(parse(&["eval", "--target-bits", "2"]).is_err());
+        assert!(parse(&["serve", "--auto-bits", "2"]).is_err());
+    }
+
+    #[test]
+    fn candidates_parse_and_reject() {
+        assert_eq!(parse_candidates("2,3, 4,8").unwrap(), vec![2, 3, 4, 8]);
+        assert!(parse_candidates("2,zap").is_err());
+        assert!(parse_candidates("").is_err());
+    }
+
+    #[test]
+    fn help_documents_plan_and_auto_bits() {
+        assert!(HELP.contains("normtweak plan"));
+        assert!(HELP.contains("--target-bits"));
+        assert!(HELP.contains("--auto-bits"));
+        assert!(HELP.contains("sensitivity.json"));
     }
 }

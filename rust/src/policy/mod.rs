@@ -1,0 +1,42 @@
+//! Sensitivity-driven mixed-precision policy: measure where the model is
+//! fragile, then spend the bit budget there automatically.
+//!
+//! The paper's 2-bit results depend on per-layer bit allocation, and the
+//! pipeline has supported per-layer overrides since the plugin API landed
+//! (`PipelineConfig::layer_schemes` / `--layer-bits`) — but every override
+//! was hand-typed. This subsystem closes that loop in two stages:
+//!
+//! 1. [`SensitivityProfiler`] runs the calibration set through the float
+//!    model (reusing the `FloatModel` activation taps the pipeline already
+//!    exports per block), quantizes each transformer block in isolation at
+//!    every candidate bit width through the open `Quantizer` registry, and
+//!    scores the channel-wise divergence of the four linear outputs with
+//!    the tweak-loss distance kernels (Dist / Mse / Kl, selectable). The
+//!    result is a [`SensitivityProfile`] — a per-layer, per-bit-width
+//!    divergence table with full provenance (model, method, grain,
+//!    calibration source, loss) — persisted as `sensitivity.json` so
+//!    planning is re-runnable without re-profiling.
+//! 2. [`BitBudgetPlanner`] solves a greedy marginal-gain-per-bit
+//!    allocation under an *average-bits* budget (`--target-bits 2.25`):
+//!    every layer starts at the smallest candidate width, and the planner
+//!    repeatedly upgrades the layer with the highest measured divergence
+//!    reduction per extra bit until the budget is exhausted. The emitted
+//!    [`BitPlan`] is a `BTreeMap<usize, QuantScheme>` that drops straight
+//!    into `PipelineConfig::layer_schemes`; all schemes share the base
+//!    scheme's group grain, so plan legality is exactly the existing
+//!    mixed-precision validation.
+//!
+//! CLI surface: `normtweak plan --target-bits B` (profile + plan + print),
+//! `normtweak quantize --auto-bits B` (plan feeds the pipeline directly).
+//! The scoring core ([`score_layer`]) runs on static taps with CPU Gram
+//! matrices, so the whole profiler/planner suite is testable offline — no
+//! AOT artifacts required.
+
+mod planner;
+mod sensitivity;
+
+pub use planner::{BitBudgetPlanner, BitPlan};
+pub use sensitivity::{
+    score_layer, LayerSensitivity, SensitivityConfig, SensitivityProfile, SensitivityProfiler,
+    DEFAULT_CANDIDATES,
+};

@@ -1,0 +1,214 @@
+//! Bit-budget allocation: turn a sensitivity profile into per-layer scheme
+//! overrides under an average-bits budget.
+//!
+//! Greedy marginal-gain knapsack: every layer starts at the smallest
+//! candidate width; each round upgrades the layer whose next step up buys
+//! the largest measured divergence reduction per extra bit, as long as the
+//! total still fits `target_bits × n_layers`. Ties break toward the
+//! earliest layer, and zero-gain upgrades are never taken, so the
+//! allocation is deterministic and the mean allocated width never exceeds
+//! the budget.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::quant::QuantScheme;
+
+use super::sensitivity::SensitivityProfile;
+
+/// Allocates a [`SensitivityProfile`] under an average-bits budget.
+#[derive(Debug, Clone, Copy)]
+pub struct BitBudgetPlanner {
+    /// Base scheme: provides the group grain every override shares (the
+    /// forward graphs are compiled per grain) and must match the profile's.
+    pub base: QuantScheme,
+    /// Budget as *mean bits per layer* (e.g. 2.25), not a per-layer cap.
+    pub target_bits: f32,
+}
+
+/// The planner's output: per-layer schemes ready for
+/// `PipelineConfig::layer_schemes`, plus the audit trail.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BitPlan {
+    pub schemes: BTreeMap<usize, QuantScheme>,
+    /// mean allocated width — guaranteed ≤ `target_bits`
+    pub mean_bits: f32,
+    pub target_bits: f32,
+    /// provenance of the profile this plan came from
+    pub provenance: String,
+}
+
+impl BitPlan {
+    /// The equivalent `--layer-bits` value (`"0:4,1:2,..."`).
+    pub fn layer_bits_string(&self) -> String {
+        self.schemes
+            .iter()
+            .map(|(l, s)| format!("{l}:{}", s.bits))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+impl BitBudgetPlanner {
+    pub fn new(base: QuantScheme, target_bits: f32) -> Self {
+        BitBudgetPlanner { base, target_bits }
+    }
+
+    pub fn plan(&self, profile: &SensitivityProfile) -> Result<BitPlan> {
+        let base_tag = self.base.group_tag();
+        if profile.group_tag != base_tag {
+            return Err(Error::Config(format!(
+                "sensitivity profile was measured at grain `{}` but the base scheme is \
+                 `{base_tag}`; re-profile at the deployment grain",
+                profile.group_tag
+            )));
+        }
+        let n = profile.layers.len();
+        if n == 0 {
+            return Err(Error::Config("sensitivity profile has no layers".into()));
+        }
+        let mut cands = profile.candidate_bits.clone();
+        cands.sort_unstable();
+        cands.dedup();
+        if cands.is_empty() {
+            return Err(Error::Config("sensitivity profile has no candidate bit widths".into()));
+        }
+        for &bits in &cands {
+            QuantScheme { bits, group_size: self.base.group_size }.pack_bits()?;
+        }
+        let min_bits = cands[0];
+        if self.target_bits + 1e-6 < min_bits as f32 {
+            return Err(Error::Config(format!(
+                "target of {:.2} average bits is below the smallest candidate width \
+                 {min_bits} (candidates: {cands:?}) — infeasible budget",
+                self.target_bits
+            )));
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for l in &profile.layers {
+            if !seen.insert(l.layer) {
+                return Err(Error::Config(format!(
+                    "sensitivity profile lists layer {} twice",
+                    l.layer
+                )));
+            }
+            for &bits in &cands {
+                if l.score(bits).is_none() {
+                    return Err(Error::Config(format!(
+                        "layer {} has no sensitivity score at {bits} bits; re-profile \
+                         with the full candidate set",
+                        l.layer
+                    )));
+                }
+            }
+        }
+
+        // greedy upgrades from the floor allocation
+        let mut idx = vec![0usize; n]; // per-layer index into `cands`
+        let mut total_bits = min_bits as f64 * n as f64;
+        let budget = self.target_bits as f64 * n as f64 + 1e-6;
+        loop {
+            let mut best: Option<(usize, f64)> = None;
+            for (pos, l) in profile.layers.iter().enumerate() {
+                if idx[pos] + 1 >= cands.len() {
+                    continue;
+                }
+                let cur = cands[idx[pos]];
+                let next = cands[idx[pos] + 1];
+                let cost = f64::from(next - cur);
+                if total_bits + cost > budget {
+                    continue;
+                }
+                let gain = f64::from(l.score(cur).unwrap() - l.score(next).unwrap());
+                if gain <= 0.0 {
+                    continue; // spending bits with no measured benefit
+                }
+                let ratio = gain / cost;
+                if best.map_or(true, |(_, r)| ratio > r) {
+                    best = Some((pos, ratio));
+                }
+            }
+            let Some((pos, _)) = best else { break };
+            let cur = cands[idx[pos]];
+            idx[pos] += 1;
+            total_bits += f64::from(cands[idx[pos]] - cur);
+        }
+
+        let schemes = profile
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(pos, l)| {
+                (l.layer, QuantScheme { bits: cands[idx[pos]], group_size: self.base.group_size })
+            })
+            .collect();
+        Ok(BitPlan {
+            schemes,
+            mean_bits: (total_bits / n as f64) as f32,
+            target_bits: self.target_bits,
+            provenance: profile.provenance(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::LayerSensitivity;
+
+    fn profile(layers: &[&[(u8, f32)]], group_tag: &str, cands: &[u8]) -> SensitivityProfile {
+        SensitivityProfile {
+            model: "nt-tiny".into(),
+            method: "rtn".into(),
+            group_tag: group_tag.into(),
+            calib_source: "gen-v2".into(),
+            loss: "dist".into(),
+            candidate_bits: cands.to_vec(),
+            layers: layers
+                .iter()
+                .enumerate()
+                .map(|(i, scores)| LayerSensitivity {
+                    layer: i,
+                    scores: scores.iter().copied().collect(),
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn floor_allocation_when_budget_is_tight() {
+        let p = profile(&[&[(2, 1.0), (4, 0.1)], &[(2, 2.0), (4, 0.2)]], "g64", &[2, 4]);
+        let plan = BitBudgetPlanner::new(QuantScheme::w2_g64(), 2.0).plan(&p).unwrap();
+        assert_eq!(plan.mean_bits, 2.0);
+        assert!(plan.schemes.values().all(|s| s.bits == 2));
+    }
+
+    #[test]
+    fn upgrade_goes_to_the_fragile_layer_first() {
+        // layer 1 is 10x more sensitive: a budget with room for one upgrade
+        // must spend it there
+        let p = profile(&[&[(2, 0.2), (4, 0.1)], &[(2, 2.0), (4, 0.1)]], "g64", &[2, 4]);
+        let plan = BitBudgetPlanner::new(QuantScheme::w2_g64(), 3.0).plan(&p).unwrap();
+        assert_eq!(plan.schemes[&0].bits, 2);
+        assert_eq!(plan.schemes[&1].bits, 4);
+        assert_eq!(plan.mean_bits, 3.0);
+        assert_eq!(plan.layer_bits_string(), "0:2,1:4");
+    }
+
+    #[test]
+    fn grain_mismatch_is_rejected() {
+        let p = profile(&[&[(2, 1.0), (4, 0.1)]], "g64", &[2, 4]);
+        let err = BitBudgetPlanner::new(QuantScheme::w4_perchannel(), 4.0)
+            .plan(&p)
+            .unwrap_err();
+        assert!(format!("{err}").contains("grain"), "{err}");
+    }
+
+    #[test]
+    fn zero_gain_upgrades_are_skipped() {
+        // identical scores at every width: budget stays unspent at the floor
+        let p = profile(&[&[(2, 1.0), (4, 1.0), (8, 1.0)]], "g64", &[2, 4, 8]);
+        let plan = BitBudgetPlanner::new(QuantScheme::w2_g64(), 8.0).plan(&p).unwrap();
+        assert_eq!(plan.schemes[&0].bits, 2);
+    }
+}

@@ -1,0 +1,391 @@
+//! Per-layer quantization sensitivity: trial-quantize each block at every
+//! candidate bit width and score the channel-wise output divergence.
+//!
+//! The measurement deliberately isolates one block at a time: the float
+//! stream feeds layer *l* (so upstream quantization error never pollutes the
+//! per-layer signal), the block's four linears are quantized through the
+//! same `Quantizer` plugin the pipeline will use, and the divergence is the
+//! selected tweak-loss distance between `X·W` and `X·Ŵ` over the block's
+//! calibration activations. That is exactly the quantity norm tweaking
+//! minimizes per layer, which makes the scores commensurable across bit
+//! widths and layers.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::calib::CalibSet;
+use crate::coordinator::FloatModel;
+use crate::error::{Error, Result};
+use crate::model::{BlockWeights, ModelWeights};
+use crate::quant::quantizer::{resolve, LayerContext, Linear, Quantizer, QuantizerParams, LINEARS};
+use crate::quant::QuantScheme;
+use crate::runtime::Runtime;
+use crate::tensor::{matmul, Tensor};
+use crate::tweak::loss::{dist_loss, kl_loss, mse_loss};
+use crate::tweak::LossKind;
+use crate::util::json::{arr, n, obj, s, Json};
+
+/// Default candidate widths: every packed storage width the runtime supports.
+pub const DEFAULT_CANDIDATES: [u8; 4] = [2, 3, 4, 8];
+
+/// What to measure: the trial-quantization method, the base scheme (grain
+/// source), the candidate bit widths, and the divergence metric.
+#[derive(Debug, Clone)]
+pub struct SensitivityConfig {
+    /// Quantizer spec used for trial quantization (any registered name or
+    /// `+`-composition — normally the same method the pipeline will run).
+    pub method: String,
+    /// Base scheme; candidates inherit its group grain so every emitted
+    /// override stays grain-legal.
+    pub base: QuantScheme,
+    pub candidate_bits: Vec<u8>,
+    /// Divergence metric (the tweak-loss distance kernels).
+    pub loss: LossKind,
+    pub params: QuantizerParams,
+}
+
+impl SensitivityConfig {
+    pub fn new(method: impl Into<String>, base: QuantScheme) -> Self {
+        SensitivityConfig {
+            method: method.into(),
+            base,
+            candidate_bits: DEFAULT_CANDIDATES.to_vec(),
+            loss: LossKind::Dist,
+            params: QuantizerParams::default(),
+        }
+    }
+
+    /// Candidates sorted, deduplicated, and checked against the packed
+    /// storage widths; empty or unpackable candidate lists are rejected.
+    pub fn normalized_candidates(&self) -> Result<Vec<u8>> {
+        let mut c = self.candidate_bits.clone();
+        c.sort_unstable();
+        c.dedup();
+        if c.is_empty() {
+            return Err(Error::Config("no candidate bit widths to profile".into()));
+        }
+        for &bits in &c {
+            QuantScheme { bits, group_size: self.base.group_size }.pack_bits()?;
+        }
+        Ok(c)
+    }
+}
+
+/// One layer's divergence at each candidate bit width.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerSensitivity {
+    pub layer: usize,
+    /// candidate bit width → summed divergence of the four linear outputs
+    pub scores: BTreeMap<u8, f32>,
+}
+
+impl LayerSensitivity {
+    pub fn score(&self, bits: u8) -> Option<f32> {
+        self.scores.get(&bits).copied()
+    }
+}
+
+/// The measured profile plus full provenance — everything the planner (and
+/// a reader of `sensitivity.json`) needs to trust or reproduce it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SensitivityProfile {
+    pub model: String,
+    /// canonical quantizer spec the trials ran with
+    pub method: String,
+    /// base grain tag (`pc`, `g64`, ...) every candidate shared
+    pub group_tag: String,
+    pub calib_source: String,
+    /// divergence metric name (`dist` | `mse` | `kl`)
+    pub loss: String,
+    pub candidate_bits: Vec<u8>,
+    pub layers: Vec<LayerSensitivity>,
+}
+
+impl SensitivityProfile {
+    /// One-line provenance string echoed into plans, metrics, and reports.
+    pub fn provenance(&self) -> String {
+        format!(
+            "model={} method={} grain={} calib={} loss={}",
+            self.model, self.method, self.group_tag, self.calib_source, self.loss
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("model", s(self.model.clone())),
+            ("method", s(self.method.clone())),
+            ("group_tag", s(self.group_tag.clone())),
+            ("calib_source", s(self.calib_source.clone())),
+            ("loss", s(self.loss.clone())),
+            (
+                "candidate_bits",
+                arr(self.candidate_bits.iter().map(|&b| n(b as f64)).collect()),
+            ),
+            (
+                "layers",
+                arr(self
+                    .layers
+                    .iter()
+                    .map(|l| {
+                        let scores = l
+                            .scores
+                            .iter()
+                            .map(|(b, v)| (b.to_string(), n(*v as f64)))
+                            .collect();
+                        obj(vec![
+                            ("layer", n(l.layer as f64)),
+                            ("scores", Json::Obj(scores)),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let get = |k: &str| {
+            j.get(k)
+                .ok_or_else(|| Error::Json(format!("sensitivity profile: missing `{k}`")))
+        };
+        let get_str = |k: &str| -> Result<String> {
+            get(k)?
+                .as_str()
+                .map(String::from)
+                .ok_or_else(|| Error::Json(format!("sensitivity profile: `{k}` must be a string")))
+        };
+        let candidate_bits = get("candidate_bits")?
+            .as_arr()
+            .ok_or_else(|| Error::Json("sensitivity profile: `candidate_bits` must be an array".into()))?
+            .iter()
+            .map(|v| {
+                v.as_usize()
+                    .filter(|&b| b > 0 && b <= u8::MAX as usize)
+                    .map(|b| b as u8)
+                    .ok_or_else(|| Error::Json("sensitivity profile: bad candidate bit width".into()))
+            })
+            .collect::<Result<Vec<u8>>>()?;
+        let mut layers = Vec::new();
+        for lj in get("layers")?
+            .as_arr()
+            .ok_or_else(|| Error::Json("sensitivity profile: `layers` must be an array".into()))?
+        {
+            let layer = lj
+                .get("layer")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| Error::Json("sensitivity profile: layer entry missing `layer`".into()))?;
+            let raw = lj
+                .get("scores")
+                .and_then(|v| v.as_obj())
+                .ok_or_else(|| Error::Json(format!("sensitivity profile: layer {layer} missing `scores`")))?;
+            let mut scores = BTreeMap::new();
+            for (k, v) in raw {
+                let bits: u8 = k.parse().map_err(|_| {
+                    Error::Json(format!("sensitivity profile: layer {layer}: bad bit key `{k}`"))
+                })?;
+                let score = v.as_f64().ok_or_else(|| {
+                    Error::Json(format!("sensitivity profile: layer {layer}: score `{k}` not a number"))
+                })?;
+                scores.insert(bits, score as f32);
+            }
+            layers.push(LayerSensitivity { layer, scores });
+        }
+        Ok(SensitivityProfile {
+            model: get_str("model")?,
+            method: get_str("method")?,
+            group_tag: get_str("group_tag")?,
+            calib_source: get_str("calib_source")?,
+            loss: get_str("loss")?,
+            candidate_bits,
+            layers,
+        })
+    }
+
+    /// Persist as `sensitivity.json` (creating parent directories).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json().emit())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+/// Divergence of one block quantized at `scheme`, scored on static taps —
+/// the offline core behind [`SensitivityProfiler`]. Taps are one activation
+/// tensor per linear in tap order (any rank; flattened to `[rows, K]`),
+/// Hessian-needing methods fall back to CPU Gram matrices, so no runtime or
+/// AOT artifacts are involved.
+pub fn score_layer(
+    weights: BlockWeights<'_>,
+    taps: &[Tensor],
+    scheme: QuantScheme,
+    quantizer: &dyn Quantizer,
+    loss: LossKind,
+) -> Result<f32> {
+    let mut ctx = LayerContext::with_static_taps(weights, taps.to_vec(), scheme);
+    let bq = quantizer.quantize_layer(&mut ctx)?;
+    let mut total = 0.0f32;
+    for lin in LINEARS {
+        // scale-corrected tap: consistent with the (possibly preprocessed)
+        // effective weight, so fold-based methods are scored fairly
+        let x = ctx.tap(lin)?;
+        let y_f = matmul(&x, ctx.weight(lin))?;
+        let qw = match lin {
+            Linear::Qkv => &bq.qkv,
+            Linear::Proj => &bq.proj,
+            Linear::Fc1 => &bq.fc1,
+            Linear::Fc2 => &bq.fc2,
+        };
+        let deq = Tensor::f32(&[qw.k, qw.n], qw.dequantize());
+        let y_q = matmul(&x, &deq)?;
+        total += match loss {
+            LossKind::Dist => dist_loss(&y_f, &y_q)?,
+            LossKind::Mse => mse_loss(&y_f, &y_q)?,
+            LossKind::Kl => kl_loss(&y_f, &y_q)?,
+        };
+    }
+    Ok(total)
+}
+
+/// Runs the calibration set through the float model and measures every
+/// (layer, candidate bit width) pair. The float stream advances through the
+/// float block graphs; each layer's taps are fetched once and reused across
+/// candidates.
+pub struct SensitivityProfiler<'rt, 'w> {
+    runtime: &'rt Runtime,
+    weights: &'w ModelWeights,
+    cfg: SensitivityConfig,
+}
+
+impl<'rt, 'w> SensitivityProfiler<'rt, 'w> {
+    pub fn new(runtime: &'rt Runtime, weights: &'w ModelWeights, cfg: SensitivityConfig) -> Self {
+        SensitivityProfiler { runtime, weights, cfg }
+    }
+
+    /// Measure the full profile over `calib` (which must match the exported
+    /// calibration batch, like the pipeline).
+    pub fn profile(&self, calib: &CalibSet) -> Result<SensitivityProfile> {
+        let candidates = self.cfg.normalized_candidates()?;
+        let cb = self.runtime.manifest.calib_batch;
+        if calib.n_samples() != cb {
+            return Err(Error::msg(format!(
+                "calibration set has {} samples; profiling graphs need {cb}",
+                calib.n_samples()
+            )));
+        }
+        let quantizer: Box<dyn Quantizer> = resolve(&self.cfg.method, &self.cfg.params)?;
+        let fm = FloatModel::new(self.runtime, self.weights)?;
+        let mcfg = &self.weights.config;
+        let mut x = fm.embed(&calib.tokens)?;
+        let mut layers = Vec::with_capacity(mcfg.n_layer);
+        for layer in 0..mcfg.n_layer {
+            let taps = fm.block_taps(layer, &x)?;
+            let bw = self.weights.block(layer)?;
+            let mut scores = BTreeMap::new();
+            // each candidate gets a fresh context (taps + float reference
+            // recomputed): preprocessing may be width-dependent — AWQ grid-
+            // searches its scales against quantization at the target width —
+            // so the effective weights the float side must be compared
+            // against can differ per candidate
+            for &bits in &candidates {
+                let scheme = QuantScheme { bits, group_size: self.cfg.base.group_size };
+                let score =
+                    score_layer(bw, &taps, scheme, quantizer.as_ref(), self.cfg.loss)?;
+                scores.insert(bits, score);
+            }
+            if std::env::var_os("NT_QUIET").is_none() {
+                let summary = scores
+                    .iter()
+                    .map(|(b, v)| format!("{b}b={v:.5}"))
+                    .collect::<Vec<_>>()
+                    .join(" ");
+                eprintln!("[policy] layer {layer}: {summary}");
+            }
+            layers.push(LayerSensitivity { layer, scores });
+            x = fm.block_fwd(layer, &x)?;
+        }
+        Ok(SensitivityProfile {
+            model: mcfg.name.clone(),
+            method: quantizer.name().to_string(),
+            group_tag: self.cfg.base.group_tag(),
+            calib_source: calib.source.clone(),
+            loss: self.cfg.loss.as_str().to_string(),
+            candidate_bits: candidates,
+            layers,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile_fixture() -> SensitivityProfile {
+        SensitivityProfile {
+            model: "nt-tiny".into(),
+            method: "gptq".into(),
+            group_tag: "g64".into(),
+            calib_source: "gen-v2".into(),
+            loss: "dist".into(),
+            candidate_bits: vec![2, 4],
+            layers: vec![
+                LayerSensitivity {
+                    layer: 0,
+                    scores: BTreeMap::from([(2u8, 1.5f32), (4u8, 0.25f32)]),
+                },
+                LayerSensitivity {
+                    layer: 1,
+                    scores: BTreeMap::from([(2u8, 0.75f32), (4u8, 0.125f32)]),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless() {
+        let p = profile_fixture();
+        let back = SensitivityProfile::from_json(&Json::parse(&p.to_json().emit()).unwrap())
+            .unwrap();
+        assert_eq!(p, back);
+    }
+
+    #[test]
+    fn from_json_rejects_malformed() {
+        assert!(SensitivityProfile::from_json(&Json::parse("{}").unwrap()).is_err());
+        let no_scores = r#"{"model":"m","method":"rtn","group_tag":"pc",
+            "calib_source":"gen-v2","loss":"dist","candidate_bits":[2],
+            "layers":[{"layer":0}]}"#;
+        assert!(SensitivityProfile::from_json(&Json::parse(no_scores).unwrap()).is_err());
+        let bad_key = r#"{"model":"m","method":"rtn","group_tag":"pc",
+            "calib_source":"gen-v2","loss":"dist","candidate_bits":[2],
+            "layers":[{"layer":0,"scores":{"two":1.0}}]}"#;
+        assert!(SensitivityProfile::from_json(&Json::parse(bad_key).unwrap()).is_err());
+    }
+
+    #[test]
+    fn provenance_names_every_input() {
+        let p = profile_fixture().provenance();
+        for part in ["nt-tiny", "gptq", "g64", "gen-v2", "dist"] {
+            assert!(p.contains(part), "{p} missing {part}");
+        }
+    }
+
+    #[test]
+    fn candidates_normalize_and_reject() {
+        let mut cfg = SensitivityConfig::new("rtn", QuantScheme::w2_g64());
+        cfg.candidate_bits = vec![8, 2, 4, 2];
+        assert_eq!(cfg.normalized_candidates().unwrap(), vec![2, 4, 8]);
+        cfg.candidate_bits = vec![];
+        assert!(cfg.normalized_candidates().is_err());
+        cfg.candidate_bits = vec![2, 5]; // no packed storage for 5-bit
+        assert!(cfg.normalized_candidates().is_err());
+    }
+}

@@ -53,6 +53,29 @@
 //! Rust change is needed: [`QuantScheme::group_tag`] derives the tag from
 //! `group_size`, and the runtime learns the exported set from the manifest.
 //!
+//! # Automatic mixed precision
+//!
+//! Per-layer scheme overrides (`PipelineConfig::layer_schemes`,
+//! `--layer-bits`) no longer have to be hand-typed: the policy subsystem
+//! ([`crate::policy`]) measures them. The flow is **profile → plan →
+//! quantize**:
+//!
+//! 1. *Profile* — `normtweak plan` runs the calibration set through the
+//!    float model, trial-quantizes every block at each candidate bit width
+//!    through this registry, and scores the channel-wise output divergence
+//!    with the tweak-loss distance kernels. The result is persisted as
+//!    `sensitivity.json` with full provenance (model, method, grain,
+//!    calibration source, loss).
+//! 2. *Plan* — a greedy bit-budget knapsack upgrades the most fragile
+//!    layers first until the mean width reaches `--target-bits`, emitting
+//!    per-layer [`QuantScheme`]s at the base scheme's grain (so every
+//!    override passes the same grain/pack-width validation as hand-typed
+//!    ones).
+//! 3. *Quantize* — `normtweak quantize --auto-bits <budget>` feeds that
+//!    plan straight into the pipeline, reusing `sensitivity.json` when
+//!    present; the plan's provenance is echoed into the pipeline metrics
+//!    and experiment records.
+//!
 //! [`Quantizer`]: quantizer::Quantizer
 
 pub mod act;

@@ -10,6 +10,8 @@ use crate::coordinator::{build_calib, quantize_model, FloatModel, PipelineConfig
 use crate::error::Result;
 use crate::eval::{lambada, ppl, subjective, tasks, LanguageModel};
 use crate::model::{ModelWeights, QuantizedModel};
+use crate::policy::{BitBudgetPlanner, BitPlan, SensitivityConfig, SensitivityProfile,
+                    SensitivityProfiler};
 use crate::quant::QuantScheme;
 use crate::runtime::Runtime;
 use crate::tweak::tweaker::LossKind;
@@ -342,6 +344,53 @@ pub fn table10(ctx: &ReproCtx, model: &str) -> Result<Table> {
     oqnt.extend(run("omniquant", Some(ctx.nt()))?);
     t.push(oqnt);
     Ok(t)
+}
+
+/// Render a (profile, plan) pair as the per-layer score × allocation table
+/// shared by `normtweak plan` and the repro harness. The profile's full
+/// provenance (model, method, grain, calibration source, loss) rides in the
+/// title, so a persisted record is reproducible.
+pub fn plan_table(profile: &SensitivityProfile, plan: &BitPlan, target_bits: f32) -> Table {
+    let mut header = vec!["layer".to_string()];
+    header.extend(profile.candidate_bits.iter().map(|b| format!("L@{b}b")));
+    header.push("alloc bits".into());
+    let mut t = Table::new(
+        &format!(
+            "mixed-precision plan @ {target_bits} avg bits ({})",
+            profile.provenance()
+        ),
+        &header.iter().map(|h| h.as_str()).collect::<Vec<_>>(),
+    );
+    for l in &profile.layers {
+        let mut row = vec![l.layer.to_string()];
+        for &b in &profile.candidate_bits {
+            row.push(l.score(b).map(f4).unwrap_or_default());
+        }
+        row.push(
+            plan.schemes
+                .get(&l.layer)
+                .map(|s| s.bits.to_string())
+                .unwrap_or_default(),
+        );
+        t.push(row);
+    }
+    let mut summary = vec!["mean".to_string()];
+    summary.extend(profile.candidate_bits.iter().map(|_| String::new()));
+    summary.push(f2(plan.mean_bits));
+    t.push(summary);
+    t
+}
+
+/// Sensitivity profile → mixed-precision plan for one model, end to end
+/// (profile with GPTQ at the paper's W2g64 grain, allocate `target_bits`).
+pub fn table_plan(ctx: &ReproCtx, model: &str, target_bits: f32) -> Result<Table> {
+    let w = ctx.weights(model)?;
+    let calib = ctx.calib(&w, "gen-v2")?;
+    let base = QuantScheme::w2_g64();
+    let scfg = SensitivityConfig::new("gptq", base);
+    let profile = SensitivityProfiler::new(&ctx.runtime, &w, scfg).profile(&calib)?;
+    let plan = BitBudgetPlanner::new(base, target_bits).plan(&profile)?;
+    Ok(plan_table(&profile, &plan, target_bits))
 }
 
 /// Figure 1 — per-layer activation drift Δμ, GPTQ vs GPTQ+NT.

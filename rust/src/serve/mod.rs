@@ -86,6 +86,9 @@ pub struct ServeStats {
     pub served: usize,
     pub batches: usize,
     pub total_gen_micros: u128,
+    /// summed submit-to-batch-start time across served requests — the
+    /// batcher's own latency contribution, invisible in generation time
+    pub total_queue_micros: u128,
     pub max_batch_seen: usize,
 }
 
@@ -95,6 +98,15 @@ impl ServeStats {
             0.0
         } else {
             self.served as f32 / self.batches as f32
+        }
+    }
+
+    /// Mean time a request waited in the queue before its batch started.
+    pub fn mean_queue_micros(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.total_queue_micros as f64 / self.served as f64
         }
     }
 }
@@ -157,11 +169,30 @@ mod tests {
         .unwrap();
         assert_eq!(stats.served, 5);
         assert_eq!(stats.max_batch_seen, 2);
+        let mut queue_sum = 0u128;
         for rx in replies {
             let resp = rx.recv().expect("every rider answered");
             assert_eq!(resp.tokens.len(), 4);
             assert!(resp.batch_size <= 2);
+            queue_sum += resp.queue_micros;
         }
+        // the aggregate queue time is exactly what the riders saw
+        assert_eq!(stats.total_queue_micros, queue_sum);
+        assert_eq!(
+            stats.mean_queue_micros(),
+            queue_sum as f64 / stats.served as f64
+        );
+    }
+
+    #[test]
+    fn mean_queue_micros_handles_empty_and_divides() {
+        assert_eq!(ServeStats::default().mean_queue_micros(), 0.0);
+        let stats = ServeStats {
+            served: 4,
+            total_queue_micros: 400,
+            ..Default::default()
+        };
+        assert_eq!(stats.mean_queue_micros(), 100.0);
     }
 
     #[test]
@@ -249,13 +280,15 @@ pub fn serve_loop(
             stats.max_batch_seen = stats.max_batch_seen.max(bs);
             for (req, tokens) in batch.into_iter().zip(outs) {
                 let want = (req.prompt.len() + req.max_new).min(seq);
+                let queue_micros = (t0 - req.enqueued).as_micros();
                 let resp = Response {
                     tokens: tokens[..want].to_vec(),
-                    queue_micros: (t0 - req.enqueued).as_micros(),
+                    queue_micros,
                     gen_micros,
                     batch_size: bs,
                 };
                 let _ = req.reply.send(resp);
+                stats.total_queue_micros += queue_micros;
                 stats.served += 1;
             }
         }

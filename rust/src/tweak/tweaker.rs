@@ -21,6 +21,25 @@ pub enum LossKind {
 }
 
 impl LossKind {
+    /// Parse a config/CLI loss name (`dist` | `mse` | `kl`).
+    pub fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "dist" => Ok(LossKind::Dist),
+            "mse" => Ok(LossKind::Mse),
+            "kl" => Ok(LossKind::Kl),
+            other => Err(Error::Config(format!("unknown loss {other} (dist | mse | kl)"))),
+        }
+    }
+
+    /// The canonical config/CLI name (inverse of [`LossKind::from_str`]).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            LossKind::Dist => "dist",
+            LossKind::Mse => "mse",
+            LossKind::Kl => "kl",
+        }
+    }
+
     /// The `tweak_step*` graph this loss drives, at the scheme's grain.
     ///
     /// Grain-honest for the ablation losses too: `Mse`/`Kl` used to
@@ -40,6 +59,14 @@ impl LossKind {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn loss_names_roundtrip() {
+        for k in [LossKind::Dist, LossKind::Mse, LossKind::Kl] {
+            assert_eq!(LossKind::from_str(k.as_str()).unwrap(), k);
+        }
+        assert!(LossKind::from_str("zap").is_err());
+    }
 
     #[test]
     fn graph_name_tracks_grain_for_all_losses() {

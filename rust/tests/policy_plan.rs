@@ -1,0 +1,285 @@
+//! Offline suite for the sensitivity profiler + bit-budget planner: static
+//! taps and CPU Gram matrices only — no AOT artifacts, no runtime.
+//!
+//! Covers the ISSUE-3 acceptance list: deterministic allocation on a fixed
+//! synthetic profile, budget-infeasible and single-layer edge cases, the
+//! `sensitivity.json` round-trip, and a `PipelineConfig::validate` pass
+//! over every emitted plan (grain + pack-width legality).
+
+use std::collections::BTreeMap;
+
+use normtweak::coordinator::PipelineConfig;
+use normtweak::model::BlockWeights;
+use normtweak::policy::{
+    score_layer, BitBudgetPlanner, LayerSensitivity, SensitivityConfig, SensitivityProfile,
+};
+use normtweak::quant::quantizer::{resolve, QuantizerParams};
+use normtweak::quant::QuantScheme;
+use normtweak::tensor::Tensor;
+use normtweak::tweak::LossKind;
+
+const D: usize = 16;
+const FF: usize = 32;
+const ROWS: usize = 64;
+
+/// Owned block weights in `BlockWeights` field order; `scale` exaggerates
+/// the weight magnitude so per-layer sensitivity differs measurably.
+fn fixture_weights(seed: u64, scale: f32) -> Vec<Tensor> {
+    vec![
+        Tensor::ones(&[D]),                          // ln1_g
+        Tensor::zeros(&[D]),                         // ln1_b
+        Tensor::randn(&[D, 3 * D], seed + 1, scale), // wqkv
+        Tensor::zeros(&[3 * D]),                     // bqkv
+        Tensor::randn(&[D, D], seed + 2, scale),     // wproj
+        Tensor::zeros(&[D]),                         // bproj
+        Tensor::ones(&[D]),                          // ln2_g
+        Tensor::zeros(&[D]),                         // ln2_b
+        Tensor::randn(&[D, FF], seed + 3, scale),    // wfc1
+        Tensor::zeros(&[FF]),                        // bfc1
+        Tensor::randn(&[FF, D], seed + 4, scale),    // wfc2
+        Tensor::zeros(&[D]),                         // bfc2
+    ]
+}
+
+fn block_view(w: &[Tensor]) -> BlockWeights<'_> {
+    BlockWeights {
+        ln1_g: &w[0],
+        ln1_b: Some(&w[1]),
+        wqkv: &w[2],
+        bqkv: &w[3],
+        wproj: &w[4],
+        bproj: &w[5],
+        ln2_g: &w[6],
+        ln2_b: Some(&w[7]),
+        wfc1: &w[8],
+        bfc1: &w[9],
+        wfc2: &w[10],
+        bfc2: &w[11],
+    }
+}
+
+fn fixture_taps(seed: u64) -> Vec<Tensor> {
+    vec![
+        Tensor::randn(&[ROWS, D], seed + 11, 1.0),
+        Tensor::randn(&[ROWS, D], seed + 12, 1.0),
+        Tensor::randn(&[ROWS, D], seed + 13, 1.0),
+        Tensor::randn(&[ROWS, FF], seed + 14, 1.0),
+    ]
+}
+
+/// Synthetic profile: `layers[i]` lists (bits, score) pairs for layer i.
+fn profile_fixture(layers: &[&[(u8, f32)]], group_tag: &str, cands: &[u8]) -> SensitivityProfile {
+    SensitivityProfile {
+        model: "nt-tiny".into(),
+        method: "gptq".into(),
+        group_tag: group_tag.into(),
+        calib_source: "gen-v2".into(),
+        loss: "dist".into(),
+        candidate_bits: cands.to_vec(),
+        layers: layers
+            .iter()
+            .enumerate()
+            .map(|(i, scores)| LayerSensitivity {
+                layer: i,
+                scores: scores.iter().copied().collect(),
+            })
+            .collect(),
+    }
+}
+
+#[test]
+fn score_layer_is_monotone_in_bit_width() {
+    let weights = fixture_weights(7, 0.5);
+    let taps = fixture_taps(7);
+    let q = resolve("rtn", &QuantizerParams::default()).unwrap();
+    let mut scores = BTreeMap::new();
+    for bits in [2u8, 4, 8] {
+        let scheme = QuantScheme { bits, group_size: Some(16) };
+        let s = score_layer(block_view(&weights), &taps, scheme, q.as_ref(), LossKind::Dist)
+            .unwrap();
+        assert!(s.is_finite() && s >= 0.0, "{bits}-bit score {s}");
+        scores.insert(bits, s);
+    }
+    assert!(
+        scores[&2] > scores[&4] && scores[&4] > scores[&8],
+        "divergence must shrink with width: {scores:?}"
+    );
+}
+
+#[test]
+fn score_layer_supports_every_loss_kind() {
+    let weights = fixture_weights(9, 0.5);
+    let taps = fixture_taps(9);
+    let q = resolve("rtn", &QuantizerParams::default()).unwrap();
+    let scheme = QuantScheme { bits: 2, group_size: Some(16) };
+    for loss in [LossKind::Dist, LossKind::Mse, LossKind::Kl] {
+        let s = score_layer(block_view(&weights), &taps, scheme, q.as_ref(), loss).unwrap();
+        assert!(s.is_finite() && s > 0.0, "{loss:?} score {s}");
+    }
+}
+
+#[test]
+fn deterministic_allocation_on_fixed_profile() {
+    // worked example: 4 layers, candidates {2,4,8}, budget 3.5 avg bits
+    // (total 14). greedy by gain-per-bit: L0 2→4 (ratio 3.5), L1 2→4
+    // (1.5), then L0 4→8 no longer fits and L2 2→4 (0.1) does; L3 stays.
+    let p = profile_fixture(
+        &[
+            &[(2, 8.0), (4, 1.0), (8, 0.5)],
+            &[(2, 4.0), (4, 1.0), (8, 0.9)],
+            &[(2, 1.0), (4, 0.8), (8, 0.7)],
+            &[(2, 0.5), (4, 0.4), (8, 0.35)],
+        ],
+        "g64",
+        &[2, 4, 8],
+    );
+    let base = QuantScheme::w2_g64();
+    let plan = BitBudgetPlanner::new(base, 3.5).plan(&p).unwrap();
+    let bits: Vec<u8> = plan.schemes.values().map(|s| s.bits).collect();
+    assert_eq!(bits, vec![4, 4, 4, 2]);
+    assert_eq!(plan.mean_bits, 3.5);
+    assert_eq!(plan.layer_bits_string(), "0:4,1:4,2:4,3:2");
+    assert!(plan.schemes.values().all(|s| s.group_size == Some(64)));
+    // provenance survives into the plan
+    assert!(plan.provenance.contains("method=gptq"), "{}", plan.provenance);
+    // re-planning the same profile is bit-identical
+    assert_eq!(BitBudgetPlanner::new(base, 3.5).plan(&p).unwrap(), plan);
+}
+
+#[test]
+fn infeasible_budget_is_a_config_error() {
+    let p = profile_fixture(&[&[(2, 1.0), (4, 0.1)]], "g64", &[2, 4]);
+    let err = BitBudgetPlanner::new(QuantScheme::w2_g64(), 1.5)
+        .plan(&p)
+        .unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("infeasible") && msg.contains("2"), "{msg}");
+}
+
+#[test]
+fn single_layer_edge_cases() {
+    let p = profile_fixture(&[&[(2, 4.0), (3, 2.0), (4, 1.0), (8, 0.1)]], "g64",
+                            &[2, 3, 4, 8]);
+    let base = QuantScheme::w2_g64();
+    // a generous budget climbs all the way to 8 bits
+    let plan = BitBudgetPlanner::new(base, 8.0).plan(&p).unwrap();
+    assert_eq!(plan.schemes[&0].bits, 8);
+    assert_eq!(plan.mean_bits, 8.0);
+    // a budget below the next step stays at the floor
+    let plan = BitBudgetPlanner::new(base, 2.9).plan(&p).unwrap();
+    assert_eq!(plan.schemes[&0].bits, 2);
+    assert_eq!(plan.mean_bits, 2.0);
+    // an exact-step budget takes exactly that step
+    let plan = BitBudgetPlanner::new(base, 3.0).plan(&p).unwrap();
+    assert_eq!(plan.schemes[&0].bits, 3);
+}
+
+#[test]
+fn sensitivity_json_roundtrip_on_disk() {
+    let p = profile_fixture(
+        &[&[(2, 1.5), (4, 0.25)], &[(2, 0.375), (4, 0.0625)]],
+        "g64",
+        &[2, 4],
+    );
+    let dir = std::env::temp_dir().join("nt_policy_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("sensitivity.json");
+    p.save(&path).unwrap();
+    let back = SensitivityProfile::load(&path).unwrap();
+    assert_eq!(p, back);
+    // and planning from the reloaded profile matches the original
+    let planner = BitBudgetPlanner::new(QuantScheme::w2_g64(), 3.0);
+    assert_eq!(planner.plan(&p).unwrap(), planner.plan(&back).unwrap());
+}
+
+#[test]
+fn every_emitted_plan_passes_pipeline_validation() {
+    let p = profile_fixture(
+        &[
+            &[(2, 5.0), (3, 2.0), (4, 1.0), (8, 0.2)],
+            &[(2, 3.0), (3, 1.5), (4, 0.8), (8, 0.15)],
+            &[(2, 1.0), (3, 0.6), (4, 0.4), (8, 0.1)],
+        ],
+        "g64",
+        &[2, 3, 4, 8],
+    );
+    let base = QuantScheme::w2_g64();
+    for target in [2.0f32, 2.25, 2.5, 3.0, 4.0, 8.0] {
+        let plan = BitBudgetPlanner::new(base, target).plan(&p).unwrap();
+        assert!(
+            plan.mean_bits <= target + 1e-5,
+            "target {target}: mean {} over budget",
+            plan.mean_bits
+        );
+        let mut cfg = PipelineConfig::new("rtn", base);
+        for (layer, scheme) in &plan.schemes {
+            // every override is pack-width legal on its own...
+            scheme.pack_bits().unwrap();
+            cfg = cfg.with_layer_scheme(*layer, *scheme);
+        }
+        // ...and the whole plan passes the pipeline's grain + range check
+        cfg.validate(p.layers.len()).unwrap();
+    }
+}
+
+#[test]
+fn duplicate_profile_layers_are_rejected() {
+    let mut p = profile_fixture(&[&[(2, 1.0), (4, 0.1)]], "g64", &[2, 4]);
+    let dup = p.layers[0].clone();
+    p.layers.push(dup);
+    let err = BitBudgetPlanner::new(QuantScheme::w2_g64(), 4.0)
+        .plan(&p)
+        .unwrap_err();
+    assert!(format!("{err}").contains("twice"), "{err}");
+}
+
+#[test]
+fn profile_grain_must_match_planner_base() {
+    let p = profile_fixture(&[&[(2, 1.0), (4, 0.1)]], "g64", &[2, 4]);
+    // per-channel base against a g64 profile: schemes would be grain-illegal
+    let err = BitBudgetPlanner::new(QuantScheme::w4_perchannel(), 4.0)
+        .plan(&p)
+        .unwrap_err();
+    assert!(format!("{err}").contains("grain"), "{err}");
+}
+
+#[test]
+fn offline_profile_to_plan_flow_prefers_the_fragile_layer() {
+    // two synthetic "layers": layer 1 has 8x larger weights, so its
+    // quantization divergence dominates and the planner must upgrade it
+    // first — the full profile → plan flow with no runtime involved
+    let q = resolve("rtn", &QuantizerParams::default()).unwrap();
+    let cfg = SensitivityConfig::new("rtn", QuantScheme { bits: 2, group_size: Some(16) });
+    let candidates = cfg.normalized_candidates().unwrap();
+    let mut layers = Vec::new();
+    for (layer, scale) in [(0usize, 0.25f32), (1usize, 2.0f32)] {
+        let weights = fixture_weights(100 + layer as u64, scale);
+        let taps = fixture_taps(200 + layer as u64);
+        let mut scores = BTreeMap::new();
+        for &bits in &candidates {
+            let scheme = QuantScheme { bits, group_size: Some(16) };
+            let s = score_layer(block_view(&weights), &taps, scheme, q.as_ref(),
+                                LossKind::Dist)
+                .unwrap();
+            scores.insert(bits, s);
+        }
+        layers.push(LayerSensitivity { layer, scores });
+    }
+    let profile = SensitivityProfile {
+        model: "synthetic".into(),
+        method: "rtn".into(),
+        group_tag: "g16".into(),
+        calib_source: "static-taps".into(),
+        loss: "dist".into(),
+        candidate_bits: candidates,
+        layers,
+    };
+    let base = QuantScheme { bits: 2, group_size: Some(16) };
+    // room for exactly one 2→3 upgrade: it must land on the fragile layer
+    let plan = BitBudgetPlanner::new(base, 2.5).plan(&profile).unwrap();
+    assert!(
+        plan.schemes[&1].bits > plan.schemes[&0].bits,
+        "fragile layer should win the budget: {:?}",
+        plan.schemes
+    );
+}
