@@ -1,5 +1,7 @@
-//! Serving example: quantize (or load) a model and serve batched traffic,
-//! reporting latency percentiles and throughput — the deployment story.
+//! Serving example: quantize two variants of a model and host them side by
+//! side on the multi-model [`normtweak::engine::Engine`] — the deployment
+//! story (a norm-tweaked GPTQ build next to a plain-RTN build, the kind of
+//! fleet the mixed-precision planner suggests).
 //!
 //! ```text
 //! cargo run --release --example serve_quantized [-- nt-small [n_requests]]
@@ -8,11 +10,12 @@
 use std::time::Instant;
 
 use normtweak::calib::CalibSet;
-use normtweak::coordinator::{quantize_model, PipelineConfig, QuantModel};
+use normtweak::coordinator::{quantize_model, PipelineConfig};
+use normtweak::engine::{Engine, GenRequest, ServableModel};
+use normtweak::eval::LanguageModel;
 use normtweak::model::ModelWeights;
 use normtweak::quant::QuantScheme;
 use normtweak::runtime::Runtime;
-use normtweak::serve::{channel, serve_loop, ServeConfig};
 use normtweak::tweak::TweakConfig;
 
 fn main() -> normtweak::Result<()> {
@@ -23,59 +26,95 @@ fn main() -> normtweak::Result<()> {
         .unwrap_or(48);
     let artifacts = std::env::var("NT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
 
+    // quantize two servable variants and park them as checkpoints; the
+    // engine's factories reload them inside the scheduler thread
     let runtime = Runtime::new(&artifacts)?;
     let weights = ModelWeights::load_from_dir(&model, &artifacts)?;
-
-    // quantize W4 + NT for serving
     let stream = normtweak::calib::corpus::token_stream(
         &normtweak::calib::corpus::wiki_syn(),
         runtime.manifest.calib_batch * weights.config.seq,
     );
     let calib = CalibSet::from_stream(&stream, runtime.manifest.calib_batch,
                                       weights.config.seq, "wiki-syn")?;
+    let tmp = std::env::temp_dir();
+    let gptq_ckpt = tmp.join("serve_quantized_gptq_nt.ntz");
+    let rtn_ckpt = tmp.join("serve_quantized_rtn.ntz");
+    eprintln!("quantizing {model} twice for serving (gptq+NT, rtn)...");
     let cfg = PipelineConfig::new("gptq", QuantScheme::w4_perchannel())
         .with_tweak(TweakConfig::default());
-    eprintln!("quantizing {model} for serving...");
     let (qm, _) = quantize_model(&runtime, &weights, &calib, &cfg)?;
-    let server_model = QuantModel::new(&runtime, &qm)?;
+    qm.save(&gptq_ckpt)?;
+    let cfg = PipelineConfig::new("rtn", QuantScheme::w4_perchannel());
+    let (qm, _) = quantize_model(&runtime, &weights, &calib, &cfg)?;
+    qm.save(&rtn_ckpt)?;
 
-    // drive concurrent traffic
+    // register both under one engine; start() builds + warms them up
+    let mut engine = Engine::builder()
+        .model("gptq-nt", {
+            let (a, m, c) = (artifacts.clone(), model.clone(), gptq_ckpt.clone());
+            move || {
+                let lm: Box<dyn LanguageModel> = Box::new(ServableModel::load(&a, &m, &c)?);
+                Ok(lm)
+            }
+        })
+        .model("rtn", {
+            let (a, m, c) = (artifacts.clone(), model.clone(), rtn_ckpt.clone());
+            move || {
+                let lm: Box<dyn LanguageModel> = Box::new(ServableModel::load(&a, &m, &c)?);
+                Ok(lm)
+            }
+        })
+        .cache(64)
+        .build()?;
+    let client = engine.start()?;
+
+    // drive concurrent traffic, alternating models per request
     let n_clients = 4;
-    let (handle, rx) = channel();
     let latencies = std::sync::Mutex::new(Vec::<u128>::new());
     let t0 = Instant::now();
-    let stats = std::thread::scope(|s| {
+    std::thread::scope(|s| {
         for c in 0..n_clients {
-            let h = handle.clone();
+            let client = client.clone();
             let lat = &latencies;
             s.spawn(move || {
                 for i in 0..n_requests / n_clients {
+                    let key = if (c + i) % 2 == 0 { "gptq-nt" } else { "rtn" };
                     let prompt = vec![1, (8 + (c * 37 + i * 11) % 480) as i32];
                     let t = Instant::now();
-                    if h.submit(prompt, 16).is_ok() {
+                    if client.generate(key, GenRequest::greedy(prompt, 16)).is_ok() {
                         lat.lock().unwrap().push(t.elapsed().as_micros());
                     }
                 }
             });
         }
-        drop(handle);
-        serve_loop(
-            &server_model,
-            ServeConfig { max_batch: 8, batch_window: std::time::Duration::from_millis(10) },
-            rx,
-        )
-    })?;
+    });
+    let stats = engine.shutdown()?;
     let wall = t0.elapsed().as_secs_f64();
 
     let mut lat = latencies.into_inner().unwrap();
     lat.sort_unstable();
+    if lat.is_empty() {
+        return Err(normtweak::Error::Serve("no requests completed".into()));
+    }
     let pct = |p: usize| lat[(lat.len() * p / 100).min(lat.len() - 1)] as f64 / 1000.0;
-    println!("\n== serve_quantized: {model}, {} requests, {n_clients} clients ==", stats.served);
+    println!("\n== serve_quantized: {model}, {} requests, {n_clients} clients, 2 models ==",
+             stats.total_served());
     println!("throughput: {:.1} req/s  ({:.1} tok/s generated)",
-             stats.served as f64 / wall,
-             (stats.served * 16) as f64 / wall);
+             stats.total_served() as f64 / wall,
+             (stats.total_served() * 16) as f64 / wall);
     println!("latency:    p50 {:.0} ms   p90 {:.0} ms   p99 {:.0} ms", pct(50), pct(90), pct(99));
-    println!("batching:   mean {:.2}, max {} (from {} batches)",
-             stats.mean_batch(), stats.max_batch_seen, stats.batches);
+    for (name, m) in &stats.models {
+        println!(
+            "{name:>8}: served {}, batches {} (mean {:.2}, max {}), \
+             cache hits {}/{}, warmup batches {}",
+            m.served,
+            m.batches,
+            m.mean_batch(),
+            m.max_batch_seen,
+            m.cache_hits,
+            m.cache_hits + m.cache_misses,
+            m.warmup_batches
+        );
+    }
     Ok(())
 }

@@ -1,76 +1,181 @@
-//! Serving throughput/latency of the quantized model under synthetic load
-//! (batched vs unbatched — the dynamic batcher's win).
-//! Requires `make artifacts`.
+//! Serving throughput/latency of the engine under synthetic load, sweeping
+//! `max_batch` (batched vs unbatched — the dynamic batcher's win) and
+//! exercising the greedy response cache.
+//!
+//! Always emits machine-readable `BENCH_serve.json` (req/s, p50/p99
+//! latency, mean batch, cache hit rate per config) so the serving perf
+//! trajectory is tracked across PRs: with `make artifacts` present it
+//! serves a real RTN-quantized checkpoint; otherwise it falls back to an
+//! offline mock model so the numbers still exist (tagged `"model": "mock"`).
+//! Set `NT_BENCH_OUT` to redirect the JSON.
 
 use std::time::{Duration, Instant};
 
 use normtweak::calib::CalibSet;
-use normtweak::coordinator::{quantize_model, PipelineConfig, QuantModel};
-use normtweak::model::ModelWeights;
+use normtweak::coordinator::{quantize_model, PipelineConfig};
+use normtweak::engine::{Engine, GenRequest, ModelTuning, ServableModel};
+use normtweak::error::Result;
+use normtweak::eval::LanguageModel;
+use normtweak::model::{ModelConfig, ModelWeights};
 use normtweak::quant::QuantScheme;
 use normtweak::runtime::Runtime;
-use normtweak::serve::{channel, serve_loop, ServeConfig};
+use normtweak::tensor::Tensor;
+use normtweak::util::json::{self, Json};
 
-fn drive(model: &QuantModel, max_batch: usize, n_requests: usize) -> (f64, f64, f64) {
-    let (handle, rx) = channel();
+/// Offline stand-in: always prefers (last_token + 1) % vocab, no batch cap.
+struct MockLm(ModelConfig);
+
+impl LanguageModel for MockLm {
+    fn config(&self) -> &ModelConfig {
+        &self.0
+    }
+
+    fn logits(&self, tokens: &Tensor) -> Result<Tensor> {
+        let (b, s) = (tokens.shape[0], tokens.shape[1]);
+        let v = self.0.vocab;
+        let tv = tokens.as_i32()?;
+        let mut out = vec![0.0f32; b * s * v];
+        for i in 0..b {
+            for t in 0..s {
+                let next = ((tv[i * s + t] + 1) as usize) % v;
+                out[(i * s + t) * v + next] = 10.0;
+            }
+        }
+        Ok(Tensor::f32(&[b, s, v], out))
+    }
+}
+
+/// Where the served model comes from.
+enum Source {
+    Mock,
+    Checkpoint { artifacts: String, model: String, path: std::path::PathBuf },
+}
+
+fn engine_for(max_batch: usize, cache: usize, src: &Source) -> Result<Engine> {
+    let tuning = ModelTuning { max_batch, batch_window: Duration::from_millis(10) };
+    let b = Engine::builder().cache(cache);
+    let b = match src {
+        Source::Mock => b.model_with("bench", tuning, || {
+            let lm: Box<dyn LanguageModel> =
+                Box::new(MockLm(ModelConfig::builtin("nt-tiny")?));
+            Ok(lm)
+        }),
+        Source::Checkpoint { artifacts, model, path } => {
+            let (a, m, p) = (artifacts.clone(), model.clone(), path.clone());
+            b.model_with("bench", tuning, move || {
+                let lm: Box<dyn LanguageModel> = Box::new(ServableModel::load(&a, &m, &p)?);
+                Ok(lm)
+            })
+        }
+    };
+    b.build()
+}
+
+struct RunMetrics {
+    served: usize,
+    rps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    mean_batch: f32,
+    cache_hit_rate: f64,
+}
+
+/// Drive one engine config with 4 client threads cycling a small prompt
+/// pool (repeats exercise the response cache).
+fn drive(mut engine: Engine, n_requests: usize) -> Result<RunMetrics> {
+    let client = engine.start()?;
     let lat = std::sync::Mutex::new(Vec::<u128>::new());
     let t0 = Instant::now();
-    let stats = std::thread::scope(|s| {
+    std::thread::scope(|s| {
         for c in 0..4 {
-            let h = handle.clone();
+            let client = client.clone();
             let lat = &lat;
             s.spawn(move || {
                 for i in 0..n_requests / 4 {
-                    let prompt = vec![1, (8 + (c * 31 + i * 13) % 150) as i32];
+                    // 4-prompt pool per client over 8 iterations: the
+                    // second lap repeats every prompt, exercising the cache
+                    let prompt = vec![1, (8 + (c * 31 + (i % 4) * 13) % 150) as i32];
                     let t = Instant::now();
-                    if h.submit(prompt, 8).is_ok() {
+                    if client.generate("bench", GenRequest::greedy(prompt, 8)).is_ok() {
                         lat.lock().unwrap().push(t.elapsed().as_micros());
                     }
                 }
             });
         }
-        drop(handle);
-        serve_loop(
-            model,
-            ServeConfig { max_batch, batch_window: Duration::from_millis(10) },
-            rx,
-        )
-    })
-    .unwrap();
+    });
+    let stats = engine.shutdown()?;
     let wall = t0.elapsed().as_secs_f64();
     let mut l = lat.into_inner().unwrap();
     l.sort_unstable();
-    let p50 = l[l.len() / 2] as f64 / 1000.0;
-    (stats.served as f64 / wall, p50, stats.mean_queue_micros() / 1000.0)
+    if l.is_empty() {
+        return Err(normtweak::Error::Serve("no requests completed".into()));
+    }
+    let m = stats.model("bench").cloned().unwrap_or_default();
+    Ok(RunMetrics {
+        served: m.served,
+        rps: m.served as f64 / wall,
+        p50_ms: l[l.len() / 2] as f64 / 1000.0,
+        p99_ms: l[(l.len() * 99 / 100).min(l.len() - 1)] as f64 / 1000.0,
+        mean_batch: m.mean_batch(),
+        cache_hit_rate: m.cache_hit_rate(),
+    })
 }
 
 fn main() {
     let artifacts = std::env::var("NT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    if !std::path::Path::new(&artifacts).join("manifest.json").exists() {
-        eprintln!("[skip] run `make artifacts` first");
-        return;
-    }
+    let out_path =
+        std::env::var("NT_BENCH_OUT").unwrap_or_else(|_| "BENCH_serve.json".into());
     println!("== bench_serve ==");
-    let rt = Runtime::new(&artifacts).unwrap();
-    let w = ModelWeights::load_from_dir("nt-tiny", &artifacts).unwrap();
-    let stream = normtweak::calib::corpus::token_stream(
-        &normtweak::calib::corpus::wiki_syn(),
-        rt.manifest.calib_batch * w.config.seq,
-    );
-    let calib = CalibSet::from_stream(&stream, rt.manifest.calib_batch,
-                                      w.config.seq, "wiki-syn").unwrap();
-    let cfg = PipelineConfig::new("rtn", QuantScheme::w4_perchannel());
-    let (qm, _) = quantize_model(&rt, &w, &calib, &cfg).unwrap();
-    let model = QuantModel::new(&rt, &qm).unwrap();
 
-    // warm the executable cache
-    drive(&model, 8, 8);
-
-    for max_batch in [1usize, 4, 8] {
-        let (rps, p50, queue) = drive(&model, max_batch, 32);
-        println!(
-            "max_batch {max_batch}: {rps:>6.1} req/s   p50 {p50:>7.1} ms   \
-             mean queue {queue:>7.1} ms"
+    let (src, model_desc) = if std::path::Path::new(&artifacts).join("manifest.json").exists()
+    {
+        // quantize once, park the checkpoint; every engine reloads it
+        let rt = Runtime::new(&artifacts).unwrap();
+        let w = ModelWeights::load_from_dir("nt-tiny", &artifacts).unwrap();
+        let stream = normtweak::calib::corpus::token_stream(
+            &normtweak::calib::corpus::wiki_syn(),
+            rt.manifest.calib_batch * w.config.seq,
         );
+        let calib = CalibSet::from_stream(&stream, rt.manifest.calib_batch,
+                                          w.config.seq, "wiki-syn").unwrap();
+        let cfg = PipelineConfig::new("rtn", QuantScheme::w4_perchannel());
+        let (qm, _) = quantize_model(&rt, &w, &calib, &cfg).unwrap();
+        let path = std::env::temp_dir().join("bench_serve_rtn_w4.ntz");
+        qm.save(&path).unwrap();
+        (
+            Source::Checkpoint { artifacts: artifacts.clone(), model: "nt-tiny".into(), path },
+            "nt-tiny rtn w4".to_string(),
+        )
+    } else {
+        eprintln!("[offline] no artifacts at {artifacts} — benching the mock model");
+        (Source::Mock, "mock".to_string())
+    };
+
+    let mut configs: Vec<Json> = Vec::new();
+    for max_batch in [1usize, 4, 8] {
+        let engine = engine_for(max_batch, 32, &src).unwrap();
+        let m = drive(engine, 32).unwrap();
+        println!(
+            "max_batch {max_batch}: {:>6.1} req/s   p50 {:>7.1} ms   p99 {:>7.1} ms   \
+             mean batch {:>4.1}   cache hit rate {:.2}",
+            m.rps, m.p50_ms, m.p99_ms, m.mean_batch, m.cache_hit_rate
+        );
+        configs.push(json::obj(vec![
+            ("max_batch", json::n(max_batch as f64)),
+            ("served", json::n(m.served as f64)),
+            ("req_per_s", json::n(m.rps)),
+            ("p50_ms", json::n(m.p50_ms)),
+            ("p99_ms", json::n(m.p99_ms)),
+            ("mean_batch", json::n(m.mean_batch as f64)),
+            ("cache_hit_rate", json::n(m.cache_hit_rate)),
+        ]));
     }
+    let record = json::obj(vec![
+        ("bench", json::s("serve")),
+        ("model", json::s(model_desc)),
+        ("engine", json::s("engine::Engine (multi-model scheduler)")),
+        ("configs", json::arr(configs)),
+    ]);
+    std::fs::write(&out_path, record.emit() + "\n").unwrap();
+    println!("wrote {out_path}");
 }

@@ -155,6 +155,10 @@ impl LanguageModel for FloatModel<'_, '_> {
     fn max_batch(&self) -> Option<usize> {
         self.runtime.manifest.max_bucket()
     }
+
+    fn warm_buckets(&self) -> Vec<usize> {
+        self.runtime.manifest.buckets.clone()
+    }
 }
 
 /// Quantized model runner (the `qOut` stream + quantized evals/serving).
@@ -274,6 +278,10 @@ impl LanguageModel for QuantModel<'_, '_> {
 
     fn max_batch(&self) -> Option<usize> {
         self.runtime.manifest.max_bucket()
+    }
+
+    fn warm_buckets(&self) -> Vec<usize> {
+        self.runtime.manifest.buckets.clone()
     }
 }
 

@@ -1,0 +1,123 @@
+//! LRU response cache for deterministic greedy decoding.
+//!
+//! Keyed on (lane, prompt, max_new): greedy decoding (`temperature == 0.0`)
+//! is a pure function of the prompt and the model, so a repeat prompt can be
+//! answered without riding a batch.  Sampled requests are never cached —
+//! `eval::generate` draws from one RNG shared across batch rows, so sampled
+//! output depends on batch composition and is not replayable.
+//!
+//! Capacity 0 disables the cache.  Eviction scans for the least-recently
+//! used entry on insert — O(capacity), which is fine at the few-hundred
+//! entry capacities the engine runs with.
+
+use std::collections::HashMap;
+
+/// (lane index, prompt tokens, max_new) — the full identity of a greedy
+/// generation.  The lane index stands in for the model name: it is stable
+/// for the lifetime of the scheduler that owns the cache.
+pub(crate) type CacheKey = (usize, Vec<i32>, usize);
+
+pub(crate) struct ResponseCache {
+    cap: usize,
+    tick: u64,
+    map: HashMap<CacheKey, (Vec<i32>, u64)>,
+}
+
+impl ResponseCache {
+    pub(crate) fn new(cap: usize) -> Self {
+        ResponseCache { cap, tick: 0, map: HashMap::new() }
+    }
+
+    pub(crate) fn enabled(&self) -> bool {
+        self.cap > 0
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Look up a cached response, refreshing its recency on hit.
+    pub(crate) fn get(&mut self, key: &CacheKey) -> Option<Vec<i32>> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.get_mut(key).map(|(tokens, used)| {
+            *used = tick;
+            tokens.clone()
+        })
+    }
+
+    /// Insert a response, evicting the least-recently-used entry when full.
+    pub(crate) fn insert(&mut self, key: CacheKey, tokens: Vec<i32>) {
+        if self.cap == 0 {
+            return;
+        }
+        self.tick += 1;
+        if self.map.len() >= self.cap && !self.map.contains_key(&key) {
+            if let Some(oldest) = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, used))| *used)
+                .map(|(k, _)| k.clone())
+            {
+                self.map.remove(&oldest);
+            }
+        }
+        self.map.insert(key, (tokens, self.tick));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(prompt: i32) -> CacheKey {
+        (0, vec![prompt], 4)
+    }
+
+    #[test]
+    fn hit_returns_inserted_tokens() {
+        let mut c = ResponseCache::new(4);
+        assert!(c.enabled());
+        assert!(c.get(&key(1)).is_none());
+        c.insert(key(1), vec![1, 2, 3]);
+        assert_eq!(c.get(&key(1)), Some(vec![1, 2, 3]));
+        // distinct max_new is a distinct entry
+        assert!(c.get(&(0, vec![1], 8)).is_none());
+        // distinct lane is a distinct entry
+        assert!(c.get(&(1, vec![1], 4)).is_none());
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c = ResponseCache::new(2);
+        c.insert(key(1), vec![1]);
+        c.insert(key(2), vec![2]);
+        // touch 1 so 2 becomes the LRU entry
+        assert!(c.get(&key(1)).is_some());
+        c.insert(key(3), vec![3]);
+        assert_eq!(c.len(), 2);
+        assert!(c.get(&key(2)).is_none(), "LRU entry must be evicted");
+        assert!(c.get(&key(1)).is_some());
+        assert!(c.get(&key(3)).is_some());
+    }
+
+    #[test]
+    fn reinsert_updates_in_place_without_eviction() {
+        let mut c = ResponseCache::new(2);
+        c.insert(key(1), vec![1]);
+        c.insert(key(2), vec![2]);
+        c.insert(key(1), vec![9]);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(&key(1)), Some(vec![9]));
+        assert!(c.get(&key(2)).is_some(), "re-insert must not evict");
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let mut c = ResponseCache::new(0);
+        assert!(!c.enabled());
+        c.insert(key(1), vec![1]);
+        assert_eq!(c.len(), 0);
+        assert!(c.get(&key(1)).is_none());
+    }
+}

@@ -1,0 +1,578 @@
+//! Multi-model serving engine — the deployment story of the paper as a
+//! first-class API.
+//!
+//! One [`Engine`] hosts any number of named quantized (or float) models —
+//! e.g. a `w2` fleet with a `w4` fallback, the natural companion to the
+//! mixed-precision planner — behind a single deadline-aware batching
+//! scheduler with per-request cancellation, graceful shutdown, executable
+//! warm-up, and an LRU response cache for deterministic greedy decoding.
+//!
+//! # Lifecycle
+//!
+//! ```text
+//!   Engine::builder()                       EngineBuilder
+//!     .model("w4", factory)                   register named models
+//!     .model_with("w2", tuning, factory)      (per-model batching tuning)
+//!     .cache(256)                             greedy response cache
+//!     .build()?                             Engine        (validated)
+//!          │
+//!          ▼ start()                        spawns the scheduler thread:
+//!          │                                  factories build the models,
+//!          │                                  warm-up primes every exported
+//!          │                                  batch bucket, then serving
+//!          │                                  begins; returns a Client
+//!          ▼
+//!   Client::submit(model, GenRequest)      Ticket  (wait / try_wait /
+//!     · cloneable across threads                    cancel-on-drop)
+//!     · per-request deadline
+//!          │
+//!          ▼ shutdown()                    drains the queues gracefully,
+//!                                          returns per-model EngineStats
+//! ```
+//!
+//! # Threading model
+//!
+//! The XLA-backed runners ([`crate::coordinator::QuantModel`] /
+//! [`crate::coordinator::FloatModel`]) borrow a PJRT client and are not
+//! `Send`, so models can never migrate between threads.  The engine
+//! therefore registers model *factories* (`FnOnce() -> Result<Box<dyn
+//! LanguageModel>> + Send`): `start()` runs every factory **inside** the
+//! scheduler thread, which then owns its models for the engine's lifetime.
+//! [`ServableModel`] is the ready-made factory payload for serving a saved
+//! quantized checkpoint.  Mock models in tests are ordinary owned values.
+//!
+//! Requests may be submitted from any number of threads via cloned
+//! [`Client`]s; a [`Ticket`] supports blocking wait, polling, and
+//! cancellation (dropping a ticket cancels a not-yet-scheduled request).
+//! [`Client`]s obtained before `start()` buffer their submissions until the
+//! scheduler comes up.
+//!
+//! # Migration from `serve::serve_loop`
+//!
+//! The old free-function loop survives as a deprecated single-model shim on
+//! top of this scheduler; see `serve/mod.rs` for the migration note.
+
+pub(crate) mod cache;
+pub(crate) mod scheduler;
+mod stats;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::eval::LanguageModel;
+use crate::model::{ModelConfig, QuantizedModel};
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+pub use crate::eval::generate::SampleConfig;
+pub use stats::{EngineStats, ModelStats};
+
+use scheduler::{Lane, Msg, Pending, ReplyTo, Scheduler};
+
+/// Per-model batching knobs (the engine-side analog of
+/// [`crate::serve::ServeConfig`]).
+#[derive(Debug, Clone, Copy)]
+pub struct ModelTuning {
+    /// largest dispatch group; oversized groups are chunked to the model's
+    /// [`LanguageModel::max_batch`] bucket anyway
+    pub max_batch: usize,
+    /// how long the oldest rider may wait for stragglers before its batch
+    /// dispatches
+    pub batch_window: Duration,
+}
+
+impl Default for ModelTuning {
+    fn default() -> Self {
+        ModelTuning { max_batch: 8, batch_window: Duration::from_millis(2) }
+    }
+}
+
+impl ModelTuning {
+    /// Reject degenerate tunings at build time instead of silently serving
+    /// one-request batches.
+    pub fn validate(&self, name: &str) -> Result<()> {
+        if self.max_batch == 0 {
+            return Err(Error::Config(format!(
+                "model `{name}`: max_batch must be >= 1 (0 disables batching entirely)"
+            )));
+        }
+        if self.batch_window.is_zero() {
+            return Err(Error::Config(format!(
+                "model `{name}`: batch_window must be non-zero (a zero window \
+                 degenerates to single-request batches; use >= 1ms)"
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// One generation request.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    pub sample: SampleConfig,
+    /// answer-by budget measured from submit; expiry is answered with
+    /// [`Error::Serve`], never silently dropped
+    pub deadline: Option<Duration>,
+}
+
+impl GenRequest {
+    /// Deterministic greedy request — the only kind the response cache
+    /// may answer.
+    pub fn greedy(prompt: Vec<i32>, max_new: usize) -> Self {
+        GenRequest {
+            prompt,
+            max_new,
+            sample: SampleConfig { temperature: 0.0, stochastic_prefix: 0, seed: 0 },
+            deadline: None,
+        }
+    }
+
+    pub fn with_sample(mut self, sample: SampleConfig) -> Self {
+        self.sample = sample;
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+}
+
+/// The engine's answer to one request.
+#[derive(Debug, Clone)]
+pub struct EngineResponse {
+    /// registered name of the model that served this request
+    pub model: String,
+    /// prompt + generated tokens (prompt prefix included, as generated)
+    pub tokens: Vec<i32>,
+    /// length of the prompt prefix inside `tokens`
+    pub prompt_len: usize,
+    /// submit-to-dispatch wait
+    pub queue_micros: u128,
+    /// generation wall time of the batch this request rode in (0 for
+    /// cache hits)
+    pub gen_micros: u128,
+    /// riders in that batch (0 for cache hits)
+    pub batch_size: usize,
+    /// answered from the greedy response cache
+    pub cached: bool,
+}
+
+impl EngineResponse {
+    /// Only the newly generated tokens (everything after the prompt).
+    pub fn new_tokens(&self) -> &[i32] {
+        &self.tokens[self.prompt_len.min(self.tokens.len())..]
+    }
+}
+
+/// A pending request: wait, poll, or cancel (dropping cancels a
+/// not-yet-scheduled request — it will never consume a batch slot).
+pub struct Ticket {
+    rx: mpsc::Receiver<Result<EngineResponse>>,
+    cancel: Arc<AtomicBool>,
+    done: bool,
+}
+
+impl Ticket {
+    /// Block until the engine answers.
+    pub fn wait(self) -> Result<EngineResponse> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(Error::Serve("engine stopped before answering".into())),
+        }
+    }
+
+    /// Non-blocking poll: `None` while pending (and after a result has
+    /// already been delivered), `Some(result)` exactly once.
+    pub fn try_wait(&mut self) -> Option<Result<EngineResponse>> {
+        if self.done {
+            return None;
+        }
+        match self.rx.try_recv() {
+            Ok(r) => {
+                self.done = true;
+                Some(r)
+            }
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                self.done = true;
+                Some(Err(Error::Serve("engine stopped before answering".into())))
+            }
+        }
+    }
+
+    /// Explicit cancellation (equivalent to dropping the ticket).
+    pub fn cancel(self) {}
+}
+
+impl Drop for Ticket {
+    fn drop(&mut self) {
+        // flag checked by the scheduler before every dispatch; harmless
+        // after the request was answered
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+}
+
+/// Cloneable submission handle (channels only — freely `Send`).
+#[derive(Clone)]
+pub struct Client {
+    tx: mpsc::Sender<Msg>,
+    names: Arc<Vec<String>>,
+}
+
+impl Client {
+    /// Submit a request to a registered model; returns immediately with a
+    /// [`Ticket`].
+    pub fn submit(&self, model: &str, req: GenRequest) -> Result<Ticket> {
+        let lane = self.names.iter().position(|n| n == model).ok_or_else(|| {
+            Error::Serve(format!(
+                "unknown model `{model}`; registered: {}",
+                self.names.join(", ")
+            ))
+        })?;
+        if req.prompt.is_empty() {
+            return Err(Error::Serve("empty prompt".into()));
+        }
+        let enqueued = Instant::now();
+        let (reply, rx) = mpsc::channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let pending = Pending {
+            lane,
+            prompt: req.prompt,
+            max_new: req.max_new,
+            sample: req.sample,
+            enqueued,
+            // a deadline too large to represent simply never expires
+            deadline: req.deadline.and_then(|d| enqueued.checked_add(d)),
+            reply: ReplyTo::Engine(reply),
+            cancel: cancel.clone(),
+            seq: 0,
+        };
+        self.tx
+            .send(Msg::Submit(pending))
+            .map_err(|_| Error::Serve("engine stopped".into()))?;
+        Ok(Ticket { rx, cancel, done: false })
+    }
+
+    /// Submit and block until the response arrives.
+    pub fn generate(&self, model: &str, req: GenRequest) -> Result<EngineResponse> {
+        self.submit(model, req)?.wait()
+    }
+
+    /// Names of the registered models, in registration order.
+    pub fn models(&self) -> &[String] {
+        &self.names
+    }
+}
+
+/// A model factory: runs inside the scheduler thread at `start()`, so the
+/// produced model never has to be `Send`.
+pub type ModelFactory = Box<dyn FnOnce() -> Result<Box<dyn LanguageModel>> + Send>;
+
+/// Builder for [`Engine`]: register models, tune batching, size the cache.
+pub struct EngineBuilder {
+    models: Vec<(String, ModelTuning, ModelFactory)>,
+    cache: usize,
+    warmup: bool,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        EngineBuilder { models: Vec::new(), cache: 0, warmup: true }
+    }
+}
+
+impl EngineBuilder {
+    /// Register a named model with default tuning.
+    pub fn model<F>(self, name: impl Into<String>, factory: F) -> Self
+    where
+        F: FnOnce() -> Result<Box<dyn LanguageModel>> + Send + 'static,
+    {
+        self.model_with(name, ModelTuning::default(), factory)
+    }
+
+    /// Register a named model with explicit batching tuning.
+    pub fn model_with<F>(mut self, name: impl Into<String>, tuning: ModelTuning, factory: F) -> Self
+    where
+        F: FnOnce() -> Result<Box<dyn LanguageModel>> + Send + 'static,
+    {
+        self.models.push((name.into(), tuning, Box::new(factory)));
+        self
+    }
+
+    /// Capacity of the greedy response cache (entries); 0 disables it.
+    pub fn cache(mut self, capacity: usize) -> Self {
+        self.cache = capacity;
+        self
+    }
+
+    /// Toggle executable warm-up at `start()` (on by default; tests with
+    /// call-counting mocks turn it off).
+    pub fn warmup(mut self, warmup: bool) -> Self {
+        self.warmup = warmup;
+        self
+    }
+
+    /// Validate and assemble the engine.
+    pub fn build(self) -> Result<Engine> {
+        if self.models.is_empty() {
+            return Err(Error::Config("engine needs at least one registered model".into()));
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for (name, tuning, _) in &self.models {
+            if !seen.insert(name.clone()) {
+                return Err(Error::Config(format!(
+                    "model `{name}` registered twice; engine keys must be unique"
+                )));
+            }
+            tuning.validate(name)?;
+        }
+        let names = Arc::new(self.models.iter().map(|(n, _, _)| n.clone()).collect::<Vec<_>>());
+        let (tx, rx) = mpsc::channel();
+        Ok(Engine {
+            tx,
+            names,
+            boot: Some(Boot { rx, models: self.models, cache: self.cache, warmup: self.warmup }),
+            handle: None,
+        })
+    }
+}
+
+/// Deferred scheduler-thread state, consumed by `start()`.
+struct Boot {
+    rx: mpsc::Receiver<Msg>,
+    models: Vec<(String, ModelTuning, ModelFactory)>,
+    cache: usize,
+    warmup: bool,
+}
+
+/// An owned multi-model serving engine.  See the module docs for the
+/// lifecycle diagram.
+pub struct Engine {
+    tx: mpsc::Sender<Msg>,
+    names: Arc<Vec<String>>,
+    boot: Option<Boot>,
+    handle: Option<std::thread::JoinHandle<EngineStats>>,
+}
+
+impl Engine {
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::default()
+    }
+
+    /// A submission handle.  Valid before `start()` too — submissions
+    /// buffer until the scheduler comes up (warm-up always precedes them).
+    pub fn client(&self) -> Client {
+        Client { tx: self.tx.clone(), names: self.names.clone() }
+    }
+
+    /// Spawn the scheduler thread: build every registered model from its
+    /// factory, run warm-up, then begin serving.  Blocks until the engine
+    /// is ready (or a factory/warm-up failed) and returns a [`Client`].
+    pub fn start(&mut self) -> Result<Client> {
+        let boot = self
+            .boot
+            .take()
+            .ok_or_else(|| Error::Serve("engine already started".into()))?;
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("nt-engine".into())
+            .spawn(move || {
+                let Boot { rx, models, cache, warmup } = boot;
+                let mut built: Vec<(String, ModelTuning, Box<dyn LanguageModel>)> = Vec::new();
+                for (name, tuning, factory) in models {
+                    match factory() {
+                        Ok(m) => built.push((name, tuning, m)),
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(Error::Serve(format!(
+                                "building model `{name}` failed: {e}"
+                            ))));
+                            return EngineStats::default();
+                        }
+                    }
+                }
+                let lanes: Vec<Lane> = built
+                    .iter()
+                    .map(|(n, t, m)| Lane::new(n.clone(), m.as_ref(), *t))
+                    .collect();
+                let mut sched = Scheduler::new(lanes, rx, cache);
+                if warmup {
+                    if let Err(e) = sched.warm_up() {
+                        let _ = ready_tx.send(Err(e));
+                        return EngineStats::default();
+                    }
+                }
+                let _ = ready_tx.send(Ok(()));
+                sched.run()
+            })
+            .map_err(Error::Io)?;
+        self.handle = Some(handle);
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(self.client()),
+            Ok(Err(e)) => {
+                if let Some(h) = self.handle.take() {
+                    let _ = h.join();
+                }
+                Err(e)
+            }
+            Err(_) => {
+                if let Some(h) = self.handle.take() {
+                    let _ = h.join();
+                }
+                Err(Error::Serve("engine thread died during startup".into()))
+            }
+        }
+    }
+
+    /// Graceful shutdown: serve everything already queued, then stop and
+    /// return the per-model statistics.  Outstanding [`Client`]s keep
+    /// working until the drain finishes; their later submits fail cleanly.
+    pub fn shutdown(mut self) -> Result<EngineStats> {
+        let handle = self.handle.take().ok_or_else(|| {
+            Error::Serve("engine was never started (call start() before shutdown())".into())
+        })?;
+        let _ = self.tx.send(Msg::Shutdown);
+        handle
+            .join()
+            .map_err(|_| Error::Serve("engine thread panicked".into()))
+    }
+}
+
+/// An owned, self-contained runner for a saved quantized checkpoint —
+/// the ready-made [`ModelFactory`] payload.
+///
+/// Owns its own [`Runtime`] (PJRT client + executable cache) plus the
+/// checkpoint, so a `Send` factory can capture plain strings and build the
+/// whole stack inside the engine thread.  Each `ServableModel` carries its
+/// own PJRT client; at demo scale that is fine, and models sharing one
+/// engine share one scheduler thread regardless.
+pub struct ServableModel {
+    runtime: Runtime,
+    model: QuantizedModel,
+    act_bits: Option<u8>,
+}
+
+impl ServableModel {
+    /// Load `checkpoint` for built-in architecture `model_name`, compiling
+    /// against the AOT artifacts in `artifacts`.
+    pub fn load(
+        artifacts: impl AsRef<std::path::Path>,
+        model_name: &str,
+        checkpoint: impl AsRef<std::path::Path>,
+    ) -> Result<Self> {
+        let runtime = Runtime::new(artifacts)?;
+        let mcfg = ModelConfig::builtin(model_name)?;
+        let model = QuantizedModel::load(mcfg, checkpoint)?;
+        // surface artifact/grain mismatches now, not inside the first batch
+        runtime.manifest.verify_model(&model.config)?;
+        runtime.validate_grain(&model.scheme.group_tag())?;
+        Ok(ServableModel { runtime, model, act_bits: None })
+    }
+
+    /// Serve with dynamic activation fake-quant (the W+A modes).
+    pub fn with_act_bits(mut self, bits: Option<u8>) -> Self {
+        self.act_bits = bits;
+        self
+    }
+
+    fn runner(&self) -> crate::coordinator::QuantModel<'_, '_> {
+        crate::coordinator::QuantModel {
+            runtime: &self.runtime,
+            model: &self.model,
+            act_bits: self.act_bits,
+        }
+    }
+}
+
+impl LanguageModel for ServableModel {
+    fn config(&self) -> &ModelConfig {
+        &self.model.config
+    }
+
+    fn logits(&self, tokens: &Tensor) -> Result<Tensor> {
+        self.runner().logits(tokens)
+    }
+
+    fn max_batch(&self) -> Option<usize> {
+        self.runtime.manifest.max_bucket()
+    }
+
+    fn warm_buckets(&self) -> Vec<usize> {
+        self.runtime.manifest.buckets.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tuning_validation_rejects_degenerate() {
+        let t = ModelTuning { max_batch: 0, ..Default::default() };
+        let err = t.validate("w4").unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        assert!(format!("{err}").contains("max_batch"), "{err}");
+
+        let t = ModelTuning { batch_window: Duration::ZERO, ..Default::default() };
+        let err = t.validate("w4").unwrap_err();
+        assert!(format!("{err}").contains("batch_window"), "{err}");
+
+        ModelTuning::default().validate("w4").unwrap();
+    }
+
+    #[test]
+    fn builder_rejects_empty_and_duplicates() {
+        let err = Engine::builder().build().unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+
+        let err = Engine::builder()
+            .model("a", || Err(Error::Serve("unused".into())))
+            .model("a", || Err(Error::Serve("unused".into())))
+            .build()
+            .unwrap_err();
+        assert!(format!("{err}").contains("registered twice"), "{err}");
+    }
+
+    #[test]
+    fn builder_rejects_bad_tuning_at_build() {
+        let err = Engine::builder()
+            .model_with(
+                "a",
+                ModelTuning { max_batch: 0, ..Default::default() },
+                || Err(Error::Serve("unused".into())),
+            )
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+    }
+
+    #[test]
+    fn greedy_request_is_cacheable_shape() {
+        let r = GenRequest::greedy(vec![1, 2], 4);
+        assert_eq!(r.sample.temperature, 0.0);
+        assert!(r.deadline.is_none());
+        let r = r.with_deadline(Duration::from_millis(5));
+        assert!(r.deadline.is_some());
+    }
+
+    #[test]
+    fn response_new_tokens_slices_after_prompt() {
+        let r = EngineResponse {
+            model: "m".into(),
+            tokens: vec![1, 2, 3, 4, 5],
+            prompt_len: 2,
+            queue_micros: 0,
+            gen_micros: 0,
+            batch_size: 1,
+            cached: false,
+        };
+        assert_eq!(r.new_tokens(), &[3, 4, 5]);
+        // degenerate prompt_len never panics
+        let r = EngineResponse { prompt_len: 9, ..r };
+        assert!(r.new_tokens().is_empty());
+    }
+}

@@ -1,0 +1,556 @@
+//! The engine's batching scheduler: fair-share round-robin across model
+//! lanes, oldest-deadline-first within a lane, bucket-aware chunking, and
+//! the greedy response cache.
+//!
+//! The scheduler is deliberately thread-agnostic: it borrows its models as
+//! plain `&dyn LanguageModel` and runs wherever it is built.  The owned
+//! [`super::Engine`] builds models from `Send` factories inside its own
+//! scheduler thread; the deprecated `serve::serve_loop` shim drives the same
+//! core on the caller's thread (the XLA-backed runners are not `Send`, so
+//! they can never cross a thread boundary themselves).
+//!
+//! Scheduling policy, in order:
+//! 1. a lane is *ready* when its queue holds a full batch, when its oldest
+//!    rider has waited at least `batch_window`, when a queued deadline'd
+//!    request reaches its dispatch-due point (half its deadline budget —
+//!    the other half is reserved for generation, so tight deadlines are
+//!    served in time without collapsing SLO traffic to batch-of-1), or
+//!    unconditionally while draining for shutdown;
+//! 2. ready lanes are served round-robin (one dispatch per turn) so a
+//!    backlogged model cannot starve its neighbours;
+//! 3. within a lane, requests are ordered oldest-deadline-first; a
+//!    no-deadline request ages into an effective deadline of 100 batch
+//!    windows (clamped to [1s, 1h]) so sustained SLO traffic cannot
+//!    starve FIFO riders, and pure FIFO traffic keeps submission order;
+//! 4. a dispatch group is capped at the lane's `max_batch` and split into
+//!    [`LanguageModel::max_batch`]-sized chunks (the largest exported AOT
+//!    bucket), so an over-eager tuning degrades to more batches instead of
+//!    failing riders;
+//! 5. queue time is measured from submit to the *group's* dispatch instant
+//!    (`t_drain`), so riders of later chunks are not charged earlier
+//!    chunks' generation time, with saturating math throughout.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::eval::generate::{generate, SampleConfig};
+use crate::eval::LanguageModel;
+
+use super::cache::ResponseCache;
+use super::stats::{EngineStats, ModelStats};
+use super::{EngineResponse, ModelTuning};
+
+/// Where a finished request is answered.
+pub(crate) enum ReplyTo {
+    /// engine ticket: successes and failures both travel the channel
+    Engine(mpsc::Sender<Result<EngineResponse>>),
+    /// legacy `serve::Request` reply: the old protocol has no error
+    /// channel, so failures drop the sender and the caller's `recv` fails
+    /// (the historical "server dropped request" surface)
+    Legacy(mpsc::Sender<crate::serve::Response>),
+}
+
+impl ReplyTo {
+    pub(crate) fn ok(self, r: EngineResponse) {
+        match self {
+            ReplyTo::Engine(tx) => {
+                let _ = tx.send(Ok(r));
+            }
+            ReplyTo::Legacy(tx) => {
+                let _ = tx.send(crate::serve::Response {
+                    tokens: r.tokens,
+                    prompt_len: r.prompt_len,
+                    queue_micros: r.queue_micros,
+                    gen_micros: r.gen_micros,
+                    batch_size: r.batch_size,
+                });
+            }
+        }
+    }
+
+    pub(crate) fn err(self, e: Error) {
+        match self {
+            ReplyTo::Engine(tx) => {
+                let _ = tx.send(Err(e));
+            }
+            ReplyTo::Legacy(_) => {}
+        }
+    }
+}
+
+/// One queued generation request.
+pub(crate) struct Pending {
+    /// index into the scheduler's lane table
+    pub(crate) lane: usize,
+    pub(crate) prompt: Vec<i32>,
+    pub(crate) max_new: usize,
+    pub(crate) sample: SampleConfig,
+    pub(crate) enqueued: Instant,
+    /// absolute expiry; `None` = no deadline
+    pub(crate) deadline: Option<Instant>,
+    pub(crate) reply: ReplyTo,
+    pub(crate) cancel: Arc<AtomicBool>,
+    /// admission number, assigned by the scheduler (FIFO tie-break)
+    pub(crate) seq: u64,
+}
+
+/// Messages into the scheduler.
+pub(crate) enum Msg {
+    Submit(Pending),
+    /// graceful shutdown: serve everything queued, then stop
+    Shutdown,
+}
+
+/// Queue ordering key: oldest-effective-deadline first, FIFO tie-break.
+///
+/// A no-deadline request is ranked as if it carried an *aging* deadline of
+/// 100 batch windows (clamped to [1s, 1h]) from submission, so a sustained
+/// stream of deadline'd SLO traffic cannot starve FIFO riders forever:
+/// once a FIFO rider has aged past the horizon it outranks every
+/// longer-dated deadline.  Among pure FIFO traffic the aging constant
+/// cancels out and ordering stays submission order.
+fn sort_key(p: &Pending, window: Duration) -> (Instant, u64) {
+    let effective = match p.deadline {
+        Some(d) => d,
+        None => {
+            let aging = window
+                .saturating_mul(100)
+                .clamp(Duration::from_secs(1), Duration::from_secs(3600));
+            p.enqueued.checked_add(aging).unwrap_or(p.enqueued)
+        }
+    };
+    (effective, p.seq)
+}
+
+/// Latest comfortable dispatch instant for a deadline'd request: half its
+/// budget is spent gathering batch mates, the other half is reserved for
+/// generation.  Dispatching the moment a deadline is sighted would
+/// collapse SLO traffic to batch-of-1; waiting for the full batch window
+/// would expire deadlines shorter than it.  The window close still
+/// applies — whichever due instant comes first wins.
+fn dispatch_due(p: &Pending) -> Option<Instant> {
+    p.deadline.map(|d| {
+        let budget = d.saturating_duration_since(p.enqueued);
+        p.enqueued.checked_add(budget / 2).unwrap_or(d)
+    })
+}
+
+/// One registered model and its private queue.
+pub(crate) struct Lane<'m> {
+    pub(crate) name: String,
+    pub(crate) model: &'m dyn LanguageModel,
+    pub(crate) tuning: ModelTuning,
+    queue: Vec<Pending>,
+    pub(crate) stats: ModelStats,
+}
+
+impl<'m> Lane<'m> {
+    pub(crate) fn new(name: String, model: &'m dyn LanguageModel, tuning: ModelTuning) -> Self {
+        Lane { name, model, tuning, queue: Vec::new(), stats: ModelStats::default() }
+    }
+}
+
+/// The multi-lane batching scheduler.
+pub(crate) struct Scheduler<'m> {
+    lanes: Vec<Lane<'m>>,
+    rx: mpsc::Receiver<Msg>,
+    cache: ResponseCache,
+    /// round-robin cursor over lanes
+    rr: usize,
+    /// shutdown requested (or every sender dropped): serve what is queued
+    /// without waiting for batch windows, then exit
+    draining: bool,
+    seq: u64,
+}
+
+impl<'m> Scheduler<'m> {
+    pub(crate) fn new(lanes: Vec<Lane<'m>>, rx: mpsc::Receiver<Msg>, cache_cap: usize) -> Self {
+        Scheduler { lanes, rx, cache: ResponseCache::new(cache_cap), rr: 0, draining: false, seq: 0 }
+    }
+
+    /// Run one priming batch per model/bucket so the first real riders do
+    /// not pay graph compile + dispatch latency.
+    pub(crate) fn warm_up(&mut self) -> Result<()> {
+        let sample = SampleConfig { temperature: 0.0, stochastic_prefix: 0, seed: 0 };
+        for lane in &mut self.lanes {
+            let mut buckets: Vec<usize> =
+                lane.model.warm_buckets().into_iter().filter(|&b| b > 0).collect();
+            buckets.sort_unstable();
+            buckets.dedup();
+            let cfg = lane.model.config();
+            let tok = if cfg.vocab > 1 { 1 } else { 0 };
+            let target = 2.min(cfg.seq);
+            for b in buckets {
+                let prompts = vec![vec![tok]; b];
+                generate(lane.model, &prompts, target, &sample).map_err(|e| {
+                    Error::Serve(format!("warm-up of model `{}` (bucket {b}) failed: {e}", lane.name))
+                })?;
+                lane.stats.warmup_batches += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Serve until shutdown (a [`Msg::Shutdown`] or every sender dropping),
+    /// then drain the queues and return the final stats.
+    pub(crate) fn run(mut self) -> EngineStats {
+        loop {
+            // ingest everything already waiting in the channel
+            loop {
+                match self.rx.try_recv() {
+                    Ok(Msg::Submit(p)) => self.admit(p),
+                    Ok(Msg::Shutdown) => self.draining = true,
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        self.draining = true;
+                        break;
+                    }
+                }
+            }
+            // drop cancellations, expire deadlines
+            self.sweep();
+
+            if let Some(li) = self.next_ready_lane() {
+                self.dispatch(li);
+                continue;
+            }
+            if self.draining && self.lanes.iter().all(|l| l.queue.is_empty()) {
+                // answer any last-gasp submissions still in the channel
+                loop {
+                    match self.rx.try_recv() {
+                        Ok(Msg::Submit(p)) => {
+                            p.reply.err(Error::Serve("engine is shutting down".into()));
+                        }
+                        Ok(Msg::Shutdown) => {}
+                        Err(_) => break,
+                    }
+                }
+                return self.finish();
+            }
+
+            // idle: sleep until the next window/deadline or a new message
+            match self.next_wakeup() {
+                Some(d) => match self.rx.recv_timeout(d) {
+                    Ok(Msg::Submit(p)) => self.admit(p),
+                    Ok(Msg::Shutdown) => self.draining = true,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => self.draining = true,
+                },
+                None => match self.rx.recv() {
+                    Ok(Msg::Submit(p)) => self.admit(p),
+                    Ok(Msg::Shutdown) => self.draining = true,
+                    Err(_) => self.draining = true,
+                },
+            }
+        }
+    }
+
+    /// Accept a submission unless the engine is draining: requests sent
+    /// after shutdown began are refused immediately, so a client that
+    /// keeps submitting cannot hold the drain open forever (channel FIFO
+    /// guarantees everything sent *before* the shutdown message is still
+    /// routed and served).
+    fn admit(&mut self, p: Pending) {
+        if self.draining {
+            p.reply.err(Error::Serve("engine is shutting down".into()));
+        } else {
+            self.route(p);
+        }
+    }
+
+    /// Admit one request: validate, try the cache, or queue it in deadline
+    /// order.
+    fn route(&mut self, mut p: Pending) {
+        self.seq += 1;
+        p.seq = self.seq;
+        if p.lane >= self.lanes.len() {
+            p.reply.err(Error::Serve("request routed to an unknown model lane".into()));
+            return;
+        }
+        if p.cancel.load(Ordering::Relaxed) {
+            self.lanes[p.lane].stats.cancelled += 1;
+            return;
+        }
+        let seq_len = self.lanes[p.lane].model.config().seq;
+        if p.prompt.is_empty() || p.prompt.len() > seq_len {
+            self.lanes[p.lane].stats.rejected += 1;
+            p.reply.err(Error::Serve(format!(
+                "prompt length {} outside [1, {seq_len}] for model `{}`",
+                p.prompt.len(),
+                self.lanes[p.lane].name
+            )));
+            return;
+        }
+        let now = Instant::now();
+        if let Some(d) = p.deadline {
+            if now > d {
+                self.lanes[p.lane].stats.deadline_missed += 1;
+                p.reply.err(Error::Serve(format!(
+                    "deadline exceeded before scheduling on model `{}` (queued {:?})",
+                    self.lanes[p.lane].name,
+                    now.saturating_duration_since(p.enqueued)
+                )));
+                return;
+            }
+        }
+        if self.cache.enabled() && p.sample.temperature == 0.0 {
+            let key = (p.lane, p.prompt.clone(), p.max_new);
+            if let Some(tokens) = self.cache.get(&key) {
+                let lane = &mut self.lanes[p.lane];
+                let queue_micros = now.saturating_duration_since(p.enqueued).as_micros();
+                lane.stats.cache_hits += 1;
+                lane.stats.served += 1;
+                lane.stats.total_queue_micros += queue_micros;
+                p.reply.ok(EngineResponse {
+                    model: lane.name.clone(),
+                    prompt_len: p.prompt.len(),
+                    tokens,
+                    queue_micros,
+                    gen_micros: 0,
+                    batch_size: 0,
+                    cached: true,
+                });
+                return;
+            }
+            // the miss is counted at generation time (run_batch), so a
+            // request that is later cancelled or expires doesn't skew the
+            // hit rate of answered traffic
+        }
+        let lane = &mut self.lanes[p.lane];
+        let window = lane.tuning.batch_window;
+        let key = sort_key(&p, window);
+        let pos = lane.queue.partition_point(|q| sort_key(q, window) <= key);
+        lane.queue.insert(pos, p);
+    }
+
+    /// Drop cancelled requests and answer expired deadlines with an error —
+    /// a cancelled ticket never consumes a batch slot, and a deadline miss
+    /// is reported, not silently dropped.
+    fn sweep(&mut self) {
+        let now = Instant::now();
+        for lane in &mut self.lanes {
+            // cancellations/expiries are rare: don't rebuild the queue on
+            // every scheduler iteration unless one actually exists
+            let dirty = lane.queue.iter().any(|p| {
+                p.cancel.load(Ordering::Relaxed)
+                    || matches!(p.deadline, Some(d) if now > d)
+            });
+            if !dirty {
+                continue;
+            }
+            let queue = std::mem::take(&mut lane.queue);
+            for p in queue {
+                if p.cancel.load(Ordering::Relaxed) {
+                    lane.stats.cancelled += 1;
+                    continue;
+                }
+                if let Some(d) = p.deadline {
+                    if now > d {
+                        lane.stats.deadline_missed += 1;
+                        p.reply.err(Error::Serve(format!(
+                            "deadline exceeded after {:?} in `{}` queue",
+                            now.saturating_duration_since(p.enqueued),
+                            lane.name
+                        )));
+                        continue;
+                    }
+                }
+                lane.queue.push(p);
+            }
+        }
+    }
+
+    /// Next lane with a dispatchable queue, fair-share round-robin.
+    fn next_ready_lane(&mut self) -> Option<usize> {
+        let now = Instant::now();
+        let n = self.lanes.len();
+        for off in 0..n {
+            let li = (self.rr + off) % n;
+            let lane = &self.lanes[li];
+            if lane.queue.is_empty() {
+                continue;
+            }
+            let oldest = lane.queue.iter().map(|p| p.enqueued).min().unwrap();
+            let window_due = oldest.checked_add(lane.tuning.batch_window);
+            // a queued deadline pulls the lane's due instant forward to
+            // that request's dispatch-due point (half its budget), so a
+            // deadline shorter than the batch window is served in time
+            // without collapsing SLO traffic to batch-of-1
+            let earliest_due = lane.queue.iter().filter_map(dispatch_due).min();
+            let due = match (window_due, earliest_due) {
+                (Some(w), Some(u)) => Some(w.min(u)),
+                (w, u) => w.or(u),
+            };
+            let ready = self.draining
+                || lane.queue.len() >= lane.tuning.max_batch
+                || matches!(due, Some(t) if now >= t);
+            if ready {
+                self.rr = (li + 1) % n;
+                return Some(li);
+            }
+        }
+        None
+    }
+
+    /// How long the scheduler may sleep before a window closes or a
+    /// deadline expires; `None` when every queue is empty.
+    fn next_wakeup(&self) -> Option<Duration> {
+        let now = Instant::now();
+        let mut earliest: Option<Instant> = None;
+        for lane in &self.lanes {
+            if lane.queue.is_empty() {
+                continue;
+            }
+            let oldest = lane.queue.iter().map(|p| p.enqueued).min().unwrap();
+            let window_due = oldest.checked_add(lane.tuning.batch_window);
+            // wake for dispatch-due instants (so deadline'd requests ride
+            // out in time) and for raw deadlines (so a blocked queue still
+            // answers expiries promptly)
+            for t in window_due
+                .into_iter()
+                .chain(lane.queue.iter().filter_map(dispatch_due))
+                .chain(lane.queue.iter().filter_map(|p| p.deadline))
+            {
+                let sooner = match earliest {
+                    Some(e) => t < e,
+                    None => true,
+                };
+                if sooner {
+                    earliest = Some(t);
+                }
+            }
+        }
+        earliest.map(|t| t.saturating_duration_since(now))
+    }
+
+    /// Dispatch one batch group from a lane: up to `max_batch` front-of-
+    /// queue requests sharing the head's sample config (`generate` takes a
+    /// single [`SampleConfig`] per batch), chunked to the model's largest
+    /// exported bucket.
+    fn dispatch(&mut self, li: usize) {
+        let (group, chunk_cap) = {
+            let lane = &mut self.lanes[li];
+            let cap = lane.tuning.max_batch;
+            // the head always rides — guaranteed progress even for sample
+            // configs that don't equal themselves (NaN temperature); the
+            // rest of the group must share its config
+            let head = lane.queue.remove(0);
+            let head_sample = head.sample;
+            let mut group = vec![head];
+            let mut i = 0;
+            while i < lane.queue.len() && group.len() < cap {
+                if lane.queue[i].sample == head_sample {
+                    group.push(lane.queue.remove(i));
+                } else {
+                    i += 1;
+                }
+            }
+            (group, lane.model.max_batch().unwrap_or(usize::MAX).max(1))
+        };
+        let t_drain = Instant::now();
+        let mut rest = group;
+        while !rest.is_empty() {
+            let tail = if rest.len() > chunk_cap {
+                rest.split_off(chunk_cap)
+            } else {
+                Vec::new()
+            };
+            let batch = std::mem::replace(&mut rest, tail);
+            self.run_batch(li, batch, t_drain);
+        }
+    }
+
+    /// Generate one chunk and answer its riders.  A generation failure is
+    /// answered per-rider and recorded; the scheduler keeps serving.
+    fn run_batch(&mut self, li: usize, batch: Vec<Pending>, t_drain: Instant) {
+        // deadlines and cancellations are re-checked per chunk: a rider of
+        // a late chunk may have expired while earlier chunks of the same
+        // dispatch group were generating, and must get the deadline error,
+        // not a late Ok
+        let now = Instant::now();
+        let mut live = Vec::with_capacity(batch.len());
+        {
+            let lane = &mut self.lanes[li];
+            for p in batch {
+                if p.cancel.load(Ordering::Relaxed) {
+                    lane.stats.cancelled += 1;
+                    continue;
+                }
+                if matches!(p.deadline, Some(d) if now > d) {
+                    lane.stats.deadline_missed += 1;
+                    p.reply.err(Error::Serve(format!(
+                        "deadline exceeded before generation on model `{}` (queued {:?})",
+                        lane.name,
+                        now.saturating_duration_since(p.enqueued)
+                    )));
+                    continue;
+                }
+                live.push(p);
+            }
+        }
+        if live.is_empty() {
+            return;
+        }
+        let batch = live;
+        let lane = &mut self.lanes[li];
+        let seq = lane.model.config().seq;
+        let sample = batch[0].sample;
+        let prompts: Vec<Vec<i32>> = batch.iter().map(|r| r.prompt.clone()).collect();
+        let target = batch
+            .iter()
+            .map(|r| (r.prompt.len() + r.max_new).min(seq))
+            .max()
+            .unwrap();
+        let bs = batch.len();
+        let t0 = Instant::now();
+        match generate(lane.model, &prompts, target, &sample) {
+            Ok(outs) => {
+                let gen_micros = t0.elapsed().as_micros();
+                lane.stats.batches += 1;
+                lane.stats.total_gen_micros += gen_micros;
+                lane.stats.max_batch_seen = lane.stats.max_batch_seen.max(bs);
+                for (req, tokens) in batch.into_iter().zip(outs) {
+                    let want = (req.prompt.len() + req.max_new).min(seq);
+                    let queue_micros =
+                        t_drain.saturating_duration_since(req.enqueued).as_micros();
+                    let toks = tokens[..want].to_vec();
+                    if self.cache.enabled() && req.sample.temperature == 0.0 {
+                        lane.stats.cache_misses += 1;
+                        self.cache.insert((li, req.prompt.clone(), req.max_new), toks.clone());
+                    }
+                    lane.stats.served += 1;
+                    lane.stats.total_queue_micros += queue_micros;
+                    req.reply.ok(EngineResponse {
+                        model: lane.name.clone(),
+                        prompt_len: req.prompt.len(),
+                        tokens: toks,
+                        queue_micros,
+                        gen_micros,
+                        batch_size: bs,
+                        cached: false,
+                    });
+                }
+            }
+            Err(e) => {
+                let msg = format!("generation failed on model `{}`: {e}", lane.name);
+                if lane.stats.first_error.is_none() {
+                    lane.stats.first_error = Some(msg.clone());
+                }
+                for req in batch {
+                    lane.stats.failed += 1;
+                    req.reply.err(Error::Serve(msg.clone()));
+                }
+            }
+        }
+    }
+
+    fn finish(self) -> EngineStats {
+        let mut stats = EngineStats::default();
+        for lane in self.lanes {
+            stats.models.insert(lane.name, lane.stats);
+        }
+        stats
+    }
+}

@@ -1,0 +1,181 @@
+//! Per-model and engine-wide serving statistics.
+//!
+//! Every request handed to the engine ends up in exactly one of the counting
+//! buckets below: `served` (answered with tokens, including cache hits),
+//! `deadline_missed` / `rejected` / `failed` (answered with an error), or
+//! `cancelled` (caller dropped the ticket before scheduling — no answer
+//! owed).  `Engine::shutdown` returns the final [`EngineStats`] snapshot.
+
+use std::collections::BTreeMap;
+
+/// Counters for one registered model (one scheduler lane).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ModelStats {
+    /// requests answered with tokens (cache hits included)
+    pub served: usize,
+    /// generation calls issued (cache hits ride no batch)
+    pub batches: usize,
+    /// priming batches run by engine warm-up (not counted in `batches`)
+    pub warmup_batches: usize,
+    /// tickets dropped/cancelled before their request was scheduled
+    pub cancelled: usize,
+    /// requests whose deadline expired in the queue (answered with
+    /// `Error::Serve`)
+    pub deadline_missed: usize,
+    /// malformed requests (empty prompt, prompt longer than the context)
+    /// answered with `Error::Serve`
+    pub rejected: usize,
+    /// requests answered with `Error::Serve` because their batch's
+    /// generation call failed
+    pub failed: usize,
+    /// greedy requests answered straight from the response cache
+    pub cache_hits: usize,
+    /// cacheable (greedy) requests that had to be generated
+    pub cache_misses: usize,
+    /// summed generation wall time across batches
+    pub total_gen_micros: u128,
+    /// summed submit-to-dispatch time across served requests
+    pub total_queue_micros: u128,
+    /// largest generation batch dispatched
+    pub max_batch_seen: usize,
+    /// first generation failure observed on this lane (riders were
+    /// answered with a generic error; the root cause is preserved here —
+    /// the deprecated `serve_loop` shim re-surfaces it as its return)
+    pub first_error: Option<String>,
+}
+
+impl ModelStats {
+    /// Mean riders per generation batch (cache hits excluded).
+    pub fn mean_batch(&self) -> f32 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            // saturating: all fields are pub, so a hand-assembled snapshot
+            // may hold cache_hits > served
+            self.served.saturating_sub(self.cache_hits) as f32 / self.batches as f32
+        }
+    }
+
+    /// Mean time a served request waited before its batch dispatched.
+    pub fn mean_queue_micros(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.total_queue_micros as f64 / self.served as f64
+        }
+    }
+
+    /// Cache hits over all cacheable (greedy) requests seen; 0 when the
+    /// cache is disabled or no greedy traffic arrived.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// Project onto the legacy [`crate::serve::ServeStats`] shape (what the
+    /// deprecated `serve::serve_loop` shim returns).
+    pub fn to_serve_stats(&self) -> crate::serve::ServeStats {
+        crate::serve::ServeStats {
+            served: self.served,
+            batches: self.batches,
+            total_gen_micros: self.total_gen_micros,
+            total_queue_micros: self.total_queue_micros,
+            max_batch_seen: self.max_batch_seen,
+        }
+    }
+}
+
+/// Final per-model statistics returned by `Engine::shutdown`.
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    /// one entry per registered model, keyed by its registered name
+    pub models: BTreeMap<String, ModelStats>,
+}
+
+impl EngineStats {
+    /// Stats for one registered model.
+    pub fn model(&self, name: &str) -> Option<&ModelStats> {
+        self.models.get(name)
+    }
+
+    /// Requests answered with tokens across every model.
+    pub fn total_served(&self) -> usize {
+        self.models.values().map(|m| m.served).sum()
+    }
+
+    /// Generation batches dispatched across every model.
+    pub fn total_batches(&self) -> usize {
+        self.models.values().map(|m| m.batches).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_batch_excludes_cache_hits() {
+        let s = ModelStats {
+            served: 10,
+            cache_hits: 4,
+            batches: 3,
+            ..Default::default()
+        };
+        assert_eq!(s.mean_batch(), 2.0);
+        assert_eq!(ModelStats::default().mean_batch(), 0.0);
+    }
+
+    #[test]
+    fn hit_rate_and_queue_means() {
+        let s = ModelStats {
+            served: 4,
+            total_queue_micros: 400,
+            cache_hits: 1,
+            cache_misses: 3,
+            ..Default::default()
+        };
+        assert_eq!(s.mean_queue_micros(), 100.0);
+        assert_eq!(s.cache_hit_rate(), 0.25);
+        assert_eq!(ModelStats::default().cache_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn engine_totals_sum_models() {
+        let mut e = EngineStats::default();
+        e.models.insert(
+            "a".into(),
+            ModelStats { served: 3, batches: 2, ..Default::default() },
+        );
+        e.models.insert(
+            "b".into(),
+            ModelStats { served: 5, batches: 1, ..Default::default() },
+        );
+        assert_eq!(e.total_served(), 8);
+        assert_eq!(e.total_batches(), 3);
+        assert_eq!(e.model("a").unwrap().served, 3);
+        assert!(e.model("zap").is_none());
+    }
+
+    #[test]
+    fn legacy_projection_keeps_counters() {
+        let s = ModelStats {
+            served: 7,
+            batches: 4,
+            total_gen_micros: 123,
+            total_queue_micros: 456,
+            max_batch_seen: 3,
+            cancelled: 1,
+            ..Default::default()
+        };
+        let legacy = s.to_serve_stats();
+        assert_eq!(legacy.served, 7);
+        assert_eq!(legacy.batches, 4);
+        assert_eq!(legacy.total_gen_micros, 123);
+        assert_eq!(legacy.total_queue_micros, 456);
+        assert_eq!(legacy.max_batch_seen, 3);
+    }
+}

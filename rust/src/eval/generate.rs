@@ -11,7 +11,10 @@ use crate::tensor::Tensor;
 use super::{argmax, LanguageModel};
 
 /// Sampling configuration for one generation run.
-#[derive(Debug, Clone, Copy)]
+///
+/// `PartialEq` matters to the serving engine: only requests with identical
+/// sample configs may ride one batch (`generate` takes a single config).
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SampleConfig {
     /// softmax temperature for the stochastic stage (0 = greedy everywhere)
     pub temperature: f32,

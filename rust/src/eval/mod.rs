@@ -24,6 +24,14 @@ pub trait LanguageModel {
     fn max_batch(&self) -> Option<usize> {
         None
     }
+    /// Batch sizes the serving engine should prime at start-up (one warm-up
+    /// generation per bucket, so first riders don't pay compile/dispatch
+    /// latency).  Runners backed by AOT graphs report every exported batch
+    /// bucket; the default primes only `max_batch`, and an empty vec
+    /// disables warm-up for this model.
+    fn warm_buckets(&self) -> Vec<usize> {
+        self.max_batch().into_iter().collect()
+    }
 }
 
 /// Log-softmax over the last dim of a logits row.

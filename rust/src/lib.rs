@@ -13,7 +13,9 @@
 //!   SmoothQuant / AWQ-lite / OmniQuant-lite, plus `+`-compositions like
 //!   `smoothquant+gptq` — see `quant::quantizer`), calibration-data
 //!   generation, the norm-tweak engine, the sensitivity-driven
-//!   mixed-precision policy (`policy`), and the evaluation harness.
+//!   mixed-precision policy (`policy`), the evaluation harness, and the
+//!   multi-model serving engine (`engine`: scheduler, sessions,
+//!   cancellation, warm-up — `serve` remains as a deprecated shim).
 //!
 //! Python never runs on the request path: `make artifacts` lowers all compute
 //! graphs once; the Rust binary is self-contained afterwards.
@@ -24,6 +26,7 @@ pub mod calib;
 pub mod config;
 pub mod util;
 pub mod coordinator;
+pub mod engine;
 pub mod error;
 pub mod eval;
 pub mod model;

@@ -5,7 +5,8 @@
 //! normtweak plan     --target-bits 2.25 [--candidates 2,3,4,8] [--out path]
 //! normtweak eval     [--checkpoint path | --float] [--ppl a,b] [--tasks x,y]
 //! normtweak generate [--n 4] [--len 48]
-//! normtweak serve    [--checkpoint path] [--requests 64] [--clients 4]
+//! normtweak serve    [--checkpoint path | --models w4=a.ntz,w2=b.ntz]
+//!                    [--requests 64] [--clients 4] [--deadline-ms 500] [--cache 256]
 //! ```
 
 use normtweak::calib::vocab::BOS;
@@ -33,7 +34,8 @@ fn allowed_flags(cmd: &str) -> Option<&'static [&'static str]> {
                          "candidates", "loss", "profile", "out"]),
         "eval" => Some(&["checkpoint", "float", "ppl", "tasks"]),
         "generate" => Some(&["n", "len"]),
-        "serve" => Some(&["checkpoint", "requests", "clients"]),
+        "serve" => Some(&["checkpoint", "requests", "clients", "models",
+                          "deadline-ms", "cache"]),
         "help" | "--help" => Some(&[]),
         _ => None,
     }
@@ -128,8 +130,18 @@ USAGE:
   normtweak eval     [--checkpoint path | --float] [--model M]
                      [--ppl wiki-syn,c4-syn] [--tasks hellaswag-syn,...]
   normtweak generate [--model M] [--n 4] [--len 48]
-  normtweak serve    [--checkpoint path] [--requests 64] [--clients 4]
+  normtweak serve    [--checkpoint path | --models w4=a.ntz,w2=b.ntz]
+                     [--requests 64] [--clients 4] [--deadline-ms 500]
+                     [--cache 256]
   normtweak help
+
+MULTI-MODEL SERVING:
+  `serve` hosts one or more quantized checkpoints behind the engine's
+  deadline-aware batching scheduler. `--models` registers several variants
+  of the architecture at once (e.g. a w2 fleet with a w4 fallback from
+  `quantize --auto-bits`); `--deadline-ms` attaches a per-request answer-by
+  budget (missed deadlines return an error, not silence) and `--cache N`
+  enables an N-entry LRU response cache for repeated greedy prompts.
 
 AUTOMATIC MIXED PRECISION:
   `plan` measures per-layer quantization sensitivity over the calibration
@@ -245,11 +257,18 @@ fn run() -> normtweak::Result<()> {
         cfg.eval.tasks = t.split(',').map(String::from).collect();
     }
 
-    let runtime = Runtime::new(&cfg.run.artifacts)?;
-    let weights = ModelWeights::load_from_dir(&cfg.run.model, &cfg.run.artifacts)?;
+    // `serve` builds its per-model runtimes inside the engine thread (and
+    // needs no float weights); everything else shares one runtime + the
+    // float checkpoint, loaded lazily so a bad command doesn't pay for it
+    let load_ctx = || -> normtweak::Result<(Runtime, ModelWeights)> {
+        let runtime = Runtime::new(&cfg.run.artifacts)?;
+        let weights = ModelWeights::load_from_dir(&cfg.run.model, &cfg.run.artifacts)?;
+        Ok((runtime, weights))
+    };
 
     match args.cmd.as_str() {
         "quantize" => {
+            let (runtime, weights) = load_ctx()?;
             let out = args.get_or("out", "artifacts/quantized.ntz");
             let calib = build_calib(&runtime, &weights, &cfg.calib.source,
                                     cfg.calib.n_samples, cfg.calib.seed)?;
@@ -316,6 +335,7 @@ fn run() -> normtweak::Result<()> {
             );
         }
         "plan" => {
+            let (runtime, weights) = load_ctx()?;
             let target: f32 = args
                 .get("target-bits")
                 .ok_or_else(|| {
@@ -389,6 +409,7 @@ fn run() -> normtweak::Result<()> {
             )?;
         }
         "eval" => {
+            let (runtime, weights) = load_ctx()?;
             let float = args.has("float");
             let checkpoint = args.get_or("checkpoint", "artifacts/quantized.ntz");
             let mut table = Table::new(
@@ -426,6 +447,7 @@ fn run() -> normtweak::Result<()> {
             print!("{}", table.ascii());
         }
         "generate" => {
+            let (runtime, weights) = load_ctx()?;
             let n = args.get_usize("n", 4);
             let len = args.get_usize("len", 48);
             let fm = FloatModel::new(&runtime, &weights)?;
@@ -436,13 +458,50 @@ fn run() -> normtweak::Result<()> {
             }
         }
         "serve" => {
-            let checkpoint = args.get_or("checkpoint", "artifacts/quantized.ntz");
+            if args.has("models") && args.has("checkpoint") {
+                return Err(normtweak::Error::Config(
+                    "--models and --checkpoint are mutually exclusive; put the \
+                     single checkpoint in --models name=path instead"
+                        .into(),
+                ));
+            }
             let n_requests = args.get_usize("requests", 64);
-            let n_clients = args.get_usize("clients", 4);
-            let mcfg = ModelConfig::builtin(&cfg.run.model)?;
-            let qm = QuantizedModel::load(mcfg, &checkpoint)?;
-            let qr = QuantModel::new(&runtime, &qm)?;
-            serve_demo(&qr, n_requests, n_clients)?;
+            let n_clients = args.get_usize("clients", 4).max(1);
+            let deadline_ms = match args.get("deadline-ms") {
+                Some(v) => Some(v.parse::<u64>().map_err(|_| {
+                    normtweak::Error::Config("bad --deadline-ms".into())
+                })?),
+                None => None,
+            };
+            let cache_cap = match args.get("cache") {
+                Some(v) => v.parse::<usize>().map_err(|_| {
+                    normtweak::Error::Config("bad --cache (expected an entry count)".into())
+                })?,
+                None => 0,
+            };
+            let entries: Vec<(String, String)> = match args.get("models") {
+                Some(spec) => parse_models(spec)?,
+                None => vec![(
+                    cfg.run.model.clone(),
+                    args.get_or("checkpoint", "artifacts/quantized.ntz"),
+                )],
+            };
+            let mut builder = normtweak::engine::Engine::builder().cache(cache_cap);
+            for (key, ckpt) in entries {
+                let artifacts = cfg.run.artifacts.clone();
+                let arch = cfg.run.model.clone();
+                // honor [quant] act_bits so served outputs match what
+                // `eval` scored (the W+A modes)
+                let act_bits = cfg.act_bits();
+                builder = builder.model(key, move || {
+                    let m: Box<dyn normtweak::eval::LanguageModel> = Box::new(
+                        normtweak::engine::ServableModel::load(&artifacts, &arch, &ckpt)?
+                            .with_act_bits(act_bits),
+                    );
+                    Ok(m)
+                });
+            }
+            serve_demo(builder.build()?, n_requests, n_clients, deadline_ms)?;
         }
         other => {
             eprintln!("unknown command `{other}`; see `normtweak help`\n{HELP}");
@@ -452,35 +511,55 @@ fn run() -> normtweak::Result<()> {
     Ok(())
 }
 
-/// Drive the serving loop with synthetic concurrent traffic and report
-/// latency percentiles + throughput.
+/// Drive the serving engine with synthetic concurrent traffic (round-robin
+/// across every registered model) and report latency percentiles,
+/// throughput in requests and *generated* tokens, and per-model stats.
 fn serve_demo(
-    model: &dyn normtweak::eval::LanguageModel,
+    mut engine: normtweak::engine::Engine,
     n_requests: usize,
     n_clients: usize,
+    deadline_ms: Option<u64>,
 ) -> normtweak::Result<()> {
-    use normtweak::serve::{channel, serve_loop, ServeConfig};
+    use normtweak::engine::GenRequest;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
-    let (handle, rx) = channel();
+    let client = engine.start()?; // models built + warm-up done after this
+    let names: Vec<String> = client.models().to_vec();
     let t0 = std::time::Instant::now();
     let latencies = std::sync::Mutex::new(Vec::new());
-    let stats = std::thread::scope(|s| {
+    let new_tokens = AtomicUsize::new(0);
+    let errors = AtomicUsize::new(0);
+    std::thread::scope(|s| {
         for c in 0..n_clients {
-            let handle = handle.clone();
-            let latencies = &latencies;
+            let client = client.clone();
+            let (names, latencies) = (&names, &latencies);
+            let (new_tokens, errors) = (&new_tokens, &errors);
             s.spawn(move || {
                 for i in 0..n_requests / n_clients {
+                    let model = &names[(c + i) % names.len()];
                     let prompt = vec![BOS, (8 + (c * 31 + i * 13) % 480) as i32];
+                    let mut req = GenRequest::greedy(prompt, 16);
+                    if let Some(ms) = deadline_ms {
+                        req = req.with_deadline(std::time::Duration::from_millis(ms));
+                    }
                     let t = std::time::Instant::now();
-                    if handle.submit(prompt, 16).is_ok() {
-                        latencies.lock().unwrap().push(t.elapsed().as_micros());
+                    match client.generate(model, req) {
+                        Ok(resp) => {
+                            latencies.lock().unwrap().push(t.elapsed().as_micros());
+                            // cache replays answered tokens but generated none
+                            if !resp.cached {
+                                new_tokens.fetch_add(resp.new_tokens().len(), Ordering::Relaxed);
+                            }
+                        }
+                        Err(_) => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
                     }
                 }
             });
         }
-        drop(handle); // server exits when the last client clone drops
-        serve_loop(model, ServeConfig::default(), rx)
-    })?;
+    });
+    let stats = engine.shutdown()?;
 
     let wall = t0.elapsed().as_secs_f64();
     let mut lat = latencies.into_inner().unwrap();
@@ -491,17 +570,53 @@ fn serve_demo(
     let p50 = lat[lat.len() / 2] as f64 / 1000.0;
     let p99 = lat[(lat.len() * 99 / 100).min(lat.len() - 1)] as f64 / 1000.0;
     println!(
-        "served {} requests in {:.1}s ({:.1} req/s): p50 {:.0} ms, p99 {:.0} ms, \
-         mean queue {:.1} ms, mean batch {:.1}",
-        stats.served,
+        "served {} requests in {:.1}s ({:.1} req/s, {:.1} tok/s generated): \
+         p50 {:.0} ms, p99 {:.0} ms, {} errors",
+        stats.total_served(),
         wall,
-        stats.served as f64 / wall,
+        stats.total_served() as f64 / wall,
+        new_tokens.load(Ordering::Relaxed) as f64 / wall,
         p50,
         p99,
-        stats.mean_queue_micros() / 1000.0,
-        stats.mean_batch()
+        errors.load(Ordering::Relaxed),
     );
+    for (name, m) in &stats.models {
+        println!(
+            "  {name}: served {}, batches {} (mean {:.1}, max {}), mean queue {:.1} ms, \
+             cache hits {}/{}, deadline misses {}, warmup batches {}",
+            m.served,
+            m.batches,
+            m.mean_batch(),
+            m.max_batch_seen,
+            m.mean_queue_micros() / 1000.0,
+            m.cache_hits,
+            m.cache_hits + m.cache_misses,
+            m.deadline_missed,
+            m.warmup_batches,
+        );
+    }
     Ok(())
+}
+
+/// Parse `--models w4=a.ntz,w2=b.ntz` into (engine key, checkpoint) pairs.
+fn parse_models(spec: &str) -> normtweak::Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        let (name, ckpt) = part.split_once('=').ok_or_else(|| {
+            normtweak::Error::Config(format!(
+                "bad --models entry `{part}`: expected name=checkpoint.ntz"
+            ))
+        })?;
+        let (name, ckpt) = (name.trim(), ckpt.trim());
+        if name.is_empty() || ckpt.is_empty() {
+            return Err(normtweak::Error::Config(format!(
+                "bad --models entry `{part}`: empty name or checkpoint path"
+            )));
+        }
+        out.push((name.to_string(), ckpt.to_string()));
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -562,6 +677,38 @@ mod tests {
         assert_eq!(parse_candidates("2,3, 4,8").unwrap(), vec![2, 3, 4, 8]);
         assert!(parse_candidates("2,zap").is_err());
         assert!(parse_candidates("").is_err());
+    }
+
+    #[test]
+    fn serve_engine_flags_parse() {
+        let a = parse(&["serve", "--models", "w4=a.ntz,w2=b.ntz",
+                        "--deadline-ms", "250", "--cache", "64"]).unwrap();
+        assert_eq!(a.get("models"), Some("w4=a.ntz,w2=b.ntz"));
+        assert_eq!(a.get("deadline-ms"), Some("250"));
+        assert_eq!(a.get_usize("cache", 0), 64);
+        // serve-only flags stay rejected elsewhere
+        assert!(parse(&["eval", "--models", "a=x.ntz"]).is_err());
+        assert!(parse(&["quantize", "--deadline-ms", "5"]).is_err());
+    }
+
+    #[test]
+    fn models_spec_parses_and_rejects() {
+        assert_eq!(
+            parse_models("w4=a.ntz, w2=b.ntz").unwrap(),
+            vec![("w4".to_string(), "a.ntz".to_string()),
+                 ("w2".to_string(), "b.ntz".to_string())]
+        );
+        assert!(parse_models("w4").is_err());
+        assert!(parse_models("=a.ntz").is_err());
+        assert!(parse_models("w4=").is_err());
+        assert!(parse_models("").is_err());
+    }
+
+    #[test]
+    fn help_documents_engine_serving() {
+        assert!(HELP.contains("--models"));
+        assert!(HELP.contains("--deadline-ms"));
+        assert!(HELP.contains("--cache"));
     }
 
     #[test]

@@ -1,21 +1,41 @@
-//! Batched inference serving over a quantized model.
+//! Legacy single-model serving surface — now a thin shim over the
+//! [`crate::engine`] scheduler.
 //!
-//! A minimal but real dynamic batcher: client threads submit requests on an
-//! mpsc channel; the serving loop drains up to `max_batch` of them (waiting
-//! at most `batch_window` for stragglers), runs one batched generation, and
-//! answers each request on its own reply channel.  This is the deployment
-//! story of the paper — the quantized model serving traffic — and the
-//! harness behind `bench_serve` / `examples/serve_quantized.rs`.
+//! # Migration note
 //!
-//! (std-thread based: the async ecosystem is unavailable offline, and the
-//! PJRT client is single-process anyway — the batcher, not the executor, is
-//! the interesting part.)
+//! `serve_loop` is **deprecated**: it serves exactly one model on the
+//! calling thread with no deadlines, no cancellation, and no cache.  New
+//! code should use [`crate::engine::Engine`]:
+//!
+//! ```text
+//! // before                                  // after
+//! let (handle, rx) = serve::channel();       let mut engine = Engine::builder()
+//! ...spawn clients using handle...               .model("m", factory).build()?;
+//! serve::serve_loop(&model, cfg, rx)?;       let client = engine.start()?;
+//!                                            ...clients submit via client...
+//!                                            let stats = engine.shutdown()?;
+//! ```
+//!
+//! The shim keeps the old wire types (`Request`/`Response`/`ServeStats`)
+//! and exit condition (the loop returns when every [`ServeHandle`] clone
+//! has dropped), but batching, chunking, and queue-time accounting are the
+//! engine scheduler's: queue time is measured against the dispatch-group
+//! start with saturating math, so riders split across bucket-sized chunks
+//! are not charged earlier chunks' generation time.  Two behavioral
+//! differences: a failed generation no longer aborts the loop — the
+//! affected riders' reply channels drop (their `submit` returns an error)
+//! and serving continues — and the first failure is re-surfaced when the
+//! loop returns as an [`Error::Serve`] wrapping the original message,
+//! where the old loop propagated the underlying variant (e.g.
+//! `Error::Artifact`) immediately.  Callers matching on specific variants
+//! should migrate to the engine API.
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
+use crate::engine::scheduler::{Lane, Msg, Pending, ReplyTo, Scheduler};
+use crate::engine::{ModelTuning, SampleConfig};
 use crate::error::{Error, Result};
-use crate::eval::generate::{generate, SampleConfig};
 use crate::eval::LanguageModel;
 
 /// One generation request.
@@ -29,12 +49,22 @@ pub struct Request {
 /// The server's answer.
 #[derive(Debug, Clone)]
 pub struct Response {
+    /// prompt + generated tokens
     pub tokens: Vec<i32>,
-    /// time from submit to batch start
+    /// length of the prompt prefix inside `tokens`
+    pub prompt_len: usize,
+    /// time from submit to dispatch of this request's batch group
     pub queue_micros: u128,
     /// generation wall time of the batch this request rode in
     pub gen_micros: u128,
     pub batch_size: usize,
+}
+
+impl Response {
+    /// Only the newly generated tokens (everything after the prompt).
+    pub fn new_tokens(&self) -> &[i32] {
+        &self.tokens[self.prompt_len.min(self.tokens.len())..]
+    }
 }
 
 /// Server tuning knobs.
@@ -47,6 +77,16 @@ pub struct ServeConfig {
 impl Default for ServeConfig {
     fn default() -> Self {
         ServeConfig { max_batch: 8, batch_window: Duration::from_millis(2) }
+    }
+}
+
+impl ServeConfig {
+    /// Reject degenerate tunings (`max_batch == 0`, zero window) with a
+    /// clear `Error::Config` instead of silently serving one-request
+    /// batches.
+    pub fn validate(&self) -> Result<()> {
+        ModelTuning { max_batch: self.max_batch, batch_window: self.batch_window }
+            .validate("serve_loop")
     }
 }
 
@@ -86,7 +126,7 @@ pub struct ServeStats {
     pub served: usize,
     pub batches: usize,
     pub total_gen_micros: u128,
-    /// summed submit-to-batch-start time across served requests — the
+    /// summed submit-to-dispatch time across served requests — the
     /// batcher's own latency contribution, invisible in generation time
     pub total_queue_micros: u128,
     pub max_batch_seen: usize,
@@ -117,7 +157,62 @@ pub fn channel() -> (ServeHandle, mpsc::Receiver<Request>) {
     (ServeHandle { tx }, rx)
 }
 
+/// Run a single-model serving loop on the current thread until every
+/// [`ServeHandle`] is dropped.
+///
+/// Deprecated shim over the [`crate::engine`] scheduler (see the module
+/// docs for the migration sketch).  A drain larger than the model's
+/// [`LanguageModel::max_batch`] (the largest exported AOT batch bucket) is
+/// still split into bucket-sized chunks, and all riders of one dispatch
+/// group share the same submit-to-dispatch queue time.
+#[deprecated(
+    since = "0.5.0",
+    note = "use engine::Engine: multi-model, deadlines, cancellation, warm-up, cache"
+)]
+pub fn serve_loop(
+    model: &dyn LanguageModel,
+    cfg: ServeConfig,
+    rx: mpsc::Receiver<Request>,
+) -> Result<ServeStats> {
+    cfg.validate()?;
+    let (tx, engine_rx) = mpsc::channel();
+    // bridge thread: legacy Requests are Send even though the model is
+    // not, so only the envelopes cross threads; when the last ServeHandle
+    // drops, the bridge drops `tx` and the scheduler drains and exits
+    let bridge = std::thread::spawn(move || {
+        while let Ok(r) = rx.recv() {
+            let pending = Pending {
+                lane: 0,
+                prompt: r.prompt,
+                max_new: r.max_new,
+                sample: SampleConfig { temperature: 0.0, stochastic_prefix: 0, seed: 0 },
+                enqueued: r.enqueued,
+                deadline: None,
+                reply: ReplyTo::Legacy(r.reply),
+                cancel: std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false)),
+                seq: 0,
+            };
+            if tx.send(Msg::Submit(pending)).is_err() {
+                break;
+            }
+        }
+    });
+    let tuning = ModelTuning { max_batch: cfg.max_batch, batch_window: cfg.batch_window };
+    let lane = Lane::new("default".to_string(), model, tuning);
+    let mut stats = Scheduler::new(vec![lane], engine_rx, 0).run();
+    let _ = bridge.join();
+    let m = stats.models.remove("default").unwrap_or_default();
+    // the engine answers failed riders and keeps serving, but the old
+    // serve_loop contract surfaced the underlying failure to its caller —
+    // preserve that diagnosability after the drain
+    if let Some(first) = m.first_error {
+        return Err(Error::Serve(first));
+    }
+    Ok(m.to_serve_stats())
+}
+
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::model::ModelConfig;
@@ -173,6 +268,8 @@ mod tests {
         for rx in replies {
             let resp = rx.recv().expect("every rider answered");
             assert_eq!(resp.tokens.len(), 4);
+            assert_eq!(resp.prompt_len, 2);
+            assert_eq!(resp.new_tokens().len(), 2);
             assert!(resp.batch_size <= 2);
             queue_sum += resp.queue_micros;
         }
@@ -181,6 +278,55 @@ mod tests {
         assert_eq!(
             stats.mean_queue_micros(),
             queue_sum as f64 / stats.served as f64
+        );
+    }
+
+    /// A model slow enough that per-chunk accounting would be visible:
+    /// with bucket cap 1 every rider is its own chunk, and the old
+    /// accounting charged rider N the N-1 earlier chunks' generation time
+    /// as queue time.  All riders must share the drain-start instant.
+    #[test]
+    fn chunk_riders_share_drain_start_queue_time() {
+        struct Sleepy(ModelConfig);
+        impl LanguageModel for Sleepy {
+            fn config(&self) -> &ModelConfig {
+                &self.0
+            }
+            fn logits(&self, tokens: &Tensor) -> Result<Tensor> {
+                std::thread::sleep(Duration::from_millis(40));
+                let (b, s) = (tokens.shape[0], tokens.shape[1]);
+                Ok(Tensor::f32(&[b, s, self.0.vocab], vec![0.0; b * s * self.0.vocab]))
+            }
+            fn max_batch(&self) -> Option<usize> {
+                Some(1)
+            }
+        }
+        let model = Sleepy(ModelConfig::builtin("nt-tiny").unwrap());
+        let (handle, rx) = channel();
+        let replies: Vec<_> = (0..3)
+            .map(|_| handle.submit_async(vec![1, 2], 1).unwrap())
+            .collect();
+        drop(handle);
+        let stats = serve_loop(
+            &model,
+            ServeConfig { max_batch: 8, batch_window: Duration::from_millis(50) },
+            rx,
+        )
+        .unwrap();
+        assert_eq!(stats.served, 3);
+        assert_eq!(stats.batches, 3, "bucket cap 1 chunks the drain into singles");
+        let q: Vec<u128> = replies
+            .iter()
+            .map(|r| r.recv().expect("answered").queue_micros)
+            .collect();
+        // new accounting: spread == submit skew (microseconds); the old
+        // per-chunk accounting would charge the last rider the ~80ms of
+        // the two earlier chunks
+        let spread = q.iter().max().unwrap() - q.iter().min().unwrap();
+        assert!(
+            spread < 40_000,
+            "queue spread {spread}us: chunk riders were charged earlier \
+             chunks' generation time"
         );
     }
 
@@ -217,80 +363,28 @@ mod tests {
             assert_eq!(rx.recv().expect("answered").batch_size, 3);
         }
     }
-}
 
-/// Run the serving loop on the current thread until every handle is dropped.
-///
-/// A drain larger than the model's [`LanguageModel::max_batch`] (the
-/// largest exported AOT batch bucket) is split into bucket-sized chunks and
-/// generated chunk by chunk — an over-eager `max_batch` in [`ServeConfig`]
-/// degrades to more batches instead of failing every rider with an
-/// artifact error.
-pub fn serve_loop(
-    model: &dyn LanguageModel,
-    cfg: ServeConfig,
-    rx: mpsc::Receiver<Request>,
-) -> Result<ServeStats> {
-    let mut stats = ServeStats::default();
-    let chunk_cap = model.max_batch().unwrap_or(usize::MAX).max(1);
-    loop {
-        // block for the first request of the batch
-        let Ok(first) = rx.recv() else {
-            return Ok(stats);
-        };
-        let mut pending = vec![first];
-        let deadline = Instant::now() + cfg.batch_window;
-        while pending.len() < cfg.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => pending.push(r),
-                Err(_) => break,
-            }
-        }
+    #[test]
+    fn degenerate_config_rejected() {
+        let model = Bucketed { cfg: ModelConfig::builtin("nt-tiny").unwrap(), cap: None };
+        let (_handle, rx) = channel();
+        let err = serve_loop(
+            &model,
+            ServeConfig { max_batch: 0, batch_window: Duration::from_millis(1) },
+            rx,
+        )
+        .unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        assert!(format!("{err}").contains("max_batch"), "{err}");
 
-        while !pending.is_empty() {
-            let rest = if pending.len() > chunk_cap {
-                pending.split_off(chunk_cap)
-            } else {
-                Vec::new()
-            };
-            let batch = std::mem::replace(&mut pending, rest);
-
-            let t0 = Instant::now();
-            let seq = model.config().seq;
-            let target = batch
-                .iter()
-                .map(|r| (r.prompt.len() + r.max_new).min(seq))
-                .max()
-                .unwrap();
-            let prompts: Vec<Vec<i32>> = batch.iter().map(|r| r.prompt.clone()).collect();
-            let outs = generate(
-                model,
-                &prompts,
-                target,
-                &SampleConfig { temperature: 0.0, stochastic_prefix: 0, seed: 0 },
-            )?;
-            let gen_micros = t0.elapsed().as_micros();
-            let bs = batch.len();
-            stats.batches += 1;
-            stats.total_gen_micros += gen_micros;
-            stats.max_batch_seen = stats.max_batch_seen.max(bs);
-            for (req, tokens) in batch.into_iter().zip(outs) {
-                let want = (req.prompt.len() + req.max_new).min(seq);
-                let queue_micros = (t0 - req.enqueued).as_micros();
-                let resp = Response {
-                    tokens: tokens[..want].to_vec(),
-                    queue_micros,
-                    gen_micros,
-                    batch_size: bs,
-                };
-                let _ = req.reply.send(resp);
-                stats.total_queue_micros += queue_micros;
-                stats.served += 1;
-            }
-        }
+        let (_handle, rx) = channel();
+        let err = serve_loop(
+            &model,
+            ServeConfig { max_batch: 8, batch_window: Duration::ZERO },
+            rx,
+        )
+        .unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        assert!(format!("{err}").contains("batch_window"), "{err}");
     }
 }

@@ -1,0 +1,417 @@
+//! Engine scheduler correctness — fully offline, mock models only.
+//!
+//! Determinism trick: [`normtweak::engine::Engine::client`] hands out
+//! submission handles *before* `start()`, and those submissions buffer in
+//! the engine channel.  Tests queue all traffic first, then start the
+//! scheduler: the ingest/dispatch order is then exactly reproducible (no
+//! timing races), so fairness, cancellation, and deadline ordering can be
+//! asserted precisely.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use normtweak::engine::{Engine, GenRequest, ModelTuning, SampleConfig};
+use normtweak::error::{Error, Result};
+use normtweak::eval::LanguageModel;
+use normtweak::model::ModelConfig;
+use normtweak::tensor::Tensor;
+
+/// One observed generation call: (model tag, batch size, second token of
+/// row 0 — enough to identify which request led the batch).
+type CallLog = Arc<Mutex<Vec<(&'static str, usize, i32)>>>;
+
+/// Deterministic mock: always prefers (last_token + 1) % vocab; records
+/// every logits call into a shared log.
+struct Mock {
+    cfg: ModelConfig,
+    tag: &'static str,
+    cap: Option<usize>,
+    warm: Vec<usize>,
+    log: CallLog,
+    calls: Arc<AtomicUsize>,
+}
+
+impl Mock {
+    fn new(tag: &'static str, log: CallLog) -> Self {
+        Mock {
+            cfg: ModelConfig::builtin("nt-tiny").unwrap(),
+            tag,
+            cap: None,
+            warm: Vec::new(),
+            log,
+            calls: Arc::new(AtomicUsize::new(0)),
+        }
+    }
+
+    /// Boxing closure for the engine builder.
+    fn factory(self) -> impl FnOnce() -> Result<Box<dyn LanguageModel>> + Send + 'static {
+        move || {
+            let lm: Box<dyn LanguageModel> = Box::new(self);
+            Ok(lm)
+        }
+    }
+}
+
+impl LanguageModel for Mock {
+    fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn logits(&self, tokens: &Tensor) -> Result<Tensor> {
+        let (b, s) = (tokens.shape[0], tokens.shape[1]);
+        let tv = tokens.as_i32()?;
+        let lead = if s >= 2 { tv[1] } else { tv[0] };
+        self.calls.fetch_add(1, Ordering::SeqCst);
+        self.log.lock().unwrap().push((self.tag, b, lead));
+        let v = self.cfg.vocab;
+        let mut out = vec![0.0f32; b * s * v];
+        for i in 0..b {
+            for t in 0..s {
+                let next = ((tv[i * s + t] + 1) as usize) % v;
+                out[(i * s + t) * v + next] = 10.0;
+            }
+        }
+        Ok(Tensor::f32(&[b, s, v], out))
+    }
+
+    fn max_batch(&self) -> Option<usize> {
+        self.cap
+    }
+
+    fn warm_buckets(&self) -> Vec<usize> {
+        self.warm.clone()
+    }
+}
+
+fn log() -> CallLog {
+    Arc::new(Mutex::new(Vec::new()))
+}
+
+#[test]
+fn two_models_served_fairly_under_contention() {
+    let log = log();
+    let ma = Mock::new("a", log.clone());
+    let mb = Mock::new("b", log.clone());
+    let tuning = ModelTuning { max_batch: 2, batch_window: Duration::from_millis(5) };
+    let mut engine = Engine::builder()
+        .model_with("a", tuning, ma.factory())
+        .model_with("b", tuning, mb.factory())
+        .warmup(false)
+        .build()
+        .unwrap();
+
+    // saturate both queues before the scheduler exists
+    let client = engine.client();
+    let mut tickets = Vec::new();
+    for i in 0..6 {
+        tickets.push(("a", client.submit("a", GenRequest::greedy(vec![1, 10 + i], 1)).unwrap()));
+        tickets.push(("b", client.submit("b", GenRequest::greedy(vec![1, 20 + i], 1)).unwrap()));
+    }
+    engine.start().unwrap();
+    for (key, t) in tickets {
+        let r = t.wait().unwrap();
+        assert_eq!(r.model, key);
+        assert_eq!(r.batch_size, 2, "contended lanes must batch fully");
+        assert_eq!(r.prompt_len, 2);
+        assert_eq!(r.new_tokens().len(), 1);
+        // deterministic mock: next token = last prompt token + 1
+        assert_eq!(r.tokens[2], r.tokens[1] + 1);
+    }
+    let stats = engine.shutdown().unwrap();
+    for lane in ["a", "b"] {
+        let m = stats.model(lane).unwrap();
+        assert_eq!(m.served, 6);
+        assert_eq!(m.batches, 3);
+        assert_eq!(m.max_batch_seen, 2);
+    }
+
+    // with both queues full before start, round-robin is exact: a,b,a,b,...
+    let order = log.lock().unwrap().clone();
+    assert_eq!(order.len(), 6);
+    for (i, (tag, bs, _)) in order.iter().enumerate() {
+        assert_eq!(*bs, 2);
+        assert_eq!(*tag, if i % 2 == 0 { "a" } else { "b" },
+                   "lane order not fair-share round-robin: {order:?}");
+    }
+}
+
+#[test]
+fn cancelled_ticket_never_consumes_a_batch_slot() {
+    let log = log();
+    let mock = Mock::new("m", log.clone());
+    let mut engine = Engine::builder()
+        .model_with(
+            "m",
+            ModelTuning { max_batch: 8, batch_window: Duration::from_millis(5) },
+            mock.factory(),
+        )
+        .warmup(false)
+        .build()
+        .unwrap();
+    let client = engine.client();
+    let t1 = client.submit("m", GenRequest::greedy(vec![1, 5], 1)).unwrap();
+    let t2 = client.submit("m", GenRequest::greedy(vec![1, 6], 1)).unwrap();
+    let t3 = client.submit("m", GenRequest::greedy(vec![1, 7], 1)).unwrap();
+    drop(t2); // dropping the ticket cancels the not-yet-scheduled request
+    engine.start().unwrap();
+    assert_eq!(t1.wait().unwrap().batch_size, 2, "cancelled rider must free its slot");
+    assert_eq!(t3.wait().unwrap().batch_size, 2);
+    let stats = engine.shutdown().unwrap();
+    let m = stats.model("m").unwrap();
+    assert_eq!(m.served, 2);
+    assert_eq!(m.cancelled, 1);
+    assert_eq!(m.max_batch_seen, 2);
+    assert_eq!(log.lock().unwrap().len(), 1, "exactly one batch, without the cancelled rider");
+}
+
+#[test]
+fn deadline_miss_answered_with_serve_error() {
+    let mock = Mock::new("m", log());
+    let mut engine = Engine::builder()
+        .model("m", mock.factory())
+        .warmup(false)
+        .build()
+        .unwrap();
+    let client = engine.client();
+    let doomed = client
+        .submit("m", GenRequest::greedy(vec![1, 5], 1).with_deadline(Duration::from_millis(1)))
+        .unwrap();
+    let fine = client.submit("m", GenRequest::greedy(vec![1, 6], 1)).unwrap();
+    std::thread::sleep(Duration::from_millis(15));
+    engine.start().unwrap();
+    let err = doomed.wait().unwrap_err();
+    assert!(matches!(err, Error::Serve(_)), "deadline miss must be Error::Serve: {err}");
+    assert!(format!("{err}").contains("deadline"), "{err}");
+    fine.wait().unwrap();
+    let stats = engine.shutdown().unwrap();
+    let m = stats.model("m").unwrap();
+    assert_eq!(m.deadline_missed, 1);
+    assert_eq!(m.served, 1);
+}
+
+#[test]
+fn deadline_requests_jump_the_queue() {
+    let log = log();
+    let mock = Mock::new("m", log.clone());
+    let mut engine = Engine::builder()
+        .model_with(
+            "m",
+            ModelTuning { max_batch: 1, batch_window: Duration::from_millis(1) },
+            mock.factory(),
+        )
+        .warmup(false)
+        .build()
+        .unwrap();
+    let client = engine.client();
+    // FIFO would serve 50 first; oldest-deadline-first serves 60 first
+    // (the 300ms deadline is tighter than the FIFO aging horizon)
+    let relaxed = client.submit("m", GenRequest::greedy(vec![1, 50], 1)).unwrap();
+    let urgent = client
+        .submit(
+            "m",
+            GenRequest::greedy(vec![1, 60], 1).with_deadline(Duration::from_millis(300)),
+        )
+        .unwrap();
+    engine.start().unwrap();
+    relaxed.wait().unwrap();
+    urgent.wait().unwrap();
+    engine.shutdown().unwrap();
+    let order = log.lock().unwrap().clone();
+    assert_eq!(order.len(), 2);
+    assert_eq!(order[0].2, 60, "deadline'd request must dispatch first: {order:?}");
+    assert_eq!(order[1].2, 50);
+}
+
+#[test]
+fn tight_deadline_dispatches_before_window_closes() {
+    let mock = Mock::new("m", log());
+    let mut engine = Engine::builder()
+        .model_with(
+            "m",
+            // window far longer than the deadline: waiting it out would
+            // expire a request the engine could trivially serve in time
+            // (margins are huge so CI scheduler stalls can't flake this)
+            ModelTuning { max_batch: 8, batch_window: Duration::from_secs(30) },
+            mock.factory(),
+        )
+        .warmup(false)
+        .build()
+        .unwrap();
+    let client = engine.start().unwrap();
+    let t0 = std::time::Instant::now();
+    let r = client
+        .generate(
+            "m",
+            // dispatch-due = half the 2s budget: served at ~1s, expired at
+            // 2s if the window were (wrongly) waited out
+            GenRequest::greedy(vec![1, 7], 1).with_deadline(Duration::from_secs(2)),
+        )
+        .expect("a tight deadline must pre-empt the batch window, not expire");
+    assert!(!r.cached);
+    assert!(
+        t0.elapsed() < Duration::from_millis(1800),
+        "request sat out the batch window despite its deadline"
+    );
+    let stats = engine.shutdown().unwrap();
+    let m = stats.model("m").unwrap();
+    assert_eq!(m.served, 1);
+    assert_eq!(m.deadline_missed, 0);
+}
+
+#[test]
+fn repeated_greedy_prompt_hits_cache() {
+    let mock = Mock::new("m", log());
+    let mut engine = Engine::builder()
+        .model_with(
+            "m",
+            ModelTuning { max_batch: 4, batch_window: Duration::from_millis(1) },
+            mock.factory(),
+        )
+        .cache(8)
+        .warmup(false)
+        .build()
+        .unwrap();
+    let client = engine.start().unwrap();
+
+    let fresh = client.generate("m", GenRequest::greedy(vec![1, 9], 2)).unwrap();
+    assert!(!fresh.cached);
+    let hit = client.generate("m", GenRequest::greedy(vec![1, 9], 2)).unwrap();
+    assert!(hit.cached, "repeat greedy prompt must be a cache hit");
+    assert_eq!(hit.tokens, fresh.tokens, "cache must replay the generated tokens");
+    assert_eq!(hit.gen_micros, 0);
+    assert_eq!(hit.batch_size, 0);
+
+    // a different max_new is a different cache entry
+    let other = client.generate("m", GenRequest::greedy(vec![1, 9], 1)).unwrap();
+    assert!(!other.cached);
+
+    // sampled requests bypass the cache in both directions
+    let sampled = SampleConfig { temperature: 1.0, stochastic_prefix: 2, seed: 7 };
+    let req = GenRequest { prompt: vec![1, 9], max_new: 2, sample: sampled, deadline: None };
+    let s1 = client.generate("m", req.clone()).unwrap();
+    let s2 = client.generate("m", req).unwrap();
+    assert!(!s1.cached && !s2.cached, "sampled requests must never be cached");
+    assert_eq!(s1.tokens, s2.tokens, "same seed, same solo batch: still deterministic");
+
+    let stats = engine.shutdown().unwrap();
+    let m = stats.model("m").unwrap();
+    assert_eq!(m.cache_hits, 1);
+    assert_eq!(m.cache_misses, 2, "only greedy traffic counts toward the cache");
+    assert_eq!(m.served, 5);
+    assert_eq!(m.batches, 4, "the cache hit rode no batch");
+    assert!((m.cache_hit_rate() - 1.0 / 3.0).abs() < 1e-9);
+}
+
+#[test]
+fn shutdown_drains_queued_requests_and_reports_served() {
+    let mock = Mock::new("m", log());
+    let mut engine = Engine::builder()
+        .model("m", mock.factory())
+        .warmup(false)
+        .build()
+        .unwrap();
+    let client = engine.client();
+    let tickets: Vec<_> = (0..5)
+        .map(|i| client.submit("m", GenRequest::greedy(vec![1, 10 + i], 1)).unwrap())
+        .collect();
+    engine.start().unwrap();
+    // immediate shutdown: graceful drain still answers every queued rider
+    let stats = engine.shutdown().unwrap();
+    assert_eq!(stats.total_served(), 5, "shutdown stats must count every answered rider");
+    assert_eq!(stats.model("m").unwrap().served, 5);
+    for t in tickets {
+        assert!(t.wait().is_ok(), "drained riders get real answers");
+    }
+    // the engine is gone: later submits fail cleanly instead of hanging
+    let err = client.submit("m", GenRequest::greedy(vec![1], 1)).unwrap_err();
+    assert!(matches!(err, Error::Serve(_)), "{err}");
+}
+
+#[test]
+fn warmup_primes_each_declared_bucket() {
+    let log = log();
+    let mut mock = Mock::new("m", log.clone());
+    mock.warm = vec![2, 1, 2]; // duplicated + unsorted on purpose
+    let calls = mock.calls.clone();
+    // warm-up on (builder default)
+    let mut engine = Engine::builder().model("m", mock.factory()).build().unwrap();
+    engine.start().unwrap();
+    // start() returns only after warm-up: counts are already final
+    assert_eq!(calls.load(Ordering::SeqCst), 2, "one priming batch per distinct bucket");
+    let order = log.lock().unwrap().clone();
+    assert_eq!(order, vec![("m", 1, 0), ("m", 2, 0)]);
+    let stats = engine.shutdown().unwrap();
+    let m = stats.model("m").unwrap();
+    assert_eq!(m.warmup_batches, 2);
+    assert_eq!(m.served, 0, "warm-up is not traffic");
+    assert_eq!(m.batches, 0);
+}
+
+#[test]
+fn oversized_group_chunked_to_model_bucket() {
+    let log = log();
+    let mut mock = Mock::new("m", log.clone());
+    mock.cap = Some(2); // largest "exported bucket"
+    let mut engine = Engine::builder()
+        .model_with(
+            "m",
+            ModelTuning { max_batch: 8, batch_window: Duration::from_millis(5) },
+            mock.factory(),
+        )
+        .warmup(false)
+        .build()
+        .unwrap();
+    let client = engine.client();
+    let tickets: Vec<_> = (0..5)
+        .map(|i| client.submit("m", GenRequest::greedy(vec![1, 30 + i], 1)).unwrap())
+        .collect();
+    engine.start().unwrap();
+    let mut queue_times = Vec::new();
+    for t in tickets {
+        let r = t.wait().unwrap();
+        assert!(r.batch_size <= 2);
+        queue_times.push(r.queue_micros);
+    }
+    let stats = engine.shutdown().unwrap();
+    let m = stats.model("m").unwrap();
+    assert_eq!(m.served, 5);
+    assert_eq!(m.batches, 3, "drain of 5 must chunk 2/2/1");
+    assert_eq!(m.max_batch_seen, 2);
+    let sizes: Vec<usize> = log.lock().unwrap().iter().map(|e| e.1).collect();
+    assert_eq!(sizes, vec![2, 2, 1]);
+    // every rider of the drain shares one dispatch instant: queue times may
+    // differ only by submit skew, never by a chunk's generation time
+    assert_eq!(m.total_queue_micros, queue_times.iter().sum::<u128>());
+}
+
+#[test]
+fn unknown_model_and_empty_prompt_rejected_at_submit() {
+    let mock = Mock::new("m", log());
+    let mut engine = Engine::builder()
+        .model("m", mock.factory())
+        .warmup(false)
+        .build()
+        .unwrap();
+    let client = engine.client();
+    let err = client.submit("nope", GenRequest::greedy(vec![1], 1)).unwrap_err();
+    assert!(format!("{err}").contains("unknown model"), "{err}");
+    assert!(format!("{err}").contains("registered: m"),
+            "listing registered models helps: {err}");
+    let err = client.submit("m", GenRequest::greedy(vec![], 1)).unwrap_err();
+    assert!(format!("{err}").contains("empty prompt"), "{err}");
+    // never started: shutdown reports the misuse instead of hanging
+    assert!(engine.shutdown().is_err());
+}
+
+#[test]
+fn factory_failure_surfaces_at_start() {
+    let mut engine = Engine::builder()
+        .model("broken", || Err(Error::Artifact("no such checkpoint".into())))
+        .build()
+        .unwrap();
+    let err = engine.start().unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("broken"), "{msg}");
+    assert!(msg.contains("no such checkpoint"), "{msg}");
+}

@@ -1,23 +1,130 @@
-//! Serving loop: dynamic batching correctness under concurrent traffic.
+//! Serving: engine correctness over real quantized models (artifact-gated)
+//! plus coverage of the deprecated `serve_loop` shim.
 
 mod common;
 
 use normtweak::calib::CalibSet;
 use normtweak::coordinator::{quantize_model, PipelineConfig, QuantModel};
+use normtweak::engine::{Engine, GenRequest, ServableModel};
+use normtweak::eval::LanguageModel;
 use normtweak::quant::QuantScheme;
+#[allow(deprecated)]
 use normtweak::serve::{channel, serve_loop, ServeConfig};
 
-#[test]
-fn concurrent_requests_all_answered_and_batched() {
-    let Some(rt) = common::runtime_or_skip() else { return };
-    let Some(w) = common::weights_or_skip("nt-tiny") else { return };
-    // quick RTN quantization to get a servable model
+fn calib_for(
+    rt: &normtweak::runtime::Runtime,
+    w: &normtweak::model::ModelWeights,
+) -> CalibSet {
     let stream = normtweak::calib::corpus::token_stream(
         &normtweak::calib::corpus::wiki_syn(),
         rt.manifest.calib_batch * w.config.seq,
     );
-    let calib = CalibSet::from_stream(&stream, rt.manifest.calib_batch,
-                                      w.config.seq, "wiki-syn").unwrap();
+    CalibSet::from_stream(&stream, rt.manifest.calib_batch, w.config.seq, "wiki-syn")
+        .unwrap()
+}
+
+/// Two checkpoints (w4 and w8 RTN) registered under one engine, driven by
+/// concurrent clients: every request is answered by the model it named,
+/// warm-up primed the exported buckets, and shutdown stats account for
+/// every rider.
+#[test]
+fn engine_serves_two_real_models_concurrently() {
+    let Some(rt) = common::runtime_or_skip() else { return };
+    let Some(w) = common::weights_or_skip("nt-tiny") else { return };
+    let calib = calib_for(&rt, &w);
+    let mut ckpts = Vec::new();
+    for (name, bits) in [("w4", 4u8), ("w8", 8u8)] {
+        let cfg = PipelineConfig::new("rtn", QuantScheme { bits, group_size: None });
+        let (qm, _) = quantize_model(&rt, &w, &calib, &cfg).unwrap();
+        let path = std::env::temp_dir().join(format!("engine_it_{name}.ntz"));
+        qm.save(&path).unwrap();
+        ckpts.push((name, path));
+    }
+
+    let mut builder = Engine::builder().cache(16);
+    for (name, path) in &ckpts {
+        let dir = common::artifacts_dir();
+        let path = path.clone();
+        builder = builder.model(*name, move || {
+            let lm: Box<dyn LanguageModel> =
+                Box::new(ServableModel::load(&dir, "nt-tiny", &path)?);
+            Ok(lm)
+        });
+    }
+    let mut engine = builder.build().unwrap();
+    let client = engine.start().unwrap();
+
+    let n_clients = 4;
+    let per_client = 4;
+    std::thread::scope(|s| {
+        for c in 0..n_clients {
+            let client = client.clone();
+            s.spawn(move || {
+                for i in 0..per_client {
+                    let key = if (c + i) % 2 == 0 { "w4" } else { "w8" };
+                    let prompt = vec![1, (8 + (c * 31 + i * 7) % 150) as i32];
+                    let resp = client
+                        .generate(key, GenRequest::greedy(prompt.clone(), 8))
+                        .expect("response");
+                    assert_eq!(resp.model, key);
+                    assert_eq!(resp.tokens.len(), prompt.len() + 8);
+                    assert_eq!(&resp.tokens[..2], &prompt[..]);
+                    assert_eq!(resp.prompt_len, 2);
+                    assert_eq!(resp.new_tokens().len(), 8);
+                }
+            });
+        }
+    });
+
+    let stats = engine.shutdown().unwrap();
+    assert_eq!(stats.total_served(), n_clients * per_client);
+    for key in ["w4", "w8"] {
+        let m = stats.model(key).unwrap();
+        assert_eq!(m.served, n_clients * per_client / 2);
+        assert!(m.warmup_batches >= 1, "warm-up must prime the exported buckets");
+        assert_eq!(m.cancelled, 0);
+        assert_eq!(m.deadline_missed, 0);
+    }
+}
+
+/// A repeated greedy prompt on a real model comes back from the cache,
+/// token-identical to the generated answer.
+#[test]
+fn engine_cache_replays_real_greedy_generation() {
+    let Some(rt) = common::runtime_or_skip() else { return };
+    let Some(w) = common::weights_or_skip("nt-tiny") else { return };
+    let calib = calib_for(&rt, &w);
+    let cfg = PipelineConfig::new("rtn", QuantScheme::w4_perchannel());
+    let (qm, _) = quantize_model(&rt, &w, &calib, &cfg).unwrap();
+    let path = std::env::temp_dir().join("engine_it_cache.ntz");
+    qm.save(&path).unwrap();
+
+    let dir = common::artifacts_dir();
+    let mut engine = Engine::builder()
+        .cache(8)
+        .model("w4", move || {
+            let lm: Box<dyn LanguageModel> =
+                Box::new(ServableModel::load(&dir, "nt-tiny", &path)?);
+            Ok(lm)
+        })
+        .build()
+        .unwrap();
+    let client = engine.start().unwrap();
+    let fresh = client.generate("w4", GenRequest::greedy(vec![1, 42], 8)).unwrap();
+    let hit = client.generate("w4", GenRequest::greedy(vec![1, 42], 8)).unwrap();
+    assert!(!fresh.cached);
+    assert!(hit.cached);
+    assert_eq!(fresh.tokens, hit.tokens, "greedy serving must be deterministic");
+    let stats = engine.shutdown().unwrap();
+    assert_eq!(stats.model("w4").unwrap().cache_hits, 1);
+}
+
+#[test]
+#[allow(deprecated)]
+fn legacy_shim_concurrent_requests_all_answered_and_batched() {
+    let Some(rt) = common::runtime_or_skip() else { return };
+    let Some(w) = common::weights_or_skip("nt-tiny") else { return };
+    let calib = calib_for(&rt, &w);
     let cfg = PipelineConfig::new("rtn", QuantScheme::w4_perchannel());
     let (qm, _) = quantize_model(&rt, &w, &calib, &cfg).unwrap();
     let model = QuantModel::new(&rt, &qm).unwrap();
@@ -34,6 +141,7 @@ fn concurrent_requests_all_answered_and_batched() {
                     let resp = h.submit(prompt.clone(), 8).expect("response");
                     assert_eq!(resp.tokens.len(), prompt.len() + 8);
                     assert_eq!(&resp.tokens[..2], &prompt[..]);
+                    assert_eq!(resp.new_tokens().len(), 8);
                     assert!(resp.batch_size >= 1);
                 }
             });
@@ -54,7 +162,8 @@ fn concurrent_requests_all_answered_and_batched() {
 }
 
 #[test]
-fn serve_deterministic_per_prompt() {
+#[allow(deprecated)]
+fn legacy_shim_deterministic_per_prompt() {
     let Some(rt) = common::runtime_or_skip() else { return };
     let Some(w) = common::weights_or_skip("nt-tiny") else { return };
     let fm = normtweak::coordinator::FloatModel::new(&rt, &w).unwrap();
