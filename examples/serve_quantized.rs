@@ -71,18 +71,26 @@ fn main() -> normtweak::Result<()> {
     // drive concurrent traffic, alternating models per request
     let n_clients = 4;
     let latencies = std::sync::Mutex::new(Vec::<u128>::new());
+    let new_tokens = std::sync::atomic::AtomicUsize::new(0);
     let t0 = Instant::now();
     std::thread::scope(|s| {
         for c in 0..n_clients {
             let client = client.clone();
-            let lat = &latencies;
+            let (lat, new_tokens) = (&latencies, &new_tokens);
             s.spawn(move || {
                 for i in 0..n_requests / n_clients {
                     let key = if (c + i) % 2 == 0 { "gptq-nt" } else { "rtn" };
                     let prompt = vec![1, (8 + (c * 37 + i * 11) % 480) as i32];
                     let t = Instant::now();
-                    if client.generate(key, GenRequest::greedy(prompt, 16)).is_ok() {
+                    if let Ok(resp) = client.generate(key, GenRequest::greedy(prompt, 16)) {
                         lat.lock().unwrap().push(t.elapsed().as_micros());
+                        // cache hits replay answered tokens but generate none
+                        if !resp.cached {
+                            new_tokens.fetch_add(
+                                resp.new_tokens().len(),
+                                std::sync::atomic::Ordering::Relaxed,
+                            );
+                        }
                     }
                 }
             });
@@ -101,7 +109,7 @@ fn main() -> normtweak::Result<()> {
              stats.total_served());
     println!("throughput: {:.1} req/s  ({:.1} tok/s generated)",
              stats.total_served() as f64 / wall,
-             (stats.total_served() * 16) as f64 / wall);
+             new_tokens.load(std::sync::atomic::Ordering::Relaxed) as f64 / wall);
     println!("latency:    p50 {:.0} ms   p90 {:.0} ms   p99 {:.0} ms", pct(50), pct(90), pct(99));
     for (name, m) in &stats.models {
         println!(

@@ -17,6 +17,17 @@ Exported graph inventory (see DESIGN.md §4): per model —
     tweak_step_mse / _kl       Table-9 loss ablation (nt-small, pc only)
     xtx.{K}                    Gram matrix for Hessian accumulation
 
+and, unless `--no-decode`, the incremental-decode set (KV-cached serving;
+recorded under the manifest's `decode` key with the per-layer cache shape
+[n_head, seq, d_head] so the runtime can allocate sessions):
+
+    block_fwd_kv.b{B}          prefill: block forward + per-head K/V
+    block_fwd_q_kv.{grp}.b{B}  quantized prefill
+    embed_dec.b{B}             one-token embed at per-row positions
+    block_dec.b{B}             one-token float block step over the cache
+    block_dec_q.{grp}.b{B}     one-token quantized block step
+    head_dec.b{B}              one-token final norm + tied logits
+
 {grp} ranges over the exported quantization grains, default
 pc (per-channel) / g32 / g64 / g128 — the paper's two grains plus the
 fine/coarse sweep neighbours.  Override with `--groups pc,g64`; whatever is
@@ -155,12 +166,13 @@ def norm_param_args(cfg: ModelConfig, prefix: str):
     return [arg(f"{prefix}{n}", (d,)) for n in names]
 
 
-def graph_defs(cfg: ModelConfig, groups: dict = None):
+def graph_defs(cfg: ModelConfig, groups: dict = None, decode: bool = True):
     """Yield (name, fn, input_args, n_outputs) for every graph of a model.
 
     `groups` maps grain tags to group sizes (default: the full GROUPS
     sweep); one `block_fwd_q` per (grain, bucket) and one `tweak_step` per
-    grain are emitted.
+    grain are emitted.  `decode=False` skips the incremental-decode set
+    (the runtime then falls back to full-context recompute per token).
     """
     groups = GROUPS if groups is None else groups
     check_groups(cfg, groups)
@@ -189,6 +201,50 @@ def graph_defs(cfg: ModelConfig, groups: dict = None):
             yield (f"block_fwd_q.{gname}.b{b}",
                    lambda x, *w, cfg=cfg: (M.block_fwd_q(cfg, x, list(w)),),
                    [arg("x", (b, s, d))] + qweight_args(cfg, group))
+
+    if decode:
+        h, dh = cfg.n_head, cfg.d_head
+        for b in EXPORT_BUCKETS:
+            wargs = float_weight_args(cfg)
+            # prefill: full-context forward that also emits the K/V cache
+            yield (f"block_fwd_kv.b{b}",
+                   lambda x, *w, cfg=cfg: M.block_fwd_kv(cfg, x, list(w)),
+                   [arg("x", (b, s, d))] + wargs)
+            for gname, group in groups.items():
+                yield (f"block_fwd_q_kv.{gname}.b{b}",
+                       lambda x, *w, cfg=cfg: M.block_fwd_q_kv(cfg, x, list(w)),
+                       [arg("x", (b, s, d))] + qweight_args(cfg, group))
+
+            # one-token step graphs; KV caches ride last in both directions
+            # (Runtime::run_carry threads them as carried state)
+            cache_args = [arg("k_cache", (b, h, s, dh)),
+                          arg("v_cache", (b, h, s, dh))]
+            yield (f"embed_dec.b{b}",
+                   (lambda toks, pos, te, pe, cfg=cfg:
+                    (M.embed_dec(cfg, toks, pos, te, pe),)),
+                   [arg("tokens", (b, 1), I32), arg("pos", (b,), I32),
+                    arg("tok_emb", (v, d)), arg("pos_emb", (s, d))])
+            yield (f"head_dec.b{b}",
+                   (lambda x, *rest, cfg=cfg:
+                    (M.head(cfg, x, list(rest[:-1]), rest[-1],
+                            use_pallas=False),)),
+                   ([arg("x", (b, 1, d)), arg("lnf.g", (d,))]
+                    + ([arg("lnf.b", (d,))] if cfg.norm == "layernorm" else [])
+                    + [arg("tok_emb", (v, d))]))
+            yield (f"block_dec.b{b}",
+                   (lambda x, pos, *rest, cfg=cfg, nw=len(wargs):
+                    M.block_dec(cfg, x, pos, list(rest[:nw]),
+                                rest[nw], rest[nw + 1])),
+                   [arg("x", (b, 1, d)), arg("pos", (b,), I32)]
+                   + wargs + cache_args)
+            for gname, group in groups.items():
+                qa = qweight_args(cfg, group)
+                yield (f"block_dec_q.{gname}.b{b}",
+                       (lambda x, pos, *rest, cfg=cfg, nq=len(qa):
+                        M.block_dec_q(cfg, x, pos, list(rest[:nq]),
+                                      rest[nq], rest[nq + 1])),
+                       [arg("x", (b, 1, d)), arg("pos", (b,), I32)]
+                       + qa + cache_args)
 
     yield (f"block_taps.b{cb}",
            lambda x, *w, cfg=cfg: M.block_taps(cfg, x, list(w)),
@@ -243,8 +299,8 @@ def graph_defs(cfg: ModelConfig, groups: dict = None):
 
 
 def export_model(cfg: ModelConfig, out_dir: str, manifest: dict,
-                 groups: dict = None):
-    for name, fn, in_args in graph_defs(cfg, groups):
+                 groups: dict = None, decode: bool = True):
+    for name, fn, in_args in graph_defs(cfg, groups, decode):
         t0 = time.time()
         fname = f"{cfg.name}.{name}.hlo.txt"
         path = os.path.join(out_dir, fname)
@@ -266,6 +322,10 @@ def main():
     ap.add_argument("--groups", default=",".join(GROUPS),
                     help="comma-separated grain tags to export "
                          "(pc or g<N>; default: %(default)s)")
+    ap.add_argument("--no-decode", action="store_true",
+                    help="skip the incremental-decode graphs; the runtime "
+                         "then falls back to full-context recompute per "
+                         "generated token")
     args = ap.parse_args()
     groups = parse_groups(args.groups)
     for name in args.models:
@@ -283,8 +343,19 @@ def main():
         } for name, c in MODELS.items() if name in args.models},
         "graphs": [],
     }
+    if not args.no_decode:
+        # the decode contract the Rust runtime parses: which buckets have
+        # one-token step graphs, and the per-layer per-row cache shape
+        manifest["decode"] = {
+            "buckets": EXPORT_BUCKETS,
+            "caches": {name: {
+                "n_layer": c.n_layer,
+                "shape": [c.n_head, c.seq, c.d_head],
+            } for name, c in MODELS.items() if name in args.models},
+        }
     for name in args.models:
-        export_model(MODELS[name], args.out, manifest, groups)
+        export_model(MODELS[name], args.out, manifest, groups,
+                     decode=not args.no_decode)
     with open(os.path.join(args.out, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
     print(f"[aot] manifest: {len(manifest['graphs'])} graphs")

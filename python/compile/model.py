@@ -156,8 +156,17 @@ def _attention_mix(cfg: ModelConfig, x, qkv):
     return None, heads(q), heads(k), heads(v)
 
 
-def block_fwd(cfg: ModelConfig, x, flat_weights, use_pallas=True):
-    """Float transformer block: pre-norm attention + pre-norm MLP."""
+def block_fwd_kv(cfg: ModelConfig, x, flat_weights, use_pallas=True):
+    """Float block forward that also returns the per-head K/V tensors.
+
+    The prefill graph of the incremental-decode runtime: the Rust side
+    composes `embed → block_fwd_kv × L → head` once per prompt and seeds a
+    per-layer KV cache from the returned K/V (positions past the prompt
+    hold pad-token junk, but decode masks to `<= pos` and overwrites them
+    one step at a time, so they are never attended before being rewritten).
+
+    Returns (x_out [B,S,d], k [B,H,S,dh], v [B,H,S,dh]).
+    """
     w = BlockWeights.from_flat(cfg, flat_weights)
     b, s, d = x.shape
 
@@ -171,7 +180,12 @@ def block_fwd(cfg: ModelConfig, x, flat_weights, use_pallas=True):
     h2 = _norm(cfg, x, w.ln2_g, w.ln2_b, use_pallas)
     f = _gelu(h2.reshape(b * s, d) @ w.wfc1 + w.bfc1)
     x = x + (f @ w.wfc2 + w.bfc2).reshape(b, s, d)
-    return x
+    return x, k, v
+
+
+def block_fwd(cfg: ModelConfig, x, flat_weights, use_pallas=True):
+    """Float transformer block: pre-norm attention + pre-norm MLP."""
+    return block_fwd_kv(cfg, x, flat_weights, use_pallas)[0]
 
 
 def block_taps(cfg: ModelConfig, x, flat_weights, use_pallas=True):
@@ -196,8 +210,9 @@ def block_taps(cfg: ModelConfig, x, flat_weights, use_pallas=True):
     return t_qkv, t_proj, t_fc1, t_fc2
 
 
-def block_fwd_q(cfg: ModelConfig, x, flat_qweights, use_pallas=True):
-    """Quantized transformer block: dequant-matmul for all four linears."""
+def block_fwd_q_kv(cfg: ModelConfig, x, flat_qweights, use_pallas=True):
+    """Quantized block forward that also returns the per-head K/V tensors
+    (the quantized prefill graph — see [`block_fwd_kv`])."""
     w = BlockQWeights.from_flat(cfg, flat_qweights)
     b, s, d = x.shape
 
@@ -213,7 +228,12 @@ def block_fwd_q(cfg: ModelConfig, x, flat_qweights, use_pallas=True):
     h2 = _norm(cfg, x, w.ln2_g, w.ln2_b, use_pallas)
     f = _gelu(_qmm(h2.reshape(b * s, d), w.cfc1, w.sfc1, use_pallas) + w.bfc1)
     x = x + (_qmm(f, w.cfc2, w.sfc2, use_pallas) + w.bfc2).reshape(b, s, d)
-    return x
+    return x, k, v
+
+
+def block_fwd_q(cfg: ModelConfig, x, flat_qweights, use_pallas=True):
+    """Quantized transformer block: dequant-matmul for all four linears."""
+    return block_fwd_q_kv(cfg, x, flat_qweights, use_pallas)[0]
 
 
 def embed(cfg: ModelConfig, tokens, tok_emb, pos_emb):
@@ -231,6 +251,94 @@ def head(cfg: ModelConfig, x, lnf_flat, tok_emb, use_pallas=True):
         bb = None
     h = _norm(cfg, x, g, bb, use_pallas)
     return h @ tok_emb.T
+
+
+# ---------------------------------------------------------------------------
+# incremental decode (fixed-shape one-token step over a per-layer KV cache)
+#
+# All decode-side graphs use the jnp oracle kernels: a one-token step is a
+# handful of GEMVs plus a masked attention row — there is nothing for the
+# Pallas tiles to win, and the cache scatter/mask logic stays readable.
+# Per-row positions (`pos` i32[B]) make the graphs continuous-batching
+# ready: rows of one decode batch may sit at different sequence depths.
+
+
+def _decode_attend(cfg: ModelConfig, q, k_cache, v_cache, pos):
+    """One-token causal attention over the cache.
+
+    q f32[B,H,1,dh] attends to cache rows `<= pos[b]` (the freshly written
+    position included); everything deeper is masked out, so stale prefill
+    junk past the live prefix is never read.
+    """
+    s = k_cache.shape[2]
+    scale = 1.0 / (cfg.d_head ** 0.5)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k_cache) * scale   # [B,H,1,S]
+    kidx = jnp.arange(s, dtype=jnp.int32)
+    mask = kidx[None, None, None, :] <= pos[:, None, None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v_cache)
+
+
+def _cache_update(cache, new, pos):
+    """Write `new` f32[B,H,1,dh] into `cache` f32[B,H,S,dh] at row `pos[b]`
+    (vectorized one-hot scatter — fixed-shape, so it lowers AOT)."""
+    s = cache.shape[2]
+    oh = jax.nn.one_hot(pos, s, dtype=cache.dtype)               # [B,S]
+    oh = oh[:, None, :, None]                                    # [B,1,S,1]
+    return cache * (1.0 - oh) + new * oh
+
+
+def embed_dec(cfg: ModelConfig, tokens, pos, tok_emb, pos_emb):
+    """One-token embed: tokens i32[B,1] at per-row positions -> x f32[B,1,d]."""
+    return tok_emb[tokens[:, 0]][:, None, :] + pos_emb[pos][:, None, :]
+
+
+def _block_dec_attn(cfg: ModelConfig, x, pos, qkv, k_cache, v_cache):
+    """Shared decode attention tail: split heads, scatter K/V, attend."""
+    b = x.shape[0]
+    _, q, k, v = _attention_mix(cfg, x, qkv)                     # [B,H,1,dh]
+    k_cache = _cache_update(k_cache, k, pos)
+    v_cache = _cache_update(v_cache, v, pos)
+    a = _decode_attend(cfg, q, k_cache, v_cache, pos)
+    a = a.transpose(0, 2, 1, 3).reshape(b, 1, cfg.d_model)
+    return a, k_cache, v_cache
+
+
+def block_dec(cfg: ModelConfig, x, pos, flat_weights, k_cache, v_cache):
+    """Float one-token block step.
+
+    x f32[B,1,d] is the new token's activation, `pos` i32[B] its absolute
+    position per row, caches f32[B,H,S,dh].  Returns (x', k', v') — the
+    caches come last in both directions so the runtime can thread them as
+    carried state (`Runtime::run_carry`).
+    """
+    w = BlockWeights.from_flat(cfg, flat_weights)
+    b, _, d = x.shape
+    h1 = _norm(cfg, x, w.ln1_g, w.ln1_b, use_pallas=False)
+    qkv = (h1.reshape(b, d) @ w.wqkv + w.bqkv).reshape(b, 1, 3 * d)
+    a, k_cache, v_cache = _block_dec_attn(cfg, x, pos, qkv, k_cache, v_cache)
+    x = x + (a.reshape(b, d) @ w.wproj + w.bproj).reshape(b, 1, d)
+    h2 = _norm(cfg, x, w.ln2_g, w.ln2_b, use_pallas=False)
+    f = _gelu(h2.reshape(b, d) @ w.wfc1 + w.bfc1)
+    x = x + (f @ w.wfc2 + w.bfc2).reshape(b, 1, d)
+    return x, k_cache, v_cache
+
+
+def block_dec_q(cfg: ModelConfig, x, pos, flat_qweights, k_cache, v_cache):
+    """Quantized one-token block step (see [`block_dec`])."""
+    w = BlockQWeights.from_flat(cfg, flat_qweights)
+    b, _, d = x.shape
+    h1 = _norm(cfg, x, w.ln1_g, w.ln1_b, use_pallas=False)
+    qkv = (_qmm(h1.reshape(b, d), w.cqkv, w.sqkv, False)
+           + w.bqkv).reshape(b, 1, 3 * d)
+    a, k_cache, v_cache = _block_dec_attn(cfg, x, pos, qkv, k_cache, v_cache)
+    x = x + (_qmm(a.reshape(b, d), w.cproj, w.sproj, False)
+             + w.bproj).reshape(b, 1, d)
+    h2 = _norm(cfg, x, w.ln2_g, w.ln2_b, use_pallas=False)
+    f = _gelu(_qmm(h2.reshape(b, d), w.cfc1, w.sfc1, False) + w.bfc1)
+    x = x + (_qmm(f, w.cfc2, w.sfc2, False) + w.bfc2).reshape(b, 1, d)
+    return x, k_cache, v_cache
 
 
 def model_fwd(cfg: ModelConfig, tokens, params: dict, use_pallas=False):

@@ -34,6 +34,46 @@ def test_graph_inventory(tiny_graphs):
     assert "xtx.k128" in names and "xtx.k512" in names
 
 
+def test_decode_graph_inventory(tiny_graphs):
+    names = [g[0] for g in tiny_graphs]
+    for b in aot.EXPORT_BUCKETS:
+        assert f"block_fwd_kv.b{b}" in names
+        assert f"embed_dec.b{b}" in names
+        assert f"head_dec.b{b}" in names
+        assert f"block_dec.b{b}" in names
+        for grp in aot.GROUPS:
+            assert f"block_fwd_q_kv.{grp}.b{b}" in names
+            assert f"block_dec_q.{grp}.b{b}" in names
+
+
+def test_decode_opt_out_drops_every_decode_graph():
+    names = [g[0] for g in aot.graph_defs(MODELS["nt-tiny"], decode=False)]
+    assert not any(
+        n.split(".")[0] in ("block_fwd_kv", "block_fwd_q_kv", "embed_dec",
+                            "head_dec", "block_dec", "block_dec_q")
+        for n in names)
+    # the classic inventory is untouched by the opt-out
+    assert "block_fwd.b8" in names and "tweak_step.pc" in names
+
+
+def test_decode_step_arg_shapes(tiny_graphs):
+    by_name = {g[0]: g for g in tiny_graphs}
+    cfg = MODELS["nt-tiny"]
+    args = {a["name"]: a for a in by_name["block_dec.b8"][2]}
+    # caches are [B, H, S, Dh] and ride last (carried-state convention)
+    cache_shape = [8, cfg.n_head, cfg.seq, cfg.d_head]
+    assert args["k_cache"]["shape"] == cache_shape
+    assert args["v_cache"]["shape"] == cache_shape
+    assert [a["name"] for a in by_name["block_dec.b8"][2]][-2:] == \
+        ["k_cache", "v_cache"]
+    assert args["x"]["shape"] == [8, 1, cfg.d_model]
+    assert args["pos"] == {"name": "pos", "shape": [8], "dtype": "i32"}
+    # one-token embed takes per-row positions too
+    dec_embed = {a["name"]: a for a in by_name["embed_dec.b8"][2]}
+    assert dec_embed["tokens"]["shape"] == [8, 1]
+    assert dec_embed["pos"]["dtype"] == "i32"
+
+
 def test_graph_defs_honours_group_subset():
     cfg = MODELS["nt-tiny"]
     names = [g[0] for g in aot.graph_defs(cfg, {"g64": 64})]
@@ -141,8 +181,46 @@ def test_manifest_matches_exports(tmp_path):
         assert (tmp_path / g["file"]).exists(), g["file"]
         # every grain-specialized graph's tag must be a manifest-level grain
         parts = g["name"].split(".")
-        if parts[0] in ("block_fwd_q", "tweak_step"):
+        if parts[0] in ("block_fwd_q", "tweak_step",
+                        "block_fwd_q_kv", "block_dec_q"):
             assert parts[1] in manifest["groups"], g["name"]
         for a in g["inputs"]:
             assert a["dtype"] in ("f32", "i8", "i32")
             assert all(d > 0 for d in a["shape"])
+
+    # the decode record the Rust runtime parses: step-graph buckets plus the
+    # per-layer cache shape [n_head, seq, d_head] for every exported model,
+    # each bucket backed by actual step graphs on disk
+    cfg = MODELS["nt-tiny"]
+    dec = manifest["decode"]
+    assert dec["buckets"] == manifest["buckets"]
+    assert dec["caches"]["nt-tiny"] == {
+        "n_layer": cfg.n_layer,
+        "shape": [cfg.n_head, cfg.seq, cfg.d_head],
+    }
+    for b in dec["buckets"]:
+        for n in (f"embed_dec.b{b}", f"head_dec.b{b}", f"block_dec.b{b}",
+                  f"block_fwd_kv.b{b}", f"block_dec_q.g32.b{b}"):
+            assert n in names, n
+    # a cache entry without step graphs (or vice versa) is schema drift
+    for g in manifest["graphs"]:
+        if g["name"].startswith("block_dec"):
+            assert g["model"] in dec["caches"]
+
+
+def test_no_decode_export_omits_record(tmp_path):
+    import subprocess
+    import sys
+    out = str(tmp_path)
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", out,
+         "--models", "nt-tiny", "--groups", "pc", "--no-decode"],
+        check=True,
+        cwd=str(__import__("pathlib").Path(__file__).parent.parent),
+    )
+    manifest = json.load(open(f"{out}/manifest.json"))
+    # absent record == feature unavailable: the runtime must fall back to
+    # full-context recompute, never crash
+    assert "decode" not in manifest
+    assert not any("dec" in g["name"] or "_kv" in g["name"]
+                   for g in manifest["graphs"])

@@ -78,6 +78,10 @@ struct RunMetrics {
     p99_ms: f64,
     mean_batch: f32,
     cache_hit_rate: f64,
+    prefill_tokens: u128,
+    decode_tokens: u128,
+    prefill_tok_per_s: f64,
+    decode_tok_per_s: f64,
 }
 
 /// Drive one engine config with 4 client threads cycling a small prompt
@@ -118,6 +122,10 @@ fn drive(mut engine: Engine, n_requests: usize) -> Result<RunMetrics> {
         p99_ms: l[(l.len() * 99 / 100).min(l.len() - 1)] as f64 / 1000.0,
         mean_batch: m.mean_batch(),
         cache_hit_rate: m.cache_hit_rate(),
+        prefill_tokens: m.prefill_tokens,
+        decode_tokens: m.decode_tokens,
+        prefill_tok_per_s: m.prefill_tok_per_s(),
+        decode_tok_per_s: m.decode_tok_per_s(),
     })
 }
 
@@ -157,8 +165,10 @@ fn main() {
         let m = drive(engine, 32).unwrap();
         println!(
             "max_batch {max_batch}: {:>6.1} req/s   p50 {:>7.1} ms   p99 {:>7.1} ms   \
-             mean batch {:>4.1}   cache hit rate {:.2}",
-            m.rps, m.p50_ms, m.p99_ms, m.mean_batch, m.cache_hit_rate
+             mean batch {:>4.1}   cache hit rate {:.2}   \
+             decode {:>7.1} tok/s   prefill {:>7.1} tok/s",
+            m.rps, m.p50_ms, m.p99_ms, m.mean_batch, m.cache_hit_rate,
+            m.decode_tok_per_s, m.prefill_tok_per_s
         );
         configs.push(json::obj(vec![
             ("max_batch", json::n(max_batch as f64)),
@@ -168,6 +178,14 @@ fn main() {
             ("p99_ms", json::n(m.p99_ms)),
             ("mean_batch", json::n(m.mean_batch as f64)),
             ("cache_hit_rate", json::n(m.cache_hit_rate)),
+            // prefill/decode split: prompt tokens pushed through prefill
+            // vs tokens produced by incremental decode steps, with each
+            // side's own throughput (offline mock runs the recompute
+            // fallback, so the split exists there too)
+            ("prefill_tokens", json::n(m.prefill_tokens as f64)),
+            ("decode_tokens", json::n(m.decode_tokens as f64)),
+            ("prefill_tok_per_s", json::n(m.prefill_tok_per_s)),
+            ("decode_tok_per_s", json::n(m.decode_tok_per_s)),
         ]));
     }
     let record = json::obj(vec![

@@ -57,8 +57,10 @@ fn main() {
 
     // CPU-side components
     let budget = Duration::from_millis(300);
+    // measure the raw bit-unpack (codes_tensor() caches after the first
+    // call — the serving decode path depends on that)
     let r = bench_for("codes unpack (qkv)", budget, || {
-        black_box(qm.blocks[0].qkv.codes_tensor());
+        black_box(qm.blocks[0].qkv.codes_tensor_owned());
     });
     println!("{}", r.report());
 

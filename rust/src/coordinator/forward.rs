@@ -3,11 +3,21 @@
 //! Both runners compose `embed → block × L → head` from per-layer graphs —
 //! exactly the granularity Algorithm 1 needs — with batch padding to the
 //! exported buckets.
+//!
+//! When the manifest carries a `decode` record, both runners also override
+//! the [`LanguageModel`] session API: `prefill` runs the `block_fwd_kv`
+//! prefill graphs once per prompt batch and seeds per-request KV caches,
+//! and `decode_step` advances any mix of sessions by one token through the
+//! fixed-shape `embed_dec → block_dec[_q] × L → head_dec` step graphs
+//! (caches threaded as carried state via [`Runtime::run_carry`]).  Without
+//! the record the trait's full-context recompute fallback serves instead —
+//! a feature-gated degradation, never a failure.
 
 use crate::calib::vocab::PAD;
 use crate::error::{Error, Result};
+use crate::eval::decode::{self, DecodeSession, KvCache};
 use crate::eval::LanguageModel;
-use crate::model::{ModelConfig, ModelWeights, NormKind, QuantizedModel};
+use crate::model::{ModelConfig, ModelWeights, NormKind, QuantizedBlock, QuantizedModel};
 use crate::quant::act::fake_quant_per_row;
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
@@ -53,6 +63,184 @@ fn slice_batch(t: Tensor, b: usize) -> Tensor {
     }
 }
 
+/// Padded `[B, seq]` token tensor for a prompt batch — the recompute
+/// fallback's [`decode::padded_row`] convention (validation + pad token 0),
+/// so both paths feed identical per-row inputs.  Malformed rows are
+/// `Error::Config`.
+fn prompt_tensor(prompts: &[Vec<i32>], seq: usize) -> Result<Tensor> {
+    let b = prompts.len();
+    let mut toks = Vec::with_capacity(b * seq);
+    for p in prompts {
+        toks.extend(decode::padded_row(p, seq)?);
+    }
+    Ok(Tensor::i32(&[b, seq], toks))
+}
+
+/// Split batched prefill outputs into per-request sessions: row `i` gets
+/// its logits at its own last prompt position plus its `[1, H, S, Dh]`
+/// slice of every layer's K/V cache.
+fn sessions_from_prefill(
+    prompts: &[Vec<i32>],
+    logits: &Tensor,
+    layer_kv: &[(Tensor, Tensor)],
+) -> Result<Vec<DecodeSession>> {
+    let (seq, vocab) = (logits.shape[1], logits.shape[2]);
+    let lv = logits.as_f32()?;
+    let mut out = Vec::with_capacity(prompts.len());
+    for (i, p) in prompts.iter().enumerate() {
+        let kv: Vec<(Tensor, Tensor)> = layer_kv
+            .iter()
+            .map(|(k, v)| Ok((decode::cache_row(k, i)?, decode::cache_row(v, i)?)))
+            .collect::<Result<_>>()?;
+        let pos = p.len() - 1;
+        out.push(DecodeSession {
+            tokens: p.clone(),
+            logits: lv[(i * seq + pos) * vocab..][..vocab].to_vec(),
+            kv: KvCache::Layers(kv),
+        });
+    }
+    Ok(out)
+}
+
+/// Build one step's `[bucket, 1]` token and `[bucket]` position inputs
+/// (pad rows decode token 0 at position 0 and are discarded).
+fn step_inputs(
+    sessions: &[&mut DecodeSession],
+    bucket: usize,
+    seq: usize,
+) -> Result<(Tensor, Tensor)> {
+    let mut tok = vec![0i32; bucket];
+    let mut pos = vec![0i32; bucket];
+    for (i, s) in sessions.iter().enumerate() {
+        if s.tokens.is_empty() {
+            return Err(Error::Config("decode: empty session".into()));
+        }
+        if s.tokens.len() > seq {
+            return Err(Error::Config(format!(
+                "decode session at {} tokens exceeds the model context {seq}",
+                s.tokens.len()
+            )));
+        }
+        tok[i] = *s.tokens.last().unwrap();
+        pos[i] = (s.tokens.len() - 1) as i32;
+    }
+    Ok((Tensor::i32(&[bucket, 1], tok), Tensor::i32(&[bucket], pos)))
+}
+
+/// Copy one step's `[bucket, 1, V]` logits back into the live sessions.
+fn set_step_logits(sessions: &mut [&mut DecodeSession], logits: &Tensor) -> Result<()> {
+    let vocab = *logits.shape.last().unwrap();
+    let lv = logits.as_f32()?;
+    for (i, s) in sessions.iter_mut().enumerate() {
+        s.logits = lv[i * vocab..][..vocab].to_vec();
+    }
+    Ok(())
+}
+
+/// Whether every session carries a layered cache (a mixed batch falls back
+/// to recompute — it cannot ride one decode graph).
+fn all_layered(sessions: &[&mut DecodeSession]) -> bool {
+    sessions.iter().all(|s| matches!(s.kv, KvCache::Layers(_)))
+}
+
+/// Append a quantized block's weight arguments in the canonical manifest
+/// order — the single source shared by `block_fwd_q`, `block_fwd_q_kv`,
+/// and `block_dec_q`, so a signature change cannot drift between them.
+/// (`codes_tensor` is cached inside the block, so this is cheap even on
+/// the per-token decode hot path.)
+fn extend_qblock_args<'a>(blk: &'a QuantizedBlock, args: &mut Vec<&'a Tensor>) {
+    args.push(&blk.ln1_g);
+    if let Some(b1) = &blk.ln1_b {
+        args.push(b1);
+    }
+    args.extend([blk.qkv.codes_tensor(), &blk.qkv.scales, &blk.qkv.bias,
+                 blk.proj.codes_tensor(), &blk.proj.scales, &blk.proj.bias,
+                 &blk.ln2_g]);
+    if let Some(b2) = &blk.ln2_b {
+        args.push(b2);
+    }
+    args.extend([blk.fc1.codes_tensor(), &blk.fc1.scales, &blk.fc1.bias,
+                 blk.fc2.codes_tensor(), &blk.fc2.scales, &blk.fc2.bias]);
+}
+
+/// Shared prefill driver: embed → per-layer KV block → head, split into
+/// per-request sessions.  The closures supply the model-specific graph
+/// calls (float vs quantized); padding, the layer loop, and cache slicing
+/// are identical by construction — one place to change the protocol.
+fn run_prefill(
+    cfg: &ModelConfig,
+    prompts: &[Vec<i32>],
+    embed: impl Fn(&Tensor) -> Result<Tensor>,
+    block_kv: impl Fn(usize, &Tensor) -> Result<(Tensor, Tensor, Tensor)>,
+    head: impl Fn(&Tensor) -> Result<Tensor>,
+) -> Result<Vec<DecodeSession>> {
+    if prompts.is_empty() {
+        return Ok(Vec::new());
+    }
+    let tokens = prompt_tensor(prompts, cfg.seq)?;
+    let mut x = embed(&tokens)?;
+    let mut layer_kv = Vec::with_capacity(cfg.n_layer);
+    for l in 0..cfg.n_layer {
+        let (nx, k, v) = block_kv(l, &x)?;
+        x = nx;
+        layer_kv.push((k, v));
+    }
+    sessions_from_prefill(prompts, &head(&x)?, &layer_kv)
+}
+
+/// Shared one-token step driver: embed_dec → per-layer carried block step
+/// (`block_step(layer, bucket, x, pos, kv)`) → head_dec, with the caches
+/// stacked/scattered around each layer call and the refreshed logits
+/// written back into the sessions.  `head_act_bits` applies the W+A
+/// activation fake-quant to the head input (quantized models only).
+#[allow(clippy::too_many_arguments)]
+fn run_decode_step(
+    runtime: &Runtime,
+    name: &str,
+    cfg: &ModelConfig,
+    sessions: &mut [&mut DecodeSession],
+    tok_emb: &Tensor,
+    pos_emb: &Tensor,
+    block_step: impl Fn(usize, usize, &Tensor, &Tensor, Vec<Tensor>) -> Result<(Tensor, Vec<Tensor>)>,
+    head_act_bits: Option<u8>,
+    lnf_g: &Tensor,
+    lnf_b: Option<&Tensor>,
+) -> Result<()> {
+    if sessions.is_empty() {
+        return Ok(());
+    }
+    let dec = runtime.manifest.decode.as_ref().ok_or_else(|| {
+        Error::Artifact("decode step driven without a manifest decode record".into())
+    })?;
+    let bucket = dec.bucket_for(sessions.len())?;
+    let (tok_t, pos_t) = step_inputs(sessions, bucket, cfg.seq)?;
+    let mut x = {
+        let outs = runtime.run(
+            name,
+            &format!("embed_dec.b{bucket}"),
+            &[&tok_t, &pos_t, tok_emb, pos_emb],
+        )?;
+        outs.into_iter().next().unwrap()
+    };
+    for l in 0..cfg.n_layer {
+        let (k, v) = decode::stack_layer(sessions, l, bucket)?;
+        let (nx, carried) = block_step(l, bucket, &x, &pos_t, vec![k, v])?;
+        x = nx;
+        decode::scatter_layer(sessions, l, &carried[0], &carried[1])?;
+    }
+    let xh = match head_act_bits {
+        Some(bits) => fake_quant_per_row(&x, bits)?,
+        None => x,
+    };
+    let mut args: Vec<&Tensor> = vec![&xh, lnf_g];
+    if let Some(b) = lnf_b {
+        args.push(b);
+    }
+    args.push(tok_emb);
+    let outs = runtime.run(name, &format!("head_dec.b{bucket}"), &args)?;
+    set_step_logits(sessions, &outs[0])
+}
+
 /// Float model runner (the `fOut` stream + FP16-analog baseline evals).
 pub struct FloatModel<'rt, 'w> {
     pub runtime: &'rt Runtime,
@@ -62,6 +250,8 @@ pub struct FloatModel<'rt, 'w> {
 impl<'rt, 'w> FloatModel<'rt, 'w> {
     pub fn new(runtime: &'rt Runtime, weights: &'w ModelWeights) -> Result<Self> {
         runtime.manifest.verify_model(&weights.config)?;
+        // a drifted decode cache record must fail here, not mid-request
+        runtime.manifest.verify_decode(&weights.config)?;
         Ok(FloatModel { runtime, weights })
     }
 
@@ -137,6 +327,23 @@ impl<'rt, 'w> FloatModel<'rt, 'w> {
         let mut it = outs.into_iter();
         Ok((it.next().unwrap(), it.next().unwrap()))
     }
+
+    /// One prefill block forward: like [`Self::block_fwd`] but also returns
+    /// the per-head K/V cache tensors `[B, H, S, Dh]`.
+    pub fn block_fwd_kv(&self, layer: usize, x: &Tensor) -> Result<(Tensor, Tensor, Tensor)> {
+        let b = x.shape[0];
+        let bucket = self.runtime.manifest.bucket_for(b)?;
+        let padded = pad_batch(x, bucket)?;
+        let bw = self.weights.block(layer)?;
+        let mut args = vec![&padded];
+        args.extend(bw.flat());
+        let outs = self
+            .runtime
+            .run(self.name(), &format!("block_fwd_kv.b{bucket}"), &args)?;
+        let mut it = outs.into_iter();
+        let (x2, k, v) = (it.next().unwrap(), it.next().unwrap(), it.next().unwrap());
+        Ok((slice_batch(x2, b), slice_batch(k, b), slice_batch(v, b)))
+    }
 }
 
 impl LanguageModel for FloatModel<'_, '_> {
@@ -159,6 +366,57 @@ impl LanguageModel for FloatModel<'_, '_> {
     fn warm_buckets(&self) -> Vec<usize> {
         self.runtime.manifest.buckets.clone()
     }
+
+    fn supports_decode(&self) -> bool {
+        self.runtime.manifest.decode_for(&self.weights.config.name).is_some()
+    }
+
+    fn prefill(&self, prompts: &[Vec<i32>]) -> Result<Vec<DecodeSession>> {
+        if !self.supports_decode() {
+            return decode::recompute_prefill(self, prompts);
+        }
+        run_prefill(
+            &self.weights.config,
+            prompts,
+            |t| self.embed(t),
+            |l, x| self.block_fwd_kv(l, x),
+            |x| self.head(x),
+        )
+    }
+
+    fn decode_step(&self, sessions: &mut [&mut DecodeSession]) -> Result<()> {
+        if !self.supports_decode() || !all_layered(sessions) {
+            return decode::recompute_decode_step(self, sessions);
+        }
+        let cfg = &self.weights.config;
+        let lnf_b = match cfg.norm {
+            NormKind::LayerNorm => Some(self.weights.get("lnf.b")?),
+            NormKind::RmsNorm => None,
+        };
+        run_decode_step(
+            self.runtime,
+            self.name(),
+            cfg,
+            sessions,
+            self.weights.get("tok_emb")?,
+            self.weights.get("pos_emb")?,
+            |l, bucket, x, pos, kv| {
+                let bw = self.weights.block(l)?;
+                let mut args: Vec<&Tensor> = vec![x, pos];
+                args.extend(bw.flat());
+                let (mut fresh, carried) = self.runtime.run_carry(
+                    self.name(),
+                    &format!("block_dec.b{bucket}"),
+                    &args,
+                    kv,
+                )?;
+                Ok((fresh.remove(0), carried))
+            },
+            None,
+            self.weights.get("lnf.g")?,
+            lnf_b,
+        )
+    }
 }
 
 /// Quantized model runner (the `qOut` stream + quantized evals/serving).
@@ -177,8 +435,10 @@ impl<'rt, 'q> QuantModel<'rt, 'q> {
         runtime.manifest.verify_model(&model.config)?;
         // a checkpoint quantized against differently-exported artifacts
         // (e.g. re-exported with a narrower --groups list) must fail here,
-        // not at graph lookup inside the first served batch
+        // not at graph lookup inside the first served batch; likewise a
+        // drifted decode cache record
         runtime.validate_grain(&model.scheme.group_tag())?;
+        runtime.manifest.verify_decode(&model.config)?;
         Ok(QuantModel { runtime, model, act_bits: None })
     }
 
@@ -217,23 +477,8 @@ impl<'rt, 'q> QuantModel<'rt, 'q> {
         let bucket = self.runtime.manifest.bucket_for(b)?;
         let padded = pad_batch(&xq, bucket)?;
         let blk = &self.model.blocks[layer];
-
-        let cqkv = blk.qkv.codes_tensor();
-        let cproj = blk.proj.codes_tensor();
-        let cfc1 = blk.fc1.codes_tensor();
-        let cfc2 = blk.fc2.codes_tensor();
-
-        let mut args: Vec<&Tensor> = vec![&padded, &blk.ln1_g];
-        if let Some(b1) = &blk.ln1_b {
-            args.push(b1);
-        }
-        args.extend([&cqkv, &blk.qkv.scales, &blk.qkv.bias,
-                     &cproj, &blk.proj.scales, &blk.proj.bias, &blk.ln2_g]);
-        if let Some(b2) = &blk.ln2_b {
-            args.push(b2);
-        }
-        args.extend([&cfc1, &blk.fc1.scales, &blk.fc1.bias,
-                     &cfc2, &blk.fc2.scales, &blk.fc2.bias]);
+        let mut args: Vec<&Tensor> = vec![&padded];
+        extend_qblock_args(blk, &mut args);
 
         let outs = self.runtime.run(
             self.name(),
@@ -261,6 +506,56 @@ impl<'rt, 'q> QuantModel<'rt, 'q> {
             .run(self.name(), &format!("head.b{bucket}"), &args)?;
         Ok(slice_batch(outs.into_iter().next().unwrap(), b))
     }
+
+    /// One quantized prefill block forward (with optional activation
+    /// fake-quant): [`Self::block_fwd_q`] plus the K/V cache tensors.
+    pub fn block_fwd_q_kv(&self, layer: usize, x: &Tensor) -> Result<(Tensor, Tensor, Tensor)> {
+        let xq = match self.act_bits {
+            Some(bits) => fake_quant_per_row(x, bits)?,
+            None => x.clone(),
+        };
+        let b = xq.shape[0];
+        let bucket = self.runtime.manifest.bucket_for(b)?;
+        let padded = pad_batch(&xq, bucket)?;
+        let blk = &self.model.blocks[layer];
+        let mut args: Vec<&Tensor> = vec![&padded];
+        extend_qblock_args(blk, &mut args);
+
+        let outs = self.runtime.run(
+            self.name(),
+            &format!("block_fwd_q_kv.{}.b{bucket}", self.group_tag()),
+            &args,
+        )?;
+        let mut it = outs.into_iter();
+        let (x2, k, v) = (it.next().unwrap(), it.next().unwrap(), it.next().unwrap());
+        Ok((slice_batch(x2, b), slice_batch(k, b), slice_batch(v, b)))
+    }
+
+    /// One quantized one-token decode step over the stacked caches.
+    fn block_dec_q(
+        &self,
+        layer: usize,
+        bucket: usize,
+        x: &Tensor,
+        pos: &Tensor,
+        kv: Vec<Tensor>,
+    ) -> Result<(Tensor, Vec<Tensor>)> {
+        let xq = match self.act_bits {
+            Some(bits) => fake_quant_per_row(x, bits)?,
+            None => x.clone(),
+        };
+        let blk = &self.model.blocks[layer];
+        let mut args: Vec<&Tensor> = vec![&xq, pos];
+        extend_qblock_args(blk, &mut args);
+
+        let (mut fresh, carried) = self.runtime.run_carry(
+            self.name(),
+            &format!("block_dec_q.{}.b{bucket}", self.group_tag()),
+            &args,
+            kv,
+        )?;
+        Ok((fresh.remove(0), carried))
+    }
 }
 
 impl LanguageModel for QuantModel<'_, '_> {
@@ -282,6 +577,41 @@ impl LanguageModel for QuantModel<'_, '_> {
 
     fn warm_buckets(&self) -> Vec<usize> {
         self.runtime.manifest.buckets.clone()
+    }
+
+    fn supports_decode(&self) -> bool {
+        self.runtime.manifest.decode_for(&self.model.config.name).is_some()
+    }
+
+    fn prefill(&self, prompts: &[Vec<i32>]) -> Result<Vec<DecodeSession>> {
+        if !self.supports_decode() {
+            return decode::recompute_prefill(self, prompts);
+        }
+        run_prefill(
+            &self.model.config,
+            prompts,
+            |t| self.embed(t),
+            |l, x| self.block_fwd_q_kv(l, x),
+            |x| self.head(x),
+        )
+    }
+
+    fn decode_step(&self, sessions: &mut [&mut DecodeSession]) -> Result<()> {
+        if !self.supports_decode() || !all_layered(sessions) {
+            return decode::recompute_decode_step(self, sessions);
+        }
+        run_decode_step(
+            self.runtime,
+            self.name(),
+            &self.model.config,
+            sessions,
+            &self.model.tok_emb,
+            &self.model.pos_emb,
+            |l, bucket, x, pos, kv| self.block_dec_q(l, bucket, x, pos, kv),
+            self.act_bits,
+            &self.model.lnf_g,
+            self.model.lnf_b.as_ref(),
+        )
     }
 }
 

@@ -136,14 +136,13 @@ pub fn validate_scheme_artifacts(
 
 fn to_quant_linear(qw: QuantizedWeight, bias: Tensor, scheme: &QuantScheme) -> Result<QuantLinear> {
     let bits = scheme.pack_bits()?;
-    Ok(QuantLinear {
-        k: qw.k,
-        n: qw.n,
-        packed: pack_codes(&qw.codes, bits)
-            .map_err(|e| Error::Quant(format!("pack: {e}")))?,
-        scales: Tensor::f32(&[qw.g, qw.n], qw.scales),
+    Ok(QuantLinear::new(
+        qw.k,
+        qw.n,
+        pack_codes(&qw.codes, bits).map_err(|e| Error::Quant(format!("pack: {e}")))?,
+        Tensor::f32(&[qw.g, qw.n], qw.scales),
         bias,
-    })
+    ))
 }
 
 /// Run Algorithm 1: quantize `weights` with `cfg` against `calib`,

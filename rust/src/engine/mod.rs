@@ -3,9 +3,26 @@
 //!
 //! One [`Engine`] hosts any number of named quantized (or float) models —
 //! e.g. a `w2` fleet with a `w4` fallback, the natural companion to the
-//! mixed-precision planner — behind a single deadline-aware batching
-//! scheduler with per-request cancellation, graceful shutdown, executable
-//! warm-up, and an LRU response cache for deterministic greedy decoding.
+//! mixed-precision planner — behind a single deadline-aware
+//! **continuous-batching** scheduler with per-request cancellation,
+//! graceful shutdown, executable warm-up, and an LRU response cache for
+//! deterministic greedy decoding.
+//!
+//! # Continuous batching
+//!
+//! Requests occupy per-lane *slots* as [`crate::eval::DecodeSession`]s:
+//! the scheduler prefills newcomers into free slots, advances all live
+//! sessions of a lane by one token per turn (`decode_step`), and retires
+//! each session the moment it reaches its target — so a short request
+//! never waits for a long batch-mate, and a newly arrived request joins
+//! the running batch between steps instead of waiting for the next
+//! dispatch window.  On models whose artifacts carry the manifest's
+//! `decode` record the step is O(1) over per-request KV caches; on
+//! anything else it falls back to full-context recompute (same tokens,
+//! just O(S) per step).  Each request samples from its own seeded stream,
+//! so any mix of [`SampleConfig`]s shares a batch and results never depend
+//! on batch composition.  [`EngineStats`] splits prefill vs decode token
+//! counts and wall time (`prefill_tokens` / `decode_tokens`).
 //!
 //! # Lifecycle
 //!
@@ -75,11 +92,13 @@ use scheduler::{Lane, Msg, Pending, ReplyTo, Scheduler};
 /// [`crate::serve::ServeConfig`]).
 #[derive(Debug, Clone, Copy)]
 pub struct ModelTuning {
-    /// largest dispatch group; oversized groups are chunked to the model's
-    /// [`LanguageModel::max_batch`] bucket anyway
+    /// number of continuous-batching slots (live sessions) the lane may
+    /// hold; graph calls are additionally chunked to the model's
+    /// [`LanguageModel::max_batch`] bucket
     pub max_batch: usize,
-    /// how long the oldest rider may wait for stragglers before its batch
-    /// dispatches
+    /// how long the oldest rider may wait for stragglers before an *idle*
+    /// lane dispatches; a streaming lane admits newcomers immediately
+    /// between decode steps
     pub batch_window: Duration,
 }
 
@@ -153,10 +172,11 @@ pub struct EngineResponse {
     pub prompt_len: usize,
     /// submit-to-dispatch wait
     pub queue_micros: u128,
-    /// generation wall time of the batch this request rode in (0 for
-    /// cache hits)
+    /// summed wall time of every prefill/decode call this request rode
+    /// (0 for cache hits)
     pub gen_micros: u128,
-    /// riders in that batch (0 for cache hits)
+    /// largest batch this request shared — prefill chunk or decode step
+    /// (0 for cache hits)
     pub batch_size: usize,
     /// answered from the greedy response cache
     pub cached: bool,
@@ -467,9 +487,11 @@ impl ServableModel {
         let runtime = Runtime::new(artifacts)?;
         let mcfg = ModelConfig::builtin(model_name)?;
         let model = QuantizedModel::load(mcfg, checkpoint)?;
-        // surface artifact/grain mismatches now, not inside the first batch
+        // surface artifact/grain/decode mismatches now, not inside the
+        // first batch
         runtime.manifest.verify_model(&model.config)?;
         runtime.validate_grain(&model.scheme.group_tag())?;
+        runtime.manifest.verify_decode(&model.config)?;
         Ok(ServableModel { runtime, model, act_bits: None })
     }
 
@@ -503,6 +525,18 @@ impl LanguageModel for ServableModel {
 
     fn warm_buckets(&self) -> Vec<usize> {
         self.runtime.manifest.buckets.clone()
+    }
+
+    fn supports_decode(&self) -> bool {
+        self.runner().supports_decode()
+    }
+
+    fn prefill(&self, prompts: &[Vec<i32>]) -> Result<Vec<crate::eval::DecodeSession>> {
+        self.runner().prefill(prompts)
+    }
+
+    fn decode_step(&self, sessions: &mut [&mut crate::eval::DecodeSession]) -> Result<()> {
+        self.runner().decode_step(sessions)
     }
 }
 

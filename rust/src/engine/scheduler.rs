@@ -1,6 +1,7 @@
-//! The engine's batching scheduler: fair-share round-robin across model
-//! lanes, oldest-deadline-first within a lane, bucket-aware chunking, and
-//! the greedy response cache.
+//! The engine's continuous-batching scheduler: fair-share round-robin
+//! across model lanes, oldest-deadline-first admission within a lane,
+//! bucket-aware chunking, per-request decode sessions, and the greedy
+//! response cache.
 //!
 //! The scheduler is deliberately thread-agnostic: it borrows its models as
 //! plain `&dyn LanguageModel` and runs wherever it is built.  The owned
@@ -9,34 +10,41 @@
 //! core on the caller's thread (the XLA-backed runners are not `Send`, so
 //! they can never cross a thread boundary themselves).
 //!
-//! Scheduling policy, in order:
-//! 1. a lane is *ready* when its queue holds a full batch, when its oldest
-//!    rider has waited at least `batch_window`, when a queued deadline'd
-//!    request reaches its dispatch-due point (half its deadline budget —
-//!    the other half is reserved for generation, so tight deadlines are
-//!    served in time without collapsing SLO traffic to batch-of-1), or
-//!    unconditionally while draining for shutdown;
-//! 2. ready lanes are served round-robin (one dispatch per turn) so a
-//!    backlogged model cannot starve its neighbours;
-//! 3. within a lane, requests are ordered oldest-deadline-first; a
-//!    no-deadline request ages into an effective deadline of 100 batch
-//!    windows (clamped to [1s, 1h]) so sustained SLO traffic cannot
-//!    starve FIFO riders, and pure FIFO traffic keeps submission order;
-//! 4. a dispatch group is capped at the lane's `max_batch` and split into
-//!    [`LanguageModel::max_batch`]-sized chunks (the largest exported AOT
-//!    bucket), so an over-eager tuning degrades to more batches instead of
-//!    failing riders;
-//! 5. queue time is measured from submit to the *group's* dispatch instant
-//!    (`t_drain`), so riders of later chunks are not charged earlier
-//!    chunks' generation time, with saturating math throughout.
+//! # Continuous batching
+//!
+//! Generation is no longer dispatch-whole-batch-and-wait: a lane owns up to
+//! `max_batch` *slots*, each holding one request's [`DecodeSession`] (its
+//! token history, pending logits, and — on runners with exported decode
+//! graphs — its per-layer KV cache).  The loop interleaves three moves:
+//!
+//! 1. **Admit**: queued requests enter free slots and are *prefilled*
+//!    (chunked to the model's largest exported bucket).  An idle lane keeps
+//!    the classic readiness rules — full batch, closed batch window, or a
+//!    deadline's dispatch-due point — but a lane that is already streaming
+//!    admits immediately between steps: newcomers ride the running batch
+//!    instead of waiting out a window.
+//! 2. **Step**: one `decode_step` per scheduler turn advances *all* of a
+//!    lane's live sessions by one token (again chunked to the model
+//!    bucket); lanes with live sessions take turns round-robin, so a
+//!    backlogged model cannot starve its neighbours.
+//! 3. **Retire**: a session that reaches its target (or is cancelled, or
+//!    expires) leaves its slot *immediately* — the freed slot is available
+//!    to the next admission, not at end-of-batch.
+//!
+//! Each request samples from its own seed's stream, so any mix of sample
+//! configs rides one step batch and results are reproducible regardless of
+//! who shares the batch.  Queue time is measured from submit to the
+//! admission group's dispatch instant with saturating math (riders of
+//! later prefill chunks are not charged earlier chunks' generation time).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
+use crate::calib::rng::SplitMix64;
 use crate::error::{Error, Result};
-use crate::eval::generate::{generate, SampleConfig};
-use crate::eval::LanguageModel;
+use crate::eval::generate::{sample_next, SampleConfig};
+use crate::eval::{DecodeSession, LanguageModel};
 
 use super::cache::ResponseCache;
 use super::stats::{EngineStats, ModelStats};
@@ -137,27 +145,114 @@ fn dispatch_due(p: &Pending) -> Option<Instant> {
     })
 }
 
-/// One registered model and its private queue.
+/// Outcome of checking a rider's cancel flag and deadline.
+enum Triage {
+    Live,
+    Cancelled,
+    Expired,
+}
+
+/// Shared rider triage — every place a request can leave the system early
+/// (routing, sweeps, dispatch, per-chunk prefill) runs the same check.
+fn triage(cancel: &AtomicBool, deadline: Option<Instant>, now: Instant) -> Triage {
+    if cancel.load(Ordering::Relaxed) {
+        return Triage::Cancelled;
+    }
+    if matches!(deadline, Some(d) if now > d) {
+        return Triage::Expired;
+    }
+    Triage::Live
+}
+
+/// Count and answer one expired rider; `stage` names where the expiry was
+/// caught so the error is diagnosable.
+fn answer_expired(
+    stats: &mut ModelStats,
+    lane_name: &str,
+    stage: &str,
+    now: Instant,
+    enqueued: Instant,
+    reply: ReplyTo,
+) {
+    stats.deadline_missed += 1;
+    reply.err(Error::Serve(format!(
+        "deadline exceeded {stage} on model `{lane_name}` (queued {:?})",
+        now.saturating_duration_since(enqueued)
+    )));
+}
+
+/// One occupied cache slot: a live request mid-generation.
+struct Slot {
+    session: DecodeSession,
+    prompt_len: usize,
+    max_new: usize,
+    /// final sequence length: (prompt + max_new) clamped to the context
+    target: usize,
+    sample: SampleConfig,
+    /// per-request stream seeded from the request's own seed — sessions
+    /// sample independently, so batch composition never changes a result
+    rng: SplitMix64,
+    enqueued: Instant,
+    deadline: Option<Instant>,
+    reply: ReplyTo,
+    cancel: Arc<AtomicBool>,
+    /// fixed at admission (submit → group dispatch instant)
+    queue_micros: u128,
+    /// accumulated wall time of every prefill/decode call this request rode
+    gen_micros: u128,
+    /// largest batch this request shared (prefill chunk or decode step)
+    batch_seen: usize,
+    /// a generation call this slot rode failed; answered at retirement
+    failed: Option<String>,
+}
+
+impl Slot {
+    /// Sample the next token from the pending logits and append it.
+    fn advance(&mut self) {
+        let tok = sample_next(&self.session, self.prompt_len, &self.sample, &mut self.rng);
+        self.session.tokens.push(tok);
+    }
+
+    fn done(&self) -> bool {
+        self.session.tokens.len() >= self.target
+    }
+}
+
+/// One registered model, its waiting queue, and its occupied slots.
 pub(crate) struct Lane<'m> {
     pub(crate) name: String,
     pub(crate) model: &'m dyn LanguageModel,
     pub(crate) tuning: ModelTuning,
     queue: Vec<Pending>,
+    active: Vec<Slot>,
     pub(crate) stats: ModelStats,
 }
 
 impl<'m> Lane<'m> {
     pub(crate) fn new(name: String, model: &'m dyn LanguageModel, tuning: ModelTuning) -> Self {
-        Lane { name, model, tuning, queue: Vec::new(), stats: ModelStats::default() }
+        Lane {
+            name,
+            model,
+            tuning,
+            queue: Vec::new(),
+            active: Vec::new(),
+            stats: ModelStats::default(),
+        }
+    }
+
+    /// Largest chunk one graph call may carry (the model's biggest
+    /// exported bucket; unbounded models take everything at once).
+    fn chunk_cap(&self) -> usize {
+        self.model.max_batch().unwrap_or(usize::MAX).max(1)
     }
 }
 
-/// The multi-lane batching scheduler.
+/// The multi-lane continuous-batching scheduler.
 pub(crate) struct Scheduler<'m> {
     lanes: Vec<Lane<'m>>,
     rx: mpsc::Receiver<Msg>,
     cache: ResponseCache,
-    /// round-robin cursor over lanes
+    /// round-robin cursor over lanes with live sessions
     rr: usize,
     /// shutdown requested (or every sender dropped): serve what is queued
     /// without waiting for batch windows, then exit
@@ -171,7 +266,9 @@ impl<'m> Scheduler<'m> {
     }
 
     /// Run one priming batch per model/bucket so the first real riders do
-    /// not pay graph compile + dispatch latency.
+    /// not pay graph compile + dispatch latency.  Decode-capable models
+    /// generate one extra token so the `embed_dec`/`block_dec`/`head_dec`
+    /// step graphs compile during warm-up too, not under the first rider.
     pub(crate) fn warm_up(&mut self) -> Result<()> {
         let sample = SampleConfig { temperature: 0.0, stochastic_prefix: 0, seed: 0 };
         for lane in &mut self.lanes {
@@ -181,12 +278,17 @@ impl<'m> Scheduler<'m> {
             buckets.dedup();
             let cfg = lane.model.config();
             let tok = if cfg.vocab > 1 { 1 } else { 0 };
-            let target = 2.min(cfg.seq);
+            let depth = if lane.model.supports_decode() { 3 } else { 2 };
+            let target = depth.min(cfg.seq);
             for b in buckets {
                 let prompts = vec![vec![tok]; b];
-                generate(lane.model, &prompts, target, &sample).map_err(|e| {
-                    Error::Serve(format!("warm-up of model `{}` (bucket {b}) failed: {e}", lane.name))
-                })?;
+                crate::eval::generate::generate(lane.model, &prompts, target, &sample)
+                    .map_err(|e| {
+                        Error::Serve(format!(
+                            "warm-up of model `{}` (bucket {b}) failed: {e}",
+                            lane.name
+                        ))
+                    })?;
                 lane.stats.warmup_batches += 1;
             }
         }
@@ -194,7 +296,7 @@ impl<'m> Scheduler<'m> {
     }
 
     /// Serve until shutdown (a [`Msg::Shutdown`] or every sender dropping),
-    /// then drain the queues and return the final stats.
+    /// then drain the queues and live sessions and return the final stats.
     pub(crate) fn run(mut self) -> EngineStats {
         loop {
             // ingest everything already waiting in the channel
@@ -209,14 +311,26 @@ impl<'m> Scheduler<'m> {
                     }
                 }
             }
-            // drop cancellations, expire deadlines
+            // drop cancellations, expire deadlines (queued *and* live)
             self.sweep();
 
-            if let Some(li) = self.next_ready_lane() {
-                self.dispatch(li);
+            // admit queued requests into free slots on every lane, then
+            // advance one lane's live sessions by one token
+            let mut worked = false;
+            for li in 0..self.lanes.len() {
+                worked |= self.admit_ready(li);
+            }
+            if let Some(li) = self.next_active_lane() {
+                self.step(li);
+                worked = true;
+            }
+            if worked {
                 continue;
             }
-            if self.draining && self.lanes.iter().all(|l| l.queue.is_empty()) {
+
+            if self.draining
+                && self.lanes.iter().all(|l| l.queue.is_empty() && l.active.is_empty())
+            {
                 // answer any last-gasp submissions still in the channel
                 loop {
                     match self.rx.try_recv() {
@@ -269,11 +383,23 @@ impl<'m> Scheduler<'m> {
             p.reply.err(Error::Serve("request routed to an unknown model lane".into()));
             return;
         }
-        if p.cancel.load(Ordering::Relaxed) {
-            self.lanes[p.lane].stats.cancelled += 1;
-            return;
-        }
         let seq_len = self.lanes[p.lane].model.config().seq;
+        let now = Instant::now();
+        match triage(&p.cancel, p.deadline, now) {
+            Triage::Cancelled => {
+                self.lanes[p.lane].stats.cancelled += 1;
+                return;
+            }
+            Triage::Expired => {
+                let lane = &mut self.lanes[p.lane];
+                answer_expired(
+                    &mut lane.stats, &lane.name, "before scheduling",
+                    now, p.enqueued, p.reply,
+                );
+                return;
+            }
+            Triage::Live => {}
+        }
         if p.prompt.is_empty() || p.prompt.len() > seq_len {
             self.lanes[p.lane].stats.rejected += 1;
             p.reply.err(Error::Serve(format!(
@@ -282,18 +408,6 @@ impl<'m> Scheduler<'m> {
                 self.lanes[p.lane].name
             )));
             return;
-        }
-        let now = Instant::now();
-        if let Some(d) = p.deadline {
-            if now > d {
-                self.lanes[p.lane].stats.deadline_missed += 1;
-                p.reply.err(Error::Serve(format!(
-                    "deadline exceeded before scheduling on model `{}` (queued {:?})",
-                    self.lanes[p.lane].name,
-                    now.saturating_duration_since(p.enqueued)
-                )));
-                return;
-            }
         }
         if self.cache.enabled() && p.sample.temperature == 0.0 {
             let key = (p.lane, p.prompt.clone(), p.max_new);
@@ -314,9 +428,9 @@ impl<'m> Scheduler<'m> {
                 });
                 return;
             }
-            // the miss is counted at generation time (run_batch), so a
-            // request that is later cancelled or expires doesn't skew the
-            // hit rate of answered traffic
+            // the miss is counted at retirement, so a request that is
+            // later cancelled or expires doesn't skew the hit rate of
+            // answered traffic
         }
         let lane = &mut self.lanes[p.lane];
         let window = lane.tuning.batch_window;
@@ -325,9 +439,9 @@ impl<'m> Scheduler<'m> {
         lane.queue.insert(pos, p);
     }
 
-    /// Drop cancelled requests and answer expired deadlines with an error —
-    /// a cancelled ticket never consumes a batch slot, and a deadline miss
-    /// is reported, not silently dropped.
+    /// Drop cancelled requests and answer expired deadlines with an error.
+    /// Live sessions are swept too: a dropped ticket or mid-generation
+    /// expiry frees its cache slot *now*, not at end of generation.
     fn sweep(&mut self) {
         let now = Instant::now();
         for lane in &mut self.lanes {
@@ -337,56 +451,234 @@ impl<'m> Scheduler<'m> {
                 p.cancel.load(Ordering::Relaxed)
                     || matches!(p.deadline, Some(d) if now > d)
             });
-            if !dirty {
-                continue;
-            }
-            let queue = std::mem::take(&mut lane.queue);
-            for p in queue {
-                if p.cancel.load(Ordering::Relaxed) {
-                    lane.stats.cancelled += 1;
-                    continue;
-                }
-                if let Some(d) = p.deadline {
-                    if now > d {
-                        lane.stats.deadline_missed += 1;
-                        p.reply.err(Error::Serve(format!(
-                            "deadline exceeded after {:?} in `{}` queue",
-                            now.saturating_duration_since(p.enqueued),
-                            lane.name
-                        )));
-                        continue;
+            if dirty {
+                let queue = std::mem::take(&mut lane.queue);
+                for p in queue {
+                    match triage(&p.cancel, p.deadline, now) {
+                        Triage::Cancelled => lane.stats.cancelled += 1,
+                        Triage::Expired => answer_expired(
+                            &mut lane.stats, &lane.name, "while queued",
+                            now, p.enqueued, p.reply,
+                        ),
+                        Triage::Live => lane.queue.push(p),
                     }
                 }
-                lane.queue.push(p);
+            }
+
+            let dirty = lane.active.iter().any(|s| {
+                s.cancel.load(Ordering::Relaxed)
+                    || matches!(s.deadline, Some(d) if now > d)
+            });
+            if dirty {
+                let active = std::mem::take(&mut lane.active);
+                for slot in active {
+                    match triage(&slot.cancel, slot.deadline, now) {
+                        Triage::Cancelled => lane.stats.cancelled += 1,
+                        Triage::Expired => answer_expired(
+                            &mut lane.stats, &lane.name, "mid-generation",
+                            now, slot.enqueued, slot.reply,
+                        ),
+                        Triage::Live => lane.active.push(slot),
+                    }
+                }
             }
         }
     }
 
-    /// Next lane with a dispatchable queue, fair-share round-robin.
-    fn next_ready_lane(&mut self) -> Option<usize> {
+    /// Admit queued requests into this lane's free slots.  An idle lane
+    /// honours the classic readiness rules; a streaming lane admits
+    /// immediately between steps (continuous batching).  Returns whether a
+    /// dispatch happened.
+    fn admit_ready(&mut self, li: usize) -> bool {
+        let draining = self.draining;
         let now = Instant::now();
+        let take = {
+            let lane = &self.lanes[li];
+            if lane.queue.is_empty() {
+                return false;
+            }
+            let free = lane.tuning.max_batch.saturating_sub(lane.active.len());
+            if free == 0 {
+                return false;
+            }
+            let ready = if draining || !lane.active.is_empty() {
+                true
+            } else {
+                let oldest = lane.queue.iter().map(|p| p.enqueued).min().unwrap();
+                let window_due = oldest.checked_add(lane.tuning.batch_window);
+                // a queued deadline pulls the lane's due instant forward
+                // to that request's dispatch-due point (half its budget),
+                // so a deadline shorter than the batch window is served in
+                // time without collapsing SLO traffic to batch-of-1
+                let earliest_due = lane.queue.iter().filter_map(dispatch_due).min();
+                let due = match (window_due, earliest_due) {
+                    (Some(w), Some(u)) => Some(w.min(u)),
+                    (w, u) => w.or(u),
+                };
+                lane.queue.len() >= lane.tuning.max_batch
+                    || matches!(due, Some(t) if now >= t)
+            };
+            if !ready {
+                return false;
+            }
+            free.min(lane.queue.len())
+        };
+        let group: Vec<Pending> = self.lanes[li].queue.drain(..take).collect();
+        self.admit_group(li, group);
+        true
+    }
+
+    /// Admit one dispatch group: answer degenerate requests, then prefill
+    /// the rest in bucket-sized chunks.  All riders share the group's
+    /// dispatch instant for queue-time accounting.
+    fn admit_group(&mut self, li: usize, group: Vec<Pending>) {
+        let t_drain = Instant::now();
+        let seq = self.lanes[li].model.config().seq;
+        let chunk_cap = self.lanes[li].chunk_cap();
+        let mut pend: Vec<Pending> = Vec::with_capacity(group.len());
+        for p in group {
+            // re-checked at dispatch: a rider may have been cancelled or
+            // expired after the queue sweep of this iteration
+            match triage(&p.cancel, p.deadline, t_drain) {
+                Triage::Cancelled => {
+                    self.lanes[li].stats.cancelled += 1;
+                    continue;
+                }
+                Triage::Expired => {
+                    let lane = &mut self.lanes[li];
+                    answer_expired(
+                        &mut lane.stats, &lane.name, "at dispatch",
+                        t_drain, p.enqueued, p.reply,
+                    );
+                    continue;
+                }
+                Triage::Live => {}
+            }
+            let target = (p.prompt.len() + p.max_new).min(seq);
+            if target <= p.prompt.len() {
+                // nothing to generate: answer with the (possibly clamped)
+                // prompt without burning a prefill slot
+                let queue_micros = t_drain.saturating_duration_since(p.enqueued).as_micros();
+                let lane = &mut self.lanes[li];
+                lane.stats.served += 1;
+                lane.stats.total_queue_micros += queue_micros;
+                let prompt_len = p.prompt.len();
+                p.reply.ok(EngineResponse {
+                    model: lane.name.clone(),
+                    prompt_len,
+                    tokens: p.prompt[..target].to_vec(),
+                    queue_micros,
+                    gen_micros: 0,
+                    batch_size: 0,
+                    cached: false,
+                });
+                continue;
+            }
+            pend.push(p);
+        }
+        while !pend.is_empty() {
+            let rest = if pend.len() > chunk_cap {
+                pend.split_off(chunk_cap)
+            } else {
+                Vec::new()
+            };
+            let chunk = std::mem::replace(&mut pend, rest);
+            self.prefill_chunk(li, chunk, t_drain);
+        }
+    }
+
+    /// Prefill one chunk of admitted requests into live slots: one batched
+    /// prefill call, first token sampled from its logits; requests already
+    /// satisfied retire immediately, the rest occupy slots for stepping.
+    fn prefill_chunk(&mut self, li: usize, chunk: Vec<Pending>, t_drain: Instant) {
+        // deadlines and cancellations are re-checked per chunk: a rider of
+        // a late chunk may have expired while earlier chunks of the same
+        // dispatch group were prefilling, and must get the deadline error,
+        // not a late Ok (nor consume prefill compute after cancelling)
+        let now = Instant::now();
+        let mut live = Vec::with_capacity(chunk.len());
+        {
+            let lane = &mut self.lanes[li];
+            for p in chunk {
+                match triage(&p.cancel, p.deadline, now) {
+                    Triage::Cancelled => lane.stats.cancelled += 1,
+                    Triage::Expired => answer_expired(
+                        &mut lane.stats, &lane.name, "before generation",
+                        now, p.enqueued, p.reply,
+                    ),
+                    Triage::Live => live.push(p),
+                }
+            }
+        }
+        if live.is_empty() {
+            return;
+        }
+        let chunk = live;
+        let bs = chunk.len();
+        let prompts: Vec<Vec<i32>> = chunk.iter().map(|p| p.prompt.clone()).collect();
+        let model = self.lanes[li].model;
+        let seq = model.config().seq;
+        let t0 = Instant::now();
+        let result = model.prefill(&prompts);
+        let gen = t0.elapsed().as_micros();
+        match result {
+            Ok(sessions) => {
+                {
+                    let stats = &mut self.lanes[li].stats;
+                    stats.batches += 1;
+                    stats.total_gen_micros += gen;
+                    stats.total_prefill_micros += gen;
+                    stats.prefill_tokens +=
+                        prompts.iter().map(|p| p.len() as u128).sum::<u128>();
+                    stats.max_batch_seen = stats.max_batch_seen.max(bs);
+                }
+                for (p, session) in chunk.into_iter().zip(sessions) {
+                    let mut slot = Slot {
+                        prompt_len: p.prompt.len(),
+                        max_new: p.max_new,
+                        target: (p.prompt.len() + p.max_new).min(seq),
+                        sample: p.sample,
+                        rng: SplitMix64::new(p.sample.seed),
+                        enqueued: p.enqueued,
+                        deadline: p.deadline,
+                        reply: p.reply,
+                        cancel: p.cancel,
+                        queue_micros: t_drain
+                            .saturating_duration_since(p.enqueued)
+                            .as_micros(),
+                        gen_micros: gen,
+                        batch_seen: bs,
+                        failed: None,
+                        session,
+                    };
+                    slot.advance();
+                    if slot.done() {
+                        self.finish_slot(li, slot);
+                    } else {
+                        self.lanes[li].active.push(slot);
+                    }
+                }
+            }
+            Err(e) => {
+                let lane = &mut self.lanes[li];
+                let msg = format!("generation failed on model `{}`: {e}", lane.name);
+                if lane.stats.first_error.is_none() {
+                    lane.stats.first_error = Some(msg.clone());
+                }
+                for p in chunk {
+                    lane.stats.failed += 1;
+                    p.reply.err(Error::Serve(msg.clone()));
+                }
+            }
+        }
+    }
+
+    /// Next lane with live sessions, fair-share round-robin.
+    fn next_active_lane(&mut self) -> Option<usize> {
         let n = self.lanes.len();
         for off in 0..n {
             let li = (self.rr + off) % n;
-            let lane = &self.lanes[li];
-            if lane.queue.is_empty() {
-                continue;
-            }
-            let oldest = lane.queue.iter().map(|p| p.enqueued).min().unwrap();
-            let window_due = oldest.checked_add(lane.tuning.batch_window);
-            // a queued deadline pulls the lane's due instant forward to
-            // that request's dispatch-due point (half its budget), so a
-            // deadline shorter than the batch window is served in time
-            // without collapsing SLO traffic to batch-of-1
-            let earliest_due = lane.queue.iter().filter_map(dispatch_due).min();
-            let due = match (window_due, earliest_due) {
-                (Some(w), Some(u)) => Some(w.min(u)),
-                (w, u) => w.or(u),
-            };
-            let ready = self.draining
-                || lane.queue.len() >= lane.tuning.max_batch
-                || matches!(due, Some(t) if now >= t);
-            if ready {
+            if !self.lanes[li].active.is_empty() {
                 self.rr = (li + 1) % n;
                 return Some(li);
             }
@@ -394,8 +686,108 @@ impl<'m> Scheduler<'m> {
         None
     }
 
+    /// Advance every live session of a lane by one token (one decode step,
+    /// chunked to the model bucket), then retire finished rows.
+    fn step(&mut self, li: usize) {
+        let model = self.lanes[li].model;
+        let cap = self.lanes[li].chunk_cap();
+        let n = self.lanes[li].active.len();
+        let mut start = 0;
+        while start < n {
+            let end = start.saturating_add(cap).min(n);
+            let bs = end - start;
+            let t0 = Instant::now();
+            let result = {
+                let chunk = &mut self.lanes[li].active[start..end];
+                let mut refs: Vec<&mut DecodeSession> =
+                    chunk.iter_mut().map(|s| &mut s.session).collect();
+                model.decode_step(&mut refs)
+            };
+            let dt = t0.elapsed().as_micros();
+            let lane = &mut self.lanes[li];
+            match result {
+                Ok(()) => {
+                    lane.stats.decode_steps += 1;
+                    lane.stats.total_gen_micros += dt;
+                    lane.stats.total_decode_micros += dt;
+                    lane.stats.decode_tokens += bs as u128;
+                    lane.stats.max_batch_seen = lane.stats.max_batch_seen.max(bs);
+                    for slot in &mut lane.active[start..end] {
+                        slot.gen_micros += dt;
+                        slot.batch_seen = slot.batch_seen.max(bs);
+                        slot.advance();
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("decode step failed on model `{}`: {e}", lane.name);
+                    if lane.stats.first_error.is_none() {
+                        lane.stats.first_error = Some(msg.clone());
+                    }
+                    for slot in &mut lane.active[start..end] {
+                        slot.failed = Some(msg.clone());
+                    }
+                }
+            }
+            start = end;
+        }
+        self.retire(li);
+    }
+
+    /// Move finished/failed sessions out of their slots and answer them.
+    fn retire(&mut self, li: usize) {
+        let slots = std::mem::take(&mut self.lanes[li].active);
+        for mut slot in slots {
+            if let Some(msg) = slot.failed.take() {
+                self.lanes[li].stats.failed += 1;
+                slot.reply.err(Error::Serve(msg));
+                continue;
+            }
+            if slot.done() {
+                self.finish_slot(li, slot);
+            } else {
+                self.lanes[li].active.push(slot);
+            }
+        }
+    }
+
+    /// Answer one completed session and (for greedy traffic) feed the
+    /// response cache.
+    fn finish_slot(&mut self, li: usize, slot: Slot) {
+        let Slot {
+            session,
+            prompt_len,
+            max_new,
+            sample,
+            reply,
+            queue_micros,
+            gen_micros,
+            batch_seen,
+            ..
+        } = slot;
+        let tokens = session.tokens;
+        if self.cache.enabled() && sample.temperature == 0.0 {
+            self.lanes[li].stats.cache_misses += 1;
+            self.cache
+                .insert((li, tokens[..prompt_len].to_vec(), max_new), tokens.clone());
+        }
+        let lane = &mut self.lanes[li];
+        lane.stats.served += 1;
+        lane.stats.total_queue_micros += queue_micros;
+        reply.ok(EngineResponse {
+            model: lane.name.clone(),
+            prompt_len,
+            tokens,
+            queue_micros,
+            gen_micros,
+            batch_size: batch_seen,
+            cached: false,
+        });
+    }
+
     /// How long the scheduler may sleep before a window closes or a
-    /// deadline expires; `None` when every queue is empty.
+    /// deadline expires; `None` when every queue is empty.  (Only
+    /// consulted when no lane has live sessions — a streaming lane never
+    /// sleeps.)
     fn next_wakeup(&self) -> Option<Duration> {
         let now = Instant::now();
         let mut earliest: Option<Instant> = None;
@@ -423,127 +815,6 @@ impl<'m> Scheduler<'m> {
             }
         }
         earliest.map(|t| t.saturating_duration_since(now))
-    }
-
-    /// Dispatch one batch group from a lane: up to `max_batch` front-of-
-    /// queue requests sharing the head's sample config (`generate` takes a
-    /// single [`SampleConfig`] per batch), chunked to the model's largest
-    /// exported bucket.
-    fn dispatch(&mut self, li: usize) {
-        let (group, chunk_cap) = {
-            let lane = &mut self.lanes[li];
-            let cap = lane.tuning.max_batch;
-            // the head always rides — guaranteed progress even for sample
-            // configs that don't equal themselves (NaN temperature); the
-            // rest of the group must share its config
-            let head = lane.queue.remove(0);
-            let head_sample = head.sample;
-            let mut group = vec![head];
-            let mut i = 0;
-            while i < lane.queue.len() && group.len() < cap {
-                if lane.queue[i].sample == head_sample {
-                    group.push(lane.queue.remove(i));
-                } else {
-                    i += 1;
-                }
-            }
-            (group, lane.model.max_batch().unwrap_or(usize::MAX).max(1))
-        };
-        let t_drain = Instant::now();
-        let mut rest = group;
-        while !rest.is_empty() {
-            let tail = if rest.len() > chunk_cap {
-                rest.split_off(chunk_cap)
-            } else {
-                Vec::new()
-            };
-            let batch = std::mem::replace(&mut rest, tail);
-            self.run_batch(li, batch, t_drain);
-        }
-    }
-
-    /// Generate one chunk and answer its riders.  A generation failure is
-    /// answered per-rider and recorded; the scheduler keeps serving.
-    fn run_batch(&mut self, li: usize, batch: Vec<Pending>, t_drain: Instant) {
-        // deadlines and cancellations are re-checked per chunk: a rider of
-        // a late chunk may have expired while earlier chunks of the same
-        // dispatch group were generating, and must get the deadline error,
-        // not a late Ok
-        let now = Instant::now();
-        let mut live = Vec::with_capacity(batch.len());
-        {
-            let lane = &mut self.lanes[li];
-            for p in batch {
-                if p.cancel.load(Ordering::Relaxed) {
-                    lane.stats.cancelled += 1;
-                    continue;
-                }
-                if matches!(p.deadline, Some(d) if now > d) {
-                    lane.stats.deadline_missed += 1;
-                    p.reply.err(Error::Serve(format!(
-                        "deadline exceeded before generation on model `{}` (queued {:?})",
-                        lane.name,
-                        now.saturating_duration_since(p.enqueued)
-                    )));
-                    continue;
-                }
-                live.push(p);
-            }
-        }
-        if live.is_empty() {
-            return;
-        }
-        let batch = live;
-        let lane = &mut self.lanes[li];
-        let seq = lane.model.config().seq;
-        let sample = batch[0].sample;
-        let prompts: Vec<Vec<i32>> = batch.iter().map(|r| r.prompt.clone()).collect();
-        let target = batch
-            .iter()
-            .map(|r| (r.prompt.len() + r.max_new).min(seq))
-            .max()
-            .unwrap();
-        let bs = batch.len();
-        let t0 = Instant::now();
-        match generate(lane.model, &prompts, target, &sample) {
-            Ok(outs) => {
-                let gen_micros = t0.elapsed().as_micros();
-                lane.stats.batches += 1;
-                lane.stats.total_gen_micros += gen_micros;
-                lane.stats.max_batch_seen = lane.stats.max_batch_seen.max(bs);
-                for (req, tokens) in batch.into_iter().zip(outs) {
-                    let want = (req.prompt.len() + req.max_new).min(seq);
-                    let queue_micros =
-                        t_drain.saturating_duration_since(req.enqueued).as_micros();
-                    let toks = tokens[..want].to_vec();
-                    if self.cache.enabled() && req.sample.temperature == 0.0 {
-                        lane.stats.cache_misses += 1;
-                        self.cache.insert((li, req.prompt.clone(), req.max_new), toks.clone());
-                    }
-                    lane.stats.served += 1;
-                    lane.stats.total_queue_micros += queue_micros;
-                    req.reply.ok(EngineResponse {
-                        model: lane.name.clone(),
-                        prompt_len: req.prompt.len(),
-                        tokens: toks,
-                        queue_micros,
-                        gen_micros,
-                        batch_size: bs,
-                        cached: false,
-                    });
-                }
-            }
-            Err(e) => {
-                let msg = format!("generation failed on model `{}`: {e}", lane.name);
-                if lane.stats.first_error.is_none() {
-                    lane.stats.first_error = Some(msg.clone());
-                }
-                for req in batch {
-                    lane.stats.failed += 1;
-                    req.reply.err(Error::Serve(msg.clone()));
-                }
-            }
-        }
     }
 
     fn finish(self) -> EngineStats {

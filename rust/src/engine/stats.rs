@@ -3,8 +3,17 @@
 //! Every request handed to the engine ends up in exactly one of the counting
 //! buckets below: `served` (answered with tokens, including cache hits),
 //! `deadline_missed` / `rejected` / `failed` (answered with an error), or
-//! `cancelled` (caller dropped the ticket before scheduling — no answer
-//! owed).  `Engine::shutdown` returns the final [`EngineStats`] snapshot.
+//! `cancelled` (caller dropped the ticket before it finished — no answer
+//! owed; under continuous batching a mid-generation cancel frees its cache
+//! slot immediately).  `Engine::shutdown` returns the final [`EngineStats`]
+//! snapshot.
+//!
+//! The prefill/decode split: `prefill_tokens` counts *prompt* tokens pushed
+//! through prefill dispatches and `decode_tokens` counts tokens produced by
+//! incremental decode steps (each request's first generated token rides its
+//! prefill and is counted by neither), with wall time split the same way —
+//! so `bench_serve` can report prompt-processing and steady-state
+//! token-generation throughput separately.
 
 use std::collections::BTreeMap;
 
@@ -13,30 +22,40 @@ use std::collections::BTreeMap;
 pub struct ModelStats {
     /// requests answered with tokens (cache hits included)
     pub served: usize,
-    /// generation calls issued (cache hits ride no batch)
+    /// prefill dispatches issued (cache hits ride no batch)
     pub batches: usize,
+    /// incremental decode steps dispatched (one per chunked step call)
+    pub decode_steps: usize,
     /// priming batches run by engine warm-up (not counted in `batches`)
     pub warmup_batches: usize,
-    /// tickets dropped/cancelled before their request was scheduled
+    /// tickets dropped/cancelled before their request finished
     pub cancelled: usize,
-    /// requests whose deadline expired in the queue (answered with
+    /// requests whose deadline expired before completion (answered with
     /// `Error::Serve`)
     pub deadline_missed: usize,
     /// malformed requests (empty prompt, prompt longer than the context)
     /// answered with `Error::Serve`
     pub rejected: usize,
-    /// requests answered with `Error::Serve` because their batch's
-    /// generation call failed
+    /// requests answered with `Error::Serve` because a generation call of
+    /// theirs failed
     pub failed: usize,
     /// greedy requests answered straight from the response cache
     pub cache_hits: usize,
     /// cacheable (greedy) requests that had to be generated
     pub cache_misses: usize,
-    /// summed generation wall time across batches
+    /// summed generation wall time across prefill + decode dispatches
     pub total_gen_micros: u128,
+    /// prefill share of `total_gen_micros`
+    pub total_prefill_micros: u128,
+    /// decode-step share of `total_gen_micros`
+    pub total_decode_micros: u128,
+    /// prompt tokens processed by prefill dispatches
+    pub prefill_tokens: u128,
+    /// tokens produced by incremental decode steps
+    pub decode_tokens: u128,
     /// summed submit-to-dispatch time across served requests
     pub total_queue_micros: u128,
-    /// largest generation batch dispatched
+    /// largest prefill or decode batch dispatched
     pub max_batch_seen: usize,
     /// first generation failure observed on this lane (riders were
     /// answered with a generic error; the root cause is preserved here —
@@ -73,6 +92,26 @@ impl ModelStats {
             0.0
         } else {
             self.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// Steady-state decode throughput: tokens produced by decode steps per
+    /// second of decode wall time (0 when no decode step ran).
+    pub fn decode_tok_per_s(&self) -> f64 {
+        if self.total_decode_micros == 0 {
+            0.0
+        } else {
+            self.decode_tokens as f64 * 1e6 / self.total_decode_micros as f64
+        }
+    }
+
+    /// Prompt-processing throughput of the prefill dispatches (0 when no
+    /// prefill ran).
+    pub fn prefill_tok_per_s(&self) -> f64 {
+        if self.total_prefill_micros == 0 {
+            0.0
+        } else {
+            self.prefill_tokens as f64 * 1e6 / self.total_prefill_micros as f64
         }
     }
 
@@ -127,6 +166,21 @@ mod tests {
         };
         assert_eq!(s.mean_batch(), 2.0);
         assert_eq!(ModelStats::default().mean_batch(), 0.0);
+    }
+
+    #[test]
+    fn token_throughput_split() {
+        let s = ModelStats {
+            prefill_tokens: 100,
+            decode_tokens: 50,
+            total_prefill_micros: 2_000_000,
+            total_decode_micros: 500_000,
+            ..Default::default()
+        };
+        assert_eq!(s.prefill_tok_per_s(), 50.0);
+        assert_eq!(s.decode_tok_per_s(), 100.0);
+        assert_eq!(ModelStats::default().decode_tok_per_s(), 0.0);
+        assert_eq!(ModelStats::default().prefill_tok_per_s(), 0.0);
     }
 
     #[test]

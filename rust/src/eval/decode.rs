@@ -1,0 +1,329 @@
+//! Incremental decode: per-request KV-cache sessions over the AOT decode
+//! graphs, with a full-context recompute fallback that works on *every*
+//! [`LanguageModel`] (mocks included).
+//!
+//! A [`DecodeSession`] is the unit of continuous batching: it owns one
+//! request's token history, the logits row for its next position, and —
+//! when the model's artifacts carry the `decode` record — the per-layer
+//! (K, V) cache tensors of that request.  Sessions are created batched by
+//! [`LanguageModel::prefill`] and advanced batched by
+//! [`LanguageModel::decode_step`]; the serving engine moves sessions in
+//! and out of a step batch freely, because each session is self-contained
+//! (rows of one step may sit at different sequence depths).
+//!
+//! Greedy decode through a session is **token-identical** to the classic
+//! full-recompute [`super::generate::generate`] path: causal attention
+//! makes the next-token logits of a row depend only on its own prefix, so
+//! recomputing the prefix (fallback) and replaying it from the cache
+//! (decode graphs) rank the same argmax token.  `rust/tests/decode_parity.rs`
+//! pins this on matched kernels, and the engine's response cache relies on
+//! it.  (On real artifacts the step graphs run the jnp oracle kernels while
+//! the full-context graphs run Pallas — equal to ~2e-4 — so the only
+//! admissible divergence is an argmax near-tie inside that tolerance; the
+//! artifact-gated test in `integration_eval.rs` enforces the bound.)
+
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+use super::{argmax, LanguageModel};
+
+/// The cache side of a session.
+pub enum KvCache {
+    /// The model keeps no incremental state: every decode step re-runs the
+    /// full fixed-shape forward over the session's token history.  Always
+    /// correct, O(S) per token — the path taken when the manifest has no
+    /// `decode` record and by plain mocks.
+    Recompute,
+    /// Per-layer `(k, v)` cache tensors, each `f32[1, H, S, Dh]`: the
+    /// decode graphs append one position per step and attend over the live
+    /// prefix only.  O(1) forwards per token.
+    Layers(Vec<(Tensor, Tensor)>),
+}
+
+/// One request's decode state: token history, next-token logits, cache.
+pub struct DecodeSession {
+    /// prompt + generated tokens so far
+    pub tokens: Vec<i32>,
+    /// logits row (length = vocab) for the token at position
+    /// `tokens.len()` — refreshed by `prefill` / `decode_step`
+    pub logits: Vec<f32>,
+    /// model-specific cache state
+    pub kv: KvCache,
+}
+
+impl DecodeSession {
+    /// Next write position (== current sequence length).
+    pub fn pos(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// Greedy choice from the current logits row.
+    pub fn greedy_next(&self) -> i32 {
+        argmax(&self.logits) as i32
+    }
+}
+
+/// Validate one row against the model context and return it padded to the
+/// full sequence (token 0 — the same padding the classic `generate` used,
+/// so fallback logits are bit-identical to the historical path).  Shared
+/// with the XLA runners' prefill so both paths keep one convention.
+pub(crate) fn padded_row(row: &[i32], seq: usize) -> Result<Vec<i32>> {
+    if row.is_empty() {
+        return Err(Error::Config("decode: empty token row".into()));
+    }
+    if row.len() > seq {
+        return Err(Error::Config(format!(
+            "decode: row of {} tokens exceeds the model context {seq}",
+            row.len()
+        )));
+    }
+    let mut padded = row.to_vec();
+    padded.resize(seq, 0);
+    Ok(padded)
+}
+
+/// Full-context logits rows at each row's last position — the shared core
+/// of both recompute fallbacks: one batched fixed-shape forward, rows
+/// padded to `seq`.
+fn recompute_rows<M: LanguageModel + ?Sized>(
+    model: &M,
+    rows: &[&[i32]],
+) -> Result<Vec<Vec<f32>>> {
+    let seq = model.config().seq;
+    let vocab = model.config().vocab;
+    let b = rows.len();
+    let mut toks = Vec::with_capacity(b * seq);
+    for row in rows {
+        toks.extend(padded_row(row, seq)?);
+    }
+    let logits = model.logits(&Tensor::i32(&[b, seq], toks))?;
+    let lv = logits.as_f32()?;
+    Ok(rows
+        .iter()
+        .enumerate()
+        .map(|(i, row)| {
+            let pos = row.len() - 1;
+            lv[(i * seq + pos) * vocab..][..vocab].to_vec()
+        })
+        .collect())
+}
+
+/// Fallback prefill: one batched full-context forward, sessions carry no
+/// cache ([`KvCache::Recompute`]).
+pub fn recompute_prefill<M: LanguageModel + ?Sized>(
+    model: &M,
+    prompts: &[Vec<i32>],
+) -> Result<Vec<DecodeSession>> {
+    if prompts.is_empty() {
+        return Ok(Vec::new());
+    }
+    let rows: Vec<&[i32]> = prompts.iter().map(|p| p.as_slice()).collect();
+    let logits = recompute_rows(model, &rows)?;
+    Ok(prompts
+        .iter()
+        .zip(logits)
+        .map(|(p, l)| DecodeSession { tokens: p.clone(), logits: l, kv: KvCache::Recompute })
+        .collect())
+}
+
+/// Fallback decode step: re-run the full forward over each session's
+/// history and refresh its next-token logits.
+pub fn recompute_decode_step<M: LanguageModel + ?Sized>(
+    model: &M,
+    sessions: &mut [&mut DecodeSession],
+) -> Result<()> {
+    if sessions.is_empty() {
+        return Ok(());
+    }
+    let logits = {
+        let rows: Vec<&[i32]> = sessions.iter().map(|s| s.tokens.as_slice()).collect();
+        recompute_rows(model, &rows)?
+    };
+    for (s, l) in sessions.iter_mut().zip(logits) {
+        s.logits = l;
+    }
+    Ok(())
+}
+
+/// Slice row `i` of a `[B, H, S, Dh]` cache tensor into an owned
+/// `[1, H, S, Dh]` per-session cache (rows are contiguous in the leading
+/// dim, so this is one memcpy).
+pub fn cache_row(stacked: &Tensor, i: usize) -> Result<Tensor> {
+    let per: usize = stacked.shape[1..].iter().product();
+    let data = stacked.as_f32()?;
+    let mut shape = stacked.shape.clone();
+    shape[0] = 1;
+    Ok(Tensor::f32(&shape, data[i * per..][..per].to_vec()))
+}
+
+/// Stack the layer-`layer` (K, V) caches of `sessions` into a pair of
+/// `[bucket, H, S, Dh]` tensors (zero rows beyond the live sessions).
+/// Errors if any session runs the recompute fallback — mixed batches
+/// cannot ride one decode graph.
+pub fn stack_layer(
+    sessions: &[&mut DecodeSession],
+    layer: usize,
+    bucket: usize,
+) -> Result<(Tensor, Tensor)> {
+    let mut shape: Option<Vec<usize>> = None;
+    let mut kd: Vec<f32> = Vec::new();
+    let mut vd: Vec<f32> = Vec::new();
+    for s in sessions {
+        let (k, v) = match &s.kv {
+            KvCache::Layers(l) => l.get(layer).ok_or_else(|| {
+                Error::Shape(format!("decode session has no cache for layer {layer}"))
+            })?,
+            KvCache::Recompute => {
+                return Err(Error::Shape(
+                    "cannot stack a recompute-fallback session into a decode batch".into(),
+                ))
+            }
+        };
+        if shape.is_none() {
+            shape = Some(k.shape.clone());
+            let per: usize = k.shape[1..].iter().product();
+            kd.reserve(bucket * per);
+            vd.reserve(bucket * per);
+        }
+        kd.extend_from_slice(k.as_f32()?);
+        vd.extend_from_slice(v.as_f32()?);
+    }
+    let mut shape = shape.ok_or_else(|| Error::Shape("stack_layer: no sessions".into()))?;
+    let per: usize = shape[1..].iter().product();
+    kd.resize(bucket * per, 0.0);
+    vd.resize(bucket * per, 0.0);
+    shape[0] = bucket;
+    Ok((Tensor::f32(&shape, kd), Tensor::f32(&shape, vd)))
+}
+
+/// Write the updated `[bucket, H, S, Dh]` caches of one layer back into the
+/// live sessions (inverse of [`stack_layer`]; pad rows are dropped).
+pub fn scatter_layer(
+    sessions: &mut [&mut DecodeSession],
+    layer: usize,
+    k: &Tensor,
+    v: &Tensor,
+) -> Result<()> {
+    for (i, s) in sessions.iter_mut().enumerate() {
+        let pair = (cache_row(k, i)?, cache_row(v, i)?);
+        match &mut s.kv {
+            KvCache::Layers(l) => l[layer] = pair,
+            KvCache::Recompute => {
+                return Err(Error::Shape(
+                    "cannot scatter a decode cache into a recompute session".into(),
+                ))
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    /// Prefix-sum mock: next-token preference depends on the *whole*
+    /// prefix, so any cache/position bug shows up as a token mismatch.
+    struct PrefixSum(ModelConfig);
+
+    impl LanguageModel for PrefixSum {
+        fn config(&self) -> &ModelConfig {
+            &self.0
+        }
+
+        fn logits(&self, tokens: &Tensor) -> Result<Tensor> {
+            let (b, s) = (tokens.shape[0], tokens.shape[1]);
+            let v = self.0.vocab;
+            let tv = tokens.as_i32()?;
+            let mut out = vec![0.0f32; b * s * v];
+            for i in 0..b {
+                let mut sum = 0i64;
+                for t in 0..s {
+                    sum += tv[i * s + t] as i64;
+                    let next = (sum.unsigned_abs() as usize + 1) % v;
+                    out[(i * s + t) * v + next] = 5.0;
+                }
+            }
+            Ok(Tensor::f32(&[b, s, v], out))
+        }
+    }
+
+    #[test]
+    fn recompute_prefill_sets_last_position_logits() {
+        let m = PrefixSum(ModelConfig::builtin("nt-tiny").unwrap());
+        let sessions =
+            recompute_prefill(&m, &[vec![3], vec![10, 20, 30]]).unwrap();
+        assert_eq!(sessions.len(), 2);
+        assert_eq!(sessions[0].pos(), 1);
+        assert_eq!(sessions[1].pos(), 3);
+        // row 0: sum=3 -> prefers 4; row 1: sum=60 -> prefers 61
+        assert_eq!(sessions[0].greedy_next(), 4);
+        assert_eq!(sessions[1].greedy_next(), 61);
+        assert!(matches!(sessions[0].kv, KvCache::Recompute));
+    }
+
+    #[test]
+    fn recompute_decode_step_advances_a_subset() {
+        let m = PrefixSum(ModelConfig::builtin("nt-tiny").unwrap());
+        let mut sessions = recompute_prefill(&m, &[vec![1], vec![2]]).unwrap();
+        // advance only row 1, as the continuous batcher does
+        sessions[1].tokens.push(5);
+        let (_a, b) = sessions.split_at_mut(1);
+        let mut refs = vec![&mut b[0]];
+        recompute_decode_step(&m, &mut refs).unwrap();
+        assert_eq!(sessions[1].greedy_next(), 8); // 2 + 5 -> prefers 8
+        assert_eq!(sessions[0].greedy_next(), 2); // untouched
+    }
+
+    #[test]
+    fn empty_and_oversize_rows_are_config_errors() {
+        let m = PrefixSum(ModelConfig::builtin("nt-tiny").unwrap());
+        let err = recompute_prefill(&m, &[vec![]]).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        let seq = m.config().seq;
+        let err = recompute_prefill(&m, &[vec![1; seq + 1]]).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        // empty session batch is a no-op, not an error
+        recompute_decode_step(&m, &mut []).unwrap();
+        assert!(recompute_prefill(&m, &[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn stack_scatter_roundtrip() {
+        let mk = |base: f32| {
+            vec![(
+                Tensor::f32(&[1, 2, 2, 1], vec![base, base + 1.0, base + 2.0, base + 3.0]),
+                Tensor::f32(&[1, 2, 2, 1], vec![-base; 4]),
+            )]
+        };
+        let mut s0 = DecodeSession { tokens: vec![1], logits: vec![], kv: KvCache::Layers(mk(10.0)) };
+        let mut s1 = DecodeSession { tokens: vec![2], logits: vec![], kv: KvCache::Layers(mk(20.0)) };
+        let mut refs = vec![&mut s0, &mut s1];
+        let (k, v) = stack_layer(&refs, 0, 4).unwrap();
+        assert_eq!(k.shape, vec![4, 2, 2, 1]);
+        assert_eq!(&k.as_f32().unwrap()[..4], &[10.0, 11.0, 12.0, 13.0]);
+        assert_eq!(&k.as_f32().unwrap()[4..8], &[20.0, 21.0, 22.0, 23.0]);
+        assert_eq!(&k.as_f32().unwrap()[8..], &[0.0; 8]);
+        // mutate and scatter back
+        let mut kd = k.as_f32().unwrap().to_vec();
+        kd[0] = 99.0;
+        let k2 = Tensor::f32(&k.shape, kd);
+        scatter_layer(&mut refs, 0, &k2, &v).unwrap();
+        match &s0.kv {
+            KvCache::Layers(l) => {
+                assert_eq!(l[0].0.shape, vec![1, 2, 2, 1]);
+                assert_eq!(l[0].0.as_f32().unwrap()[0], 99.0);
+                assert_eq!(l[0].1.as_f32().unwrap(), &[-10.0; 4]);
+            }
+            _ => panic!("expected layered cache"),
+        }
+    }
+
+    #[test]
+    fn mixed_cache_kinds_rejected_in_stack() {
+        let mut s0 = DecodeSession { tokens: vec![1], logits: vec![], kv: KvCache::Recompute };
+        let refs = vec![&mut s0];
+        assert!(stack_layer(&refs, 0, 2).is_err());
+    }
+}

@@ -1,19 +1,27 @@
 //! Batched text generation over any [`LanguageModel`] — used by the GenData
-//! calibration scheme, the subjective eval, and the serving loop.
+//! calibration scheme, the subjective eval, and the serving engine.
 //!
-//! Full-context recompute per step (no KV cache: the AOT graphs are
-//! fixed-shape; S=128 keeps this affordable — documented in DESIGN.md).
+//! Built on the incremental-decode session API: one [`LanguageModel::prefill`]
+//! per batch, then one [`LanguageModel::decode_step`] per generated position.
+//! Runners with exported decode graphs (the manifest's `decode` record)
+//! advance O(1) per token over their KV caches; everything else falls back
+//! to full-context recompute — numerically the historical fixed-shape
+//! S=128 path.  Greedy output is token-identical across the two paths on
+//! matched kernels (pinned by `rust/tests/decode_parity.rs`; real
+//! artifacts admit only argmax near-ties within the Pallas↔oracle kernel
+//! tolerance — see `eval::decode`).
 
 use crate::calib::rng::SplitMix64;
-use crate::error::Result;
-use crate::tensor::Tensor;
+use crate::error::{Error, Result};
 
-use super::{argmax, LanguageModel};
+use super::{argmax, DecodeSession, LanguageModel};
 
 /// Sampling configuration for one generation run.
 ///
-/// `PartialEq` matters to the serving engine: only requests with identical
-/// sample configs may ride one batch (`generate` takes a single config).
+/// `PartialEq` is kept for callers that group requests by config; the
+/// continuous-batching engine no longer needs it (each request samples from
+/// its own seeded stream), but `generate` still drives one shared stream
+/// per batch for reproducibility of the calibration/eval paths.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SampleConfig {
     /// softmax temperature for the stochastic stage (0 = greedy everywhere)
@@ -30,10 +38,30 @@ impl Default for SampleConfig {
     }
 }
 
+/// Pick the next token for a session under `cfg`, feeding `rng`.
+///
+/// The stochastic stage covers positions before
+/// `max(prompt_len, stochastic_prefix)`; everything after is greedy.
+pub(crate) fn sample_next(
+    session: &DecodeSession,
+    prompt_len: usize,
+    cfg: &SampleConfig,
+    rng: &mut SplitMix64,
+) -> i32 {
+    if session.tokens.len() < prompt_len.max(cfg.stochastic_prefix) && cfg.temperature > 0.0 {
+        sample_temperature(&session.logits, cfg.temperature, rng)
+    } else {
+        argmax(&session.logits) as i32
+    }
+}
+
 /// Generate continuations for a batch of prompts.
 ///
 /// `prompts[i]` is the existing token prefix of row i; all rows are extended
-/// to `target_len` tokens.  Returns the full sequences.
+/// to `target_len` tokens.  Returns the full sequences.  Malformed inputs
+/// (empty prompt rows, targets beyond the model context) are
+/// [`Error::Config`] — a bad serve request must never abort the scheduler
+/// thread that calls this.
 pub fn generate(
     model: &dyn LanguageModel,
     prompts: &[Vec<i32>],
@@ -41,47 +69,60 @@ pub fn generate(
     cfg: &SampleConfig,
 ) -> Result<Vec<Vec<i32>>> {
     let seq = model.config().seq;
-    let vocab = model.config().vocab;
-    assert!(target_len <= seq);
-    let b = prompts.len();
-    let mut rng = SplitMix64::new(cfg.seed);
-    let mut seqs: Vec<Vec<i32>> = prompts.to_vec();
-    let min_len = seqs.iter().map(|s| s.len()).min().unwrap_or(0);
-    assert!(min_len >= 1, "prompts must be non-empty");
+    if target_len > seq {
+        return Err(Error::Config(format!(
+            "generation target {target_len} exceeds the model context {seq}"
+        )));
+    }
+    if prompts.is_empty() {
+        return Ok(Vec::new());
+    }
+    if let Some(i) = prompts.iter().position(|p| p.is_empty()) {
+        return Err(Error::Config(format!("prompt row {i} is empty")));
+    }
+    let min_len = prompts.iter().map(|p| p.len()).min().unwrap();
+    if target_len <= min_len {
+        // nothing to generate for any row
+        return Ok(prompts.to_vec());
+    }
 
+    let mut rng = SplitMix64::new(cfg.seed);
+    let mut sessions = model.prefill(prompts)?;
     let mut cur = min_len;
     while cur < target_len {
-        // pad all rows to seq, run one batched forward
-        let mut toks = Vec::with_capacity(b * seq);
-        for s in &seqs {
-            let mut row = s.clone();
-            row.resize(seq, 0);
-            toks.extend(row);
-        }
-        let logits = model.logits(&Tensor::i32(&[b, seq], toks))?;
-        let lv = logits.as_f32()?;
-        for (i, s) in seqs.iter_mut().enumerate() {
-            if s.len() > cur {
+        // rows at the frontier sample from their pending logits, in row
+        // order, sharing one rng stream (the historical consumption order)
+        let mut stepping: Vec<usize> = Vec::new();
+        for (i, s) in sessions.iter_mut().enumerate() {
+            if s.tokens.len() > cur {
                 continue; // this row is ahead (longer prompt)
             }
-            let pos = s.len() - 1;
-            let row = &lv[(i * seq + pos) * vocab..(i * seq + pos) * vocab + vocab];
-            let new_tok = if s.len() < prompts[i].len().max(cfg.stochastic_prefix)
-                && cfg.temperature > 0.0
-            {
-                sample_temperature(row, cfg.temperature, &mut rng)
-            } else {
-                argmax(row) as i32
-            };
-            s.push(new_tok);
+            let tok = sample_next(s, prompts[i].len(), cfg, &mut rng);
+            s.tokens.push(tok);
+            if s.tokens.len() < target_len {
+                stepping.push(i);
+            }
         }
         cur += 1;
+        if !stepping.is_empty() {
+            // collect &mut refs to just the stepped rows (ascending order)
+            let mut refs: Vec<&mut DecodeSession> = Vec::with_capacity(stepping.len());
+            let mut rest = &mut sessions[..];
+            let mut consumed = 0;
+            for &i in &stepping {
+                let (head, tail) = rest.split_at_mut(i - consumed + 1);
+                refs.push(&mut head[i - consumed]);
+                rest = tail;
+                consumed = i + 1;
+            }
+            model.decode_step(&mut refs)?;
+        }
     }
-    Ok(seqs)
+    Ok(sessions.into_iter().map(|s| s.tokens).collect())
 }
 
 /// Temperature sampling from a logits row.
-fn sample_temperature(row: &[f32], temp: f32, rng: &mut SplitMix64) -> i32 {
+pub(crate) fn sample_temperature(row: &[f32], temp: f32, rng: &mut SplitMix64) -> i32 {
     let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
     let weights: Vec<f64> = row
         .iter()
@@ -103,6 +144,7 @@ fn sample_temperature(row: &[f32], temp: f32, rng: &mut SplitMix64) -> i32 {
 mod tests {
     use super::*;
     use crate::model::ModelConfig;
+    use crate::tensor::Tensor;
 
     /// Fake model that always prefers token (last_token + 1) % vocab.
     struct Incrementing(ModelConfig);
@@ -145,5 +187,23 @@ mod tests {
         let a = generate(&m, &[vec![3]], 8, &sc).unwrap();
         let b = generate(&m, &[vec![3]], 8, &sc).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn malformed_requests_are_config_errors_not_panics() {
+        let cfg = ModelConfig::builtin("nt-tiny").unwrap();
+        let seq = cfg.seq;
+        let m = Incrementing(cfg);
+        let sc = SampleConfig { temperature: 0.0, stochastic_prefix: 0, seed: 1 };
+        // target beyond the fixed-shape context
+        let err = generate(&m, &[vec![1]], seq + 1, &sc).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        // empty prompt row
+        let err = generate(&m, &[vec![1], vec![]], 4, &sc).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        // empty batch and already-satisfied targets are no-ops
+        assert!(generate(&m, &[], 4, &sc).unwrap().is_empty());
+        let out = generate(&m, &[vec![7, 8, 9]], 2, &sc).unwrap();
+        assert_eq!(out, vec![vec![7, 8, 9]]);
     }
 }

@@ -1,7 +1,8 @@
 //! Evaluation harness: LAMBADA-syn accuracy, perplexity, the multi-task
-//! multiple-choice suite (LM-Eval-Harness analog), generation, and the
-//! subjective-eval scorer.
+//! multiple-choice suite (LM-Eval-Harness analog), generation (full-context
+//! and KV-cached incremental decode), and the subjective-eval scorer.
 
+pub mod decode;
 pub mod generate;
 pub mod lambada;
 pub mod ppl;
@@ -12,8 +13,18 @@ use crate::error::Result;
 use crate::model::ModelConfig;
 use crate::tensor::Tensor;
 
+pub use decode::{DecodeSession, KvCache};
+
 /// Anything that maps token batches to logits — implemented by the float
 /// and quantized runners in `coordinator::forward`.
+///
+/// Generation runs through the *session* API: [`Self::prefill`] turns
+/// prompts into [`DecodeSession`]s, [`Self::decode_step`] advances any
+/// subset of sessions by one token.  The default implementations fall back
+/// to full-context recompute over [`Self::logits`], so every existing
+/// implementor (mocks included) keeps working unchanged; runners whose
+/// artifacts carry the manifest's `decode` record override them with the
+/// KV-cached graphs and report [`Self::supports_decode`].
 pub trait LanguageModel {
     fn config(&self) -> &ModelConfig;
     /// tokens i32[B, S] → logits f32[B, S, V]
@@ -31,6 +42,26 @@ pub trait LanguageModel {
     /// disables warm-up for this model.
     fn warm_buckets(&self) -> Vec<usize> {
         self.max_batch().into_iter().collect()
+    }
+    /// Whether decode steps run O(1) over a KV cache (`true` for runners
+    /// with exported decode graphs).  `false` means the session API is
+    /// served by full-context recompute — correct, just O(S) per token.
+    fn supports_decode(&self) -> bool {
+        false
+    }
+    /// Batched prefill: run each prompt once and return a
+    /// [`DecodeSession`] per row holding its next-token logits (and the
+    /// per-layer KV cache when supported).  Rows may have ragged lengths;
+    /// each session's logits sit at that row's own last position.
+    fn prefill(&self, prompts: &[Vec<i32>]) -> Result<Vec<DecodeSession>> {
+        decode::recompute_prefill(self, prompts)
+    }
+    /// Batched one-token step: for every session (whose caller just pushed
+    /// the newly chosen token onto `tokens`), refresh `logits` to the new
+    /// last position — consuming O(1) graph work when a cache is present.
+    /// Any subset of live sessions may ride one step (continuous batching).
+    fn decode_step(&self, sessions: &mut [&mut DecodeSession]) -> Result<()> {
+        decode::recompute_decode_step(self, sessions)
     }
 }
 

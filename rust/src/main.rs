@@ -583,7 +583,8 @@ fn serve_demo(
     for (name, m) in &stats.models {
         println!(
             "  {name}: served {}, batches {} (mean {:.1}, max {}), mean queue {:.1} ms, \
-             cache hits {}/{}, deadline misses {}, warmup batches {}",
+             cache hits {}/{}, deadline misses {}, warmup batches {}, \
+             prefill {:.0} tok/s, decode {:.0} tok/s",
             m.served,
             m.batches,
             m.mean_batch(),
@@ -593,6 +594,8 @@ fn serve_demo(
             m.cache_hits + m.cache_misses,
             m.deadline_missed,
             m.warmup_batches,
+            m.prefill_tok_per_s(),
+            m.decode_tok_per_s(),
         );
     }
     Ok(())

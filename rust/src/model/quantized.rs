@@ -15,7 +15,7 @@ use super::config::{ModelConfig, NormKind};
 use super::weights::ModelWeights;
 
 /// One quantized linear layer: packed codes + per-(group, out-channel) scales.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct QuantLinear {
     /// logical shape [K, N]
     pub k: usize,
@@ -24,11 +24,38 @@ pub struct QuantLinear {
     /// f32 [G, N] where G = K / group_size
     pub scales: Tensor,
     pub bias: Tensor,
+    /// lazily unpacked i8 codes — the packed form stays the storage truth,
+    /// but the serving decode path feeds the unpacked tensor per generated
+    /// token, so it is expanded once and reused (`OnceLock` keeps the
+    /// container `Sync`)
+    codes_cache: std::sync::OnceLock<Tensor>,
+}
+
+impl Clone for QuantLinear {
+    fn clone(&self) -> Self {
+        // the cache is not cloned: a clone re-unpacks on first use
+        QuantLinear::new(self.k, self.n, self.packed.clone(), self.scales.clone(),
+                         self.bias.clone())
+    }
 }
 
 impl QuantLinear {
-    /// Unpack to the i8 codes tensor the AOT graphs expect.
-    pub fn codes_tensor(&self) -> Tensor {
+    pub fn new(k: usize, n: usize, packed: PackedCodes, scales: Tensor, bias: Tensor) -> Self {
+        QuantLinear { k, n, packed, scales, bias, codes_cache: std::sync::OnceLock::new() }
+    }
+
+    /// The i8 codes tensor the AOT graphs expect — unpacked from the
+    /// bit-packed storage on first use, then cached for the model's
+    /// lifetime (the weights are immutable once quantized; the serving
+    /// decode path feeds this per generated token).
+    pub fn codes_tensor(&self) -> &Tensor {
+        self.codes_cache.get_or_init(|| self.codes_tensor_owned())
+    }
+
+    /// A freshly unpacked, owned codes tensor that bypasses the cache —
+    /// for one-shot consumers (the norm tweaker) that would otherwise
+    /// leave a duplicate model-lifetime copy resident.
+    pub fn codes_tensor_owned(&self) -> Tensor {
         Tensor::i8(&[self.k, self.n], unpack_codes(&self.packed))
     }
 
@@ -201,13 +228,13 @@ impl QuantizedModel {
                     Some(v) => v.as_i32()?[0] as u8,
                     None => scheme.pack_bits()?,
                 };
-                Ok(QuantLinear {
+                Ok(QuantLinear::new(
                     k,
                     n,
-                    packed: PackedCodes { bits: pbits, len: k * n, data },
-                    scales: get(&format!("{p}{name}.scales"))?.clone(),
-                    bias: get(&format!("{p}{name}.bias"))?.clone(),
-                })
+                    PackedCodes { bits: pbits, len: k * n, data },
+                    get(&format!("{p}{name}.scales"))?.clone(),
+                    get(&format!("{p}{name}.bias"))?.clone(),
+                ))
             };
             blocks.push(QuantizedBlock {
                 ln1_g: get(&format!("{p}ln1.g"))?.clone(),
@@ -259,13 +286,7 @@ pub fn quant_linear_from(
     bias: Tensor,
     bits: u8,
 ) -> Result<QuantLinear> {
-    Ok(QuantLinear {
-        k,
-        n,
-        packed: pack_codes(codes, bits)?,
-        scales,
-        bias,
-    })
+    Ok(QuantLinear::new(k, n, pack_codes(codes, bits)?, scales, bias))
 }
 
 #[cfg(test)]

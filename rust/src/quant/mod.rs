@@ -53,6 +53,27 @@
 //! Rust change is needed: [`QuantScheme::group_tag`] derives the tag from
 //! `group_size`, and the runtime learns the exported set from the manifest.
 //!
+//! # Incremental decode graphs
+//!
+//! Serving no longer re-runs the full fixed-shape forward per generated
+//! token.  Alongside `block_fwd_q.{grain}.b{B}` the exporter emits, per
+//! grain and bucket, a *prefill* variant `block_fwd_q_kv.{grain}.b{B}`
+//! (block forward + per-head K/V `[B, H, S, Dh]`) and a one-token *step*
+//! variant `block_dec_q.{grain}.b{B}` (new-token activation + per-row
+//! position + KV caches → updated activation + caches), plus the shared
+//! `embed_dec` / `head_dec` graphs.  The manifest records the contract
+//! under its `decode` key (step buckets + per-model cache shape); the
+//! runtime parses it strictly when present, and a manifest exported with
+//! `--no-decode` simply has none — generation then falls back to
+//! full-context recompute (`eval::decode`), a feature-gated degradation
+//! rather than an error.  Greedy output is token-identical between the
+//! session loop and the recompute path whenever both run the same kernels
+//! (the offline contract pinned by `rust/tests/decode_parity.rs`); on real
+//! artifacts the step graphs use the jnp oracle kernels while the
+//! full-context graphs use Pallas, so the two paths may differ only at
+//! argmax near-ties inside the ~2e-4 kernel tolerance
+//! (`integration_eval.rs` gates on exactly that).
+//!
 //! # Automatic mixed precision
 //!
 //! Per-layer scheme overrides (`PipelineConfig::layer_schemes`,

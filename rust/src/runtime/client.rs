@@ -117,6 +117,37 @@ impl Runtime {
         Ok(tensors)
     }
 
+    /// Cache-carrying execution for the incremental-decode step graphs.
+    ///
+    /// Runs `graph` with `args` followed by the `carry` tensors (the KV
+    /// caches — by AOT convention they are the *trailing* inputs and the
+    /// *trailing* outputs of every `block_dec[_q]` graph), and splits the
+    /// outputs into `(fresh, carried)`: the carried tail has exactly
+    /// `carry.len()` entries and is the next step's carry.  Taking the
+    /// carry by value makes the state-threading explicit at the call site —
+    /// a decode step consumes the old cache and hands back the new one.
+    pub fn run_carry(
+        &self,
+        model: &str,
+        graph: &str,
+        args: &[&Tensor],
+        carry: Vec<Tensor>,
+    ) -> Result<(Vec<Tensor>, Vec<Tensor>)> {
+        let mut all: Vec<&Tensor> = args.to_vec();
+        all.extend(carry.iter());
+        let mut outs = self.run(model, graph, &all)?;
+        if outs.len() < carry.len() {
+            return Err(Error::Xla(format!(
+                "{model}.{graph}: {} outputs but {} carried inputs — the graph \
+                 does not follow the carry-last decode convention",
+                outs.len(),
+                carry.len()
+            )));
+        }
+        let carried = outs.split_off(outs.len() - carry.len());
+        Ok((outs, carried))
+    }
+
     /// Snapshot of runtime counters.
     pub fn stats(&self) -> RuntimeStats {
         self.stats.lock().unwrap().clone()

@@ -36,6 +36,48 @@ pub struct ManifestModel {
     pub norm: String,
 }
 
+/// Per-model KV-cache layout of the incremental-decode graphs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KvSpec {
+    /// number of (k, v) cache pairs — one per transformer block
+    pub n_layer: usize,
+    /// per-row per-layer cache shape `[n_head, seq, d_head]`
+    pub shape: Vec<usize>,
+}
+
+/// The manifest's `decode` record: which batch buckets have one-token step
+/// graphs (`embed_dec` / `block_dec[_q]` / `head_dec` plus the
+/// `block_fwd_kv[_q]` prefill variants) and the cache layout per model.
+///
+/// The record is *optional*: a manifest exported with `--no-decode` simply
+/// has none, and the runtime serves through the full-context recompute
+/// fallback instead of failing.
+#[derive(Debug, Clone)]
+pub struct DecodeRecord {
+    pub buckets: Vec<usize>,
+    /// model name -> cache layout
+    pub caches: HashMap<String, KvSpec>,
+}
+
+impl DecodeRecord {
+    /// Smallest decode bucket that fits `n` rows; the error lists what was
+    /// exported so an over-provisioned scheduler is self-diagnosing.
+    pub fn bucket_for(&self, n: usize) -> Result<usize> {
+        self.buckets.iter().copied().filter(|&b| b >= n).min().ok_or_else(|| {
+            Error::Artifact(format!(
+                "decode batch {n} exceeds the largest exported decode bucket \
+                 (exported: {}) — re-export with a larger bucket or lower the \
+                 engine's max_batch",
+                join_buckets(&self.buckets)
+            ))
+        })
+    }
+}
+
+fn join_buckets(buckets: &[usize]) -> String {
+    buckets.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(", ")
+}
+
 /// The parsed manifest plus the artifacts directory it came from.
 #[derive(Debug, Clone)]
 pub struct ArtifactManifest {
@@ -47,6 +89,10 @@ pub struct ArtifactManifest {
     /// `tweak_step.{tag}` graph variants on disk; schemes with any other
     /// grain are rejected at pipeline startup via [`Self::validate_grain`].
     pub groups: BTreeMap<String, usize>,
+    /// Incremental-decode contract; `None` when the export skipped the
+    /// decode graphs (`--no-decode`) — generation then falls back to
+    /// full-context recompute.
+    pub decode: Option<DecodeRecord>,
     pub models: HashMap<String, ManifestModel>,
     pub graphs: Vec<GraphEntry>,
     index: HashMap<(String, String), usize>,
@@ -124,6 +170,71 @@ impl ArtifactManifest {
             return Err(Error::Artifact("manifest: empty `groups`".into()));
         }
 
+        // `decode` is feature-gating, not load-gating: absent means the
+        // incremental-decode graphs were not exported (recompute fallback),
+        // while a *present but malformed* record is rejected strictly — a
+        // half-parsed cache shape would surface as a PJRT shape mismatch
+        // in the middle of a served request
+        let decode = match root.get("decode") {
+            None => None,
+            Some(d) => {
+                let mut dbuckets = Vec::new();
+                for b in need(d, "buckets")?
+                    .as_arr()
+                    .ok_or_else(|| Error::Artifact("decode.buckets not an array".into()))?
+                {
+                    dbuckets.push(b.as_usize().ok_or_else(|| {
+                        Error::Artifact("manifest: non-numeric entry in `decode.buckets`".into())
+                    })?);
+                }
+                if dbuckets.is_empty() {
+                    return Err(Error::Artifact("manifest: empty `decode.buckets`".into()));
+                }
+                let mut caches = HashMap::new();
+                for (name, c) in need(d, "caches")?
+                    .as_obj()
+                    .ok_or_else(|| Error::Artifact("decode.caches not an object".into()))?
+                {
+                    let mut shape = Vec::new();
+                    for dim in need(c, "shape")?.as_arr().ok_or_else(|| {
+                        Error::Artifact(format!("decode cache shape of `{name}` not an array"))
+                    })? {
+                        shape.push(dim.as_usize().ok_or_else(|| {
+                            Error::Artifact(format!(
+                                "manifest: non-numeric dim in decode cache shape of `{name}`"
+                            ))
+                        })?);
+                    }
+                    if shape.len() != 3 {
+                        return Err(Error::Artifact(format!(
+                            "decode cache shape of `{name}` must be [n_head, seq, d_head], \
+                             got {} dims",
+                            shape.len()
+                        )));
+                    }
+                    caches.insert(
+                        name.clone(),
+                        KvSpec { n_layer: need_usize(c, "n_layer")?, shape },
+                    );
+                }
+                let record = DecodeRecord { buckets: dbuckets, caches };
+                // the scheduler chunks decode steps by the *main* bucket
+                // cap; a decode record that cannot fit the largest main
+                // bucket would pass load and then fail mid-request on the
+                // first full-size step — reject the contract gap here
+                let main_max = buckets.iter().copied().max().unwrap_or(0);
+                if record.buckets.iter().copied().max().unwrap_or(0) < main_max {
+                    return Err(Error::Artifact(format!(
+                        "decode buckets ({}) cannot fit the largest exported \
+                         batch bucket {main_max} — re-run the AOT export with \
+                         matching bucket sets",
+                        join_buckets(&record.buckets)
+                    )));
+                }
+                Some(record)
+            }
+        };
+
         let mut models = HashMap::new();
         for (name, m) in need(&root, "models")?
             .as_obj()
@@ -179,7 +290,33 @@ impl ArtifactManifest {
         for (i, g) in graphs.iter().enumerate() {
             index.insert((g.model.clone(), g.name.clone()), i);
         }
-        Ok(ArtifactManifest { dir, calib_batch, buckets, groups, models, graphs, index })
+        Ok(ArtifactManifest { dir, calib_batch, buckets, groups, decode, models, graphs, index })
+    }
+
+    /// The decode contract for one model: `Some` iff the export produced
+    /// incremental-decode graphs *and* recorded this model's cache layout.
+    pub fn decode_for(&self, model: &str) -> Option<&KvSpec> {
+        self.decode.as_ref().and_then(|d| d.caches.get(model))
+    }
+
+    /// Verify a model's decode cache spec against its architecture —
+    /// runners call this at construction, so a drifted record (wrong
+    /// `n_layer` or cache shape) fails at startup with a re-export hint,
+    /// not as a PJRT shape mismatch mid-request.  No-op without a record.
+    pub fn verify_decode(&self, cfg: &ModelConfig) -> Result<()> {
+        let Some(spec) = self.decode_for(&cfg.name) else {
+            return Ok(());
+        };
+        let want = vec![cfg.n_head, cfg.seq, cfg.d_head()];
+        if spec.n_layer != cfg.n_layer || spec.shape != want {
+            return Err(Error::Artifact(format!(
+                "decode cache spec of model {} (n_layer {}, shape {:?}) does not \
+                 match the architecture (n_layer {}, shape {want:?}) — re-run \
+                 the AOT export",
+                cfg.name, spec.n_layer, spec.shape, cfg.n_layer
+            )));
+        }
+        Ok(())
     }
 
     /// The exported grain tags, sorted (`["g32", "g64", "pc"]`).
@@ -249,14 +386,17 @@ impl ArtifactManifest {
         Ok(())
     }
 
-    /// Smallest exported batch bucket that fits `n` (error if none).
+    /// Smallest exported batch bucket that fits `n`.  The error lists the
+    /// exported buckets (like [`Self::validate_grain`] lists grains) so an
+    /// oversize-batch failure is self-diagnosing.
     pub fn bucket_for(&self, n: usize) -> Result<usize> {
-        self.buckets
-            .iter()
-            .copied()
-            .filter(|&b| b >= n)
-            .min()
-            .ok_or_else(|| Error::Artifact(format!("batch {n} exceeds largest bucket")))
+        self.buckets.iter().copied().filter(|&b| b >= n).min().ok_or_else(|| {
+            Error::Artifact(format!(
+                "batch {n} exceeds the largest exported bucket (exported: {}) — \
+                 re-run the AOT export with a bucket >= {n} or split the batch",
+                join_buckets(&self.buckets)
+            ))
+        })
     }
 }
 
@@ -314,7 +454,137 @@ mod tests {
         assert_eq!(m.bucket_for(1).unwrap(), 8);
         assert_eq!(m.bucket_for(8).unwrap(), 8);
         assert_eq!(m.bucket_for(9).unwrap(), 32);
-        assert!(m.bucket_for(33).is_err());
+        let err = m.bucket_for(33).unwrap_err().to_string();
+        // self-diagnosing: the error names the buckets that *are* exported
+        assert!(err.contains("33") && err.contains("8, 32"), "{err}");
+    }
+
+    #[test]
+    fn decode_record_absent_is_feature_unavailable_not_error() {
+        // the base fixture has no `decode` key: load must succeed and the
+        // accessors report the feature as unavailable (recompute fallback)
+        let dir = std::env::temp_dir().join("nt_manifest_nodecode");
+        write_fixture(&dir);
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert!(m.decode.is_none());
+        assert!(m.decode_for("nt-tiny").is_none());
+    }
+
+    #[test]
+    fn decode_record_parsed_strictly() {
+        let dir = std::env::temp_dir().join("nt_manifest_decode");
+        write_manifest(
+            &dir,
+            r#"{
+            "format": 1, "calib_batch": 32, "buckets": [8, 32],
+            "groups": {"pc": 0}, "models": {}, "graphs": [],
+            "decode": {"buckets": [8, 32],
+                       "caches": {"nt-tiny": {"n_layer": 2,
+                                              "shape": [4, 128, 32]}}}
+        }"#,
+        );
+        let m = ArtifactManifest::load(&dir).unwrap();
+        let spec = m.decode_for("nt-tiny").unwrap();
+        assert_eq!(spec.n_layer, 2);
+        assert_eq!(spec.shape, vec![4, 128, 32]);
+        assert!(m.decode_for("nt-medium").is_none());
+        let dec = m.decode.as_ref().unwrap();
+        assert_eq!(dec.bucket_for(3).unwrap(), 8);
+        assert_eq!(dec.bucket_for(9).unwrap(), 32);
+        let err = dec.bucket_for(40).unwrap_err().to_string();
+        assert!(err.contains("8, 32"), "{err}");
+    }
+
+    #[test]
+    fn decode_spec_verified_against_architecture() {
+        let dir = std::env::temp_dir().join("nt_manifest_decodespec");
+        write_manifest(
+            &dir,
+            r#"{
+            "format": 1, "calib_batch": 32, "buckets": [8, 32],
+            "groups": {"pc": 0},
+            "models": {"nt-tiny": {"n_layer": 2, "d_model": 128, "n_head": 4,
+                        "d_ff": 512, "vocab": 2048, "seq": 128,
+                        "norm": "layernorm"}},
+            "graphs": [],
+            "decode": {"buckets": [8, 32],
+                       "caches": {"nt-tiny": {"n_layer": 2,
+                                              "shape": [4, 128, 32]}}}
+        }"#,
+        );
+        let m = ArtifactManifest::load(&dir).unwrap();
+        let cfg = ModelConfig::builtin("nt-tiny").unwrap();
+        m.verify_decode(&cfg).unwrap();
+        // a model without a record verifies trivially (recompute fallback)
+        let other = ModelConfig::builtin("nt-small").unwrap();
+        m.verify_decode(&other).unwrap();
+        // drifted spec (wrong n_layer / wrong shape) fails at startup
+        let dir = std::env::temp_dir().join("nt_manifest_decodespec_bad");
+        write_manifest(
+            &dir,
+            r#"{
+            "format": 1, "calib_batch": 32, "buckets": [8],
+            "groups": {"pc": 0}, "models": {}, "graphs": [],
+            "decode": {"buckets": [8],
+                       "caches": {"nt-tiny": {"n_layer": 3,
+                                              "shape": [4, 128, 32]}}}
+        }"#,
+        );
+        let m = ArtifactManifest::load(&dir).unwrap();
+        let err = m.verify_decode(&cfg).unwrap_err().to_string();
+        assert!(err.contains("nt-tiny") && err.contains("re-run"), "{err}");
+    }
+
+    #[test]
+    fn decode_buckets_must_fit_largest_main_bucket() {
+        // the scheduler chunks steps by the main bucket cap: a smaller
+        // decode bucket set would fail mid-request, so it fails the load
+        let dir = std::env::temp_dir().join("nt_manifest_decodebuckets");
+        write_manifest(
+            &dir,
+            r#"{
+            "format": 1, "calib_batch": 32, "buckets": [8, 32],
+            "groups": {"pc": 0}, "models": {}, "graphs": [],
+            "decode": {"buckets": [8], "caches": {}}
+        }"#,
+        );
+        let err = ArtifactManifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("decode buckets") && err.contains("32"), "{err}");
+    }
+
+    #[test]
+    fn malformed_decode_record_rejected() {
+        // present-but-broken must fail the load, not limp into a PJRT
+        // shape mismatch mid-request
+        let cases = [
+            // non-numeric bucket
+            r#""decode": {"buckets": [8, "32"], "caches": {}}"#,
+            // empty buckets
+            r#""decode": {"buckets": [], "caches": {}}"#,
+            // missing caches key
+            r#""decode": {"buckets": [8]}"#,
+            // wrong cache rank
+            r#""decode": {"buckets": [8],
+                "caches": {"m": {"n_layer": 2, "shape": [4, 128]}}}"#,
+            // non-numeric shape dim
+            r#""decode": {"buckets": [8],
+                "caches": {"m": {"n_layer": 2, "shape": [4, null, 32]}}}"#,
+            // missing n_layer
+            r#""decode": {"buckets": [8],
+                "caches": {"m": {"shape": [4, 128, 32]}}}"#,
+        ];
+        for (i, frag) in cases.iter().enumerate() {
+            let dir = std::env::temp_dir().join(format!("nt_manifest_baddec{i}"));
+            write_manifest(
+                &dir,
+                &format!(
+                    r#"{{"format": 1, "calib_batch": 32, "buckets": [8],
+                        "groups": {{"pc": 0}}, "models": {{}}, "graphs": [],
+                        {frag}}}"#
+                ),
+            );
+            assert!(ArtifactManifest::load(&dir).is_err(), "case {i} must be rejected");
+        }
     }
 
     #[test]

@@ -11,4 +11,4 @@ mod manifest;
 
 pub use client::{GraphKey, Runtime};
 pub use literal::{literal_to_tensor, tensor_to_literal};
-pub use manifest::{ArtifactManifest, GraphEntry, IoSpec};
+pub use manifest::{ArtifactManifest, DecodeRecord, GraphEntry, IoSpec, KvSpec};

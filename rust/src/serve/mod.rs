@@ -21,14 +21,18 @@
 //! has dropped), but batching, chunking, and queue-time accounting are the
 //! engine scheduler's: queue time is measured against the dispatch-group
 //! start with saturating math, so riders split across bucket-sized chunks
-//! are not charged earlier chunks' generation time.  Two behavioral
+//! are not charged earlier chunks' generation time.  Three behavioral
 //! differences: a failed generation no longer aborts the loop — the
 //! affected riders' reply channels drop (their `submit` returns an error)
-//! and serving continues — and the first failure is re-surfaced when the
+//! and serving continues; the first failure is re-surfaced when the
 //! loop returns as an [`Error::Serve`] wrapping the original message,
 //! where the old loop propagated the underlying variant (e.g.
-//! `Error::Artifact`) immediately.  Callers matching on specific variants
-//! should migrate to the engine API.
+//! `Error::Artifact`) immediately; and a malformed prompt (empty, or
+//! longer than the model context) is rejected at routing — the legacy
+//! reply sender drops, surfacing as the historical "server dropped
+//! request" error — where the original loop truncated over-length
+//! prompts.  Callers matching on specific variants should migrate to the
+//! engine API.
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -55,8 +59,9 @@ pub struct Response {
     pub prompt_len: usize,
     /// time from submit to dispatch of this request's batch group
     pub queue_micros: u128,
-    /// generation wall time of the batch this request rode in
+    /// summed wall time of every prefill/decode call this request rode
     pub gen_micros: u128,
+    /// largest batch this request shared (prefill chunk or decode step)
     pub batch_size: usize,
 }
 

@@ -240,16 +240,18 @@ struct FrozenQArgs {
 impl FrozenQArgs {
     fn new(blk: &QuantizedBlock) -> Self {
         FrozenQArgs {
-            cqkv: blk.qkv.codes_tensor(),
+            // owned one-shot unpacks: the tweaker must not populate the
+            // model-lifetime serving cache (codes_tensor) just to tweak
+            cqkv: blk.qkv.codes_tensor_owned(),
             sqkv: blk.qkv.scales.clone(),
             bqkv: blk.qkv.bias.clone(),
-            cproj: blk.proj.codes_tensor(),
+            cproj: blk.proj.codes_tensor_owned(),
             sproj: blk.proj.scales.clone(),
             bproj: blk.proj.bias.clone(),
-            cfc1: blk.fc1.codes_tensor(),
+            cfc1: blk.fc1.codes_tensor_owned(),
             sfc1: blk.fc1.scales.clone(),
             bfc1: blk.fc1.bias.clone(),
-            cfc2: blk.fc2.codes_tensor(),
+            cfc2: blk.fc2.codes_tensor_owned(),
             sfc2: blk.fc2.scales.clone(),
             bfc2: blk.fc2.bias.clone(),
         }

@@ -1,0 +1,236 @@
+//! Prefill/decode parity — fully offline, mock models only.
+//!
+//! The contract under test: greedy generation through the
+//! [`DecodeSession`] API (prefill once, then one `decode_step` per token)
+//! is **token-identical** to the classic full-context recompute path,
+//! whether the model serves sessions through the trait's recompute
+//! fallback or through its own incremental cache.  The mock's next-token
+//! preference depends on the *entire prefix and the position*, so any
+//! cache-threading, masking, or position bug shows up as a token mismatch.
+
+use normtweak::error::{Error, Result};
+use normtweak::eval::generate::{generate, SampleConfig};
+use normtweak::eval::{DecodeSession, KvCache, LanguageModel};
+use normtweak::model::ModelConfig;
+use normtweak::tensor::Tensor;
+
+/// Preferred next token after a prefix with running `sum` at 1-based
+/// length `len` — both content- and position-dependent.
+fn pref(sum: i64, len: usize, vocab: usize) -> usize {
+    ((sum * 7 + len as i64 * 13).unsigned_abs() as usize) % vocab
+}
+
+/// Plain mock: full-context logits only; the session API runs through the
+/// trait's recompute fallback.
+struct Plain(ModelConfig);
+
+fn mix_logits(cfg: &ModelConfig, tokens: &Tensor) -> Result<Tensor> {
+    let (b, s) = (tokens.shape[0], tokens.shape[1]);
+    let v = cfg.vocab;
+    let tv = tokens.as_i32()?;
+    let mut out = vec![0.0f32; b * s * v];
+    for i in 0..b {
+        let mut sum = 0i64;
+        for t in 0..s {
+            sum += tv[i * s + t] as i64;
+            out[(i * s + t) * v + pref(sum, t + 1, v)] = 5.0;
+        }
+    }
+    Ok(Tensor::f32(&[b, s, v], out))
+}
+
+impl LanguageModel for Plain {
+    fn config(&self) -> &ModelConfig {
+        &self.0
+    }
+
+    fn logits(&self, tokens: &Tensor) -> Result<Tensor> {
+        mix_logits(&self.0, tokens)
+    }
+}
+
+/// Caching mock: overrides the session API with real incremental state —
+/// the running prefix sum lives in the session's [`KvCache::Layers`] slot
+/// (a 1-element tensor), exactly as an XLA runner would thread its KV
+/// caches.  `logits()` stays available and must agree with the cache path.
+struct Cached(ModelConfig);
+
+fn one_hot(idx: usize, vocab: usize) -> Vec<f32> {
+    let mut row = vec![0.0f32; vocab];
+    row[idx] = 5.0;
+    row
+}
+
+impl LanguageModel for Cached {
+    fn config(&self) -> &ModelConfig {
+        &self.0
+    }
+
+    fn logits(&self, tokens: &Tensor) -> Result<Tensor> {
+        mix_logits(&self.0, tokens)
+    }
+
+    fn supports_decode(&self) -> bool {
+        true
+    }
+
+    fn prefill(&self, prompts: &[Vec<i32>]) -> Result<Vec<DecodeSession>> {
+        let v = self.0.vocab;
+        prompts
+            .iter()
+            .map(|p| {
+                if p.is_empty() {
+                    return Err(Error::Config("empty prompt".into()));
+                }
+                let sum: i64 = p.iter().map(|&t| t as i64).sum();
+                let state = Tensor::f32(&[1, 1, 1, 1], vec![sum as f32]);
+                Ok(DecodeSession {
+                    tokens: p.clone(),
+                    logits: one_hot(pref(sum, p.len(), v), v),
+                    kv: KvCache::Layers(vec![(state.clone(), state)]),
+                })
+            })
+            .collect()
+    }
+
+    fn decode_step(&self, sessions: &mut [&mut DecodeSession]) -> Result<()> {
+        let v = self.0.vocab;
+        for s in sessions.iter_mut() {
+            let last = *s.tokens.last().unwrap() as i64;
+            let sum = match &s.kv {
+                KvCache::Layers(l) => l[0].0.as_f32()?[0] as i64 + last,
+                KvCache::Recompute => {
+                    return Err(Error::Config("cached mock got a recompute session".into()))
+                }
+            };
+            let state = Tensor::f32(&[1, 1, 1, 1], vec![sum as f32]);
+            s.kv = KvCache::Layers(vec![(state.clone(), state)]);
+            s.logits = one_hot(pref(sum, s.tokens.len(), v), v);
+        }
+        Ok(())
+    }
+}
+
+fn greedy() -> SampleConfig {
+    SampleConfig { temperature: 0.0, stochastic_prefix: 0, seed: 1 }
+}
+
+#[test]
+fn session_loop_matches_generate_on_recompute_mock() {
+    let m = Plain(ModelConfig::builtin("nt-tiny").unwrap());
+    let prompts = vec![vec![5, 9], vec![1000, 3, 77, 4]];
+    let target = 12;
+    let expected = generate(&m, &prompts, target, &greedy()).unwrap();
+
+    // drive the session API by hand, the way the serving engine does
+    let mut sessions = m.prefill(&prompts).unwrap();
+    loop {
+        let mut stepping = Vec::new();
+        for (i, s) in sessions.iter_mut().enumerate() {
+            if s.tokens.len() >= target {
+                continue;
+            }
+            let tok = s.greedy_next();
+            s.tokens.push(tok);
+            if s.tokens.len() < target {
+                stepping.push(i);
+            }
+        }
+        if stepping.is_empty() {
+            break;
+        }
+        let mut rest = &mut sessions[..];
+        let mut refs = Vec::new();
+        let mut consumed = 0;
+        for &i in &stepping {
+            let (head, tail) = rest.split_at_mut(i - consumed + 1);
+            refs.push(&mut head[i - consumed]);
+            rest = tail;
+            consumed = i + 1;
+        }
+        m.decode_step(&mut refs).unwrap();
+    }
+    let got: Vec<Vec<i32>> = sessions.into_iter().map(|s| s.tokens).collect();
+    assert_eq!(got, expected, "DecodeSession greedy loop must match generate()");
+}
+
+#[test]
+fn cached_sessions_match_recompute_path_token_for_token() {
+    let cfg = ModelConfig::builtin("nt-tiny").unwrap();
+    let plain = Plain(cfg.clone());
+    let cached = Cached(cfg);
+    let prompts = vec![vec![2, 4, 6], vec![11], vec![300, 301]];
+    let a = generate(&plain, &prompts, 10, &greedy()).unwrap();
+    let b = generate(&cached, &prompts, 10, &greedy()).unwrap();
+    assert_eq!(a, b, "incremental cache must be token-identical to recompute");
+}
+
+#[test]
+fn stochastic_generation_is_path_independent() {
+    // same seed, same logits → same sampled stream on either path
+    let cfg = ModelConfig::builtin("nt-tiny").unwrap();
+    let plain = Plain(cfg.clone());
+    let cached = Cached(cfg);
+    let sc = SampleConfig { temperature: 0.8, stochastic_prefix: 6, seed: 0xFEED };
+    let prompts = vec![vec![42], vec![7, 8]];
+    let a = generate(&plain, &prompts, 9, &sc).unwrap();
+    let b = generate(&cached, &prompts, 9, &sc).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn continuous_batching_interleave_matches_solo_generation() {
+    // sessions created at different times, stepped in shifting subsets —
+    // exactly the engine's continuous batching — must finish with the same
+    // tokens as one-at-a-time generation
+    let cfg = ModelConfig::builtin("nt-tiny").unwrap();
+    let m = Cached(cfg);
+    let target = 8;
+
+    let solo_a = generate(&m, &[vec![10, 20]], target, &greedy()).unwrap();
+    let solo_b = generate(&m, &[vec![500]], target, &greedy()).unwrap();
+
+    // A starts alone
+    let mut sessions = m.prefill(&[vec![10, 20]]).unwrap();
+    let tok = sessions[0].greedy_next();
+    sessions[0].tokens.push(tok);
+    let (first, _) = sessions.split_at_mut(1);
+    let mut refs = vec![&mut first[0]];
+    m.decode_step(&mut refs).unwrap();
+
+    // B joins mid-stream; both step together from here
+    sessions.extend(m.prefill(&[vec![500]]).unwrap());
+    loop {
+        for s in sessions.iter_mut() {
+            if s.tokens.len() < target {
+                let tok = s.greedy_next();
+                s.tokens.push(tok);
+            }
+        }
+        let mut refs: Vec<&mut DecodeSession> = sessions
+            .iter_mut()
+            .filter(|s| s.tokens.len() < target)
+            .collect();
+        if refs.is_empty() {
+            break;
+        }
+        m.decode_step(&mut refs).unwrap();
+    }
+    assert_eq!(sessions[0].tokens, solo_a[0]);
+    assert_eq!(sessions[1].tokens, solo_b[0]);
+}
+
+#[test]
+fn recompute_fallback_is_always_available() {
+    // a model that never opted into decode still serves the session API
+    let m = Plain(ModelConfig::builtin("nt-tiny").unwrap());
+    assert!(!m.supports_decode());
+    let mut sessions = m.prefill(&[vec![1, 2, 3]]).unwrap();
+    assert!(matches!(sessions[0].kv, KvCache::Recompute));
+    let tok = sessions[0].greedy_next();
+    sessions[0].tokens.push(tok);
+    let (head, _) = sessions.split_at_mut(1);
+    let mut refs = vec![&mut head[0]];
+    m.decode_step(&mut refs).unwrap();
+    assert_eq!(sessions[0].logits.len(), m.config().vocab);
+}

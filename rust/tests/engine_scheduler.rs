@@ -386,6 +386,147 @@ fn oversized_group_chunked_to_model_bucket() {
 }
 
 #[test]
+fn riders_with_different_lengths_retire_independently() {
+    // continuous batching: the short rider leaves at prefill, the long one
+    // keeps stepping alone — nobody waits for a batch-mate to finish
+    let log = log();
+    let mock = Mock::new("m", log.clone());
+    let mut engine = Engine::builder()
+        .model_with(
+            "m",
+            ModelTuning { max_batch: 4, batch_window: Duration::from_millis(5) },
+            mock.factory(),
+        )
+        .warmup(false)
+        .build()
+        .unwrap();
+    let client = engine.client();
+    let long = client.submit("m", GenRequest::greedy(vec![1, 10], 3)).unwrap();
+    let short = client.submit("m", GenRequest::greedy(vec![1, 20], 1)).unwrap();
+    engine.start().unwrap();
+
+    let r_long = long.wait().unwrap();
+    let r_short = short.wait().unwrap();
+    assert_eq!(r_long.tokens, vec![1, 10, 11, 12, 13]);
+    assert_eq!(r_short.tokens, vec![1, 20, 21]);
+    assert_eq!(r_long.new_tokens().len(), 3);
+    assert_eq!(r_short.new_tokens().len(), 1);
+
+    let stats = engine.shutdown().unwrap();
+    let m = stats.model("m").unwrap();
+    assert_eq!(m.served, 2);
+    assert_eq!(m.batches, 1, "one shared prefill");
+    assert_eq!(m.decode_steps, 2, "the long rider steps on alone");
+    assert_eq!(m.prefill_tokens, 4, "both prompts prefilled");
+    assert_eq!(m.decode_tokens, 2, "two tokens produced by decode steps");
+    assert_eq!(m.max_batch_seen, 2);
+    // prefill of 2, then decode steps of 1 (the short rider already left)
+    let sizes: Vec<usize> = log.lock().unwrap().iter().map(|e| e.1).collect();
+    assert_eq!(sizes, vec![2, 1, 1]);
+}
+
+#[test]
+fn midstream_admission_joins_running_batch() {
+    // a request arriving while the lane streams is admitted into a free
+    // slot between steps and rides the running decode batch
+    let log = log();
+    let mock = Mock::new("m", log.clone());
+    let mut engine = Engine::builder()
+        .model_with(
+            "m",
+            // two slots: C must wait until B's slot frees, then join A
+            ModelTuning { max_batch: 2, batch_window: Duration::from_millis(5) },
+            mock.factory(),
+        )
+        .warmup(false)
+        .build()
+        .unwrap();
+    let client = engine.client();
+    let a = client.submit("m", GenRequest::greedy(vec![1, 10], 4)).unwrap();
+    let b = client.submit("m", GenRequest::greedy(vec![1, 20], 1)).unwrap();
+    let c = client.submit("m", GenRequest::greedy(vec![1, 30], 2)).unwrap();
+    engine.start().unwrap();
+
+    assert_eq!(a.wait().unwrap().tokens, vec![1, 10, 11, 12, 13, 14]);
+    assert_eq!(b.wait().unwrap().tokens, vec![1, 20, 21]);
+    assert_eq!(c.wait().unwrap().tokens, vec![1, 30, 31, 32]);
+
+    let stats = engine.shutdown().unwrap();
+    let m = stats.model("m").unwrap();
+    assert_eq!(m.served, 3);
+    assert_eq!(m.batches, 2, "A+B share a prefill; C gets its own on admission");
+    assert_eq!(m.prefill_tokens, 6);
+    // A decodes 3 tokens, C decodes 1 — one of those steps is shared
+    assert_eq!(m.decode_tokens, 4);
+    assert_eq!(m.decode_steps, 3);
+    let sizes: Vec<usize> = log.lock().unwrap().iter().map(|e| e.1).collect();
+    // prefill[A,B], step[A], prefill[C], step[A,C], step[A]
+    assert_eq!(sizes, vec![2, 1, 1, 2, 1], "C must join A's running batch");
+}
+
+#[test]
+fn mixed_sample_configs_ride_one_batch() {
+    // per-request sampling streams: a greedy and a sampled request share
+    // the same prefill and decode batches (the old scheduler split them)
+    let log = log();
+    let mock = Mock::new("m", log.clone());
+    let mut engine = Engine::builder()
+        .model_with(
+            "m",
+            ModelTuning { max_batch: 4, batch_window: Duration::from_millis(5) },
+            mock.factory(),
+        )
+        .warmup(false)
+        .build()
+        .unwrap();
+    let client = engine.client();
+    let greedy = client.submit("m", GenRequest::greedy(vec![1, 30], 2)).unwrap();
+    let sampled_cfg = SampleConfig { temperature: 1.0, stochastic_prefix: 0, seed: 7 };
+    let sampled = client
+        .submit(
+            "m",
+            GenRequest { prompt: vec![1, 40], max_new: 2, sample: sampled_cfg, deadline: None },
+        )
+        .unwrap();
+    engine.start().unwrap();
+
+    // prefix 0 < prompt_len means the "sampled" request is greedy-effective:
+    // both outputs are deterministic even though the configs differ
+    assert_eq!(greedy.wait().unwrap().tokens, vec![1, 30, 31, 32]);
+    assert_eq!(sampled.wait().unwrap().tokens, vec![1, 40, 41, 42]);
+
+    let stats = engine.shutdown().unwrap();
+    let m = stats.model("m").unwrap();
+    assert_eq!(m.batches, 1, "different sample configs must share one prefill");
+    let sizes: Vec<usize> = log.lock().unwrap().iter().map(|e| e.1).collect();
+    assert_eq!(sizes, vec![2, 2], "prefill and the one decode step both carry 2");
+}
+
+#[test]
+fn zero_max_new_answered_without_generation() {
+    // a degenerate request (nothing to generate) is answered directly and
+    // never burns a prefill or occupies a slot
+    let log = log();
+    let mock = Mock::new("m", log.clone());
+    let mut engine = Engine::builder()
+        .model("m", mock.factory())
+        .warmup(false)
+        .build()
+        .unwrap();
+    let client = engine.client();
+    let t = client.submit("m", GenRequest::greedy(vec![4, 5, 6], 0)).unwrap();
+    engine.start().unwrap();
+    let r = t.wait().unwrap();
+    assert_eq!(r.tokens, vec![4, 5, 6]);
+    assert!(r.new_tokens().is_empty());
+    let stats = engine.shutdown().unwrap();
+    let m = stats.model("m").unwrap();
+    assert_eq!(m.served, 1);
+    assert_eq!(m.batches, 0);
+    assert!(log.lock().unwrap().is_empty(), "no generation call for max_new=0");
+}
+
+#[test]
 fn unknown_model_and_empty_prompt_rejected_at_submit() {
     let mock = Mock::new("m", log());
     let mut engine = Engine::builder()
