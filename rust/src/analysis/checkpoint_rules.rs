@@ -1,0 +1,350 @@
+//! NT02xx — quantized checkpoint audit (the `checkpoint` lint).
+//!
+//! Cross-checks a `.ntz` checkpoint against itself (every tensor
+//! `QuantizedModel::load` would touch, pack-width round-trips), against the
+//! target architecture (linear/scale geometry), and against the manifest
+//! (exported grains, model record drift, decode cache spec) — all without
+//! constructing a runtime.  `QuantizedModel::load` fail-fasts on the first
+//! missing tensor; this rule reports every problem in one pass.
+
+use std::path::Path;
+
+use crate::model::{ModelConfig, NormKind};
+use crate::quant::QuantScheme;
+use crate::tensor::{load_ntz, packed_len, Tensor};
+
+use super::codes;
+use super::diagnostics::{Diagnostic, Report};
+use super::{CheckContext, Lint};
+
+pub struct CheckpointLint;
+
+/// First element of a small i32 meta tensor, if well-formed.
+fn meta_i32(t: Option<&Tensor>) -> Option<i32> {
+    t.and_then(|v| v.as_i32().ok()).and_then(|s| s.first()).copied()
+}
+
+fn missing(origin: &str, key: &str) -> Diagnostic {
+    Diagnostic::error(
+        codes::CKPT_TENSOR,
+        format!("checkpoint: missing or mistyped tensor `{key}`"),
+    )
+    .at(origin)
+    .field(key)
+    .fix("re-run `normtweak quantize` to regenerate the checkpoint")
+}
+
+/// Audit one packed linear: shape vs architecture, pack width, byte
+/// length, scale geometry, bias presence.
+#[allow(clippy::too_many_arguments)]
+fn check_linear(
+    tensors: &std::collections::BTreeMap<String, Tensor>,
+    prefix: &str,
+    name: &str,
+    want_k: usize,
+    want_n: usize,
+    scheme: Option<QuantScheme>,
+    origin: &str,
+    report: &mut Report,
+) {
+    let key = |suffix: &str| format!("{prefix}{name}.{suffix}");
+
+    // logical shape [K, N]
+    let shape = tensors.get(&key("shape")).and_then(|t| t.as_i32().ok()).and_then(|s| {
+        (s.len() == 2).then(|| (s[0] as usize, s[1] as usize))
+    });
+    let (k, n) = match shape {
+        None => {
+            report.push(missing(origin, &key("shape")));
+            (want_k, want_n)
+        }
+        Some((k, n)) => {
+            if (k, n) != (want_k, want_n) {
+                report.push(
+                    Diagnostic::error(
+                        codes::CKPT_GEOMETRY,
+                        format!(
+                            "checkpoint: `{}` is [{k}, {n}] but the architecture \
+                             expects [{want_k}, {want_n}]",
+                            key("shape")
+                        ),
+                    )
+                    .at(origin)
+                    .field(key("shape"))
+                    .fix("re-quantize against the deployed model architecture"),
+                );
+            }
+            (k, n)
+        }
+    };
+
+    // per-linear storage width; absent falls back to the model-level width
+    // (mixed precision writes pbits explicitly)
+    let pbits = match tensors.get(&key("pbits")) {
+        Some(t) => meta_i32(Some(t)).map(|b| b as u8),
+        None => scheme.and_then(|s| s.pack_bits().ok()),
+    };
+    match pbits {
+        Some(b) if [2, 4, 8].contains(&b) => {
+            if let Some(t) = tensors.get(&key("packed")) {
+                match t.as_u8() {
+                    Err(_) => report.push(missing(origin, &key("packed"))),
+                    Ok(data) => {
+                        let want = packed_len(k * n, b);
+                        if data.len() != want {
+                            report.push(
+                                Diagnostic::error(
+                                    codes::CKPT_PACK,
+                                    format!(
+                                        "checkpoint: `{}` has {} bytes but [{k}, {n}] \
+                                         at {b}-bit storage packs to {want} — the codes \
+                                         would not round-trip",
+                                        key("packed"),
+                                        data.len()
+                                    ),
+                                )
+                                .at(origin)
+                                .field(key("packed"))
+                                .fix("re-quantize; packed bytes and shape disagree"),
+                            );
+                        }
+                    }
+                }
+            } else {
+                report.push(missing(origin, &key("packed")));
+            }
+        }
+        Some(b) => report.push(
+            Diagnostic::error(
+                codes::CKPT_PACK,
+                format!(
+                    "checkpoint: `{}` records pack width {b}, which has no packed \
+                     storage (supported: 2, 4, 8)",
+                    key("pbits")
+                ),
+            )
+            .at(origin)
+            .field(key("pbits"))
+            .fix("re-quantize; 3-bit codes must be stored in 4-bit slots"),
+        ),
+        // no pbits and no usable model-level scheme: the meta check
+        // already reported why
+        None => {}
+    }
+
+    // scales are f32 [G, N]
+    match tensors.get(&key("scales")) {
+        None => report.push(missing(origin, &key("scales"))),
+        Some(sc) => {
+            let want_g = match scheme.and_then(|s| s.group_size) {
+                None => Some(1),
+                Some(g) if g > 0 && k % g == 0 => Some(k / g),
+                Some(_) => None, // indivisible group: reported via meta/grain
+            };
+            let ok = sc.shape.len() == 2
+                && sc.shape[1] == n
+                && want_g.map_or(true, |g| sc.shape[0] == g);
+            if !ok {
+                report.push(
+                    Diagnostic::error(
+                        codes::CKPT_GEOMETRY,
+                        format!(
+                            "checkpoint: `{}` has shape {:?} but the scheme expects \
+                             [{}, {n}] (groups x out-channels)",
+                            key("scales"),
+                            sc.shape,
+                            want_g.map_or("G".to_string(), |g| g.to_string()),
+                        ),
+                    )
+                    .at(origin)
+                    .field(key("scales"))
+                    .fix("re-quantize at the deployed grain"),
+                );
+            }
+        }
+    }
+    if !tensors.contains_key(&key("bias")) {
+        report.push(missing(origin, &key("bias")));
+    }
+}
+
+impl Lint for CheckpointLint {
+    fn name(&self) -> &'static str {
+        "checkpoint"
+    }
+
+    fn run(&self, ctx: &CheckContext, report: &mut Report) {
+        let Some(path) = &ctx.ckpt_path else { return };
+        let origin = path.display().to_string();
+        let tensors = match load_ntz(path) {
+            Ok(t) => t,
+            Err(e) => {
+                report.push(
+                    Diagnostic::error(
+                        codes::CKPT_UNREADABLE,
+                        format!("checkpoint unreadable: {e}"),
+                    )
+                    .at(origin)
+                    .fix("re-run `normtweak quantize --out <ckpt>.ntz`"),
+                );
+                return;
+            }
+        };
+
+        // model-level scheme from the meta tensors
+        let bits = meta_i32(tensors.get("meta.bits"));
+        let group = meta_i32(tensors.get("meta.group"));
+        if bits.is_none() {
+            report.push(missing(&origin, "meta.bits"));
+        }
+        if group.is_none() {
+            report.push(missing(&origin, "meta.group"));
+        }
+        let scheme = bits.map(|b| QuantScheme {
+            bits: b as u8,
+            group_size: match group {
+                Some(g) if g > 0 => Some(g as usize),
+                _ => None,
+            },
+        });
+        if let Some(s) = scheme {
+            if let Err(e) = s.pack_bits() {
+                report.push(
+                    Diagnostic::error(codes::CKPT_PACK, format!("checkpoint: {e}"))
+                        .at(&origin)
+                        .field("meta.bits")
+                        .fix("re-quantize at a supported width (2, 3, 4, or 8 bits)"),
+                );
+            }
+        }
+
+        // cross-checks against the manifest
+        if let Some(manifest) = &ctx.manifest {
+            if let Some(s) = scheme {
+                let tag = s.group_tag();
+                if let Err(e) = manifest.validate_grain(&tag) {
+                    report.push(
+                        Diagnostic::error(codes::CKPT_GRAIN, format!("checkpoint: {e}"))
+                            .at(&origin)
+                            .field("meta.group")
+                            .fix(format!(
+                                "re-run the AOT export with `--groups` including `{tag}`, \
+                                 or re-quantize at an exported grain"
+                            )),
+                    );
+                }
+            }
+            if let Some(cfg) = &ctx.model {
+                match manifest.model_field_mismatches(cfg) {
+                    None => report.push(
+                        Diagnostic::error(
+                            codes::MODEL_UNKNOWN,
+                            format!(
+                                "model `{}` not in manifest (manifest records: {})",
+                                cfg.name,
+                                manifest.model_names().join(", ")
+                            ),
+                        )
+                        .at(&origin)
+                        .field(format!("models.{}", cfg.name))
+                        .fix("re-run the AOT export including this model"),
+                    ),
+                    Some(diffs) => {
+                        for (field, manifest_val, registry_val) in diffs {
+                            report.push(
+                                Diagnostic::error(
+                                    codes::MODEL_DRIFT,
+                                    format!(
+                                        "model `{}` config mismatch between Rust registry \
+                                         and manifest: `{field}` is {manifest_val} in the \
+                                         manifest but {registry_val} in the registry",
+                                        cfg.name
+                                    ),
+                                )
+                                .at(&origin)
+                                .field(format!("models.{}.{field}", cfg.name))
+                                .fix("re-run the AOT export or fix the Rust registry"),
+                            );
+                        }
+                    }
+                }
+                if let Err(e) = manifest.verify_decode(cfg) {
+                    report.push(
+                        Diagnostic::error(codes::DECODE_CACHE_DRIFT, format!("{e}"))
+                            .at(&origin)
+                            .field(format!("decode.caches.{}", cfg.name))
+                            .fix("re-run the AOT export so the decode caches match"),
+                    );
+                }
+            }
+        }
+
+        // architecture checks need a model config
+        let Some(cfg) = &ctx.model else { return };
+        for key in ["tok_emb", "pos_emb", "lnf.g"] {
+            if !tensors.contains_key(key) {
+                report.push(missing(&origin, key));
+            }
+        }
+        let ln = cfg.norm == NormKind::LayerNorm;
+        if ln && !tensors.contains_key("lnf.b") {
+            report.push(missing(&origin, "lnf.b"));
+        }
+        for i in 0..cfg.n_layer {
+            let prefix = format!("block{i}.");
+            for norm in ["ln1", "ln2"] {
+                if !tensors.contains_key(&format!("{prefix}{norm}.g")) {
+                    report.push(missing(&origin, &format!("{prefix}{norm}.g")));
+                }
+                if ln && !tensors.contains_key(&format!("{prefix}{norm}.b")) {
+                    report.push(missing(&origin, &format!("{prefix}{norm}.b")));
+                }
+            }
+            for (name, k, n) in cfg.linear_shapes() {
+                check_linear(&tensors, &prefix, name, k, n, scheme, &origin, report);
+            }
+        }
+    }
+}
+
+/// Convenience for callers that only have a checkpoint on disk.
+#[allow(dead_code)]
+pub fn check_checkpoint(path: &Path, model: Option<ModelConfig>) -> Report {
+    let ctx = CheckContext {
+        ckpt_path: Some(path.to_path_buf()),
+        model,
+        ..CheckContext::default()
+    };
+    let mut report = Report::new();
+    CheckpointLint.run(&ctx, &mut report);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::run_lints;
+
+    #[test]
+    fn missing_checkpoint_is_nt0201() {
+        let ctx = CheckContext {
+            ckpt_path: Some(std::path::PathBuf::from("/definitely/missing.ntz")),
+            ..CheckContext::default()
+        };
+        assert_eq!(run_lints(&ctx).codes(), vec![codes::CKPT_UNREADABLE]);
+    }
+
+    #[test]
+    fn empty_archive_reports_meta_and_structure() {
+        let dir = std::env::temp_dir().join("nt_ckpt_lint_empty");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("empty.ntz");
+        crate::tensor::save_ntz(&path, &std::collections::BTreeMap::new()).unwrap();
+        let report =
+            check_checkpoint(&path, Some(ModelConfig::builtin("nt-tiny").unwrap()));
+        let codes_seen = report.codes();
+        // meta.bits, meta.group, tok_emb, ... all missing — collected, not
+        // first-error
+        assert!(codes_seen.iter().filter(|c| **c == codes::CKPT_TENSOR).count() > 5);
+    }
+}

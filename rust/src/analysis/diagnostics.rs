@@ -1,0 +1,272 @@
+//! Structured diagnostics: the [`Diagnostic`] record every lint rule emits
+//! and the [`Report`] that collects them.
+//!
+//! Unlike the crate's `validate()` functions — which return on the first
+//! problem — a report keeps collecting, so one `normtweak check` run over a
+//! corrupted artifact set surfaces *every* finding.  A report converts back
+//! into the crate's fail-fast world through [`Report::into_result`], which
+//! preserves the old first-error behavior (an `Err` carrying the full
+//! message list) for the pipeline call sites that still gate on it.
+
+use crate::error::{Error, Result};
+use crate::util::json::{arr, n, obj, s, Json};
+
+/// How bad a finding is.  `Error` aborts the consuming command; `Warn`
+/// aborts only under `--deny-warnings`; `Info` never aborts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Warn,
+    Info,
+}
+
+impl Severity {
+    /// The JSON / human-render name.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warn => "warning",
+            Severity::Info => "info",
+        }
+    }
+}
+
+/// One finding: a stable code (`NT0103`), a severity, provenance (which
+/// file, which JSON path / config field), the message, and a suggested fix.
+///
+/// Codes are stable across releases so CI can gate on them; the full table
+/// lives in the [`crate::analysis`] module docs.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Stable diagnostic code (`"NT0103"`); see the module-level table.
+    pub code: &'static str,
+    pub severity: Severity,
+    /// Where the finding came from: a file path or a CLI flag.
+    pub origin: Option<String>,
+    /// JSON path / config field inside the origin (`"decode.caches.m.shape"`).
+    pub field: Option<String>,
+    pub message: String,
+    /// Suggested fix, when one is mechanical enough to state.
+    pub fix: Option<String>,
+}
+
+impl Diagnostic {
+    pub fn new(code: &'static str, severity: Severity, message: impl Into<String>) -> Self {
+        Diagnostic { code, severity, origin: None, field: None, message: message.into(), fix: None }
+    }
+
+    pub fn error(code: &'static str, message: impl Into<String>) -> Self {
+        Diagnostic::new(code, Severity::Error, message)
+    }
+
+    pub fn warn(code: &'static str, message: impl Into<String>) -> Self {
+        Diagnostic::new(code, Severity::Warn, message)
+    }
+
+    pub fn info(code: &'static str, message: impl Into<String>) -> Self {
+        Diagnostic::new(code, Severity::Info, message)
+    }
+
+    /// Attach the originating file path / CLI flag.
+    pub fn at(mut self, origin: impl Into<String>) -> Self {
+        self.origin = Some(origin.into());
+        self
+    }
+
+    /// Attach the offending JSON path / config field.
+    pub fn field(mut self, field: impl Into<String>) -> Self {
+        self.field = Some(field.into());
+        self
+    }
+
+    /// Attach a suggested fix.
+    pub fn fix(mut self, fix: impl Into<String>) -> Self {
+        self.fix = Some(fix.into());
+        self
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("code", s(self.code)),
+            ("severity", s(self.severity.as_str())),
+            ("message", s(self.message.clone())),
+        ];
+        if let Some(o) = &self.origin {
+            pairs.push(("origin", s(o.clone())));
+        }
+        if let Some(f) = &self.field {
+            pairs.push(("field", s(f.clone())));
+        }
+        if let Some(f) = &self.fix {
+            pairs.push(("fix", s(f.clone())));
+        }
+        obj(pairs)
+    }
+}
+
+/// An ordered collection of findings (rule order, then emission order —
+/// deterministic for golden tests).
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn new() -> Self {
+        Report::default()
+    }
+
+    pub fn push(&mut self, d: Diagnostic) {
+        self.diagnostics.push(d);
+    }
+
+    pub fn extend(&mut self, ds: Vec<Diagnostic>) {
+        self.diagnostics.extend(ds);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    pub fn errors(&self) -> usize {
+        self.count(Severity::Error)
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.count(Severity::Warn)
+    }
+
+    pub fn infos(&self) -> usize {
+        self.count(Severity::Info)
+    }
+
+    fn count(&self, sev: Severity) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == sev).count()
+    }
+
+    /// The emitted codes, in emission order (golden-test hook).
+    pub fn codes(&self) -> Vec<&'static str> {
+        self.diagnostics.iter().map(|d| d.code).collect()
+    }
+
+    /// Whether the consuming command should abort.
+    pub fn should_fail(&self, deny_warnings: bool) -> bool {
+        self.errors() > 0 || (deny_warnings && self.warnings() > 0)
+    }
+
+    /// Machine-readable report (the `--format json` payload); emits through
+    /// the in-tree `util::json` and round-trips through `Json::parse`.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("tool", s("normtweak-check")),
+            ("format", n(1.0)),
+            ("errors", n(self.errors() as f64)),
+            ("warnings", n(self.warnings() as f64)),
+            ("infos", n(self.infos() as f64)),
+            ("diagnostics", arr(self.diagnostics.iter().map(|d| d.to_json()).collect())),
+        ])
+    }
+
+    /// Compiler-style human rendering, one block per finding plus a
+    /// one-line summary.
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&format!("{}[{}]: {}\n", d.severity.as_str(), d.code, d.message));
+            match (&d.origin, &d.field) {
+                (Some(o), Some(f)) => out.push_str(&format!("  --> {o}: {f}\n")),
+                (Some(o), None) => out.push_str(&format!("  --> {o}\n")),
+                (None, Some(f)) => out.push_str(&format!("  --> {f}\n")),
+                (None, None) => {}
+            }
+            if let Some(fix) = &d.fix {
+                out.push_str(&format!("  fix: {fix}\n"));
+            }
+        }
+        out.push_str(&format!(
+            "check: {} error(s), {} warning(s), {} info\n",
+            self.errors(),
+            self.warnings(),
+            self.infos()
+        ));
+        out
+    }
+
+    /// Convert back into the crate's fail-fast world: `Ok(())` when no
+    /// `Error`-severity finding was collected, otherwise `Err` through the
+    /// given variant constructor (e.g. `Error::Artifact`), carrying *every*
+    /// error message — the first-error call sites keep aborting, but with
+    /// the full list instead of just the first finding.
+    pub fn into_result(self, wrap: fn(String) -> Error) -> Result<()> {
+        let msgs: Vec<String> = self
+            .diagnostics
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .map(|d| format!("[{}] {}", d.code, d.message))
+            .collect();
+        if msgs.is_empty() {
+            return Ok(());
+        }
+        Err(wrap(msgs.join("; ")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_should_fail() {
+        let mut r = Report::new();
+        assert!(!r.should_fail(true));
+        r.push(Diagnostic::warn("NT0403", "w"));
+        assert!(!r.should_fail(false));
+        assert!(r.should_fail(true));
+        r.push(Diagnostic::error("NT0101", "e"));
+        assert!(r.should_fail(false));
+        assert_eq!(r.errors(), 1);
+        assert_eq!(r.warnings(), 1);
+        assert_eq!(r.codes(), vec!["NT0403", "NT0101"]);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut r = Report::new();
+        r.push(
+            Diagnostic::error("NT0103", "missing key `calib_batch`")
+                .at("artifacts/manifest.json")
+                .field("calib_batch")
+                .fix("re-run `make artifacts`"),
+        );
+        let j = r.to_json();
+        let back = Json::parse(&j.emit()).unwrap();
+        assert_eq!(j, back);
+        assert_eq!(back.get("errors").unwrap().as_usize().unwrap(), 1);
+        let d = &back.get("diagnostics").unwrap().as_arr().unwrap()[0];
+        assert_eq!(d.get("code").unwrap().as_str().unwrap(), "NT0103");
+        assert_eq!(d.get("field").unwrap().as_str().unwrap(), "calib_batch");
+    }
+
+    #[test]
+    fn into_result_collects_all_errors() {
+        let mut r = Report::new();
+        r.push(Diagnostic::error("NT0104", "first"));
+        r.push(Diagnostic::warn("NT0403", "not included"));
+        r.push(Diagnostic::error("NT0105", "second"));
+        let err = r.into_result(Error::Artifact).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("first") && msg.contains("second"), "{msg}");
+        assert!(!msg.contains("not included"), "{msg}");
+        assert!(Report::new().into_result(Error::Artifact).is_ok());
+    }
+
+    #[test]
+    fn human_render_shows_provenance() {
+        let mut r = Report::new();
+        r.push(Diagnostic::warn("NT0403", "batch too big").at("--serve-config").field("max_batch"));
+        let text = r.render_human();
+        assert!(text.contains("warning[NT0403]"), "{text}");
+        assert!(text.contains("--serve-config: max_batch"), "{text}");
+        assert!(text.contains("0 error(s), 1 warning(s)"), "{text}");
+    }
+}

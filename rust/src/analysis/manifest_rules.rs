@@ -1,0 +1,507 @@
+//! NT01xx — `manifest.json` schema & consistency (the `manifest` lint).
+//!
+//! A diagnostics-collecting re-implementation of the strict
+//! `ArtifactManifest::load` walk: where the loader fail-fasts on the first
+//! `Error::Artifact`, this rule keeps walking the raw JSON and reports
+//! *every* violation with its JSON path, plus two checks the loader cannot
+//! express — graph HLO files actually present on disk (NT0108) and
+//! duplicate `(model, graph)` entries that the lookup index would silently
+//! collapse (NT0109).
+
+use std::collections::BTreeSet;
+
+use crate::util::json::Json;
+
+use super::codes;
+use super::diagnostics::{Diagnostic, Report};
+use super::{CheckContext, Lint};
+
+pub struct ManifestLint;
+
+/// NT0103: a required key is missing or has the wrong type.
+fn key_diag(origin: &str, field: &str, msg: String) -> Diagnostic {
+    Diagnostic::error(codes::MANIFEST_KEY, msg)
+        .at(origin)
+        .field(field)
+        .fix("re-run the AOT export (`make artifacts`)")
+}
+
+fn get_usize(root: &Json, key: &str, origin: &str, report: &mut Report) -> Option<usize> {
+    match root.get(key) {
+        None => {
+            report.push(key_diag(origin, key, format!("manifest: missing key `{key}`")));
+            None
+        }
+        Some(v) => match v.as_usize() {
+            Some(u) => Some(u),
+            None => {
+                report.push(key_diag(origin, key, format!("manifest: `{key}` not a number")));
+                None
+            }
+        },
+    }
+}
+
+/// Parse a bucket list strictly; `Some` only when every entry is numeric
+/// and the list is non-empty (partial lists would shift `bucket_for`).
+fn numeric_list(
+    v: &Json,
+    field: &str,
+    code: &'static str,
+    origin: &str,
+    report: &mut Report,
+) -> Option<Vec<usize>> {
+    let Some(items) = v.as_arr() else {
+        report.push(
+            Diagnostic::error(code, format!("manifest: `{field}` not an array"))
+                .at(origin)
+                .field(field)
+                .fix("re-run the AOT export with a numeric bucket list"),
+        );
+        return None;
+    };
+    let mut out = Vec::new();
+    for it in items {
+        match it.as_usize() {
+            Some(u) => out.push(u),
+            None => {
+                report.push(
+                    Diagnostic::error(code, format!("manifest: non-numeric entry in `{field}`"))
+                        .at(origin)
+                        .field(field)
+                        .fix("re-run the AOT export with a numeric bucket list"),
+                );
+                return None;
+            }
+        }
+    }
+    if out.is_empty() {
+        report.push(
+            Diagnostic::error(
+                code,
+                format!("manifest: empty `{field}` (at least one batch bucket is required)"),
+            )
+            .at(origin)
+            .field(field)
+            .fix("re-run the AOT export with at least one bucket"),
+        );
+        return None;
+    }
+    Some(out)
+}
+
+fn check_groups(root: &Json, origin: &str, report: &mut Report) {
+    let Some(g) = root.get("groups") else {
+        report.push(key_diag(origin, "groups", "manifest: missing key `groups`".to_string()));
+        return;
+    };
+    let Some(map) = g.as_obj() else {
+        report.push(
+            Diagnostic::error(codes::MANIFEST_GROUPS, "manifest: `groups` not an object")
+                .at(origin)
+                .field("groups")
+                .fix("re-run the AOT export"),
+        );
+        return;
+    };
+    if map.is_empty() {
+        report.push(
+            Diagnostic::error(
+                codes::MANIFEST_GROUPS,
+                "manifest: empty `groups` (at least one exported grain is required)",
+            )
+            .at(origin)
+            .field("groups")
+            .fix("re-run the AOT export with `--groups`"),
+        );
+    }
+    for (tag, size) in map {
+        let field = format!("groups.{tag}");
+        let Some(size) = size.as_usize() else {
+            report.push(
+                Diagnostic::error(
+                    codes::MANIFEST_GROUPS,
+                    format!("manifest: group `{tag}` not a number"),
+                )
+                .at(origin)
+                .field(field)
+                .fix("re-run the AOT export"),
+            );
+            continue;
+        };
+        // the tag is derived from the size at lookup time
+        // (QuantScheme::group_tag), so a drifted {"g32": 64} would pass
+        // grain validation and die at PJRT shape mismatch mid-run
+        let expected = if size == 0 { "pc".to_string() } else { format!("g{size}") };
+        if *tag != expected {
+            report.push(
+                Diagnostic::error(
+                    codes::MANIFEST_GROUPS,
+                    format!(
+                        "manifest: group tag `{tag}` inconsistent with size {size} \
+                         (expected `{expected}`)"
+                    ),
+                )
+                .at(origin)
+                .field(field)
+                .fix("re-run the AOT export; grain tags must derive from group sizes"),
+            );
+        }
+    }
+}
+
+fn check_decode(
+    root: &Json,
+    main_buckets: Option<&Vec<usize>>,
+    origin: &str,
+    report: &mut Report,
+) {
+    // absent decode = recompute fallback, not an error
+    let Some(d) = root.get("decode") else { return };
+    let dec_diag = |field: String, msg: String| {
+        Diagnostic::error(codes::DECODE_RECORD, msg)
+            .at(origin)
+            .field(field)
+            .fix("re-run the AOT export with the decode graph set")
+    };
+    let dbuckets = match d.get("buckets") {
+        None => {
+            report.push(dec_diag(
+                "decode.buckets".to_string(),
+                "manifest: missing key `decode.buckets`".to_string(),
+            ));
+            None
+        }
+        Some(v) => numeric_list(v, "decode.buckets", codes::DECODE_RECORD, origin, report),
+    };
+    match d.get("caches") {
+        None => report.push(dec_diag(
+            "decode.caches".to_string(),
+            "manifest: missing key `decode.caches`".to_string(),
+        )),
+        Some(c) => match c.as_obj() {
+            None => report.push(dec_diag(
+                "decode.caches".to_string(),
+                "manifest: `decode.caches` not an object".to_string(),
+            )),
+            Some(map) => {
+                for (name, cache) in map {
+                    let base = format!("decode.caches.{name}");
+                    if cache.get("n_layer").and_then(|v| v.as_usize()).is_none() {
+                        report.push(dec_diag(
+                            format!("{base}.n_layer"),
+                            format!("decode cache `{name}`: missing or non-numeric `n_layer`"),
+                        ));
+                    }
+                    match cache.get("shape").map(|s| s.as_arr()) {
+                        None | Some(None) => report.push(dec_diag(
+                            format!("{base}.shape"),
+                            format!("decode cache shape of `{name}` missing or not an array"),
+                        )),
+                        Some(Some(dims)) => {
+                            if dims.iter().any(|d| d.as_usize().is_none()) {
+                                report.push(dec_diag(
+                                    format!("{base}.shape"),
+                                    format!(
+                                        "manifest: non-numeric dim in decode cache shape \
+                                         of `{name}`"
+                                    ),
+                                ));
+                            } else if dims.len() != 3 {
+                                report.push(dec_diag(
+                                    format!("{base}.shape"),
+                                    format!(
+                                        "decode cache shape of `{name}` must be \
+                                         [n_head, seq, d_head], got {} dims",
+                                        dims.len()
+                                    ),
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+        },
+    }
+    // the scheduler chunks decode steps by the *main* bucket cap: a decode
+    // set that cannot fit the largest main bucket fails mid-request
+    if let (Some(main), Some(dec)) = (main_buckets, &dbuckets) {
+        let main_max = main.iter().copied().max().unwrap_or(0);
+        if dec.iter().copied().max().unwrap_or(0) < main_max {
+            let listed = dec.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(", ");
+            report.push(
+                Diagnostic::error(
+                    codes::DECODE_BUCKET_GAP,
+                    format!(
+                        "decode buckets ({listed}) cannot fit the largest exported \
+                         batch bucket {main_max} — re-run the AOT export with \
+                         matching bucket sets"
+                    ),
+                )
+                .at(origin)
+                .field("decode.buckets")
+                .fix(format!("re-export with a decode bucket >= {main_max}")),
+            );
+        }
+    }
+}
+
+fn check_models(root: &Json, origin: &str, report: &mut Report) {
+    let Some(ms) = root.get("models") else {
+        report.push(key_diag(origin, "models", "manifest: missing key `models`".to_string()));
+        return;
+    };
+    let Some(map) = ms.as_obj() else {
+        report.push(key_diag(origin, "models", "manifest: `models` not an object".to_string()));
+        return;
+    };
+    for (name, m) in map {
+        for k in ["n_layer", "d_model", "n_head", "d_ff", "vocab", "seq"] {
+            if m.get(k).and_then(|v| v.as_usize()).is_none() {
+                report.push(key_diag(
+                    origin,
+                    &format!("models.{name}.{k}"),
+                    format!("manifest: model `{name}`: missing or non-numeric `{k}`"),
+                ));
+            }
+        }
+        if m.get("norm").and_then(|v| v.as_str()).is_none() {
+            report.push(key_diag(
+                origin,
+                &format!("models.{name}.norm"),
+                format!(
+                    "manifest: model `{name}`: missing or non-string `norm` \
+                     (accepted: layernorm, rmsnorm)"
+                ),
+            ));
+        }
+    }
+}
+
+fn check_graphs(root: &Json, dir: &std::path::Path, origin: &str, report: &mut Report) {
+    let Some(gs) = root.get("graphs") else {
+        report.push(key_diag(origin, "graphs", "manifest: missing key `graphs`".to_string()));
+        return;
+    };
+    let Some(list) = gs.as_arr() else {
+        report.push(key_diag(origin, "graphs", "manifest: `graphs` not an array".to_string()));
+        return;
+    };
+    let mut seen = BTreeSet::new();
+    for (i, g) in list.iter().enumerate() {
+        let gstr = |k: &str| g.get(k).and_then(|v| v.as_str()).map(str::to_string);
+        let (model, name, file) = (gstr("model"), gstr("name"), gstr("file"));
+        for (k, v) in [("model", &model), ("name", &name), ("file", &file)] {
+            if v.is_none() {
+                report.push(key_diag(
+                    origin,
+                    &format!("graphs[{i}].{k}"),
+                    format!("manifest: graph entry {i}: missing or non-string `{k}`"),
+                ));
+            }
+        }
+        if let (Some(model), Some(name)) = (&model, &name) {
+            if !seen.insert((model.clone(), name.clone())) {
+                report.push(
+                    Diagnostic::error(
+                        codes::GRAPH_DUPLICATE,
+                        format!(
+                            "manifest: duplicate graph entry `{model}.{name}` — the \
+                             lookup index would silently keep only the last one"
+                        ),
+                    )
+                    .at(origin)
+                    .field(format!("graphs[{i}]"))
+                    .fix("re-run the AOT export; each (model, graph) must be unique"),
+                );
+            }
+        }
+        if let Some(file) = &file {
+            if !dir.join(file).exists() {
+                report.push(
+                    Diagnostic::warn(
+                        codes::GRAPH_FILE_MISSING,
+                        format!(
+                            "manifest lists graph file `{file}` but it is missing \
+                             from {}",
+                            dir.display()
+                        ),
+                    )
+                    .at(origin)
+                    .field(format!("graphs[{i}].file"))
+                    .fix("re-run `make artifacts` to regenerate the HLO files"),
+                );
+            }
+        }
+        match g.get("inputs").map(|v| v.as_arr()) {
+            None | Some(None) => report.push(key_diag(
+                origin,
+                &format!("graphs[{i}].inputs"),
+                format!("manifest: graph entry {i}: `inputs` missing or not an array"),
+            )),
+            Some(Some(items)) => {
+                for (j, inp) in items.iter().enumerate() {
+                    let base = format!("graphs[{i}].inputs[{j}]");
+                    for k in ["name", "dtype"] {
+                        if inp.get(k).and_then(|v| v.as_str()).is_none() {
+                            report.push(key_diag(
+                                origin,
+                                &format!("{base}.{k}"),
+                                format!(
+                                    "manifest: graph entry {i} input {j}: missing or \
+                                     non-string `{k}`"
+                                ),
+                            ));
+                        }
+                    }
+                    let shape_ok = inp
+                        .get("shape")
+                        .and_then(|s| s.as_arr())
+                        .is_some_and(|dims| dims.iter().all(|d| d.as_usize().is_some()));
+                    if !shape_ok {
+                        report.push(key_diag(
+                            origin,
+                            &format!("{base}.shape"),
+                            format!(
+                                "manifest: graph entry {i} input {j}: `shape` missing \
+                                 or non-numeric"
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Lint for ManifestLint {
+    fn name(&self) -> &'static str {
+        "manifest"
+    }
+
+    fn run(&self, ctx: &CheckContext, report: &mut Report) {
+        let Some(dir) = &ctx.manifest_dir else { return };
+        let path = dir.join("manifest.json");
+        let origin = path.display().to_string();
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) => {
+                report.push(
+                    Diagnostic::error(
+                        codes::MANIFEST_UNREADABLE,
+                        format!(
+                            "missing manifest.json in {} — run `make artifacts` ({e})",
+                            dir.display()
+                        ),
+                    )
+                    .at(origin)
+                    .fix("run `make artifacts` to export the AOT graph set"),
+                );
+                return;
+            }
+        };
+        let root = match Json::parse(&text) {
+            Ok(j) => j,
+            Err(e) => {
+                report.push(
+                    Diagnostic::error(codes::MANIFEST_PARSE, format!("manifest: {e}"))
+                        .at(origin)
+                        .fix("re-run the AOT export; manifest.json is not valid JSON"),
+                );
+                return;
+            }
+        };
+
+        if let Some(f) = get_usize(&root, "format", &origin, report) {
+            if f != 1 {
+                report.push(key_diag(
+                    &origin,
+                    "format",
+                    format!("manifest format != 1 (got {f}; this runtime reads format 1)"),
+                ));
+            }
+        }
+        get_usize(&root, "calib_batch", &origin, report);
+        let buckets = match root.get("buckets") {
+            None => {
+                report.push(key_diag(
+                    &origin,
+                    "buckets",
+                    "manifest: missing key `buckets`".to_string(),
+                ));
+                None
+            }
+            Some(v) => numeric_list(v, "buckets", codes::MANIFEST_BUCKETS, &origin, report),
+        };
+        check_groups(&root, &origin, report);
+        check_decode(&root, buckets.as_ref(), &origin, report);
+        check_models(&root, &origin, report);
+        check_graphs(&root, dir, &origin, report);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::run_lints;
+
+    fn ctx_for(name: &str, json: &str) -> CheckContext {
+        let dir = std::env::temp_dir().join(format!("nt_manifest_lint_{name}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), json).unwrap();
+        CheckContext { manifest_dir: Some(dir), ..CheckContext::default() }
+    }
+
+    #[test]
+    fn clean_manifest_yields_no_findings() {
+        let ctx = ctx_for(
+            "clean",
+            r#"{"format": 1, "calib_batch": 32, "buckets": [8, 32],
+                "groups": {"pc": 0}, "models": {}, "graphs": []}"#,
+        );
+        let report = run_lints(&ctx);
+        assert!(report.is_empty(), "{:?}", report.codes());
+    }
+
+    #[test]
+    fn collects_every_violation_in_one_run() {
+        // missing calib_batch + drifted grain tag + bad decode rank +
+        // decode bucket gap + duplicate graph: five findings, one pass
+        let ctx = ctx_for(
+            "multi",
+            r#"{"format": 1, "buckets": [8, 32],
+                "groups": {"g32": 64},
+                "decode": {"buckets": [8],
+                           "caches": {"m": {"n_layer": 2, "shape": [4, 128]}}},
+                "models": {},
+                "graphs": [
+                  {"model": "m", "name": "g", "file": "missing.hlo.txt",
+                   "inputs": []},
+                  {"model": "m", "name": "g", "file": "missing.hlo.txt",
+                   "inputs": []}]}"#,
+        );
+        let report = run_lints(&ctx);
+        let codes = report.codes();
+        for want in [
+            codes::MANIFEST_KEY,
+            codes::MANIFEST_GROUPS,
+            codes::DECODE_RECORD,
+            codes::DECODE_BUCKET_GAP,
+            codes::GRAPH_DUPLICATE,
+            codes::GRAPH_FILE_MISSING,
+        ] {
+            assert!(codes.contains(&want), "missing {want} in {codes:?}");
+        }
+    }
+
+    #[test]
+    fn unreadable_and_unparsable_short_circuit() {
+        let ctx = CheckContext {
+            manifest_dir: Some(std::path::PathBuf::from("/definitely/missing")),
+            ..CheckContext::default()
+        };
+        assert_eq!(run_lints(&ctx).codes(), vec![codes::MANIFEST_UNREADABLE]);
+        let ctx = ctx_for("garbage", "{not json");
+        assert_eq!(run_lints(&ctx).codes(), vec![codes::MANIFEST_PARSE]);
+    }
+}

@@ -1,0 +1,443 @@
+//! Pre-flight static analysis — the `normtweak check` subsystem.
+//!
+//! Every failure mode the runtime validates reactively (unexported grains,
+//! malformed manifests, decode-cache drift, infeasible bit plans, degenerate
+//! serve tunings) is statically decidable from the artifacts on disk.  This
+//! module cross-checks checkpoint ↔ manifest ↔ scheme ↔ decode spec ↔
+//! engine config *before* any XLA client exists, and — unlike the
+//! fail-fast `validate()` functions it subsumes — collects **all** findings
+//! in one run as [`Diagnostic`]s with stable codes.
+//!
+//! # Architecture
+//!
+//! Each rule is a one-file plugin implementing the [`Lint`] trait,
+//! registered in [`LINT_REGISTRY`] — the same registry idiom as
+//! `quant::quantizer::REGISTRY`.  A rule reads whatever slice of the
+//! [`CheckContext`] it understands and no-ops when its inputs are absent,
+//! so one context drives `check` (everything), `quantize`
+//! (`coordinator::validate_scheme_artifacts`, now lint-backed), `plan`, and
+//! `serve` startup.  [`Report::into_result`] converts a collected report
+//! back into the crate's fail-fast world, preserving the historical
+//! first-error behavior (an `Err` that aborts) while carrying the full
+//! diagnostic list.
+//!
+//! # Diagnostic codes
+//!
+//! Codes are stable; CI and the golden-fixture suite
+//! (`rust/tests/analysis_lint.rs`) gate on them.
+//!
+//! | code | severity | meaning | suggested fix |
+//! |--------|---------|---------|---------------|
+//! | NT0101 | error | `manifest.json` missing or unreadable | run `make artifacts` |
+//! | NT0102 | error | `manifest.json` is not valid JSON | re-run the AOT export |
+//! | NT0103 | error | required manifest key missing or mistyped (incl. `format` != 1) | re-run the AOT export |
+//! | NT0104 | error | `buckets` empty, non-array, or non-numeric | re-export with a valid bucket set |
+//! | NT0105 | error | `groups` malformed or tag↔size drift (e.g. `{"g32": 64}`) | re-export with consistent `--groups` |
+//! | NT0106 | error | `decode` record malformed (buckets, caches, cache-shape rank) | re-export the decode graphs |
+//! | NT0107 | error | decode buckets cannot fit the largest main bucket | re-export with matching bucket sets |
+//! | NT0108 | warning | a graph's HLO file is listed but missing on disk | re-run `make artifacts` |
+//! | NT0109 | error | duplicate `(model, graph)` entry in `graphs` | re-run the AOT export |
+//! | NT0201 | error | checkpoint `.ntz` missing or unreadable | re-run `normtweak quantize` |
+//! | NT0202 | error | required checkpoint tensor missing or mistyped | re-quantize the checkpoint |
+//! | NT0203 | error | packed codes don't round-trip (bad `pbits` width or byte length) | re-quantize the checkpoint |
+//! | NT0204 | error | linear/scale geometry disagrees with the architecture | re-quantize for this model |
+//! | NT0205 | error | checkpoint grain has no exported graphs | re-export with the grain in `--groups` |
+//! | NT0206 | error | model missing from the manifest's `models` record | re-export including the model |
+//! | NT0207 | error | manifest model record drifts from the Rust registry | re-export or fix the registry |
+//! | NT0208 | error | decode cache spec `[H, S, dh]` disagrees with the architecture | re-run the AOT export |
+//! | NT0301 | error | unknown or invalid quantizer method spec | pick a registered method |
+//! | NT0302 | error | duplicate layer index in `layer_bits` | keep one override per layer |
+//! | NT0303 | error | bit width has no packed storage (supported: 2, 3, 4, 8) | pick a supported width |
+//! | NT0304 | error | layer override grain differs from the base grain | keep overrides at the base grain |
+//! | NT0305 | error | layer override beyond the model depth | drop the out-of-range override |
+//! | NT0306 | error | `--target-bits` below the smallest profiled candidate | raise the budget or re-profile |
+//! | NT0307 | error | sensitivity profile provenance mismatch (model / layers / grain) | re-run `normtweak plan` |
+//! | NT0308 | error | scheme grain has no exported graphs | re-export with the grain in `--groups` |
+//! | NT0309 | error | tweak-loss graph missing for this (loss, grain) | use an exported loss/grain pair |
+//! | NT0310 | error | sensitivity profile unreadable or internally inconsistent | re-run `normtweak plan` |
+//! | NT0401 | error | `max_batch` is 0 | use `max_batch >= 1` |
+//! | NT0402 | error | `batch_window` is zero | use a window >= 1ms |
+//! | NT0403 | warning | `max_batch` exceeds the largest exported batch bucket | lower `max_batch` or re-export |
+//! | NT0404 | warning | deadline shorter than the batch window | raise the deadline or shrink the window |
+//! | NT0405 | error | malformed `--serve-config` / `--models` entry | use the accepted keys/format |
+//!
+//! # CLI
+//!
+//! ```text
+//! normtweak check [--manifest DIR] [--ckpt q.ntz] [--scheme gptq:w4g64]
+//!                 [--layer-bits 0:8,3:2] [--no-tweak]
+//!                 [--profile sensitivity.json] [--target-bits 2.25]
+//!                 [--serve-config max_batch=8,batch_window_ms=2,deadline_ms=500]
+//!                 [--models w4=a.ntz] [--format human|json] [--deny-warnings]
+//! ```
+//!
+//! Exit status is non-zero on any error-severity finding, and on warnings
+//! too under `--deny-warnings`; `--format json` emits the whole report
+//! through `util::json` so CI can gate on codes.
+
+pub mod checkpoint_rules;
+pub mod diagnostics;
+pub mod manifest_rules;
+pub mod scheme_rules;
+pub mod serve_rules;
+
+use std::path::PathBuf;
+
+use crate::error::{Error, Result};
+use crate::model::ModelConfig;
+use crate::quant::QuantScheme;
+use crate::runtime::ArtifactManifest;
+use crate::tweak::LossKind;
+
+pub use diagnostics::{Diagnostic, Report, Severity};
+
+/// Stable diagnostic codes.  [`ALL`](codes::ALL) is the authoritative list;
+/// the golden-fixture suite asserts every entry fires on a corrupted
+/// fixture and appears in the module-docs table above.
+pub mod codes {
+    pub const MANIFEST_UNREADABLE: &str = "NT0101";
+    pub const MANIFEST_PARSE: &str = "NT0102";
+    pub const MANIFEST_KEY: &str = "NT0103";
+    pub const MANIFEST_BUCKETS: &str = "NT0104";
+    pub const MANIFEST_GROUPS: &str = "NT0105";
+    pub const DECODE_RECORD: &str = "NT0106";
+    pub const DECODE_BUCKET_GAP: &str = "NT0107";
+    pub const GRAPH_FILE_MISSING: &str = "NT0108";
+    pub const GRAPH_DUPLICATE: &str = "NT0109";
+    pub const CKPT_UNREADABLE: &str = "NT0201";
+    pub const CKPT_TENSOR: &str = "NT0202";
+    pub const CKPT_PACK: &str = "NT0203";
+    pub const CKPT_GEOMETRY: &str = "NT0204";
+    pub const CKPT_GRAIN: &str = "NT0205";
+    pub const MODEL_UNKNOWN: &str = "NT0206";
+    pub const MODEL_DRIFT: &str = "NT0207";
+    pub const DECODE_CACHE_DRIFT: &str = "NT0208";
+    pub const BAD_METHOD: &str = "NT0301";
+    pub const DUP_LAYER_BITS: &str = "NT0302";
+    pub const BAD_PACK_WIDTH: &str = "NT0303";
+    pub const GRAIN_OVERRIDE: &str = "NT0304";
+    pub const LAYER_RANGE: &str = "NT0305";
+    pub const INFEASIBLE_BUDGET: &str = "NT0306";
+    pub const PROFILE_MISMATCH: &str = "NT0307";
+    pub const GRAIN_UNEXPORTED: &str = "NT0308";
+    pub const TWEAK_GRAPH: &str = "NT0309";
+    pub const PROFILE_INVALID: &str = "NT0310";
+    pub const ZERO_MAX_BATCH: &str = "NT0401";
+    pub const ZERO_BATCH_WINDOW: &str = "NT0402";
+    pub const BATCH_OVER_BUCKET: &str = "NT0403";
+    pub const DEADLINE_WINDOW: &str = "NT0404";
+    pub const BAD_SERVE_SPEC: &str = "NT0405";
+
+    /// Every stable code with its one-line meaning, in code order.
+    pub const ALL: &[(&str, &str)] = &[
+        (MANIFEST_UNREADABLE, "manifest.json missing or unreadable"),
+        (MANIFEST_PARSE, "manifest.json is not valid JSON"),
+        (MANIFEST_KEY, "required manifest key missing or mistyped"),
+        (MANIFEST_BUCKETS, "buckets empty, non-array, or non-numeric"),
+        (MANIFEST_GROUPS, "groups malformed or tag/size drift"),
+        (DECODE_RECORD, "decode record malformed"),
+        (DECODE_BUCKET_GAP, "decode buckets cannot fit the largest main bucket"),
+        (GRAPH_FILE_MISSING, "graph HLO file listed but missing on disk"),
+        (GRAPH_DUPLICATE, "duplicate (model, graph) entry in graphs"),
+        (CKPT_UNREADABLE, "checkpoint .ntz missing or unreadable"),
+        (CKPT_TENSOR, "required checkpoint tensor missing or mistyped"),
+        (CKPT_PACK, "packed codes do not round-trip"),
+        (CKPT_GEOMETRY, "linear/scale geometry disagrees with the architecture"),
+        (CKPT_GRAIN, "checkpoint grain has no exported graphs"),
+        (MODEL_UNKNOWN, "model missing from the manifest models record"),
+        (MODEL_DRIFT, "manifest model record drifts from the Rust registry"),
+        (DECODE_CACHE_DRIFT, "decode cache spec disagrees with the architecture"),
+        (BAD_METHOD, "unknown or invalid quantizer method spec"),
+        (DUP_LAYER_BITS, "duplicate layer index in layer_bits"),
+        (BAD_PACK_WIDTH, "bit width has no packed storage"),
+        (GRAIN_OVERRIDE, "layer override grain differs from the base grain"),
+        (LAYER_RANGE, "layer override beyond the model depth"),
+        (INFEASIBLE_BUDGET, "target-bits below the smallest profiled candidate"),
+        (PROFILE_MISMATCH, "sensitivity profile provenance mismatch"),
+        (GRAIN_UNEXPORTED, "scheme grain has no exported graphs"),
+        (TWEAK_GRAPH, "tweak-loss graph missing for this loss/grain"),
+        (PROFILE_INVALID, "sensitivity profile unreadable or inconsistent"),
+        (ZERO_MAX_BATCH, "max_batch is 0"),
+        (ZERO_BATCH_WINDOW, "batch_window is zero"),
+        (BATCH_OVER_BUCKET, "max_batch exceeds the largest exported bucket"),
+        (DEADLINE_WINDOW, "deadline shorter than the batch window"),
+        (BAD_SERVE_SPEC, "malformed serve-config or models entry"),
+    ];
+}
+
+/// The scheme/plan slice of a check: what the pipeline is about to run.
+#[derive(Debug, Clone)]
+pub struct PlanSpec {
+    /// Quantizer spec (any registered name or `+`-composition).
+    pub method: String,
+    /// Base scheme; overrides must share its grain.
+    pub scheme: QuantScheme,
+    /// Per-layer overrides in declaration order — kept as a `Vec` (not a
+    /// map) so duplicate indices survive to be reported as NT0302.
+    pub layer_schemes: Vec<(usize, QuantScheme)>,
+    /// `Some` when the run tweaks (the loss's `tweak_step*` graph must be
+    /// exported); `None` for plain PTQ.
+    pub tweak_loss: Option<LossKind>,
+}
+
+/// The serve-config slice of a check, kept as the raw CLI strings so the
+/// serve lint can report malformed keys/entries (NT0405) itself instead of
+/// dying in a parser.
+#[derive(Debug, Clone, Default)]
+pub struct ServeCheck {
+    /// `--serve-config max_batch=8,batch_window_ms=2,deadline_ms=500`;
+    /// omitted keys take [`crate::engine::ModelTuning::default`] values.
+    pub spec: Option<String>,
+    /// `--models w4=a.ntz,w2=b.ntz`.
+    pub models_spec: Option<String>,
+}
+
+/// Everything a lint may look at.  All slices are optional: a rule no-ops
+/// on absent inputs, so one context type serves `check` (everything) and
+/// the per-command startup subsets.
+#[derive(Debug, Clone, Default)]
+pub struct CheckContext {
+    /// Artifacts directory whose `manifest.json` the manifest lint walks
+    /// raw (collecting every schema violation, not just the first).
+    pub manifest_dir: Option<PathBuf>,
+    /// Parsed manifest for cross-checks (grains, buckets, models, decode).
+    /// Callers populate it when `ArtifactManifest::load` succeeded; the
+    /// raw walk still reports *why* a load failed.
+    pub manifest: Option<ArtifactManifest>,
+    /// Quantized checkpoint to cross-check against manifest + architecture.
+    pub ckpt_path: Option<PathBuf>,
+    /// Target architecture (drives geometry and decode-cache checks).
+    pub model: Option<ModelConfig>,
+    /// Model name for manifest graph lookups (usually `model.name`).
+    pub model_name: Option<String>,
+    /// Scheme/plan under check.
+    pub plan: Option<PlanSpec>,
+    /// Persisted sensitivity profile (`sensitivity.json`) to audit.
+    pub profile_path: Option<PathBuf>,
+    /// `--auto-bits` / `--target-bits` budget to test for feasibility
+    /// against the profile's candidates.
+    pub target_bits: Option<f32>,
+    /// Engine/serve tuning under check.
+    pub serve: Option<ServeCheck>,
+}
+
+/// One static-analysis rule.  Mirrors `quant::quantizer::Quantizer`:
+/// implement the trait in a file under `analysis/` and add a
+/// [`LintRegistration`] row to [`LINT_REGISTRY`].
+pub trait Lint {
+    /// Registry name (`"manifest"`, `"checkpoint"`, ...).
+    fn name(&self) -> &'static str;
+    /// Inspect `ctx` and push findings; collect everything, never fail
+    /// fast — severity decides what aborts downstream.
+    fn run(&self, ctx: &CheckContext, report: &mut Report);
+}
+
+/// One registry row — the lint-side analog of
+/// `quant::quantizer::Registration`.
+pub struct LintRegistration {
+    pub name: &'static str,
+    pub summary: &'static str,
+    pub build: fn() -> Box<dyn Lint>,
+}
+
+fn build_manifest() -> Box<dyn Lint> {
+    Box::new(manifest_rules::ManifestLint)
+}
+
+fn build_checkpoint() -> Box<dyn Lint> {
+    Box::new(checkpoint_rules::CheckpointLint)
+}
+
+fn build_scheme() -> Box<dyn Lint> {
+    Box::new(scheme_rules::SchemeLint)
+}
+
+fn build_serve() -> Box<dyn Lint> {
+    Box::new(serve_rules::ServeLint)
+}
+
+/// The built-in rule set, in run order (NT01xx → NT04xx).
+pub const LINT_REGISTRY: &[LintRegistration] = &[
+    LintRegistration {
+        name: "manifest",
+        summary: "manifest.json schema, grain/bucket consistency, graph files",
+        build: build_manifest,
+    },
+    LintRegistration {
+        name: "checkpoint",
+        summary: "checkpoint tensors, pack-width round-trips, manifest cross-checks",
+        build: build_checkpoint,
+    },
+    LintRegistration {
+        name: "scheme",
+        summary: "method/scheme/plan legality, profile feasibility, exported grains",
+        build: build_scheme,
+    },
+    LintRegistration {
+        name: "serve",
+        summary: "engine tuning sanity vs exported batch buckets",
+        build: build_serve,
+    },
+];
+
+/// The registered lints (by reference, like `quant::registry`).
+pub fn registry() -> &'static [LintRegistration] {
+    LINT_REGISTRY
+}
+
+/// Registered lint names, in run order.
+pub fn registered_lints() -> Vec<&'static str> {
+    LINT_REGISTRY.iter().map(|r| r.name).collect()
+}
+
+/// Run every registered lint over `ctx`, collecting all findings.
+pub fn run_lints(ctx: &CheckContext) -> Report {
+    let mut report = Report::new();
+    for reg in LINT_REGISTRY {
+        (reg.build)().run(ctx, &mut report);
+    }
+    report
+}
+
+/// Startup gate for the CLI commands: run every lint, print non-error
+/// findings to stderr, and abort with the full error list (wrapped in
+/// [`Error::Config`]) when anything error-severity fired.
+pub fn preflight(ctx: &CheckContext) -> Result<()> {
+    let report = run_lints(ctx);
+    for d in &report.diagnostics {
+        if d.severity != Severity::Error {
+            eprintln!("[check] {}[{}]: {}", d.severity.as_str(), d.code, d.message);
+        }
+    }
+    report.into_result(Error::Config)
+}
+
+/// Parse a `[method:]w<bits><pc|g<N>>` scheme spec (`gptq:w4g64`, `w3pc`,
+/// `smoothquant+gptq:w2g32`; the grain suffix defaults to per-channel).
+/// Returns the optional method and the scheme.  A malformed spec is an
+/// immediate [`Error::Config`] naming the expected format — the flag
+/// itself, not the artifacts, is broken.
+pub fn parse_scheme_spec(spec: &str) -> Result<(Option<String>, QuantScheme)> {
+    let bad = || {
+        Error::Config(format!(
+            "bad scheme spec `{spec}`: expected `[method:]w<bits><pc|g<N>>` \
+             (e.g. `gptq:w4g64`, `w3pc`, `w2g32`)"
+        ))
+    };
+    let (method, body) = match spec.rsplit_once(':') {
+        Some((m, b)) if !m.is_empty() => (Some(m.to_string()), b),
+        Some(_) => return Err(bad()),
+        None => (None, spec),
+    };
+    let digits_and_grain = body.strip_prefix('w').ok_or_else(bad)?;
+    let split = digits_and_grain
+        .find(|c: char| !c.is_ascii_digit())
+        .unwrap_or(digits_and_grain.len());
+    let (bits_str, grain) = digits_and_grain.split_at(split);
+    let bits: u8 = bits_str.parse().map_err(|_| bad())?;
+    let group_size = match grain {
+        "" | "pc" => None,
+        g => Some(g.strip_prefix('g').ok_or_else(bad)?.parse().map_err(|_| bad())?),
+    };
+    Ok((method, QuantScheme { bits, group_size }))
+}
+
+/// Parse `--layer-bits 0:8,3:2` into per-layer overrides at the base
+/// scheme's grain.  Deliberately lenient about duplicate layer indices —
+/// they survive into [`PlanSpec::layer_schemes`] so the scheme lint can
+/// report NT0302 alongside every other finding (the strict config-file
+/// parser, `Config::layer_schemes`, still fail-fasts).
+pub fn parse_layer_bits(spec: &str, base: QuantScheme) -> Result<Vec<(usize, QuantScheme)>> {
+    let mut out = Vec::new();
+    for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+        let part = part.trim();
+        let (layer, bits) = part.split_once(':').ok_or_else(|| {
+            Error::Config(format!(
+                "bad layer_bits entry `{part}`: expected `layer:bits` (e.g. `0:8,3:2`)"
+            ))
+        })?;
+        let layer: usize = layer.trim().parse().map_err(|_| {
+            Error::Config(format!(
+                "bad layer_bits entry `{part}`: layer index `{}` is not a number",
+                layer.trim()
+            ))
+        })?;
+        let bits: u8 = bits.trim().parse().map_err(|_| {
+            Error::Config(format!(
+                "bad layer_bits entry `{part}`: bit width `{}` is not a number",
+                bits.trim()
+            ))
+        })?;
+        out.push((layer, QuantScheme { bits, group_size: base.group_size }));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_lists_every_lint() {
+        assert_eq!(registered_lints(), vec!["manifest", "checkpoint", "scheme", "serve"]);
+        for reg in registry() {
+            assert_eq!((reg.build)().name(), reg.name);
+            assert!(!reg.summary.is_empty());
+        }
+    }
+
+    #[test]
+    fn codes_are_unique_and_sorted() {
+        let mut seen = std::collections::BTreeSet::new();
+        let mut prev = "";
+        for (code, meaning) in codes::ALL {
+            assert!(seen.insert(*code), "duplicate code {code}");
+            assert!(*code > prev, "codes::ALL out of order at {code}");
+            assert!(!meaning.is_empty());
+            prev = code;
+        }
+    }
+
+    #[test]
+    fn empty_context_is_clean() {
+        let report = run_lints(&CheckContext::default());
+        assert!(report.is_empty(), "{:?}", report.codes());
+        assert!(preflight(&CheckContext::default()).is_ok());
+    }
+
+    #[test]
+    fn scheme_spec_parses() {
+        let (m, s) = parse_scheme_spec("gptq:w4g64").unwrap();
+        assert_eq!(m.as_deref(), Some("gptq"));
+        assert_eq!(s, QuantScheme { bits: 4, group_size: Some(64) });
+        let (m, s) = parse_scheme_spec("w3pc").unwrap();
+        assert!(m.is_none());
+        assert_eq!(s, QuantScheme { bits: 3, group_size: None });
+        let (m, s) = parse_scheme_spec("smoothquant+gptq:w2g32").unwrap();
+        assert_eq!(m.as_deref(), Some("smoothquant+gptq"));
+        assert_eq!(s, QuantScheme { bits: 2, group_size: Some(32) });
+        // bare width defaults to per-channel
+        let (_, s) = parse_scheme_spec("w8").unwrap();
+        assert_eq!(s.group_size, None);
+    }
+
+    #[test]
+    fn scheme_spec_rejects_malformed() {
+        for bad in ["", "4g64", "wxg64", "w4q64", "w4g", ":w4", "w4gsixty"] {
+            let err = parse_scheme_spec(bad).unwrap_err();
+            assert!(format!("{err}").contains("w<bits><pc|g<N>>"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn layer_bits_keeps_duplicates_for_the_lint() {
+        let base = QuantScheme::w2_g64();
+        let got = parse_layer_bits("0:8, 1:4,0:2", base).unwrap();
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[0], (0, QuantScheme { bits: 8, group_size: Some(64) }));
+        assert_eq!(got[2].0, 0);
+        assert!(parse_layer_bits("0", base).is_err());
+        assert!(parse_layer_bits("a:4", base).is_err());
+        assert!(parse_layer_bits("0:b", base).is_err());
+    }
+}

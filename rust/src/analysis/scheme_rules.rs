@@ -1,0 +1,404 @@
+//! NT03xx — scheme, plan, and sensitivity-profile legality (the `scheme`
+//! lint).
+//!
+//! Three independently callable passes:
+//! * [`config_diags`] — the plan alone: method spec, pack widths, duplicate
+//!   / out-of-range / grain-drifted layer overrides.
+//! * [`artifact_diags`] — the plan against the manifest: exported grains
+//!   and the tweak loss's `tweak_step*` graph.  This is exactly the check
+//!   `coordinator::validate_scheme_artifacts` runs at pipeline startup
+//!   (that function is now a thin wrapper over this pass).
+//! * [`profile_diags`] — a persisted `sensitivity.json` against the model
+//!   and an `--auto-bits` budget: provenance, candidate widths,
+//!   feasibility — every precondition `BitBudgetPlanner::plan` enforces,
+//!   but collected instead of fail-fast.
+
+use std::collections::BTreeSet;
+
+use crate::policy::SensitivityProfile;
+use crate::quant::quantizer::validate_spec;
+use crate::quant::QuantScheme;
+use crate::tweak::LossKind;
+
+use super::codes;
+use super::diagnostics::{Diagnostic, Report};
+use super::{CheckContext, Lint};
+
+pub struct SchemeLint;
+
+/// Plan-only checks: no artifacts needed.
+pub fn config_diags(ctx: &CheckContext, report: &mut Report) {
+    let Some(plan) = &ctx.plan else { return };
+    if let Err(e) = validate_spec(&plan.method) {
+        report.push(
+            Diagnostic::error(codes::BAD_METHOD, format!("{e}"))
+                .field("method")
+                .fix("pick a registered quantizer (or a `+`-composition of them)"),
+        );
+    }
+    if let Err(e) = plan.scheme.pack_bits() {
+        report.push(
+            Diagnostic::error(codes::BAD_PACK_WIDTH, format!("{e}"))
+                .field("scheme")
+                .fix("use a width with packed storage: 2, 3, 4, or 8 bits"),
+        );
+    }
+    let base_tag = plan.scheme.group_tag();
+    let mut seen = BTreeSet::new();
+    for &(layer, s) in &plan.layer_schemes {
+        let field = format!("layer_bits[{layer}]");
+        if !seen.insert(layer) {
+            report.push(
+                Diagnostic::error(
+                    codes::DUP_LAYER_BITS,
+                    format!("layer {layer} listed twice in layer_bits"),
+                )
+                .field(field.clone())
+                .fix("keep exactly one override per layer"),
+            );
+        }
+        if let Err(e) = s.pack_bits() {
+            report.push(
+                Diagnostic::error(codes::BAD_PACK_WIDTH, format!("layer {layer}: {e}"))
+                    .field(field.clone())
+                    .fix("use a width with packed storage: 2, 3, 4, or 8 bits"),
+            );
+        }
+        if s.group_tag() != base_tag {
+            report.push(
+                Diagnostic::error(
+                    codes::GRAIN_OVERRIDE,
+                    format!(
+                        "layer {layer} scheme grain {} != base grain {base_tag} \
+                         (forward graphs are compiled per grain)",
+                        s.group_tag()
+                    ),
+                )
+                .field(field.clone())
+                .fix("keep every override at the base scheme's grain"),
+            );
+        }
+        if let Some(cfg) = &ctx.model {
+            if layer >= cfg.n_layer {
+                report.push(
+                    Diagnostic::error(
+                        codes::LAYER_RANGE,
+                        format!(
+                            "layer scheme override for layer {layer}, model has {} \
+                             (valid layers: 0..={})",
+                            cfg.n_layer,
+                            cfg.n_layer - 1
+                        ),
+                    )
+                    .field(field)
+                    .fix("drop the out-of-range override"),
+                );
+            }
+        }
+    }
+}
+
+/// Plan-vs-manifest checks: the grain must have exported graph variants,
+/// and a tweaked run needs its loss's `tweak_step*` graph for this model.
+/// Mirrors the historical `validate_scheme_artifacts` semantics exactly —
+/// including suppressing the graph check when the grain itself is
+/// unexported (the graph can't exist either; one finding, not two).
+pub fn artifact_diags(ctx: &CheckContext, report: &mut Report) {
+    let (Some(plan), Some(manifest)) = (&ctx.plan, &ctx.manifest) else { return };
+    let tag = plan.scheme.group_tag();
+    if let Err(e) = manifest.validate_grain(&tag) {
+        report.push(
+            Diagnostic::error(codes::GRAIN_UNEXPORTED, format!("{e}"))
+                .at(manifest.dir.join("manifest.json").display().to_string())
+                .field("groups")
+                .fix(format!("re-run the AOT export with `--groups` including `{tag}`")),
+        );
+    } else if let (Some(loss), Some(model)) = (&plan.tweak_loss, &ctx.model_name) {
+        let graph = loss.graph_name(&tag);
+        if manifest.graph(model, &graph).is_err() {
+            let note = match loss {
+                LossKind::Dist => "",
+                _ => "; the Mse/Kl ablation graphs are exported per-channel \
+                      for nt-small only",
+            };
+            report.push(
+                Diagnostic::error(
+                    codes::TWEAK_GRAPH,
+                    format!(
+                        "tweak loss {loss:?} at grain `{tag}` needs graph \
+                         `{model}.{graph}`, which is not in the manifest \
+                         (exported grains: {}{note})",
+                        manifest.grain_tags().join(", ")
+                    ),
+                )
+                .at(manifest.dir.join("manifest.json").display().to_string())
+                .field("graphs")
+                .fix("use an exported loss/grain pair, or re-run the AOT export"),
+            );
+        }
+    }
+}
+
+/// Audit a persisted sensitivity profile: readable, internally consistent,
+/// provenance-matched to the model and plan, and feasible for the
+/// requested `--target-bits` budget.
+pub fn profile_diags(ctx: &CheckContext, report: &mut Report) {
+    let Some(path) = &ctx.profile_path else { return };
+    let origin = path.display().to_string();
+    let profile = match SensitivityProfile::load(path) {
+        Ok(p) => p,
+        Err(e) => {
+            report.push(
+                Diagnostic::error(
+                    codes::PROFILE_INVALID,
+                    format!("sensitivity profile unreadable: {e}"),
+                )
+                .at(origin)
+                .fix("re-run `normtweak plan` to regenerate sensitivity.json"),
+            );
+            return;
+        }
+    };
+
+    if let Some(cfg) = &ctx.model {
+        if profile.model != cfg.name {
+            report.push(
+                Diagnostic::error(
+                    codes::PROFILE_MISMATCH,
+                    format!(
+                        "sensitivity profile was measured for model `{}` but checking \
+                         against `{}`",
+                        profile.model, cfg.name
+                    ),
+                )
+                .at(origin.clone())
+                .field("model")
+                .fix("re-run `normtweak plan` for this model"),
+            );
+        } else if profile.layers.len() != cfg.n_layer {
+            report.push(
+                Diagnostic::error(
+                    codes::PROFILE_MISMATCH,
+                    format!(
+                        "sensitivity profile covers {} layer(s) but `{}` has {}",
+                        profile.layers.len(),
+                        cfg.name,
+                        cfg.n_layer
+                    ),
+                )
+                .at(origin.clone())
+                .field("layers")
+                .fix("re-profile with the full model depth"),
+            );
+        }
+    }
+    if let Some(plan) = &ctx.plan {
+        let base_tag = plan.scheme.group_tag();
+        if profile.group_tag != base_tag {
+            report.push(
+                Diagnostic::error(
+                    codes::PROFILE_MISMATCH,
+                    format!(
+                        "sensitivity profile was measured at grain `{}` but the base \
+                         scheme is `{base_tag}`; re-profile at the deployment grain",
+                        profile.group_tag
+                    ),
+                )
+                .at(origin.clone())
+                .field("group_tag")
+                .fix("re-run `normtweak plan` at the deployment grain"),
+            );
+        }
+    }
+
+    if profile.layers.is_empty() {
+        report.push(
+            Diagnostic::error(codes::PROFILE_INVALID, "sensitivity profile has no layers")
+                .at(origin.clone())
+                .field("layers")
+                .fix("re-run `normtweak plan`"),
+        );
+    }
+    let mut cands = profile.candidate_bits.clone();
+    cands.sort_unstable();
+    cands.dedup();
+    if cands.is_empty() {
+        report.push(
+            Diagnostic::error(
+                codes::PROFILE_INVALID,
+                "sensitivity profile has no candidate bit widths",
+            )
+            .at(origin.clone())
+            .field("candidate_bits")
+            .fix("re-profile with `--candidates` (supported widths: 2, 3, 4, 8)"),
+        );
+        return;
+    }
+    for &bits in &cands {
+        if let Err(e) = (QuantScheme { bits, group_size: None }).pack_bits() {
+            report.push(
+                Diagnostic::error(codes::BAD_PACK_WIDTH, format!("candidate {bits}: {e}"))
+                    .at(origin.clone())
+                    .field("candidate_bits")
+                    .fix("re-profile with supported widths only (2, 3, 4, 8)"),
+            );
+        }
+    }
+    if let Some(target) = ctx.target_bits {
+        let min_bits = cands[0];
+        if target + 1e-6 < min_bits as f32 {
+            report.push(
+                Diagnostic::error(
+                    codes::INFEASIBLE_BUDGET,
+                    format!(
+                        "target of {target:.2} average bits is below the smallest \
+                         candidate width {min_bits} (candidates: {cands:?}) — \
+                         infeasible budget",
+                    ),
+                )
+                .at(origin.clone())
+                .field("target_bits")
+                .fix(format!(
+                    "raise --target-bits to at least {min_bits}, or re-profile with \
+                     smaller candidates"
+                )),
+            );
+        }
+    }
+    let mut seen = BTreeSet::new();
+    for l in &profile.layers {
+        if !seen.insert(l.layer) {
+            report.push(
+                Diagnostic::error(
+                    codes::PROFILE_INVALID,
+                    format!("sensitivity profile lists layer {} twice", l.layer),
+                )
+                .at(origin.clone())
+                .field(format!("layers[{}]", l.layer))
+                .fix("re-run `normtweak plan`"),
+            );
+            continue;
+        }
+        for &bits in &cands {
+            if l.score(bits).is_none() {
+                report.push(
+                    Diagnostic::error(
+                        codes::PROFILE_INVALID,
+                        format!(
+                            "layer {} has no sensitivity score at {bits} bits; \
+                             re-profile with the full candidate set",
+                            l.layer
+                        ),
+                    )
+                    .at(origin.clone())
+                    .field(format!("layers[{}].scores", l.layer))
+                    .fix("re-run `normtweak plan` with the full candidate set"),
+                );
+            }
+        }
+    }
+}
+
+impl Lint for SchemeLint {
+    fn name(&self) -> &'static str {
+        "scheme"
+    }
+
+    fn run(&self, ctx: &CheckContext, report: &mut Report) {
+        config_diags(ctx, report);
+        artifact_diags(ctx, report);
+        profile_diags(ctx, report);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{run_lints, PlanSpec};
+    use crate::model::ModelConfig;
+
+    fn plan(scheme: QuantScheme) -> PlanSpec {
+        PlanSpec {
+            method: "rtn".to_string(),
+            scheme,
+            layer_schemes: Vec::new(),
+            tweak_loss: None,
+        }
+    }
+
+    #[test]
+    fn clean_plan_yields_no_findings() {
+        let ctx = CheckContext {
+            plan: Some(plan(QuantScheme::w4_g128())),
+            model: Some(ModelConfig::builtin("nt-tiny").unwrap()),
+            ..CheckContext::default()
+        };
+        let report = run_lints(&ctx);
+        assert!(report.is_empty(), "{:?}", report.codes());
+    }
+
+    #[test]
+    fn bad_method_duplicate_and_out_of_range_all_collected() {
+        let mut p = plan(QuantScheme::w2_g64());
+        p.method = "nope".to_string();
+        p.layer_schemes = vec![
+            (0, QuantScheme { bits: 8, group_size: Some(64) }),
+            (0, QuantScheme { bits: 5, group_size: Some(64) }),
+            (2, QuantScheme { bits: 4, group_size: None }),
+            (9, QuantScheme { bits: 4, group_size: Some(64) }),
+        ];
+        let ctx = CheckContext {
+            plan: Some(p),
+            model: Some(ModelConfig::builtin("nt-tiny").unwrap()),
+            ..CheckContext::default()
+        };
+        let codes_seen = run_lints(&ctx).codes();
+        for want in [
+            codes::BAD_METHOD,
+            codes::DUP_LAYER_BITS,
+            codes::BAD_PACK_WIDTH,
+            codes::GRAIN_OVERRIDE,
+            codes::LAYER_RANGE,
+        ] {
+            assert!(codes_seen.contains(&want), "missing {want} in {codes_seen:?}");
+        }
+    }
+
+    #[test]
+    fn missing_profile_is_nt0310() {
+        let ctx = CheckContext {
+            profile_path: Some(std::path::PathBuf::from("/definitely/missing.json")),
+            ..CheckContext::default()
+        };
+        assert_eq!(run_lints(&ctx).codes(), vec![codes::PROFILE_INVALID]);
+    }
+
+    #[test]
+    fn infeasible_budget_mirrors_planner_message() {
+        let dir = std::env::temp_dir().join("nt_scheme_lint_budget");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sensitivity.json");
+        std::fs::write(
+            &path,
+            r#"{"model":"nt-tiny","method":"rtn","group_tag":"g64",
+                "calib_source":"gen-v2","loss":"dist","candidate_bits":[2,4],
+                "layers":[{"layer":0,"scores":{"2":1.0,"4":0.5}},
+                          {"layer":1,"scores":{"2":1.0,"4":0.5}}]}"#,
+        )
+        .unwrap();
+        let ctx = CheckContext {
+            profile_path: Some(path),
+            target_bits: Some(1.5),
+            plan: Some(plan(QuantScheme::w2_g64())),
+            model: Some(ModelConfig::builtin("nt-tiny").unwrap()),
+            ..CheckContext::default()
+        };
+        let report = run_lints(&ctx);
+        assert_eq!(report.codes(), vec![codes::INFEASIBLE_BUDGET]);
+        assert!(
+            report.diagnostics[0].message.contains("infeasible budget"),
+            "{}",
+            report.diagnostics[0].message
+        );
+    }
+}

@@ -1,0 +1,248 @@
+//! NT04xx — engine/serve configuration sanity (the `serve` lint).
+//!
+//! Validates batching tunings before a scheduler thread exists: degenerate
+//! knobs (zero `max_batch`, zero window), tunings that cannot be honored
+//! by the exported artifacts (`max_batch` above the largest batch bucket),
+//! and deadlines shorter than the dispatch window.
+//! [`crate::engine::ModelTuning::validate`] delegates to [`tuning_diags`],
+//! so the engine builder and `normtweak check` can never drift apart on
+//! what counts as degenerate.
+
+use std::time::Duration;
+
+use super::codes;
+use super::diagnostics::{Diagnostic, Report};
+use super::{CheckContext, Lint};
+
+pub struct ServeLint;
+
+const ACCEPTED_KEYS: &str = "max_batch, batch_window_ms, deadline_ms";
+
+/// The degenerate-tuning checks shared with
+/// `crate::engine::ModelTuning::validate` — message text is the contract
+/// (the engine maps the first diagnostic straight into `Error::Config`).
+pub fn tuning_diags(name: &str, max_batch: usize, batch_window: Duration) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    if max_batch == 0 {
+        out.push(
+            Diagnostic::error(
+                codes::ZERO_MAX_BATCH,
+                format!("model `{name}`: max_batch must be >= 1 (0 disables batching entirely)"),
+            )
+            .field("max_batch")
+            .fix("use max_batch >= 1"),
+        );
+    }
+    if batch_window.is_zero() {
+        out.push(
+            Diagnostic::error(
+                codes::ZERO_BATCH_WINDOW,
+                format!(
+                    "model `{name}`: batch_window must be non-zero (a zero window \
+                     degenerates to single-request batches; use >= 1ms)"
+                ),
+            )
+            .field("batch_window")
+            .fix("use a batch window >= 1ms"),
+        );
+    }
+    out
+}
+
+impl Lint for ServeLint {
+    fn name(&self) -> &'static str {
+        "serve"
+    }
+
+    fn run(&self, ctx: &CheckContext, report: &mut Report) {
+        let Some(serve) = &ctx.serve else { return };
+        let defaults = crate::engine::ModelTuning::default();
+        let mut max_batch = defaults.max_batch;
+        let mut window_ms = defaults.batch_window.as_millis() as u64;
+        let mut deadline_ms: Option<u64> = None;
+
+        if let Some(spec) = &serve.spec {
+            for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+                let part = part.trim();
+                let Some((key, value)) = part.split_once('=') else {
+                    report.push(
+                        Diagnostic::error(
+                            codes::BAD_SERVE_SPEC,
+                            format!(
+                                "bad --serve-config entry `{part}`: expected key=value \
+                                 (accepted keys: {ACCEPTED_KEYS})"
+                            ),
+                        )
+                        .at("--serve-config")
+                        .field(part.to_string())
+                        .fix("write entries as key=value, comma-separated"),
+                    );
+                    continue;
+                };
+                let (key, value) = (key.trim(), value.trim());
+                let parsed: Option<u64> = value.parse().ok();
+                match (key, parsed) {
+                    ("max_batch", Some(v)) => max_batch = v as usize,
+                    ("batch_window_ms", Some(v)) => window_ms = v,
+                    ("deadline_ms", Some(v)) => deadline_ms = Some(v),
+                    ("max_batch" | "batch_window_ms" | "deadline_ms", None) => {
+                        report.push(
+                            Diagnostic::error(
+                                codes::BAD_SERVE_SPEC,
+                                format!(
+                                    "bad --serve-config value for `{key}`: `{value}` is \
+                                     not a number"
+                                ),
+                            )
+                            .at("--serve-config")
+                            .field(key.to_string())
+                            .fix("use a non-negative integer"),
+                        );
+                    }
+                    (other, _) => {
+                        report.push(
+                            Diagnostic::error(
+                                codes::BAD_SERVE_SPEC,
+                                format!(
+                                    "unknown --serve-config key `{other}` (accepted \
+                                     keys: {ACCEPTED_KEYS})"
+                                ),
+                            )
+                            .at("--serve-config")
+                            .field(other.to_string())
+                            .fix("pick one of the accepted keys"),
+                        );
+                    }
+                }
+            }
+        }
+
+        for d in tuning_diags("serve", max_batch, Duration::from_millis(window_ms)) {
+            report.push(d.at("--serve-config"));
+        }
+        if let Some(deadline) = deadline_ms {
+            if deadline < window_ms {
+                report.push(
+                    Diagnostic::warn(
+                        codes::DEADLINE_WINDOW,
+                        format!(
+                            "deadline of {deadline} ms is shorter than the batch window \
+                             ({window_ms} ms) — requests can expire while waiting for \
+                             batch-mates"
+                        ),
+                    )
+                    .at("--serve-config")
+                    .field("deadline_ms")
+                    .fix("raise deadline_ms or shrink batch_window_ms"),
+                );
+            }
+        }
+        if let Some(manifest) = &ctx.manifest {
+            if let Some(bucket) = manifest.max_bucket() {
+                if max_batch > bucket {
+                    let listed = manifest
+                        .buckets
+                        .iter()
+                        .map(|b| b.to_string())
+                        .collect::<Vec<_>>()
+                        .join(", ");
+                    report.push(
+                        Diagnostic::warn(
+                            codes::BATCH_OVER_BUCKET,
+                            format!(
+                                "max_batch {max_batch} exceeds the largest exported \
+                                 batch bucket {bucket} (exported: {listed}) — graph \
+                                 calls will be chunked to {bucket}"
+                            ),
+                        )
+                        .at("--serve-config")
+                        .field("max_batch")
+                        .fix(format!(
+                            "lower max_batch to {bucket}, or re-export with a larger \
+                             bucket"
+                        )),
+                    );
+                }
+            }
+        }
+        if let Some(models) = &serve.models_spec {
+            for part in models.split(',').filter(|p| !p.trim().is_empty()) {
+                let part = part.trim();
+                let ok = part
+                    .split_once('=')
+                    .is_some_and(|(n, c)| !n.trim().is_empty() && !c.trim().is_empty());
+                if !ok {
+                    report.push(
+                        Diagnostic::error(
+                            codes::BAD_SERVE_SPEC,
+                            format!("bad --models entry `{part}`: expected name=checkpoint.ntz"),
+                        )
+                        .at("--models")
+                        .field(part.to_string())
+                        .fix("write entries as name=checkpoint.ntz, comma-separated"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{run_lints, ServeCheck};
+
+    fn ctx_with(spec: &str) -> CheckContext {
+        CheckContext {
+            serve: Some(ServeCheck {
+                spec: Some(spec.to_string()),
+                models_spec: None,
+            }),
+            ..CheckContext::default()
+        }
+    }
+
+    #[test]
+    fn default_tuning_is_clean() {
+        let ctx = CheckContext {
+            serve: Some(ServeCheck::default()),
+            ..CheckContext::default()
+        };
+        assert!(run_lints(&ctx).is_empty());
+    }
+
+    #[test]
+    fn degenerate_knobs_and_bad_entries_collected() {
+        let report =
+            run_lints(&ctx_with("max_batch=0,batch_window_ms=0,nope=3,deadline_ms=abc,solo"));
+        let seen = report.codes();
+        assert!(seen.contains(&codes::ZERO_MAX_BATCH), "{seen:?}");
+        assert!(seen.contains(&codes::ZERO_BATCH_WINDOW), "{seen:?}");
+        assert_eq!(
+            seen.iter().filter(|c| **c == codes::BAD_SERVE_SPEC).count(),
+            3,
+            "{seen:?}"
+        );
+    }
+
+    #[test]
+    fn short_deadline_warns_but_does_not_fail() {
+        let report = run_lints(&ctx_with("batch_window_ms=10,deadline_ms=5"));
+        assert_eq!(report.codes(), vec![codes::DEADLINE_WINDOW]);
+        assert!(!report.should_fail(false));
+        assert!(report.should_fail(true));
+    }
+
+    #[test]
+    fn bad_models_entries_are_nt0405() {
+        let ctx = CheckContext {
+            serve: Some(ServeCheck {
+                spec: None,
+                models_spec: Some("w4=a.ntz,broken,=b.ntz".to_string()),
+            }),
+            ..CheckContext::default()
+        };
+        let report = run_lints(&ctx);
+        assert_eq!(report.codes(), vec![codes::BAD_SERVE_SPEC, codes::BAD_SERVE_SPEC]);
+    }
+}

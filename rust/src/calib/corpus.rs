@@ -92,7 +92,9 @@ pub fn pick_lang<'a>(rng: &mut SplitMix64, weights: &[f64]) -> &'a Lang {
             return lang;
         }
     }
-    LANGS.last().unwrap()
+    // per-mille rounding can leave `r == total`; the static language
+    // table is never empty
+    LANGS.last().expect("LANGS is a non-empty static table")
 }
 
 /// One document: BOS, sentences (or a recall block), EOS.

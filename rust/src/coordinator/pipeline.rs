@@ -108,30 +108,30 @@ impl PipelineConfig {
 /// `tweak_step*` graph must exist for this model — one clear
 /// [`Error::Artifact`] listing what the manifest exports, instead of a
 /// graph-lookup failure deep inside the tweak loop.
+///
+/// Lint-backed: the checks live in `crate::analysis::scheme_rules`
+/// (diagnostic codes NT0308/NT0309, shared with `normtweak check`); this
+/// wrapper collects them and preserves the historical abort-with-`Err`
+/// behavior.
 pub fn validate_scheme_artifacts(
     manifest: &ArtifactManifest,
     model: &str,
     cfg: &PipelineConfig,
 ) -> Result<()> {
-    let tag = cfg.scheme.group_tag();
-    manifest.validate_grain(&tag)?;
-    if let Some(t) = cfg.tweak {
-        let graph = t.loss.graph_name(&tag);
-        if manifest.graph(model, &graph).is_err() {
-            let note = match t.loss {
-                LossKind::Dist => "",
-                _ => "; the Mse/Kl ablation graphs are exported per-channel \
-                      for nt-small only",
-            };
-            return Err(Error::Artifact(format!(
-                "tweak loss {:?} at grain `{tag}` needs graph `{model}.{graph}`, \
-                 which is not in the manifest (exported grains: {}{note})",
-                t.loss,
-                manifest.grain_tags().join(", ")
-            )));
-        }
-    }
-    Ok(())
+    let ctx = crate::analysis::CheckContext {
+        manifest: Some(manifest.clone()),
+        model_name: Some(model.to_string()),
+        plan: Some(crate::analysis::PlanSpec {
+            method: cfg.method.clone(),
+            scheme: cfg.scheme,
+            layer_schemes: cfg.layer_schemes.iter().map(|(&l, &s)| (l, s)).collect(),
+            tweak_loss: cfg.tweak.map(|t| t.loss),
+        }),
+        ..crate::analysis::CheckContext::default()
+    };
+    let mut report = crate::analysis::Report::new();
+    crate::analysis::scheme_rules::artifact_diags(&ctx, &mut report);
+    report.into_result(Error::Artifact)
 }
 
 fn to_quant_linear(qw: QuantizedWeight, bias: Tensor, scheme: &QuantScheme) -> Result<QuantLinear> {

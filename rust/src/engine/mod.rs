@@ -110,20 +110,17 @@ impl Default for ModelTuning {
 
 impl ModelTuning {
     /// Reject degenerate tunings at build time instead of silently serving
-    /// one-request batches.
+    /// one-request batches.  Lint-backed: the checks (and message text)
+    /// live in `crate::analysis::serve_rules::tuning_diags` (NT0401 /
+    /// NT0402), shared with `normtweak check`; the first finding aborts.
     pub fn validate(&self, name: &str) -> Result<()> {
-        if self.max_batch == 0 {
-            return Err(Error::Config(format!(
-                "model `{name}`: max_batch must be >= 1 (0 disables batching entirely)"
-            )));
+        match crate::analysis::serve_rules::tuning_diags(name, self.max_batch, self.batch_window)
+            .into_iter()
+            .next()
+        {
+            None => Ok(()),
+            Some(d) => Err(Error::Config(d.message)),
         }
-        if self.batch_window.is_zero() {
-            return Err(Error::Config(format!(
-                "model `{name}`: batch_window must be non-zero (a zero window \
-                 degenerates to single-request batches; use >= 1ms)"
-            )));
-        }
-        Ok(())
     }
 }
 

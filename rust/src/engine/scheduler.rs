@@ -504,7 +504,11 @@ impl<'m> Scheduler<'m> {
             let ready = if draining || !lane.active.is_empty() {
                 true
             } else {
-                let oldest = lane.queue.iter().map(|p| p.enqueued).min().unwrap();
+                // emptiness was rejected above, so `min()` always yields;
+                // treat a broken invariant as not-ready rather than panic
+                let Some(oldest) = lane.queue.iter().map(|p| p.enqueued).min() else {
+                    return false;
+                };
                 let window_due = oldest.checked_add(lane.tuning.batch_window);
                 // a queued deadline pulls the lane's due instant forward
                 // to that request's dispatch-due point (half its budget),
@@ -795,7 +799,9 @@ impl<'m> Scheduler<'m> {
             if lane.queue.is_empty() {
                 continue;
             }
-            let oldest = lane.queue.iter().map(|p| p.enqueued).min().unwrap();
+            let Some(oldest) = lane.queue.iter().map(|p| p.enqueued).min() else {
+                continue; // unreachable: emptiness was rejected above
+            };
             let window_due = oldest.checked_add(lane.tuning.batch_window);
             // wake for dispatch-due instants (so deadline'd requests ride
             // out in time) and for raw deadlines (so a blocked queue still

@@ -80,7 +80,9 @@ pub fn generate(
     if let Some(i) = prompts.iter().position(|p| p.is_empty()) {
         return Err(Error::Config(format!("prompt row {i} is empty")));
     }
-    let min_len = prompts.iter().map(|p| p.len()).min().unwrap();
+    let Some(min_len) = prompts.iter().map(|p| p.len()).min() else {
+        return Ok(Vec::new()); // unreachable: emptiness was handled above
+    };
     if target_len <= min_len {
         // nothing to generate for any row
         return Ok(prompts.to_vec());

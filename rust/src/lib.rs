@@ -22,6 +22,14 @@
 //!
 //! See `DESIGN.md` for the full system inventory and the per-experiment index.
 
+// Library code must surface failures as `Error` values with provenance, not
+// panic: `unwrap()` is warned crate-wide (tests keep their unwraps — a panic
+// *is* the failure report there).  Files that still carry justified unwraps
+// opt out locally with a file-level `#![allow]` + rationale.
+#![warn(clippy::unwrap_used)]
+#![cfg_attr(test, allow(clippy::unwrap_used))]
+
+pub mod analysis;
 pub mod calib;
 pub mod config;
 pub mod util;

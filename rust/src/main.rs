@@ -1,4 +1,4 @@
-//! `normtweak` CLI — quantize, evaluate, generate, and serve.
+//! `normtweak` CLI — quantize, evaluate, generate, serve, and check.
 //!
 //! ```text
 //! normtweak quantize [--config cfg.toml] [--model M] [--out path]
@@ -7,8 +7,16 @@
 //! normtweak generate [--n 4] [--len 48]
 //! normtweak serve    [--checkpoint path | --models w4=a.ntz,w2=b.ntz]
 //!                    [--requests 64] [--clients 4] [--deadline-ms 500] [--cache 256]
+//! normtweak check    [--manifest DIR] [--ckpt q.ntz] [--scheme gptq:w4g64]
+//!                    [--format human|json] [--deny-warnings]
 //! ```
 
+// same discipline as the library crate: the binary reports failures as
+// `Error` values, not panics (tests keep their unwraps)
+#![warn(clippy::unwrap_used)]
+#![cfg_attr(test, allow(clippy::unwrap_used))]
+
+use normtweak::analysis;
 use normtweak::calib::vocab::BOS;
 use normtweak::coordinator::{build_calib, quantize_model, FloatModel, PipelineConfig, QuantModel};
 use normtweak::eval::{lambada, ppl, subjective, tasks};
@@ -17,7 +25,7 @@ use normtweak::policy::{
     BitBudgetPlanner, SensitivityConfig, SensitivityProfile, SensitivityProfiler,
 };
 use normtweak::report::{f2, f4, save_record, Table};
-use normtweak::runtime::Runtime;
+use normtweak::runtime::{ArtifactManifest, Runtime};
 use normtweak::tweak::LossKind;
 use normtweak::util::json;
 use normtweak::Config;
@@ -36,6 +44,9 @@ fn allowed_flags(cmd: &str) -> Option<&'static [&'static str]> {
         "generate" => Some(&["n", "len"]),
         "serve" => Some(&["checkpoint", "requests", "clients", "models",
                           "deadline-ms", "cache"]),
+        "check" => Some(&["ckpt", "manifest", "scheme", "layer-bits", "no-tweak",
+                          "profile", "target-bits", "serve-config", "models",
+                          "format", "deny-warnings"]),
         "help" | "--help" => Some(&[]),
         _ => None,
     }
@@ -133,6 +144,12 @@ USAGE:
   normtweak serve    [--checkpoint path | --models w4=a.ntz,w2=b.ntz]
                      [--requests 64] [--clients 4] [--deadline-ms 500]
                      [--cache 256]
+  normtweak check    [--manifest DIR] [--ckpt quantized.ntz]
+                     [--scheme gptq:w4g64] [--layer-bits 0:8,3:2] [--no-tweak]
+                     [--profile sensitivity.json] [--target-bits 2.25]
+                     [--serve-config max_batch=8,batch_window_ms=2]
+                     [--models w4=a.ntz] [--format human|json]
+                     [--deny-warnings]
   normtweak help
 
 MULTI-MODEL SERVING:
@@ -151,6 +168,18 @@ AUTOMATIC MIXED PRECISION:
   `quantize --auto-bits B` runs the same planner — reusing an existing
   sensitivity.json (or --profile PATH) instead of re-profiling — and feeds
   the resulting per-layer overrides straight into the pipeline.
+
+PRE-FLIGHT CHECK:
+  `check` lints artifacts and configs offline — no XLA client, no model
+  load. It cross-checks manifest.json schema and grain/bucket consistency,
+  checkpoint tensors against the manifest and architecture, scheme/plan
+  legality (--scheme [method:]w<bits><pc|g<N>>, --layer-bits overrides,
+  --profile feasibility at --target-bits), and serve tunings
+  (--serve-config key=value, --models entries). Unlike the fail-fast
+  startup validation it backs, `check` reports every finding in one run as
+  stable NTxxxx diagnostics (table in the `analysis` module docs). Exit is
+  non-zero on any error — and on warnings too with --deny-warnings;
+  --format json emits the machine-readable report for CI.
 ";
 
 /// A reused `sensitivity.json` must actually describe the model being
@@ -389,6 +418,24 @@ fn run() -> normtweak::Result<()> {
                     prof
                 }
             };
+            // lint-backed pre-flight: audit the persisted profile, the
+            // budget's feasibility, and the base grain's exported graphs —
+            // collecting every NT03xx finding — before the greedy planner
+            // commits to an allocation
+            analysis::preflight(&analysis::CheckContext {
+                manifest: ArtifactManifest::load(&cfg.run.artifacts).ok(),
+                model: Some(weights.config.clone()),
+                model_name: Some(cfg.run.model.clone()),
+                plan: Some(analysis::PlanSpec {
+                    method: cfg.quant.method.clone(),
+                    scheme: base,
+                    layer_schemes: Vec::new(),
+                    tweak_loss: None,
+                }),
+                profile_path: Some(std::path::PathBuf::from(args.get_or("profile", &out))),
+                target_bits: Some(target),
+                ..Default::default()
+            })?;
             let plan = BitBudgetPlanner::new(base, target).plan(&profile)?;
             let table = normtweak::report::repro::plan_table(&profile, &plan, target);
             print!("{}", table.ascii());
@@ -479,6 +526,17 @@ fn run() -> normtweak::Result<()> {
                 })?,
                 None => 0,
             };
+            // lint-backed pre-flight (NT04xx): degenerate deadlines and
+            // tunings the exported batch buckets cannot honor surface here,
+            // before any engine thread spins up (warnings go to stderr)
+            analysis::preflight(&analysis::CheckContext {
+                manifest: ArtifactManifest::load(&cfg.run.artifacts).ok(),
+                serve: Some(analysis::ServeCheck {
+                    spec: deadline_ms.map(|d| format!("deadline_ms={d}")),
+                    models_spec: args.get("models").map(String::from),
+                }),
+                ..Default::default()
+            })?;
             let entries: Vec<(String, String)> = match args.get("models") {
                 Some(spec) => parse_models(spec)?,
                 None => vec![(
@@ -502,6 +560,74 @@ fn run() -> normtweak::Result<()> {
                 });
             }
             serve_demo(builder.build()?, n_requests, n_clients, deadline_ms)?;
+        }
+        "check" => {
+            let format = args.get_or("format", "human");
+            if format != "human" && format != "json" {
+                return Err(normtweak::Error::Config(format!(
+                    "bad --format `{format}` (accepted: human, json)"
+                )));
+            }
+            let deny = args.has("deny-warnings");
+            let mdir = args.get_or("manifest", &cfg.run.artifacts);
+            let mcfg = ModelConfig::builtin(&cfg.run.model)?;
+            let mut ctx = analysis::CheckContext {
+                // the raw manifest walk runs on the directory; the parsed
+                // manifest (when it loads at all) feeds the cross-checks
+                manifest_dir: Some(std::path::PathBuf::from(&mdir)),
+                manifest: ArtifactManifest::load(&mdir).ok(),
+                ckpt_path: args.get("ckpt").map(std::path::PathBuf::from),
+                model_name: Some(mcfg.name.clone()),
+                model: Some(mcfg),
+                profile_path: args.get("profile").map(std::path::PathBuf::from),
+                ..Default::default()
+            };
+            if let Some(t) = args.get("target-bits") {
+                ctx.target_bits = Some(t.parse().map_err(|_| {
+                    normtweak::Error::Config("bad --target-bits".into())
+                })?);
+            }
+            if args.has("scheme") || args.has("layer-bits") {
+                let (method, scheme) = match args.get("scheme") {
+                    Some(spec) => {
+                        let (m, s) = analysis::parse_scheme_spec(spec)?;
+                        (m.unwrap_or_else(|| cfg.quant.method.clone()), s)
+                    }
+                    None => (cfg.quant.method.clone(), cfg.scheme()),
+                };
+                let layer_schemes = match args.get("layer-bits") {
+                    Some(lb) => analysis::parse_layer_bits(lb, scheme)?,
+                    None => Vec::new(),
+                };
+                // --no-tweak (or [tweak] enabled=false) means no tweak_step
+                // graph is needed
+                let tweak_loss = if cfg.tweak.enabled {
+                    Some(LossKind::from_str(&cfg.tweak.loss)?)
+                } else {
+                    None
+                };
+                ctx.plan = Some(analysis::PlanSpec { method, scheme, layer_schemes, tweak_loss });
+            }
+            if args.has("serve-config") || args.has("models") {
+                ctx.serve = Some(analysis::ServeCheck {
+                    spec: args.get("serve-config").map(String::from),
+                    models_spec: args.get("models").map(String::from),
+                });
+            }
+            let report = analysis::run_lints(&ctx);
+            if format == "json" {
+                println!("{}", report.to_json().emit());
+            } else {
+                print!("{}", report.render_human());
+            }
+            if report.should_fail(deny) {
+                return Err(normtweak::Error::Config(format!(
+                    "check found {} error(s), {} warning(s){}",
+                    report.errors(),
+                    report.warnings(),
+                    if deny { " (--deny-warnings)" } else { "" }
+                )));
+            }
         }
         other => {
             eprintln!("unknown command `{other}`; see `normtweak help`\n{HELP}");
@@ -545,7 +671,12 @@ fn serve_demo(
                     let t = std::time::Instant::now();
                     match client.generate(model, req) {
                         Ok(resp) => {
-                            latencies.lock().unwrap().push(t.elapsed().as_micros());
+                            // a client thread that panicked mid-push poisons
+                            // the lock but leaves the Vec usable
+                            latencies
+                                .lock()
+                                .unwrap_or_else(|e| e.into_inner())
+                                .push(t.elapsed().as_micros());
                             // cache replays answered tokens but generated none
                             if !resp.cached {
                                 new_tokens.fetch_add(resp.new_tokens().len(), Ordering::Relaxed);
@@ -562,7 +693,7 @@ fn serve_demo(
     let stats = engine.shutdown()?;
 
     let wall = t0.elapsed().as_secs_f64();
-    let mut lat = latencies.into_inner().unwrap();
+    let mut lat = latencies.into_inner().unwrap_or_else(|e| e.into_inner());
     lat.sort_unstable();
     if lat.is_empty() {
         return Err(normtweak::Error::Serve("no requests completed".into()));
@@ -712,6 +843,30 @@ mod tests {
         assert!(HELP.contains("--models"));
         assert!(HELP.contains("--deadline-ms"));
         assert!(HELP.contains("--cache"));
+    }
+
+    #[test]
+    fn check_flags_parse() {
+        let a = parse(&["check", "--ckpt", "q.ntz", "--manifest", "artifacts",
+                        "--scheme", "gptq:w4g64", "--layer-bits", "0:8,3:2",
+                        "--profile", "s.json", "--target-bits", "2.25",
+                        "--serve-config", "max_batch=8", "--models", "w4=a.ntz",
+                        "--format", "json", "--deny-warnings"]).unwrap();
+        assert_eq!(a.cmd, "check");
+        assert_eq!(a.get("format"), Some("json"));
+        assert!(a.has("deny-warnings"));
+        // check-only flags stay rejected elsewhere
+        assert!(parse(&["quantize", "--deny-warnings"]).is_err());
+        assert!(parse(&["serve", "--format", "json"]).is_err());
+        assert!(parse(&["eval", "--scheme", "w4g64"]).is_err());
+    }
+
+    #[test]
+    fn help_documents_check() {
+        assert!(HELP.contains("normtweak check"));
+        assert!(HELP.contains("--deny-warnings"));
+        assert!(HELP.contains("--format human|json"));
+        assert!(HELP.contains("NTxxxx"));
     }
 
     #[test]

@@ -109,7 +109,11 @@ impl ModelConfig {
                 });
             }
         }
-        Err(Error::Config(format!("unknown model {name}")))
+        let names: Vec<&str> = MODEL_REGISTRY.iter().map(|r| r.0).collect();
+        Err(Error::Config(format!(
+            "unknown model `{name}` (registered: {})",
+            names.join(", ")
+        )))
     }
 }
 

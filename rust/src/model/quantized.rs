@@ -116,13 +116,18 @@ impl QuantizedBlock {
             )));
         }
         let mut it = params.into_iter();
-        self.ln1_g = it.next().unwrap();
+        let mut take = |field: &str| {
+            it.next().ok_or_else(|| {
+                Error::Quant(format!("norm param `{field}` missing from a length-checked list"))
+            })
+        };
+        self.ln1_g = take("ln1.g")?;
         if has_beta {
-            self.ln1_b = Some(it.next().unwrap());
+            self.ln1_b = Some(take("ln1.b")?);
         }
-        self.ln2_g = it.next().unwrap();
+        self.ln2_g = take("ln2.g")?;
         if has_beta {
-            self.ln2_b = Some(it.next().unwrap());
+            self.ln2_b = Some(take("ln2.b")?);
         }
         Ok(())
     }

@@ -119,7 +119,12 @@ impl BitBudgetPlanner {
                 if total_bits + cost > budget {
                     continue;
                 }
-                let gain = f64::from(l.score(cur).unwrap() - l.score(next).unwrap());
+                // score coverage was validated before the loop; a layer
+                // that still lacks one simply never gets promoted
+                let (Some(sc), Some(sn)) = (l.score(cur), l.score(next)) else {
+                    continue;
+                };
+                let gain = f64::from(sc - sn);
                 if gain <= 0.0 {
                     continue; // spending bits with no measured benefit
                 }

@@ -6,6 +6,10 @@
 //! (quantize→dequantize in f32) matches what the paper's evaluation measures:
 //! accuracy under the quantized numerics, independent of kernel dtype.
 
+// Justified unwraps: fake-quant inputs are rank-checked by the callers
+// (crate-wide `clippy::unwrap_used` opt-out).
+#![allow(clippy::unwrap_used)]
+
 use crate::error::Result;
 use crate::tensor::Tensor;
 

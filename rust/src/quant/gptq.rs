@@ -10,6 +10,10 @@
 //! output channels — the same layout the AOT graphs use.  All Hessian
 //! algebra is f64 for stability (2-bit quantization amplifies roundoff).
 
+// Justified unwraps: the four-linear iterator is built from a fixed-size array
+// (crate-wide `clippy::unwrap_used` opt-out).
+#![allow(clippy::unwrap_used)]
+
 use crate::error::{Error, Result};
 use crate::tensor::Tensor;
 use crate::util::parallel::{par_chunks_mut, par_map};

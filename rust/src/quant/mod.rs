@@ -28,6 +28,17 @@
 //! valid everywhere a method spec is accepted: `--method`, config files,
 //! and `+`-compositions.
 //!
+//! # Startup validation (lint-backed)
+//!
+//! The pipeline's pre-flight checks are lint rules from [`crate::analysis`]
+//! shared with `normtweak check`: method-spec resolution
+//! ([`quantizer::validate_spec`], diagnostic NT0301), pack-width legality
+//! ([`QuantScheme::pack_bits`], NT0303), and the exported-grain /
+//! tweak-graph cross-checks (`coordinator::validate_scheme_artifacts`,
+//! NT0308/NT0309). `quantize` still aborts on the first `Err`, but the
+//! message carries every error-severity finding; run `normtweak check` for
+//! the full diagnostic list including warnings.
+//!
 //! # Composed methods
 //!
 //! `a+b` chains preprocess stages left-to-right and quantizes with the last

@@ -238,7 +238,11 @@ impl<'a> LayerContext<'a> {
     fn tap_inner(&mut self, lin: Linear) -> Result<Tensor> {
         self.ensure_taps()?;
         let i = lin as usize;
-        let t = self.taps.as_ref().unwrap()[i].clone();
+        let t = self
+            .taps
+            .as_ref()
+            .ok_or_else(|| Error::Quant("taps unavailable after ensure_taps".into()))?[i]
+            .clone();
         let k = *t
             .shape
             .last()
@@ -527,11 +531,15 @@ pub fn resolve(spec: &str, params: &QuantizerParams) -> Result<Box<dyn Quantizer
         })?;
         parts.push((reg.build)(params));
     }
-    if parts.len() == 1 {
-        Ok(parts.pop().unwrap())
-    } else {
-        Ok(Box::new(Composed::new(parts)?))
+    if parts.len() > 1 {
+        return Ok(Box::new(Composed::new(parts)?));
     }
+    // the stage loop above pushed at least one quantizer or errored
+    parts.pop().ok_or_else(|| {
+        Error::Config(format!(
+            "empty quantizer spec `{spec}` (compose as `smoothquant+gptq`)"
+        ))
+    })
 }
 
 /// Validate a spec and return its canonical name (used by `Config::method`).

@@ -360,30 +360,71 @@ impl ArtifactManifest {
         self.dir.join(&g.file)
     }
 
-    /// Verify a Rust-side model config against the manifest's record.
-    pub fn verify_model(&self, cfg: &ModelConfig) -> Result<()> {
-        let m = self
-            .models
-            .get(&cfg.name)
-            .ok_or_else(|| Error::Artifact(format!("model {} not in manifest", cfg.name)))?;
+    /// The models the manifest records, sorted (for self-diagnosing
+    /// "not in manifest" errors, like [`Self::grain_tags`]).
+    pub fn model_names(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.models.keys().map(|s| s.as_str()).collect();
+        names.sort_unstable();
+        names
+    }
+
+    /// Field-by-field comparison of a Rust-side model config against the
+    /// manifest's record: `None` when the model is absent, otherwise every
+    /// drifted field as `(field, manifest_value, registry_value)` (empty =
+    /// the records agree).  The lint layer reports each drift separately;
+    /// [`Self::verify_model`] collapses them into one error.
+    pub fn model_field_mismatches(
+        &self,
+        cfg: &ModelConfig,
+    ) -> Option<Vec<(&'static str, String, String)>> {
+        let m = self.models.get(&cfg.name)?;
         let norm = match cfg.norm {
             crate::model::NormKind::LayerNorm => "layernorm",
             crate::model::NormKind::RmsNorm => "rmsnorm",
         };
-        if m.n_layer != cfg.n_layer
-            || m.d_model != cfg.d_model
-            || m.n_head != cfg.n_head
-            || m.d_ff != cfg.d_ff
-            || m.vocab != cfg.vocab
-            || m.seq != cfg.seq
-            || m.norm != norm
-        {
-            return Err(Error::Artifact(format!(
-                "model {} config mismatch between Rust registry and manifest",
-                cfg.name
-            )));
+        let pairs = [
+            ("n_layer", m.n_layer, cfg.n_layer),
+            ("d_model", m.d_model, cfg.d_model),
+            ("n_head", m.n_head, cfg.n_head),
+            ("d_ff", m.d_ff, cfg.d_ff),
+            ("vocab", m.vocab, cfg.vocab),
+            ("seq", m.seq, cfg.seq),
+        ];
+        let mut diffs: Vec<(&'static str, String, String)> = pairs
+            .iter()
+            .filter(|(_, a, b)| a != b)
+            .map(|&(f, a, b)| (f, a.to_string(), b.to_string()))
+            .collect();
+        if m.norm != norm {
+            diffs.push(("norm", m.norm.clone(), norm.to_string()));
         }
-        Ok(())
+        Some(diffs)
+    }
+
+    /// Verify a Rust-side model config against the manifest's record.
+    /// Self-diagnosing: an absent model lists what *is* recorded, and a
+    /// drifted one names every disagreeing field with both values.
+    pub fn verify_model(&self, cfg: &ModelConfig) -> Result<()> {
+        let diffs = self.model_field_mismatches(cfg).ok_or_else(|| {
+            Error::Artifact(format!(
+                "model {} not in manifest (manifest records: {})",
+                cfg.name,
+                self.model_names().join(", ")
+            ))
+        })?;
+        if diffs.is_empty() {
+            return Ok(());
+        }
+        let detail = diffs
+            .iter()
+            .map(|(f, m, r)| format!("{f}: manifest={m} registry={r}"))
+            .collect::<Vec<_>>()
+            .join(", ");
+        Err(Error::Artifact(format!(
+            "model {} config mismatch between Rust registry and manifest \
+             ({detail}) — re-run the AOT export or fix the registry",
+            cfg.name
+        )))
     }
 
     /// Smallest exported batch bucket that fits `n`.  The error lists the
@@ -441,9 +482,17 @@ mod tests {
         let m = ArtifactManifest::load(&dir).unwrap();
         let cfg = ModelConfig::builtin("nt-tiny").unwrap();
         m.verify_model(&cfg).unwrap();
+        assert_eq!(m.model_field_mismatches(&cfg), Some(vec![]));
         let mut bad = cfg;
         bad.d_model = 96;
-        assert!(m.verify_model(&bad).is_err());
+        // self-diagnosing: the error names the drifted field and both values
+        let err = m.verify_model(&bad).unwrap_err().to_string();
+        assert!(err.contains("d_model") && err.contains("128") && err.contains("96"), "{err}");
+        // absent model lists what the manifest does record
+        let other = ModelConfig::builtin("nt-small").unwrap();
+        assert!(m.model_field_mismatches(&other).is_none());
+        let err = m.verify_model(&other).unwrap_err().to_string();
+        assert!(err.contains("not in manifest") && err.contains("nt-tiny"), "{err}");
     }
 
     #[test]

@@ -4,6 +4,10 @@
 //! `b"NTZ1" | u32 n | per tensor: u32 name_len, name, u8 dtype, u32 ndim,
 //!  u64*ndim dims, raw data (C order)`.
 
+// Justified unwraps: `chunks_exact(n)` slices always convert to `[u8; n]`
+// (crate-wide `clippy::unwrap_used` opt-out).
+#![allow(clippy::unwrap_used)]
+
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;

@@ -4,6 +4,11 @@
 //! owns the m/v tensors between iterations and provides a CPU mirror of the
 //! update rule so tests can verify the graph's arithmetic.
 
+// Justified unwraps: optimizer state tensors are created f32 by `new` and stay
+// f32; `as_f32` on them cannot fail
+// (crate-wide `clippy::unwrap_used` opt-out).
+#![allow(clippy::unwrap_used)]
+
 use crate::tensor::Tensor;
 
 pub const B1: f32 = 0.9;

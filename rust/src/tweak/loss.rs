@@ -5,6 +5,10 @@
 //! (channel-wise mean/variance alignment — relaxed on purpose: point-wise
 //! alignment overfits the calibration set, see Table 9).
 
+// Justified unwraps: loss inputs are rank-checked before the channel split
+// (crate-wide `clippy::unwrap_used` opt-out).
+#![allow(clippy::unwrap_used)]
+
 use crate::error::{Error, Result};
 use crate::tensor::{mean_var_channels, Tensor};
 

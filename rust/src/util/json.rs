@@ -307,7 +307,10 @@ impl<'a> Parser<'a> {
         {
             self.i += 1;
         }
-        let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        // the matched bytes are all ASCII, but surface a parse error rather
+        // than panic if that ever stops holding
+        let text = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|_| Error::msg("bad number (non-utf8 bytes)"))?;
         text.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| Error::msg(format!("bad number '{text}'")))

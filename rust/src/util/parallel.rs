@@ -1,5 +1,10 @@
 //! Scoped data-parallel helpers over `std::thread` (rayon stand-in).
 
+// Justified unwraps: worker-pool mutexes guard plain counters/iterators; a
+// poisoned lock means a worker already panicked and the test run is lost
+// (crate-wide `clippy::unwrap_used` opt-out).
+#![allow(clippy::unwrap_used)]
+
 use std::sync::Mutex;
 
 /// Number of worker threads to use for `n_items` of work.

@@ -1,0 +1,654 @@
+//! Golden-fixture corpus for the `normtweak check` lint rules.
+//!
+//! Fully offline: corrupted manifests live under
+//! `tests/fixtures/analysis/`, corrupted checkpoints and profiles are
+//! synthesized into temp dirs.  The suite pins three contracts:
+//!
+//! 1. every committed fixture produces exactly its golden diagnostic-code
+//!    set (and the clean fixture produces none),
+//! 2. every stable `NTxxxx` code in [`normtweak::analysis::codes::ALL`]
+//!    fires on at least one corpus scenario and appears in the module's
+//!    rustdoc table,
+//! 3. `check --format json` output round-trips through `util::json`.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+
+use normtweak::analysis::{codes, run_lints, CheckContext, PlanSpec, ServeCheck};
+use normtweak::model::{ModelConfig, ModelWeights, QuantLinear, QuantizedBlock, QuantizedModel};
+use normtweak::quant::QuantScheme;
+use normtweak::runtime::ArtifactManifest;
+use normtweak::tensor::{load_ntz, pack_codes, save_ntz, Tensor};
+use normtweak::tweak::LossKind;
+use normtweak::util::json::Json;
+
+fn fixture_dir(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/analysis").join(name)
+}
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("nt_analysis_lint_{name}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn tiny() -> ModelConfig {
+    ModelConfig::builtin("nt-tiny").unwrap()
+}
+
+fn w4g64() -> QuantScheme {
+    QuantScheme { bits: 4, group_size: Some(64) }
+}
+
+fn good_manifest() -> ArtifactManifest {
+    ArtifactManifest::load(fixture_dir("good")).unwrap()
+}
+
+fn mk_linear(k: usize, n: usize, scheme: QuantScheme) -> QuantLinear {
+    let packed = pack_codes(&vec![0i8; k * n], scheme.pack_bits().unwrap()).unwrap();
+    let groups = scheme.group_size.map_or(1, |g| k / g);
+    QuantLinear::new(k, n, packed, Tensor::ones(&[groups, n]), Tensor::zeros(&[n]))
+}
+
+/// A well-formed nt-tiny checkpoint at `scheme`, saved into a temp dir.
+fn save_checkpoint(name: &str, scheme: QuantScheme) -> PathBuf {
+    let cfg = tiny();
+    let w = ModelWeights::random(cfg.clone(), 7);
+    let mut qm = QuantizedModel::scaffold(&w, scheme).unwrap();
+    for i in 0..cfg.n_layer {
+        let b = w.block(i).unwrap();
+        qm.blocks.push(QuantizedBlock {
+            ln1_g: b.ln1_g.clone(),
+            ln1_b: b.ln1_b.cloned(),
+            qkv: mk_linear(cfg.d_model, 3 * cfg.d_model, scheme),
+            proj: mk_linear(cfg.d_model, cfg.d_model, scheme),
+            ln2_g: b.ln2_g.clone(),
+            ln2_b: b.ln2_b.cloned(),
+            fc1: mk_linear(cfg.d_model, cfg.d_ff, scheme),
+            fc2: mk_linear(cfg.d_ff, cfg.d_model, scheme),
+        });
+    }
+    let path = temp_dir(name).join("q.ntz");
+    qm.save(&path).unwrap();
+    path
+}
+
+/// Save a clean checkpoint, then mutate its raw tensor map in place.
+fn corrupt_checkpoint(
+    name: &str,
+    scheme: QuantScheme,
+    f: impl FnOnce(&mut BTreeMap<String, Tensor>),
+) -> PathBuf {
+    let path = save_checkpoint(name, scheme);
+    let mut tensors = load_ntz(&path).unwrap();
+    f(&mut tensors);
+    save_ntz(&path, &tensors).unwrap();
+    path
+}
+
+fn write_file(dir: &str, file: &str, body: &str) -> PathBuf {
+    let path = temp_dir(dir).join(file);
+    std::fs::write(&path, body).unwrap();
+    path
+}
+
+const GOOD_PROFILE: &str = r#"{"model":"nt-tiny","method":"gptq","group_tag":"g64",
+    "calib_source":"gen-v2","loss":"dist","candidate_bits":[2,4],
+    "layers":[{"layer":0,"scores":{"2":1.0,"4":0.5}},
+              {"layer":1,"scores":{"2":1.0,"4":0.5}}]}"#;
+
+fn plan(method: &str, scheme: QuantScheme) -> PlanSpec {
+    PlanSpec {
+        method: method.to_string(),
+        scheme,
+        layer_schemes: Vec::new(),
+        tweak_loss: None,
+    }
+}
+
+/// Unique sorted code set of a full lint run over `ctx`.
+fn code_set(ctx: &CheckContext) -> BTreeSet<&'static str> {
+    run_lints(ctx).codes().into_iter().collect()
+}
+
+// ---------------------------------------------------------------- golden --
+
+#[test]
+fn good_fixture_is_clean() {
+    // the everything-populated context `normtweak check` builds, against
+    // entirely well-formed inputs: zero findings
+    let ctx = CheckContext {
+        manifest_dir: Some(fixture_dir("good")),
+        manifest: Some(good_manifest()),
+        ckpt_path: Some(save_checkpoint("clean", w4g64())),
+        model: Some(tiny()),
+        model_name: Some("nt-tiny".to_string()),
+        plan: Some(PlanSpec {
+            method: "gptq".to_string(),
+            scheme: w4g64(),
+            layer_schemes: vec![(1, QuantScheme { bits: 2, group_size: Some(64) })],
+            tweak_loss: Some(LossKind::Dist),
+        }),
+        profile_path: Some(write_file("clean_profile", "sensitivity.json", GOOD_PROFILE)),
+        target_bits: Some(2.5),
+        serve: Some(ServeCheck {
+            spec: Some("max_batch=8,batch_window_ms=2,deadline_ms=500".to_string()),
+            models_spec: Some("w4=quantized.ntz".to_string()),
+        }),
+    };
+    let report = run_lints(&ctx);
+    assert!(report.is_empty(), "clean fixture raised: {:?}", report.codes());
+    assert!(!report.should_fail(true));
+}
+
+#[test]
+fn bad_manifest_fixture_matches_golden_code_set() {
+    // tests/fixtures/analysis/bad/manifest.json packs six violation
+    // classes; the walk must surface all of them in one run
+    let ctx = CheckContext {
+        manifest_dir: Some(fixture_dir("bad")),
+        ..CheckContext::default()
+    };
+    let want: BTreeSet<&str> = [
+        codes::MANIFEST_KEY,       // no calib_batch
+        codes::MANIFEST_GROUPS,    // {"g32": 64} tag/size drift
+        codes::DECODE_RECORD,      // rank-2 decode cache shape
+        codes::DECODE_BUCKET_GAP,  // decode max bucket 8 < main max 32
+        codes::GRAPH_FILE_MISSING, // HLO file absent from the fixture dir
+        codes::GRAPH_DUPLICATE,    // (nt-tiny, embed.b8) listed twice
+    ]
+    .iter()
+    .copied()
+    .collect();
+    assert_eq!(code_set(&ctx), want);
+}
+
+#[test]
+fn bad_manifest_findings_name_field_and_fix() {
+    let ctx = CheckContext {
+        manifest_dir: Some(fixture_dir("bad")),
+        ..CheckContext::default()
+    };
+    let report = run_lints(&ctx);
+    for d in &report.diagnostics {
+        assert!(d.field.is_some(), "finding {} has no field", d.code);
+        assert!(d.fix.is_some(), "finding {} has no fix", d.code);
+        assert!(d.origin.is_some(), "finding {} has no origin", d.code);
+    }
+}
+
+// ------------------------------------------------------------- NT01xx ----
+
+#[test]
+fn missing_manifest_dir_is_nt0101_only() {
+    let ctx = CheckContext {
+        manifest_dir: Some(temp_dir("no_manifest")),
+        ..CheckContext::default()
+    };
+    assert_eq!(run_lints(&ctx).codes(), vec![codes::MANIFEST_UNREADABLE]);
+}
+
+#[test]
+fn garbage_manifest_is_nt0102_only() {
+    write_file("garbage_manifest", "manifest.json", "not json {");
+    let ctx = CheckContext {
+        manifest_dir: Some(temp_dir("garbage_manifest")),
+        ..CheckContext::default()
+    };
+    assert_eq!(run_lints(&ctx).codes(), vec![codes::MANIFEST_PARSE]);
+}
+
+#[test]
+fn empty_buckets_is_nt0104() {
+    write_file(
+        "empty_buckets",
+        "manifest.json",
+        r#"{"format":1,"calib_batch":32,"buckets":[],
+            "groups":{"pc":0},"models":{},"graphs":[]}"#,
+    );
+    let ctx = CheckContext {
+        manifest_dir: Some(temp_dir("empty_buckets")),
+        ..CheckContext::default()
+    };
+    assert!(code_set(&ctx).contains(codes::MANIFEST_BUCKETS));
+}
+
+// ------------------------------------------------------------- NT02xx ----
+
+#[test]
+fn unreadable_checkpoint_is_nt0201() {
+    let ctx = CheckContext {
+        ckpt_path: Some(temp_dir("no_ckpt").join("missing.ntz")),
+        ..CheckContext::default()
+    };
+    assert_eq!(run_lints(&ctx).codes(), vec![codes::CKPT_UNREADABLE]);
+}
+
+#[test]
+fn corrupted_checkpoint_collects_tensor_pack_and_geometry() {
+    let ckpt = corrupt_checkpoint("corrupt_tensors", w4g64(), |t| {
+        t.remove("block0.ln1.g"); // NT0202 missing tensor
+        t.remove("meta.bits"); // NT0202 missing meta
+        // NT0203: pack width 5 has no packed storage
+        t.insert("block0.attn.wqkv.pbits".to_string(), Tensor::i32(&[1], vec![5]));
+        // NT0204: logical shape disagrees with the nt-tiny architecture
+        t.insert("block0.attn.wproj.shape".to_string(), Tensor::i32(&[2], vec![64, 64]));
+    });
+    let ctx = CheckContext {
+        ckpt_path: Some(ckpt),
+        model: Some(tiny()),
+        ..CheckContext::default()
+    };
+    let seen = code_set(&ctx);
+    for want in [codes::CKPT_TENSOR, codes::CKPT_PACK, codes::CKPT_GEOMETRY] {
+        assert!(seen.contains(want), "missing {want} in {seen:?}");
+    }
+}
+
+#[test]
+fn unexported_grain_checkpoint_is_nt0205() {
+    // a w2/g32 checkpoint against a manifest exporting only pc + g64
+    let ckpt = save_checkpoint("grain_g32", QuantScheme::w2_g32());
+    let ctx = CheckContext {
+        ckpt_path: Some(ckpt),
+        manifest: Some(good_manifest()),
+        ..CheckContext::default()
+    };
+    assert!(code_set(&ctx).contains(codes::CKPT_GRAIN));
+}
+
+#[test]
+fn model_absent_from_manifest_is_nt0206() {
+    let ckpt = save_checkpoint("model_unknown", w4g64());
+    let ctx = CheckContext {
+        ckpt_path: Some(ckpt),
+        manifest: Some(good_manifest()),
+        model: Some(ModelConfig::builtin("nt-small").unwrap()),
+        ..CheckContext::default()
+    };
+    assert!(code_set(&ctx).contains(codes::MODEL_UNKNOWN));
+}
+
+#[test]
+fn registry_vs_manifest_drift_is_nt0207() {
+    let ckpt = save_checkpoint("model_drift", w4g64());
+    let mut cfg = tiny();
+    cfg.d_model = 96; // drift from the manifest's recorded 128
+    let ctx = CheckContext {
+        ckpt_path: Some(ckpt),
+        manifest: Some(good_manifest()),
+        model: Some(cfg),
+        ..CheckContext::default()
+    };
+    assert!(code_set(&ctx).contains(codes::MODEL_DRIFT));
+}
+
+#[test]
+fn decode_cache_drift_is_nt0208() {
+    // manifest records an 8-head cache; nt-tiny has 4 heads
+    write_file(
+        "decode_drift",
+        "manifest.json",
+        r#"{"format":1,"calib_batch":32,"buckets":[8],
+            "groups":{"pc":0,"g64":64},
+            "decode":{"buckets":[8],
+                      "caches":{"nt-tiny":{"n_layer":2,"shape":[8,128,32]}}},
+            "models":{"nt-tiny":{"n_layer":2,"d_model":128,"n_head":4,
+                                 "d_ff":512,"vocab":2048,"seq":128,
+                                 "norm":"layernorm"}},
+            "graphs":[]}"#,
+    );
+    let manifest = ArtifactManifest::load(temp_dir("decode_drift")).unwrap();
+    let ctx = CheckContext {
+        ckpt_path: Some(save_checkpoint("decode_drift_ckpt", w4g64())),
+        manifest: Some(manifest),
+        model: Some(tiny()),
+        ..CheckContext::default()
+    };
+    assert!(code_set(&ctx).contains(codes::DECODE_CACHE_DRIFT));
+}
+
+// ------------------------------------------------------------- NT03xx ----
+
+#[test]
+fn plan_violations_are_all_collected() {
+    let mut p = plan("nope", QuantScheme::w2_g64());
+    p.layer_schemes = vec![
+        (0, QuantScheme { bits: 8, group_size: Some(64) }),
+        (0, QuantScheme { bits: 5, group_size: Some(64) }), // dup + bad width
+        (1, QuantScheme { bits: 4, group_size: None }),     // grain drift
+        (9, QuantScheme { bits: 4, group_size: Some(64) }), // out of range
+    ];
+    let ctx = CheckContext {
+        plan: Some(p),
+        model: Some(tiny()),
+        ..CheckContext::default()
+    };
+    let want: BTreeSet<&str> = [
+        codes::BAD_METHOD,
+        codes::DUP_LAYER_BITS,
+        codes::BAD_PACK_WIDTH,
+        codes::GRAIN_OVERRIDE,
+        codes::LAYER_RANGE,
+    ]
+    .iter()
+    .copied()
+    .collect();
+    assert_eq!(code_set(&ctx), want);
+}
+
+#[test]
+fn unexported_plan_grain_is_nt0308_and_suppresses_nt0309() {
+    let mut p = plan("gptq", QuantScheme::w2_g32());
+    p.tweak_loss = Some(LossKind::Dist);
+    let ctx = CheckContext {
+        plan: Some(p),
+        manifest: Some(good_manifest()),
+        model_name: Some("nt-tiny".to_string()),
+        ..CheckContext::default()
+    };
+    // one finding, not two: the tweak graph can't exist at an unexported
+    // grain, so only the grain itself is reported
+    assert_eq!(run_lints(&ctx).codes(), vec![codes::GRAIN_UNEXPORTED]);
+}
+
+#[test]
+fn missing_tweak_graph_is_nt0309() {
+    // grain g64 is exported, but only the Dist tweak_step graph is — an
+    // Mse-loss run has no nt-tiny.tweak_step_mse.g64
+    let mut p = plan("gptq", w4g64());
+    p.tweak_loss = Some(LossKind::Mse);
+    let ctx = CheckContext {
+        plan: Some(p),
+        manifest: Some(good_manifest()),
+        model_name: Some("nt-tiny".to_string()),
+        ..CheckContext::default()
+    };
+    assert_eq!(run_lints(&ctx).codes(), vec![codes::TWEAK_GRAPH]);
+}
+
+#[test]
+fn profile_provenance_mismatch_is_nt0307() {
+    let body = GOOD_PROFILE.replace("\"model\":\"nt-tiny\"", "\"model\":\"nt-small\"");
+    let ctx = CheckContext {
+        profile_path: Some(write_file("profile_wrong_model", "sensitivity.json", &body)),
+        model: Some(tiny()),
+        ..CheckContext::default()
+    };
+    assert_eq!(run_lints(&ctx).codes(), vec![codes::PROFILE_MISMATCH]);
+}
+
+#[test]
+fn infeasible_target_bits_is_nt0306() {
+    let ctx = CheckContext {
+        profile_path: Some(write_file("profile_budget", "sensitivity.json", GOOD_PROFILE)),
+        target_bits: Some(1.5), // below the smallest candidate (2)
+        ..CheckContext::default()
+    };
+    assert_eq!(run_lints(&ctx).codes(), vec![codes::INFEASIBLE_BUDGET]);
+}
+
+#[test]
+fn inconsistent_profile_is_nt0310() {
+    // duplicate layer 0 and a missing 4-bit score on layer 1
+    let body = r#"{"model":"nt-tiny","method":"gptq","group_tag":"g64",
+        "calib_source":"gen-v2","loss":"dist","candidate_bits":[2,4],
+        "layers":[{"layer":0,"scores":{"2":1.0,"4":0.5}},
+                  {"layer":0,"scores":{"2":1.0,"4":0.5}},
+                  {"layer":1,"scores":{"2":1.0}}]}"#;
+    let ctx = CheckContext {
+        profile_path: Some(write_file("profile_inconsistent", "sensitivity.json", body)),
+        ..CheckContext::default()
+    };
+    let report = run_lints(&ctx);
+    let want: BTreeSet<&str> = [codes::PROFILE_INVALID].iter().copied().collect();
+    assert_eq!(code_set(&ctx), want);
+    assert_eq!(report.errors(), 2, "{:?}", report.diagnostics);
+}
+
+// ------------------------------------------------------------- NT04xx ----
+
+#[test]
+fn serve_tuning_violations_are_all_collected() {
+    let ctx = CheckContext {
+        manifest: Some(good_manifest()),
+        serve: Some(ServeCheck {
+            // zero batch + zero window + unknown key in one spec; the
+            // models entry is missing its `=`
+            spec: Some("max_batch=0,batch_window_ms=0,bogus=1".to_string()),
+            models_spec: Some("missing-equals.ntz".to_string()),
+        }),
+        ..CheckContext::default()
+    };
+    let want: BTreeSet<&str> = [
+        codes::ZERO_MAX_BATCH,
+        codes::ZERO_BATCH_WINDOW,
+        codes::BAD_SERVE_SPEC, // both the bogus key and the bad models entry
+    ]
+    .iter()
+    .copied()
+    .collect();
+    assert_eq!(code_set(&ctx), want);
+}
+
+#[test]
+fn serve_warnings_are_nt0403_and_nt0404() {
+    let ctx = CheckContext {
+        manifest: Some(good_manifest()),
+        serve: Some(ServeCheck {
+            // 64 > largest exported bucket (32); deadline 1ms < window 2ms
+            spec: Some("max_batch=64,batch_window_ms=2,deadline_ms=1".to_string()),
+            models_spec: None,
+        }),
+        ..CheckContext::default()
+    };
+    let report = run_lints(&ctx);
+    let want: BTreeSet<&str> =
+        [codes::BATCH_OVER_BUCKET, codes::DEADLINE_WINDOW].iter().copied().collect();
+    assert_eq!(report.codes().into_iter().collect::<BTreeSet<_>>(), want);
+    // both are warnings: fail only under --deny-warnings
+    assert_eq!(report.errors(), 0);
+    assert_eq!(report.warnings(), 2);
+    assert!(!report.should_fail(false));
+    assert!(report.should_fail(true));
+}
+
+// ------------------------------------------------------- meta-contracts --
+
+/// Every stable code fires somewhere in this corpus — running all the
+/// scenario contexts above must cover `codes::ALL` exactly.
+#[test]
+fn corpus_covers_every_stable_code() {
+    let mut fired: BTreeSet<&'static str> = BTreeSet::new();
+
+    // NT0101/NT0102/NT0104 + the bad fixture's six
+    fired.extend(code_set(&CheckContext {
+        manifest_dir: Some(fixture_dir("bad")),
+        ..CheckContext::default()
+    }));
+    fired.extend(code_set(&CheckContext {
+        manifest_dir: Some(temp_dir("cov_no_manifest")),
+        ..CheckContext::default()
+    }));
+    write_file("cov_garbage", "manifest.json", "{");
+    fired.extend(code_set(&CheckContext {
+        manifest_dir: Some(temp_dir("cov_garbage")),
+        ..CheckContext::default()
+    }));
+    write_file(
+        "cov_buckets",
+        "manifest.json",
+        r#"{"format":1,"calib_batch":32,"buckets":[],
+            "groups":{"pc":0},"models":{},"graphs":[]}"#,
+    );
+    fired.extend(code_set(&CheckContext {
+        manifest_dir: Some(temp_dir("cov_buckets")),
+        ..CheckContext::default()
+    }));
+
+    // NT02xx
+    fired.extend(code_set(&CheckContext {
+        ckpt_path: Some(temp_dir("cov_no_ckpt").join("missing.ntz")),
+        ..CheckContext::default()
+    }));
+    let corrupted = corrupt_checkpoint("cov_corrupt", w4g64(), |t| {
+        t.remove("block0.ln1.g");
+        t.insert("block0.attn.wqkv.pbits".to_string(), Tensor::i32(&[1], vec![5]));
+        t.insert("block0.attn.wproj.shape".to_string(), Tensor::i32(&[2], vec![64, 64]));
+    });
+    fired.extend(code_set(&CheckContext {
+        ckpt_path: Some(corrupted),
+        model: Some(tiny()),
+        ..CheckContext::default()
+    }));
+    fired.extend(code_set(&CheckContext {
+        ckpt_path: Some(save_checkpoint("cov_grain", QuantScheme::w2_g32())),
+        manifest: Some(good_manifest()),
+        ..CheckContext::default()
+    }));
+    fired.extend(code_set(&CheckContext {
+        ckpt_path: Some(save_checkpoint("cov_unknown", w4g64())),
+        manifest: Some(good_manifest()),
+        model: Some(ModelConfig::builtin("nt-small").unwrap()),
+        ..CheckContext::default()
+    }));
+    let mut drifted = tiny();
+    drifted.d_model = 96;
+    fired.extend(code_set(&CheckContext {
+        ckpt_path: Some(save_checkpoint("cov_drift", w4g64())),
+        manifest: Some(good_manifest()),
+        model: Some(drifted),
+        ..CheckContext::default()
+    }));
+    write_file(
+        "cov_decode",
+        "manifest.json",
+        r#"{"format":1,"calib_batch":32,"buckets":[8],
+            "groups":{"pc":0,"g64":64},
+            "decode":{"buckets":[8],
+                      "caches":{"nt-tiny":{"n_layer":2,"shape":[8,128,32]}}},
+            "models":{"nt-tiny":{"n_layer":2,"d_model":128,"n_head":4,
+                                 "d_ff":512,"vocab":2048,"seq":128,
+                                 "norm":"layernorm"}},
+            "graphs":[]}"#,
+    );
+    fired.extend(code_set(&CheckContext {
+        ckpt_path: Some(save_checkpoint("cov_decode_ckpt", w4g64())),
+        manifest: Some(ArtifactManifest::load(temp_dir("cov_decode")).unwrap()),
+        model: Some(tiny()),
+        ..CheckContext::default()
+    }));
+
+    // NT03xx
+    let mut bad_plan = plan("nope", QuantScheme::w2_g64());
+    bad_plan.layer_schemes = vec![
+        (0, QuantScheme { bits: 8, group_size: Some(64) }),
+        (0, QuantScheme { bits: 5, group_size: Some(64) }),
+        (1, QuantScheme { bits: 4, group_size: None }),
+        (9, QuantScheme { bits: 4, group_size: Some(64) }),
+    ];
+    fired.extend(code_set(&CheckContext {
+        plan: Some(bad_plan),
+        model: Some(tiny()),
+        ..CheckContext::default()
+    }));
+    fired.extend(code_set(&CheckContext {
+        plan: Some(plan("gptq", QuantScheme::w2_g32())),
+        manifest: Some(good_manifest()),
+        ..CheckContext::default()
+    }));
+    let mut mse_plan = plan("gptq", w4g64());
+    mse_plan.tweak_loss = Some(LossKind::Mse);
+    fired.extend(code_set(&CheckContext {
+        plan: Some(mse_plan),
+        manifest: Some(good_manifest()),
+        model_name: Some("nt-tiny".to_string()),
+        ..CheckContext::default()
+    }));
+    let wrong_model = GOOD_PROFILE.replace("\"model\":\"nt-tiny\"", "\"model\":\"nt-small\"");
+    fired.extend(code_set(&CheckContext {
+        profile_path: Some(write_file("cov_profile_model", "sensitivity.json", &wrong_model)),
+        model: Some(tiny()),
+        ..CheckContext::default()
+    }));
+    fired.extend(code_set(&CheckContext {
+        profile_path: Some(write_file("cov_budget", "sensitivity.json", GOOD_PROFILE)),
+        target_bits: Some(1.5),
+        ..CheckContext::default()
+    }));
+    fired.extend(code_set(&CheckContext {
+        profile_path: Some(temp_dir("cov_no_profile").join("missing.json")),
+        ..CheckContext::default()
+    }));
+
+    // NT04xx
+    fired.extend(code_set(&CheckContext {
+        manifest: Some(good_manifest()),
+        serve: Some(ServeCheck {
+            spec: Some("max_batch=0,batch_window_ms=0,bogus=1".to_string()),
+            models_spec: None,
+        }),
+        ..CheckContext::default()
+    }));
+    fired.extend(code_set(&CheckContext {
+        manifest: Some(good_manifest()),
+        serve: Some(ServeCheck {
+            spec: Some("max_batch=64,batch_window_ms=2,deadline_ms=1".to_string()),
+            models_spec: None,
+        }),
+        ..CheckContext::default()
+    }));
+
+    let all: BTreeSet<&'static str> = codes::ALL.iter().map(|(c, _)| *c).collect();
+    let missing: Vec<_> = all.difference(&fired).collect();
+    assert!(missing.is_empty(), "codes never fired on the corpus: {missing:?}");
+    let unknown: Vec<_> = fired.difference(&all).collect();
+    assert!(unknown.is_empty(), "codes fired but not in codes::ALL: {unknown:?}");
+}
+
+/// Every stable code is documented in the `analysis` module rustdoc table.
+#[test]
+fn every_code_is_documented() {
+    let docs = include_str!("../src/analysis/mod.rs");
+    for (code, summary) in codes::ALL {
+        assert!(docs.contains(code), "{code} missing from analysis/mod.rs rustdoc");
+        assert!(!summary.is_empty(), "{code} has an empty summary");
+    }
+}
+
+/// `check --format json` output parses back through `util::json` to an
+/// identical tree, and carries the codes machine-readably.
+#[test]
+fn report_json_round_trips() {
+    let ctx = CheckContext {
+        manifest_dir: Some(fixture_dir("bad")),
+        ..CheckContext::default()
+    };
+    let report = run_lints(&ctx);
+    let tree = report.to_json();
+    let text = tree.emit();
+    let back = Json::parse(&text).unwrap();
+    assert_eq!(back, tree, "JSON emit/parse round-trip drifted");
+
+    let diags = back.get("diagnostics").and_then(|d| d.as_arr()).unwrap();
+    assert_eq!(diags.len(), report.diagnostics.len());
+    for (d, json) in report.diagnostics.iter().zip(diags) {
+        let code = json.get("code").and_then(|c| c.as_str()).unwrap();
+        assert_eq!(code, d.code);
+    }
+}
+
+/// The human renderer names every code and ends with a severity summary.
+#[test]
+fn human_render_names_every_code() {
+    let ctx = CheckContext {
+        manifest_dir: Some(fixture_dir("bad")),
+        ..CheckContext::default()
+    };
+    let report = run_lints(&ctx);
+    let text = report.render_human();
+    for code in report.codes() {
+        assert!(text.contains(code), "{code} missing from human rendering");
+    }
+    assert!(text.contains("error"), "no severity summary in:\n{text}");
+}
