@@ -35,6 +35,11 @@ exported is recorded under the manifest's `groups` key, which the Rust
 runtime parses to reject unexported grains at pipeline startup.
 Inference graphs use the Pallas kernels; tweak graphs use the (pytest-
 equivalent) jnp oracles because pallas_call has no VJP.
+
+Every manifest graph entry records both the declared `inputs` and the
+intended `outputs` signature (via `jax.eval_shape`, see `output_specs`);
+`normtweak check --graphs` diffs that exporter intent against the lowered
+HLO's ENTRY signature to catch drift (NT0502).
 """
 
 import argparse
@@ -51,6 +56,11 @@ from .configs import BATCH_BUCKETS, CALIB_BATCH, MODELS, ModelConfig
 
 F32, I8, I32 = "f32", "i8", "i32"
 _JNP = {F32: jnp.float32, I8: jnp.int8, I32: jnp.int32}
+
+# numpy dtype name -> manifest dtype spelling, for the recorded output
+# signatures (the Rust `graphs` lint parses these back into TensorSigs)
+_MANIFEST_DTYPE = {"float32": F32, "int8": I8, "int32": I32,
+                   "uint8": "u8", "int64": "i64"}
 
 # eval/gen bucket + calibration bucket (B=1 is padded up by the coordinator)
 EXPORT_BUCKETS = [b for b in BATCH_BUCKETS if b in (8, CALIB_BATCH)]
@@ -99,6 +109,19 @@ def spec(shape, dtype=F32):
 
 def arg(name, shape, dtype=F32):
     return {"name": name, **spec(shape, dtype)}
+
+
+def output_specs(fn, in_specs):
+    """The *intended* output signature of a graph: abstract-eval `fn` on
+    the declared input specs (no lowering, no FLOPs).  Recorded per graph
+    under the manifest's `outputs` key so the deep `normtweak check
+    --graphs` pass can diff exporter intent against the lowered HLO's
+    actual ENTRY signature (NT0502) without re-tracing anything."""
+    shaped = [jax.ShapeDtypeStruct(tuple(s["shape"]), _JNP[s["dtype"]])
+              for s in in_specs]
+    outs = jax.tree_util.tree_leaves(jax.eval_shape(fn, *shaped))
+    return [arg(f"out{i}", o.shape, _MANIFEST_DTYPE[str(o.dtype)])
+            for i, o in enumerate(outs)]
 
 
 def to_hlo_text(fn, in_specs):
@@ -167,7 +190,7 @@ def norm_param_args(cfg: ModelConfig, prefix: str):
 
 
 def graph_defs(cfg: ModelConfig, groups: dict = None, decode: bool = True):
-    """Yield (name, fn, input_args, n_outputs) for every graph of a model.
+    """Yield (name, fn, input_args) for every graph of a model.
 
     `groups` maps grain tags to group sizes (default: the full GROUPS
     sweep); one `block_fwd_q` per (grain, bucket) and one `tweak_step` per
@@ -310,6 +333,7 @@ def export_model(cfg: ModelConfig, out_dir: str, manifest: dict,
         manifest["graphs"].append({
             "model": cfg.name, "name": name, "file": fname,
             "inputs": in_args,
+            "outputs": output_specs(fn, in_args),
         })
         print(f"[aot] {cfg.name}.{name}: {len(text) // 1024}KB "
               f"({time.time() - t0:.1f}s)")

@@ -3,6 +3,7 @@ consistency (fast checks on nt-tiny only — the full export is `make
 artifacts`)."""
 
 import json
+import re
 
 import pytest
 
@@ -153,6 +154,84 @@ def test_one_graph_lowers_to_parseable_hlo():
             assert "ENTRY" in text
             return
     pytest.fail("channel_stats graph missing")
+
+
+# HLO element type -> manifest dtype spelling (inverse of aot._MANIFEST_DTYPE
+# composed with the numpy->HLO naming; mirrors analysis/hlo.rs `SigDType`)
+_HLO_TO_MANIFEST = {"f32": "f32", "s8": "i8", "u8": "u8",
+                    "s32": "i32", "s64": "i64"}
+
+
+def _parse_entry_layout(text):
+    """(params, results) of the `entry_computation_layout={...}` header as
+    (dtype, shape) pairs in manifest spelling — the same grammar the Rust
+    `graphs` lint parses (rust/src/analysis/hlo.rs)."""
+    start = text.index("entry_computation_layout=")
+    i = text.index("{", start)
+    depth = 0
+    for j in range(i, len(text)):
+        if text[j] == "{":
+            depth += 1
+        elif text[j] == "}":
+            depth -= 1
+            if depth == 0:
+                break
+    body = text[i + 1:j]
+
+    depth, arrow = 0, None
+    for k, c in enumerate(body):
+        if c in "({[":
+            depth += 1
+        elif c in ")}]":
+            depth -= 1
+        elif depth == 0 and body[k:k + 2] == "->":
+            arrow = k
+            break
+    assert arrow is not None, body
+
+    def side(s):
+        s = s.strip()
+        if s.startswith("("):
+            s = s[1:-1]
+        toks, depth, cur = [], 0, ""
+        for c in s:
+            if c in "({[":
+                depth += 1
+            elif c in ")}]":
+                depth -= 1
+            if c == "," and depth == 0:
+                toks.append(cur)
+                cur = ""
+            else:
+                cur += c
+        if cur.strip():
+            toks.append(cur)
+        out = []
+        for t in toks:
+            m = re.match(r"(\w+)\[([\d,]*)\]", t.strip())
+            assert m, t
+            dims = [int(d) for d in m.group(2).split(",") if d]
+            out.append((_HLO_TO_MANIFEST[m.group(1)], dims))
+        return out
+
+    return side(body[:arrow]), side(body[arrow + 2:])
+
+
+def test_recorded_signatures_match_lowered_hlo(tiny_graphs):
+    # the `outputs` the exporter records (jax.eval_shape intent) must agree
+    # with the lowered HLO's actual ENTRY signature — the invariant the
+    # Rust NT0502 lint enforces over every artifact tree; pinned here at
+    # the source for two cheap-to-lower graphs (one mixed-dtype single
+    # result, one multi-result)
+    by_name = {g[0]: g for g in tiny_graphs}
+    for name in ("embed.b8", "channel_stats.b32"):
+        _, fn, in_args = by_name[name]
+        recorded_in = [(a["dtype"], a["shape"]) for a in in_args]
+        recorded_out = [(a["dtype"], a["shape"])
+                        for a in aot.output_specs(fn, in_args)]
+        params, results = _parse_entry_layout(aot.to_hlo_text(fn, in_args))
+        assert params == recorded_in, name
+        assert results == recorded_out, name
 
 
 def test_manifest_matches_exports(tmp_path):

@@ -116,12 +116,24 @@ impl Report {
         Report::default()
     }
 
+    /// Add a finding.  Identical `(code, origin, field)` findings collapse
+    /// to the first one pushed — two rules reporting the same defect at the
+    /// same location (e.g. the shallow and deep graph passes) must not
+    /// inflate the error count or the CI-visible report.
     pub fn push(&mut self, d: Diagnostic) {
-        self.diagnostics.push(d);
+        let dup = self
+            .diagnostics
+            .iter()
+            .any(|e| e.code == d.code && e.origin == d.origin && e.field == d.field);
+        if !dup {
+            self.diagnostics.push(d);
+        }
     }
 
     pub fn extend(&mut self, ds: Vec<Diagnostic>) {
-        self.diagnostics.extend(ds);
+        for d in ds {
+            self.push(d);
+        }
     }
 
     pub fn is_empty(&self) -> bool {
@@ -156,10 +168,12 @@ impl Report {
 
     /// Machine-readable report (the `--format json` payload); emits through
     /// the in-tree `util::json` and round-trips through `Json::parse`.
+    /// `schema_version` 2 = the deduplicating, NT05xx-aware report (v1 had
+    /// a `format` key and no dedupe).
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("tool", s("normtweak-check")),
-            ("format", n(1.0)),
+            ("schema_version", n(2.0)),
             ("errors", n(self.errors() as f64)),
             ("warnings", n(self.warnings() as f64)),
             ("infos", n(self.infos() as f64)),
@@ -241,6 +255,7 @@ mod tests {
         let j = r.to_json();
         let back = Json::parse(&j.emit()).unwrap();
         assert_eq!(j, back);
+        assert_eq!(back.get("schema_version").unwrap().as_usize().unwrap(), 2);
         assert_eq!(back.get("errors").unwrap().as_usize().unwrap(), 1);
         let d = &back.get("diagnostics").unwrap().as_arr().unwrap()[0];
         assert_eq!(d.get("code").unwrap().as_str().unwrap(), "NT0103");
@@ -258,6 +273,21 @@ mod tests {
         assert!(msg.contains("first") && msg.contains("second"), "{msg}");
         assert!(!msg.contains("not included"), "{msg}");
         assert!(Report::new().into_result(Error::Artifact).is_ok());
+    }
+
+    #[test]
+    fn identical_findings_dedupe() {
+        let mut r = Report::new();
+        let d = || Diagnostic::error("NT0501", "empty").at("a/g.hlo.txt").field("graphs[0].file");
+        r.push(d());
+        r.push(d());
+        assert_eq!(r.errors(), 1);
+        // same code, different field — both kept
+        r.push(Diagnostic::error("NT0501", "empty").at("a/h.hlo.txt").field("graphs[1].file"));
+        assert_eq!(r.errors(), 2);
+        // extend routes through the same dedupe
+        r.extend(vec![d(), d()]);
+        assert_eq!(r.errors(), 2);
     }
 
     #[test]

@@ -1,0 +1,1133 @@
+//! NT05xx — the `graphs` lint: static HLO signature dataflow verification.
+//!
+//! Deep mode (`normtweak check --graphs`, or the `--deep-check` preflight
+//! of `quantize`/`serve`).  Where the shallow `manifest` lint treats
+//! `.hlo.txt` files as opaque blobs, this rule parses every graph's ENTRY
+//! signature ([`super::hlo::parse_signature`]) and reconstructs the typed
+//! dataflow of the whole pipeline from the manifest's model record:
+//!
+//! * the embed → block → head activation stream agrees on `[B, S, D]` /
+//!   `[B, S, V]` at every hop, and every bucket suffix names an exported
+//!   bucket (NT0504);
+//! * quantized-block argument lists match the packed-code / scale tensor
+//!   geometry of their grain — `codes i8[K, N]`, `scales f32[K/g, N]`
+//!   (NT0503);
+//! * prefill-KV results carry caches matching the manifest `decode` spec
+//!   `[H, S, dh]` (NT0505);
+//! * decode step graphs take per-row `pos i32[B]` and thread their carried
+//!   caches last, in and out (NT0506);
+//! * tweak-loss graphs end in a `f32[1]` loss (NT0507).
+//!
+//! Exporter intent vs lowered reality is its own axis: the manifest records
+//! what `aot.py` *meant* to lower (`inputs`/`outputs`), and any
+//! disagreement with the HLO text's actual entry signature is NT0502,
+//! reported down to the offending parameter index.  Unreadable, empty, or
+//! signature-free HLO files are NT0501 (the deep-mode escalation of the
+//! shallow NT0108 presence warning).
+
+use std::collections::BTreeMap;
+
+use crate::runtime::manifest::{GraphEntry, ManifestModel};
+
+use super::codes;
+use super::diagnostics::{Diagnostic, Report};
+use super::hlo::{parse_signature, HloSignature, SigDType, TensorSig};
+use super::{CheckContext, Lint};
+
+pub struct GraphLint;
+
+fn f32s(dims: &[usize]) -> TensorSig {
+    TensorSig::new(SigDType::F32, dims.to_vec())
+}
+
+fn i32s(dims: &[usize]) -> TensorSig {
+    TensorSig::new(SigDType::I32, dims.to_vec())
+}
+
+fn i8s(dims: &[usize]) -> TensorSig {
+    TensorSig::new(SigDType::I8, dims.to_vec())
+}
+
+/// The architecture numbers one model record pins down, pre-validated
+/// (`d_head` only exists when `n_head` divides `d_model`).
+struct Arch {
+    d: usize,
+    ff: usize,
+    v: usize,
+    s: usize,
+    h: usize,
+    dh: usize,
+    layernorm: bool,
+    cb: usize,
+}
+
+impl Arch {
+    fn from_record(m: &ManifestModel, cb: usize) -> Option<Self> {
+        if m.n_head == 0 || m.d_model % m.n_head != 0 || m.d_model == 0 {
+            return None;
+        }
+        Some(Arch {
+            d: m.d_model,
+            ff: m.d_ff,
+            v: m.vocab,
+            s: m.seq,
+            h: m.n_head,
+            dh: m.d_model / m.n_head,
+            layernorm: m.norm == "layernorm",
+            cb,
+        })
+    }
+
+    /// Norm parameters per block (ln1/ln2 gains + biases for layernorm).
+    fn n_np(&self) -> usize {
+        if self.layernorm {
+            4
+        } else {
+            2
+        }
+    }
+}
+
+/// Mirrors `aot.py float_weight_args`: the flat per-block float weight list.
+fn float_weight_args(a: &Arch) -> Vec<(String, TensorSig)> {
+    let (d, ff) = (a.d, a.ff);
+    let mut out = vec![("ln1.g".to_string(), f32s(&[d]))];
+    if a.layernorm {
+        out.push(("ln1.b".to_string(), f32s(&[d])));
+    }
+    out.push(("attn.wqkv".to_string(), f32s(&[d, 3 * d])));
+    out.push(("attn.bqkv".to_string(), f32s(&[3 * d])));
+    out.push(("attn.wproj".to_string(), f32s(&[d, d])));
+    out.push(("attn.bproj".to_string(), f32s(&[d])));
+    out.push(("ln2.g".to_string(), f32s(&[d])));
+    if a.layernorm {
+        out.push(("ln2.b".to_string(), f32s(&[d])));
+    }
+    out.push(("mlp.wfc1".to_string(), f32s(&[d, ff])));
+    out.push(("mlp.bfc1".to_string(), f32s(&[ff])));
+    out.push(("mlp.wfc2".to_string(), f32s(&[ff, d])));
+    out.push(("mlp.bfc2".to_string(), f32s(&[d])));
+    out
+}
+
+/// Mirrors `aot.py qweight_args`: packed codes ride as `i8[K, N]`, scales
+/// as `f32[K/group, N]` (one group spanning K for per-channel).
+fn qweight_args(a: &Arch, group: usize) -> Vec<(String, TensorSig)> {
+    let (d, ff) = (a.d, a.ff);
+    let g_of = |k: usize| if group == 0 { 1 } else { k / group };
+    let mut out = vec![("ln1.g".to_string(), f32s(&[d]))];
+    if a.layernorm {
+        out.push(("ln1.b".to_string(), f32s(&[d])));
+    }
+    out.push(("attn.wqkv.codes".to_string(), i8s(&[d, 3 * d])));
+    out.push(("attn.wqkv.scales".to_string(), f32s(&[g_of(d), 3 * d])));
+    out.push(("attn.bqkv".to_string(), f32s(&[3 * d])));
+    out.push(("attn.wproj.codes".to_string(), i8s(&[d, d])));
+    out.push(("attn.wproj.scales".to_string(), f32s(&[g_of(d), d])));
+    out.push(("attn.bproj".to_string(), f32s(&[d])));
+    out.push(("ln2.g".to_string(), f32s(&[d])));
+    if a.layernorm {
+        out.push(("ln2.b".to_string(), f32s(&[d])));
+    }
+    out.push(("mlp.wfc1.codes".to_string(), i8s(&[d, ff])));
+    out.push(("mlp.wfc1.scales".to_string(), f32s(&[g_of(d), ff])));
+    out.push(("mlp.bfc1".to_string(), f32s(&[ff])));
+    out.push(("mlp.wfc2.codes".to_string(), i8s(&[ff, d])));
+    out.push(("mlp.wfc2.scales".to_string(), f32s(&[g_of(ff), d])));
+    out.push(("mlp.bfc2".to_string(), f32s(&[d])));
+    out
+}
+
+/// Mirrors `aot.py norm_param_args` (the Adam state vectors of the tweak).
+fn norm_param_args(a: &Arch, prefix: &str) -> Vec<(String, TensorSig)> {
+    let names: &[&str] = if a.layernorm {
+        &["ln1.g", "ln1.b", "ln2.g", "ln2.b"]
+    } else {
+        &["ln1.g", "ln2.g"]
+    };
+    names.iter().map(|n| (format!("{prefix}{n}"), f32s(&[a.d]))).collect()
+}
+
+/// Which bucket list a graph's `b{B}` suffix must name.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BucketDomain {
+    /// eval/gen bucket — `manifest.buckets`
+    Main,
+    /// one-token step / prefill-KV bucket — `decode.buckets`
+    Decode,
+    /// calibration-batch graph — must equal `calib_batch`
+    Calib,
+}
+
+/// How to classify *output* mismatches of a graph family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum OutKind {
+    /// plain activation stream → NT0504
+    Plain,
+    /// prefill-KV: results 1.. are the emitted caches → NT0505
+    Kv,
+    /// decode step: trailing two results are the carried caches → NT0506
+    DecBlock,
+    /// tweak iteration: the last result is the scalar-shaped loss → NT0507
+    Tweak,
+}
+
+/// The reconstructed contract of one graph.
+struct Expected {
+    inputs: Vec<(String, TensorSig)>,
+    outputs: Vec<TensorSig>,
+    /// code used for input-*count* mismatches (NT0503 for quantized
+    /// families, NT0506 for decode steps, NT0504 otherwise)
+    arity_code: &'static str,
+    out_kind: OutKind,
+    bucket: Option<(usize, BucketDomain)>,
+}
+
+enum Build {
+    Ok(Expected),
+    /// NT0508 info: can't (or shouldn't) reconstruct — skip with a note
+    Skip(String),
+    /// NT0503 error: the grain itself is broken for this architecture
+    BadGrain(String),
+}
+
+fn bucket_of(part: &str) -> Option<usize> {
+    part.strip_prefix('b')?.parse().ok()
+}
+
+/// Reconstruct the expected ENTRY signature of a graph from its name, the
+/// model record, the exported grains, and the decode cache spec
+/// (`kv = [H, S, dh]`) — the Rust mirror of `aot.py graph_defs`.
+fn expected_for(
+    name: &str,
+    a: &Arch,
+    groups: &BTreeMap<String, usize>,
+    kv: &[usize],
+) -> Build {
+    let (d, ff, v, s, cb) = (a.d, a.ff, a.v, a.s, a.cb);
+    let grain = |tag: &str| -> std::result::Result<usize, Build> {
+        let Some(&g) = groups.get(tag) else {
+            return Err(Build::BadGrain(format!(
+                "grain `{tag}` is not in the manifest `groups` record \
+                 (exported: {})",
+                groups.keys().cloned().collect::<Vec<_>>().join(", ")
+            )));
+        };
+        if g != 0 && (d % g != 0 || ff % g != 0) {
+            return Err(Build::BadGrain(format!(
+                "grain `{tag}` (group={g}) does not divide the matmul K dims \
+                 (d_model={d}, d_ff={ff})"
+            )));
+        }
+        Ok(g)
+    };
+    let parts: Vec<&str> = name.split('.').collect();
+    let exp = match parts.as_slice() {
+        ["embed", b] => {
+            let Some(b) = bucket_of(b) else {
+                return Build::Skip(format!("unrecognized bucket suffix in `{name}`"));
+            };
+            Expected {
+                inputs: vec![
+                    ("tokens".to_string(), i32s(&[b, s])),
+                    ("tok_emb".to_string(), f32s(&[v, d])),
+                    ("pos_emb".to_string(), f32s(&[s, d])),
+                ],
+                outputs: vec![f32s(&[b, s, d])],
+                arity_code: codes::GRAPH_DATAFLOW,
+                out_kind: OutKind::Plain,
+                bucket: Some((b, BucketDomain::Main)),
+            }
+        }
+        ["block_fwd", b] => {
+            let Some(b) = bucket_of(b) else {
+                return Build::Skip(format!("unrecognized bucket suffix in `{name}`"));
+            };
+            let mut inputs = vec![("x".to_string(), f32s(&[b, s, d]))];
+            inputs.extend(float_weight_args(a));
+            Expected {
+                inputs,
+                outputs: vec![f32s(&[b, s, d])],
+                arity_code: codes::GRAPH_DATAFLOW,
+                out_kind: OutKind::Plain,
+                bucket: Some((b, BucketDomain::Main)),
+            }
+        }
+        ["head", b] => {
+            let Some(b) = bucket_of(b) else {
+                return Build::Skip(format!("unrecognized bucket suffix in `{name}`"));
+            };
+            let mut inputs =
+                vec![("x".to_string(), f32s(&[b, s, d])), ("lnf.g".to_string(), f32s(&[d]))];
+            if a.layernorm {
+                inputs.push(("lnf.b".to_string(), f32s(&[d])));
+            }
+            inputs.push(("tok_emb".to_string(), f32s(&[v, d])));
+            Expected {
+                inputs,
+                outputs: vec![f32s(&[b, s, v])],
+                arity_code: codes::GRAPH_DATAFLOW,
+                out_kind: OutKind::Plain,
+                bucket: Some((b, BucketDomain::Main)),
+            }
+        }
+        ["block_fwd_q", g, b] => {
+            let Some(b) = bucket_of(b) else {
+                return Build::Skip(format!("unrecognized bucket suffix in `{name}`"));
+            };
+            let group = match grain(g) {
+                Ok(g) => g,
+                Err(build) => return build,
+            };
+            let mut inputs = vec![("x".to_string(), f32s(&[b, s, d]))];
+            inputs.extend(qweight_args(a, group));
+            Expected {
+                inputs,
+                outputs: vec![f32s(&[b, s, d])],
+                arity_code: codes::GRAPH_QARGS,
+                out_kind: OutKind::Plain,
+                bucket: Some((b, BucketDomain::Main)),
+            }
+        }
+        ["block_fwd_kv", b] | ["block_fwd_q_kv", _, b] => {
+            let Some(bn) = bucket_of(b) else {
+                return Build::Skip(format!("unrecognized bucket suffix in `{name}`"));
+            };
+            let quantized = parts[0] == "block_fwd_q_kv";
+            let mut inputs = vec![("x".to_string(), f32s(&[bn, s, d]))];
+            if quantized {
+                let group = match grain(parts[1]) {
+                    Ok(g) => g,
+                    Err(build) => return build,
+                };
+                inputs.extend(qweight_args(a, group));
+            } else {
+                inputs.extend(float_weight_args(a));
+            }
+            let mut cache = vec![bn];
+            cache.extend_from_slice(kv);
+            Expected {
+                inputs,
+                outputs: vec![f32s(&[bn, s, d]), f32s(&cache), f32s(&cache)],
+                arity_code: if quantized {
+                    codes::GRAPH_QARGS
+                } else {
+                    codes::GRAPH_DATAFLOW
+                },
+                out_kind: OutKind::Kv,
+                bucket: Some((bn, BucketDomain::Decode)),
+            }
+        }
+        ["embed_dec", b] => {
+            let Some(b) = bucket_of(b) else {
+                return Build::Skip(format!("unrecognized bucket suffix in `{name}`"));
+            };
+            Expected {
+                inputs: vec![
+                    ("tokens".to_string(), i32s(&[b, 1])),
+                    ("pos".to_string(), i32s(&[b])),
+                    ("tok_emb".to_string(), f32s(&[v, d])),
+                    ("pos_emb".to_string(), f32s(&[s, d])),
+                ],
+                outputs: vec![f32s(&[b, 1, d])],
+                arity_code: codes::GRAPH_DECODE_STEP,
+                out_kind: OutKind::Plain,
+                bucket: Some((b, BucketDomain::Decode)),
+            }
+        }
+        ["head_dec", b] => {
+            let Some(b) = bucket_of(b) else {
+                return Build::Skip(format!("unrecognized bucket suffix in `{name}`"));
+            };
+            let mut inputs =
+                vec![("x".to_string(), f32s(&[b, 1, d])), ("lnf.g".to_string(), f32s(&[d]))];
+            if a.layernorm {
+                inputs.push(("lnf.b".to_string(), f32s(&[d])));
+            }
+            inputs.push(("tok_emb".to_string(), f32s(&[v, d])));
+            Expected {
+                inputs,
+                outputs: vec![f32s(&[b, 1, v])],
+                arity_code: codes::GRAPH_DECODE_STEP,
+                out_kind: OutKind::Plain,
+                bucket: Some((b, BucketDomain::Decode)),
+            }
+        }
+        ["block_dec", b] | ["block_dec_q", _, b] => {
+            let Some(bn) = bucket_of(b) else {
+                return Build::Skip(format!("unrecognized bucket suffix in `{name}`"));
+            };
+            let quantized = parts[0] == "block_dec_q";
+            let mut inputs =
+                vec![("x".to_string(), f32s(&[bn, 1, d])), ("pos".to_string(), i32s(&[bn]))];
+            if quantized {
+                let group = match grain(parts[1]) {
+                    Ok(g) => g,
+                    Err(build) => return build,
+                };
+                inputs.extend(qweight_args(a, group));
+            } else {
+                inputs.extend(float_weight_args(a));
+            }
+            let mut cache = vec![bn];
+            cache.extend_from_slice(kv);
+            inputs.push(("k_cache".to_string(), f32s(&cache)));
+            inputs.push(("v_cache".to_string(), f32s(&cache)));
+            Expected {
+                inputs,
+                outputs: vec![f32s(&[bn, 1, d]), f32s(&cache), f32s(&cache)],
+                arity_code: if quantized {
+                    codes::GRAPH_QARGS
+                } else {
+                    codes::GRAPH_DECODE_STEP
+                },
+                out_kind: OutKind::DecBlock,
+                bucket: Some((bn, BucketDomain::Decode)),
+            }
+        }
+        ["block_taps", b] => {
+            let Some(b) = bucket_of(b) else {
+                return Build::Skip(format!("unrecognized bucket suffix in `{name}`"));
+            };
+            let mut inputs = vec![("x".to_string(), f32s(&[b, s, d]))];
+            inputs.extend(float_weight_args(a));
+            Expected {
+                inputs,
+                outputs: vec![
+                    f32s(&[b, s, d]),
+                    f32s(&[b, s, d]),
+                    f32s(&[b, s, d]),
+                    f32s(&[b, s, ff]),
+                ],
+                arity_code: codes::GRAPH_DATAFLOW,
+                out_kind: OutKind::Plain,
+                bucket: Some((b, BucketDomain::Calib)),
+            }
+        }
+        ["channel_stats", b] => {
+            let Some(b) = bucket_of(b) else {
+                return Build::Skip(format!("unrecognized bucket suffix in `{name}`"));
+            };
+            Expected {
+                inputs: vec![("x".to_string(), f32s(&[b, s, d]))],
+                outputs: vec![f32s(&[d]), f32s(&[d])],
+                arity_code: codes::GRAPH_DATAFLOW,
+                out_kind: OutKind::Plain,
+                bucket: Some((b, BucketDomain::Calib)),
+            }
+        }
+        ["tweak_step", g] => {
+            let group = match grain(g) {
+                Ok(g) => g,
+                Err(build) => return build,
+            };
+            let mut inputs = vec![("x".to_string(), f32s(&[cb, s, d]))];
+            inputs.extend(qweight_args(a, group));
+            inputs.extend(norm_param_args(a, "m."));
+            inputs.extend(norm_param_args(a, "v."));
+            inputs.push(("mu_f".to_string(), f32s(&[d])));
+            inputs.push(("var_f".to_string(), f32s(&[d])));
+            inputs.push(("lr".to_string(), f32s(&[1])));
+            inputs.push(("t".to_string(), f32s(&[1])));
+            let mut outputs = vec![f32s(&[d]); 3 * a.n_np()];
+            outputs.push(f32s(&[1]));
+            Expected {
+                inputs,
+                outputs,
+                arity_code: codes::GRAPH_QARGS,
+                out_kind: OutKind::Tweak,
+                bucket: None,
+            }
+        }
+        ["tweak_step_mse", g] | ["tweak_step_kl", g] => {
+            let group = match grain(g) {
+                Ok(g) => g,
+                Err(build) => return build,
+            };
+            let mut inputs = vec![("x".to_string(), f32s(&[cb, s, d]))];
+            inputs.extend(qweight_args(a, group));
+            inputs.extend(norm_param_args(a, "m."));
+            inputs.extend(norm_param_args(a, "v."));
+            inputs.push(("y_f".to_string(), f32s(&[cb, s, d])));
+            inputs.push(("lr".to_string(), f32s(&[1])));
+            inputs.push(("t".to_string(), f32s(&[1])));
+            let mut outputs = vec![f32s(&[d]); 3 * a.n_np()];
+            outputs.push(f32s(&[1]));
+            Expected {
+                inputs,
+                outputs,
+                arity_code: codes::GRAPH_QARGS,
+                out_kind: OutKind::Tweak,
+                bucket: None,
+            }
+        }
+        ["xtx", k] => {
+            let Some(k) = k.strip_prefix('k').and_then(|k| k.parse::<usize>().ok()) else {
+                return Build::Skip(format!("unrecognized K suffix in `{name}`"));
+            };
+            Expected {
+                inputs: vec![("x".to_string(), f32s(&[cb * s, k]))],
+                outputs: vec![f32s(&[k, k])],
+                arity_code: codes::GRAPH_DATAFLOW,
+                out_kind: OutKind::Plain,
+                bucket: None,
+            }
+        }
+        _ => {
+            return Build::Skip(format!(
+                "unknown graph family `{}`",
+                parts.first().copied().unwrap_or(name)
+            ))
+        }
+    };
+    Build::Ok(exp)
+}
+
+/// Code for one *input* position, by the role its name encodes.
+fn input_code(name: &str) -> &'static str {
+    if name.ends_with(".codes") || name.ends_with(".scales") {
+        codes::GRAPH_QARGS
+    } else if name == "pos" || name == "k_cache" || name == "v_cache" {
+        codes::GRAPH_DECODE_STEP
+    } else {
+        codes::GRAPH_DATAFLOW
+    }
+}
+
+/// Code for one *output* position, by the family's result layout.
+fn output_code(kind: OutKind, idx: usize, n: usize) -> &'static str {
+    match kind {
+        OutKind::Plain => codes::GRAPH_DATAFLOW,
+        OutKind::Kv => {
+            if idx == 0 {
+                codes::GRAPH_DATAFLOW
+            } else {
+                codes::GRAPH_KV_SPEC
+            }
+        }
+        OutKind::DecBlock => {
+            if idx + 2 >= n {
+                codes::GRAPH_DECODE_STEP
+            } else {
+                codes::GRAPH_DATAFLOW
+            }
+        }
+        OutKind::Tweak => {
+            if idx + 1 == n {
+                codes::GRAPH_TWEAK_LOSS
+            } else {
+                codes::GRAPH_DATAFLOW
+            }
+        }
+    }
+}
+
+fn arity_out_code(kind: OutKind) -> &'static str {
+    match kind {
+        OutKind::Plain => codes::GRAPH_DATAFLOW,
+        OutKind::Kv => codes::GRAPH_KV_SPEC,
+        OutKind::DecBlock => codes::GRAPH_DECODE_STEP,
+        OutKind::Tweak => codes::GRAPH_TWEAK_LOSS,
+    }
+}
+
+fn render_spec(spec: &crate::runtime::manifest::IoSpec) -> String {
+    match spec.sig() {
+        Ok(sig) => sig.render(),
+        Err(_) => format!("{}[?] (unsupported dtype `{}`)", spec.dtype, spec.dtype),
+    }
+}
+
+/// Compare the recorded input list against the reconstructed contract.
+fn check_inputs(
+    exp: &Expected,
+    g: &GraphEntry,
+    gi: usize,
+    gid: &str,
+    origin: &str,
+    report: &mut Report,
+) {
+    if g.inputs.len() != exp.inputs.len() {
+        report.push(
+            Diagnostic::error(
+                exp.arity_code,
+                format!(
+                    "graph `{gid}`: {} inputs recorded but the {} contract \
+                     expects {} — argument-list drift",
+                    g.inputs.len(),
+                    g.name.split('.').next().unwrap_or(&g.name),
+                    exp.inputs.len()
+                ),
+            )
+            .at(origin)
+            .field(format!("graphs[{gi}].inputs"))
+            .fix("re-run the AOT export (`make artifacts`)"),
+        );
+    }
+    for (j, ((want_name, want), got)) in exp.inputs.iter().zip(&g.inputs).enumerate() {
+        let matches = got.sig().map(|sig| sig == *want).unwrap_or(false);
+        if !matches {
+            report.push(
+                Diagnostic::error(
+                    input_code(want_name),
+                    format!(
+                        "graph `{gid}` parameter {j} (`{want_name}`): \
+                         recorded {} but the pipeline contract expects {}",
+                        render_spec(got),
+                        want.render()
+                    ),
+                )
+                .at(origin)
+                .field(format!("graphs[{gi}].inputs[{j}]"))
+                .fix("re-run the AOT export (`make artifacts`)"),
+            );
+        }
+    }
+}
+
+/// Compare the effective (lowered or recorded) result list against the
+/// reconstructed contract.
+fn check_outputs(
+    exp: &Expected,
+    effective: &[TensorSig],
+    source: &str,
+    gi: usize,
+    gid: &str,
+    origin: &str,
+    report: &mut Report,
+) {
+    if effective.len() != exp.outputs.len() {
+        report.push(
+            Diagnostic::error(
+                arity_out_code(exp.out_kind),
+                format!(
+                    "graph `{gid}`: {} results in the {source} signature but \
+                     the contract expects {}",
+                    effective.len(),
+                    exp.outputs.len()
+                ),
+            )
+            .at(origin)
+            .field(format!("graphs[{gi}].outputs"))
+            .fix("re-run the AOT export (`make artifacts`)"),
+        );
+    }
+    let n = exp.outputs.len();
+    for (j, (want, got)) in exp.outputs.iter().zip(effective).enumerate() {
+        if got != want {
+            report.push(
+                Diagnostic::error(
+                    output_code(exp.out_kind, j, n),
+                    format!(
+                        "graph `{gid}` result {j}: {source} signature has {} \
+                         but the pipeline contract expects {}",
+                        got.render(),
+                        want.render()
+                    ),
+                )
+                .at(origin)
+                .field(format!("graphs[{gi}].outputs[{j}]"))
+                .fix("re-run the AOT export (`make artifacts`)"),
+            );
+        }
+    }
+}
+
+/// Exporter-intent vs lowered-HLO drift (NT0502), per parameter index.
+fn check_recorded_vs_hlo(
+    g: &GraphEntry,
+    hlo: &HloSignature,
+    gi: usize,
+    gid: &str,
+    hlo_origin: &str,
+    report: &mut Report,
+) {
+    let drift = |msg: String, field: String| {
+        Diagnostic::error(codes::GRAPH_SIG_DRIFT, msg)
+            .at(hlo_origin)
+            .field(field)
+            .fix("re-run the AOT export; manifest record and lowered HLO must agree")
+    };
+    if g.inputs.len() != hlo.params.len() {
+        report.push(drift(
+            format!(
+                "graph `{gid}`: manifest records {} inputs but the lowered HLO \
+                 takes {} parameters",
+                g.inputs.len(),
+                hlo.params.len()
+            ),
+            format!("graphs[{gi}].inputs"),
+        ));
+    }
+    for (j, (rec, low)) in g.inputs.iter().zip(&hlo.params).enumerate() {
+        let agree = rec.sig().map(|sig| sig == *low).unwrap_or(false);
+        if !agree {
+            report.push(drift(
+                format!(
+                    "graph `{gid}` parameter {j} (`{}`): recorded as {} but \
+                     lowered as {}",
+                    rec.name,
+                    render_spec(rec),
+                    low.render()
+                ),
+                format!("graphs[{gi}].inputs[{j}]"),
+            ));
+        }
+    }
+    if g.outputs.is_empty() {
+        return; // pre-signature-recording manifest — NT0509 covers it
+    }
+    if g.outputs.len() != hlo.results.len() {
+        report.push(drift(
+            format!(
+                "graph `{gid}`: manifest records {} outputs but the lowered \
+                 HLO returns {} results",
+                g.outputs.len(),
+                hlo.results.len()
+            ),
+            format!("graphs[{gi}].outputs"),
+        ));
+    }
+    for (j, (rec, low)) in g.outputs.iter().zip(&hlo.results).enumerate() {
+        let agree = rec.sig().map(|sig| sig == *low).unwrap_or(false);
+        if !agree {
+            report.push(drift(
+                format!(
+                    "graph `{gid}` result {j} (`{}`): recorded as {} but \
+                     lowered as {}",
+                    rec.name,
+                    render_spec(rec),
+                    low.render()
+                ),
+                format!("graphs[{gi}].outputs[{j}]"),
+            ));
+        }
+    }
+}
+
+impl Lint for GraphLint {
+    fn name(&self) -> &'static str {
+        "graphs"
+    }
+
+    fn run(&self, ctx: &CheckContext, report: &mut Report) {
+        if !ctx.graphs {
+            return;
+        }
+        let Some(man) = &ctx.manifest else { return };
+        let origin = man.dir.join("manifest.json").display().to_string();
+        let mut no_outputs = 0usize;
+        let mut first_no_out: Option<String> = None;
+
+        for (gi, g) in man.graphs.iter().enumerate() {
+            let gid = format!("{}.{}", g.model, g.name);
+            let path = man.dir.join(&g.file);
+            let hlo_origin = path.display().to_string();
+
+            // --- NT0501: the deep-mode file audit ------------------------
+            // (a *missing* file stays the shallow NT0108 warning; present
+            // but unreadable/empty/signature-free escalates to an error)
+            let hlo: Option<HloSignature> = if !path.exists() {
+                None
+            } else {
+                match std::fs::read_to_string(&path) {
+                    Err(e) => {
+                        report.push(
+                            Diagnostic::error(
+                                codes::GRAPH_HLO_INVALID,
+                                format!("graph `{gid}`: HLO file unreadable ({e})"),
+                            )
+                            .at(hlo_origin.clone())
+                            .field(format!("graphs[{gi}].file"))
+                            .fix("re-run `make artifacts` to regenerate the HLO files"),
+                        );
+                        None
+                    }
+                    Ok(text) if text.trim().is_empty() => {
+                        report.push(
+                            Diagnostic::error(
+                                codes::GRAPH_HLO_INVALID,
+                                format!("graph `{gid}`: HLO file is empty"),
+                            )
+                            .at(hlo_origin.clone())
+                            .field(format!("graphs[{gi}].file"))
+                            .fix("re-run `make artifacts` to regenerate the HLO files"),
+                        );
+                        None
+                    }
+                    Ok(text) => match parse_signature(&text) {
+                        Err(e) => {
+                            report.push(
+                                Diagnostic::error(
+                                    codes::GRAPH_HLO_INVALID,
+                                    format!(
+                                        "graph `{gid}`: no parseable ENTRY \
+                                         signature in the HLO text ({e})"
+                                    ),
+                                )
+                                .at(hlo_origin.clone())
+                                .field(format!("graphs[{gi}].file"))
+                                .fix("re-run `make artifacts`; the file is not HLO text"),
+                            );
+                            None
+                        }
+                        Ok(sig) => Some(sig),
+                    },
+                }
+            };
+
+            // --- NT0502: exporter intent vs lowered reality --------------
+            if let Some(sig) = &hlo {
+                check_recorded_vs_hlo(g, sig, gi, &gid, &hlo_origin, report);
+            }
+            if g.outputs.is_empty() {
+                no_outputs += 1;
+                if first_no_out.is_none() {
+                    first_no_out = Some(gid.clone());
+                }
+            }
+
+            // --- NT0503–NT0507: the reconstructed pipeline contract ------
+            let Some(m) = man.models.get(&g.model) else {
+                report.push(
+                    Diagnostic::info(
+                        codes::GRAPH_SKIPPED,
+                        format!(
+                            "graph `{gid}` skipped: model `{}` has no `models` \
+                             record to reconstruct the contract from",
+                            g.model
+                        ),
+                    )
+                    .at(origin.clone())
+                    .field(format!("graphs[{gi}]")),
+                );
+                continue;
+            };
+            let Some(arch) = Arch::from_record(m, man.calib_batch) else {
+                report.push(
+                    Diagnostic::info(
+                        codes::GRAPH_SKIPPED,
+                        format!(
+                            "graph `{gid}` skipped: model record is not usable \
+                             (n_head must divide d_model)"
+                        ),
+                    )
+                    .at(origin.clone())
+                    .field(format!("models.{}", g.model)),
+                );
+                continue;
+            };
+            // the decode record is the source of truth for cache geometry
+            // (NT0505 is exactly "prefill results match the manifest spec");
+            // without a record, fall back to the architecture-derived shape
+            let kv = man
+                .decode_for(&g.model)
+                .map(|spec| spec.shape.clone())
+                .unwrap_or_else(|| vec![arch.h, arch.s, arch.dh]);
+
+            let exp = match expected_for(&g.name, &arch, &man.groups, &kv) {
+                Build::Skip(why) => {
+                    report.push(
+                        Diagnostic::info(
+                            codes::GRAPH_SKIPPED,
+                            format!("graph `{gid}` skipped: {why}"),
+                        )
+                        .at(origin.clone())
+                        .field(format!("graphs[{gi}]")),
+                    );
+                    continue;
+                }
+                Build::BadGrain(msg) => {
+                    report.push(
+                        Diagnostic::error(
+                            codes::GRAPH_QARGS,
+                            format!("graph `{gid}`: {msg}"),
+                        )
+                        .at(origin.clone())
+                        .field(format!("graphs[{gi}]"))
+                        .fix("re-run the AOT export with a consistent `--groups`"),
+                    );
+                    continue;
+                }
+                Build::Ok(exp) => exp,
+            };
+
+            // bucket suffix must name an exported bucket of its domain
+            if let Some((b, domain)) = exp.bucket {
+                let (ok, listed) = match domain {
+                    BucketDomain::Main => (
+                        man.buckets.contains(&b),
+                        man.buckets.iter().map(|b| b.to_string()).collect::<Vec<_>>(),
+                    ),
+                    BucketDomain::Decode => match &man.decode {
+                        Some(d) => (
+                            d.buckets.contains(&b),
+                            d.buckets.iter().map(|b| b.to_string()).collect::<Vec<_>>(),
+                        ),
+                        None => (
+                            man.buckets.contains(&b),
+                            man.buckets.iter().map(|b| b.to_string()).collect::<Vec<_>>(),
+                        ),
+                    },
+                    BucketDomain::Calib => {
+                        (b == man.calib_batch, vec![man.calib_batch.to_string()])
+                    }
+                };
+                if !ok {
+                    report.push(
+                        Diagnostic::error(
+                            codes::GRAPH_DATAFLOW,
+                            format!(
+                                "graph `{gid}`: bucket {b} is not an exported \
+                                 bucket of its domain (expected one of: {})",
+                                listed.join(", ")
+                            ),
+                        )
+                        .at(origin.clone())
+                        .field(format!("graphs[{gi}]"))
+                        .fix("re-run the AOT export with consistent bucket sets"),
+                    );
+                }
+            }
+
+            check_inputs(&exp, g, gi, &gid, &origin, report);
+
+            // prefer the lowered truth; fall back to the recorded intent
+            let recorded: Option<Vec<TensorSig>> = if g.outputs.is_empty() {
+                None
+            } else {
+                g.outputs.iter().map(|s| s.sig().ok()).collect()
+            };
+            match (hlo.map(|s| s.results), recorded) {
+                (Some(eff), _) => {
+                    check_outputs(&exp, &eff, "lowered", gi, &gid, &hlo_origin, report)
+                }
+                (None, Some(eff)) => {
+                    check_outputs(&exp, &eff, "recorded", gi, &gid, &origin, report)
+                }
+                (None, None) => {}
+            }
+        }
+
+        if no_outputs > 0 {
+            let example = first_no_out.unwrap_or_default();
+            report.push(
+                Diagnostic::warn(
+                    codes::GRAPH_NO_OUTPUTS,
+                    format!(
+                        "{no_outputs} graph entr{} (e.g. `{example}`) record no \
+                         output signature — manifest predates the \
+                         signature-recording exporter, so result dataflow can \
+                         only be checked where the HLO text parses",
+                        if no_outputs == 1 { "y" } else { "ies" }
+                    ),
+                )
+                .at(origin)
+                .field("graphs")
+                .fix("re-run the AOT export to record `outputs` per graph"),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::run_lints;
+    use crate::runtime::ArtifactManifest;
+
+    /// One-graph manifest + HLO stub on disk, loaded into a deep context.
+    fn ctx_for(name: &str, graph_json: &str, hlo: Option<&str>) -> CheckContext {
+        let dir = std::env::temp_dir().join(format!("nt_graph_lint_{name}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = format!(
+            r#"{{"format": 1, "calib_batch": 32, "buckets": [8, 32],
+                 "groups": {{"pc": 0, "g64": 64}},
+                 "decode": {{"buckets": [8, 32],
+                             "caches": {{"nt-tiny": {{"n_layer": 2,
+                                                      "shape": [4, 128, 32]}}}}}},
+                 "models": {{"nt-tiny": {{"n_layer": 2, "d_model": 128,
+                             "n_head": 4, "d_ff": 512, "vocab": 2048,
+                             "seq": 128, "norm": "layernorm"}}}},
+                 "graphs": [{graph_json}]}}"#
+        );
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        if let Some(text) = hlo {
+            std::fs::write(dir.join("g.hlo.txt"), text).unwrap();
+        }
+        CheckContext {
+            manifest_dir: Some(dir.clone()),
+            manifest: ArtifactManifest::load(&dir).ok(),
+            graphs: true,
+            ..CheckContext::default()
+        }
+    }
+
+    const EMBED_GOOD: &str = r#"{"model": "nt-tiny", "name": "embed.b8",
+        "file": "g.hlo.txt",
+        "inputs": [{"name": "tokens", "shape": [8, 128], "dtype": "i32"},
+                   {"name": "tok_emb", "shape": [2048, 128], "dtype": "f32"},
+                   {"name": "pos_emb", "shape": [128, 128], "dtype": "f32"}],
+        "outputs": [{"name": "out0", "shape": [8, 128, 128], "dtype": "f32"}]}"#;
+
+    const EMBED_HLO: &str = "HloModule m, entry_computation_layout=\
+        {(s32[8,128]{1,0}, f32[2048,128]{1,0}, f32[128,128]{1,0})\
+        ->(f32[8,128,128]{2,1,0})}";
+
+    #[test]
+    fn clean_graph_is_clean() {
+        let report = run_lints(&ctx_for("clean", EMBED_GOOD, Some(EMBED_HLO)));
+        assert!(report.is_empty(), "{:?}", report.codes());
+    }
+
+    #[test]
+    fn shallow_mode_skips_the_deep_pass() {
+        let mut ctx = ctx_for("shallow", EMBED_GOOD, None);
+        ctx.graphs = false;
+        // only the shallow NT0108 missing-file warning fires
+        assert_eq!(run_lints(&ctx).codes(), vec![codes::GRAPH_FILE_MISSING]);
+    }
+
+    #[test]
+    fn garbage_and_empty_hlo_is_nt0501() {
+        let report = run_lints(&ctx_for("garbage", EMBED_GOOD, Some("not hlo at all")));
+        assert!(report.codes().contains(&codes::GRAPH_HLO_INVALID), "{:?}", report.codes());
+        let report = run_lints(&ctx_for("empty", EMBED_GOOD, Some("  \n")));
+        assert!(report.codes().contains(&codes::GRAPH_HLO_INVALID), "{:?}", report.codes());
+    }
+
+    #[test]
+    fn recorded_vs_lowered_drift_is_nt0502() {
+        // the HLO lowered tokens as s32[8,64]: exporter-intent drift
+        let hlo = "HloModule m, entry_computation_layout=\
+            {(s32[8,64]{1,0}, f32[2048,128]{1,0}, f32[128,128]{1,0})\
+            ->(f32[8,128,128]{2,1,0})}";
+        let report = run_lints(&ctx_for("drift", EMBED_GOOD, Some(hlo)));
+        let codes_seen = report.codes();
+        assert!(codes_seen.contains(&codes::GRAPH_SIG_DRIFT), "{codes_seen:?}");
+        let d = report
+            .diagnostics
+            .iter()
+            .find(|d| d.code == codes::GRAPH_SIG_DRIFT)
+            .unwrap();
+        // provenance down to the parameter index
+        assert!(d.message.contains("parameter 0"), "{}", d.message);
+        assert_eq!(d.field.as_deref(), Some("graphs[0].inputs[0]"));
+    }
+
+    #[test]
+    fn wrong_qarg_geometry_is_nt0503() {
+        // g64 scales recorded with the pc geometry ([1, 384] not [2, 384])
+        let graph = r#"{"model": "nt-tiny", "name": "block_fwd_q.g64.b8",
+            "file": "missing.hlo.txt",
+            "inputs": [{"name": "x", "shape": [8, 128, 128], "dtype": "f32"},
+                       {"name": "ln1.g", "shape": [128], "dtype": "f32"},
+                       {"name": "ln1.b", "shape": [128], "dtype": "f32"},
+                       {"name": "attn.wqkv.codes", "shape": [128, 384], "dtype": "i8"},
+                       {"name": "attn.wqkv.scales", "shape": [1, 384], "dtype": "f32"}]}"#;
+        let report = run_lints(&ctx_for("qargs", graph, None));
+        let seen = report.codes();
+        // wrong arity (5 of 17) and wrong scales geometry, both NT0503
+        assert!(seen.contains(&codes::GRAPH_QARGS), "{seen:?}");
+        let scales = report
+            .diagnostics
+            .iter()
+            .find(|d| d.message.contains("attn.wqkv.scales"))
+            .unwrap();
+        assert_eq!(scales.code, codes::GRAPH_QARGS);
+        assert!(scales.message.contains("f32[2,384]"), "{}", scales.message);
+    }
+
+    #[test]
+    fn drifted_kv_cache_shape_is_nt0505() {
+        // prefill emits caches of [8, 4, 64, 32] but the decode record
+        // promises [H, S, dh] = [4, 128, 32]
+        let mut inputs = vec![r#"{"name": "x", "shape": [8, 128, 128], "dtype": "f32"}"#
+            .to_string()];
+        for (n, s) in [
+            ("ln1.g", "[128]"), ("ln1.b", "[128]"),
+            ("attn.wqkv", "[128, 384]"), ("attn.bqkv", "[384]"),
+            ("attn.wproj", "[128, 128]"), ("attn.bproj", "[128]"),
+            ("ln2.g", "[128]"), ("ln2.b", "[128]"),
+            ("mlp.wfc1", "[128, 512]"), ("mlp.bfc1", "[512]"),
+            ("mlp.wfc2", "[512, 128]"), ("mlp.bfc2", "[128]"),
+        ] {
+            inputs.push(format!(
+                r#"{{"name": "{n}", "shape": {s}, "dtype": "f32"}}"#
+            ));
+        }
+        let graph = format!(
+            r#"{{"model": "nt-tiny", "name": "block_fwd_kv.b8",
+                 "file": "missing.hlo.txt",
+                 "inputs": [{}],
+                 "outputs": [
+                   {{"name": "out0", "shape": [8, 128, 128], "dtype": "f32"}},
+                   {{"name": "out1", "shape": [8, 4, 64, 32], "dtype": "f32"}},
+                   {{"name": "out2", "shape": [8, 4, 64, 32], "dtype": "f32"}}]}}"#,
+            inputs.join(",\n")
+        );
+        let report = run_lints(&ctx_for("kvdrift", &graph, None));
+        let kv: Vec<_> = report
+            .diagnostics
+            .iter()
+            .filter(|d| d.code == codes::GRAPH_KV_SPEC)
+            .collect();
+        assert_eq!(kv.len(), 2, "{:?}", report.codes());
+        assert!(kv[0].message.contains("f32[8,4,128,32]"), "{}", kv[0].message);
+    }
+
+    #[test]
+    fn wrong_pos_dtype_is_nt0506_and_nonscalar_tweak_loss_is_nt0507() {
+        let graph = r#"{"model": "nt-tiny", "name": "embed_dec.b8",
+            "file": "missing.hlo.txt",
+            "inputs": [{"name": "tokens", "shape": [8, 1], "dtype": "i32"},
+                       {"name": "pos", "shape": [8], "dtype": "f32"},
+                       {"name": "tok_emb", "shape": [2048, 128], "dtype": "f32"},
+                       {"name": "pos_emb", "shape": [128, 128], "dtype": "f32"}]}"#;
+        let report = run_lints(&ctx_for("pos", graph, None));
+        let d = report
+            .diagnostics
+            .iter()
+            .find(|d| d.code == codes::GRAPH_DECODE_STEP)
+            .unwrap();
+        assert!(d.message.contains("`pos`") && d.message.contains("i32[8]"), "{}", d.message);
+
+        // a tweak graph whose last result is not the f32[1] loss
+        let graph = r#"{"model": "nt-tiny", "name": "tweak_step.g64",
+            "file": "missing.hlo.txt", "inputs": [],
+            "outputs": [{"name": "out0", "shape": [32, 128, 128],
+                         "dtype": "f32"}]}"#;
+        let report = run_lints(&ctx_for("loss", graph, None));
+        assert!(report.codes().contains(&codes::GRAPH_TWEAK_LOSS), "{:?}", report.codes());
+    }
+
+    #[test]
+    fn unknown_family_is_nt0508_info_and_missing_outputs_is_nt0509() {
+        let graph = r#"{"model": "nt-tiny", "name": "mystery.b8",
+            "file": "missing.hlo.txt", "inputs": []}"#;
+        let report = run_lints(&ctx_for("skip", graph, None));
+        let seen = report.codes();
+        assert!(seen.contains(&codes::GRAPH_SKIPPED), "{seen:?}");
+        assert!(seen.contains(&codes::GRAPH_NO_OUTPUTS), "{seen:?}");
+        assert_eq!(report.errors(), 0, "{seen:?}");
+    }
+
+    #[test]
+    fn bucket_drift_is_nt0504() {
+        let graph = r#"{"model": "nt-tiny", "name": "embed.b16",
+            "file": "missing.hlo.txt",
+            "inputs": [{"name": "tokens", "shape": [16, 128], "dtype": "i32"},
+                       {"name": "tok_emb", "shape": [2048, 128], "dtype": "f32"},
+                       {"name": "pos_emb", "shape": [128, 128], "dtype": "f32"}],
+            "outputs": [{"name": "out0", "shape": [16, 128, 128],
+                         "dtype": "f32"}]}"#;
+        let report = run_lints(&ctx_for("bucket", graph, None));
+        let d = report
+            .diagnostics
+            .iter()
+            .find(|d| d.code == codes::GRAPH_DATAFLOW)
+            .unwrap();
+        assert!(d.message.contains("bucket 16"), "{}", d.message);
+    }
+}

@@ -1,0 +1,414 @@
+//! HLO entry-signature parsing + the shared tensor-signature types.
+//!
+//! The AOT exporter writes every graph as HLO *text* (see `aot.py`); the
+//! only part of that text the static analyses need is the ENTRY signature —
+//! parameter and result shapes/dtypes.  [`parse_signature`] extracts it
+//! from the `entry_computation_layout={...}` header (with an ENTRY-body
+//! fallback for files that lost the header), producing the same
+//! [`TensorSig`] type the runtime's argument validation uses
+//! (`runtime::literal::check_spec`), so the `graphs` lint and the runtime
+//! guard can never disagree about what a shape means.
+//!
+//! Signatures only: no op parsing, no layout checking (`{1,0}` suffixes are
+//! skipped), no computation bodies.
+
+use crate::error::{Error, Result};
+use crate::tensor::{DType, Tensor};
+
+/// The dtypes that can cross the exporter ↔ runtime boundary.  Two spelling
+/// domains map onto it: manifest strings (`"i32"`, `"i8"`, ...) and HLO
+/// element types (`s32`, `s8`, ...).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SigDType {
+    F32,
+    I8,
+    U8,
+    I32,
+    I64,
+}
+
+impl SigDType {
+    /// Parse a manifest dtype string (`"f32"`, `"i8"`, `"u8"`, `"i32"`,
+    /// `"i64"`).
+    pub fn from_manifest(s: &str) -> Option<Self> {
+        match s {
+            "f32" => Some(SigDType::F32),
+            "i8" => Some(SigDType::I8),
+            "u8" => Some(SigDType::U8),
+            "i32" => Some(SigDType::I32),
+            "i64" => Some(SigDType::I64),
+            _ => None,
+        }
+    }
+
+    /// Parse an HLO element-type token (`f32`, `s8`, `u8`, `s32`, `s64`).
+    pub fn from_hlo(s: &str) -> Option<Self> {
+        match s {
+            "f32" => Some(SigDType::F32),
+            "s8" => Some(SigDType::I8),
+            "u8" => Some(SigDType::U8),
+            "s32" => Some(SigDType::I32),
+            "s64" => Some(SigDType::I64),
+            _ => None,
+        }
+    }
+
+    /// The manifest spelling (`"f32"`, `"i8"`, ...).
+    pub fn as_manifest(&self) -> &'static str {
+        match self {
+            SigDType::F32 => "f32",
+            SigDType::I8 => "i8",
+            SigDType::U8 => "u8",
+            SigDType::I32 => "i32",
+            SigDType::I64 => "i64",
+        }
+    }
+
+    /// The tensor-storage dtype this signature dtype validates against.
+    pub fn dtype(&self) -> DType {
+        match self {
+            SigDType::F32 => DType::F32,
+            SigDType::I8 => DType::I8,
+            SigDType::U8 => DType::U8,
+            SigDType::I32 => DType::I32,
+            SigDType::I64 => DType::I64,
+        }
+    }
+}
+
+/// One tensor signature: dtype + dims.  The shared currency of the `graphs`
+/// lint, the manifest's recorded `inputs`/`outputs`, and the runtime's
+/// per-call argument validation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSig {
+    pub dtype: SigDType,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSig {
+    pub fn new(dtype: SigDType, dims: impl Into<Vec<usize>>) -> Self {
+        TensorSig { dtype, dims: dims.into() }
+    }
+
+    /// Build from a manifest `IoSpec`-style (shape, dtype-string) pair; an
+    /// unknown dtype string is an [`Error::Artifact`] naming the accepted
+    /// spellings.
+    pub fn from_manifest(shape: &[usize], dtype: &str) -> Result<Self> {
+        let dt = SigDType::from_manifest(dtype).ok_or_else(|| {
+            Error::Artifact(format!(
+                "manifest dtype `{dtype}`? (accepted: f32, i8, u8, i32, i64)"
+            ))
+        })?;
+        Ok(TensorSig::new(dt, shape.to_vec()))
+    }
+
+    /// Validate a runtime tensor against this signature (shape + dtype) —
+    /// the one-shot check `Runtime::run` applies per argument.
+    pub fn check_tensor(&self, t: &Tensor) -> Result<()> {
+        if t.dtype() != self.dtype.dtype() || t.shape != self.dims {
+            return Err(Error::Shape(format!(
+                "arg mismatch: tensor {:?}/{:?} vs spec {}",
+                t.shape,
+                t.dtype(),
+                self.render()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Compact rendering (`f32[8,128]`), used in diagnostics.
+    pub fn render(&self) -> String {
+        let dims =
+            self.dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(",");
+        format!("{}[{dims}]", self.dtype.as_manifest())
+    }
+}
+
+/// The ENTRY signature of one HLO module: parameter signatures in index
+/// order and result signatures (the AOT side always lowers with
+/// `return_tuple=True`, so a single-output graph still has one result).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HloSignature {
+    pub params: Vec<TensorSig>,
+    pub results: Vec<TensorSig>,
+}
+
+/// Parse one shape token (`f32[8,128]{1,0}`, `s32[8]`, `f32[]`) into a
+/// [`TensorSig`]; the layout suffix is ignored.
+fn parse_shape_token(tok: &str) -> Result<TensorSig> {
+    let tok = tok.trim();
+    let open = tok
+        .find('[')
+        .ok_or_else(|| Error::Artifact(format!("hlo: shape token `{tok}` has no `[`")))?;
+    let close = tok[open..]
+        .find(']')
+        .map(|i| open + i)
+        .ok_or_else(|| Error::Artifact(format!("hlo: shape token `{tok}` has no `]`")))?;
+    let dtype = SigDType::from_hlo(&tok[..open]).ok_or_else(|| {
+        Error::Artifact(format!("hlo: unsupported element type in `{tok}`"))
+    })?;
+    let mut dims = Vec::new();
+    for d in tok[open + 1..close].split(',').filter(|d| !d.trim().is_empty()) {
+        dims.push(d.trim().parse::<usize>().map_err(|_| {
+            Error::Artifact(format!("hlo: non-numeric dim in shape token `{tok}`"))
+        })?);
+    }
+    Ok(TensorSig::new(dtype, dims))
+}
+
+/// Split a `(a, b, (c, d))`-style list body at depth-0 commas.
+fn split_top_level(body: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let (mut depth, mut start) = (0usize, 0usize);
+    for (i, c) in body.char_indices() {
+        match c {
+            '(' | '{' | '[' => depth += 1,
+            ')' | '}' | ']' => depth = depth.saturating_sub(1),
+            ',' if depth == 0 => {
+                out.push(&body[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if !body[start..].trim().is_empty() {
+        out.push(&body[start..]);
+    }
+    out
+}
+
+/// Parse one side of the layout arrow: either a paren-wrapped list of shape
+/// tokens or a single bare shape.  Nested tuple entries are rejected — the
+/// AOT exporter lowers with `use_tuple_args=False`, so a tuple *parameter*
+/// means the file did not come from our exporter.
+fn parse_side(side: &str) -> Result<Vec<TensorSig>> {
+    let side = side.trim();
+    let inner = match side.strip_prefix('(') {
+        Some(rest) => rest.strip_suffix(')').ok_or_else(|| {
+            Error::Artifact("hlo: unbalanced parens in entry layout".into())
+        })?,
+        None => return Ok(vec![parse_shape_token(side)?]),
+    };
+    let mut out = Vec::new();
+    for tok in split_top_level(inner) {
+        let tok = tok.trim();
+        if tok.starts_with('(') {
+            return Err(Error::Artifact(
+                "hlo: nested tuple in entry signature (the exporter lowers \
+                 with use_tuple_args=False)"
+                    .into(),
+            ));
+        }
+        out.push(parse_shape_token(tok)?);
+    }
+    Ok(out)
+}
+
+/// Extract a balanced `{...}` body starting at `text[start]` (which must be
+/// `{`); returns the inside.
+fn balanced_braces(text: &str, start: usize) -> Result<&str> {
+    let bytes = text.as_bytes();
+    if bytes.get(start) != Some(&b'{') {
+        return Err(Error::Artifact("hlo: entry_computation_layout has no `{`".into()));
+    }
+    let mut depth = 0usize;
+    for (i, c) in text[start..].char_indices() {
+        match c {
+            '{' => depth += 1,
+            '}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Ok(&text[start + 1..start + i]);
+                }
+            }
+            _ => {}
+        }
+    }
+    Err(Error::Artifact("hlo: unterminated entry_computation_layout".into()))
+}
+
+/// Split the layout body at the depth-0 `->` arrow.
+fn split_arrow(body: &str) -> Result<(&str, &str)> {
+    let bytes = body.as_bytes();
+    let mut depth = 0usize;
+    for i in 0..bytes.len() {
+        match bytes[i] {
+            b'(' | b'{' | b'[' => depth += 1,
+            b')' | b'}' | b']' => depth = depth.saturating_sub(1),
+            b'-' if depth == 0 && bytes.get(i + 1) == Some(&b'>') => {
+                return Ok((&body[..i], &body[i + 2..]));
+            }
+            _ => {}
+        }
+    }
+    Err(Error::Artifact("hlo: entry layout has no `->` arrow".into()))
+}
+
+/// Fallback for files missing the layout header: scan the text for
+/// `parameter(N)` declarations and the `ROOT` instruction's shape.
+fn parse_entry_body(text: &str) -> Result<HloSignature> {
+    let mut params: Vec<(usize, TensorSig)> = Vec::new();
+    let mut results: Option<Vec<TensorSig>> = None;
+    for line in text.lines() {
+        let line = line.trim();
+        let Some(eq) = line.find(" = ") else { continue };
+        let rhs = &line[eq + 3..];
+        if let Some(ppos) = rhs.find("parameter(") {
+            let idx_body = &rhs[ppos + "parameter(".len()..];
+            let idx: usize = idx_body
+                .split(')')
+                .next()
+                .and_then(|s| s.trim().parse().ok())
+                .ok_or_else(|| Error::Artifact("hlo: bad parameter index".into()))?;
+            let shape_tok = rhs.split_whitespace().next().unwrap_or("");
+            params.push((idx, parse_shape_token(shape_tok)?));
+        } else if line.starts_with("ROOT ") {
+            let shape_str = if rhs.trim_start().starts_with('(') {
+                let open = rhs.find('(').unwrap_or(0);
+                let mut depth = 0usize;
+                let mut end = rhs.len();
+                for (i, c) in rhs[open..].char_indices() {
+                    match c {
+                        '(' => depth += 1,
+                        ')' => {
+                            depth -= 1;
+                            if depth == 0 {
+                                end = open + i + 1;
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                &rhs[open..end]
+            } else {
+                rhs.split_whitespace().next().unwrap_or("")
+            };
+            results = Some(parse_side(shape_str)?);
+        }
+    }
+    let results = results
+        .ok_or_else(|| Error::Artifact("hlo: no ROOT instruction found".into()))?;
+    if params.is_empty() {
+        return Err(Error::Artifact("hlo: no parameter declarations found".into()));
+    }
+    params.sort_by_key(|(i, _)| *i);
+    for (want, (got, _)) in params.iter().enumerate() {
+        if *got != want {
+            return Err(Error::Artifact(format!(
+                "hlo: parameter indices not contiguous (missing {want})"
+            )));
+        }
+    }
+    Ok(HloSignature { params: params.into_iter().map(|(_, s)| s).collect(), results })
+}
+
+/// Parse the ENTRY signature out of HLO text.  Primary source is the
+/// `entry_computation_layout={(...)->(...)}` header every
+/// `as_hlo_text()` dump carries; files that lost the header fall back to a
+/// scan of the ENTRY body (`parameter(N)` declarations + the ROOT shape).
+/// Empty or signature-free text is an [`Error::Artifact`].
+pub fn parse_signature(text: &str) -> Result<HloSignature> {
+    if text.trim().is_empty() {
+        return Err(Error::Artifact("hlo: empty file".into()));
+    }
+    if let Some(pos) = text.find("entry_computation_layout=") {
+        let body = balanced_braces(text, pos + "entry_computation_layout=".len())?;
+        let (lhs, rhs) = split_arrow(body)?;
+        return Ok(HloSignature { params: parse_side(lhs)?, results: parse_side(rhs)? });
+    }
+    parse_entry_body(text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f32s(dims: &[usize]) -> TensorSig {
+        TensorSig::new(SigDType::F32, dims.to_vec())
+    }
+
+    #[test]
+    fn parses_layout_header() {
+        let text = "HloModule jit_f, entry_computation_layout=\
+                    {(s32[8,128]{1,0}, f32[2048,128]{1,0}, f32[128,128]{1,0})\
+                    ->(f32[8,128,128]{2,1,0})}\n\nENTRY main.7 {\n}\n";
+        let sig = parse_signature(text).unwrap();
+        assert_eq!(sig.params.len(), 3);
+        assert_eq!(sig.params[0], TensorSig::new(SigDType::I32, vec![8, 128]));
+        assert_eq!(sig.params[1], f32s(&[2048, 128]));
+        assert_eq!(sig.results, vec![f32s(&[8, 128, 128])]);
+    }
+
+    #[test]
+    fn parses_multi_result_and_scalars() {
+        let text = "HloModule jit_g, entry_computation_layout=\
+                    {(f32[4,8]{1,0}, f32[])->(f32[4,8]{1,0}, f32[4]{0}, f32[1]{0})}";
+        let sig = parse_signature(text).unwrap();
+        assert_eq!(sig.params[1], f32s(&[]));
+        assert_eq!(
+            sig.results,
+            vec![f32s(&[4, 8]), f32s(&[4]), f32s(&[1])]
+        );
+    }
+
+    #[test]
+    fn falls_back_to_entry_body() {
+        let text = "HloModule lost_header\n\nENTRY main.5 {\n  \
+                    Arg_1.2 = f32[16]{0} parameter(1)\n  \
+                    Arg_0.1 = s32[8,128]{1,0} parameter(0)\n  \
+                    ROOT tuple.4 = (f32[8,128]{1,0}, f32[1]{0}) tuple(x, y)\n}\n";
+        let sig = parse_signature(text).unwrap();
+        assert_eq!(sig.params[0].dtype, SigDType::I32);
+        assert_eq!(sig.params[1], f32s(&[16]));
+        assert_eq!(sig.results, vec![f32s(&[8, 128]), f32s(&[1])]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_signature("").is_err());
+        assert!(parse_signature("   \n").is_err());
+        assert!(parse_signature("; just a comment\n").is_err());
+        assert!(parse_signature("entry_computation_layout={(f32[8)->(}").is_err());
+        // unsupported element type
+        assert!(parse_signature(
+            "HloModule m, entry_computation_layout={(c64[8]{0})->(f32[8]{0})}"
+        )
+        .is_err());
+        // nested tuple parameter
+        assert!(parse_signature(
+            "HloModule m, entry_computation_layout=\
+             {((f32[8]{0}, f32[8]{0}))->(f32[8]{0})}"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn sig_dtype_maps_both_spellings() {
+        for (m, h) in [("f32", "f32"), ("i8", "s8"), ("u8", "u8"), ("i32", "s32"),
+                       ("i64", "s64")] {
+            let a = SigDType::from_manifest(m).unwrap();
+            let b = SigDType::from_hlo(h).unwrap();
+            assert_eq!(a, b);
+            assert_eq!(a.as_manifest(), m);
+        }
+        assert!(SigDType::from_manifest("f16").is_none());
+        assert!(SigDType::from_hlo("pred").is_none());
+    }
+
+    #[test]
+    fn check_tensor_via_sig() {
+        let t = Tensor::zeros(&[2, 2]);
+        TensorSig::from_manifest(&[2, 2], "f32").unwrap().check_tensor(&t).unwrap();
+        assert!(TensorSig::from_manifest(&[2, 2], "i8")
+            .unwrap()
+            .check_tensor(&t)
+            .is_err());
+        assert!(TensorSig::from_manifest(&[4], "f32")
+            .unwrap()
+            .check_tensor(&t)
+            .is_err());
+        assert!(TensorSig::from_manifest(&[2, 2], "f16").is_err());
+        assert_eq!(f32s(&[8, 128]).render(), "f32[8,128]");
+    }
+}

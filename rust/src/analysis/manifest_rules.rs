@@ -317,15 +317,24 @@ fn check_graphs(root: &Json, dir: &std::path::Path, origin: &str, report: &mut R
             }
         }
         if let Some(file) = &file {
-            if !dir.join(file).exists() {
+            // NT0108 distinguishes *why* the file is unusable — missing vs
+            // present-but-empty vs unreadable.  Shallow mode keeps all three
+            // a warning; deep mode (`--graphs`) escalates the present-but-
+            // broken variants (and garbage content) to NT0501 errors.
+            let path = dir.join(file);
+            let problem = match std::fs::metadata(&path) {
+                Err(_) if !path.exists() => {
+                    Some(format!("is missing from {}", dir.display()))
+                }
+                Err(e) => Some(format!("is unreadable ({e})")),
+                Ok(meta) if meta.len() == 0 => Some("exists but is empty".to_string()),
+                Ok(_) => None,
+            };
+            if let Some(problem) = problem {
                 report.push(
                     Diagnostic::warn(
                         codes::GRAPH_FILE_MISSING,
-                        format!(
-                            "manifest lists graph file `{file}` but it is missing \
-                             from {}",
-                            dir.display()
-                        ),
+                        format!("manifest lists graph file `{file}` but it {problem}"),
                     )
                     .at(origin)
                     .field(format!("graphs[{i}].file"))
@@ -339,37 +348,51 @@ fn check_graphs(root: &Json, dir: &std::path::Path, origin: &str, report: &mut R
                 &format!("graphs[{i}].inputs"),
                 format!("manifest: graph entry {i}: `inputs` missing or not an array"),
             )),
-            Some(Some(items)) => {
-                for (j, inp) in items.iter().enumerate() {
-                    let base = format!("graphs[{i}].inputs[{j}]");
-                    for k in ["name", "dtype"] {
-                        if inp.get(k).and_then(|v| v.as_str()).is_none() {
-                            report.push(key_diag(
-                                origin,
-                                &format!("{base}.{k}"),
-                                format!(
-                                    "manifest: graph entry {i} input {j}: missing or \
-                                     non-string `{k}`"
-                                ),
-                            ));
-                        }
-                    }
-                    let shape_ok = inp
-                        .get("shape")
-                        .and_then(|s| s.as_arr())
-                        .is_some_and(|dims| dims.iter().all(|d| d.as_usize().is_some()));
-                    if !shape_ok {
-                        report.push(key_diag(
-                            origin,
-                            &format!("{base}.shape"),
-                            format!(
-                                "manifest: graph entry {i} input {j}: `shape` missing \
-                                 or non-numeric"
-                            ),
-                        ));
-                    }
-                }
+            Some(Some(items)) => check_io_list(items, i, "inputs", origin, report),
+        }
+        // `outputs` is optional (pre-signature-recording manifests omit it)
+        // but must be well-formed when present
+        match g.get("outputs").map(|v| v.as_arr()) {
+            None => {}
+            Some(None) => report.push(key_diag(
+                origin,
+                &format!("graphs[{i}].outputs"),
+                format!("manifest: graph entry {i}: `outputs` not an array"),
+            )),
+            Some(Some(items)) => check_io_list(items, i, "outputs", origin, report),
+        }
+    }
+}
+
+/// Shared schema walk for a graph's `inputs` / `outputs` IoSpec lists.
+fn check_io_list(items: &[Json], i: usize, what: &str, origin: &str, report: &mut Report) {
+    for (j, spec) in items.iter().enumerate() {
+        let base = format!("graphs[{i}].{what}[{j}]");
+        for k in ["name", "dtype"] {
+            if spec.get(k).and_then(|v| v.as_str()).is_none() {
+                report.push(key_diag(
+                    origin,
+                    &format!("{base}.{k}"),
+                    format!(
+                        "manifest: graph entry {i} {what} {j}: missing or \
+                         non-string `{k}`"
+                    ),
+                ));
             }
+        }
+        let shape_ok = spec
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .is_some_and(|dims| dims.iter().all(|d| d.as_usize().is_some()));
+        if !shape_ok {
+            report.push(key_diag(
+                origin,
+                &format!("{base}.shape"),
+                format!(
+                    "manifest: graph entry {i} {what} {j}: `shape` missing \
+                     or non-numeric"
+                ),
+            ));
         }
     }
 }
@@ -492,6 +515,43 @@ mod tests {
         ] {
             assert!(codes.contains(&want), "missing {want} in {codes:?}");
         }
+    }
+
+    #[test]
+    fn nt0108_distinguishes_missing_and_empty_and_validates_outputs() {
+        let ctx = ctx_for(
+            "hlo_variants",
+            r#"{"format": 1, "calib_batch": 32, "buckets": [8],
+                "groups": {"pc": 0}, "models": {},
+                "graphs": [
+                  {"model": "m", "name": "a.b8", "file": "gone.hlo.txt",
+                   "inputs": []},
+                  {"model": "m", "name": "b.b8", "file": "empty.hlo.txt",
+                   "inputs": [],
+                   "outputs": [{"name": "out0", "shape": [8, null],
+                                "dtype": "f32"}]}]}"#,
+        );
+        let dir = ctx.manifest_dir.clone().unwrap();
+        std::fs::write(dir.join("empty.hlo.txt"), "").unwrap();
+        let report = run_lints(&ctx);
+        let missing: Vec<_> = report
+            .diagnostics
+            .iter()
+            .filter(|d| d.code == codes::GRAPH_FILE_MISSING)
+            .collect();
+        assert_eq!(missing.len(), 2, "{:?}", report.codes());
+        assert!(missing[0].message.contains("missing"), "{}", missing[0].message);
+        assert!(missing[1].message.contains("empty"), "{}", missing[1].message);
+        // the malformed recorded output is a schema violation
+        assert!(
+            report
+                .diagnostics
+                .iter()
+                .any(|d| d.code == codes::MANIFEST_KEY
+                    && d.field.as_deref() == Some("graphs[1].outputs[0].shape")),
+            "{:?}",
+            report.codes()
+        );
     }
 
     #[test]

@@ -60,6 +60,20 @@
 //! | NT0403 | warning | `max_batch` exceeds the largest exported batch bucket | lower `max_batch` or re-export |
 //! | NT0404 | warning | deadline shorter than the batch window | raise the deadline or shrink the window |
 //! | NT0405 | error | malformed `--serve-config` / `--models` entry | use the accepted keys/format |
+//! | NT0501 | error | HLO file unreadable, empty, or has no parseable ENTRY signature (deep mode) | re-run `make artifacts` |
+//! | NT0502 | error | exporter-recorded signature drifts from the lowered HLO (per parameter) | re-run the AOT export |
+//! | NT0503 | error | quantized-block argument list / packed-code / scale geometry mismatch | re-export with a consistent grain |
+//! | NT0504 | error | pipeline dataflow type mismatch (embed/block/head streams, bucket drift) | re-run the AOT export |
+//! | NT0505 | error | prefill-KV results drift from the manifest decode cache spec `[H, S, dh]` | re-export the decode graphs |
+//! | NT0506 | error | decode step violates the `pos i32[B]` / carried-cache contract | re-export the decode graphs |
+//! | NT0507 | error | tweak-loss graph does not end in a `f32[1]` loss | re-run the AOT export |
+//! | NT0508 | info | graph skipped: no contract reconstructable (unknown family/model) | — |
+//! | NT0509 | warning | no recorded output signature and no parseable HLO to check against | re-export to record `outputs` |
+//!
+//! NT05xx fire only in **deep** mode (`check --graphs`, or the
+//! `--deep-check` preflight of `quantize`/`serve`): the `graphs` lint
+//! parses every HLO ENTRY signature and verifies the reconstructed
+//! pipeline dataflow — see [`graph_rules`].
 //!
 //! # CLI
 //!
@@ -68,7 +82,8 @@
 //!                 [--layer-bits 0:8,3:2] [--no-tweak]
 //!                 [--profile sensitivity.json] [--target-bits 2.25]
 //!                 [--serve-config max_batch=8,batch_window_ms=2,deadline_ms=500]
-//!                 [--models w4=a.ntz] [--format human|json] [--deny-warnings]
+//!                 [--models w4=a.ntz] [--graphs]
+//!                 [--format human|json] [--deny-warnings]
 //! ```
 //!
 //! Exit status is non-zero on any error-severity finding, and on warnings
@@ -77,6 +92,8 @@
 
 pub mod checkpoint_rules;
 pub mod diagnostics;
+pub mod graph_rules;
+pub mod hlo;
 pub mod manifest_rules;
 pub mod scheme_rules;
 pub mod serve_rules;
@@ -127,6 +144,15 @@ pub mod codes {
     pub const BATCH_OVER_BUCKET: &str = "NT0403";
     pub const DEADLINE_WINDOW: &str = "NT0404";
     pub const BAD_SERVE_SPEC: &str = "NT0405";
+    pub const GRAPH_HLO_INVALID: &str = "NT0501";
+    pub const GRAPH_SIG_DRIFT: &str = "NT0502";
+    pub const GRAPH_QARGS: &str = "NT0503";
+    pub const GRAPH_DATAFLOW: &str = "NT0504";
+    pub const GRAPH_KV_SPEC: &str = "NT0505";
+    pub const GRAPH_DECODE_STEP: &str = "NT0506";
+    pub const GRAPH_TWEAK_LOSS: &str = "NT0507";
+    pub const GRAPH_SKIPPED: &str = "NT0508";
+    pub const GRAPH_NO_OUTPUTS: &str = "NT0509";
 
     /// Every stable code with its one-line meaning, in code order.
     pub const ALL: &[(&str, &str)] = &[
@@ -162,6 +188,15 @@ pub mod codes {
         (BATCH_OVER_BUCKET, "max_batch exceeds the largest exported bucket"),
         (DEADLINE_WINDOW, "deadline shorter than the batch window"),
         (BAD_SERVE_SPEC, "malformed serve-config or models entry"),
+        (GRAPH_HLO_INVALID, "HLO file unreadable, empty, or signature-free"),
+        (GRAPH_SIG_DRIFT, "recorded signature drifts from the lowered HLO"),
+        (GRAPH_QARGS, "quantized-block argument/scale geometry mismatch"),
+        (GRAPH_DATAFLOW, "pipeline dataflow type mismatch"),
+        (GRAPH_KV_SPEC, "prefill-KV results drift from the decode cache spec"),
+        (GRAPH_DECODE_STEP, "decode step violates the pos/carried-cache contract"),
+        (GRAPH_TWEAK_LOSS, "tweak-loss graph does not end in a scalar loss"),
+        (GRAPH_SKIPPED, "graph skipped: no contract reconstructable"),
+        (GRAPH_NO_OUTPUTS, "no recorded output signature and no parseable HLO"),
     ];
 }
 
@@ -219,6 +254,11 @@ pub struct CheckContext {
     pub target_bits: Option<f32>,
     /// Engine/serve tuning under check.
     pub serve: Option<ServeCheck>,
+    /// Deep mode: run the NT05xx `graphs` lint (parse every HLO ENTRY
+    /// signature and verify the reconstructed pipeline dataflow).  Off by
+    /// default — deep mode reads every graph file, so `check` opts in via
+    /// `--graphs` and `quantize`/`serve` via `--deep-check`.
+    pub graphs: bool,
 }
 
 /// One static-analysis rule.  Mirrors `quant::quantizer::Quantizer`:
@@ -256,6 +296,10 @@ fn build_serve() -> Box<dyn Lint> {
     Box::new(serve_rules::ServeLint)
 }
 
+fn build_graphs() -> Box<dyn Lint> {
+    Box::new(graph_rules::GraphLint)
+}
+
 /// The built-in rule set, in run order (NT01xx → NT04xx).
 pub const LINT_REGISTRY: &[LintRegistration] = &[
     LintRegistration {
@@ -277,6 +321,11 @@ pub const LINT_REGISTRY: &[LintRegistration] = &[
         name: "serve",
         summary: "engine tuning sanity vs exported batch buckets",
         build: build_serve,
+    },
+    LintRegistration {
+        name: "graphs",
+        summary: "deep mode: HLO ENTRY signatures vs the reconstructed pipeline dataflow",
+        build: build_graphs,
     },
 ];
 
@@ -379,7 +428,10 @@ mod tests {
 
     #[test]
     fn registry_lists_every_lint() {
-        assert_eq!(registered_lints(), vec!["manifest", "checkpoint", "scheme", "serve"]);
+        assert_eq!(
+            registered_lints(),
+            vec!["manifest", "checkpoint", "scheme", "serve", "graphs"]
+        );
         for reg in registry() {
             assert_eq!((reg.build)().name(), reg.name);
             assert!(!reg.summary.is_empty());

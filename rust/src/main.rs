@@ -8,7 +8,7 @@
 //! normtweak serve    [--checkpoint path | --models w4=a.ntz,w2=b.ntz]
 //!                    [--requests 64] [--clients 4] [--deadline-ms 500] [--cache 256]
 //! normtweak check    [--manifest DIR] [--ckpt q.ntz] [--scheme gptq:w4g64]
-//!                    [--format human|json] [--deny-warnings]
+//!                    [--graphs] [--format human|json] [--deny-warnings]
 //! ```
 
 // same discipline as the library crate: the binary reports failures as
@@ -37,16 +37,16 @@ const GLOBAL_FLAGS: &[&str] = &["config", "model", "artifacts"];
 fn allowed_flags(cmd: &str) -> Option<&'static [&'static str]> {
     match cmd {
         "quantize" => Some(&["method", "bits", "group", "layer-bits", "no-tweak",
-                             "calib", "out", "auto-bits", "profile"]),
+                             "calib", "out", "auto-bits", "profile", "deep-check"]),
         "plan" => Some(&["method", "bits", "group", "calib", "target-bits",
                          "candidates", "loss", "profile", "out"]),
         "eval" => Some(&["checkpoint", "float", "ppl", "tasks"]),
         "generate" => Some(&["n", "len"]),
         "serve" => Some(&["checkpoint", "requests", "clients", "models",
-                          "deadline-ms", "cache"]),
+                          "deadline-ms", "cache", "deep-check"]),
         "check" => Some(&["ckpt", "manifest", "scheme", "layer-bits", "no-tweak",
                           "profile", "target-bits", "serve-config", "models",
-                          "format", "deny-warnings"]),
+                          "graphs", "format", "deny-warnings"]),
         "help" | "--help" => Some(&[]),
         _ => None,
     }
@@ -134,7 +134,7 @@ USAGE:
   normtweak quantize [--config cfg.toml] [--model M] [--method gptq] [--bits 4]
                      [--group 0] [--layer-bits 0:8,11:8] [--no-tweak]
                      [--auto-bits 2.25] [--profile sensitivity.json]
-                     [--calib gen-v2] [--out path]
+                     [--calib gen-v2] [--out path] [--deep-check]
   normtweak plan     --target-bits 2.25 [--model M] [--method gptq] [--bits 2]
                      [--group 64] [--candidates 2,3,4,8] [--loss dist]
                      [--calib gen-v2] [--profile path] [--out sensitivity.json]
@@ -143,12 +143,12 @@ USAGE:
   normtweak generate [--model M] [--n 4] [--len 48]
   normtweak serve    [--checkpoint path | --models w4=a.ntz,w2=b.ntz]
                      [--requests 64] [--clients 4] [--deadline-ms 500]
-                     [--cache 256]
+                     [--cache 256] [--deep-check]
   normtweak check    [--manifest DIR] [--ckpt quantized.ntz]
                      [--scheme gptq:w4g64] [--layer-bits 0:8,3:2] [--no-tweak]
                      [--profile sensitivity.json] [--target-bits 2.25]
                      [--serve-config max_batch=8,batch_window_ms=2]
-                     [--models w4=a.ntz] [--format human|json]
+                     [--models w4=a.ntz] [--graphs] [--format human|json]
                      [--deny-warnings]
   normtweak help
 
@@ -180,6 +180,14 @@ PRE-FLIGHT CHECK:
   stable NTxxxx diagnostics (table in the `analysis` module docs). Exit is
   non-zero on any error — and on warnings too with --deny-warnings;
   --format json emits the machine-readable report for CI.
+
+  --graphs adds the deep NT05xx pass: every graph's HLO ENTRY signature is
+  parsed and checked against the manifest's recorded exporter intent and
+  against the reconstructed pipeline dataflow (embed->block->head streams,
+  quantized-block code/scale geometry per grain, prefill-KV caches vs the
+  decode spec [H, S, dh], per-row pos i32[B] decode contracts, scalar
+  tweak losses). `quantize --deep-check` and `serve --deep-check` run the
+  same pass as an opt-in startup preflight.
 ";
 
 /// A reused `sensitivity.json` must actually describe the model being
@@ -298,6 +306,16 @@ fn run() -> normtweak::Result<()> {
     match args.cmd.as_str() {
         "quantize" => {
             let (runtime, weights) = load_ctx()?;
+            // opt-in deep preflight: the NT05xx graphs pass statically
+            // verifies every exported HLO signature before any layer runs
+            if args.has("deep-check") {
+                analysis::preflight(&analysis::CheckContext {
+                    manifest_dir: Some(std::path::PathBuf::from(&cfg.run.artifacts)),
+                    manifest: ArtifactManifest::load(&cfg.run.artifacts).ok(),
+                    graphs: true,
+                    ..Default::default()
+                })?;
+            }
             let out = args.get_or("out", "artifacts/quantized.ntz");
             let calib = build_calib(&runtime, &weights, &cfg.calib.source,
                                     cfg.calib.n_samples, cfg.calib.seed)?;
@@ -530,7 +548,16 @@ fn run() -> normtweak::Result<()> {
             // tunings the exported batch buckets cannot honor surface here,
             // before any engine thread spins up (warnings go to stderr)
             analysis::preflight(&analysis::CheckContext {
+                // --deep-check adds the NT05xx graphs pass (HLO ENTRY
+                // signatures vs recorded intent vs pipeline dataflow) to
+                // the startup gate
+                manifest_dir: if args.has("deep-check") {
+                    Some(std::path::PathBuf::from(&cfg.run.artifacts))
+                } else {
+                    None
+                },
                 manifest: ArtifactManifest::load(&cfg.run.artifacts).ok(),
+                graphs: args.has("deep-check"),
                 serve: Some(analysis::ServeCheck {
                     spec: deadline_ms.map(|d| format!("deadline_ms={d}")),
                     models_spec: args.get("models").map(String::from),
@@ -580,6 +607,7 @@ fn run() -> normtweak::Result<()> {
                 model_name: Some(mcfg.name.clone()),
                 model: Some(mcfg),
                 profile_path: args.get("profile").map(std::path::PathBuf::from),
+                graphs: args.has("graphs"),
                 ..Default::default()
             };
             if let Some(t) = args.get("target-bits") {
@@ -851,14 +879,24 @@ mod tests {
                         "--scheme", "gptq:w4g64", "--layer-bits", "0:8,3:2",
                         "--profile", "s.json", "--target-bits", "2.25",
                         "--serve-config", "max_batch=8", "--models", "w4=a.ntz",
-                        "--format", "json", "--deny-warnings"]).unwrap();
+                        "--graphs", "--format", "json", "--deny-warnings"]).unwrap();
         assert_eq!(a.cmd, "check");
         assert_eq!(a.get("format"), Some("json"));
         assert!(a.has("deny-warnings"));
+        assert!(a.has("graphs"));
         // check-only flags stay rejected elsewhere
         assert!(parse(&["quantize", "--deny-warnings"]).is_err());
         assert!(parse(&["serve", "--format", "json"]).is_err());
         assert!(parse(&["eval", "--scheme", "w4g64"]).is_err());
+    }
+
+    #[test]
+    fn deep_check_flag_parses_where_it_preflights() {
+        assert!(parse(&["quantize", "--deep-check"]).unwrap().has("deep-check"));
+        assert!(parse(&["serve", "--deep-check"]).unwrap().has("deep-check"));
+        // check spells the deep pass --graphs instead
+        assert!(parse(&["check", "--deep-check"]).is_err());
+        assert!(parse(&["eval", "--deep-check"]).is_err());
     }
 
     #[test]
@@ -867,6 +905,9 @@ mod tests {
         assert!(HELP.contains("--deny-warnings"));
         assert!(HELP.contains("--format human|json"));
         assert!(HELP.contains("NTxxxx"));
+        assert!(HELP.contains("--graphs"));
+        assert!(HELP.contains("--deep-check"));
+        assert!(HELP.contains("NT05xx"));
     }
 
     #[test]

@@ -85,6 +85,23 @@
 //! argmax near-ties inside the ~2e-4 kernel tolerance
 //! (`integration_eval.rs` gates on exactly that).
 //!
+//! # Graph contract
+//!
+//! Every manifest graph entry records its full signature: the declared
+//! `inputs` and — since the signature-recording exporter — the intended
+//! `outputs`, both as `{name, shape, dtype}` specs that parse into the
+//! shared [`crate::analysis::hlo::TensorSig`] type.  Those recorded specs
+//! are what the runtime validates call arguments against
+//! (`runtime::literal::check_spec`), and what the deep static pass
+//! (`normtweak check --graphs`, or `quantize`/`serve --deep-check`)
+//! cross-checks three ways: recorded intent vs the HLO text's actual
+//! `entry_computation_layout` (NT0502), and both vs the pipeline dataflow
+//! reconstructed from the model record — quantized arg/scale geometry per
+//! grain (NT0503), activation-stream and bucket consistency (NT0504), KV
+//! cache shapes vs the `decode` record (NT0505), decode-step `pos`/carried
+//! -cache conventions (NT0506), and the scalar tweak loss (NT0507).  See
+//! the diagnostic table in [`crate::analysis`].
+//!
 //! # Automatic mixed precision
 //!
 //! Per-layer scheme overrides (`PipelineConfig::layer_schemes`,

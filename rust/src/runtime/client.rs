@@ -16,7 +16,7 @@ use xla::{HloModuleProto, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 use crate::error::{Error, Result};
 use crate::tensor::Tensor;
 
-use super::literal::{check_spec, literal_to_tensor, tensor_to_literal};
+use super::literal::{literal_to_tensor, tensor_to_literal};
 use super::manifest::ArtifactManifest;
 
 /// Cache key: (model name, graph name).
@@ -93,8 +93,10 @@ impl Runtime {
                     entry.inputs.len()
                 )));
             }
+            // the same TensorSig the `graphs` lint checks statically — one
+            // signature vocabulary for static analysis and runtime guards
             for (spec, t) in entry.inputs.iter().zip(args) {
-                check_spec(t, &spec.shape, &spec.dtype).map_err(|e| {
+                spec.sig().and_then(|sig| sig.check_tensor(t)).map_err(|e| {
                     Error::Shape(format!("{model}.{graph} arg `{}`: {e}", spec.name))
                 })?;
             }

@@ -3,8 +3,9 @@
 
 use xla::{ElementType, Literal};
 
+use crate::analysis::hlo::TensorSig;
 use crate::error::{Error, Result};
-use crate::tensor::{DType, Storage, Tensor};
+use crate::tensor::{Storage, Tensor};
 
 fn as_bytes<T: Copy>(v: &[T]) -> &[u8] {
     unsafe {
@@ -49,25 +50,12 @@ fn xe(e: xla::Error) -> Error {
     Error::Xla(e.to_string())
 }
 
-/// Check a tensor against a manifest IoSpec (shape + dtype).
+/// Check a tensor against a manifest IoSpec (shape + dtype).  Thin shim
+/// over the shared signature types ([`TensorSig`]) — the same types the
+/// `graphs` lint parses out of the HLO text, so static analysis and this
+/// runtime guard cannot drift apart.
 pub fn check_spec(t: &Tensor, shape: &[usize], dtype: &str) -> Result<()> {
-    let want = match dtype {
-        "f32" => DType::F32,
-        "i8" => DType::I8,
-        "i32" => DType::I32,
-        "u8" => DType::U8,
-        other => return Err(Error::Artifact(format!("manifest dtype {other}?"))),
-    };
-    if t.dtype() != want || t.shape != shape {
-        return Err(Error::Shape(format!(
-            "arg mismatch: tensor {:?}/{:?} vs spec {:?}/{}",
-            t.shape,
-            t.dtype(),
-            shape,
-            dtype
-        )));
-    }
-    Ok(())
+    TensorSig::from_manifest(shape, dtype)?.check_tensor(t)
 }
 
 #[cfg(test)]

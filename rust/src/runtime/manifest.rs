@@ -4,16 +4,27 @@
 use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};
 
+use crate::analysis::hlo::TensorSig;
 use crate::error::{Error, Result};
 use crate::model::ModelConfig;
 use crate::util::json::Json;
 
-/// Shape + dtype of one graph input (as exported by aot.py).
+/// Shape + dtype of one graph input or output (as exported by aot.py).
 #[derive(Debug, Clone)]
 pub struct IoSpec {
     pub name: String,
     pub shape: Vec<usize>,
     pub dtype: String,
+}
+
+impl IoSpec {
+    /// The shared signature type this spec validates against — the same
+    /// [`TensorSig`] the `graphs` lint parses out of the HLO text, so the
+    /// runtime's per-call argument check and the static analysis can never
+    /// disagree.  An unknown dtype string is an `Error::Artifact`.
+    pub fn sig(&self) -> Result<TensorSig> {
+        TensorSig::from_manifest(&self.shape, &self.dtype)
+    }
 }
 
 /// One exported graph.
@@ -23,6 +34,11 @@ pub struct GraphEntry {
     pub name: String,
     pub file: String,
     pub inputs: Vec<IoSpec>,
+    /// The exporter's *intended* result signature (`outputs` in the
+    /// manifest).  Optional for back-compat: manifests written before the
+    /// signature-recording exporter simply have none (empty), and the
+    /// `graphs` lint downgrades to the HLO text alone.
+    pub outputs: Vec<IoSpec>,
 }
 
 #[derive(Debug, Clone)]
@@ -114,6 +130,28 @@ fn need_str(j: &Json, key: &str) -> Result<String> {
         .as_str()
         .ok_or_else(|| Error::Artifact(format!("manifest: `{key}` not a string")))?
         .to_string())
+}
+
+/// Strict parse of a graph entry's `inputs`/`outputs` IoSpec list.
+fn parse_io_list(v: &Json, what: &str) -> Result<Vec<IoSpec>> {
+    let mut out = Vec::new();
+    for i in v
+        .as_arr()
+        .ok_or_else(|| Error::Artifact(format!("{what} not an array")))?
+    {
+        let name = need_str(i, "name")?;
+        let mut shape = Vec::new();
+        for d in need(i, "shape")?
+            .as_arr()
+            .ok_or_else(|| Error::Artifact("shape not an array".into()))?
+        {
+            shape.push(d.as_usize().ok_or_else(|| {
+                Error::Artifact(format!("manifest: non-numeric dim in shape of `{name}`"))
+            })?);
+        }
+        out.push(IoSpec { name, shape, dtype: need_str(i, "dtype")? });
+    }
+    Ok(out)
 }
 
 impl ArtifactManifest {
@@ -259,30 +297,20 @@ impl ArtifactManifest {
             .as_arr()
             .ok_or_else(|| Error::Artifact("graphs not an array".into()))?
         {
-            let mut inputs = Vec::new();
-            for i in need(g, "inputs")?
-                .as_arr()
-                .ok_or_else(|| Error::Artifact("inputs not an array".into()))?
-            {
-                let name = need_str(i, "name")?;
-                let mut shape = Vec::new();
-                for d in need(i, "shape")?
-                    .as_arr()
-                    .ok_or_else(|| Error::Artifact("shape not an array".into()))?
-                {
-                    shape.push(d.as_usize().ok_or_else(|| {
-                        Error::Artifact(format!(
-                            "manifest: non-numeric dim in shape of `{name}`"
-                        ))
-                    })?);
-                }
-                inputs.push(IoSpec { name, shape, dtype: need_str(i, "dtype")? });
-            }
+            let inputs = parse_io_list(need(g, "inputs")?, "inputs")?;
+            // `outputs` is the signature-recording exporter's addition;
+            // absent means an older manifest (empty list), present means
+            // strict parse like `inputs`
+            let outputs = match g.get("outputs") {
+                None => Vec::new(),
+                Some(o) => parse_io_list(o, "outputs")?,
+            };
             graphs.push(GraphEntry {
                 model: need_str(g, "model")?,
                 name: need_str(g, "name")?,
                 file: need_str(g, "file")?,
                 inputs,
+                outputs,
             });
         }
 
@@ -473,6 +501,54 @@ mod tests {
         assert_eq!(g.inputs[0].dtype, "i32");
         assert_eq!(g.inputs[0].shape, vec![8, 128]);
         assert!(m.graph("nt-tiny", "nope").is_err());
+    }
+
+    #[test]
+    fn outputs_parsed_when_present_and_optional_when_absent() {
+        // the base fixture has no `outputs`: back-compat means empty, not Err
+        let dir = std::env::temp_dir().join("nt_manifest_outputs_absent");
+        write_fixture(&dir);
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert!(m.graph("nt-tiny", "embed.b8").unwrap().outputs.is_empty());
+
+        let dir = std::env::temp_dir().join("nt_manifest_outputs");
+        write_manifest(
+            &dir,
+            r#"{
+            "format": 1, "calib_batch": 32, "buckets": [8],
+            "groups": {"pc": 0}, "models": {},
+            "graphs": [{"model": "m", "name": "embed.b8", "file": "f",
+                        "inputs": [{"name": "tokens", "shape": [8, 128],
+                                    "dtype": "i32"}],
+                        "outputs": [{"name": "out0", "shape": [8, 128, 64],
+                                     "dtype": "f32"}]}]
+        }"#,
+        );
+        let m = ArtifactManifest::load(&dir).unwrap();
+        let g = m.graph("m", "embed.b8").unwrap();
+        assert_eq!(g.outputs.len(), 1);
+        assert_eq!(g.outputs[0].shape, vec![8, 128, 64]);
+        // the shared-signature bridge the runtime validates through
+        let sig = g.outputs[0].sig().unwrap();
+        assert_eq!(sig.render(), "f32[8,128,64]");
+        assert!(IoSpec { name: "x".into(), shape: vec![1], dtype: "f16".into() }
+            .sig()
+            .is_err());
+
+        // present-but-malformed outputs fail the load like inputs do
+        let dir = std::env::temp_dir().join("nt_manifest_outputs_bad");
+        write_manifest(
+            &dir,
+            r#"{
+            "format": 1, "calib_batch": 32, "buckets": [8],
+            "groups": {"pc": 0}, "models": {},
+            "graphs": [{"model": "m", "name": "g", "file": "f",
+                        "inputs": [],
+                        "outputs": [{"name": "out0", "shape": [8, null],
+                                     "dtype": "f32"}]}]
+        }"#,
+        );
+        assert!(ArtifactManifest::load(&dir).is_err());
     }
 
     #[test]

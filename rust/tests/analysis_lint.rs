@@ -115,11 +115,14 @@ fn code_set(ctx: &CheckContext) -> BTreeSet<&'static str> {
 
 #[test]
 fn good_fixture_is_clean() {
-    // the everything-populated context `normtweak check` builds, against
-    // entirely well-formed inputs: zero findings
+    // the everything-populated context `normtweak check --graphs` builds,
+    // against entirely well-formed inputs: zero findings (deep mode on, so
+    // this also pins that the good fixture's recorded signatures + HLO
+    // stubs satisfy the full reconstructed dataflow contract)
     let ctx = CheckContext {
         manifest_dir: Some(fixture_dir("good")),
         manifest: Some(good_manifest()),
+        graphs: true,
         ckpt_path: Some(save_checkpoint("clean", w4g64())),
         model: Some(tiny()),
         model_name: Some("nt-tiny".to_string()),
@@ -161,6 +164,60 @@ fn bad_manifest_fixture_matches_golden_code_set() {
     .copied()
     .collect();
     assert_eq!(code_set(&ctx), want);
+}
+
+#[test]
+fn bad_graphs_fixture_matches_golden_code_set() {
+    // tests/fixtures/analysis/bad_graphs/ seeds one violation per NT05xx
+    // diagnostic (see gen_fixtures.py); the deep pass must surface every
+    // one of them in a single run, plus the shallow NT0108 presence
+    // warnings for the HLO files the fixture deliberately omits
+    let ctx = CheckContext {
+        manifest_dir: Some(fixture_dir("bad_graphs")),
+        manifest: Some(ArtifactManifest::load(fixture_dir("bad_graphs")).unwrap()),
+        graphs: true,
+        ..CheckContext::default()
+    };
+    let want: BTreeSet<&str> = [
+        codes::GRAPH_FILE_MISSING, // shallow: files absent from the fixture
+        codes::GRAPH_HLO_INVALID,  // garbage + empty HLO text
+        codes::GRAPH_SIG_DRIFT,    // embed.b8 lowered tokens as s32[8,64]
+        codes::GRAPH_QARGS,        // truncated q-args, pc scales at g64
+        codes::GRAPH_DATAFLOW,     // head.b16: bucket 16 never exported
+        codes::GRAPH_KV_SPEC,      // prefill caches drifted to seq 64
+        codes::GRAPH_DECODE_STEP,  // block_dec pos recorded as f32
+        codes::GRAPH_TWEAK_LOSS,   // tweak_step loss result f32[32]
+        codes::GRAPH_SKIPPED,      // unknown family `mystery`
+        codes::GRAPH_NO_OUTPUTS,   // mystery.b8 records no outputs
+    ]
+    .iter()
+    .copied()
+    .collect();
+    let report = run_lints(&ctx);
+    assert_eq!(report.codes().into_iter().collect::<BTreeSet<_>>(), want);
+    // NT05xx contract violations are errors; the run must gate a pipeline
+    assert!(report.should_fail(false));
+    // every deep finding carries provenance back to a file and a field
+    for d in &report.diagnostics {
+        assert!(d.origin.is_some(), "finding {} has no origin", d.code);
+        assert!(d.field.is_some(), "finding {} has no field", d.code);
+    }
+}
+
+#[test]
+fn deep_flag_off_leaves_bad_graphs_fixture_shallow() {
+    // without --graphs the same fixture only raises the shallow
+    // missing/empty HLO file warnings — the deep pass is strictly opt-in
+    let ctx = CheckContext {
+        manifest_dir: Some(fixture_dir("bad_graphs")),
+        manifest: Some(ArtifactManifest::load(fixture_dir("bad_graphs")).unwrap()),
+        ..CheckContext::default()
+    };
+    let report = run_lints(&ctx);
+    let seen: BTreeSet<&str> = report.codes().into_iter().collect();
+    let want: BTreeSet<&str> = [codes::GRAPH_FILE_MISSING].iter().copied().collect();
+    assert_eq!(seen, want, "{:?}", report.codes());
+    assert_eq!(report.errors(), 0);
 }
 
 #[test]
@@ -578,6 +635,14 @@ fn corpus_covers_every_stable_code() {
     }));
     fired.extend(code_set(&CheckContext {
         profile_path: Some(temp_dir("cov_no_profile").join("missing.json")),
+        ..CheckContext::default()
+    }));
+
+    // NT05xx — the deep graph pass over the seeded-violation fixture
+    fired.extend(code_set(&CheckContext {
+        manifest_dir: Some(fixture_dir("bad_graphs")),
+        manifest: Some(ArtifactManifest::load(fixture_dir("bad_graphs")).unwrap()),
+        graphs: true,
         ..CheckContext::default()
     }));
 

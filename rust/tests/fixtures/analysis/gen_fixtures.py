@@ -1,0 +1,191 @@
+#!/usr/bin/env python3
+"""Regenerate the `normtweak check` graph-lint fixtures.
+
+    python3 rust/tests/fixtures/analysis/gen_fixtures.py
+
+Two fixture trees are (re)written next to this script:
+
+* `good/` — a complete, self-consistent nt-tiny export (grains pc + g64,
+  buckets 8/32, incremental-decode set included).  The manifest is built
+  from the *real* exporter inventory (`compile.aot.graph_defs`) with the
+  real recorded `outputs` (`compile.aot.output_specs`), so it tracks the
+  exporter byte-for-byte; the HLO files are signature-only stubs — a
+  single `HloModule ..., entry_computation_layout={...}` header derived
+  from the same specs, which is all the static `--graphs` pass reads.
+  `normtweak check --graphs --deny-warnings` over this tree must be clean.
+
+* `bad_graphs/` — the same tree with one seeded contract violation per
+  NT05xx diagnostic (drifted HLO header -> NT0502, truncated quantized
+  arg list + per-channel scales at a grouped grain -> NT0503, unexported
+  bucket -> NT0504, shrunken prefill KV caches -> NT0505, float `pos` ->
+  NT0506, non-scalar tweak loss -> NT0507, unknown family -> NT0508, a
+  signature-free entry -> NT0509, garbage/empty HLO text -> NT0501).
+  The golden set lives in rust/tests/analysis_lint.rs; CI greps the same
+  codes out of `check --graphs --format json`.
+
+Stubs, not real lowerings, on purpose: lowering all ~32 graphs through
+XLA takes minutes and bloats the repo by megabytes, while the lint only
+ever parses the ENTRY signature line.  `test_aot.py` separately pins that
+real lowerings agree with the recorded specs, so the stub grammar cannot
+drift from what XLA emits without that suite failing.
+"""
+
+import copy
+import json
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.abspath(os.path.join(HERE, "..", "..", "..", ".."))
+sys.path.insert(0, os.path.join(REPO, "python"))
+
+from compile import aot  # noqa: E402
+from compile.configs import CALIB_BATCH, MODELS  # noqa: E402
+
+# manifest dtype spelling -> HLO text spelling
+_HLO_DTYPE = {"f32": "f32", "i8": "s8", "i32": "s32", "u8": "u8", "i64": "s64"}
+
+MODEL = "nt-tiny"
+GROUPS = {"pc": 0, "g64": 64}
+
+
+def hlo_shape(spec):
+    """`{"shape": [8, 128], "dtype": "i32"}` -> `s32[8,128]{1,0}`."""
+    dims = ",".join(str(d) for d in spec["shape"])
+    text = f"{_HLO_DTYPE[spec['dtype']]}[{dims}]"
+    rank = len(spec["shape"])
+    if rank:  # row-major layout suffix, as XLA prints it
+        text += "{" + ",".join(str(i) for i in reversed(range(rank))) + "}"
+    return text
+
+
+def hlo_stub(entry):
+    """A signature-only HLO header for one manifest graph entry."""
+    params = ", ".join(hlo_shape(s) for s in entry["inputs"])
+    results = ", ".join(hlo_shape(s) for s in entry["outputs"])
+    mod = f"{entry['model']}.{entry['name']}".replace(".", "_").replace("-", "_")
+    return (f"HloModule {mod}, entry_computation_layout="
+            f"{{({params})->({results})}}\n")
+
+
+def manifest_header(cfg):
+    return {
+        "format": 1,
+        "calib_batch": CALIB_BATCH,
+        "buckets": aot.EXPORT_BUCKETS,
+        "groups": GROUPS,
+        "decode": {
+            "buckets": aot.EXPORT_BUCKETS,
+            "caches": {cfg.name: {
+                "n_layer": cfg.n_layer,
+                "shape": [cfg.n_head, cfg.seq, cfg.d_head],
+            }},
+        },
+        "models": {cfg.name: {
+            "n_layer": cfg.n_layer, "d_model": cfg.d_model,
+            "n_head": cfg.n_head, "d_ff": cfg.d_ff, "vocab": cfg.vocab,
+            "seq": cfg.seq, "norm": cfg.norm,
+        }},
+        "graphs": [],
+    }
+
+
+def write_tree(dirname, manifest, hlo_files):
+    out = os.path.join(HERE, dirname)
+    os.makedirs(out, exist_ok=True)
+    for stale in os.listdir(out):
+        if stale.endswith(".hlo.txt"):
+            os.remove(os.path.join(out, stale))
+    for fname, text in hlo_files.items():
+        with open(os.path.join(out, fname), "w") as f:
+            f.write(text)
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+        f.write("\n")
+    print(f"[gen] {dirname}: {len(manifest['graphs'])} graphs, "
+          f"{len(hlo_files)} HLO stubs")
+
+
+def build_good():
+    cfg = MODELS[MODEL]
+    manifest = manifest_header(cfg)
+    hlo_files = {}
+    for name, fn, in_args in aot.graph_defs(cfg, GROUPS, decode=True):
+        entry = {
+            "model": cfg.name, "name": name,
+            "file": f"{cfg.name}.{name}.hlo.txt",
+            "inputs": in_args,
+            "outputs": aot.output_specs(fn, in_args),
+        }
+        manifest["graphs"].append(entry)
+        hlo_files[entry["file"]] = hlo_stub(entry)
+    write_tree("good", manifest, hlo_files)
+    return manifest
+
+
+def build_bad_graphs(good):
+    by_name = {g["name"]: g for g in good["graphs"]}
+
+    def take(name):
+        return copy.deepcopy(by_name[name])
+
+    graphs = []
+    hlo_files = {}
+
+    # NT0502: the HLO lowered `tokens` as s32[8,64] — exporter-intent drift
+    g = take("embed.b8")
+    drifted = copy.deepcopy(g)
+    drifted["inputs"][0]["shape"] = [8, 64]
+    hlo_files[g["file"]] = hlo_stub(drifted)
+    graphs.append(g)
+
+    # NT0503: quantized arg list truncated, and the g64 scales recorded
+    # with the per-channel geometry ([1, 384] where [2, 384] is promised)
+    g = take("block_fwd_q.g64.b8")
+    g["inputs"] = g["inputs"][:5]
+    g["inputs"][4]["shape"] = [1, 384]
+    graphs.append(g)
+
+    # NT0505: prefill caches shrunk to seq 64 against the decode record's
+    # [n_head, seq, d_head] = [4, 128, 32]
+    g = take("block_fwd_kv.b8")
+    for out in g["outputs"][1:]:
+        out["shape"] = [8, 4, 64, 32]
+    graphs.append(g)
+
+    # NT0506: per-row decode position recorded as f32, contract says i32[B]
+    g = take("block_dec.b8")
+    next(i for i in g["inputs"] if i["name"] == "pos")["dtype"] = "f32"
+    graphs.append(g)
+
+    # NT0501 (garbage HLO text) + NT0507 (loss result is not f32[1])
+    g = take("tweak_step.g64")
+    g["outputs"][-1]["shape"] = [32]
+    hlo_files[g["file"]] = "this file is not HLO text\n"
+    graphs.append(g)
+
+    # NT0504: bucket 16 was never exported (buckets are 8 and 32)
+    g = take("head.b8")
+    g["name"] = "head.b16"
+    g["file"] = f"{MODEL}.head.b16.hlo.txt"
+    g["inputs"][0]["shape"][0] = 16
+    g["outputs"][0]["shape"][0] = 16
+    graphs.append(g)
+
+    # NT0508 (unknown family, info) + NT0509 (no recorded outputs, warn)
+    graphs.append({"model": MODEL, "name": "mystery.b8",
+                   "file": f"{MODEL}.mystery.b8.hlo.txt", "inputs": []})
+
+    # NT0501: present-but-empty HLO file
+    g = take("channel_stats.b32")
+    hlo_files[g["file"]] = ""
+    graphs.append(g)
+
+    manifest = manifest_header(MODELS[MODEL])
+    manifest["graphs"] = graphs
+    write_tree("bad_graphs", manifest, hlo_files)
+
+
+if __name__ == "__main__":
+    good = build_good()
+    build_bad_graphs(good)
