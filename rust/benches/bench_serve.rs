@@ -2,21 +2,26 @@
 //! `max_batch` (batched vs unbatched — the dynamic batcher's win) and
 //! exercising the greedy response cache.
 //!
-//! Always emits machine-readable `BENCH_serve.json` (req/s, p50/p99
-//! latency, mean batch, cache hit rate per config) so the serving perf
-//! trajectory is tracked across PRs: with `make artifacts` present it
+//! Always emits machine-readable `BENCH_serve.json` (req/s, client-side
+//! p50/p99 latency, engine-measured queue/prefill/decode-step/e2e
+//! percentiles, mean batch, cache hit rate per config) so the serving
+//! perf trajectory is tracked across PRs: with `make artifacts` present it
 //! serves a real RTN-quantized checkpoint; otherwise it falls back to an
 //! offline mock model so the numbers still exist (tagged `"model": "mock"`).
-//! Set `NT_BENCH_OUT` to redirect the JSON.
+//! Set `NT_BENCH_OUT` to redirect the JSON; pass `--trace out.json` to
+//! export a Chrome trace of the whole sweep.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use normtweak::calib::CalibSet;
 use normtweak::coordinator::{quantize_model, PipelineConfig};
-use normtweak::engine::{Engine, GenRequest, ModelTuning, ServableModel};
+use normtweak::engine::{Engine, GenRequest, ModelStats, ModelTuning, ServableModel};
 use normtweak::error::Result;
 use normtweak::eval::LanguageModel;
 use normtweak::model::{ModelConfig, ModelWeights};
+use normtweak::obs::trace::TraceCollector;
+use normtweak::obs::Hist;
 use normtweak::quant::QuantScheme;
 use normtweak::runtime::Runtime;
 use normtweak::tensor::Tensor;
@@ -51,9 +56,17 @@ enum Source {
     Checkpoint { artifacts: String, model: String, path: std::path::PathBuf },
 }
 
-fn engine_for(max_batch: usize, cache: usize, src: &Source) -> Result<Engine> {
+fn engine_for(
+    max_batch: usize,
+    cache: usize,
+    src: &Source,
+    trace: Option<Arc<TraceCollector>>,
+) -> Result<Engine> {
     let tuning = ModelTuning { max_batch, batch_window: Duration::from_millis(10) };
-    let b = Engine::builder().cache(cache);
+    let mut b = Engine::builder().cache(cache);
+    if let Some(tc) = trace {
+        b = b.trace(tc);
+    }
     let b = match src {
         Source::Mock => b.model_with("bench", tuning, || {
             let lm: Box<dyn LanguageModel> =
@@ -82,6 +95,8 @@ struct RunMetrics {
     decode_tokens: u128,
     prefill_tok_per_s: f64,
     decode_tok_per_s: f64,
+    /// full engine-side stats: latency histograms + failure accounting
+    stats: ModelStats,
 }
 
 /// Drive one engine config with 4 client threads cycling a small prompt
@@ -126,13 +141,38 @@ fn drive(mut engine: Engine, n_requests: usize) -> Result<RunMetrics> {
         decode_tokens: m.decode_tokens,
         prefill_tok_per_s: m.prefill_tok_per_s(),
         decode_tok_per_s: m.decode_tok_per_s(),
+        stats: m,
     })
+}
+
+/// Compact percentile view of one engine latency histogram.
+fn hist_json(h: &Hist) -> Json {
+    json::obj(vec![
+        ("count", json::n(h.count() as f64)),
+        ("p50", json::n(h.percentile(50.0) as f64)),
+        ("p90", json::n(h.percentile(90.0) as f64)),
+        ("p99", json::n(h.percentile(99.0) as f64)),
+        ("max", json::n(h.max() as f64)),
+    ])
+}
+
+/// Pull `--trace out.json` from argv; every other argument (cargo bench
+/// passes its own) is ignored.
+fn trace_arg() -> Option<String> {
+    let argv: Vec<String> = std::env::args().collect();
+    argv.iter().position(|a| a == "--trace").and_then(|i| argv.get(i + 1).cloned())
 }
 
 fn main() {
     let artifacts = std::env::var("NT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     let out_path =
         std::env::var("NT_BENCH_OUT").unwrap_or_else(|_| "BENCH_serve.json".into());
+    let trace = trace_arg().map(|path| {
+        (
+            Arc::new(TraceCollector::new(normtweak::obs::trace::DEFAULT_CAPACITY)),
+            path,
+        )
+    });
     println!("== bench_serve ==");
 
     let (src, model_desc) = if std::path::Path::new(&artifacts).join("manifest.json").exists()
@@ -155,14 +195,27 @@ fn main() {
             "nt-tiny rtn w4".to_string(),
         )
     } else {
-        eprintln!("[offline] no artifacts at {artifacts} — benching the mock model");
+        normtweak::log_warn!(
+            "bench_serve",
+            "no artifacts at {artifacts} — benching the mock model"
+        );
         (Source::Mock, "mock".to_string())
     };
 
     let mut configs: Vec<Json> = Vec::new();
     for max_batch in [1usize, 4, 8] {
-        let engine = engine_for(max_batch, 32, &src).unwrap();
+        let tc = trace.as_ref().map(|(tc, _)| tc.clone());
+        let engine = engine_for(max_batch, 32, &src, tc).unwrap();
         let m = drive(engine, 32).unwrap();
+        if let Some(err) = &m.stats.first_error {
+            // a lane that failed mid-run still reports aggregates; make the
+            // root cause visible instead of burying it in clean-looking JSON
+            normtweak::log_warn!(
+                "bench_serve",
+                "max_batch {max_batch}: {} request(s) failed; first error: {err}",
+                m.stats.failed
+            );
+        }
         println!(
             "max_batch {max_batch}: {:>6.1} req/s   p50 {:>7.1} ms   p99 {:>7.1} ms   \
              mean batch {:>4.1}   cache hit rate {:.2}   \
@@ -186,6 +239,26 @@ fn main() {
             ("decode_tokens", json::n(m.decode_tokens as f64)),
             ("prefill_tok_per_s", json::n(m.prefill_tok_per_s)),
             ("decode_tok_per_s", json::n(m.decode_tok_per_s)),
+            // engine-measured per-phase latency percentiles (µs): recorded
+            // by the scheduler itself, so queue wait and decode-step cost
+            // are split instead of folded into the client-side round trip
+            (
+                "latency_us",
+                json::obj(vec![
+                    ("queue", hist_json(&m.stats.queue_us)),
+                    ("prefill", hist_json(&m.stats.prefill_us)),
+                    ("decode_step", hist_json(&m.stats.decode_step_us)),
+                    ("e2e", hist_json(&m.stats.e2e_us)),
+                ]),
+            ),
+            ("failed", json::n(m.stats.failed as f64)),
+            (
+                "first_error",
+                match &m.stats.first_error {
+                    Some(e) => json::s(e.clone()),
+                    None => Json::Null,
+                },
+            ),
         ]));
     }
     let record = json::obj(vec![
@@ -196,4 +269,12 @@ fn main() {
     ]);
     std::fs::write(&out_path, record.emit() + "\n").unwrap();
     println!("wrote {out_path}");
+    if let Some((tc, path)) = &trace {
+        tc.write_chrome(
+            std::path::Path::new(path),
+            Some(&normtweak::obs::global().snapshot()),
+        )
+        .unwrap();
+        println!("wrote {path}");
+    }
 }

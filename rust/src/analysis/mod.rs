@@ -348,14 +348,18 @@ pub fn run_lints(ctx: &CheckContext) -> Report {
     report
 }
 
-/// Startup gate for the CLI commands: run every lint, print non-error
-/// findings to stderr, and abort with the full error list (wrapped in
-/// [`Error::Config`]) when anything error-severity fired.
+/// Startup gate for the CLI commands: run every lint, log non-error
+/// findings (warnings at `warn`, notes at `info` — both through
+/// [`crate::obs::log`], so `NORMTWEAK_LOG=error` silences them), and abort
+/// with the full error list (wrapped in [`Error::Config`]) when anything
+/// error-severity fired.
 pub fn preflight(ctx: &CheckContext) -> Result<()> {
     let report = run_lints(ctx);
     for d in &report.diagnostics {
-        if d.severity != Severity::Error {
-            eprintln!("[check] {}[{}]: {}", d.severity.as_str(), d.code, d.message);
+        match d.severity {
+            Severity::Error => {}
+            Severity::Warn => crate::log_warn!("check", "[{}] {}", d.code, d.message),
+            Severity::Info => crate::log_info!("check", "[{}] {}", d.code, d.message),
         }
     }
     report.into_result(Error::Config)

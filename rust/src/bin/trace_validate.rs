@@ -1,0 +1,163 @@
+//! `trace_validate <trace.json> [BENCH_serve.json]` — CI checker for the
+//! observability exports.
+//!
+//! Validates the Chrome trace-event JSON produced by `--trace` (parses,
+//! non-empty, ≥3 named tracks, per-track monotonic timestamps in file
+//! order, complete spans nest without partial overlap) and, when given,
+//! the enriched `BENCH_serve.json` schema (per-config `latency_us`
+//! percentile blocks for queue / prefill / decode_step / e2e, plus the
+//! `failed` counter).  Exits non-zero with an `error:` line naming the
+//! first violation, so a refactor that silently breaks the export fails
+//! at PR time instead of at the next debugging session.
+
+use std::collections::HashMap;
+
+use normtweak::util::json::Json;
+use normtweak::{Error, Result};
+
+fn fail(msg: impl Into<String>) -> Error {
+    Error::Config(msg.into())
+}
+
+/// Validate one exported Chrome trace.
+fn check_trace(path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| fail(format!("{path}: {e}")))?;
+    let j = Json::parse(&text).map_err(|e| fail(format!("{path}: bad JSON: {e}")))?;
+    let events = j
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| fail(format!("{path}: no traceEvents array")))?;
+    if events.is_empty() {
+        return Err(fail(format!("{path}: traceEvents is empty")));
+    }
+
+    let mut tracks = 0usize;
+    let mut last_ts: HashMap<u64, f64> = HashMap::new();
+    // per-track stack of open complete-span end times (file order = sorted
+    // by start, parents before children)
+    let mut open: HashMap<u64, Vec<f64>> = HashMap::new();
+    let mut spans = 0usize;
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev
+            .get("ph")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| fail(format!("{path}: event {i} has no ph")))?;
+        let tid = ev.get("tid").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        if ph == "M" {
+            let named = ev
+                .get("args")
+                .and_then(|a| a.get("name"))
+                .and_then(|n| n.as_str())
+                .is_some();
+            if !named {
+                return Err(fail(format!("{path}: metadata event {i} has no track name")));
+            }
+            tracks += 1;
+            continue;
+        }
+        let ts = ev
+            .get("ts")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| fail(format!("{path}: event {i} has no ts")))?;
+        if let Some(prev) = last_ts.get(&tid) {
+            if ts < *prev {
+                return Err(fail(format!(
+                    "{path}: event {i} on tid {tid} goes back in time ({ts} < {prev})"
+                )));
+            }
+        }
+        last_ts.insert(tid, ts);
+        if ph == "X" {
+            spans += 1;
+            let dur = ev.get("dur").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            let stack = open.entry(tid).or_default();
+            while stack.last().is_some_and(|end| *end <= ts) {
+                stack.pop();
+            }
+            if let Some(end) = stack.last() {
+                if ts + dur > *end {
+                    return Err(fail(format!(
+                        "{path}: span at event {i} on tid {tid} partially overlaps its \
+                         parent (ends {} > {end})",
+                        ts + dur
+                    )));
+                }
+            }
+            stack.push(ts + dur);
+        }
+    }
+    if tracks < 3 {
+        return Err(fail(format!(
+            "{path}: only {tracks} named track(s); a lifecycle trace needs >= 3 \
+             (scheduler + per-lane prefill/decode, or pipeline + xla)"
+        )));
+    }
+    println!(
+        "{path}: ok ({} events, {tracks} tracks, {spans} complete spans)",
+        events.len()
+    );
+    Ok(())
+}
+
+/// Validate the enriched `BENCH_serve.json` schema.
+fn check_bench(path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| fail(format!("{path}: {e}")))?;
+    let j = Json::parse(&text).map_err(|e| fail(format!("{path}: bad JSON: {e}")))?;
+    let configs = j
+        .get("configs")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| fail(format!("{path}: no configs array")))?;
+    if configs.is_empty() {
+        return Err(fail(format!("{path}: configs is empty")));
+    }
+    for (i, c) in configs.iter().enumerate() {
+        let lat = c
+            .get("latency_us")
+            .ok_or_else(|| fail(format!("{path}: config {i} has no latency_us")))?;
+        for phase in ["queue", "prefill", "decode_step", "e2e"] {
+            let h = lat.get(phase).ok_or_else(|| {
+                fail(format!("{path}: config {i} latency_us has no `{phase}`"))
+            })?;
+            for field in ["count", "p50", "p90", "p99", "max"] {
+                if h.get(field).and_then(|v| v.as_f64()).is_none() {
+                    return Err(fail(format!(
+                        "{path}: config {i} latency_us.{phase}.{field} missing or \
+                         not a number"
+                    )));
+                }
+            }
+        }
+        if c.get("failed").and_then(|v| v.as_f64()).is_none() {
+            return Err(fail(format!("{path}: config {i} has no numeric `failed`")));
+        }
+    }
+    println!("{path}: ok ({} configs with engine latency percentiles)", configs.len());
+    Ok(())
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (trace, bench) = match args.as_slice() {
+        [t] => (t, None),
+        [t, b] => (t, Some(b)),
+        _ => {
+            return Err(fail(
+                "usage: trace_validate <trace.json> [BENCH_serve.json]",
+            ))
+        }
+    };
+    check_trace(trace)?;
+    if let Some(b) = bench {
+        check_bench(b)?;
+    }
+    Ok(())
+}
+
+fn main() {
+    if let Err(e) = run() {
+        normtweak::log_error!("trace_validate", "{e}");
+        std::process::exit(1);
+    }
+}

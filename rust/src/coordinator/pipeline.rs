@@ -12,10 +12,12 @@ use std::time::Instant;
 use crate::calib::CalibSet;
 use crate::error::{Error, Result};
 use crate::model::{ModelWeights, QuantLinear, QuantizedBlock, QuantizedModel};
+use crate::obs::global;
 use crate::quant::quantizer::{resolve, LayerContext, Quantizer, QuantizerParams};
 use crate::quant::{QuantScheme, QuantizedWeight};
 use crate::runtime::{ArtifactManifest, Runtime};
 use crate::tensor::{mean_var_channels, pack_codes, Tensor};
+use crate::util::json;
 use crate::tweak::tweaker::{LossKind, TweakTarget};
 use crate::tweak::{LayerLrScheduler, TweakConfig, Tweaker};
 
@@ -186,28 +188,46 @@ pub fn quantize_model(
         ..Default::default()
     };
 
+    // ---- tracing: one `pipeline` track, phase spans per layer ------------
+    let trace = runtime.trace().map(|t| (t.clone(), t.track("pipeline")));
+    let layer_arg = |layer: usize| vec![("layer", json::n(layer as f64))];
+
     // line 1 (calibration data) happened upstream; set up the two streams
     let mut x_f = fm.embed(&calib.tokens)?; // float stream
     let mut x_q = x_f.clone();              // quantized stream (Alg. 1 line 6)
 
     for layer in 0..mcfg.n_layer {
         let t_layer = Instant::now();
+        let ts_layer = trace.as_ref().map(|(t, _)| t.now());
         let scheme = cfg.scheme_for(layer);
 
         // ---- float output + targets (Alg. 1 line 8) -------------------------
         let y_f = fm.block_fwd(layer, &x_f)?;
         let (mu_f, var_f) = fm.channel_stats(&y_f)?;
+        if let Some((t, tid)) = &trace {
+            t.complete(*tid, "float_ref", ts_layer.unwrap_or(0), layer_arg(layer));
+        }
 
         // ---- quantize the four linears (Alg. 1 line 9) ----------------------
         // One trait call replaces the per-method dispatch: the plugin pulls
         // taps/Hessians lazily and folds norm scales through the context.
+        let ts_quant = trace.as_ref().map(|(t, _)| t.now());
         let bw = weights.block(layer)?;
         let mut ctx = LayerContext::new(&fm, layer, &x_q, bw, scheme);
         let bq = quantizer.quantize_layer(&mut ctx)?;
         let norms = ctx.into_norms();
         let quant_millis = t_layer.elapsed().as_millis();
+        if let Some((t, tid)) = &trace {
+            let mut args = layer_arg(layer);
+            args.push(("method", json::s(quantizer.name())));
+            t.complete(*tid, "quantize", ts_quant.unwrap_or(0), args);
+        }
+        global()
+            .histogram("pipeline.quant_us")
+            .record(t_layer.elapsed().as_micros().min(u128::from(u64::MAX)) as u64);
 
         // ---- assemble the quantized block (Alg. 1 line 10: freeze linears) --
+        let ts_pack = trace.as_ref().map(|(t, _)| t.now());
         let mut blk = QuantizedBlock {
             ln1_g: norms.ln1_g,
             ln1_b: norms.ln1_b,
@@ -218,9 +238,13 @@ pub fn quantize_model(
             fc1: to_quant_linear(bq.fc1, bw.bfc1.clone(), &scheme)?,
             fc2: to_quant_linear(bq.fc2, bw.bfc2.clone(), &scheme)?,
         };
+        if let Some((t, tid)) = &trace {
+            t.complete(*tid, "pack", ts_pack.unwrap_or(0), layer_arg(layer));
+        }
 
         // ---- norm tweaking (Alg. 1 lines 11-15) ------------------------------
         let t_tweak = Instant::now();
+        let ts_tweak = trace.as_ref().map(|(t, _)| t.now());
         let mut loss_before = None;
         let mut loss_after = None;
         let mut lr_used = None;
@@ -239,8 +263,17 @@ pub fn quantize_model(
             lr_used = Some(lr);
         }
         let tweak_millis = t_tweak.elapsed().as_millis();
+        if cfg.tweak.is_some() {
+            if let Some((t, tid)) = &trace {
+                t.complete(*tid, "tweak", ts_tweak.unwrap_or(0), layer_arg(layer));
+            }
+            global()
+                .histogram("pipeline.tweak_us")
+                .record(t_tweak.elapsed().as_micros().min(u128::from(u64::MAX)) as u64);
+        }
 
         // ---- advance the two streams (Alg. 1 lines 4-7) ----------------------
+        let ts_adv = trace.as_ref().map(|(t, _)| t.now());
         qmodel.blocks.push(blk);
         let qm_view = QuantModel::new(runtime, &qmodel)?;
         let y_q = qm_view.block_fwd_q(layer, &x_q)?;
@@ -259,12 +292,23 @@ pub fn quantize_model(
             .sum::<f32>()
             / d as f32;
 
-        if std::env::var_os("NT_QUIET").is_none() {
-            eprintln!(
-                "[pipeline] layer {layer}: Δμ={delta_mu:.5} loss {loss_before:?} -> \
-                 {loss_after:?} ({quant_millis} ms quant, {tweak_millis} ms tweak)"
+        if let Some((t, tid)) = &trace {
+            t.complete(*tid, "advance", ts_adv.unwrap_or(0), layer_arg(layer));
+            let mut args = layer_arg(layer);
+            args.push(("delta_mu", json::n(f64::from(delta_mu))));
+            t.complete_at(
+                *tid,
+                "layer",
+                ts_layer.unwrap_or(0),
+                t.now().saturating_sub(ts_layer.unwrap_or(0)),
+                args,
             );
         }
+        crate::log_info!(
+            "pipeline",
+            "layer {layer}: Δμ={delta_mu:.5} loss {loss_before:?} -> \
+             {loss_after:?} ({quant_millis} ms quant, {tweak_millis} ms tweak)"
+        );
         metrics.layers.push(LayerMetrics {
             layer,
             delta_mu,

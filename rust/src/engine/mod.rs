@@ -64,6 +64,29 @@
 //! [`Client`]s obtained before `start()` buffer their submissions until the
 //! scheduler comes up.
 //!
+//! # Observability
+//!
+//! Three layers, all rooted in [`crate::obs`]:
+//!
+//! * **Shutdown stats** — [`EngineStats`] / [`ModelStats`] counters plus
+//!   per-phase latency histograms (`queue_us`, `prefill_us`,
+//!   `decode_step_us`, `e2e_us`): engine-measured p50/p90/p99 per lane,
+//!   which `bench_serve` reports instead of client-side timings.
+//! * **Live gauges** — [`Client::stats_snapshot`] polls per-lane queue
+//!   depth, slot occupancy, and served count ([`LaneSnapshot`]) at any
+//!   moment, without pausing or shutting the engine down.
+//! * **Traces** — [`EngineBuilder::trace`] attaches a
+//!   [`crate::obs::TraceCollector`]; the scheduler then emits the request
+//!   lifecycle (`submit` → `admit` → prefill span → per-step decode spans
+//!   → `retire`, plus an async span per request keyed by its admission
+//!   seq) onto a `scheduler` track and per-lane `lane:<name>/prefill` /
+//!   `lane:<name>/decode` tracks.  Export with
+//!   [`crate::obs::TraceCollector::write_chrome`] and load the file in
+//!   `chrome://tracing` or Perfetto (`normtweak serve --trace out.json`).
+//!
+//! Progress narration goes through the leveled logger (`NORMTWEAK_LOG`,
+//! see [`crate::obs::log`]); the engine itself never prints.
+//!
 //! # Migration from `serve::serve_loop`
 //!
 //! The old free-function loop survives as a deprecated single-model shim on
@@ -80,13 +103,15 @@ use std::time::{Duration, Instant};
 use crate::error::{Error, Result};
 use crate::eval::LanguageModel;
 use crate::model::{ModelConfig, QuantizedModel};
+use crate::obs::trace::TraceCollector;
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 
 pub use crate::eval::generate::SampleConfig;
-pub use stats::{EngineStats, ModelStats};
+pub use stats::{EngineStats, LaneSnapshot, ModelStats};
 
 use scheduler::{Lane, Msg, Pending, ReplyTo, Scheduler};
+use stats::LaneGauges;
 
 /// Per-model batching knobs (the engine-side analog of
 /// [`crate::serve::ServeConfig`]).
@@ -239,6 +264,7 @@ impl Drop for Ticket {
 pub struct Client {
     tx: mpsc::Sender<Msg>,
     names: Arc<Vec<String>>,
+    gauges: Arc<Vec<Arc<LaneGauges>>>,
 }
 
 impl Client {
@@ -284,6 +310,17 @@ impl Client {
     pub fn models(&self) -> &[String] {
         &self.names
     }
+
+    /// Live per-lane stats — queue depth, slot occupancy, served count —
+    /// readable at any moment without pausing or shutting the engine down
+    /// (one [`LaneSnapshot`] per registered model, in registration order).
+    ///
+    /// The scheduler publishes after each work cycle with relaxed atomics,
+    /// so the snapshot is loosely consistent: each field is a real recent
+    /// value, but the set may straddle a cycle.  All-zero until `start()`.
+    pub fn stats_snapshot(&self) -> Vec<LaneSnapshot> {
+        self.gauges.iter().map(|g| g.snapshot()).collect()
+    }
 }
 
 /// A model factory: runs inside the scheduler thread at `start()`, so the
@@ -295,11 +332,12 @@ pub struct EngineBuilder {
     models: Vec<(String, ModelTuning, ModelFactory)>,
     cache: usize,
     warmup: bool,
+    trace: Option<Arc<TraceCollector>>,
 }
 
 impl Default for EngineBuilder {
     fn default() -> Self {
-        EngineBuilder { models: Vec::new(), cache: 0, warmup: true }
+        EngineBuilder { models: Vec::new(), cache: 0, warmup: true, trace: None }
     }
 }
 
@@ -334,6 +372,17 @@ impl EngineBuilder {
         self
     }
 
+    /// Attach a trace collector: the scheduler records the request
+    /// lifecycle (submit/admit/prefill/decode/retire spans, one track per
+    /// lane) into it while serving.  Share the same `Arc` with
+    /// [`ServableModel::with_trace`] to land per-graph XLA spans on the
+    /// same timeline, and export it after shutdown with
+    /// [`TraceCollector::write_chrome`].
+    pub fn trace(mut self, trace: Arc<TraceCollector>) -> Self {
+        self.trace = Some(trace);
+        self
+    }
+
     /// Validate and assemble the engine.
     pub fn build(self) -> Result<Engine> {
         if self.models.is_empty() {
@@ -349,11 +398,25 @@ impl EngineBuilder {
             tuning.validate(name)?;
         }
         let names = Arc::new(self.models.iter().map(|(n, _, _)| n.clone()).collect::<Vec<_>>());
+        let gauges: Arc<Vec<Arc<LaneGauges>>> = Arc::new(
+            self.models
+                .iter()
+                .map(|(n, t, _)| Arc::new(LaneGauges::new(n.clone(), t.max_batch)))
+                .collect(),
+        );
         let (tx, rx) = mpsc::channel();
         Ok(Engine {
             tx,
             names,
-            boot: Some(Boot { rx, models: self.models, cache: self.cache, warmup: self.warmup }),
+            gauges: gauges.clone(),
+            boot: Some(Boot {
+                rx,
+                models: self.models,
+                cache: self.cache,
+                warmup: self.warmup,
+                trace: self.trace,
+                gauges,
+            }),
             handle: None,
         })
     }
@@ -365,6 +428,8 @@ struct Boot {
     models: Vec<(String, ModelTuning, ModelFactory)>,
     cache: usize,
     warmup: bool,
+    trace: Option<Arc<TraceCollector>>,
+    gauges: Arc<Vec<Arc<LaneGauges>>>,
 }
 
 /// An owned multi-model serving engine.  See the module docs for the
@@ -372,6 +437,7 @@ struct Boot {
 pub struct Engine {
     tx: mpsc::Sender<Msg>,
     names: Arc<Vec<String>>,
+    gauges: Arc<Vec<Arc<LaneGauges>>>,
     boot: Option<Boot>,
     handle: Option<std::thread::JoinHandle<EngineStats>>,
 }
@@ -384,7 +450,7 @@ impl Engine {
     /// A submission handle.  Valid before `start()` too — submissions
     /// buffer until the scheduler comes up (warm-up always precedes them).
     pub fn client(&self) -> Client {
-        Client { tx: self.tx.clone(), names: self.names.clone() }
+        Client { tx: self.tx.clone(), names: self.names.clone(), gauges: self.gauges.clone() }
     }
 
     /// Spawn the scheduler thread: build every registered model from its
@@ -399,7 +465,7 @@ impl Engine {
         let handle = std::thread::Builder::new()
             .name("nt-engine".into())
             .spawn(move || {
-                let Boot { rx, models, cache, warmup } = boot;
+                let Boot { rx, models, cache, warmup, trace, gauges } = boot;
                 let mut built: Vec<(String, ModelTuning, Box<dyn LanguageModel>)> = Vec::new();
                 for (name, tuning, factory) in models {
                     match factory() {
@@ -417,6 +483,13 @@ impl Engine {
                     .map(|(n, t, m)| Lane::new(n.clone(), m.as_ref(), *t))
                     .collect();
                 let mut sched = Scheduler::new(lanes, rx, cache);
+                // gauges + trace attach before warm-up so warm-up batches
+                // are traced and the client's snapshot handles are the
+                // cells the scheduler actually writes
+                sched.set_gauges(gauges.iter().cloned().collect());
+                if let Some(tr) = trace {
+                    sched.set_trace(tr);
+                }
                 if warmup {
                     if let Err(e) = sched.warm_up() {
                         let _ = ready_tx.send(Err(e));
@@ -495,6 +568,15 @@ impl ServableModel {
     /// Serve with dynamic activation fake-quant (the W+A modes).
     pub fn with_act_bits(mut self, bits: Option<u8>) -> Self {
         self.act_bits = bits;
+        self
+    }
+
+    /// Record per-graph XLA execution spans into `trace` (the `xla`
+    /// track, one span per runtime call named by graph family).  Pass the
+    /// same `Arc` given to [`EngineBuilder::trace`] to interleave graph
+    /// timings with the scheduler lifecycle on one timeline.
+    pub fn with_trace(mut self, trace: Arc<TraceCollector>) -> Self {
+        self.runtime.set_trace(trace);
         self
     }
 

@@ -45,9 +45,11 @@ use crate::calib::rng::SplitMix64;
 use crate::error::{Error, Result};
 use crate::eval::generate::{sample_next, SampleConfig};
 use crate::eval::{DecodeSession, LanguageModel};
+use crate::obs::trace::TraceCollector;
+use crate::util::json;
 
 use super::cache::ResponseCache;
-use super::stats::{EngineStats, ModelStats};
+use super::stats::{EngineStats, LaneGauges, ModelStats};
 use super::{EngineResponse, ModelTuning};
 
 /// Where a finished request is answered.
@@ -145,6 +147,11 @@ fn dispatch_due(p: &Pending) -> Option<Instant> {
     })
 }
 
+/// Clamp a `u128` microsecond reading into the histogram's `u64` domain.
+fn micros_u64(us: u128) -> u64 {
+    us.min(u128::from(u64::MAX)) as u64
+}
+
 /// Outcome of checking a rider's cancel flag and deadline.
 enum Triage {
     Live,
@@ -204,6 +211,8 @@ struct Slot {
     batch_seen: usize,
     /// a generation call this slot rode failed; answered at retirement
     failed: Option<String>,
+    /// admission number (trace span pairing id)
+    seq: u64,
 }
 
 impl Slot {
@@ -226,10 +235,15 @@ pub(crate) struct Lane<'m> {
     queue: Vec<Pending>,
     active: Vec<Slot>,
     pub(crate) stats: ModelStats,
+    /// live gauges (queue depth, slot occupancy, served) published for
+    /// `Client::stats_snapshot`; the engine swaps in its shared set via
+    /// [`Scheduler::set_gauges`], the `serve_loop` shim keeps this default
+    pub(crate) gauges: Arc<LaneGauges>,
 }
 
 impl<'m> Lane<'m> {
     pub(crate) fn new(name: String, model: &'m dyn LanguageModel, tuning: ModelTuning) -> Self {
+        let gauges = Arc::new(LaneGauges::new(name.clone(), tuning.max_batch));
         Lane {
             name,
             model,
@@ -237,6 +251,7 @@ impl<'m> Lane<'m> {
             queue: Vec::new(),
             active: Vec::new(),
             stats: ModelStats::default(),
+            gauges,
         }
     }
 
@@ -245,6 +260,13 @@ impl<'m> Lane<'m> {
     fn chunk_cap(&self) -> usize {
         self.model.max_batch().unwrap_or(usize::MAX).max(1)
     }
+}
+
+/// Trace track ids, resolved once at [`Scheduler::set_trace`]: the shared
+/// scheduler lifecycle track plus one (prefill, decode) pair per lane.
+struct SchedTracks {
+    sched: u64,
+    lanes: Vec<(u64, u64)>,
 }
 
 /// The multi-lane continuous-batching scheduler.
@@ -258,11 +280,60 @@ pub(crate) struct Scheduler<'m> {
     /// without waiting for batch windows, then exit
     draining: bool,
     seq: u64,
+    /// trace collector (`None` = tracing disabled, zero overhead)
+    trace: Option<Arc<TraceCollector>>,
+    tracks: Option<SchedTracks>,
 }
 
 impl<'m> Scheduler<'m> {
     pub(crate) fn new(lanes: Vec<Lane<'m>>, rx: mpsc::Receiver<Msg>, cache_cap: usize) -> Self {
-        Scheduler { lanes, rx, cache: ResponseCache::new(cache_cap), rr: 0, draining: false, seq: 0 }
+        Scheduler {
+            lanes,
+            rx,
+            cache: ResponseCache::new(cache_cap),
+            rr: 0,
+            draining: false,
+            seq: 0,
+            trace: None,
+            tracks: None,
+        }
+    }
+
+    /// Attach a trace collector: request lifecycle instants land on the
+    /// `scheduler` track, dispatch spans on `lane:<name>/prefill` and
+    /// `lane:<name>/decode`.  Call before [`Scheduler::warm_up`] so
+    /// warm-up batches are traced too.
+    pub(crate) fn set_trace(&mut self, trace: Arc<TraceCollector>) {
+        let sched = trace.track("scheduler");
+        let lanes = self
+            .lanes
+            .iter()
+            .map(|l| {
+                (
+                    trace.track(&format!("lane:{}/prefill", l.name)),
+                    trace.track(&format!("lane:{}/decode", l.name)),
+                )
+            })
+            .collect();
+        self.tracks = Some(SchedTracks { sched, lanes });
+        self.trace = Some(trace);
+    }
+
+    /// Swap in the engine's shared per-lane gauges (one per lane, in lane
+    /// order) so `Client::stats_snapshot` observes this scheduler.
+    pub(crate) fn set_gauges(&mut self, gauges: Vec<Arc<LaneGauges>>) {
+        for (lane, g) in self.lanes.iter_mut().zip(gauges) {
+            lane.gauges = g;
+        }
+    }
+
+    /// Publish queue depth / slot occupancy / served onto the lane gauges.
+    fn publish_gauges(&self) {
+        for lane in &self.lanes {
+            lane.gauges.queue_depth.store(lane.queue.len(), Ordering::Relaxed);
+            lane.gauges.active_slots.store(lane.active.len(), Ordering::Relaxed);
+            lane.gauges.served.store(lane.stats.served, Ordering::Relaxed);
+        }
     }
 
     /// Run one priming batch per model/bucket so the first real riders do
@@ -271,7 +342,7 @@ impl<'m> Scheduler<'m> {
     /// step graphs compile during warm-up too, not under the first rider.
     pub(crate) fn warm_up(&mut self) -> Result<()> {
         let sample = SampleConfig { temperature: 0.0, stochastic_prefix: 0, seed: 0 };
-        for lane in &mut self.lanes {
+        for (li, lane) in self.lanes.iter_mut().enumerate() {
             let mut buckets: Vec<usize> =
                 lane.model.warm_buckets().into_iter().filter(|&b| b > 0).collect();
             buckets.sort_unstable();
@@ -282,6 +353,7 @@ impl<'m> Scheduler<'m> {
             let target = depth.min(cfg.seq);
             for b in buckets {
                 let prompts = vec![vec![tok]; b];
+                let ts = self.trace.as_ref().map(|t| t.now());
                 crate::eval::generate::generate(lane.model, &prompts, target, &sample)
                     .map_err(|e| {
                         Error::Serve(format!(
@@ -289,6 +361,14 @@ impl<'m> Scheduler<'m> {
                             lane.name
                         ))
                     })?;
+                if let (Some(tr), Some(tk)) = (&self.trace, &self.tracks) {
+                    tr.complete(
+                        tk.lanes[li].0,
+                        "warmup",
+                        ts.unwrap_or(0),
+                        vec![("bucket", json::n(b as f64))],
+                    );
+                }
                 lane.stats.warmup_batches += 1;
             }
         }
@@ -324,6 +404,7 @@ impl<'m> Scheduler<'m> {
                 self.step(li);
                 worked = true;
             }
+            self.publish_gauges();
             if worked {
                 continue;
             }
@@ -341,6 +422,7 @@ impl<'m> Scheduler<'m> {
                         Err(_) => break,
                     }
                 }
+                self.publish_gauges();
                 return self.finish();
             }
 
@@ -417,8 +499,11 @@ impl<'m> Scheduler<'m> {
                 lane.stats.cache_hits += 1;
                 lane.stats.served += 1;
                 lane.stats.total_queue_micros += queue_micros;
+                lane.stats.queue_us.record(micros_u64(queue_micros));
+                lane.stats.e2e_us.record(micros_u64(queue_micros));
+                let name = lane.name.clone();
                 p.reply.ok(EngineResponse {
-                    model: lane.name.clone(),
+                    model: name.clone(),
                     prompt_len: p.prompt.len(),
                     tokens,
                     queue_micros,
@@ -426,17 +511,32 @@ impl<'m> Scheduler<'m> {
                     batch_size: 0,
                     cached: true,
                 });
+                if let (Some(tr), Some(tk)) = (&self.trace, &self.tracks) {
+                    tr.instant(
+                        tk.sched,
+                        "cache_hit",
+                        vec![("model", json::s(name)), ("seq", json::n(p.seq as f64))],
+                    );
+                }
                 return;
             }
             // the miss is counted at retirement, so a request that is
             // later cancelled or expires doesn't skew the hit rate of
             // answered traffic
         }
+        let seq = p.seq;
+        let lane_idx = p.lane;
         let lane = &mut self.lanes[p.lane];
         let window = lane.tuning.batch_window;
         let key = sort_key(&p, window);
         let pos = lane.queue.partition_point(|q| sort_key(q, window) <= key);
         lane.queue.insert(pos, p);
+        if let (Some(tr), Some(tk)) = (&self.trace, &self.tracks) {
+            let name = &self.lanes[lane_idx].name;
+            let args = vec![("model", json::s(name.clone())), ("seq", json::n(seq as f64))];
+            tr.instant(tk.sched, "submit", args.clone());
+            tr.async_begin(tk.sched, "request", seq, args);
+        }
     }
 
     /// Drop cancelled requests and answer expired deadlines with an error.
@@ -566,6 +666,8 @@ impl<'m> Scheduler<'m> {
                 let lane = &mut self.lanes[li];
                 lane.stats.served += 1;
                 lane.stats.total_queue_micros += queue_micros;
+                lane.stats.queue_us.record(micros_u64(queue_micros));
+                lane.stats.e2e_us.record(micros_u64(queue_micros));
                 let prompt_len = p.prompt.len();
                 p.reply.ok(EngineResponse {
                     model: lane.name.clone(),
@@ -620,11 +722,31 @@ impl<'m> Scheduler<'m> {
         let chunk = live;
         let bs = chunk.len();
         let prompts: Vec<Vec<i32>> = chunk.iter().map(|p| p.prompt.clone()).collect();
+        if let (Some(tr), Some(tk)) = (&self.trace, &self.tracks) {
+            for p in &chunk {
+                tr.instant(tk.sched, "admit", vec![("seq", json::n(p.seq as f64))]);
+            }
+        }
         let model = self.lanes[li].model;
         let seq = model.config().seq;
+        let trace_start = self.trace.as_ref().map(|t| t.now());
         let t0 = Instant::now();
         let result = model.prefill(&prompts);
         let gen = t0.elapsed().as_micros();
+        if let (Some(tr), Some(tk)) = (&self.trace, &self.tracks) {
+            tr.complete(
+                tk.lanes[li].0,
+                "prefill",
+                trace_start.unwrap_or(0),
+                vec![
+                    ("batch", json::n(bs as f64)),
+                    (
+                        "tokens",
+                        json::n(prompts.iter().map(|p| p.len()).sum::<usize>() as f64),
+                    ),
+                ],
+            );
+        }
         match result {
             Ok(sessions) => {
                 {
@@ -632,11 +754,15 @@ impl<'m> Scheduler<'m> {
                     stats.batches += 1;
                     stats.total_gen_micros += gen;
                     stats.total_prefill_micros += gen;
+                    stats.prefill_us.record(micros_u64(gen));
                     stats.prefill_tokens +=
                         prompts.iter().map(|p| p.len() as u128).sum::<u128>();
                     stats.max_batch_seen = stats.max_batch_seen.max(bs);
                 }
                 for (p, session) in chunk.into_iter().zip(sessions) {
+                    let queue_micros =
+                        t_drain.saturating_duration_since(p.enqueued).as_micros();
+                    self.lanes[li].stats.queue_us.record(micros_u64(queue_micros));
                     let mut slot = Slot {
                         prompt_len: p.prompt.len(),
                         max_new: p.max_new,
@@ -647,12 +773,11 @@ impl<'m> Scheduler<'m> {
                         deadline: p.deadline,
                         reply: p.reply,
                         cancel: p.cancel,
-                        queue_micros: t_drain
-                            .saturating_duration_since(p.enqueued)
-                            .as_micros(),
+                        queue_micros,
                         gen_micros: gen,
                         batch_seen: bs,
                         failed: None,
+                        seq: p.seq,
                         session,
                     };
                     slot.advance();
@@ -700,6 +825,7 @@ impl<'m> Scheduler<'m> {
         while start < n {
             let end = start.saturating_add(cap).min(n);
             let bs = end - start;
+            let trace_start = self.trace.as_ref().map(|t| t.now());
             let t0 = Instant::now();
             let result = {
                 let chunk = &mut self.lanes[li].active[start..end];
@@ -708,12 +834,21 @@ impl<'m> Scheduler<'m> {
                 model.decode_step(&mut refs)
             };
             let dt = t0.elapsed().as_micros();
+            if let (Some(tr), Some(tk)) = (&self.trace, &self.tracks) {
+                tr.complete(
+                    tk.lanes[li].1,
+                    "decode_step",
+                    trace_start.unwrap_or(0),
+                    vec![("batch", json::n(bs as f64))],
+                );
+            }
             let lane = &mut self.lanes[li];
             match result {
                 Ok(()) => {
                     lane.stats.decode_steps += 1;
                     lane.stats.total_gen_micros += dt;
                     lane.stats.total_decode_micros += dt;
+                    lane.stats.decode_step_us.record(micros_u64(dt));
                     lane.stats.decode_tokens += bs as u128;
                     lane.stats.max_batch_seen = lane.stats.max_batch_seen.max(bs);
                     for slot in &mut lane.active[start..end] {
@@ -763,9 +898,11 @@ impl<'m> Scheduler<'m> {
             max_new,
             sample,
             reply,
+            enqueued,
             queue_micros,
             gen_micros,
             batch_seen,
+            seq,
             ..
         } = slot;
         let tokens = session.tokens;
@@ -774,9 +911,11 @@ impl<'m> Scheduler<'m> {
             self.cache
                 .insert((li, tokens[..prompt_len].to_vec(), max_new), tokens.clone());
         }
+        let e2e = Instant::now().saturating_duration_since(enqueued).as_micros();
         let lane = &mut self.lanes[li];
         lane.stats.served += 1;
         lane.stats.total_queue_micros += queue_micros;
+        lane.stats.e2e_us.record(micros_u64(e2e));
         reply.ok(EngineResponse {
             model: lane.name.clone(),
             prompt_len,
@@ -786,6 +925,10 @@ impl<'m> Scheduler<'m> {
             batch_size: batch_seen,
             cached: false,
         });
+        if let (Some(tr), Some(tk)) = (&self.trace, &self.tracks) {
+            tr.instant(tk.sched, "retire", vec![("seq", json::n(seq as f64))]);
+            tr.async_end(tk.sched, "request", seq);
+        }
     }
 
     /// How long the scheduler may sleep before a window closes or a

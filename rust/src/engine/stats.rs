@@ -16,6 +16,9 @@
 //! token-generation throughput separately.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::obs::Hist;
 
 /// Counters for one registered model (one scheduler lane).
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
@@ -61,6 +64,14 @@ pub struct ModelStats {
     /// answered with a generic error; the root cause is preserved here —
     /// the deprecated `serve_loop` shim re-surfaces it as its return)
     pub first_error: Option<String>,
+    /// submit→dispatch wait per answered request (µs)
+    pub queue_us: Hist,
+    /// wall time per prefill dispatch (µs)
+    pub prefill_us: Hist,
+    /// wall time per decode-step dispatch (µs)
+    pub decode_step_us: Hist,
+    /// submit→answer end-to-end time per served request (µs)
+    pub e2e_us: Hist,
 }
 
 impl ModelStats {
@@ -117,6 +128,22 @@ impl ModelStats {
 
     /// Project onto the legacy [`crate::serve::ServeStats`] shape (what the
     /// deprecated `serve::serve_loop` shim returns).
+    ///
+    /// **This projection is lossy.**  `ServeStats` predates the engine and
+    /// keeps only the five aggregate counters below; everything the engine
+    /// added is dropped:
+    ///
+    /// * `first_error` — a lane that failed mid-run projects to clean
+    ///   aggregates.  Callers that care must read it off `ModelStats`
+    ///   directly (as `serve_loop` and `bench_serve` do) before
+    ///   projecting.
+    /// * the prefill/decode split — `total_prefill_micros` /
+    ///   `total_decode_micros` and the matching token counters collapse
+    ///   into the combined `total_gen_micros`.
+    /// * the latency histograms (`queue_us` / `prefill_us` /
+    ///   `decode_step_us` / `e2e_us`) and every outcome counter other than
+    ///   `served` (`cancelled`, `deadline_missed`, `rejected`, `failed`,
+    ///   cache hit/miss counts, `warmup_batches`).
     pub fn to_serve_stats(&self) -> crate::serve::ServeStats {
         crate::serve::ServeStats {
             served: self.served,
@@ -125,6 +152,64 @@ impl ModelStats {
             total_queue_micros: self.total_queue_micros,
             max_batch_seen: self.max_batch_seen,
         }
+    }
+}
+
+/// Live per-lane gauges, written by the scheduler as it runs and readable
+/// at any moment through [`crate::engine::Client::stats_snapshot`] —
+/// no shutdown required.  Relaxed atomics: each value is independently
+/// coherent, the set is only loosely consistent (fine for polling).
+#[derive(Debug)]
+pub(crate) struct LaneGauges {
+    pub(crate) model: String,
+    pub(crate) max_slots: usize,
+    pub(crate) queue_depth: AtomicUsize,
+    pub(crate) active_slots: AtomicUsize,
+    pub(crate) served: AtomicUsize,
+}
+
+impl LaneGauges {
+    pub(crate) fn new(model: String, max_slots: usize) -> Self {
+        LaneGauges {
+            model,
+            max_slots,
+            queue_depth: AtomicUsize::new(0),
+            active_slots: AtomicUsize::new(0),
+            served: AtomicUsize::new(0),
+        }
+    }
+
+    pub(crate) fn snapshot(&self) -> LaneSnapshot {
+        LaneSnapshot {
+            model: self.model.clone(),
+            max_slots: self.max_slots,
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            active_slots: self.active_slots.load(Ordering::Relaxed),
+            served: self.served.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time view of one scheduler lane, from
+/// [`crate::engine::Client::stats_snapshot`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LaneSnapshot {
+    /// registered model name
+    pub model: String,
+    /// continuous-batching slot budget (`ModelTuning::max_batch`)
+    pub max_slots: usize,
+    /// requests waiting in the lane queue
+    pub queue_depth: usize,
+    /// live decode sessions occupying slots
+    pub active_slots: usize,
+    /// requests answered with tokens so far
+    pub served: usize,
+}
+
+impl LaneSnapshot {
+    /// Requests inside the engine right now (queued + occupying slots).
+    pub fn in_flight(&self) -> usize {
+        self.queue_depth + self.active_slots
     }
 }
 
@@ -231,5 +316,32 @@ mod tests {
         assert_eq!(legacy.total_gen_micros, 123);
         assert_eq!(legacy.total_queue_micros, 456);
         assert_eq!(legacy.max_batch_seen, 3);
+    }
+
+    #[test]
+    fn latency_histograms_record_and_clone() {
+        let mut s = ModelStats::default();
+        s.queue_us.record(10);
+        s.e2e_us.record(250);
+        s.e2e_us.record(300);
+        let copy = s.clone();
+        assert_eq!(copy, s);
+        assert_eq!(copy.e2e_us.count(), 2);
+        assert!(copy.prefill_us.is_empty());
+    }
+
+    #[test]
+    fn lane_gauges_snapshot_reads_live_values() {
+        let g = LaneGauges::new("w4".into(), 8);
+        g.queue_depth.store(3, Ordering::Relaxed);
+        g.active_slots.store(2, Ordering::Relaxed);
+        g.served.store(11, Ordering::Relaxed);
+        let snap = g.snapshot();
+        assert_eq!(snap.model, "w4");
+        assert_eq!(snap.max_slots, 8);
+        assert_eq!(snap.queue_depth, 3);
+        assert_eq!(snap.active_slots, 2);
+        assert_eq!(snap.served, 11);
+        assert_eq!(snap.in_flight(), 5);
     }
 }

@@ -38,6 +38,7 @@ pub mod engine;
 pub mod error;
 pub mod eval;
 pub mod model;
+pub mod obs;
 pub mod policy;
 pub mod quant;
 pub mod report;

@@ -16,11 +16,14 @@
 #![warn(clippy::unwrap_used)]
 #![cfg_attr(test, allow(clippy::unwrap_used))]
 
+use std::sync::Arc;
+
 use normtweak::analysis;
 use normtweak::calib::vocab::BOS;
 use normtweak::coordinator::{build_calib, quantize_model, FloatModel, PipelineConfig, QuantModel};
 use normtweak::eval::{lambada, ppl, subjective, tasks};
 use normtweak::model::{ModelConfig, ModelWeights, QuantizedModel};
+use normtweak::obs::trace::TraceCollector;
 use normtweak::policy::{
     BitBudgetPlanner, SensitivityConfig, SensitivityProfile, SensitivityProfiler,
 };
@@ -37,13 +40,14 @@ const GLOBAL_FLAGS: &[&str] = &["config", "model", "artifacts"];
 fn allowed_flags(cmd: &str) -> Option<&'static [&'static str]> {
     match cmd {
         "quantize" => Some(&["method", "bits", "group", "layer-bits", "no-tweak",
-                             "calib", "out", "auto-bits", "profile", "deep-check"]),
+                             "calib", "out", "auto-bits", "profile", "deep-check",
+                             "trace"]),
         "plan" => Some(&["method", "bits", "group", "calib", "target-bits",
                          "candidates", "loss", "profile", "out"]),
         "eval" => Some(&["checkpoint", "float", "ppl", "tasks"]),
         "generate" => Some(&["n", "len"]),
         "serve" => Some(&["checkpoint", "requests", "clients", "models",
-                          "deadline-ms", "cache", "deep-check"]),
+                          "deadline-ms", "cache", "deep-check", "trace"]),
         "check" => Some(&["ckpt", "manifest", "scheme", "layer-bits", "no-tweak",
                           "profile", "target-bits", "serve-config", "models",
                           "graphs", "format", "deny-warnings"]),
@@ -135,6 +139,7 @@ USAGE:
                      [--group 0] [--layer-bits 0:8,11:8] [--no-tweak]
                      [--auto-bits 2.25] [--profile sensitivity.json]
                      [--calib gen-v2] [--out path] [--deep-check]
+                     [--trace trace.json]
   normtweak plan     --target-bits 2.25 [--model M] [--method gptq] [--bits 2]
                      [--group 64] [--candidates 2,3,4,8] [--loss dist]
                      [--calib gen-v2] [--profile path] [--out sensitivity.json]
@@ -143,7 +148,7 @@ USAGE:
   normtweak generate [--model M] [--n 4] [--len 48]
   normtweak serve    [--checkpoint path | --models w4=a.ntz,w2=b.ntz]
                      [--requests 64] [--clients 4] [--deadline-ms 500]
-                     [--cache 256] [--deep-check]
+                     [--cache 256] [--deep-check] [--trace trace.json]
   normtweak check    [--manifest DIR] [--ckpt quantized.ntz]
                      [--scheme gptq:w4g64] [--layer-bits 0:8,3:2] [--no-tweak]
                      [--profile sensitivity.json] [--target-bits 2.25]
@@ -188,6 +193,19 @@ PRE-FLIGHT CHECK:
   decode spec [H, S, dh], per-row pos i32[B] decode contracts, scalar
   tweak losses). `quantize --deep-check` and `serve --deep-check` run the
   same pass as an opt-in startup preflight.
+
+OBSERVABILITY:
+  Progress narration goes to stderr through a leveled logger; set
+  NORMTWEAK_LOG=error|warn|info|debug to tune it (unset + NT_QUIET maps
+  to warn). `quantize --trace out.json` records per-layer pipeline phase
+  spans (float ref, quantize, pack, tweak — with per-iteration tweak-loss
+  counter samples) plus per-graph XLA compile/execute timings;
+  `serve --trace out.json` records the engine request lifecycle
+  (submit -> admit -> prefill -> per-step decode -> retire, one track per
+  lane). Exports are Chrome trace-event JSON: load them in
+  chrome://tracing or ui.perfetto.dev. `normtweak check` diagnostics ride
+  the same logger on stderr, so `--format json` stdout stays
+  machine-clean.
 ";
 
 /// A reused `sensitivity.json` must actually describe the model being
@@ -243,9 +261,33 @@ fn print_method_table() {
     );
 }
 
+/// Build the `--trace` collector when the flag is present.  The same
+/// collector threads through the runtime / engine; [`write_trace`] exports
+/// it at command exit, so an accepted `--trace` flag always produces a
+/// file.
+fn init_trace(args: &Args) -> Option<(Arc<TraceCollector>, String)> {
+    args.get("trace").map(|path| {
+        (
+            Arc::new(TraceCollector::new(normtweak::obs::trace::DEFAULT_CAPACITY)),
+            path.to_string(),
+        )
+    })
+}
+
+/// Export the collected Chrome trace (global metrics snapshot embedded
+/// under the viewer-ignored `metrics` key) to `path`.
+fn write_trace(tc: &TraceCollector, path: &str) -> normtweak::Result<()> {
+    tc.write_chrome(
+        std::path::Path::new(path),
+        Some(&normtweak::obs::global().snapshot()),
+    )?;
+    normtweak::log_info!("trace", "wrote {} events -> {path}", tc.len());
+    Ok(())
+}
+
 fn main() {
     if let Err(e) = run() {
-        eprintln!("error: {e}");
+        normtweak::log_error!("cli", "{e}");
         std::process::exit(1);
     }
 }
@@ -305,7 +347,11 @@ fn run() -> normtweak::Result<()> {
 
     match args.cmd.as_str() {
         "quantize" => {
-            let (runtime, weights) = load_ctx()?;
+            let (mut runtime, weights) = load_ctx()?;
+            let trace_cfg = init_trace(&args);
+            if let Some((tc, _)) = &trace_cfg {
+                runtime.set_trace(tc.clone());
+            }
             // opt-in deep preflight: the NT05xx graphs pass statically
             // verifies every exported HLO signature before any layer runs
             if args.has("deep-check") {
@@ -340,7 +386,11 @@ fn run() -> normtweak::Result<()> {
                 let profile = if std::path::Path::new(&ppath).exists() {
                     let p = SensitivityProfile::load(&ppath)?;
                     check_profile_matches(&p, &ppath, &weights.config)?;
-                    println!("auto-bits: reusing profile {ppath} ({})", p.provenance());
+                    normtweak::log_info!(
+                        "quantize",
+                        "auto-bits: reusing profile {ppath} ({})",
+                        p.provenance()
+                    );
                     p
                 } else {
                     let mut scfg = SensitivityConfig::new(cfg.method()?, cfg.scheme());
@@ -348,11 +398,16 @@ fn run() -> normtweak::Result<()> {
                     let p = SensitivityProfiler::new(&runtime, &weights, scfg)
                         .profile(&calib)?;
                     p.save(&ppath)?;
-                    println!("auto-bits: profiled {} layers -> {ppath}", p.layers.len());
+                    normtweak::log_info!(
+                        "quantize",
+                        "auto-bits: profiled {} layers -> {ppath}",
+                        p.layers.len()
+                    );
                     p
                 };
                 let plan = BitBudgetPlanner::new(cfg.scheme(), target).plan(&profile)?;
-                println!(
+                normtweak::log_info!(
+                    "quantize",
                     "auto-bits plan: mean {:.3} bits (target {target}); --layer-bits {}",
                     plan.mean_bits,
                     plan.layer_bits_string()
@@ -380,6 +435,9 @@ fn run() -> normtweak::Result<()> {
                 f2(1.0 / metrics.compression_ratio),
                 metrics.total_millis
             );
+            if let Some((tc, path)) = &trace_cfg {
+                write_trace(tc, path)?;
+            }
         }
         "plan" => {
             let (runtime, weights) = load_ctx()?;
@@ -411,7 +469,7 @@ fn run() -> normtweak::Result<()> {
                     }
                     let prof = SensitivityProfile::load(p)?;
                     check_profile_matches(&prof, p, &weights.config)?;
-                    println!("loaded profile {p} ({})", prof.provenance());
+                    normtweak::log_info!("plan", "loaded profile {p} ({})", prof.provenance());
                     prof
                 }
                 None => {
@@ -428,7 +486,8 @@ fn run() -> normtweak::Result<()> {
                     let prof = SensitivityProfiler::new(&runtime, &weights, scfg)
                         .profile(&calib)?;
                     prof.save(&out)?;
-                    println!(
+                    normtweak::log_info!(
+                        "plan",
                         "profiled {} layers -> {out} ({})",
                         prof.layers.len(),
                         prof.provenance()
@@ -571,22 +630,35 @@ fn run() -> normtweak::Result<()> {
                     args.get_or("checkpoint", "artifacts/quantized.ntz"),
                 )],
             };
+            let trace_cfg = init_trace(&args);
             let mut builder = normtweak::engine::Engine::builder().cache(cache_cap);
+            if let Some((tc, _)) = &trace_cfg {
+                builder = builder.trace(tc.clone());
+            }
             for (key, ckpt) in entries {
                 let artifacts = cfg.run.artifacts.clone();
                 let arch = cfg.run.model.clone();
                 // honor [quant] act_bits so served outputs match what
                 // `eval` scored (the W+A modes)
                 let act_bits = cfg.act_bits();
+                // same collector as the scheduler: XLA spans interleave
+                // with the request lifecycle on one timeline
+                let trace = trace_cfg.as_ref().map(|(tc, _)| tc.clone());
                 builder = builder.model(key, move || {
-                    let m: Box<dyn normtweak::eval::LanguageModel> = Box::new(
+                    let mut sm =
                         normtweak::engine::ServableModel::load(&artifacts, &arch, &ckpt)?
-                            .with_act_bits(act_bits),
-                    );
+                            .with_act_bits(act_bits);
+                    if let Some(tc) = trace {
+                        sm = sm.with_trace(tc);
+                    }
+                    let m: Box<dyn normtweak::eval::LanguageModel> = Box::new(sm);
                     Ok(m)
                 });
             }
             serve_demo(builder.build()?, n_requests, n_clients, deadline_ms)?;
+            if let Some((tc, path)) = &trace_cfg {
+                write_trace(tc, path)?;
+            }
         }
         "check" => {
             let format = args.get_or("format", "human");
@@ -658,7 +730,7 @@ fn run() -> normtweak::Result<()> {
             }
         }
         other => {
-            eprintln!("unknown command `{other}`; see `normtweak help`\n{HELP}");
+            normtweak::log_error!("cli", "unknown command `{other}`; see `normtweak help`");
             std::process::exit(2);
         }
     }
@@ -908,6 +980,51 @@ mod tests {
         assert!(HELP.contains("--graphs"));
         assert!(HELP.contains("--deep-check"));
         assert!(HELP.contains("NT05xx"));
+    }
+
+    #[test]
+    fn trace_flag_parses_where_it_records() {
+        assert_eq!(
+            parse(&["quantize", "--trace", "t.json"]).unwrap().get("trace"),
+            Some("t.json")
+        );
+        assert_eq!(
+            parse(&["serve", "--trace", "t.json"]).unwrap().get("trace"),
+            Some("t.json")
+        );
+        // no collector pipeline behind eval/plan/check: flag rejected
+        assert!(parse(&["eval", "--trace", "t.json"]).is_err());
+        assert!(parse(&["plan", "--trace", "t.json"]).is_err());
+        assert!(parse(&["check", "--trace", "t.json"]).is_err());
+    }
+
+    #[test]
+    fn trace_flag_initializes_and_exports() {
+        // golden path: an accepted --trace flag must produce a collector
+        // and a loadable Chrome trace file — the flag can never no-op
+        assert!(init_trace(&parse(&["quantize"]).unwrap()).is_none());
+        let a = parse(&["quantize", "--trace", "t.json"]).unwrap();
+        let (tc, path) = init_trace(&a).unwrap();
+        assert_eq!(path, "t.json");
+        let tid = tc.track("scheduler");
+        tc.instant(tid, "submit", vec![]);
+        let file = std::env::temp_dir().join("nt_trace_golden.json");
+        let file_str = file.to_str().unwrap();
+        write_trace(&tc, file_str).unwrap();
+        let text = std::fs::read_to_string(&file).unwrap();
+        let _ = std::fs::remove_file(&file);
+        let j = normtweak::util::json::Json::parse(&text).unwrap();
+        let evs = j.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        // thread_name metadata + the instant event
+        assert_eq!(evs.len(), 2);
+        assert!(j.get("metrics").is_some(), "metrics snapshot embedded");
+    }
+
+    #[test]
+    fn help_documents_observability() {
+        assert!(HELP.contains("--trace"));
+        assert!(HELP.contains("NORMTWEAK_LOG"));
+        assert!(HELP.contains("chrome://tracing"));
     }
 
     #[test]

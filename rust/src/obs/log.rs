@@ -1,0 +1,159 @@
+//! Leveled stderr logger behind the crate-root `log_*!` macros.
+//!
+//! The ceiling comes from `NORMTWEAK_LOG` (`error` | `warn` | `info` |
+//! `debug`), read once on first use.  When it is unset, `NT_QUIET` maps
+//! to `warn` so existing CI environments stay silent; otherwise the
+//! default is `info`.  All output goes to **stderr** — stdout belongs to
+//! machine-readable products (tables, report JSON, generated samples)
+//! and must never interleave with logs.
+//!
+//! ```text
+//! log_info!("pipeline", "layer {l}: loss {loss:.3}");
+//! //  -> stderr: [pipeline] layer 7: loss 0.041
+//! log_warn!("check", "{code}: {msg}");
+//! //  -> stderr: warning: [check] NT0403: ...
+//! ```
+
+use std::fmt;
+use std::sync::OnceLock;
+
+/// Log severity, ordered `Error < Warn < Info < Debug`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error,
+    Warn,
+    Info,
+    Debug,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    /// Parse a `NORMTWEAK_LOG` value (case-insensitive; common synonyms
+    /// accepted).  `None` for anything unrecognized.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" | "err" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" | "trace" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+}
+
+static MAX: OnceLock<Level> = OnceLock::new();
+
+fn level_from_env() -> Level {
+    match std::env::var("NORMTWEAK_LOG") {
+        Ok(v) => Level::parse(&v).unwrap_or(Level::Info),
+        Err(_) => {
+            if std::env::var_os("NT_QUIET").is_some() {
+                Level::Warn
+            } else {
+                Level::Info
+            }
+        }
+    }
+}
+
+/// The active ceiling: messages above it are discarded.  The first call
+/// locks the level in from the environment.
+pub fn max_level() -> Level {
+    *MAX.get_or_init(level_from_env)
+}
+
+/// Force the ceiling before any message is logged (CLI overrides, tests).
+/// Returns `false` if the level was already locked in.
+pub fn set_max_level(level: Level) -> bool {
+    MAX.set(level).is_ok()
+}
+
+/// Would a message at `level` be emitted?
+pub fn enabled(level: Level) -> bool {
+    level <= max_level()
+}
+
+/// Macro backend — prefer the `log_*!` macros over calling this directly.
+pub fn write(level: Level, target: &str, msg: fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    match level {
+        Level::Error => eprintln!("error: [{target}] {msg}"),
+        Level::Warn => eprintln!("warning: [{target}] {msg}"),
+        Level::Info | Level::Debug => eprintln!("[{target}] {msg}"),
+    }
+}
+
+/// Log an unrecoverable condition (always emitted).
+#[macro_export]
+macro_rules! log_error {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::obs::log::write($crate::obs::log::Level::Error, $target,
+                                format_args!($($arg)*))
+    };
+}
+
+/// Log a suspicious-but-survivable condition.
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::obs::log::write($crate::obs::log::Level::Warn, $target,
+                                format_args!($($arg)*))
+    };
+}
+
+/// Log progress narration (the old `NT_QUIET`-gated prints).
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::obs::log::write($crate::obs::log::Level::Info, $target,
+                                format_args!($($arg)*))
+    };
+}
+
+/// Log detail useful only when chasing a specific problem.
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::obs::log::write($crate::obs::log::Level::Debug, $target,
+                                format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering_gates_correctly() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn parse_accepts_synonyms_case_insensitively() {
+        assert_eq!(Level::parse("ERROR"), Some(Level::Error));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse(" info "), Some(Level::Info));
+        assert_eq!(Level::parse("Trace"), Some(Level::Debug));
+        assert_eq!(Level::parse("loud"), None);
+        assert_eq!(Level::parse(""), None);
+    }
+
+    #[test]
+    fn as_str_round_trips() {
+        for l in [Level::Error, Level::Warn, Level::Info, Level::Debug] {
+            assert_eq!(Level::parse(l.as_str()), Some(l));
+        }
+    }
+}

@@ -1,0 +1,495 @@
+//! Metrics: counters, gauges, and log-bucketed latency histograms with
+//! percentile extraction, plus the process-wide [`MetricsRegistry`].
+//!
+//! Histograms bucket values geometrically — four sub-buckets per power of
+//! two, so every bucket spans at most 25% of its lower bound (values below
+//! 4 get exact buckets).  A reported percentile is therefore within 25%
+//! of the true order statistic, and exact at the recorded min/max.
+//! Recording is one short mutex hold; counters and gauges are single
+//! relaxed atomics.  Snapshots serialize through `util::json`
+//! ([`MetricsSnapshot::to_json`] / [`MetricsSnapshot::from_json`]).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+use crate::error::{Error, Result};
+use crate::util::json::{self, Json};
+
+const SUB_BITS: u32 = 2;
+const SUB: usize = 1 << SUB_BITS; // sub-buckets per power of two
+
+/// Bucket index for a value: exact below `SUB` (4), then `SUB` geometric
+/// sub-buckets per octave (relative bucket width ≤ 1/SUB of the bound).
+pub fn bucket_index(v: u64) -> usize {
+    if v < SUB as u64 {
+        return v as usize;
+    }
+    let e = 63 - v.leading_zeros(); // floor(log2 v), >= SUB_BITS here
+    let sub = ((v >> (e - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+    (e - SUB_BITS) as usize * SUB + SUB + sub
+}
+
+/// Inclusive lower bound of bucket `i` (inverse of [`bucket_index`]).
+pub fn bucket_low(i: usize) -> u64 {
+    if i < SUB {
+        return i as u64;
+    }
+    let e = (i - SUB) / SUB + SUB_BITS as usize;
+    if e >= 64 {
+        return u64::MAX;
+    }
+    let sub = ((i - SUB) % SUB) as u128;
+    ((1u128 << e) + (sub << (e - SUB_BITS as usize))).min(u128::from(u64::MAX)) as u64
+}
+
+/// Exclusive upper bound of bucket `i` (saturating at `u64::MAX`).
+pub fn bucket_high(i: usize) -> u64 {
+    bucket_low(i + 1)
+}
+
+/// Single-writer log-bucketed histogram.  Plain data (`Clone + Eq`), so
+/// it can live inside snapshot structs like `engine::ModelStats`; shared
+/// concurrent recording goes through [`HistHandle`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Hist {
+    counts: Vec<u64>,
+    count: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist { counts: Vec::new(), count: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+}
+
+impl Hist {
+    pub fn new() -> Self {
+        Hist::default()
+    }
+
+    pub fn record(&mut self, v: u64) {
+        let i = bucket_index(v);
+        if self.counts.len() <= i {
+            self.counts.resize(i + 1, 0);
+        }
+        self.counts[i] += 1;
+        self.count += 1;
+        self.sum += u128::from(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Smallest recorded value (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest recorded value (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn sum(&self) -> u128 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Value at percentile `p` in `0..=100`: the lower bound of the bucket
+    /// holding the `ceil(p/100 · count)`-th smallest sample, clamped to
+    /// the observed `[min, max]`.  Never overestimates the true order
+    /// statistic; underestimates by at most one bucket width (≤ 25%).
+    /// Returns 0 when empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil() as u64;
+        let rank = rank.clamp(1, self.count);
+        if rank == self.count {
+            return self.max;
+        }
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_low(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Fold another histogram's samples into this one.
+    pub fn merge(&mut self, other: &Hist) {
+        if other.count == 0 {
+            return;
+        }
+        if self.counts.len() < other.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (i, c) in other.counts.iter().enumerate() {
+            self.counts[i] += c;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Summary object: `count` / `mean` / `min` / `max` / `p50` / `p90` /
+    /// `p99` plus the sparse `buckets` list `[[index, count], ...]` that
+    /// [`Hist::from_json`] rebuilds from.  `sum` is emitted as an f64 and
+    /// loses precision past 2^53 — the percentile fields do not.
+    pub fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| **c > 0)
+            .map(|(i, c)| json::arr(vec![json::n(i as f64), json::n(*c as f64)]))
+            .collect();
+        json::obj(vec![
+            ("count", json::n(self.count as f64)),
+            ("sum", json::n(self.sum as f64)),
+            ("mean", json::n(self.mean())),
+            ("min", json::n(self.min() as f64)),
+            ("max", json::n(self.max as f64)),
+            ("p50", json::n(self.percentile(50.0) as f64)),
+            ("p90", json::n(self.percentile(90.0) as f64)),
+            ("p99", json::n(self.percentile(99.0) as f64)),
+            ("buckets", json::arr(buckets)),
+        ])
+    }
+
+    /// Rebuild from [`Hist::to_json`] output.
+    pub fn from_json(v: &Json) -> Result<Hist> {
+        let count = field_u64(v, "count")?;
+        if count == 0 {
+            return Ok(Hist::default());
+        }
+        let mut h = Hist {
+            counts: Vec::new(),
+            count,
+            sum: field_u64(v, "sum")?.into(),
+            min: field_u64(v, "min")?,
+            max: field_u64(v, "max")?,
+        };
+        let buckets = v
+            .get("buckets")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::msg("histogram JSON missing 'buckets'"))?;
+        for b in buckets {
+            let pair = b.as_arr().ok_or_else(|| Error::msg("histogram bucket not a pair"))?;
+            let (i, c) = match pair {
+                [i, c] => (
+                    i.as_usize().ok_or_else(|| Error::msg("bad bucket index"))?,
+                    c.as_f64().ok_or_else(|| Error::msg("bad bucket count"))? as u64,
+                ),
+                _ => return Err(Error::msg("histogram bucket not a pair")),
+            };
+            if h.counts.len() <= i {
+                h.counts.resize(i + 1, 0);
+            }
+            h.counts[i] += c;
+        }
+        Ok(h)
+    }
+}
+
+fn field_u64(v: &Json, key: &str) -> Result<u64> {
+    v.get(key)
+        .and_then(Json::as_f64)
+        .map(|n| n as u64)
+        .ok_or_else(|| Error::msg(format!("histogram JSON missing numeric '{key}'")))
+}
+
+/// Monotonic counter handle (clones share the underlying cell).
+#[derive(Debug, Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time gauge handle (clones share the underlying cell).
+#[derive(Debug, Clone, Default)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+type SharedHist = Arc<Mutex<Hist>>;
+
+/// Concurrent histogram handle: `record` is one short mutex hold.
+#[derive(Debug, Clone, Default)]
+pub struct HistHandle(SharedHist);
+
+impl HistHandle {
+    pub fn record(&self, v: u64) {
+        lock(&self.0).record(v);
+    }
+
+    pub fn snapshot(&self) -> Hist {
+        lock(&self.0).clone()
+    }
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // a poisoned metric is still a metric: take the data, don't panic
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    counters: BTreeMap<String, Arc<AtomicU64>>,
+    gauges: BTreeMap<String, Arc<AtomicI64>>,
+    hists: BTreeMap<String, SharedHist>,
+}
+
+/// Get-or-create registry of named metrics (see the module docs of
+/// [`crate::obs`] for the naming convention).  Handles stay valid after
+/// [`MetricsRegistry::reset`], but detach from future snapshots.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<Inner>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        MetricsRegistry::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut g = lock(&self.inner);
+        Counter(g.counters.entry(name.to_string()).or_default().clone())
+    }
+
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut g = lock(&self.inner);
+        Gauge(g.gauges.entry(name.to_string()).or_default().clone())
+    }
+
+    pub fn histogram(&self, name: &str) -> HistHandle {
+        let mut g = lock(&self.inner);
+        HistHandle(g.hists.entry(name.to_string()).or_default().clone())
+    }
+
+    /// Consistent point-in-time copy of every registered metric.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = lock(&self.inner);
+        MetricsSnapshot {
+            counters: g
+                .counters
+                .iter()
+                .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+                .collect(),
+            gauges: g
+                .gauges
+                .iter()
+                .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+                .collect(),
+            hists: g.hists.iter().map(|(k, h)| (k.clone(), lock(h).clone())).collect(),
+        }
+    }
+
+    /// Drop every registered metric (tests).
+    pub fn reset(&self) {
+        *lock(&self.inner) = Inner::default();
+    }
+}
+
+/// The process-wide registry used by runtime / pipeline instrumentation.
+pub fn global() -> &'static MetricsRegistry {
+    static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
+    GLOBAL.get_or_init(MetricsRegistry::new)
+}
+
+/// Point-in-time copy of a [`MetricsRegistry`], serializable via
+/// `util::json`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, i64>,
+    pub hists: BTreeMap<String, Hist>,
+}
+
+impl MetricsSnapshot {
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.hists.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            (
+                "counters",
+                Json::Obj(
+                    self.counters.iter().map(|(k, v)| (k.clone(), json::n(*v as f64))).collect(),
+                ),
+            ),
+            (
+                "gauges",
+                Json::Obj(
+                    self.gauges.iter().map(|(k, v)| (k.clone(), json::n(*v as f64))).collect(),
+                ),
+            ),
+            (
+                "hists",
+                Json::Obj(self.hists.iter().map(|(k, h)| (k.clone(), h.to_json())).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<MetricsSnapshot> {
+        let section =
+            |key: &str| v.get(key).and_then(Json::as_obj).cloned().unwrap_or_default();
+        let mut snap = MetricsSnapshot::default();
+        for (k, n) in &section("counters") {
+            let n = n.as_f64().ok_or_else(|| Error::msg("non-numeric counter"))?;
+            snap.counters.insert(k.clone(), n as u64);
+        }
+        for (k, n) in &section("gauges") {
+            let n = n.as_f64().ok_or_else(|| Error::msg("non-numeric gauge"))?;
+            snap.gauges.insert(k.clone(), n as i64);
+        }
+        for (k, h) in &section("hists") {
+            snap.hists.insert(k.clone(), Hist::from_json(h)?);
+        }
+        Ok(snap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_get_exact_buckets() {
+        for v in 0..8u64 {
+            assert_eq!(bucket_low(bucket_index(v)), v, "v={v}");
+            assert_eq!(bucket_high(bucket_index(v)), v + 1, "v={v}");
+        }
+    }
+
+    #[test]
+    fn bucket_bounds_bracket_every_value() {
+        let probes = [8u64, 9, 15, 16, 100, 1_000, 65_535, 1 << 40, u64::MAX];
+        for v in probes {
+            let i = bucket_index(v);
+            assert!(bucket_low(i) <= v, "low({i}) > {v}");
+            assert!(v < bucket_high(i) || bucket_high(i) == u64::MAX, "{v} >= high({i})");
+        }
+    }
+
+    #[test]
+    fn relative_bucket_width_is_bounded() {
+        for i in SUB..bucket_index(1 << 30) {
+            let low = bucket_low(i);
+            let high = bucket_high(i);
+            assert!(high - low <= low / SUB as u64 + 1, "bucket {i}: [{low}, {high})");
+        }
+    }
+
+    #[test]
+    fn percentiles_of_known_distribution() {
+        let mut h = Hist::new();
+        for v in 1..=100u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), 100);
+        assert_eq!(h.percentile(0.0), 1);
+        assert_eq!(h.percentile(100.0), 100);
+        // p50 -> 50th smallest = 50, bucket [48, 56) -> reported 48
+        let p50 = h.percentile(50.0);
+        assert!(p50 <= 50 && 50 < bucket_high(bucket_index(p50)), "p50={p50}");
+    }
+
+    #[test]
+    fn empty_hist_is_all_zero() {
+        let h = Hist::default();
+        assert!(h.is_empty());
+        assert_eq!(h.percentile(50.0), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+    }
+
+    #[test]
+    fn merge_matches_combined_recording() {
+        let mut a = Hist::new();
+        let mut b = Hist::new();
+        let mut both = Hist::new();
+        for v in [3u64, 9, 81, 6561] {
+            a.record(v);
+            both.record(v);
+        }
+        for v in [1u64, 100, 10_000] {
+            b.record(v);
+            both.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a, both);
+    }
+
+    #[test]
+    fn registry_handles_share_cells() {
+        let reg = MetricsRegistry::new();
+        reg.counter("x.calls").add(2);
+        reg.counter("x.calls").inc();
+        reg.gauge("x.depth").set(-3);
+        reg.histogram("x.us").record(7);
+        let snap = reg.snapshot();
+        assert_eq!(snap.counters.get("x.calls"), Some(&3));
+        assert_eq!(snap.gauges.get("x.depth"), Some(&-3));
+        assert_eq!(snap.hists.get("x.us").map(Hist::count), Some(1));
+        reg.reset();
+        assert!(reg.snapshot().is_empty());
+    }
+}

@@ -1,0 +1,73 @@
+//! Observability: metrics registry, structured trace spans with Chrome
+//! trace-event export, and the leveled stderr logger.
+//!
+//! Three dependency-free pillars, mirroring the registry idiom of
+//! `quant::quantizer` and `analysis`:
+//!
+//! * [`metrics`] — counters, gauges, and log-bucketed latency histograms
+//!   with p50/p90/p99 extraction.  Lock-cheap (atomics for scalars, one
+//!   short mutex hold per histogram sample), snapshot-on-demand, and
+//!   serialized through `util::json`.  A process-wide registry lives
+//!   behind [`metrics::global`].
+//! * [`trace`] — spans, instants, counter samples, and async begin/end
+//!   pairs collected into a fixed-capacity ring buffer (oldest event
+//!   dropped on overflow, drop count reported) and exported as Chrome
+//!   trace-event JSON (`chrome://tracing`, <https://ui.perfetto.dev>).
+//!   The clock is pluggable: production uses a monotonic wall clock,
+//!   tests use [`trace::TestClock`] for deterministic ordering.
+//! * [`log`] — the leveled stderr logger behind the crate-root
+//!   `log_error!` / `log_warn!` / `log_info!` / `log_debug!` macros.
+//!   Every progress print in the crate routes through it; stdout is
+//!   reserved for machine-readable products (tables, report JSON,
+//!   generated samples).
+//!
+//! # Metric naming convention
+//!
+//! Dotted lowercase paths, coarse-to-fine, with the unit as a suffix:
+//! `<subsystem>.<what>[_<unit>][.<instance>]`.
+//!
+//! ```text
+//! xla.executions              counter   graph dispatches through Runtime::run
+//! xla.exec_us.<family>        histogram per-call wall time by graph family
+//! pipeline.quant_us           histogram per-layer quantize phase
+//! pipeline.tweak_us           histogram per-layer norm-tweak phase
+//! tweak.iters                 counter   total tweak iterations run
+//! engine.<lane>.queue_depth   gauge     live scheduler queue length
+//! ```
+//!
+//! # Trace schema
+//!
+//! One Chrome process (`pid` 1); each named track is a `tid` with a
+//! `thread_name` metadata record.  Producers emit:
+//!
+//! ```text
+//! scheduler               instants: submit / admit / cache_hit / retire,
+//!                         async b/e pair per request (id = submit seq)
+//! lane:<name>/prefill     X spans: one per prefill dispatch
+//! lane:<name>/decode      X spans: one per decode step dispatch
+//! xla                     X spans: one per executable call, named by family
+//! pipeline                X spans: per-layer phases (float_ref / quantize /
+//!                         pack / tweak / advance) nested in a layer span
+//! policy                  X spans: per-layer sensitivity scoring
+//! tweak.loss              C samples: per-iteration norm-tweak loss
+//! ```
+//!
+//! # `NORMTWEAK_LOG` levels
+//!
+//! `error` | `warn` | `info` (default) | `debug`.  When `NORMTWEAK_LOG`
+//! is unset and `NT_QUIET` is set, the ceiling is `warn` — preserving the
+//! historical meaning of `NT_QUIET` (silence per-layer progress) for CI
+//! and test environments.
+
+pub mod log;
+pub mod metrics;
+pub mod trace;
+
+pub use log::Level;
+pub use metrics::{
+    bucket_high, bucket_index, bucket_low, global, Counter, Gauge, Hist, HistHandle,
+    MetricsRegistry, MetricsSnapshot,
+};
+pub use trace::{
+    graph_family, Clock, Phase, SpanGuard, TestClock, TraceCollector, TraceEvent, WallClock,
+};

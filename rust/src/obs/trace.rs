@@ -1,0 +1,465 @@
+//! Structured spans/events with a pluggable clock, collected into a ring
+//! buffer and exported as Chrome trace-event JSON.
+//!
+//! Producers hold an `Option<Arc<TraceCollector>>` and skip all work when
+//! it is `None`, so tracing costs nothing unless a `--trace out.json`
+//! flag (or a test) attaches a collector.  The export is the classic
+//! `{"traceEvents": [...]}` object format: load it in `chrome://tracing`
+//! or <https://ui.perfetto.dev>.  Events are sorted by start time at
+//! export — within one track, timestamps are non-decreasing in file order
+//! and complete spans nest without partial overlap (the property
+//! `trace_validate` checks in CI).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Instant;
+
+use crate::error::Result;
+use crate::util::json::{self, Json};
+
+use super::metrics::MetricsSnapshot;
+
+/// Monotonic time source, microseconds since a per-collector origin.
+/// Pluggable so tests get deterministic, strictly ordered stamps.
+pub trait Clock: Send + Sync {
+    fn now_micros(&self) -> u64;
+}
+
+/// Production clock: monotonic wall time anchored at construction.
+#[derive(Debug)]
+pub struct WallClock {
+    origin: Instant,
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        WallClock { origin: Instant::now() }
+    }
+}
+
+impl WallClock {
+    pub fn new() -> Self {
+        WallClock::default()
+    }
+}
+
+impl Clock for WallClock {
+    fn now_micros(&self) -> u64 {
+        self.origin.elapsed().as_micros().min(u128::from(u64::MAX)) as u64
+    }
+}
+
+/// Deterministic test clock: every reading returns the previous value and
+/// advances it by `tick`, so consecutive events get strictly increasing
+/// timestamps without any real time passing.
+#[derive(Debug)]
+pub struct TestClock {
+    t: AtomicU64,
+    tick: u64,
+}
+
+impl TestClock {
+    pub fn new(tick: u64) -> Self {
+        TestClock { t: AtomicU64::new(0), tick }
+    }
+
+    /// Jump forward without producing a reading.
+    pub fn advance(&self, dt: u64) {
+        self.t.fetch_add(dt, Ordering::Relaxed);
+    }
+}
+
+impl Clock for TestClock {
+    fn now_micros(&self) -> u64 {
+        self.t.fetch_add(self.tick, Ordering::Relaxed)
+    }
+}
+
+/// Chrome trace-event phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// `"X"` — complete span (`ts` + `dur`)
+    Complete,
+    /// `"i"` — instant event
+    Instant,
+    /// `"C"` — counter sample
+    Counter,
+    /// `"b"` — async begin, paired with the matching end by `id`
+    AsyncBegin,
+    /// `"e"` — async end
+    AsyncEnd,
+}
+
+impl Phase {
+    pub fn code(self) -> &'static str {
+        match self {
+            Phase::Complete => "X",
+            Phase::Instant => "i",
+            Phase::Counter => "C",
+            Phase::AsyncBegin => "b",
+            Phase::AsyncEnd => "e",
+        }
+    }
+}
+
+/// One collected event — the pre-serialization form of a Chrome trace
+/// event (`ts`/`dur` in microseconds of the collector's clock).
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub name: String,
+    pub ph: Phase,
+    pub ts: u64,
+    pub dur: u64,
+    pub tid: u64,
+    /// async begin/end pairing id (0 for other phases)
+    pub id: u64,
+    pub args: Vec<(String, Json)>,
+}
+
+#[derive(Debug, Default)]
+struct Ring {
+    events: VecDeque<TraceEvent>,
+    dropped: u64,
+}
+
+/// Default ring capacity: enough for a full quantize run or a bench
+/// sweep without unbounded memory.
+pub const DEFAULT_CAPACITY: usize = 1 << 16;
+
+/// Ring-buffered trace collector.  `Send + Sync`: producers on any thread
+/// push events under one short mutex hold; on overflow the **oldest**
+/// event is dropped and counted ([`TraceCollector::dropped`]).
+pub struct TraceCollector {
+    clock: Box<dyn Clock>,
+    cap: usize,
+    ring: Mutex<Ring>,
+    tracks: Mutex<BTreeMap<String, u64>>,
+    next_tid: AtomicU64,
+    next_id: AtomicU64,
+}
+
+impl std::fmt::Debug for TraceCollector {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceCollector")
+            .field("cap", &self.cap)
+            .field("len", &self.len())
+            .field("dropped", &self.dropped())
+            .finish()
+    }
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // a poisoned trace is still a trace: recover the data, don't panic
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+fn own_args(args: Vec<(&str, Json)>) -> Vec<(String, Json)> {
+    args.into_iter().map(|(k, v)| (k.to_string(), v)).collect()
+}
+
+impl TraceCollector {
+    /// Wall-clock collector holding at most `cap` events.
+    pub fn new(cap: usize) -> Self {
+        TraceCollector::with_clock(cap, Box::new(WallClock::new()))
+    }
+
+    /// Collector with an explicit clock (tests: [`TestClock`]).
+    pub fn with_clock(cap: usize, clock: Box<dyn Clock>) -> Self {
+        TraceCollector {
+            clock,
+            cap: cap.max(1),
+            ring: Mutex::new(Ring::default()),
+            tracks: Mutex::new(BTreeMap::new()),
+            next_tid: AtomicU64::new(1),
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    /// Current timestamp (µs since the collector's origin).
+    pub fn now(&self) -> u64 {
+        self.clock.now_micros()
+    }
+
+    /// Get-or-create the track (Chrome `tid`) named `name`.
+    pub fn track(&self, name: &str) -> u64 {
+        let mut t = lock(&self.tracks);
+        if let Some(id) = t.get(name) {
+            return *id;
+        }
+        let id = self.next_tid.fetch_add(1, Ordering::Relaxed);
+        t.insert(name.to_string(), id);
+        id
+    }
+
+    /// Registered track names with their `tid`s.
+    pub fn track_names(&self) -> BTreeMap<String, u64> {
+        lock(&self.tracks).clone()
+    }
+
+    /// Fresh id for an async begin/end pair.
+    pub fn next_async_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn push(&self, ev: TraceEvent) {
+        let mut r = lock(&self.ring);
+        if r.events.len() >= self.cap {
+            r.events.pop_front();
+            r.dropped += 1;
+        }
+        r.events.push_back(ev);
+    }
+
+    /// Complete span that started at `start` (a [`TraceCollector::now`]
+    /// reading) and ends now.
+    pub fn complete(&self, tid: u64, name: &str, start: u64, args: Vec<(&str, Json)>) {
+        let end = self.now();
+        self.complete_at(tid, name, start, end.saturating_sub(start), args);
+    }
+
+    /// Complete span with explicit start and duration (µs) — for work
+    /// timed outside the collector's clock.
+    pub fn complete_at(&self, tid: u64, name: &str, ts: u64, dur: u64, args: Vec<(&str, Json)>) {
+        self.push(TraceEvent {
+            name: name.to_string(),
+            ph: Phase::Complete,
+            ts,
+            dur,
+            tid,
+            id: 0,
+            args: own_args(args),
+        });
+    }
+
+    /// RAII span: records a complete event on `tid` when the guard drops.
+    pub fn span(&self, tid: u64, name: &str) -> SpanGuard<'_> {
+        SpanGuard { tc: self, tid, name: name.to_string(), start: self.now(), args: Vec::new() }
+    }
+
+    /// Zero-duration marker event.
+    pub fn instant(&self, tid: u64, name: &str, args: Vec<(&str, Json)>) {
+        let ts = self.now();
+        self.push(TraceEvent {
+            name: name.to_string(),
+            ph: Phase::Instant,
+            ts,
+            dur: 0,
+            tid,
+            id: 0,
+            args: own_args(args),
+        });
+    }
+
+    /// One sample of the counter track `name` (series → value).
+    pub fn counter(&self, name: &str, series: &str, value: f64) {
+        let ts = self.now();
+        self.push(TraceEvent {
+            name: name.to_string(),
+            ph: Phase::Counter,
+            ts,
+            dur: 0,
+            tid: 0,
+            id: 0,
+            args: vec![(series.to_string(), json::n(value))],
+        });
+    }
+
+    /// Async begin: pairs with the [`TraceCollector::async_end`] carrying
+    /// the same `name` and `id`.
+    pub fn async_begin(&self, tid: u64, name: &str, id: u64, args: Vec<(&str, Json)>) {
+        let ts = self.now();
+        self.push(TraceEvent {
+            name: name.to_string(),
+            ph: Phase::AsyncBegin,
+            ts,
+            dur: 0,
+            tid,
+            id,
+            args: own_args(args),
+        });
+    }
+
+    /// Async end (see [`TraceCollector::async_begin`]).
+    pub fn async_end(&self, tid: u64, name: &str, id: u64) {
+        let ts = self.now();
+        self.push(TraceEvent {
+            name: name.to_string(),
+            ph: Phase::AsyncEnd,
+            ts,
+            dur: 0,
+            tid,
+            id,
+            args: Vec::new(),
+        });
+    }
+
+    /// Events currently buffered.
+    pub fn len(&self) -> usize {
+        lock(&self.ring).events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events evicted by ring overflow since construction.
+    pub fn dropped(&self) -> u64 {
+        lock(&self.ring).dropped
+    }
+
+    /// Copy of the buffered events in collection order.
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        lock(&self.ring).events.iter().cloned().collect()
+    }
+
+    /// Chrome trace-event JSON: `thread_name` metadata for every
+    /// registered track, then the buffered events sorted by start time
+    /// (ties: longer span first, so parents precede their children).
+    /// `metrics`, when given, is embedded under the extra top-level
+    /// `"metrics"` key, which trace viewers ignore.
+    pub fn export_chrome(&self, metrics: Option<&MetricsSnapshot>) -> Json {
+        let mut events = self.snapshot();
+        events.sort_by(|a, b| a.ts.cmp(&b.ts).then(b.dur.cmp(&a.dur)));
+        let mut out = Vec::new();
+        for (name, tid) in self.track_names() {
+            out.push(json::obj(vec![
+                ("name", json::s("thread_name")),
+                ("ph", json::s("M")),
+                ("pid", json::n(1.0)),
+                ("tid", json::n(tid as f64)),
+                ("args", json::obj(vec![("name", json::s(name))])),
+            ]));
+        }
+        for ev in &events {
+            let mut pairs = vec![
+                ("name", json::s(ev.name.clone())),
+                ("cat", json::s("normtweak")),
+                ("ph", json::s(ev.ph.code())),
+                ("ts", json::n(ev.ts as f64)),
+                ("pid", json::n(1.0)),
+                ("tid", json::n(ev.tid as f64)),
+            ];
+            match ev.ph {
+                Phase::Complete => pairs.push(("dur", json::n(ev.dur as f64))),
+                Phase::Instant => pairs.push(("s", json::s("t"))),
+                Phase::AsyncBegin | Phase::AsyncEnd => {
+                    pairs.push(("id", json::s(format!("{:#x}", ev.id))));
+                }
+                Phase::Counter => {}
+            }
+            if !ev.args.is_empty() {
+                pairs.push(("args", Json::Obj(ev.args.iter().cloned().collect())));
+            }
+            out.push(json::obj(pairs));
+        }
+        let mut top = vec![
+            ("traceEvents", json::arr(out)),
+            ("displayTimeUnit", json::s("ms")),
+            (
+                "otherData",
+                json::obj(vec![("dropped_events", json::n(self.dropped() as f64))]),
+            ),
+        ];
+        if let Some(m) = metrics {
+            top.push(("metrics", m.to_json()));
+        }
+        json::obj(top)
+    }
+
+    /// Write [`TraceCollector::export_chrome`] to `path`.
+    pub fn write_chrome(&self, path: &Path, metrics: Option<&MetricsSnapshot>) -> Result<()> {
+        std::fs::write(path, self.export_chrome(metrics).emit())?;
+        Ok(())
+    }
+}
+
+/// RAII guard from [`TraceCollector::span`]: emits a complete event over
+/// its lifetime when dropped (including on early `?` exits).
+pub struct SpanGuard<'a> {
+    tc: &'a TraceCollector,
+    tid: u64,
+    name: String,
+    start: u64,
+    args: Vec<(String, Json)>,
+}
+
+impl SpanGuard<'_> {
+    /// Attach an argument shown in the trace viewer's span details.
+    pub fn arg(&mut self, key: &str, value: Json) {
+        self.args.push((key.to_string(), value));
+    }
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        let end = self.tc.now();
+        self.tc.push(TraceEvent {
+            name: std::mem::take(&mut self.name),
+            ph: Phase::Complete,
+            ts: self.start,
+            dur: end.saturating_sub(self.start),
+            tid: self.tid,
+            id: 0,
+            args: std::mem::take(&mut self.args),
+        });
+    }
+}
+
+/// Executable name up to the first `.` — the graph *family* shared by
+/// every batch/grain specialization (`"block_fwd_q.g64.b8"` →
+/// `"block_fwd_q"`).  Metric and span names key on the family so timing
+/// aggregates across specializations.
+pub fn graph_family(name: &str) -> &str {
+    name.split('.').next().unwrap_or(name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_strips_specialization() {
+        assert_eq!(graph_family("block_fwd_q.g64.b8"), "block_fwd_q");
+        assert_eq!(graph_family("embed"), "embed");
+        assert_eq!(graph_family(""), "");
+    }
+
+    #[test]
+    fn test_clock_is_strictly_ordered() {
+        let c = TestClock::new(1);
+        assert_eq!(c.now_micros(), 0);
+        assert_eq!(c.now_micros(), 1);
+        c.advance(10);
+        assert_eq!(c.now_micros(), 12);
+    }
+
+    #[test]
+    fn tracks_are_stable_get_or_create() {
+        let tc = TraceCollector::with_clock(16, Box::new(TestClock::new(1)));
+        let a = tc.track("alpha");
+        let b = tc.track("beta");
+        assert_ne!(a, b);
+        assert_eq!(tc.track("alpha"), a);
+        assert_eq!(tc.track_names().len(), 2);
+    }
+
+    #[test]
+    fn span_guard_emits_on_drop() {
+        let tc = TraceCollector::with_clock(16, Box::new(TestClock::new(1)));
+        let tid = tc.track("t");
+        {
+            let mut s = tc.span(tid, "work");
+            s.arg("k", json::s("v"));
+        }
+        let evs = tc.snapshot();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].name, "work");
+        assert_eq!(evs[0].ph, Phase::Complete);
+        assert_eq!(evs[0].args.len(), 1);
+    }
+}

@@ -284,9 +284,11 @@ impl<'rt, 'w> SensitivityProfiler<'rt, 'w> {
         let quantizer: Box<dyn Quantizer> = resolve(&self.cfg.method, &self.cfg.params)?;
         let fm = FloatModel::new(self.runtime, self.weights)?;
         let mcfg = &self.weights.config;
+        let trace = self.runtime.trace().map(|t| (t.clone(), t.track("policy")));
         let mut x = fm.embed(&calib.tokens)?;
         let mut layers = Vec::with_capacity(mcfg.n_layer);
         for layer in 0..mcfg.n_layer {
+            let ts = trace.as_ref().map(|(t, _)| t.now());
             let taps = fm.block_taps(layer, &x)?;
             let bw = self.weights.block(layer)?;
             let mut scores = BTreeMap::new();
@@ -301,13 +303,21 @@ impl<'rt, 'w> SensitivityProfiler<'rt, 'w> {
                     score_layer(bw, &taps, scheme, quantizer.as_ref(), self.cfg.loss)?;
                 scores.insert(bits, score);
             }
-            if std::env::var_os("NT_QUIET").is_none() {
+            if let Some((t, tid)) = &trace {
+                t.complete(
+                    *tid,
+                    "score_layer",
+                    ts.unwrap_or(0),
+                    vec![("layer", crate::util::json::n(layer as f64))],
+                );
+            }
+            if crate::obs::log::enabled(crate::obs::Level::Info) {
                 let summary = scores
                     .iter()
                     .map(|(b, v)| format!("{b}b={v:.5}"))
                     .collect::<Vec<_>>()
                     .join(" ");
-                eprintln!("[policy] layer {layer}: {summary}");
+                crate::log_info!("policy", "layer {layer}: {summary}");
             }
             layers.push(LayerSensitivity { layer, scores });
             x = fm.block_fwd(layer, &x)?;

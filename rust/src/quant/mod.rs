@@ -102,6 +102,20 @@
 //! -cache conventions (NT0506), and the scalar tweak loss (NT0507).  See
 //! the diagnostic table in [`crate::analysis`].
 //!
+//! # Observability
+//!
+//! The quantization pipeline is instrumented through [`crate::obs`]: with
+//! `quantize --trace out.json`, every layer records nested phase spans
+//! (`float_ref` / `quantize` / `pack` / `tweak` / `advance`) on a
+//! `pipeline` track, each norm-tweak Adam iteration emits its loss as a
+//! Chrome counter sample, and per-graph execution timing lands on the
+//! `xla` track keyed by graph family.  Per-layer phase latencies also
+//! feed the global metrics registry (`pipeline.quant_us` /
+//! `pipeline.tweak_us` histograms, `tweak.iters` counter), embedded in
+//! the trace export.  Progress prints route through the leveled logger
+//! (`NORMTWEAK_LOG`), never raw stdout — see [`crate::obs`] for the
+//! naming convention and track schema.
+//!
 //! # Automatic mixed precision
 //!
 //! Per-layer scheme overrides (`PipelineConfig::layer_schemes`,

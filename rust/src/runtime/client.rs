@@ -8,13 +8,16 @@
 #![allow(clippy::unwrap_used)]
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use xla::{HloModuleProto, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 use crate::error::{Error, Result};
+use crate::obs::trace::{graph_family, TraceCollector};
+use crate::obs::{global, MetricsRegistry};
 use crate::tensor::Tensor;
+use crate::util::json;
 
 use super::literal::{literal_to_tensor, tensor_to_literal};
 use super::manifest::ArtifactManifest;
@@ -36,6 +39,8 @@ pub struct Runtime {
     pub manifest: ArtifactManifest,
     cache: Mutex<HashMap<GraphKey, std::sync::Arc<PjRtLoadedExecutable>>>,
     stats: Mutex<RuntimeStats>,
+    /// trace collector + its pre-registered `xla` track tid
+    trace: Option<(Arc<TraceCollector>, u64)>,
     /// skip per-call shape/dtype validation (hot-path opt; validated once)
     pub validate_args: bool,
 }
@@ -50,8 +55,24 @@ impl Runtime {
             manifest,
             cache: Mutex::new(HashMap::new()),
             stats: Mutex::new(RuntimeStats::default()),
+            trace: None,
             validate_args: true,
         })
+    }
+
+    /// Record every graph compile and execution into `trace` on an `xla`
+    /// track, spans named by [`graph_family`] so all batch/grain
+    /// specializations of a graph aggregate under one label.
+    pub fn set_trace(&mut self, trace: Arc<TraceCollector>) {
+        let tid = trace.track("xla");
+        self.trace = Some((trace, tid));
+    }
+
+    /// The attached trace collector, if any — producers above the runtime
+    /// (pipeline phases, tweak-loss counters) reuse it so everything lands
+    /// on one timeline.
+    pub fn trace(&self) -> Option<&Arc<TraceCollector>> {
+        self.trace.as_ref().map(|(t, _)| t)
     }
 
     /// Load + compile a graph (cached).
@@ -64,6 +85,7 @@ impl Runtime {
         if let Some(e) = self.cache.lock().unwrap().get(&key) {
             return Ok(e.clone());
         }
+        let t_start = self.trace.as_ref().map(|(t, _)| t.now());
         let entry = self.manifest.graph(model, graph)?;
         let path = self.manifest.path_of(entry);
         let proto = HloModuleProto::from_text_file(
@@ -78,6 +100,15 @@ impl Runtime {
         let exe = std::sync::Arc::new(exe);
         self.cache.lock().unwrap().insert(key, exe.clone());
         self.stats.lock().unwrap().compiles += 1;
+        global().counter("xla.compiles").inc();
+        if let Some((tr, tid)) = &self.trace {
+            tr.complete(
+                *tid,
+                "compile",
+                t_start.unwrap_or(0),
+                vec![("graph", json::s(format!("{model}.{graph}")))],
+            );
+        }
         Ok(exe)
     }
 
@@ -105,6 +136,7 @@ impl Runtime {
         let literals: Vec<xla::Literal> =
             args.iter().map(|t| tensor_to_literal(t)).collect::<Result<_>>()?;
 
+        let trace_start = self.trace.as_ref().map(|(t, _)| t.now());
         let t0 = Instant::now();
         let result = exe
             .execute::<xla::Literal>(&literals)
@@ -117,10 +149,27 @@ impl Runtime {
             .map_err(|e| Error::Xla(e.to_string()))?;
         let tensors: Vec<Tensor> =
             outs.iter().map(literal_to_tensor).collect::<Result<_>>()?;
+        let dt = t0.elapsed();
 
         let mut s = self.stats.lock().unwrap();
         s.executions += 1;
-        s.exec_nanos += t0.elapsed().as_nanos();
+        s.exec_nanos += dt.as_nanos();
+        drop(s);
+
+        let family = graph_family(graph);
+        let us = dt.as_micros().min(u128::from(u64::MAX)) as u64;
+        let m: &MetricsRegistry = global();
+        m.counter("xla.executions").inc();
+        m.histogram(&format!("xla.exec_us.{family}")).record(us);
+        if let Some((tr, tid)) = &self.trace {
+            tr.complete_at(
+                *tid,
+                family,
+                trace_start.unwrap_or(0),
+                us,
+                vec![("graph", json::s(graph)), ("model", json::s(model))],
+            );
+        }
         Ok(tensors)
     }
 

@@ -4,6 +4,7 @@
 
 use crate::error::{Error, Result};
 use crate::model::{NormKind, QuantizedBlock};
+use crate::obs::global;
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 
@@ -215,6 +216,12 @@ impl<'rt> Tweaker<'rt> {
             adam.advance();
             blk.set_norm_params(thetas)?;
             losses.push(loss);
+            global().counter("tweak.iters").inc();
+            if let Some(tr) = self.runtime.trace() {
+                // one sample per Adam step — renders as the convergence
+                // curve under the pipeline's tweak span
+                tr.counter("tweak.loss", "loss", f64::from(loss));
+            }
         }
         Ok(TweakOutcome { losses, lr_used: lr })
     }

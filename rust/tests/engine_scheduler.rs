@@ -15,6 +15,7 @@ use normtweak::engine::{Engine, GenRequest, ModelTuning, SampleConfig};
 use normtweak::error::{Error, Result};
 use normtweak::eval::LanguageModel;
 use normtweak::model::ModelConfig;
+use normtweak::obs::trace::{Phase, TraceCollector, DEFAULT_CAPACITY};
 use normtweak::tensor::Tensor;
 
 /// One observed generation call: (model tag, batch size, second token of
@@ -543,6 +544,96 @@ fn unknown_model_and_empty_prompt_rejected_at_submit() {
     assert!(format!("{err}").contains("empty prompt"), "{err}");
     // never started: shutdown reports the misuse instead of hanging
     assert!(engine.shutdown().is_err());
+}
+
+#[test]
+fn trace_records_request_lifecycle_and_gauges_stay_live() {
+    let tc = Arc::new(TraceCollector::new(DEFAULT_CAPACITY));
+    let mock = Mock::new("m", log());
+    let mut engine = Engine::builder()
+        .model_with(
+            "m",
+            ModelTuning { max_batch: 2, batch_window: Duration::from_millis(5) },
+            mock.factory(),
+        )
+        .warmup(false)
+        .trace(tc.clone())
+        .build()
+        .unwrap();
+    let client = engine.client();
+
+    // gauges are pollable before the scheduler even starts
+    let pre = client.stats_snapshot();
+    assert_eq!(pre.len(), 1);
+    assert_eq!(pre[0].model, "m");
+    assert_eq!(pre[0].max_slots, 2);
+    assert_eq!(pre[0].served, 0);
+
+    // long decodes past prefill, short retires at prefill: both lifecycle
+    // shapes land in one trace
+    let long = client.submit("m", GenRequest::greedy(vec![1, 10], 2)).unwrap();
+    let short = client.submit("m", GenRequest::greedy(vec![1, 20], 1)).unwrap();
+    engine.start().unwrap();
+    long.wait().unwrap();
+    short.wait().unwrap();
+    let stats = engine.shutdown().unwrap();
+
+    // engine-measured latency histograms: one sample per served request
+    // for queue/e2e, one per dispatch for prefill/decode
+    let m = stats.model("m").unwrap();
+    assert_eq!(m.served, 2);
+    assert_eq!(m.queue_us.count(), 2);
+    assert_eq!(m.e2e_us.count(), 2);
+    assert_eq!(m.prefill_us.count(), 1, "one shared prefill dispatch");
+    assert_eq!(m.decode_step_us.count(), 1, "the long rider steps once alone");
+
+    // the client's gauge handles are the scheduler's own cells: final
+    // values survive shutdown, nothing left in flight
+    let post = client.stats_snapshot();
+    assert_eq!(post[0].served, 2);
+    assert_eq!(post[0].in_flight(), 0, "drained engine must report empty lanes");
+
+    // lifecycle tracks: scheduler instants plus a (prefill, decode) pair
+    // per lane — the >= 3 named tracks trace_validate requires
+    let tracks = tc.track_names();
+    for name in ["scheduler", "lane:m/prefill", "lane:m/decode"] {
+        assert!(tracks.contains_key(name), "missing track {name}: {tracks:?}");
+    }
+
+    let evs = tc.snapshot();
+    let sched = tracks["scheduler"];
+    let instants: Vec<&str> = evs
+        .iter()
+        .filter(|e| e.tid == sched && e.ph == Phase::Instant)
+        .map(|e| e.name.as_str())
+        .collect();
+    assert_eq!(
+        instants,
+        ["submit", "submit", "admit", "admit", "retire", "retire"],
+        "scheduler lifecycle out of order"
+    );
+    // every request's async begin pairs with exactly one end
+    let begins: Vec<u64> = evs
+        .iter()
+        .filter(|e| e.ph == Phase::AsyncBegin && e.name == "request")
+        .map(|e| e.id)
+        .collect();
+    let mut ends: Vec<u64> = evs
+        .iter()
+        .filter(|e| e.ph == Phase::AsyncEnd && e.name == "request")
+        .map(|e| e.id)
+        .collect();
+    assert_eq!(begins.len(), 2);
+    ends.sort_unstable();
+    let mut sorted_begins = begins.clone();
+    sorted_begins.sort_unstable();
+    assert_eq!(sorted_begins, ends, "unbalanced request async pairs");
+    // dispatch spans landed on their lane tracks
+    let span_count = |tid: u64, name: &str| {
+        evs.iter().filter(|e| e.tid == tid && e.ph == Phase::Complete && e.name == name).count()
+    };
+    assert_eq!(span_count(tracks["lane:m/prefill"], "prefill"), 1);
+    assert_eq!(span_count(tracks["lane:m/decode"], "decode_step"), 1);
 }
 
 #[test]

@@ -1,0 +1,211 @@
+//! Core observability invariants: histogram percentiles against a
+//! brute-force oracle, deterministic span nesting under [`TestClock`],
+//! ring-buffer overflow accounting, snapshot JSON round-trips, and the
+//! repo-wide ban on stray `println!` / `eprintln!` diagnostics.
+
+use normtweak::obs::trace::{TestClock, TraceCollector};
+use normtweak::obs::{bucket_high, bucket_index, Hist, MetricsRegistry, MetricsSnapshot};
+use normtweak::util::json::{self, Json};
+
+/// SplitMix64 — deterministic pseudo-random stream for the oracle test.
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+#[test]
+fn percentile_tracks_brute_force_oracle() {
+    // mixed magnitudes: exercise exact small buckets and wide log buckets
+    let mut state = 0xfeed_f00du64;
+    let mut values: Vec<u64> = (0..1000)
+        .map(|i| {
+            let r = splitmix64(&mut state);
+            match i % 3 {
+                0 => r % 16,          // small: exact buckets
+                1 => r % 10_000,      // mid-range latencies
+                _ => r % 50_000_000,  // long tail
+            }
+        })
+        .collect();
+    let mut h = Hist::new();
+    for &v in &values {
+        h.record(v);
+    }
+    values.sort_unstable();
+
+    for p in [1.0, 10.0, 25.0, 50.0, 75.0, 90.0, 99.0, 99.9, 100.0] {
+        let rank = ((p / 100.0) * values.len() as f64).ceil() as usize;
+        let oracle = values[rank.clamp(1, values.len()) - 1];
+        let est = h.percentile(p);
+        // never overestimates, and the true order statistic sits within
+        // the reported value's own bucket (≤ 25% relative error)
+        assert!(est <= oracle, "p{p}: est {est} > oracle {oracle}");
+        assert!(
+            oracle < bucket_high(bucket_index(est)) || est == h.max(),
+            "p{p}: oracle {oracle} outside est {est}'s bucket"
+        );
+    }
+    // boundary exactness
+    assert_eq!(h.percentile(100.0), *values.last().unwrap());
+    assert_eq!(h.min(), values[0]);
+}
+
+#[test]
+fn spans_nest_deterministically_under_test_clock() {
+    let tc = TraceCollector::with_clock(64, Box::new(TestClock::new(1)));
+    let tid = tc.track("t");
+    {
+        let _outer = tc.span(tid, "outer"); // start 0
+        {
+            let _inner = tc.span(tid, "inner"); // start 1, ends 2
+        }
+    } // outer ends 3
+
+    let evs = tc.snapshot();
+    // collection order: inner dropped first
+    assert_eq!(evs[0].name, "inner");
+    assert_eq!(evs[1].name, "outer");
+    let (inner, outer) = (&evs[0], &evs[1]);
+    assert_eq!((outer.ts, outer.dur), (0, 3));
+    assert_eq!((inner.ts, inner.dur), (1, 1));
+    // strict containment: the property trace_validate checks per track
+    assert!(outer.ts <= inner.ts && inner.ts + inner.dur <= outer.ts + outer.dur);
+
+    // export order: sorted by start time, so the parent precedes the child
+    let chrome = tc.export_chrome(None);
+    let events = chrome.get("traceEvents").and_then(Json::as_arr).unwrap();
+    let names: Vec<&str> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+        .map(|e| e.get("name").and_then(Json::as_str).unwrap())
+        .collect();
+    assert_eq!(names, ["outer", "inner"]);
+}
+
+#[test]
+fn ring_overflow_drops_oldest_and_counts() {
+    let tc = TraceCollector::with_clock(8, Box::new(TestClock::new(1)));
+    let tid = tc.track("t");
+    for i in 0..12 {
+        tc.instant(tid, &format!("i{i}"), vec![]);
+    }
+    assert_eq!(tc.len(), 8);
+    assert_eq!(tc.dropped(), 4);
+    // survivors are the newest 8, oldest first
+    let evs = tc.snapshot();
+    assert_eq!(evs[0].name, "i4");
+    assert_eq!(evs[7].name, "i11");
+    // the export reports the loss so a truncated trace is never mistaken
+    // for a complete one
+    let chrome = tc.export_chrome(None);
+    let dropped = chrome
+        .get("otherData")
+        .and_then(|o| o.get("dropped_events"))
+        .and_then(Json::as_f64);
+    assert_eq!(dropped, Some(4.0));
+}
+
+#[test]
+fn chrome_export_covers_every_phase() {
+    let tc = TraceCollector::with_clock(64, Box::new(TestClock::new(1)));
+    let tid = tc.track("work");
+    tc.complete_at(tid, "job", 0, 5, vec![("k", json::s("v"))]);
+    tc.instant(tid, "mark", vec![]);
+    tc.counter("loss", "loss", 0.25);
+    let id = tc.next_async_id();
+    tc.async_begin(tid, "req", id, vec![]);
+    tc.async_end(tid, "req", id);
+
+    let chrome = tc.export_chrome(None);
+    let events = chrome.get("traceEvents").and_then(Json::as_arr).unwrap();
+    // thread_name metadata first, then the five events
+    assert_eq!(events.len(), 6);
+    let meta = &events[0];
+    assert_eq!(meta.get("ph").and_then(Json::as_str), Some("M"));
+    assert_eq!(
+        meta.get("args").and_then(|a| a.get("name")).and_then(Json::as_str),
+        Some("work")
+    );
+    let phase_of = |i: usize| events[i].get("ph").and_then(Json::as_str).unwrap();
+    let phases: Vec<&str> = (1..6).map(phase_of).collect();
+    assert_eq!(phases, ["X", "i", "C", "b", "e"]);
+    // X carries dur; instants are scoped; async pairs share a hex id
+    assert_eq!(events[1].get("dur").and_then(Json::as_f64), Some(5.0));
+    assert_eq!(events[2].get("s").and_then(Json::as_str), Some("t"));
+    let b_id = events[4].get("id").and_then(Json::as_str).unwrap();
+    assert!(b_id.starts_with("0x"), "async id not hex: {b_id}");
+    assert_eq!(events[5].get("id").and_then(Json::as_str), Some(b_id));
+    // the whole document survives a parse round-trip
+    let reparsed = Json::parse(&chrome.emit()).unwrap();
+    assert_eq!(
+        reparsed.get("traceEvents").and_then(Json::as_arr).map(<[Json]>::len),
+        Some(6)
+    );
+}
+
+#[test]
+fn metrics_snapshot_round_trips_through_json() {
+    let reg = MetricsRegistry::new();
+    reg.counter("xla.executions").add(42);
+    reg.gauge("engine.bench.queue_depth").set(-7);
+    let h = reg.histogram("xla.exec_us.block_fwd_q");
+    for v in [3u64, 17, 170, 1_700, 17_000] {
+        h.record(v);
+    }
+    let snap = reg.snapshot();
+    let text = snap.to_json().emit();
+    let back = MetricsSnapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back, snap);
+    // percentiles survive the round trip, not just the counts
+    let rt = &back.hists["xla.exec_us.block_fwd_q"];
+    assert_eq!(rt.percentile(50.0), snap.hists["xla.exec_us.block_fwd_q"].percentile(50.0));
+    assert_eq!(rt.max(), 17_000);
+}
+
+/// Every diagnostic must route through the leveled logger: `eprintln!` is
+/// allowed only inside the logger's own sink, `println!` only in the CLI
+/// and checked-in bins (stdout there is intentional machine/product
+/// output).  Keeps `--format json` pipelines and bench stdout byte-clean.
+#[test]
+fn no_stray_print_diagnostics_in_src() {
+    let src = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let mut offenders = Vec::new();
+    scan_dir(&src, &mut offenders);
+    assert!(
+        offenders.is_empty(),
+        "stray print diagnostics (route through obs::log macros):\n{}",
+        offenders.join("\n")
+    );
+}
+
+fn scan_dir(dir: &std::path::Path, offenders: &mut Vec<String>) {
+    for entry in std::fs::read_dir(dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.is_dir() {
+            scan_dir(&path, offenders);
+            continue;
+        }
+        if path.extension().and_then(|e| e.to_str()) != Some("rs") {
+            continue;
+        }
+        let rel = path.to_string_lossy().replace('\\', "/");
+        let in_logger = rel.ends_with("obs/log.rs");
+        let stdout_ok = rel.ends_with("main.rs") || rel.contains("/bin/");
+        let text = std::fs::read_to_string(&path).unwrap();
+        for (n, line) in text.lines().enumerate() {
+            let t = line.trim_start();
+            if t.starts_with("//") {
+                continue; // comments and docs may mention the macros
+            }
+            if t.contains("eprintln!") && !in_logger {
+                offenders.push(format!("{rel}:{}: eprintln!", n + 1));
+            }
+            if t.contains("println!") && !t.contains("eprintln!") && !stdout_ok {
+                offenders.push(format!("{rel}:{}: println!", n + 1));
+            }
+        }
+    }
+}
