@@ -21,7 +21,6 @@ use normtweak::error::Result;
 use normtweak::eval::LanguageModel;
 use normtweak::model::{ModelConfig, ModelWeights};
 use normtweak::obs::trace::TraceCollector;
-use normtweak::obs::Hist;
 use normtweak::quant::QuantScheme;
 use normtweak::runtime::Runtime;
 use normtweak::tensor::Tensor;
@@ -145,17 +144,6 @@ fn drive(mut engine: Engine, n_requests: usize) -> Result<RunMetrics> {
     })
 }
 
-/// Compact percentile view of one engine latency histogram.
-fn hist_json(h: &Hist) -> Json {
-    json::obj(vec![
-        ("count", json::n(h.count() as f64)),
-        ("p50", json::n(h.percentile(50.0) as f64)),
-        ("p90", json::n(h.percentile(90.0) as f64)),
-        ("p99", json::n(h.percentile(99.0) as f64)),
-        ("max", json::n(h.max() as f64)),
-    ])
-}
-
 /// Pull `--trace out.json` from argv; every other argument (cargo bench
 /// passes its own) is ignored.
 fn trace_arg() -> Option<String> {
@@ -241,16 +229,9 @@ fn main() {
             ("decode_tok_per_s", json::n(m.decode_tok_per_s)),
             // engine-measured per-phase latency percentiles (µs): recorded
             // by the scheduler itself, so queue wait and decode-step cost
-            // are split instead of folded into the client-side round trip
-            (
-                "latency_us",
-                json::obj(vec![
-                    ("queue", hist_json(&m.stats.queue_us)),
-                    ("prefill", hist_json(&m.stats.prefill_us)),
-                    ("decode_step", hist_json(&m.stats.decode_step_us)),
-                    ("e2e", hist_json(&m.stats.e2e_us)),
-                ]),
-            ),
+            // are split instead of folded into the client-side round trip;
+            // phases that never ran keep their keys with count: 0
+            ("latency_us", m.stats.latency_us_json()),
             ("failed", json::n(m.stats.failed as f64)),
             (
                 "first_error",

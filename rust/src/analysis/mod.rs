@@ -55,6 +55,7 @@
 //! | NT0308 | error | scheme grain has no exported graphs | re-export with the grain in `--groups` |
 //! | NT0309 | error | tweak-loss graph missing for this (loss, grain) | use an exported loss/grain pair |
 //! | NT0310 | error | sensitivity profile unreadable or internally inconsistent | re-run `normtweak plan` |
+//! | NT0311 | error | profile's recorded checkpoint hash drifts from `weights_<model>.ntz` | re-profile against the current checkpoint |
 //! | NT0401 | error | `max_batch` is 0 | use `max_batch >= 1` |
 //! | NT0402 | error | `batch_window` is zero | use a window >= 1ms |
 //! | NT0403 | warning | `max_batch` exceeds the largest exported batch bucket | lower `max_batch` or re-export |
@@ -69,6 +70,11 @@
 //! | NT0507 | error | tweak-loss graph does not end in a `f32[1]` loss | re-run the AOT export |
 //! | NT0508 | info | graph skipped: no contract reconstructable (unknown family/model) | — |
 //! | NT0509 | warning | no recorded output signature and no parseable HLO to check against | re-export to record `outputs` |
+//! | NT0601 | error | recipe unreadable, unparseable, or internally inconsistent | re-run `normtweak search` |
+//! | NT0602 | error | recipe grain has no exported graphs (recipe ↔ manifest drift) | re-export with the grain, or re-search |
+//! | NT0603 | error | recipe model drifts from the checked model / architecture | re-run `normtweak search` for this model |
+//! | NT0604 | error | recipe's tweak-loss graph missing for its (loss, grain) | use an exported loss/grain pair, or re-search |
+//! | NT0605 | error | recipe's sensitivity profile missing or content-drifted | re-profile and re-search |
 //!
 //! NT05xx fire only in **deep** mode (`check --graphs`, or the
 //! `--deep-check` preflight of `quantize`/`serve`): the `graphs` lint
@@ -81,6 +87,7 @@
 //! normtweak check [--manifest DIR] [--ckpt q.ntz] [--scheme gptq:w4g64]
 //!                 [--layer-bits 0:8,3:2] [--no-tweak]
 //!                 [--profile sensitivity.json] [--target-bits 2.25]
+//!                 [--recipe recipe.json]
 //!                 [--serve-config max_batch=8,batch_window_ms=2,deadline_ms=500]
 //!                 [--models w4=a.ntz] [--graphs]
 //!                 [--format human|json] [--deny-warnings]
@@ -95,6 +102,7 @@ pub mod diagnostics;
 pub mod graph_rules;
 pub mod hlo;
 pub mod manifest_rules;
+pub mod recipe_rules;
 pub mod scheme_rules;
 pub mod serve_rules;
 
@@ -139,6 +147,7 @@ pub mod codes {
     pub const GRAIN_UNEXPORTED: &str = "NT0308";
     pub const TWEAK_GRAPH: &str = "NT0309";
     pub const PROFILE_INVALID: &str = "NT0310";
+    pub const PROFILE_STALE: &str = "NT0311";
     pub const ZERO_MAX_BATCH: &str = "NT0401";
     pub const ZERO_BATCH_WINDOW: &str = "NT0402";
     pub const BATCH_OVER_BUCKET: &str = "NT0403";
@@ -153,6 +162,11 @@ pub mod codes {
     pub const GRAPH_TWEAK_LOSS: &str = "NT0507";
     pub const GRAPH_SKIPPED: &str = "NT0508";
     pub const GRAPH_NO_OUTPUTS: &str = "NT0509";
+    pub const RECIPE_INVALID: &str = "NT0601";
+    pub const RECIPE_GRAIN: &str = "NT0602";
+    pub const RECIPE_MODEL: &str = "NT0603";
+    pub const RECIPE_TWEAK_GRAPH: &str = "NT0604";
+    pub const RECIPE_PROFILE_STALE: &str = "NT0605";
 
     /// Every stable code with its one-line meaning, in code order.
     pub const ALL: &[(&str, &str)] = &[
@@ -183,6 +197,7 @@ pub mod codes {
         (GRAIN_UNEXPORTED, "scheme grain has no exported graphs"),
         (TWEAK_GRAPH, "tweak-loss graph missing for this loss/grain"),
         (PROFILE_INVALID, "sensitivity profile unreadable or inconsistent"),
+        (PROFILE_STALE, "profile's checkpoint hash drifts from the weights file"),
         (ZERO_MAX_BATCH, "max_batch is 0"),
         (ZERO_BATCH_WINDOW, "batch_window is zero"),
         (BATCH_OVER_BUCKET, "max_batch exceeds the largest exported bucket"),
@@ -197,6 +212,11 @@ pub mod codes {
         (GRAPH_TWEAK_LOSS, "tweak-loss graph does not end in a scalar loss"),
         (GRAPH_SKIPPED, "graph skipped: no contract reconstructable"),
         (GRAPH_NO_OUTPUTS, "no recorded output signature and no parseable HLO"),
+        (RECIPE_INVALID, "recipe unreadable, unparseable, or inconsistent"),
+        (RECIPE_GRAIN, "recipe grain has no exported graphs"),
+        (RECIPE_MODEL, "recipe model drifts from the checked model"),
+        (RECIPE_TWEAK_GRAPH, "recipe's tweak-loss graph missing for its loss/grain"),
+        (RECIPE_PROFILE_STALE, "recipe's sensitivity profile missing or drifted"),
     ];
 }
 
@@ -252,6 +272,12 @@ pub struct CheckContext {
     /// `--auto-bits` / `--target-bits` budget to test for feasibility
     /// against the profile's candidates.
     pub target_bits: Option<f32>,
+    /// Search recipe (`recipe.json`) to audit against the manifest, model,
+    /// and its recorded profile provenance (NT06xx).
+    pub recipe_path: Option<PathBuf>,
+    /// Float checkpoint (`weights_<model>.ntz`) the profile's recorded
+    /// `ckpt_hash` is verified against (NT0311); absent = skip the check.
+    pub weights_path: Option<PathBuf>,
     /// Engine/serve tuning under check.
     pub serve: Option<ServeCheck>,
     /// Deep mode: run the NT05xx `graphs` lint (parse every HLO ENTRY
@@ -300,7 +326,11 @@ fn build_graphs() -> Box<dyn Lint> {
     Box::new(graph_rules::GraphLint)
 }
 
-/// The built-in rule set, in run order (NT01xx → NT04xx).
+fn build_recipe() -> Box<dyn Lint> {
+    Box::new(recipe_rules::RecipeLint)
+}
+
+/// The built-in rule set, in run order (NT01xx → NT06xx).
 pub const LINT_REGISTRY: &[LintRegistration] = &[
     LintRegistration {
         name: "manifest",
@@ -326,6 +356,11 @@ pub const LINT_REGISTRY: &[LintRegistration] = &[
         name: "graphs",
         summary: "deep mode: HLO ENTRY signatures vs the reconstructed pipeline dataflow",
         build: build_graphs,
+    },
+    LintRegistration {
+        name: "recipe",
+        summary: "search recipe vs manifest grain, model, tweak graphs, profile provenance",
+        build: build_recipe,
     },
 ];
 
@@ -434,7 +469,7 @@ mod tests {
     fn registry_lists_every_lint() {
         assert_eq!(
             registered_lints(),
-            vec!["manifest", "checkpoint", "scheme", "serve", "graphs"]
+            vec!["manifest", "checkpoint", "scheme", "serve", "graphs", "recipe"]
         );
         for reg in registry() {
             assert_eq!((reg.build)().name(), reg.name);

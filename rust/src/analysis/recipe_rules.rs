@@ -1,0 +1,230 @@
+//! NT06xx — search recipe audits (the `recipe` lint).
+//!
+//! A `recipe.json` is a deployment decision frozen at search time; between
+//! then and replay, the artifacts it depends on can drift independently:
+//! the AOT export can drop the winning grain (NT0602), the checkpoint can
+//! be swapped for a different model (NT0603), the tweak-loss graph can
+//! disappear (NT0604), and the sensitivity profile the allocation was
+//! planned from can be regenerated with different scores (NT0605).  This
+//! lint re-derives each dependency from the live [`CheckContext`] and
+//! reports every mismatch, so `quantize --recipe` preflight and
+//! `normtweak check --recipe` fail loudly instead of silently deploying a
+//! stale allocation.
+
+use crate::search::Recipe;
+use crate::util::hash::file_hex;
+
+use super::codes;
+use super::diagnostics::{Diagnostic, Report};
+use super::{CheckContext, Lint};
+
+pub struct RecipeLint;
+
+/// All NT06xx checks for one recipe path.  No-ops when `ctx.recipe_path`
+/// is absent; every other input is optional and gates only its own check.
+pub fn recipe_diags(ctx: &CheckContext, report: &mut Report) {
+    let Some(path) = &ctx.recipe_path else { return };
+    let origin = path.display().to_string();
+    let recipe = match Recipe::load(path) {
+        Ok(r) => r,
+        Err(e) => {
+            report.push(
+                Diagnostic::error(codes::RECIPE_INVALID, format!("recipe unreadable: {e}"))
+                    .at(origin)
+                    .fix("re-run `normtweak search` to regenerate the recipe"),
+            );
+            return;
+        }
+    };
+
+    // NT0602: the winning grain must still be exported.  When it isn't,
+    // the tweak-graph check is suppressed — the graph cannot exist either,
+    // and one actionable finding beats two restatements of it (same
+    // convention as `scheme_rules::artifact_diags`).
+    let tag = recipe.group_tag();
+    let mut grain_exported = true;
+    if let Some(manifest) = &ctx.manifest {
+        if let Err(e) = manifest.validate_grain(&tag) {
+            grain_exported = false;
+            report.push(
+                Diagnostic::error(
+                    codes::RECIPE_GRAIN,
+                    format!("recipe grain `{tag}` drifted from the manifest: {e}"),
+                )
+                .at(origin.clone())
+                .field("scheme")
+                .fix(format!(
+                    "re-run the AOT export with `--groups` including `{tag}`, or \
+                     re-search against the current artifacts"
+                )),
+            );
+        }
+    }
+
+    // NT0603: the recipe must describe the model it is replayed against —
+    // by name, and by depth (a plan layer past the architecture would be
+    // rejected by the pipeline anyway, but here it is attributed to the
+    // recipe, not the flag that loaded it).
+    if let Some(cfg) = &ctx.model {
+        if recipe.model != cfg.name {
+            report.push(
+                Diagnostic::error(
+                    codes::RECIPE_MODEL,
+                    format!(
+                        "recipe was searched for model `{}` but checking against `{}`",
+                        recipe.model, cfg.name
+                    ),
+                )
+                .at(origin.clone())
+                .field("model")
+                .fix("re-run `normtweak search` for this model"),
+            );
+        } else if let Some((&layer, _)) =
+            recipe.plan.schemes.iter().find(|(&l, _)| l >= cfg.n_layer)
+        {
+            report.push(
+                Diagnostic::error(
+                    codes::RECIPE_MODEL,
+                    format!(
+                        "recipe plan allocates layer {layer}, but `{}` has {} layer(s)",
+                        cfg.name, cfg.n_layer
+                    ),
+                )
+                .at(origin.clone())
+                .field(format!("plan.layers[{layer}]"))
+                .fix("re-run `normtweak search` for this model"),
+            );
+        }
+    }
+
+    // NT0604: a tweaked recipe needs its loss's `tweak_step*` graph for
+    // this model at the winning grain.
+    if grain_exported {
+        if let (Some(tweak), Some(manifest), Some(model)) =
+            (&recipe.tweak, &ctx.manifest, &ctx.model_name)
+        {
+            let graph = tweak.loss.graph_name(&tag);
+            if manifest.graph(model, &graph).is_err() {
+                report.push(
+                    Diagnostic::error(
+                        codes::RECIPE_TWEAK_GRAPH,
+                        format!(
+                            "recipe tweaks with loss {:?} at grain `{tag}`, which needs \
+                             graph `{model}.{graph}` — not in the manifest (exported \
+                             grains: {})",
+                            tweak.loss,
+                            manifest.grain_tags().join(", ")
+                        ),
+                    )
+                    .at(origin.clone())
+                    .field("tweak")
+                    .fix("use an exported loss/grain pair, or re-run the AOT export"),
+                );
+            }
+        }
+    }
+
+    // NT0605: the profile the allocation was planned from must still be
+    // the file the recipe hashed.  The recorded path is tried as-is, then
+    // relative to the recipe's own directory (recipes are meant to move
+    // together with their profile).
+    let recorded = std::path::Path::new(&recipe.provenance.profile_path);
+    let resolved = if recorded.exists() {
+        Some(recorded.to_path_buf())
+    } else {
+        path.parent()
+            .map(|d| d.join(recorded))
+            .filter(|p| p.exists())
+    };
+    match resolved {
+        None => {
+            report.push(
+                Diagnostic::error(
+                    codes::RECIPE_PROFILE_STALE,
+                    format!(
+                        "recipe's sensitivity profile `{}` not found (tried as-is and \
+                         relative to the recipe)",
+                        recipe.provenance.profile_path
+                    ),
+                )
+                .at(origin)
+                .field("provenance.profile_path")
+                .fix("restore the profile next to the recipe, or re-search"),
+            );
+        }
+        Some(p) => match file_hex(&p) {
+            Ok(h) if h == recipe.provenance.profile_hash => {}
+            Ok(h) => {
+                report.push(
+                    Diagnostic::error(
+                        codes::RECIPE_PROFILE_STALE,
+                        format!(
+                            "recipe planned from profile {} (hash {}), but {} now \
+                             hashes to {h}; the allocation no longer reflects the \
+                             measured sensitivities",
+                            recipe.provenance.profile_path,
+                            recipe.provenance.profile_hash,
+                            p.display()
+                        ),
+                    )
+                    .at(origin)
+                    .field("provenance.profile_hash")
+                    .fix("re-run `normtweak search` against the current profile"),
+                );
+            }
+            Err(e) => {
+                report.push(
+                    Diagnostic::error(
+                        codes::RECIPE_PROFILE_STALE,
+                        format!("recipe's sensitivity profile unreadable: {e}"),
+                    )
+                    .at(origin)
+                    .field("provenance.profile_path")
+                    .fix("restore a readable profile, or re-search"),
+                );
+            }
+        },
+    }
+}
+
+impl Lint for RecipeLint {
+    fn name(&self) -> &'static str {
+        "recipe"
+    }
+
+    fn run(&self, ctx: &CheckContext, report: &mut Report) {
+        recipe_diags(ctx, report);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::run_lints;
+
+    #[test]
+    fn no_recipe_no_findings() {
+        let mut report = Report::new();
+        recipe_diags(&CheckContext::default(), &mut report);
+        assert!(report.is_empty());
+    }
+
+    #[test]
+    fn missing_recipe_is_nt0601() {
+        let ctx = CheckContext {
+            recipe_path: Some(std::path::PathBuf::from("/definitely/missing/recipe.json")),
+            ..CheckContext::default()
+        };
+        assert_eq!(run_lints(&ctx).codes(), vec![codes::RECIPE_INVALID]);
+    }
+
+    #[test]
+    fn garbage_recipe_is_nt0601() {
+        let dir = std::env::temp_dir().join("nt_recipe_lint_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.json");
+        std::fs::write(&path, "{").unwrap();
+        let ctx = CheckContext { recipe_path: Some(path), ..CheckContext::default() };
+        assert_eq!(run_lints(&ctx).codes(), vec![codes::RECIPE_INVALID]);
+    }
+}

@@ -160,6 +160,31 @@ pub fn profile_diags(ctx: &CheckContext, report: &mut Report) {
         }
     };
 
+    // NT0311: the profile records the checkpoint it was measured against;
+    // a re-exported weights file silently invalidates every score.  Only a
+    // *definite* mismatch fires — an unreadable weights file (or a profile
+    // predating the hash field) is not evidence of drift.
+    if let (Some(recorded), Some(wpath)) = (&profile.ckpt_hash, &ctx.weights_path) {
+        if let Ok(current) = crate::util::hash::file_hex(wpath) {
+            if &current != recorded {
+                report.push(
+                    Diagnostic::error(
+                        codes::PROFILE_STALE,
+                        format!(
+                            "sensitivity profile was measured against checkpoint \
+                             {recorded} but {} now hashes to {current}; every score \
+                             is stale",
+                            wpath.display()
+                        ),
+                    )
+                    .at(origin.clone())
+                    .field("ckpt_hash")
+                    .fix("re-run `normtweak plan` against the current checkpoint"),
+                );
+            }
+        }
+    }
+
     if let Some(cfg) = &ctx.model {
         if profile.model != cfg.name {
             report.push(

@@ -19,6 +19,7 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::obs::Hist;
+use crate::util::json::{self, Json};
 
 /// Counters for one registered model (one scheduler lane).
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
@@ -153,6 +154,37 @@ impl ModelStats {
             max_batch_seen: self.max_batch_seen,
         }
     }
+
+    /// The per-phase `latency_us` block of the `BENCH_serve.json` schema
+    /// that `trace_validate` audits: one `{count, p50, p90, p99, max}`
+    /// object per engine-measured phase (`queue`, `prefill`, `decode_step`,
+    /// `e2e`).
+    ///
+    /// The shape is stable regardless of what ran: a phase that never
+    /// dispatched (the offline mock fallback records no real batches, a
+    /// cache-only run records no decode steps) still emits its full object
+    /// with `count: 0` and zeroed percentiles — keys are never omitted, so
+    /// downstream parsers need exactly one schema.
+    pub fn latency_us_json(&self) -> Json {
+        json::obj(vec![
+            ("queue", hist_json(&self.queue_us)),
+            ("prefill", hist_json(&self.prefill_us)),
+            ("decode_step", hist_json(&self.decode_step_us)),
+            ("e2e", hist_json(&self.e2e_us)),
+        ])
+    }
+}
+
+/// Compact percentile view of one latency histogram; an empty histogram
+/// yields `count: 0` with zeroed percentiles, never a missing key.
+fn hist_json(h: &Hist) -> Json {
+    json::obj(vec![
+        ("count", json::n(h.count() as f64)),
+        ("p50", json::n(h.percentile(50.0) as f64)),
+        ("p90", json::n(h.percentile(90.0) as f64)),
+        ("p99", json::n(h.percentile(99.0) as f64)),
+        ("max", json::n(h.max() as f64)),
+    ])
 }
 
 /// Live per-lane gauges, written by the scheduler as it runs and readable
@@ -328,6 +360,39 @@ mod tests {
         assert_eq!(copy, s);
         assert_eq!(copy.e2e_us.count(), 2);
         assert!(copy.prefill_us.is_empty());
+    }
+
+    #[test]
+    fn empty_latency_block_keeps_full_schema() {
+        // the mock-fallback / cache-only case: nothing dispatched, yet the
+        // block must still carry every phase and every field (count: 0)
+        let lat = ModelStats::default().latency_us_json();
+        for phase in ["queue", "prefill", "decode_step", "e2e"] {
+            let h = lat.get(phase).unwrap_or_else(|| panic!("missing phase {phase}"));
+            for field in ["count", "p50", "p90", "p99", "max"] {
+                assert_eq!(
+                    h.get(field).and_then(|v| v.as_f64()),
+                    Some(0.0),
+                    "{phase}.{field} should be present and zero"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn latency_block_reports_recorded_phases() {
+        let mut s = ModelStats::default();
+        s.e2e_us.record(100);
+        s.e2e_us.record(200);
+        let lat = s.latency_us_json();
+        let e2e = lat.get("e2e").unwrap();
+        assert_eq!(e2e.get("count").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(e2e.get("max").and_then(|v| v.as_f64()), Some(200.0));
+        // untouched phases stay at the count-zero shape, not absent
+        assert_eq!(
+            lat.get("queue").and_then(|q| q.get("count")).and_then(|v| v.as_f64()),
+            Some(0.0)
+        );
     }
 
     #[test]

@@ -43,6 +43,7 @@ pub mod policy;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod search;
 pub mod serve;
 pub mod tensor;
 pub mod tweak;

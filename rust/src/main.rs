@@ -7,8 +7,11 @@
 //! normtweak generate [--n 4] [--len 48]
 //! normtweak serve    [--checkpoint path | --models w4=a.ntz,w2=b.ntz]
 //!                    [--requests 64] [--clients 4] [--deadline-ms 500] [--cache 256]
+//! normtweak search   --target-bits 2.25 [--budget N] [--methods rtn,gptq]
+//!                    [--resume state.json] [--out recipe.json] [--ppl]
 //! normtweak check    [--manifest DIR] [--ckpt q.ntz] [--scheme gptq:w4g64]
-//!                    [--graphs] [--format human|json] [--deny-warnings]
+//!                    [--recipe recipe.json] [--graphs] [--format human|json]
+//!                    [--deny-warnings]
 //! ```
 
 // same discipline as the library crate: the binary reports failures as
@@ -29,7 +32,12 @@ use normtweak::policy::{
 };
 use normtweak::report::{f2, f4, save_record, Table};
 use normtweak::runtime::{ArtifactManifest, Runtime};
+use normtweak::search::{
+    default_tweak_grid, Recipe, RecipeProvenance, SearchConfig, SearchOutcome, SearchRunner,
+    SpaceConfig,
+};
 use normtweak::tweak::LossKind;
+use normtweak::util::hash::file_hex;
 use normtweak::util::json;
 use normtweak::Config;
 
@@ -41,16 +49,18 @@ fn allowed_flags(cmd: &str) -> Option<&'static [&'static str]> {
     match cmd {
         "quantize" => Some(&["method", "bits", "group", "layer-bits", "no-tweak",
                              "calib", "out", "auto-bits", "profile", "deep-check",
-                             "trace"]),
+                             "trace", "recipe", "dry-run"]),
         "plan" => Some(&["method", "bits", "group", "calib", "target-bits",
-                         "candidates", "loss", "profile", "out"]),
+                         "candidates", "loss", "profile", "out", "format"]),
+        "search" => Some(&["target-bits", "budget", "resume", "out", "profile",
+                           "methods", "seed", "ppl", "trace"]),
         "eval" => Some(&["checkpoint", "float", "ppl", "tasks"]),
         "generate" => Some(&["n", "len"]),
         "serve" => Some(&["checkpoint", "requests", "clients", "models",
                           "deadline-ms", "cache", "deep-check", "trace"]),
         "check" => Some(&["ckpt", "manifest", "scheme", "layer-bits", "no-tweak",
                           "profile", "target-bits", "serve-config", "models",
-                          "graphs", "format", "deny-warnings"]),
+                          "recipe", "graphs", "format", "deny-warnings"]),
         "help" | "--help" => Some(&[]),
         _ => None,
     }
@@ -138,11 +148,17 @@ USAGE:
   normtweak quantize [--config cfg.toml] [--model M] [--method gptq] [--bits 4]
                      [--group 0] [--layer-bits 0:8,11:8] [--no-tweak]
                      [--auto-bits 2.25] [--profile sensitivity.json]
+                     [--recipe recipe.json] [--dry-run]
                      [--calib gen-v2] [--out path] [--deep-check]
                      [--trace trace.json]
   normtweak plan     --target-bits 2.25 [--model M] [--method gptq] [--bits 2]
                      [--group 64] [--candidates 2,3,4,8] [--loss dist]
                      [--calib gen-v2] [--profile path] [--out sensitivity.json]
+                     [--format human|json]
+  normtweak search   --target-bits 2.25 [--model M] [--budget 4]
+                     [--methods rtn,gptq] [--profile sensitivity.json]
+                     [--seed 7] [--resume state.json] [--out recipe.json]
+                     [--ppl wiki-syn] [--trace trace.json]
   normtweak eval     [--checkpoint path | --float] [--model M]
                      [--ppl wiki-syn,c4-syn] [--tasks hellaswag-syn,...]
   normtweak generate [--model M] [--n 4] [--len 48]
@@ -153,8 +169,8 @@ USAGE:
                      [--scheme gptq:w4g64] [--layer-bits 0:8,3:2] [--no-tweak]
                      [--profile sensitivity.json] [--target-bits 2.25]
                      [--serve-config max_batch=8,batch_window_ms=2]
-                     [--models w4=a.ntz] [--graphs] [--format human|json]
-                     [--deny-warnings]
+                     [--models w4=a.ntz] [--recipe recipe.json] [--graphs]
+                     [--format human|json] [--deny-warnings]
   normtweak help
 
 MULTI-MODEL SERVING:
@@ -172,7 +188,33 @@ AUTOMATIC MIXED PRECISION:
   and prints the greedy allocation whose mean width fits --target-bits.
   `quantize --auto-bits B` runs the same planner — reusing an existing
   sensitivity.json (or --profile PATH) instead of re-profiling — and feeds
-  the resulting per-layer overrides straight into the pipeline.
+  the resulting per-layer overrides straight into the pipeline. `plan
+  --format json` prints the allocation as machine-clean normtweak.plan.v1
+  JSON on stdout — the same schema a recipe embeds.
+
+RECIPE SEARCH:
+  `search` enumerates scheme assignments (--methods from the quantizer
+  registry x the manifest's exported grains x a tweak hyper-parameter grid
+  around the configured base), prunes the space against the persisted
+  sensitivity profile without touching the model, escalates the surviving
+  (method, grain) groups — at most --budget of them — to offline trial
+  quantization scored with the tweak-loss kernels, and optionally (--ppl
+  [corpus]) scores the winning group by held-out perplexity. Search state
+  checkpoints after every escalation (--resume PATH picks the state file),
+  so a killed run resumes without repeating finished trials. The winner
+  plus the scored frontier persist as a replayable recipe.json (--out)
+  with full provenance: manifest hash, profile path + content hash, the
+  exact space and seed, and per-stage funnel counts.
+
+  `quantize --recipe recipe.json` replays a recipe bit-exactly — the
+  method, base scheme, tweak point, and every per-layer width come from
+  the recipe (mutually exclusive with --method/--bits/--group/
+  --layer-bits/--auto-bits/--no-tweak), after an NT06xx preflight against
+  the live artifacts. `--dry-run` prints the recipe's per-layer scheme map
+  as JSON and exits without loading anything. `check --recipe` runs the
+  same NT06xx audit standalone: recipe grain vs manifest grain table,
+  recipe model vs checkpoint architecture, tweak-loss graph presence, and
+  sensitivity-profile provenance (path + content hash).
 
 PRE-FLIGHT CHECK:
   `check` lints artifacts and configs offline — no XLA client, no model
@@ -233,6 +275,13 @@ fn check_profile_matches(
         )));
     }
     Ok(())
+}
+
+/// The float checkpoint whose bytes sensitivity profiles pin: profiles
+/// record its hash at measure time, and `plan`/`search` preflights compare
+/// it against the file on disk (NT0311) before reusing scores.
+fn weights_file(cfg: &Config) -> std::path::PathBuf {
+    std::path::Path::new(&cfg.run.artifacts).join(format!("weights_{}.ntz", cfg.run.model))
 }
 
 /// Parse `--candidates 2,3,4,8` into candidate bit widths.
@@ -329,7 +378,9 @@ fn run() -> normtweak::Result<()> {
     if let Some(c) = args.get("calib") {
         cfg.calib.source = c.to_string();
     }
-    if let Some(p) = args.get("ppl") {
+    // `search` reuses --ppl as its stage-2 opt-in (value optional), so only
+    // the eval-style commands treat it as the corpus list
+    if let Some(p) = args.get("ppl").filter(|_| args.cmd != "search") {
         cfg.eval.ppl = p.split(',').map(String::from).collect();
     }
     if let Some(t) = args.get("tasks") {
@@ -347,6 +398,51 @@ fn run() -> normtweak::Result<()> {
 
     match args.cmd.as_str() {
         "quantize" => {
+            // --recipe replays a persisted search product instead of
+            // assembling a config from flags; the two sources are mutually
+            // exclusive so a replay can never be silently half-overridden
+            let recipe = match args.get("recipe") {
+                Some(rpath) => {
+                    for f in ["method", "bits", "group", "layer-bits",
+                              "auto-bits", "no-tweak", "profile"] {
+                        if args.has(f) {
+                            return Err(normtweak::Error::Config(format!(
+                                "--{f} is mutually exclusive with --recipe: the \
+                                 recipe pins the method, scheme, tweak, and \
+                                 per-layer widths"
+                            )));
+                        }
+                    }
+                    if args.has("dry-run") {
+                        // offline: print the per-layer scheme map and exit
+                        // before any artifact or checkpoint loads
+                        let r = Recipe::load(rpath)?;
+                        println!("{}", r.layer_map_json().emit());
+                        return Ok(());
+                    }
+                    // NT06xx preflight: the recipe must still describe the
+                    // live artifacts (grain exported, model matches, tweak
+                    // graph present, profile unchanged) before replay
+                    analysis::preflight(&analysis::CheckContext {
+                        manifest: ArtifactManifest::load(&cfg.run.artifacts).ok(),
+                        model: ModelConfig::builtin(&cfg.run.model).ok(),
+                        model_name: Some(cfg.run.model.clone()),
+                        recipe_path: Some(std::path::PathBuf::from(rpath)),
+                        ..Default::default()
+                    })?;
+                    Some(Recipe::load(rpath)?)
+                }
+                None => {
+                    if args.has("dry-run") {
+                        return Err(normtweak::Error::Config(
+                            "--dry-run needs --recipe recipe.json (it prints the \
+                             recipe's per-layer scheme map)"
+                                .into(),
+                        ));
+                    }
+                    None
+                }
+            };
             let (mut runtime, weights) = load_ctx()?;
             let trace_cfg = init_trace(&args);
             if let Some((tc, _)) = &trace_cfg {
@@ -365,64 +461,80 @@ fn run() -> normtweak::Result<()> {
             let out = args.get_or("out", "artifacts/quantized.ntz");
             let calib = build_calib(&runtime, &weights, &cfg.calib.source,
                                     cfg.calib.n_samples, cfg.calib.seed)?;
-            let mut pcfg = PipelineConfig::new(cfg.method()?, cfg.scheme());
-            for (layer, scheme) in cfg.layer_schemes()? {
-                pcfg = pcfg.with_layer_scheme(layer, scheme);
-            }
-            if let Some(budget) = args.get("auto-bits") {
-                if !cfg.quant.layer_bits.is_empty() {
-                    return Err(normtweak::Error::Config(
-                        "--auto-bits is mutually exclusive with --layer-bits / \
-                         [quant] layer_bits: the planner emits the per-layer \
-                         overrides itself"
-                            .into(),
-                    ));
-                }
-                let target: f32 = budget
-                    .parse()
-                    .map_err(|_| normtweak::Error::Config("bad --auto-bits".into()))?;
-                let default_profile = format!("{}/sensitivity.json", cfg.run.artifacts);
-                let ppath = args.get_or("profile", &default_profile);
-                let profile = if std::path::Path::new(&ppath).exists() {
-                    let p = SensitivityProfile::load(&ppath)?;
-                    check_profile_matches(&p, &ppath, &weights.config)?;
-                    normtweak::log_info!(
-                        "quantize",
-                        "auto-bits: reusing profile {ppath} ({})",
-                        p.provenance()
-                    );
-                    p
-                } else {
-                    let mut scfg = SensitivityConfig::new(cfg.method()?, cfg.scheme());
-                    scfg.loss = LossKind::from_str(&cfg.tweak.loss)?;
-                    let p = SensitivityProfiler::new(&runtime, &weights, scfg)
-                        .profile(&calib)?;
-                    p.save(&ppath)?;
-                    normtweak::log_info!(
-                        "quantize",
-                        "auto-bits: profiled {} layers -> {ppath}",
-                        p.layers.len()
-                    );
-                    p
-                };
-                let plan = BitBudgetPlanner::new(cfg.scheme(), target).plan(&profile)?;
+            let mut pcfg;
+            if let Some(r) = &recipe {
                 normtweak::log_info!(
                     "quantize",
-                    "auto-bits plan: mean {:.3} bits (target {target}); --layer-bits {}",
-                    plan.mean_bits,
-                    plan.layer_bits_string()
+                    "replaying recipe for {}: {}{} across {} planned layer(s)",
+                    r.model,
+                    r.method,
+                    if r.tweak.is_some() { "+NT" } else { "" },
+                    r.plan.schemes.len()
                 );
-                for (layer, scheme) in &plan.schemes {
-                    pcfg = pcfg.with_layer_scheme(*layer, *scheme);
+                pcfg = r.to_pipeline_config()?;
+            } else {
+                pcfg = PipelineConfig::new(cfg.method()?, cfg.scheme());
+                for (layer, scheme) in cfg.layer_schemes()? {
+                    pcfg = pcfg.with_layer_scheme(layer, scheme);
                 }
-                pcfg = pcfg.with_plan_note(format!(
-                    "auto-bits {target}: mean {:.3} bits from {}",
-                    plan.mean_bits,
-                    profile.provenance()
-                ));
-            }
-            if let Some(t) = cfg.tweak_config()? {
-                pcfg = pcfg.with_tweak(t);
+                if let Some(budget) = args.get("auto-bits") {
+                    if !cfg.quant.layer_bits.is_empty() {
+                        return Err(normtweak::Error::Config(
+                            "--auto-bits is mutually exclusive with --layer-bits / \
+                             [quant] layer_bits: the planner emits the per-layer \
+                             overrides itself"
+                                .into(),
+                        ));
+                    }
+                    let target: f32 = budget
+                        .parse()
+                        .map_err(|_| normtweak::Error::Config("bad --auto-bits".into()))?;
+                    let default_profile = format!("{}/sensitivity.json", cfg.run.artifacts);
+                    let ppath = args.get_or("profile", &default_profile);
+                    let profile = if std::path::Path::new(&ppath).exists() {
+                        let p = SensitivityProfile::load(&ppath)?;
+                        check_profile_matches(&p, &ppath, &weights.config)?;
+                        normtweak::log_info!(
+                            "quantize",
+                            "auto-bits: reusing profile {ppath} ({})",
+                            p.provenance()
+                        );
+                        p
+                    } else {
+                        let mut scfg = SensitivityConfig::new(cfg.method()?, cfg.scheme());
+                        scfg.loss = LossKind::from_str(&cfg.tweak.loss)?;
+                        let mut p = SensitivityProfiler::new(&runtime, &weights, scfg)
+                            .profile(&calib)?;
+                        // pin the checkpoint the scores were measured on, so
+                        // a later plan/search run can detect drift (NT0311)
+                        p.ckpt_hash = file_hex(weights_file(&cfg)).ok();
+                        p.save(&ppath)?;
+                        normtweak::log_info!(
+                            "quantize",
+                            "auto-bits: profiled {} layers -> {ppath}",
+                            p.layers.len()
+                        );
+                        p
+                    };
+                    let plan = BitBudgetPlanner::new(cfg.scheme(), target).plan(&profile)?;
+                    normtweak::log_info!(
+                        "quantize",
+                        "auto-bits plan: mean {:.3} bits (target {target}); --layer-bits {}",
+                        plan.mean_bits,
+                        plan.layer_bits_string()
+                    );
+                    for (layer, scheme) in &plan.schemes {
+                        pcfg = pcfg.with_layer_scheme(*layer, *scheme);
+                    }
+                    pcfg = pcfg.with_plan_note(format!(
+                        "auto-bits {target}: mean {:.3} bits from {}",
+                        plan.mean_bits,
+                        profile.provenance()
+                    ));
+                }
+                if let Some(t) = cfg.tweak_config()? {
+                    pcfg = pcfg.with_tweak(t);
+                }
             }
             let (qm, metrics) = quantize_model(&runtime, &weights, &calib, &pcfg)?;
             qm.save(&out)?;
@@ -440,6 +552,12 @@ fn run() -> normtweak::Result<()> {
             }
         }
         "plan" => {
+            let format = args.get_or("format", "human");
+            if format != "human" && format != "json" {
+                return Err(normtweak::Error::Config(format!(
+                    "bad --format `{format}` (accepted: human, json)"
+                )));
+            }
             let (runtime, weights) = load_ctx()?;
             let target: f32 = args
                 .get("target-bits")
@@ -483,8 +601,11 @@ fn run() -> normtweak::Result<()> {
                     }
                     let calib = build_calib(&runtime, &weights, &cfg.calib.source,
                                             cfg.calib.n_samples, cfg.calib.seed)?;
-                    let prof = SensitivityProfiler::new(&runtime, &weights, scfg)
+                    let mut prof = SensitivityProfiler::new(&runtime, &weights, scfg)
                         .profile(&calib)?;
+                    // pin the checkpoint the scores were measured on, so a
+                    // later plan/search run can detect drift (NT0311)
+                    prof.ckpt_hash = file_hex(weights_file(&cfg)).ok();
                     prof.save(&out)?;
                     normtweak::log_info!(
                         "plan",
@@ -511,16 +632,23 @@ fn run() -> normtweak::Result<()> {
                 }),
                 profile_path: Some(std::path::PathBuf::from(args.get_or("profile", &out))),
                 target_bits: Some(target),
+                weights_path: Some(weights_file(&cfg)),
                 ..Default::default()
             })?;
             let plan = BitBudgetPlanner::new(base, target).plan(&profile)?;
-            let table = normtweak::report::repro::plan_table(&profile, &plan, target);
-            print!("{}", table.ascii());
-            println!(
-                "mean {:.3} bits <= target {target}; --layer-bits {}",
-                plan.mean_bits,
-                plan.layer_bits_string()
-            );
+            if format == "json" {
+                // machine-clean stdout: exactly the normtweak.plan.v1 tree a
+                // recipe embeds (narration stays on stderr via the logger)
+                println!("{}", plan.to_json().emit());
+            } else {
+                let table = normtweak::report::repro::plan_table(&profile, &plan, target);
+                print!("{}", table.ascii());
+                println!(
+                    "mean {:.3} bits <= target {target}; --layer-bits {}",
+                    plan.mean_bits,
+                    plan.layer_bits_string()
+                );
+            }
             save_record(
                 &cfg.run.artifacts,
                 "last_plan",
@@ -531,6 +659,198 @@ fn run() -> normtweak::Result<()> {
                     ("layer_bits", json::s(plan.layer_bits_string())),
                 ]),
             )?;
+        }
+        "search" => {
+            let target: f32 = args
+                .get("target-bits")
+                .ok_or_else(|| {
+                    normtweak::Error::Config(
+                        "search needs --target-bits <avg bits>, e.g. --target-bits 2.25"
+                            .into(),
+                    )
+                })?
+                .parse()
+                .map_err(|_| normtweak::Error::Config("bad --target-bits".into()))?;
+            let budget = args.get_usize("budget", 2).max(1);
+            let seed: u64 = match args.get("seed") {
+                Some(v) => v
+                    .parse()
+                    .map_err(|_| normtweak::Error::Config("bad --seed".into()))?,
+                None => cfg.calib.seed,
+            };
+            let default_out = format!("{}/recipe.json", cfg.run.artifacts);
+            let out = args.get_or("out", &default_out);
+            let state_path = args.get_or("resume", &format!("{out}.state"));
+
+            // the search itself is offline: it scores trial quantizations on
+            // the float checkpoint directly, with no XLA client. A missing
+            // checkpoint degrades to seeded synthetic weights so fixture-only
+            // environments (CI) can still exercise the full funnel.
+            let wfile = weights_file(&cfg);
+            let weights = if wfile.exists() {
+                ModelWeights::load_from_dir(&cfg.run.model, &cfg.run.artifacts)?
+            } else {
+                normtweak::log_warn!(
+                    "search",
+                    "no float checkpoint at {}; scoring trials on seeded \
+                     synthetic weights",
+                    wfile.display()
+                );
+                ModelWeights::random(ModelConfig::builtin(&cfg.run.model)?, seed)
+            };
+
+            // stage 0 needs a persisted profile — search never re-measures
+            let default_profile = format!("{}/sensitivity.json", cfg.run.artifacts);
+            let ppath = args.get_or("profile", &default_profile);
+            if !std::path::Path::new(&ppath).exists() {
+                return Err(normtweak::Error::Config(format!(
+                    "search plans from a persisted sensitivity profile, and \
+                     {ppath} does not exist; run `normtweak plan --target-bits \
+                     {target}` first (or point --profile at one)"
+                )));
+            }
+            let profile = SensitivityProfile::load(&ppath)?;
+            check_profile_matches(&profile, &ppath, &weights.config)?;
+
+            // axes: methods from the flag (default: the configured method),
+            // grains from the manifest's exported grain table (a grain the
+            // AOT export never compiled cannot be deployed), tweak grid
+            // around the configured base point
+            let manifest = ArtifactManifest::load(&cfg.run.artifacts).ok();
+            let methods: Vec<String> = match args.get("methods") {
+                Some(csv) => csv
+                    .split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect(),
+                None => vec![cfg.quant.method.clone()],
+            };
+            let grains: Vec<String> = match &manifest {
+                Some(m) => m.grain_tags().iter().map(|t| t.to_string()).collect(),
+                None => vec![profile.group_tag.clone()],
+            };
+            let tweak_grid = match cfg.tweak_config()? {
+                Some(t) => default_tweak_grid(t),
+                None => vec![None],
+            };
+            let space = SpaceConfig { methods, grains, tweak_grid, target_bits: target };
+
+            // lint-backed preflight: profile provenance (NT0307/NT0310/
+            // NT0311), budget feasibility (NT0306) — before any trial runs
+            analysis::preflight(&analysis::CheckContext {
+                manifest,
+                model: Some(weights.config.clone()),
+                model_name: Some(cfg.run.model.clone()),
+                profile_path: Some(std::path::PathBuf::from(&ppath)),
+                target_bits: Some(target),
+                weights_path: Some(wfile.clone()),
+                ..Default::default()
+            })?;
+
+            // optional stage 2: held-out perplexity through the runtime —
+            // the only part of search that constructs an XLA client
+            let ppl_ctx = if args.has("ppl") {
+                let runtime = Runtime::new(&cfg.run.artifacts)?;
+                let calib = build_calib(&runtime, &weights, &cfg.calib.source,
+                                        cfg.calib.n_samples, cfg.calib.seed)?;
+                let corpus = match args.get("ppl") {
+                    Some("true") | None => cfg
+                        .eval
+                        .ppl
+                        .first()
+                        .cloned()
+                        .unwrap_or_else(|| "wiki-syn".to_string()),
+                    Some(c) => c.to_string(),
+                };
+                Some((runtime, calib, corpus))
+            } else {
+                None
+            };
+
+            let trace_cfg = init_trace(&args);
+            let scfg = SearchConfig { space: space.clone(), budget, seed };
+            let mut runner =
+                SearchRunner::new(&profile, &weights, scfg).with_state_path(&state_path);
+            if let Some((tc, _)) = &trace_cfg {
+                runner = runner.with_trace(tc.clone());
+            }
+            if let Some((runtime, calib, corpus)) = &ppl_ctx {
+                let weights = &weights;
+                let ppl_tokens = cfg.eval.ppl_tokens;
+                runner = runner.with_ppl(Box::new(move |cand, plan| {
+                    let min_bits = plan
+                        .schemes
+                        .values()
+                        .map(|s| s.bits)
+                        .min()
+                        .ok_or_else(|| normtweak::Error::Config("empty plan".into()))?;
+                    let mut pcfg = PipelineConfig::new(&cand.method, cand.scheme(min_bits)?);
+                    if let Some(t) = cand.tweak {
+                        pcfg = pcfg.with_tweak(t);
+                    }
+                    for (l, s) in &plan.schemes {
+                        pcfg = pcfg.with_layer_scheme(*l, *s);
+                    }
+                    let (qm, _) = quantize_model(runtime, weights, calib, &pcfg)?;
+                    let qr = QuantModel::new(runtime, &qm)?;
+                    ppl::perplexity(&qr, corpus, ppl_tokens, 8)
+                }));
+            }
+
+            let outcome = runner.run()?.ok_or_else(|| {
+                normtweak::Error::Config(
+                    "search stopped before completing stage 1; re-run to resume \
+                     from the checkpoint"
+                        .into(),
+                )
+            })?;
+            let SearchOutcome { winner, plan, frontier, stats } = outcome;
+            let min_bits = plan
+                .schemes
+                .values()
+                .map(|s| s.bits)
+                .min()
+                .ok_or_else(|| normtweak::Error::Config("search plan is empty".into()))?;
+            let recipe = Recipe {
+                model: cfg.run.model.clone(),
+                method: winner.method.clone(),
+                scheme: winner.scheme(min_bits)?,
+                tweak: winner.tweak,
+                plan,
+                provenance: RecipeProvenance {
+                    manifest_hash: file_hex(
+                        std::path::Path::new(&cfg.run.artifacts).join("manifest.json"),
+                    )
+                    .ok(),
+                    profile_path: ppath.clone(),
+                    profile_hash: file_hex(&ppath)?,
+                    space,
+                    seed,
+                    budget,
+                    stats,
+                },
+                frontier,
+            };
+            recipe.save(&out)?;
+            println!(
+                "search: winner {}@{}{} — mean {:.3} bits over {} layer(s); \
+                 funnel {} enumerated -> {} pruned -> {} escalated -> {} scored",
+                recipe.method,
+                recipe.group_tag(),
+                if recipe.tweak.is_some() { "+NT" } else { "" },
+                recipe.plan.mean_bits,
+                recipe.plan.schemes.len(),
+                recipe.provenance.stats.enumerated,
+                recipe.provenance.stats.pruned,
+                recipe.provenance.stats.escalated,
+                recipe.provenance.stats.scored,
+            );
+            println!(
+                "recipe -> {out}; replay with `normtweak quantize --recipe {out}`"
+            );
+            if let Some((tc, path)) = &trace_cfg {
+                write_trace(tc, path)?;
+            }
         }
         "eval" => {
             let (runtime, weights) = load_ctx()?;
@@ -679,6 +999,10 @@ fn run() -> normtweak::Result<()> {
                 model_name: Some(mcfg.name.clone()),
                 model: Some(mcfg),
                 profile_path: args.get("profile").map(std::path::PathBuf::from),
+                recipe_path: args.get("recipe").map(std::path::PathBuf::from),
+                // lets the profile/recipe provenance audits compare recorded
+                // checkpoint hashes against the file actually on disk
+                weights_path: Some(weights_file(&cfg)),
                 graphs: args.has("graphs"),
                 ..Default::default()
             };
@@ -1025,6 +1349,54 @@ mod tests {
         assert!(HELP.contains("--trace"));
         assert!(HELP.contains("NORMTWEAK_LOG"));
         assert!(HELP.contains("chrome://tracing"));
+    }
+
+    #[test]
+    fn search_flags_parse() {
+        let a = parse(&["search", "--target-bits", "2.5", "--budget", "2",
+                        "--methods", "rtn,gptq", "--seed", "7",
+                        "--resume", "s.json", "--out", "r.json", "--ppl"]).unwrap();
+        assert_eq!(a.cmd, "search");
+        assert_eq!(a.get("target-bits"), Some("2.5"));
+        assert_eq!(a.get("methods"), Some("rtn,gptq"));
+        assert!(a.has("ppl"));
+        // the trace collector threads through search's policy spans too
+        assert!(parse(&["search", "--trace", "t.json"]).is_ok());
+        // search-only flags stay rejected elsewhere
+        assert!(parse(&["quantize", "--budget", "2"]).is_err());
+        assert!(parse(&["eval", "--methods", "rtn"]).is_err());
+        assert!(parse(&["plan", "--resume", "s.json"]).is_err());
+    }
+
+    #[test]
+    fn recipe_flags_parse_where_they_replay() {
+        let a = parse(&["quantize", "--recipe", "r.json", "--dry-run"]).unwrap();
+        assert_eq!(a.get("recipe"), Some("r.json"));
+        assert!(a.has("dry-run"));
+        assert!(parse(&["check", "--recipe", "r.json"]).is_ok());
+        // no replay path behind eval/serve/plan
+        assert!(parse(&["eval", "--recipe", "r.json"]).is_err());
+        assert!(parse(&["serve", "--recipe", "r.json"]).is_err());
+        assert!(parse(&["plan", "--dry-run"]).is_err());
+    }
+
+    #[test]
+    fn plan_format_flag_parses() {
+        let a = parse(&["plan", "--target-bits", "2.25", "--format", "json"]).unwrap();
+        assert_eq!(a.get("format"), Some("json"));
+        // format is a plan/check notion, not an eval one
+        assert!(parse(&["eval", "--format", "json"]).is_err());
+    }
+
+    #[test]
+    fn help_documents_search_and_recipes() {
+        assert!(HELP.contains("normtweak search"));
+        assert!(HELP.contains("--budget"));
+        assert!(HELP.contains("--resume"));
+        assert!(HELP.contains("recipe.json"));
+        assert!(HELP.contains("--dry-run"));
+        assert!(HELP.contains("NT06xx"));
+        assert!(HELP.contains("--ppl"));
     }
 
     #[test]

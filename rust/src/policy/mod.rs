@@ -35,7 +35,7 @@
 mod planner;
 mod sensitivity;
 
-pub use planner::{BitBudgetPlanner, BitPlan};
+pub use planner::{BitBudgetPlanner, BitPlan, PLAN_SCHEMA};
 pub use sensitivity::{
     score_layer, LayerSensitivity, SensitivityConfig, SensitivityProfile, SensitivityProfiler,
     DEFAULT_CANDIDATES,

@@ -13,6 +13,7 @@ use std::collections::BTreeMap;
 
 use crate::error::{Error, Result};
 use crate::quant::QuantScheme;
+use crate::util::json::{n, obj, Json};
 
 use super::sensitivity::SensitivityProfile;
 
@@ -47,7 +48,91 @@ impl BitPlan {
             .collect::<Vec<_>>()
             .join(",")
     }
+
+    /// The machine-readable allocation — one schema shared by
+    /// `normtweak plan --format json` stdout and the `plan` section of a
+    /// search recipe artifact, so external tooling parses one shape.
+    /// `layers` maps layer index to `{bits, group}` (`group` null =
+    /// per-channel).
+    pub fn to_json(&self) -> Json {
+        let layers: BTreeMap<String, Json> = self
+            .schemes
+            .iter()
+            .map(|(l, s)| {
+                (
+                    l.to_string(),
+                    obj(vec![
+                        ("bits", n(f64::from(s.bits))),
+                        ("group", s.group_size.map_or(Json::Null, |g| n(g as f64))),
+                    ]),
+                )
+            })
+            .collect();
+        obj(vec![
+            ("schema", crate::util::json::s(PLAN_SCHEMA)),
+            ("target_bits", n(f64::from(self.target_bits))),
+            ("mean_bits", n(f64::from(self.mean_bits))),
+            ("provenance", crate::util::json::s(self.provenance.clone())),
+            ("layers", Json::Obj(layers)),
+        ])
+    }
+
+    /// Inverse of [`BitPlan::to_json`]; rejects unknown schemas and
+    /// malformed layer entries so a hand-edited recipe fails loudly.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let bad = |m: &str| Error::Json(format!("bit plan: {m}"));
+        match j.get("schema").and_then(|v| v.as_str()) {
+            Some(PLAN_SCHEMA) => {}
+            other => {
+                return Err(bad(&format!(
+                    "schema `{}` (expected `{PLAN_SCHEMA}`)",
+                    other.unwrap_or("<missing>")
+                )))
+            }
+        }
+        let target_bits = j
+            .get("target_bits")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| bad("missing `target_bits`"))? as f32;
+        let mean_bits = j
+            .get("mean_bits")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| bad("missing `mean_bits`"))? as f32;
+        let provenance = j
+            .get("provenance")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| bad("missing `provenance`"))?
+            .to_string();
+        let raw = j
+            .get("layers")
+            .and_then(|v| v.as_obj())
+            .ok_or_else(|| bad("missing `layers` object"))?;
+        let mut schemes = BTreeMap::new();
+        for (k, v) in raw {
+            let layer: usize = k
+                .parse()
+                .map_err(|_| bad(&format!("bad layer key `{k}`")))?;
+            let bits = v
+                .get("bits")
+                .and_then(|b| b.as_usize())
+                .filter(|&b| b > 0 && b <= u8::MAX as usize)
+                .ok_or_else(|| bad(&format!("layer {layer}: bad `bits`")))?
+                as u8;
+            let group_size = match v.get("group") {
+                None | Some(Json::Null) => None,
+                Some(g) => Some(
+                    g.as_usize()
+                        .ok_or_else(|| bad(&format!("layer {layer}: bad `group`")))?,
+                ),
+            };
+            schemes.insert(layer, QuantScheme { bits, group_size });
+        }
+        Ok(BitPlan { schemes, mean_bits, target_bits, provenance })
+    }
 }
+
+/// Schema tag for [`BitPlan::to_json`].
+pub const PLAN_SCHEMA: &str = "normtweak.plan.v1";
 
 impl BitBudgetPlanner {
     pub fn new(base: QuantScheme, target_bits: f32) -> Self {
@@ -177,6 +262,7 @@ mod tests {
                     scores: scores.iter().copied().collect(),
                 })
                 .collect(),
+            ckpt_hash: None,
         }
     }
 
@@ -207,6 +293,25 @@ mod tests {
             .plan(&p)
             .unwrap_err();
         assert!(format!("{err}").contains("grain"), "{err}");
+    }
+
+    #[test]
+    fn plan_json_round_trips() {
+        let p = profile(&[&[(2, 0.2), (4, 0.1)], &[(2, 2.0), (4, 0.1)]], "g64", &[2, 4]);
+        let plan = BitBudgetPlanner::new(QuantScheme::w2_g64(), 3.0).plan(&p).unwrap();
+        let j = plan.to_json();
+        assert_eq!(j.get("schema").and_then(|v| v.as_str()), Some(PLAN_SCHEMA));
+        let back = BitPlan::from_json(&Json::parse(&j.emit()).unwrap()).unwrap();
+        assert_eq!(back, plan);
+        // per-channel grain serializes as a null group and survives
+        let p = profile(&[&[(4, 0.1), (8, 0.05)]], "pc", &[4, 8]);
+        let plan = BitBudgetPlanner::new(QuantScheme::w4_perchannel(), 8.0)
+            .plan(&p)
+            .unwrap();
+        let back = BitPlan::from_json(&Json::parse(&plan.to_json().emit()).unwrap()).unwrap();
+        assert_eq!(back, plan);
+        // unknown schema rejected
+        assert!(BitPlan::from_json(&Json::parse(r#"{"schema":"v0"}"#).unwrap()).is_err());
     }
 
     #[test]

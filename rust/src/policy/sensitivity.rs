@@ -99,6 +99,12 @@ pub struct SensitivityProfile {
     pub loss: String,
     pub candidate_bits: Vec<u8>,
     pub layers: Vec<LayerSensitivity>,
+    /// FNV-1a hex of the float checkpoint the profile was measured against
+    /// (`weights_<model>.ntz` bytes at profile time). `None` on profiles
+    /// persisted before the field existed; when present, planners reject a
+    /// profile whose checkpoint has since been re-exported (NT0311) instead
+    /// of silently allocating on stale scores.
+    pub ckpt_hash: Option<String>,
 }
 
 impl SensitivityProfile {
@@ -111,7 +117,7 @@ impl SensitivityProfile {
     }
 
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut fields = vec![
             ("model", s(self.model.clone())),
             ("method", s(self.method.clone())),
             ("group_tag", s(self.group_tag.clone())),
@@ -139,7 +145,11 @@ impl SensitivityProfile {
                     })
                     .collect()),
             ),
-        ])
+        ];
+        if let Some(h) = &self.ckpt_hash {
+            fields.push(("ckpt_hash", s(h.clone())));
+        }
+        obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<Self> {
@@ -189,6 +199,17 @@ impl SensitivityProfile {
             }
             layers.push(LayerSensitivity { layer, scores });
         }
+        // optional: absent on profiles persisted before provenance hardening
+        let ckpt_hash = match j.get("ckpt_hash") {
+            None => None,
+            Some(v) => Some(
+                v.as_str()
+                    .map(String::from)
+                    .ok_or_else(|| {
+                        Error::Json("sensitivity profile: `ckpt_hash` must be a string".into())
+                    })?,
+            ),
+        };
         Ok(SensitivityProfile {
             model: get_str("model")?,
             method: get_str("method")?,
@@ -197,6 +218,7 @@ impl SensitivityProfile {
             loss: get_str("loss")?,
             candidate_bits,
             layers,
+            ckpt_hash,
         })
     }
 
@@ -330,6 +352,9 @@ impl<'rt, 'w> SensitivityProfiler<'rt, 'w> {
             loss: self.cfg.loss.as_str().to_string(),
             candidate_bits: candidates,
             layers,
+            // the profiler sees tensors, not the file: callers that know the
+            // checkpoint path stamp the hash before persisting (the CLI does)
+            ckpt_hash: None,
         })
     }
 }
@@ -356,6 +381,7 @@ mod tests {
                     scores: BTreeMap::from([(2u8, 0.75f32), (4u8, 0.125f32)]),
                 },
             ],
+            ckpt_hash: Some("cbf29ce484222325".into()),
         }
     }
 
@@ -365,6 +391,24 @@ mod tests {
         let back = SensitivityProfile::from_json(&Json::parse(&p.to_json().emit()).unwrap())
             .unwrap();
         assert_eq!(p, back);
+    }
+
+    #[test]
+    fn ckpt_hash_is_optional_for_old_profiles() {
+        // a pre-hardening profile (no ckpt_hash key) still loads, with None
+        let legacy = r#"{"model":"m","method":"rtn","group_tag":"pc",
+            "calib_source":"gen-v2","loss":"dist","candidate_bits":[2],
+            "layers":[{"layer":0,"scores":{"2":1.0}}]}"#;
+        let p = SensitivityProfile::from_json(&Json::parse(legacy).unwrap()).unwrap();
+        assert_eq!(p.ckpt_hash, None);
+        // and re-emitting it does not invent the key
+        assert!(!p.to_json().emit().contains("ckpt_hash"));
+        // a mistyped hash is rejected, not coerced
+        let bad = legacy.replace(
+            "\"candidate_bits\"",
+            "\"ckpt_hash\":7,\"candidate_bits\"",
+        );
+        assert!(SensitivityProfile::from_json(&Json::parse(&bad).unwrap()).is_err());
     }
 
     #[test]

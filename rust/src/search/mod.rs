@@ -1,0 +1,81 @@
+//! Enumerative recipe search: candidates → staged pruning → escalated
+//! scoring → a replayable `recipe.json`.
+//!
+//! Picking a deployment configuration by hand means juggling four coupled
+//! axes — quantizer method, group grain, per-layer bit widths, and the
+//! norm-tweak hyper-parameters — whose interactions the paper's ablations
+//! show are not separable (Table 9's loss choice changes the best lr;
+//! grain changes which layers are fragile).  This subsystem turns that
+//! into a budgeted search with an auditable artifact:
+//!
+//! ```text
+//!   SpaceConfig ──enumerate──▶ candidates (method × grain × tweak point)
+//!        │
+//!        ▼ stage 0  (profile table only — free)
+//!   prune grains the SensitivityProfile never measured;
+//!   plan per-layer widths per grain (BitBudgetPlanner @ target_bits);
+//!   stage-0 score = Σ profile score at the allocated widths
+//!        │
+//!        ▼ stage 1  (trial quantization — CPU, no runtime)
+//!   top-`budget` (method, grain) groups re-scored with the *real*
+//!   quantizer on seeded synthetic taps (`tweak::loss` kernels);
+//!   SearchState checkpointed after every group → kill-safe resume
+//!        │
+//!        ▼ stage 2  (optional `--ppl`: the only model-executing stage)
+//!   the winning group's tweak-grid points ranked by held-out perplexity
+//!        │
+//!        ▼
+//!   Recipe { winner, BitPlan, provenance, scored frontier } → recipe.json
+//! ```
+//!
+//! # Space grammar
+//!
+//! [`SpaceConfig`] holds the three enumerated axes; candidate ids are
+//! dense indexes in `methods × grains × tweak_grid` declaration order, and
+//! that order is load-bearing: pruning tie-breaks, checkpoint resume, and
+//! the recipe frontier all key on it.  The width axis is *planned*, not
+//! enumerated — each grain gets one greedy allocation under
+//! `target_bits`, so the space stays linear in the axis sizes.
+//!
+//! # Staging and escalation semantics
+//!
+//! The persisted profile is method-agnostic (it was measured with one
+//! trial method), so stage 0 cannot separate methods.  The escalation
+//! unit is therefore the `(method, grain)` **group**: `budget` counts
+//! groups, groups are ranked by `(stage-0 score, lowest candidate id)`,
+//! and raising the budget escalates a strict superset — a candidate that
+//! survives at budget *N* survives at every larger budget (pruning
+//! monotonicity, locked in by `tests/search_recipes.rs`).
+//!
+//! # Resume format
+//!
+//! [`SearchState`] (`normtweak.search-state.v1`) records the
+//! `(space, seed)` fingerprint plus every finished group's stage-1 score,
+//! and is rewritten after each trial.  `normtweak search --resume` (or a
+//! re-run with the same `--out`) picks it up, refuses a fingerprint
+//! mismatch, and re-runs only the unfinished groups; the final outcome is
+//! identical to a never-interrupted run.
+//!
+//! # The recipe artifact
+//!
+//! [`Recipe`] (`normtweak.recipe.v1`) embeds the winner, its full
+//! [`BitPlan`](crate::policy::BitPlan) (same `normtweak.plan.v1` shape
+//! `plan --format json` prints), provenance (manifest hash, profile path
+//! + content hash, exact space, seed, funnel counts), and the scored
+//! frontier.  `quantize --recipe` replays it through the same
+//! [`Recipe::to_pipeline_config`] the search used, and
+//! `normtweak check --recipe` lints it against live artifacts (NT06xx —
+//! see `crate::analysis`).
+
+mod recipe;
+mod runner;
+mod space;
+
+pub use recipe::{Recipe, RecipeProvenance, RECIPE_SCHEMA};
+pub use runner::{
+    CandidateStatus, Evaluator, FrontierEntry, PplFn, SearchConfig, SearchOutcome, SearchRunner,
+    SearchState, SearchStats, STATE_SCHEMA,
+};
+pub use space::{
+    default_tweak_grid, grain_group_size, tweak_from_json, tweak_to_json, Candidate, SpaceConfig,
+};

@@ -1,0 +1,466 @@
+//! The replayable search product: `recipe.json`.
+//!
+//! A [`Recipe`] is everything `quantize --recipe` needs to reproduce the
+//! winning configuration bit-exactly — method, base scheme, tweak point,
+//! the full per-layer allocation (embedded as a
+//! [`BitPlan`](crate::policy::BitPlan) in the same
+//! `normtweak.plan.v1` shape `plan --format json` prints) — plus the
+//! provenance to audit or invalidate it: the manifest hash, the
+//! sensitivity profile's path and content hash, the exact space and seed,
+//! the stage funnel counts, and the scored frontier.  `normtweak check
+//! --recipe` lints a recipe against live artifacts (NT06xx codes), so a
+//! recipe written against last week's export fails loudly instead of
+//! silently deploying a stale allocation.
+//!
+//! Both the search CLI and the replay path build their
+//! [`PipelineConfig`] through [`Recipe::to_pipeline_config`], which is
+//! what makes "replay is bit-exact" a structural guarantee rather than a
+//! convention.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::coordinator::PipelineConfig;
+use crate::error::{Error, Result};
+use crate::policy::BitPlan;
+use crate::quant::QuantScheme;
+use crate::tweak::TweakConfig;
+use crate::util::json::{arr, n, obj, s, Json};
+
+use super::runner::{CandidateStatus, FrontierEntry, SearchStats};
+use super::space::{grain_group_size, tweak_from_json, tweak_to_json, Candidate, SpaceConfig};
+
+/// Schema tag for [`Recipe::to_json`].
+pub const RECIPE_SCHEMA: &str = "normtweak.recipe.v1";
+
+/// Everything needed to audit (or reject) a recipe later.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecipeProvenance {
+    /// FNV-1a hex of `manifest.json` at search time (None when the search
+    /// ran without artifacts — pure-profile offline mode).
+    pub manifest_hash: Option<String>,
+    /// Path of the sensitivity profile the search planned from, as given.
+    pub profile_path: String,
+    /// FNV-1a hex of the profile file's bytes at search time.
+    pub profile_hash: String,
+    /// The exact space that was enumerated.
+    pub space: SpaceConfig,
+    pub seed: u64,
+    pub budget: usize,
+    pub stats: SearchStats,
+}
+
+impl RecipeProvenance {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            (
+                "manifest_hash",
+                self.manifest_hash
+                    .as_ref()
+                    .map_or(Json::Null, |h| s(h.clone())),
+            ),
+            ("profile_path", s(self.profile_path.clone())),
+            ("profile_hash", s(self.profile_hash.clone())),
+            ("space", self.space.to_json()),
+            ("seed", n(self.seed as f64)),
+            ("budget", n(self.budget as f64)),
+            (
+                "stages",
+                obj(vec![
+                    ("enumerated", n(self.stats.enumerated as f64)),
+                    ("pruned", n(self.stats.pruned as f64)),
+                    ("escalated", n(self.stats.escalated as f64)),
+                    ("scored", n(self.stats.scored as f64)),
+                ]),
+            ),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let bad = |m: &str| Error::Json(format!("recipe provenance: {m}"));
+        let manifest_hash = match j.get("manifest_hash") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_str()
+                    .map(String::from)
+                    .ok_or_else(|| bad("`manifest_hash` must be a string or null"))?,
+            ),
+        };
+        let get_str = |k: &str| -> Result<String> {
+            j.get(k)
+                .and_then(|v| v.as_str())
+                .map(String::from)
+                .ok_or_else(|| bad(&format!("missing `{k}`")))
+        };
+        let get_count = |o: &Json, k: &str| -> Result<usize> {
+            o.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| bad(&format!("missing stage count `{k}`")))
+        };
+        let stages = j.get("stages").ok_or_else(|| bad("missing `stages`"))?;
+        Ok(RecipeProvenance {
+            manifest_hash,
+            profile_path: get_str("profile_path")?,
+            profile_hash: get_str("profile_hash")?,
+            space: SpaceConfig::from_json(
+                j.get("space").ok_or_else(|| bad("missing `space`"))?,
+            )?,
+            seed: j
+                .get("seed")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| bad("missing `seed`"))? as u64,
+            budget: j
+                .get("budget")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| bad("missing `budget`"))?,
+            stats: SearchStats {
+                enumerated: get_count(stages, "enumerated")?,
+                pruned: get_count(stages, "pruned")?,
+                escalated: get_count(stages, "escalated")?,
+                scored: get_count(stages, "scored")?,
+            },
+        })
+    }
+}
+
+/// The persisted search product.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Recipe {
+    /// Model the recipe was searched for (checked against the checkpoint
+    /// at replay: NT0603).
+    pub model: String,
+    pub method: String,
+    /// Base scheme: the winning grain at the plan's smallest allocated
+    /// width (every layer is overridden by `plan` anyway).
+    pub scheme: QuantScheme,
+    /// `None` = plain PTQ.
+    pub tweak: Option<TweakConfig>,
+    pub plan: BitPlan,
+    pub provenance: RecipeProvenance,
+    pub frontier: Vec<FrontierEntry>,
+}
+
+impl Recipe {
+    /// The one way a recipe becomes a [`PipelineConfig`] — used by both
+    /// the search CLI (to print/run what it found) and `quantize --recipe`
+    /// (to replay it), so the two cannot drift.
+    pub fn to_pipeline_config(&self) -> Result<PipelineConfig> {
+        let mut cfg = PipelineConfig::new(&self.method, self.scheme);
+        if let Some(t) = self.tweak {
+            cfg = cfg.with_tweak(t);
+        }
+        for (&layer, &scheme) in &self.plan.schemes {
+            cfg = cfg.with_layer_scheme(layer, scheme);
+        }
+        Ok(cfg.with_plan_note(format!(
+            "recipe seed={} profile={} ({})",
+            self.provenance.seed, self.provenance.profile_path, self.plan.provenance
+        )))
+    }
+
+    /// The winning grain tag.
+    pub fn group_tag(&self) -> String {
+        self.scheme.group_tag()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let frontier = self
+            .frontier
+            .iter()
+            .map(|e| {
+                obj(vec![
+                    ("id", n(e.candidate.id as f64)),
+                    ("method", s(e.candidate.method.clone())),
+                    ("grain", s(e.candidate.grain.clone())),
+                    ("tweak", tweak_to_json(&e.candidate.tweak)),
+                    ("status", s(e.status.as_str())),
+                    ("stage0", e.stage0.map_or(Json::Null, |v| n(f64::from(v)))),
+                    ("stage1", e.stage1.map_or(Json::Null, |v| n(f64::from(v)))),
+                    ("stage2", e.stage2.map_or(Json::Null, |v| n(f64::from(v)))),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("schema", s(RECIPE_SCHEMA)),
+            ("model", s(self.model.clone())),
+            ("method", s(self.method.clone())),
+            (
+                "scheme",
+                obj(vec![
+                    ("bits", n(f64::from(self.scheme.bits))),
+                    (
+                        "group",
+                        self.scheme.group_size.map_or(Json::Null, |g| n(g as f64)),
+                    ),
+                ]),
+            ),
+            ("tweak", tweak_to_json(&self.tweak)),
+            ("plan", self.plan.to_json()),
+            ("provenance", self.provenance.to_json()),
+            ("frontier", arr(frontier)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let bad = |m: &str| Error::Json(format!("recipe: {m}"));
+        match j.get("schema").and_then(|v| v.as_str()) {
+            Some(RECIPE_SCHEMA) => {}
+            other => {
+                return Err(bad(&format!(
+                    "schema `{}` (expected `{RECIPE_SCHEMA}`)",
+                    other.unwrap_or("<missing>")
+                )))
+            }
+        }
+        let get_str = |k: &str| -> Result<String> {
+            j.get(k)
+                .and_then(|v| v.as_str())
+                .map(String::from)
+                .ok_or_else(|| bad(&format!("missing `{k}`")))
+        };
+        let sj = j.get("scheme").ok_or_else(|| bad("missing `scheme`"))?;
+        let bits = sj
+            .get("bits")
+            .and_then(|v| v.as_usize())
+            .filter(|&b| b > 0 && b <= u8::MAX as usize)
+            .ok_or_else(|| bad("bad `scheme.bits`"))? as u8;
+        let group_size = match sj.get("group") {
+            None | Some(Json::Null) => None,
+            Some(g) => Some(g.as_usize().ok_or_else(|| bad("bad `scheme.group`"))?),
+        };
+        let scheme = QuantScheme { bits, group_size };
+        let tweak = tweak_from_json(j.get("tweak").unwrap_or(&Json::Null))?;
+        let plan = BitPlan::from_json(j.get("plan").ok_or_else(|| bad("missing `plan`"))?)?;
+        let provenance = RecipeProvenance::from_json(
+            j.get("provenance").ok_or_else(|| bad("missing `provenance`"))?,
+        )?;
+        let mut frontier = Vec::new();
+        for fj in j
+            .get("frontier")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| bad("missing `frontier` array"))?
+        {
+            let fbad = |m: &str| Error::Json(format!("recipe frontier entry: {m}"));
+            let grain = fj
+                .get("grain")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| fbad("missing `grain`"))?
+                .to_string();
+            grain_group_size(&grain)?;
+            let opt_score = |k: &str| -> Result<Option<f32>> {
+                match fj.get(k) {
+                    None | Some(Json::Null) => Ok(None),
+                    Some(v) => Ok(Some(
+                        v.as_f64().ok_or_else(|| fbad(&format!("bad `{k}`")))? as f32,
+                    )),
+                }
+            };
+            frontier.push(FrontierEntry {
+                candidate: Candidate {
+                    id: fj
+                        .get("id")
+                        .and_then(|v| v.as_usize())
+                        .ok_or_else(|| fbad("missing `id`"))?,
+                    method: fj
+                        .get("method")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| fbad("missing `method`"))?
+                        .to_string(),
+                    grain,
+                    tweak: tweak_from_json(fj.get("tweak").unwrap_or(&Json::Null))?,
+                },
+                status: CandidateStatus::from_str(
+                    fj.get("status")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| fbad("missing `status`"))?,
+                )?,
+                stage0: opt_score("stage0")?,
+                stage1: opt_score("stage1")?,
+                stage2: opt_score("stage2")?,
+            });
+        }
+        let recipe = Recipe {
+            model: get_str("model")?,
+            method: get_str("method")?,
+            scheme,
+            tweak,
+            plan,
+            provenance,
+            frontier,
+        };
+        recipe.validate()?;
+        Ok(recipe)
+    }
+
+    /// Internal consistency: the base scheme's grain must match every
+    /// plan layer (the pipeline would reject the mismatch anyway, but a
+    /// recipe should fail at load, not at replay).
+    pub fn validate(&self) -> Result<()> {
+        self.scheme.pack_bits()?;
+        let tag = self.scheme.group_tag();
+        for (layer, s) in &self.plan.schemes {
+            if s.group_tag() != tag {
+                return Err(Error::Json(format!(
+                    "recipe: plan layer {layer} grain {} != winning grain {tag}",
+                    s.group_tag()
+                )));
+            }
+            s.pack_bits()?;
+        }
+        Ok(())
+    }
+
+    /// Per-layer scheme map as stable JSON — what `quantize --recipe
+    /// --dry-run` prints, and what the CI smoke compares against the
+    /// recipe's own `plan.layers`.
+    pub fn layer_map_json(&self) -> Json {
+        let cfg_layers: BTreeMap<String, Json> = self
+            .plan
+            .schemes
+            .iter()
+            .map(|(l, sch)| {
+                (
+                    l.to_string(),
+                    obj(vec![
+                        ("bits", n(f64::from(sch.bits))),
+                        ("group", sch.group_size.map_or(Json::Null, |g| n(g as f64))),
+                    ]),
+                )
+            })
+            .collect();
+        obj(vec![
+            ("model", s(self.model.clone())),
+            ("method", s(self.method.clone())),
+            ("tweak", tweak_to_json(&self.tweak)),
+            ("layers", Json::Obj(cfg_layers)),
+        ])
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json().emit())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap as Map;
+
+    fn recipe() -> Recipe {
+        let mut schemes = Map::new();
+        schemes.insert(0usize, QuantScheme { bits: 4, group_size: Some(64) });
+        schemes.insert(1usize, QuantScheme { bits: 2, group_size: Some(64) });
+        Recipe {
+            model: "nt-tiny".into(),
+            method: "gptq".into(),
+            scheme: QuantScheme { bits: 2, group_size: Some(64) },
+            tweak: Some(TweakConfig::default()),
+            plan: BitPlan {
+                schemes,
+                mean_bits: 3.0,
+                target_bits: 3.0,
+                provenance: "model=nt-tiny method=gptq grain=g64 calib=gen-v2 loss=dist".into(),
+            },
+            provenance: RecipeProvenance {
+                manifest_hash: Some("cbf29ce484222325".into()),
+                profile_path: "sensitivity.json".into(),
+                profile_hash: "af63dc4c8601ec8c".into(),
+                space: SpaceConfig {
+                    methods: vec!["rtn".into(), "gptq".into()],
+                    grains: vec!["g64".into()],
+                    tweak_grid: vec![Some(TweakConfig::default()), None],
+                    target_bits: 3.0,
+                },
+                seed: 7,
+                budget: 2,
+                stats: SearchStats { enumerated: 4, pruned: 0, escalated: 2, scored: 0 },
+            },
+            frontier: vec![FrontierEntry {
+                candidate: Candidate {
+                    id: 2,
+                    method: "gptq".into(),
+                    grain: "g64".into(),
+                    tweak: Some(TweakConfig::default()),
+                },
+                status: CandidateStatus::Escalated,
+                stage0: Some(1.5),
+                stage1: Some(0.75),
+                stage2: None,
+            }],
+        }
+    }
+
+    #[test]
+    fn json_round_trip_is_lossless() {
+        let r = recipe();
+        let back = Recipe::from_json(&Json::parse(&r.to_json().emit()).unwrap()).unwrap();
+        assert_eq!(back, r);
+        assert_eq!(
+            r.to_json().get("schema").and_then(|v| v.as_str()),
+            Some(RECIPE_SCHEMA)
+        );
+    }
+
+    #[test]
+    fn disk_round_trip_and_replay_config() {
+        let dir = std::env::temp_dir().join("nt_recipe_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("recipe.json");
+        let r = recipe();
+        r.save(&path).unwrap();
+        let back = Recipe::load(&path).unwrap();
+        assert_eq!(back, r);
+        // replay config matches the search-side config field for field
+        let a = r.to_pipeline_config().unwrap();
+        let b = back.to_pipeline_config().unwrap();
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        assert_eq!(a.method, "gptq");
+        assert_eq!(a.scheme_for(0).bits, 4);
+        assert_eq!(a.scheme_for(1).bits, 2);
+        assert!(a.tweak.is_some());
+        assert!(a.plan_note.as_deref().unwrap_or("").contains("recipe"));
+        a.validate(2).unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn grain_drift_inside_the_recipe_is_rejected() {
+        let mut r = recipe();
+        r.plan
+            .schemes
+            .insert(1, QuantScheme { bits: 2, group_size: None });
+        let err = Recipe::from_json(&Json::parse(&r.to_json().emit()).unwrap()).unwrap_err();
+        assert!(format!("{err}").contains("grain"), "{err}");
+    }
+
+    #[test]
+    fn unknown_schema_and_malformed_fields_fail_loudly() {
+        assert!(Recipe::from_json(&Json::parse(r#"{"schema":"v0"}"#).unwrap()).is_err());
+        let r = recipe();
+        let txt = r.to_json().emit().replace("\"escalated\"", "\"esc\"");
+        assert!(Recipe::from_json(&Json::parse(&txt).unwrap()).is_err());
+    }
+
+    #[test]
+    fn layer_map_lists_every_planned_layer() {
+        let m = recipe().layer_map_json();
+        let layers = m.get("layers").and_then(|v| v.as_obj()).unwrap();
+        assert_eq!(layers.len(), 2);
+        assert_eq!(
+            layers["0"].get("bits").and_then(|v| v.as_usize()),
+            Some(4)
+        );
+    }
+}

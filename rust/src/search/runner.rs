@@ -1,0 +1,764 @@
+//! The staged evaluator: prune cheaply, escalate survivors, checkpoint
+//! after every expensive step.
+//!
+//! Stage 0 touches nothing but the persisted [`SensitivityProfile`]:
+//! candidates whose grain the profile was not measured at are pruned
+//! outright (their scores would not be commensurable), the rest get a
+//! per-layer width allocation from the greedy
+//! [`BitBudgetPlanner`](crate::policy::BitBudgetPlanner) and a stage-0
+//! score read straight out of the profile table.  Because the profile is
+//! method-agnostic, stage 0 cannot separate methods — so the **escalation
+//! unit of stage 1 is the `(method, grain)` group**, and `budget` counts
+//! groups, not candidates.  Ranking is by `(stage-0 score, lowest id)`,
+//! which makes "raise the budget" strictly additive: a group escalated at
+//! budget *N* is escalated at every budget > *N*.
+//!
+//! Stage 1 trial-quantizes every planned layer of each escalated group
+//! with the group's real quantizer (CPU Gram Hessians, deterministic
+//! seeded taps — still no runtime) and scores with the profile's loss.
+//! The [`SearchState`] checkpoint is rewritten after **every** group, so a
+//! killed run resumes without repeating finished trials.
+//!
+//! Stage 2 is optional and the only stage allowed to execute the model:
+//! the caller injects a perplexity closure (the CLI wires `--ppl` to a
+//! `FloatModel`-backed evaluator) and the winning group's tweak-grid
+//! candidates are ranked by held-out perplexity.  Without it the winner is
+//! the group's earliest candidate — the grid is ordered base-first, so
+//! offline searches prefer the configured tweak over exotic points.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::model::ModelWeights;
+use crate::obs::{global, TraceCollector};
+use crate::policy::{BitBudgetPlanner, BitPlan, SensitivityProfile};
+use crate::quant::quantizer::{resolve, QuantizerParams};
+use crate::quant::QuantScheme;
+use crate::tensor::Tensor;
+use crate::tweak::LossKind;
+use crate::util::json::{n, obj, s, Json};
+
+use super::space::{grain_group_size, Candidate, SpaceConfig};
+
+/// Schema tag for the on-disk [`SearchState`] checkpoint.
+pub const STATE_SCHEMA: &str = "normtweak.search-state.v1";
+
+/// Rows of synthetic calibration activations per tap (seeded, so every
+/// run of the same (space, seed) scores identically).
+const TAP_ROWS: usize = 64;
+
+/// Stage-1 trial scoring against real weights: quantize every planned
+/// layer with the actual method and sum the tweak-loss divergence on
+/// deterministic synthetic taps.  Same measurement core as the profiler
+/// ([`crate::policy::score_layer`]) — only the tap source differs.
+pub struct Evaluator<'w> {
+    weights: &'w ModelWeights,
+    seed: u64,
+}
+
+impl<'w> Evaluator<'w> {
+    pub fn new(weights: &'w ModelWeights, seed: u64) -> Self {
+        Evaluator { weights, seed }
+    }
+
+    /// Seeded taps for one layer, in tap order (qkv/proj/fc1 read the
+    /// d_model stream, fc2 reads the d_ff hidden).
+    fn taps(&self, layer: usize) -> Vec<Tensor> {
+        let d = self.weights.config.d_model;
+        let ff = self.weights.config.d_ff;
+        let base = self.seed.wrapping_add(1000 * layer as u64);
+        vec![
+            Tensor::randn(&[TAP_ROWS, d], base + 1, 1.0),
+            Tensor::randn(&[TAP_ROWS, d], base + 2, 1.0),
+            Tensor::randn(&[TAP_ROWS, d], base + 3, 1.0),
+            Tensor::randn(&[TAP_ROWS, ff], base + 4, 1.0),
+        ]
+    }
+
+    /// Trial-quantize every layer in `plan` with `method` and return the
+    /// summed divergence under `loss`.
+    pub fn trial_score(&self, method: &str, plan: &BitPlan, loss: LossKind) -> Result<f32> {
+        let quantizer = resolve(method, &QuantizerParams::default())?;
+        let n_layer = self.weights.config.n_layer;
+        let mut total = 0.0f32;
+        for (&layer, &scheme) in &plan.schemes {
+            if layer >= n_layer {
+                return Err(Error::Config(format!(
+                    "plan allocates layer {layer}, model has {n_layer}"
+                )));
+            }
+            let bw = self.weights.block(layer)?;
+            let taps = self.taps(layer);
+            total += crate::policy::score_layer(bw, &taps, scheme, quantizer.as_ref(), loss)?;
+        }
+        Ok(total)
+    }
+}
+
+/// Where a candidate ended up in the staged funnel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CandidateStatus {
+    /// dropped at stage 0 (grain not measured by the profile)
+    Pruned,
+    /// planned and stage-0 scored, but its group fell outside the budget
+    Planned,
+    /// its `(method, grain)` group was trial-quantized at stage 1
+    Escalated,
+    /// additionally ranked by held-out perplexity at stage 2
+    Scored,
+}
+
+impl CandidateStatus {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CandidateStatus::Pruned => "pruned",
+            CandidateStatus::Planned => "planned",
+            CandidateStatus::Escalated => "escalated",
+            CandidateStatus::Scored => "scored",
+        }
+    }
+
+    pub fn from_str(v: &str) -> Result<Self> {
+        match v {
+            "pruned" => Ok(CandidateStatus::Pruned),
+            "planned" => Ok(CandidateStatus::Planned),
+            "escalated" => Ok(CandidateStatus::Escalated),
+            "scored" => Ok(CandidateStatus::Scored),
+            other => Err(Error::Json(format!("unknown candidate status `{other}`"))),
+        }
+    }
+}
+
+/// One candidate's scores through the funnel — the recipe's audit trail.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrontierEntry {
+    pub candidate: Candidate,
+    pub status: CandidateStatus,
+    /// profile-table score of the planned allocation (absent when pruned)
+    pub stage0: Option<f32>,
+    /// stage-1 trial-quantization score of the candidate's group
+    pub stage1: Option<f32>,
+    /// held-out perplexity (stage 2, only with an injected evaluator)
+    pub stage2: Option<f32>,
+}
+
+/// Funnel counts, echoed into metrics and recipe provenance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SearchStats {
+    pub enumerated: usize,
+    pub pruned: usize,
+    pub escalated: usize,
+    pub scored: usize,
+}
+
+/// A finished search: the winner, its allocation, and the whole scored
+/// frontier.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchOutcome {
+    pub winner: Candidate,
+    pub plan: BitPlan,
+    pub frontier: Vec<FrontierEntry>,
+    pub stats: SearchStats,
+}
+
+/// The resumable checkpoint: which `(method, grain)` groups have finished
+/// stage 1, keyed by `method@grain`, plus the `(space, seed)` fingerprint
+/// so a checkpoint can never leak scores into a differently-shaped search.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchState {
+    pub fingerprint: String,
+    pub escalated: BTreeMap<String, f32>,
+}
+
+impl SearchState {
+    pub fn new(fingerprint: String) -> Self {
+        SearchState { fingerprint, escalated: BTreeMap::new() }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let escalated: BTreeMap<String, Json> = self
+            .escalated
+            .iter()
+            .map(|(k, v)| (k.clone(), n(f64::from(*v))))
+            .collect();
+        obj(vec![
+            ("schema", s(STATE_SCHEMA)),
+            ("fingerprint", s(self.fingerprint.clone())),
+            ("escalated", Json::Obj(escalated)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let bad = |m: &str| Error::Json(format!("search state: {m}"));
+        match j.get("schema").and_then(|v| v.as_str()) {
+            Some(STATE_SCHEMA) => {}
+            other => {
+                return Err(bad(&format!(
+                    "schema `{}` (expected `{STATE_SCHEMA}`)",
+                    other.unwrap_or("<missing>")
+                )))
+            }
+        }
+        let fingerprint = j
+            .get("fingerprint")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| bad("missing `fingerprint`"))?
+            .to_string();
+        let mut escalated = BTreeMap::new();
+        for (k, v) in j
+            .get("escalated")
+            .and_then(|v| v.as_obj())
+            .ok_or_else(|| bad("missing `escalated` object"))?
+        {
+            let score = v
+                .as_f64()
+                .ok_or_else(|| bad(&format!("group `{k}` score is not a number")))?;
+            escalated.insert(k.clone(), score as f32);
+        }
+        Ok(SearchState { fingerprint, escalated })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json().emit())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+/// Search knobs beyond the space itself.
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    pub space: SpaceConfig,
+    /// How many `(method, grain)` groups stage 1 may trial-quantize.
+    pub budget: usize,
+    /// Seeds the synthetic stage-1 taps and the space fingerprint.
+    pub seed: u64,
+}
+
+/// Optional stage-2 scorer: candidate + its allocation → held-out
+/// perplexity.  Injected by the CLI when `--ppl` is given; the runner
+/// itself never constructs a runtime.
+pub type PplFn<'a> = Box<dyn Fn(&Candidate, &BitPlan) -> Result<f32> + 'a>;
+
+/// Drives the staged search.  Construct with [`SearchRunner::new`], then
+/// chain the optional wirings (`state_path`, `trace`, `ppl`) and call
+/// [`run`](SearchRunner::run).
+pub struct SearchRunner<'a> {
+    profile: &'a SensitivityProfile,
+    weights: &'a ModelWeights,
+    cfg: SearchConfig,
+    state_path: Option<PathBuf>,
+    trace: Option<Arc<TraceCollector>>,
+    ppl: Option<PplFn<'a>>,
+    /// Test hook: abort (checkpoint intact) after this many *fresh*
+    /// stage-1 escalations, simulating a killed run.
+    max_escalations: Option<usize>,
+}
+
+impl<'a> SearchRunner<'a> {
+    pub fn new(
+        profile: &'a SensitivityProfile,
+        weights: &'a ModelWeights,
+        cfg: SearchConfig,
+    ) -> Self {
+        SearchRunner {
+            profile,
+            weights,
+            cfg,
+            state_path: None,
+            trace: None,
+            ppl: None,
+            max_escalations: None,
+        }
+    }
+
+    /// Checkpoint stage-1 progress here (and resume from it if present).
+    pub fn with_state_path(mut self, path: impl Into<PathBuf>) -> Self {
+        self.state_path = Some(path.into());
+        self
+    }
+
+    pub fn with_trace(mut self, trace: Arc<TraceCollector>) -> Self {
+        self.trace = Some(trace);
+        self
+    }
+
+    pub fn with_ppl(mut self, ppl: PplFn<'a>) -> Self {
+        self.ppl = Some(ppl);
+        self
+    }
+
+    pub fn with_max_escalations(mut self, max: usize) -> Self {
+        self.max_escalations = Some(max);
+        self
+    }
+
+    fn group_key(c: &Candidate) -> String {
+        format!("{}@{}", c.method, c.grain)
+    }
+
+    /// Run the staged search.  `Ok(None)` means the `max_escalations` hook
+    /// aborted a partially-escalated run — the checkpoint at `state_path`
+    /// holds every finished trial and a re-run resumes from it.
+    pub fn run(&self) -> Result<Option<SearchOutcome>> {
+        self.cfg.space.validate()?;
+        if self.cfg.budget == 0 {
+            return Err(Error::Config("search budget must be at least 1 group".into()));
+        }
+        let fingerprint = self.cfg.space.fingerprint(self.cfg.seed);
+        let mut state = match &self.state_path {
+            Some(p) if p.exists() => {
+                let st = SearchState::load(p)?;
+                if st.fingerprint != fingerprint {
+                    return Err(Error::Config(format!(
+                        "checkpoint {} was written by a different search \
+                         (fingerprint {} != {fingerprint}); delete it or match the \
+                         original space/seed",
+                        p.display(),
+                        st.fingerprint
+                    )));
+                }
+                st
+            }
+            _ => SearchState::new(fingerprint),
+        };
+        let loss = LossKind::from_str(&self.profile.loss)?;
+        let trace = self.trace.as_ref().map(|t| (t.clone(), t.track("policy")));
+
+        // ---- stage 0: prune + plan + table score ------------------------
+        let t0 = trace.as_ref().map(|(t, _)| t.now());
+        let candidates = self.cfg.space.enumerate();
+        let stats_enumerated = candidates.len();
+        let mut plans: BTreeMap<String, BitPlan> = BTreeMap::new();
+        let mut entries: Vec<FrontierEntry> = Vec::with_capacity(candidates.len());
+        let mut pruned = 0usize;
+        for c in candidates {
+            if c.grain != self.profile.group_tag {
+                global().counter("search.pruned").inc();
+                pruned += 1;
+                entries.push(FrontierEntry {
+                    candidate: c,
+                    status: CandidateStatus::Pruned,
+                    stage0: None,
+                    stage1: None,
+                    stage2: None,
+                });
+                continue;
+            }
+            if !plans.contains_key(&c.grain) {
+                let min_bits = *self
+                    .profile
+                    .candidate_bits
+                    .iter()
+                    .min()
+                    .ok_or_else(|| Error::Config("profile has no candidate widths".into()))?;
+                let base = QuantScheme { bits: min_bits, group_size: grain_group_size(&c.grain)? };
+                let plan =
+                    BitBudgetPlanner::new(base, self.cfg.space.target_bits).plan(self.profile)?;
+                plans.insert(c.grain.clone(), plan);
+            }
+            let plan = &plans[&c.grain];
+            let mut stage0 = 0.0f32;
+            for l in &self.profile.layers {
+                let bits = plan.schemes[&l.layer].bits;
+                stage0 += l.score(bits).unwrap_or(f32::INFINITY);
+            }
+            entries.push(FrontierEntry {
+                candidate: c,
+                status: CandidateStatus::Planned,
+                stage0: Some(stage0),
+                stage1: None,
+                stage2: None,
+            });
+        }
+        if let Some((t, tid)) = &trace {
+            t.complete(
+                *tid,
+                "search.stage0",
+                t0.unwrap_or(0),
+                vec![
+                    ("enumerated", n(stats_enumerated as f64)),
+                    ("pruned", n(pruned as f64)),
+                ],
+            );
+        }
+        if entries.iter().all(|e| e.status == CandidateStatus::Pruned) {
+            return Err(Error::Config(format!(
+                "every candidate was pruned: the profile was measured at grain `{}` \
+                 but the space enumerates {:?}",
+                self.profile.group_tag, self.cfg.space.grains
+            )));
+        }
+
+        // ---- stage 1: escalate top-budget (method, grain) groups --------
+        // group order: best stage-0 score, ties to the earliest id — so a
+        // larger budget always escalates a superset of groups.
+        let mut groups: Vec<(String, f32, usize)> = Vec::new(); // (key, stage0, min id)
+        for e in &entries {
+            if e.status == CandidateStatus::Pruned {
+                continue;
+            }
+            let key = Self::group_key(&e.candidate);
+            if !groups.iter().any(|(k, _, _)| *k == key) {
+                // candidates within a group share the grain (hence plan and
+                // stage-0 score); the first hit is also the lowest id
+                let s0 = e.stage0.unwrap_or(f32::INFINITY);
+                groups.push((key, s0, e.candidate.id));
+            }
+        }
+        groups.sort_by(|a, b| {
+            a.1.partial_cmp(&b.1)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.2.cmp(&b.2))
+        });
+        let escalate: Vec<String> = groups
+            .iter()
+            .take(self.cfg.budget)
+            .map(|(k, _, _)| k.clone())
+            .collect();
+
+        let evaluator = Evaluator::new(self.weights, self.cfg.seed);
+        let mut fresh = 0usize;
+        for key in &escalate {
+            if state.escalated.contains_key(key) {
+                continue; // finished in a previous (killed) run
+            }
+            if self.max_escalations.is_some_and(|m| fresh >= m) {
+                if let Some(p) = &self.state_path {
+                    state.save(p)?;
+                }
+                crate::log_warn!(
+                    "search",
+                    "escalation cap reached after {fresh} trials; checkpoint saved"
+                );
+                return Ok(None);
+            }
+            let (method, grain) = key
+                .split_once('@')
+                .ok_or_else(|| Error::Config(format!("bad group key `{key}`")))?;
+            let plan = plans
+                .get(grain)
+                .ok_or_else(|| Error::Config(format!("no plan for grain `{grain}`")))?;
+            let ts = trace.as_ref().map(|(t, _)| t.now());
+            let score = evaluator.trial_score(method, plan, loss)?;
+            if let Some((t, tid)) = &trace {
+                t.complete(
+                    *tid,
+                    "search.escalate",
+                    ts.unwrap_or(0),
+                    vec![
+                        ("group", s(key.clone())),
+                        ("score", n(f64::from(score))),
+                    ],
+                );
+            }
+            global().counter("search.escalated").inc();
+            crate::log_info!("search", "escalated {key}: trial score {score:.5}");
+            state.escalated.insert(key.clone(), score);
+            fresh += 1;
+            // checkpoint after *every* trial: a kill between groups never
+            // repeats finished work
+            if let Some(p) = &self.state_path {
+                state.save(p)?;
+            }
+        }
+        for e in &mut entries {
+            if e.status == CandidateStatus::Pruned {
+                continue;
+            }
+            if let Some(&sc) = state.escalated.get(&Self::group_key(&e.candidate)) {
+                e.status = CandidateStatus::Escalated;
+                e.stage1 = Some(sc);
+            }
+        }
+
+        // ---- pick the winning group -------------------------------------
+        let (win_key, _) = escalate
+            .iter()
+            .filter_map(|k| state.escalated.get(k).map(|&sc| (k.clone(), sc)))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .ok_or_else(|| Error::Config("no group survived escalation".into()))?;
+
+        // ---- stage 2: optional held-out perplexity over the winner group
+        let mut scored = 0usize;
+        if let Some(ppl) = &self.ppl {
+            let win_grain = win_key
+                .split_once('@')
+                .map(|(_, g)| g.to_string())
+                .unwrap_or_default();
+            for e in &mut entries {
+                if e.status != CandidateStatus::Escalated
+                    || Self::group_key(&e.candidate) != win_key
+                {
+                    continue;
+                }
+                let ts = trace.as_ref().map(|(t, _)| t.now());
+                let p = ppl(&e.candidate, &plans[&win_grain])?;
+                if let Some((t, tid)) = &trace {
+                    t.complete(
+                        *tid,
+                        "search.score",
+                        ts.unwrap_or(0),
+                        vec![
+                            ("id", n(e.candidate.id as f64)),
+                            ("ppl", n(f64::from(p))),
+                        ],
+                    );
+                }
+                global().counter("search.scored").inc();
+                e.status = CandidateStatus::Scored;
+                e.stage2 = Some(p);
+                scored += 1;
+            }
+        }
+
+        // ---- winner: best stage-2 ppl if measured, else earliest id -----
+        let winner_entry = entries
+            .iter()
+            .filter(|e| {
+                matches!(e.status, CandidateStatus::Escalated | CandidateStatus::Scored)
+                    && Self::group_key(&e.candidate) == win_key
+            })
+            .min_by(|a, b| {
+                match (a.stage2, b.stage2) {
+                    (Some(x), Some(y)) => x
+                        .partial_cmp(&y)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.candidate.id.cmp(&b.candidate.id)),
+                    (Some(_), None) => std::cmp::Ordering::Less,
+                    (None, Some(_)) => std::cmp::Ordering::Greater,
+                    (None, None) => a.candidate.id.cmp(&b.candidate.id),
+                }
+            })
+            .ok_or_else(|| Error::Config("winning group has no candidates".into()))?
+            .clone();
+        let plan = plans
+            .get(&winner_entry.candidate.grain)
+            .ok_or_else(|| Error::Config("winner has no plan".into()))?
+            .clone();
+
+        Ok(Some(SearchOutcome {
+            winner: winner_entry.candidate.clone(),
+            plan,
+            frontier: entries,
+            stats: SearchStats {
+                enumerated: stats_enumerated,
+                pruned,
+                escalated: state.escalated.len(),
+                scored,
+            },
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ModelConfig, NormKind};
+    use crate::policy::LayerSensitivity;
+    use crate::tweak::TweakConfig;
+
+    fn tiny_weights() -> ModelWeights {
+        ModelWeights::random(
+            ModelConfig {
+                name: "nt-tiny".into(),
+                n_layer: 2,
+                d_model: 16,
+                n_head: 2,
+                d_ff: 32,
+                vocab: 64,
+                seq: 16,
+                norm: NormKind::LayerNorm,
+            },
+            42,
+        )
+    }
+
+    fn profile() -> SensitivityProfile {
+        SensitivityProfile {
+            model: "nt-tiny".into(),
+            method: "rtn".into(),
+            group_tag: "g16".into(),
+            calib_source: "gen-v2".into(),
+            loss: "dist".into(),
+            candidate_bits: vec![2, 4],
+            layers: vec![
+                LayerSensitivity {
+                    layer: 0,
+                    scores: [(2u8, 2.0f32), (4, 0.5)].into_iter().collect(),
+                },
+                LayerSensitivity {
+                    layer: 1,
+                    scores: [(2u8, 1.0f32), (4, 0.25)].into_iter().collect(),
+                },
+            ],
+            ckpt_hash: None,
+        }
+    }
+
+    fn space() -> SpaceConfig {
+        SpaceConfig {
+            methods: vec!["rtn".into(), "gptq".into()],
+            grains: vec!["g16".into(), "pc".into()],
+            tweak_grid: vec![Some(TweakConfig::default()), None],
+            target_bits: 2.5,
+        }
+    }
+
+    #[test]
+    fn stage0_prunes_unprofiled_grains_and_stage1_ranks_groups() {
+        let w = tiny_weights();
+        let p = profile();
+        let cfg = SearchConfig { space: space(), budget: 2, seed: 7 };
+        let out = SearchRunner::new(&p, &w, cfg).run().unwrap().unwrap();
+        assert_eq!(out.stats.enumerated, 8);
+        assert_eq!(out.stats.pruned, 4); // every `pc` candidate
+        assert_eq!(out.stats.escalated, 2); // rtn@g16 + gptq@g16
+        assert_eq!(out.stats.scored, 0);
+        assert_eq!(out.winner.grain, "g16");
+        // offline winner is the earliest candidate of the best group: the
+        // base tweak point, not plain PTQ
+        assert!(out.winner.tweak.is_some());
+        // frontier covers the whole space with consistent statuses
+        assert_eq!(out.frontier.len(), 8);
+        for e in &out.frontier {
+            match e.status {
+                CandidateStatus::Pruned => assert_eq!(e.candidate.grain, "pc"),
+                CandidateStatus::Planned => unreachable!("budget covers both groups"),
+                _ => assert!(e.stage0.is_some() && e.stage1.is_some()),
+            }
+        }
+        // plan obeys the budget
+        assert!(out.plan.mean_bits <= 2.5 + 1e-5);
+    }
+
+    #[test]
+    fn search_is_deterministic() {
+        let w = tiny_weights();
+        let p = profile();
+        let cfg = SearchConfig { space: space(), budget: 1, seed: 7 };
+        let a = SearchRunner::new(&p, &w, cfg.clone()).run().unwrap().unwrap();
+        let b = SearchRunner::new(&p, &w, cfg).run().unwrap().unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn budget_one_leaves_second_group_planned() {
+        let w = tiny_weights();
+        let p = profile();
+        let cfg = SearchConfig { space: space(), budget: 1, seed: 7 };
+        let out = SearchRunner::new(&p, &w, cfg).run().unwrap().unwrap();
+        assert_eq!(out.stats.escalated, 1);
+        assert!(out
+            .frontier
+            .iter()
+            .any(|e| e.status == CandidateStatus::Planned));
+    }
+
+    #[test]
+    fn all_pruned_space_is_an_error() {
+        let w = tiny_weights();
+        let p = profile();
+        let mut sp = space();
+        sp.grains = vec!["pc".into()]; // profile measured g16 only
+        let cfg = SearchConfig { space: sp, budget: 1, seed: 7 };
+        let err = SearchRunner::new(&p, &w, cfg).run().unwrap_err();
+        assert!(format!("{err}").contains("pruned"), "{err}");
+    }
+
+    #[test]
+    fn checkpoint_resume_matches_uninterrupted_run() {
+        let w = tiny_weights();
+        let p = profile();
+        let dir = std::env::temp_dir().join("nt_search_runner_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let state = dir.join("resume.state.json");
+        let _ = std::fs::remove_file(&state);
+        let cfg = SearchConfig { space: space(), budget: 2, seed: 7 };
+
+        // killed after one fresh escalation: no outcome, checkpoint on disk
+        let interrupted = SearchRunner::new(&p, &w, cfg.clone())
+            .with_state_path(&state)
+            .with_max_escalations(1)
+            .run()
+            .unwrap();
+        assert!(interrupted.is_none());
+        assert_eq!(SearchState::load(&state).unwrap().escalated.len(), 1);
+
+        // resumed run completes and matches a never-interrupted run
+        let resumed = SearchRunner::new(&p, &w, cfg.clone())
+            .with_state_path(&state)
+            .run()
+            .unwrap()
+            .unwrap();
+        let straight = SearchRunner::new(&p, &w, cfg).run().unwrap().unwrap();
+        assert_eq!(resumed, straight);
+        let _ = std::fs::remove_file(&state);
+    }
+
+    #[test]
+    fn foreign_checkpoint_is_rejected() {
+        let w = tiny_weights();
+        let p = profile();
+        let dir = std::env::temp_dir().join("nt_search_runner_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let state = dir.join("foreign.state.json");
+        SearchState::new("deadbeefdeadbeef".into())
+            .save(&state)
+            .unwrap();
+        let cfg = SearchConfig { space: space(), budget: 1, seed: 7 };
+        let err = SearchRunner::new(&p, &w, cfg)
+            .with_state_path(&state)
+            .run()
+            .unwrap_err();
+        assert!(format!("{err}").contains("fingerprint"), "{err}");
+        let _ = std::fs::remove_file(&state);
+    }
+
+    #[test]
+    fn stage2_ppl_overrides_the_id_tiebreak() {
+        let w = tiny_weights();
+        let p = profile();
+        let cfg = SearchConfig { space: space(), budget: 1, seed: 7 };
+        // a scorer that prefers plain PTQ (no tweak): the winner must flip
+        // away from the earliest-id default
+        let out = SearchRunner::new(&p, &w, cfg)
+            .with_ppl(Box::new(|c, _plan| {
+                Ok(if c.tweak.is_none() { 10.0 } else { 20.0 })
+            }))
+            .run()
+            .unwrap()
+            .unwrap();
+        assert!(out.stats.scored >= 2);
+        assert!(out.winner.tweak.is_none());
+        assert_eq!(
+            out.frontier
+                .iter()
+                .filter(|e| e.status == CandidateStatus::Scored)
+                .count(),
+            out.stats.scored
+        );
+    }
+
+    #[test]
+    fn state_json_round_trips() {
+        let mut st = SearchState::new("0123456789abcdef".into());
+        st.escalated.insert("rtn@g16".into(), 1.25);
+        st.escalated.insert("gptq@g16".into(), 0.5);
+        let back = SearchState::from_json(&Json::parse(&st.to_json().emit()).unwrap()).unwrap();
+        assert_eq!(back, st);
+        assert!(SearchState::from_json(&Json::parse(r#"{"schema":"v9"}"#).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,322 @@
+//! The enumerable decision space: which (method, grain, tweak) assignments
+//! the search considers.
+//!
+//! A [`SpaceConfig`] is a cartesian grammar over three axes:
+//!
+//! * **method** — quantizer specs resolved through the plugin registry
+//!   (`quant::quantizer::REGISTRY`), including `+`-compositions;
+//! * **grain** — group tags (`pc`, `g64`, ...) taken from the manifest's
+//!   exported grain table (a grain the AOT export never compiled cannot be
+//!   deployed, so it is never enumerated);
+//! * **tweak** — norm-tweaking hyper-parameter points
+//!   (`Option<TweakConfig>`, `None` = plain PTQ), normally built around the
+//!   configured base with [`default_tweak_grid`].
+//!
+//! The per-layer **width** axis is not enumerated combinatorially: widths
+//! come from the profiled candidate set through the greedy
+//! [`BitBudgetPlanner`](crate::policy::BitBudgetPlanner) under the space's
+//! `target_bits` budget, so each candidate resolves to one concrete
+//! per-layer allocation instead of an exponential assignment family.
+//!
+//! Enumeration order is the artifact contract: methods × grains × tweak
+//! points in declaration order, ids dense from 0.  Everything downstream
+//! (pruning tie-breaks, resume, the recipe frontier) keys on that order,
+//! which is why [`SpaceConfig`] round-trips through JSON and hashes
+//! stably.
+
+use crate::error::{Error, Result};
+use crate::quant::quantizer::validate_spec;
+use crate::quant::QuantScheme;
+use crate::tweak::{LossKind, TweakConfig};
+use crate::util::hash::fnv1a_hex;
+use crate::util::json::{arr, n, obj, s, Json};
+
+/// One point of the tweak axis serialized (`None` = plain PTQ).
+pub fn tweak_to_json(t: &Option<TweakConfig>) -> Json {
+    match t {
+        None => Json::Null,
+        Some(t) => obj(vec![
+            ("iters", n(t.iters as f64)),
+            ("lr0", n(f64::from(t.lr0))),
+            ("lr_scale", n(f64::from(t.lr_scale))),
+            ("loss", s(t.loss.as_str())),
+        ]),
+    }
+}
+
+/// Inverse of [`tweak_to_json`].
+pub fn tweak_from_json(j: &Json) -> Result<Option<TweakConfig>> {
+    if matches!(j, Json::Null) {
+        return Ok(None);
+    }
+    let bad = |m: &str| Error::Json(format!("tweak point: {m}"));
+    let iters = j
+        .get("iters")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| bad("missing `iters`"))?;
+    let lr0 = j
+        .get("lr0")
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| bad("missing `lr0`"))? as f32;
+    let lr_scale = j
+        .get("lr_scale")
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| bad("missing `lr_scale`"))? as f32;
+    let loss = LossKind::from_str(
+        j.get("loss")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| bad("missing `loss`"))?,
+    )?;
+    Ok(Some(TweakConfig { iters, lr0, lr_scale, loss }))
+}
+
+/// Parse a group tag back to a group size (`"pc"` → `None`, `"g64"` →
+/// `Some(64)`).  Inverse of [`QuantScheme::group_tag`].
+pub fn grain_group_size(tag: &str) -> Result<Option<usize>> {
+    if tag == "pc" {
+        return Ok(None);
+    }
+    tag.strip_prefix('g')
+        .and_then(|d| d.parse::<usize>().ok())
+        .filter(|&g| g > 0)
+        .map(Some)
+        .ok_or_else(|| {
+            Error::Config(format!("bad grain tag `{tag}` (expected `pc` or `g<N>`)"))
+        })
+}
+
+/// The default tweak grid around a base configuration: the base point
+/// first (the offline tie-break prefers earlier points), a hotter learning
+/// rate, a longer schedule, and plain PTQ last as the control arm.
+pub fn default_tweak_grid(base: TweakConfig) -> Vec<Option<TweakConfig>> {
+    vec![
+        Some(base),
+        Some(TweakConfig { lr0: base.lr0 * 3.0, ..base }),
+        Some(TweakConfig { iters: base.iters * 2, ..base }),
+        None,
+    ]
+}
+
+/// The enumerable space definition.  Validated and then frozen: the id of
+/// every candidate is a pure function of this struct.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpaceConfig {
+    /// Quantizer specs, in enumeration order.
+    pub methods: Vec<String>,
+    /// Exported group tags, in enumeration order.
+    pub grains: Vec<String>,
+    /// Tweak axis points, in enumeration order (`None` = plain PTQ).
+    pub tweak_grid: Vec<Option<TweakConfig>>,
+    /// Mean-bits budget handed to the planner per candidate.
+    pub target_bits: f32,
+}
+
+/// One enumerated assignment: a method, a grain, and a tweak point.  The
+/// per-layer widths are attached later by the planner (stage 0).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Candidate {
+    /// Dense enumeration index — the stable identity used by pruning
+    /// tie-breaks, checkpoints, and the recipe frontier.
+    pub id: usize,
+    pub method: String,
+    /// Group tag (`pc`, `g64`, ...).
+    pub grain: String,
+    pub tweak: Option<TweakConfig>,
+}
+
+impl Candidate {
+    /// The candidate's scheme at a given width.
+    pub fn scheme(&self, bits: u8) -> Result<QuantScheme> {
+        Ok(QuantScheme { bits, group_size: grain_group_size(&self.grain)? })
+    }
+}
+
+impl SpaceConfig {
+    /// Reject a degenerate or unresolvable space before enumeration: every
+    /// axis non-empty, every method registered, every grain tag parseable.
+    pub fn validate(&self) -> Result<()> {
+        if self.methods.is_empty() {
+            return Err(Error::Config("search space has no methods".into()));
+        }
+        if self.grains.is_empty() {
+            return Err(Error::Config("search space has no grains".into()));
+        }
+        if self.tweak_grid.is_empty() {
+            return Err(Error::Config("search space has no tweak points".into()));
+        }
+        for m in &self.methods {
+            validate_spec(m)?;
+        }
+        for g in &self.grains {
+            grain_group_size(g)?;
+        }
+        if !self.target_bits.is_finite() || self.target_bits <= 0.0 {
+            return Err(Error::Config(format!(
+                "search space target_bits {} is not a positive number",
+                self.target_bits
+            )));
+        }
+        Ok(())
+    }
+
+    /// Deterministic enumeration: `methods × grains × tweak_grid` in
+    /// declaration order, ids dense from 0.
+    pub fn enumerate(&self) -> Vec<Candidate> {
+        let mut out = Vec::with_capacity(self.len());
+        let mut id = 0;
+        for m in &self.methods {
+            for g in &self.grains {
+                for t in &self.tweak_grid {
+                    out.push(Candidate {
+                        id,
+                        method: m.clone(),
+                        grain: g.clone(),
+                        tweak: *t,
+                    });
+                    id += 1;
+                }
+            }
+        }
+        out
+    }
+
+    /// Total candidate count.
+    pub fn len(&self) -> usize {
+        self.methods.len() * self.grains.len() * self.tweak_grid.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("methods", arr(self.methods.iter().map(|m| s(m.clone())).collect())),
+            ("grains", arr(self.grains.iter().map(|g| s(g.clone())).collect())),
+            ("tweak_grid", arr(self.tweak_grid.iter().map(tweak_to_json).collect())),
+            ("target_bits", n(f64::from(self.target_bits))),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let bad = |m: &str| Error::Json(format!("search space: {m}"));
+        let strings = |k: &str| -> Result<Vec<String>> {
+            j.get(k)
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| bad(&format!("missing `{k}` array")))?
+                .iter()
+                .map(|v| {
+                    v.as_str()
+                        .map(String::from)
+                        .ok_or_else(|| bad(&format!("`{k}` entries must be strings")))
+                })
+                .collect()
+        };
+        let tweak_grid = j
+            .get("tweak_grid")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| bad("missing `tweak_grid` array"))?
+            .iter()
+            .map(tweak_from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let target_bits = j
+            .get("target_bits")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| bad("missing `target_bits`"))? as f32;
+        Ok(SpaceConfig {
+            methods: strings("methods")?,
+            grains: strings("grains")?,
+            tweak_grid,
+            target_bits,
+        })
+    }
+
+    /// Stable identity of (space, seed): checkpoints refuse to resume into
+    /// a differently-shaped search.
+    pub fn fingerprint(&self, seed: u64) -> String {
+        fnv1a_hex(format!("{}#{seed}", self.to_json().emit()).as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn space() -> SpaceConfig {
+        SpaceConfig {
+            methods: vec!["rtn".into(), "gptq".into()],
+            grains: vec!["g64".into(), "pc".into()],
+            tweak_grid: vec![Some(TweakConfig::default()), None],
+            target_bits: 2.5,
+        }
+    }
+
+    #[test]
+    fn enumeration_is_dense_and_ordered() {
+        let cands = space().enumerate();
+        assert_eq!(cands.len(), 8);
+        for (i, c) in cands.iter().enumerate() {
+            assert_eq!(c.id, i);
+        }
+        // method-major, then grain, then tweak
+        assert_eq!(
+            (cands[0].method.as_str(), cands[0].grain.as_str(), cands[0].tweak.is_some()),
+            ("rtn", "g64", true)
+        );
+        assert_eq!((cands[1].grain.as_str(), cands[1].tweak.is_none()), ("g64", true));
+        assert_eq!(cands[2].grain.as_str(), "pc");
+        assert_eq!(cands[4].method.as_str(), "gptq");
+    }
+
+    #[test]
+    fn json_round_trip_preserves_order_and_fingerprint() {
+        let sp = space();
+        let back = SpaceConfig::from_json(&Json::parse(&sp.to_json().emit()).unwrap()).unwrap();
+        assert_eq!(back, sp);
+        assert_eq!(back.fingerprint(7), sp.fingerprint(7));
+        assert_ne!(sp.fingerprint(7), sp.fingerprint(8));
+        let mut other = sp.clone();
+        other.methods.reverse();
+        assert_ne!(other.fingerprint(7), sp.fingerprint(7));
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_axes() {
+        let mut sp = space();
+        sp.methods.clear();
+        assert!(sp.validate().is_err());
+        let mut sp = space();
+        sp.methods = vec!["nope".into()];
+        assert!(sp.validate().is_err());
+        let mut sp = space();
+        sp.grains = vec!["q64".into()];
+        assert!(sp.validate().is_err());
+        let mut sp = space();
+        sp.target_bits = 0.0;
+        assert!(sp.validate().is_err());
+        assert!(space().validate().is_ok());
+    }
+
+    #[test]
+    fn grain_tags_parse_both_ways() {
+        assert_eq!(grain_group_size("pc").unwrap(), None);
+        assert_eq!(grain_group_size("g64").unwrap(), Some(64));
+        assert!(grain_group_size("g0").is_err());
+        assert!(grain_group_size("64").is_err());
+        for scheme in [QuantScheme::w2_g64(), QuantScheme::w4_perchannel()] {
+            assert_eq!(
+                grain_group_size(&scheme.group_tag()).unwrap(),
+                scheme.group_size
+            );
+        }
+    }
+
+    #[test]
+    fn tweak_points_round_trip() {
+        for t in default_tweak_grid(TweakConfig::default()) {
+            let back = tweak_from_json(&Json::parse(&tweak_to_json(&t).emit()).unwrap()).unwrap();
+            assert_eq!(back, t);
+        }
+        assert!(tweak_from_json(&Json::parse(r#"{"iters":4}"#).unwrap()).is_err());
+    }
+}

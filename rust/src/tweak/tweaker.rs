@@ -79,7 +79,7 @@ mod tests {
 }
 
 /// Tweaking hyper-parameters.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TweakConfig {
     /// Adam steps on the calibration batch per layer (the paper's "Iters";
     /// small on purpose — this is tweaking, not finetuning)

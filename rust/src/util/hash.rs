@@ -1,0 +1,64 @@
+//! Content hashing for artifact provenance — FNV-1a 64-bit.
+//!
+//! The search/recipe layer records what bytes an artifact *was* when a
+//! decision was made (sensitivity profiles pin the float checkpoint,
+//! recipes pin the profile and the manifest), so a later run can detect
+//! that the input drifted instead of silently replaying a stale decision.
+//! FNV-1a is not cryptographic — it defends against accidental drift
+//! (re-exported weights, regenerated profiles), not adversaries, and it
+//! keeps the crate dependency-free.
+
+use std::path::Path;
+
+use crate::error::Result;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over a byte slice.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a rendered as the canonical 16-digit lowercase hex string used in
+/// every persisted provenance field.
+pub fn fnv1a_hex(bytes: &[u8]) -> String {
+    format!("{:016x}", fnv1a(bytes))
+}
+
+/// Hash a file's exact on-disk bytes (no parse, no normalization — two
+/// JSON files that differ only in whitespace hash differently on purpose:
+/// the recorded hash pins the bytes that were read).
+pub fn file_hex(path: impl AsRef<Path>) -> Result<String> {
+    Ok(fnv1a_hex(&std::fs::read(path)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // standard FNV-1a test vectors
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a_hex(b""), "cbf29ce484222325");
+    }
+
+    #[test]
+    fn file_hash_matches_bytes_and_detects_drift() {
+        let dir = std::env::temp_dir().join("nt_hash_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.bin");
+        std::fs::write(&p, b"payload").unwrap();
+        assert_eq!(file_hex(&p).unwrap(), fnv1a_hex(b"payload"));
+        std::fs::write(&p, b"payload2").unwrap();
+        assert_ne!(file_hex(&p).unwrap(), fnv1a_hex(b"payload"));
+        assert!(file_hex(dir.join("missing.bin")).is_err());
+    }
+}

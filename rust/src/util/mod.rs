@@ -1,9 +1,11 @@
 //! In-tree replacements for the usual ecosystem crates (the image builds
 //! fully offline with only the `xla` closure cached): a scoped thread pool,
-//! a JSON value parser/emitter, a TOML-subset parser, and a micro-bench
-//! harness used by `rust/benches/`.
+//! a JSON value parser/emitter, a TOML-subset parser, a micro-bench
+//! harness used by `rust/benches/`, and FNV-1a content hashing for
+//! artifact provenance.
 
 pub mod bench;
+pub mod hash;
 pub mod json;
 pub mod parallel;
 pub mod tomlmini;

@@ -20,10 +20,15 @@ use normtweak::quant::QuantScheme;
 use normtweak::runtime::ArtifactManifest;
 use normtweak::tensor::{load_ntz, pack_codes, save_ntz, Tensor};
 use normtweak::tweak::LossKind;
+use normtweak::util::hash::file_hex;
 use normtweak::util::json::Json;
 
 fn fixture_dir(name: &str) -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/analysis").join(name)
+}
+
+fn search_fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/search").join(name)
 }
 
 fn temp_dir(name: &str) -> PathBuf {
@@ -119,6 +124,11 @@ fn good_fixture_is_clean() {
     // against entirely well-formed inputs: zero findings (deep mode on, so
     // this also pins that the good fixture's recorded signatures + HLO
     // stubs satisfy the full reconstructed dataflow contract)
+    let weights = write_file("clean_weights", "weights_nt-tiny.ntz", "frozen float checkpoint");
+    let hashed_profile = GOOD_PROFILE.replace(
+        "\"candidate_bits\"",
+        &format!("\"ckpt_hash\":\"{}\",\"candidate_bits\"", file_hex(&weights).unwrap()),
+    );
     let ctx = CheckContext {
         manifest_dir: Some(fixture_dir("good")),
         manifest: Some(good_manifest()),
@@ -132,8 +142,10 @@ fn good_fixture_is_clean() {
             layer_schemes: vec![(1, QuantScheme { bits: 2, group_size: Some(64) })],
             tweak_loss: Some(LossKind::Dist),
         }),
-        profile_path: Some(write_file("clean_profile", "sensitivity.json", GOOD_PROFILE)),
+        profile_path: Some(write_file("clean_profile", "sensitivity.json", &hashed_profile)),
         target_bits: Some(2.5),
+        recipe_path: Some(search_fixture("recipe_clean.json")),
+        weights_path: Some(weights),
         serve: Some(ServeCheck {
             spec: Some("max_batch=8,batch_window_ms=2,deadline_ms=500".to_string()),
             models_spec: Some("w4=quantized.ntz".to_string()),
@@ -463,6 +475,27 @@ fn inconsistent_profile_is_nt0310() {
     assert_eq!(report.errors(), 2, "{:?}", report.diagnostics);
 }
 
+#[test]
+fn stale_profile_checkpoint_hash_is_nt0311() {
+    // profile recorded one checkpoint hash; the weights file now holds
+    // different bytes — every score in the profile is stale
+    let weights = write_file("stale_weights", "weights_nt-tiny.ntz", "re-exported bytes");
+    let body = GOOD_PROFILE.replace(
+        "\"candidate_bits\"",
+        "\"ckpt_hash\":\"0000000000000000\",\"candidate_bits\"",
+    );
+    let profile = write_file("stale_profile", "sensitivity.json", &body);
+    let ctx = CheckContext {
+        profile_path: Some(profile.clone()),
+        weights_path: Some(weights),
+        ..CheckContext::default()
+    };
+    assert_eq!(run_lints(&ctx).codes(), vec![codes::PROFILE_STALE]);
+    // without a weights path there is nothing to compare against: silent
+    let ctx = CheckContext { profile_path: Some(profile), ..CheckContext::default() };
+    assert!(run_lints(&ctx).is_empty());
+}
+
 // ------------------------------------------------------------- NT04xx ----
 
 #[test]
@@ -508,6 +541,67 @@ fn serve_warnings_are_nt0403_and_nt0404() {
     assert_eq!(report.warnings(), 2);
     assert!(!report.should_fail(false));
     assert!(report.should_fail(true));
+}
+
+// ------------------------------------------------------------- NT06xx ----
+
+/// The replay context `quantize --recipe` preflights with.
+fn recipe_ctx(fixture: &str) -> CheckContext {
+    CheckContext {
+        recipe_path: Some(search_fixture(fixture)),
+        manifest: Some(good_manifest()),
+        model: Some(tiny()),
+        model_name: Some("nt-tiny".to_string()),
+        ..CheckContext::default()
+    }
+}
+
+#[test]
+fn clean_recipe_fixture_is_clean() {
+    let report = run_lints(&recipe_ctx("recipe_clean.json"));
+    assert!(report.is_empty(), "clean recipe raised: {:?}", report.codes());
+    // and with nothing but the recipe, the relative profile path still
+    // resolves next to the recipe file: no spurious NT0605
+    let ctx = CheckContext {
+        recipe_path: Some(search_fixture("recipe_clean.json")),
+        ..CheckContext::default()
+    };
+    assert!(run_lints(&ctx).is_empty());
+}
+
+#[test]
+fn bad_recipe_fixture_matches_golden_code_set() {
+    // recipe_bad.json: searched for nt-small at grain g32 (never exported)
+    // from a profile whose recorded hash no longer matches the file; the
+    // tweak-graph check is suppressed — the grain itself is the finding
+    let want: BTreeSet<&str> = [
+        codes::RECIPE_GRAIN,         // g32 not in the manifest's grain table
+        codes::RECIPE_MODEL,         // searched for nt-small, checking nt-tiny
+        codes::RECIPE_PROFILE_STALE, // recorded profile hash drifted
+    ]
+    .iter()
+    .copied()
+    .collect();
+    assert_eq!(code_set(&recipe_ctx("recipe_bad.json")), want);
+}
+
+#[test]
+fn missing_tweak_graph_recipe_is_nt0604() {
+    // g64 is exported, but only the Dist tweak_step graph is — an
+    // mse-loss recipe has no nt-tiny.tweak_step_mse.g64 to replay with
+    assert_eq!(
+        run_lints(&recipe_ctx("recipe_bad_tweak.json")).codes(),
+        vec![codes::RECIPE_TWEAK_GRAPH]
+    );
+}
+
+#[test]
+fn garbage_recipe_fixture_is_nt0601() {
+    let ctx = CheckContext {
+        recipe_path: Some(search_fixture("recipe_garbage.json")),
+        ..CheckContext::default()
+    };
+    assert_eq!(run_lints(&ctx).codes(), vec![codes::RECIPE_INVALID]);
 }
 
 // ------------------------------------------------------- meta-contracts --
@@ -637,6 +731,23 @@ fn corpus_covers_every_stable_code() {
         profile_path: Some(temp_dir("cov_no_profile").join("missing.json")),
         ..CheckContext::default()
     }));
+    let stale = GOOD_PROFILE.replace(
+        "\"candidate_bits\"",
+        "\"ckpt_hash\":\"0000000000000000\",\"candidate_bits\"",
+    );
+    fired.extend(code_set(&CheckContext {
+        profile_path: Some(write_file("cov_stale", "sensitivity.json", &stale)),
+        weights_path: Some(write_file("cov_stale_w", "weights_nt-tiny.ntz", "drifted")),
+        ..CheckContext::default()
+    }));
+
+    // NT06xx — the seeded bad-recipe fixtures
+    fired.extend(code_set(&CheckContext {
+        recipe_path: Some(search_fixture("recipe_garbage.json")),
+        ..CheckContext::default()
+    }));
+    fired.extend(code_set(&recipe_ctx("recipe_bad.json")));
+    fired.extend(code_set(&recipe_ctx("recipe_bad_tweak.json")));
 
     // NT05xx — the deep graph pass over the seeded-violation fixture
     fired.extend(code_set(&CheckContext {

@@ -84,6 +84,7 @@ fn profile_fixture(layers: &[&[(u8, f32)]], group_tag: &str, cands: &[u8]) -> Se
                 scores: scores.iter().copied().collect(),
             })
             .collect(),
+        ckpt_hash: None,
     }
 }
 
@@ -273,6 +274,7 @@ fn offline_profile_to_plan_flow_prefers_the_fragile_layer() {
         loss: "dist".into(),
         candidate_bits: candidates,
         layers,
+        ckpt_hash: None,
     };
     let base = QuantScheme { bits: 2, group_size: Some(16) };
     // room for exactly one 2→3 upgrade: it must land on the fragile layer

@@ -1,0 +1,188 @@
+//! Offline end-to-end pins for the recipe search subsystem: deterministic
+//! enumeration, budget monotonicity, kill/resume equivalence, and the
+//! recipe artifact's round-trip + replay guarantees — all against the
+//! committed fixtures in `tests/fixtures/search/` so the same inputs CI's
+//! `search-smoke` job drives through the CLI are exercised through the
+//! library API here.
+
+use std::path::PathBuf;
+
+use normtweak::model::{ModelConfig, ModelWeights};
+use normtweak::policy::SensitivityProfile;
+use normtweak::search::{
+    default_tweak_grid, CandidateStatus, Recipe, RecipeProvenance, SearchConfig, SearchOutcome,
+    SearchRunner, SpaceConfig,
+};
+use normtweak::tweak::TweakConfig;
+use normtweak::util::hash::file_hex;
+
+fn fixture(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/search")
+        .join(name)
+}
+
+fn profile() -> SensitivityProfile {
+    SensitivityProfile::load(fixture("sensitivity.json")).unwrap()
+}
+
+fn weights() -> ModelWeights {
+    ModelWeights::random(ModelConfig::builtin("nt-tiny").unwrap(), 42)
+}
+
+/// The space the CI smoke searches: both methods, one profiled grain plus
+/// one that stage 0 must prune, the default tweak grid.
+fn space() -> SpaceConfig {
+    SpaceConfig {
+        methods: vec!["rtn".into(), "gptq".into()],
+        grains: vec!["g64".into(), "pc".into()],
+        tweak_grid: default_tweak_grid(TweakConfig::default()),
+        target_bits: 3.0,
+    }
+}
+
+fn run(budget: usize) -> SearchOutcome {
+    let p = profile();
+    let w = weights();
+    SearchRunner::new(&p, &w, SearchConfig { space: space(), budget, seed: 7 })
+        .run()
+        .unwrap()
+        .unwrap()
+}
+
+/// Build the recipe exactly the way `normtweak search` does: base scheme
+/// at the plan's smallest allocated width, provenance pinned to the
+/// fixture profile's content hash.
+fn recipe_from(out: &SearchOutcome, budget: usize) -> Recipe {
+    let min_bits = out.plan.schemes.values().map(|s| s.bits).min().unwrap();
+    Recipe {
+        model: "nt-tiny".into(),
+        method: out.winner.method.clone(),
+        scheme: out.winner.scheme(min_bits).unwrap(),
+        tweak: out.winner.tweak,
+        plan: out.plan.clone(),
+        provenance: RecipeProvenance {
+            manifest_hash: None,
+            profile_path: "sensitivity.json".into(),
+            profile_hash: file_hex(fixture("sensitivity.json")).unwrap(),
+            space: space(),
+            seed: 7,
+            budget,
+            stats: out.stats,
+        },
+        frontier: out.frontier.clone(),
+    }
+}
+
+#[test]
+fn enumeration_order_is_deterministic() {
+    let a = space().enumerate();
+    let b = space().enumerate();
+    assert_eq!(a, b);
+    assert_eq!(a.len(), 16); // 2 methods × 2 grains × 4 tweak points
+    for (i, c) in a.iter().enumerate() {
+        assert_eq!(c.id, i, "ids must be dense in declaration order");
+    }
+    assert_eq!((a[0].method.as_str(), a[0].grain.as_str()), ("rtn", "g64"));
+    // and the whole staged run is reproducible, not just the enumeration
+    assert_eq!(run(2), run(2));
+}
+
+#[test]
+fn raising_the_budget_escalates_a_superset() {
+    // pruning monotonicity: a candidate surviving to stage 1 at budget N
+    // must survive at every budget > N (group ranking ties break on id)
+    let mut prev: Vec<usize> = Vec::new();
+    for budget in 1..=3 {
+        let out = run(budget);
+        let ids: Vec<usize> = out
+            .frontier
+            .iter()
+            .filter(|e| {
+                matches!(e.status, CandidateStatus::Escalated | CandidateStatus::Scored)
+            })
+            .map(|e| e.candidate.id)
+            .collect();
+        for id in &prev {
+            assert!(ids.contains(id), "budget {budget} dropped survivor {id}");
+        }
+        assert!(ids.len() >= prev.len());
+        prev = ids;
+    }
+    // the `pc` grain is never measured by the fixture profile, so it is
+    // pruned at every budget — monotonicity never resurrects it
+    let out = run(3);
+    for e in &out.frontier {
+        if e.candidate.grain == "pc" {
+            assert_eq!(e.status, CandidateStatus::Pruned);
+        }
+    }
+}
+
+#[test]
+fn resume_after_interrupt_reaches_the_same_winner() {
+    let p = profile();
+    let w = weights();
+    let dir = std::env::temp_dir().join("nt_search_recipes_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let state = dir.join("resume.state.json");
+    let _ = std::fs::remove_file(&state);
+    let cfg = SearchConfig { space: space(), budget: 2, seed: 7 };
+
+    // killed after the first fresh escalation: checkpoint holds the trial
+    let interrupted = SearchRunner::new(&p, &w, cfg.clone())
+        .with_state_path(&state)
+        .with_max_escalations(1)
+        .run()
+        .unwrap();
+    assert!(interrupted.is_none(), "cap should abort before finishing");
+
+    let resumed = SearchRunner::new(&p, &w, cfg.clone())
+        .with_state_path(&state)
+        .run()
+        .unwrap()
+        .unwrap();
+    let straight = SearchRunner::new(&p, &w, cfg).run().unwrap().unwrap();
+    assert_eq!(resumed, straight);
+    let _ = std::fs::remove_file(&state);
+}
+
+#[test]
+fn recipe_round_trip_replays_the_same_pipeline_config() {
+    let out = run(2);
+    let recipe = recipe_from(&out, 2);
+    let dir = std::env::temp_dir().join("nt_search_recipes_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("roundtrip_recipe.json");
+    recipe.save(&path).unwrap();
+    let back = Recipe::load(&path).unwrap();
+    assert_eq!(back, recipe);
+
+    // replay builds the identical PipelineConfig, field for field
+    let a = recipe.to_pipeline_config().unwrap();
+    let b = back.to_pipeline_config().unwrap();
+    assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    // and the per-layer scheme map the replay runs is exactly the plan
+    // the search chose
+    for (&layer, &scheme) in &out.plan.schemes {
+        assert_eq!(b.scheme_for(layer), scheme);
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn committed_clean_fixture_stays_in_sync() {
+    let r = Recipe::load(fixture("recipe_clean.json")).unwrap();
+    assert_eq!(r.model, "nt-tiny");
+    assert_eq!(r.group_tag(), "g64");
+    // the recorded hash matches the sibling profile's on-disk bytes, so
+    // the NT0605 staleness lint keeps accepting the fixture pair
+    assert_eq!(
+        r.provenance.profile_hash,
+        file_hex(fixture("sensitivity.json")).unwrap()
+    );
+    let cfg = r.to_pipeline_config().unwrap();
+    cfg.validate(2).unwrap();
+    let map = r.layer_map_json();
+    assert_eq!(map.get("layers").and_then(|v| v.as_obj()).unwrap().len(), 2);
+}
