@@ -369,9 +369,13 @@ def main():
     }
     if not args.no_decode:
         # the decode contract the Rust runtime parses: which buckets have
-        # one-token step graphs, and the per-layer per-row cache shape
+        # one-token step graphs, the slot-arena capacity (`slots` must be
+        # a decode bucket >= the largest, so full-occupancy decode turns
+        # have a step graph to dispatch), and the per-layer per-row cache
+        # shape
         manifest["decode"] = {
             "buckets": EXPORT_BUCKETS,
+            "slots": max(EXPORT_BUCKETS),
             "caches": {name: {
                 "n_layer": c.n_layer,
                 "shape": [c.n_head, c.seq, c.d_head],

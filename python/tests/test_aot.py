@@ -273,6 +273,9 @@ def test_manifest_matches_exports(tmp_path):
     cfg = MODELS["nt-tiny"]
     dec = manifest["decode"]
     assert dec["buckets"] == manifest["buckets"]
+    # the slot arena is sized to the largest decode bucket, which is by
+    # construction an exported step-graph batch
+    assert dec["slots"] == max(dec["buckets"])
     assert dec["caches"]["nt-tiny"] == {
         "n_layer": cfg.n_layer,
         "shape": [cfg.n_head, cfg.seq, cfg.d_head],

@@ -4,10 +4,13 @@
 //!
 //! Always emits machine-readable `BENCH_serve.json` (req/s, client-side
 //! p50/p99 latency, engine-measured queue/prefill/decode-step/e2e
-//! percentiles, mean batch, cache hit rate per config) so the serving
-//! perf trajectory is tracked across PRs: with `make artifacts` present it
-//! serves a real RTN-quantized checkpoint; otherwise it falls back to an
-//! offline mock model so the numbers still exist (tagged `"model": "mock"`).
+//! percentiles, decode fast-path health — KV-arena occupancy and
+//! admission batch sizes — mean batch, cache hit rate per config) so the
+//! serving perf trajectory is tracked across PRs: with `make artifacts`
+//! present it serves a real RTN-quantized checkpoint; otherwise it falls
+//! back to an offline mock model so the numbers still exist (tagged
+//! `"model": "mock"`); the mock serves the slot arena too, so the fast
+//! path is benchmarked either way.
 //! Set `NT_BENCH_OUT` to redirect the JSON; pass `--trace out.json` to
 //! export a Chrome trace of the whole sweep.
 
@@ -18,7 +21,8 @@ use normtweak::calib::CalibSet;
 use normtweak::coordinator::{quantize_model, PipelineConfig};
 use normtweak::engine::{Engine, GenRequest, ModelStats, ModelTuning, ServableModel};
 use normtweak::error::Result;
-use normtweak::eval::LanguageModel;
+use normtweak::eval::decode::{self, lock_arena};
+use normtweak::eval::{ArenaSlot, DecodeSession, KvArena, KvCache, LanguageModel, SharedKvArena};
 use normtweak::model::{ModelConfig, ModelWeights};
 use normtweak::obs::trace::TraceCollector;
 use normtweak::quant::QuantScheme;
@@ -27,16 +31,41 @@ use normtweak::tensor::Tensor;
 use normtweak::util::json::{self, Json};
 
 /// Offline stand-in: always prefers (last_token + 1) % vocab, no batch cap.
-struct MockLm(ModelConfig);
+///
+/// The mock serves the decode fast path for real: admitted prompts take
+/// slots in a small KV arena and their steps run O(vocab) off the session's
+/// own tail token, while overflow sessions (arena full) ride the
+/// O(seq·vocab) full-context recompute fallback — so the bench exercises
+/// the arena plumbing (slot reuse, batched admission, occupancy gauges)
+/// and the `fast_path` block reports real occupancy even without
+/// artifacts.
+struct MockLm {
+    cfg: ModelConfig,
+    arena: SharedKvArena,
+}
+
+/// Arena capacity of the mock (comfortably above the bench's deepest
+/// `max_batch` sweep point, so steady-state decode stays on the fast path).
+const MOCK_SLOTS: usize = 16;
+
+impl MockLm {
+    fn new(cfg: ModelConfig) -> Self {
+        // the mock never materialises K/V rows, so the arena tensors are
+        // kept minimal (1 layer × 1 head × 1-wide values): what matters
+        // here is the slot accounting, not the cache payload
+        let arena = KvArena::shared(1, 1, cfg.seq, 1, MOCK_SLOTS);
+        MockLm { cfg, arena }
+    }
+}
 
 impl LanguageModel for MockLm {
     fn config(&self) -> &ModelConfig {
-        &self.0
+        &self.cfg
     }
 
     fn logits(&self, tokens: &Tensor) -> Result<Tensor> {
         let (b, s) = (tokens.shape[0], tokens.shape[1]);
-        let v = self.0.vocab;
+        let v = self.cfg.vocab;
         let tv = tokens.as_i32()?;
         let mut out = vec![0.0f32; b * s * v];
         for i in 0..b {
@@ -46,6 +75,56 @@ impl LanguageModel for MockLm {
             }
         }
         Ok(Tensor::f32(&[b, s, v], out))
+    }
+
+    fn supports_decode(&self) -> bool {
+        true
+    }
+
+    fn kv_arena(&self) -> Option<SharedKvArena> {
+        Some(self.arena.clone())
+    }
+
+    fn prefill(&self, prompts: &[Vec<i32>]) -> Result<Vec<DecodeSession>> {
+        let mut sessions = decode::recompute_prefill(self, prompts)?;
+        // batched admission: one reservation covers every newcomer, or —
+        // when the arena is full — the whole group stays on recompute
+        let ids = lock_arena(&self.arena).try_reserve(prompts.len());
+        if let Some(ids) = ids {
+            let mut g = lock_arena(&self.arena);
+            for (s, slot) in sessions.iter_mut().zip(ids) {
+                let last = *s.tokens.last().unwrap_or(&0);
+                g.note(slot, last, (s.tokens.len() - 1) as i32);
+                s.kv = KvCache::Slot(ArenaSlot::new(self.arena.clone(), slot));
+            }
+        }
+        Ok(sessions)
+    }
+
+    fn decode_step(&self, sessions: &mut [&mut DecodeSession]) -> Result<()> {
+        let v = self.cfg.vocab;
+        let mut rest: Vec<&mut DecodeSession> = Vec::new();
+        for s in sessions.iter_mut() {
+            let slot = match &s.kv {
+                KvCache::Slot(a) => Some((a.arena().clone(), a.index())),
+                _ => None,
+            };
+            let Some((arena, idx)) = slot else {
+                rest.push(&mut **s);
+                continue;
+            };
+            // fast path: O(vocab) per session, no token re-scan
+            let last = *s.tokens.last().unwrap_or(&0);
+            let next = ((last + 1) as usize) % v;
+            let mut row = vec![0.0f32; v];
+            row[next] = 10.0;
+            s.logits = row;
+            lock_arena(&arena).note(idx, last, (s.tokens.len() - 1) as i32);
+        }
+        if !rest.is_empty() {
+            decode::recompute_decode_step(self, &mut rest)?;
+        }
+        Ok(())
     }
 }
 
@@ -69,7 +148,7 @@ fn engine_for(
     let b = match src {
         Source::Mock => b.model_with("bench", tuning, || {
             let lm: Box<dyn LanguageModel> =
-                Box::new(MockLm(ModelConfig::builtin("nt-tiny")?));
+                Box::new(MockLm::new(ModelConfig::builtin("nt-tiny")?));
             Ok(lm)
         }),
         Source::Checkpoint { artifacts, model, path } => {
@@ -232,6 +311,10 @@ fn main() {
             // are split instead of folded into the client-side round trip;
             // phases that never ran keep their keys with count: 0
             ("latency_us", m.stats.latency_us_json()),
+            // decode fast-path health: KV-arena occupancy per decode turn
+            // and riders per admission round (count-zero shapes on lanes
+            // without an arena)
+            ("fast_path", m.stats.fast_path_json()),
             ("failed", json::n(m.stats.failed as f64)),
             (
                 "first_error",

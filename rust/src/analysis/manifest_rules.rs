@@ -223,6 +223,47 @@ fn check_decode(
             }
         },
     }
+    // the slot arena is sized by `decode.slots` (defaulting to the largest
+    // decode bucket): a value below that bucket cannot hold a full
+    // admission round, and a value outside `decode.buckets` has no
+    // exported step graph to run full-occupancy decode turns at
+    if let Some(s) = d.get("slots") {
+        match s.as_usize() {
+            None => report.push(dec_diag(
+                "decode.slots".to_string(),
+                "manifest: `decode.slots` not a number".to_string(),
+            )),
+            Some(slots) => {
+                if let Some(dec) = &dbuckets {
+                    let dec_max = dec.iter().copied().max().unwrap_or(0);
+                    let arena_diag = |msg: String| {
+                        Diagnostic::error(codes::ARENA_SLOTS, msg)
+                            .at(origin)
+                            .field("decode.slots")
+                            .fix(format!(
+                                "re-export with `decode.slots` set to a decode \
+                                 bucket >= {dec_max}"
+                            ))
+                    };
+                    if slots < dec_max {
+                        report.push(arena_diag(format!(
+                            "manifest: `decode.slots` = {slots} is smaller than the \
+                             largest decode bucket {dec_max} — the KV arena cannot \
+                             hold a full admission round"
+                        )));
+                    } else if !dec.contains(&slots) {
+                        let listed =
+                            dec.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(", ");
+                        report.push(arena_diag(format!(
+                            "manifest: `decode.slots` = {slots} has no exported step \
+                             graph (decode.buckets: {listed}) — full-occupancy decode \
+                             turns cannot dispatch"
+                        )));
+                    }
+                }
+            }
+        }
+    }
     // the scheduler chunks decode steps by the *main* bucket cap: a decode
     // set that cannot fit the largest main bucket fails mid-request
     if let (Some(main), Some(dec)) = (main_buckets, &dbuckets) {
@@ -489,12 +530,13 @@ mod tests {
     #[test]
     fn collects_every_violation_in_one_run() {
         // missing calib_batch + drifted grain tag + bad decode rank +
-        // decode bucket gap + duplicate graph: five findings, one pass
+        // undersized slot arena + decode bucket gap + duplicate graph:
+        // six findings, one pass
         let ctx = ctx_for(
             "multi",
             r#"{"format": 1, "buckets": [8, 32],
                 "groups": {"g32": 64},
-                "decode": {"buckets": [8],
+                "decode": {"buckets": [8], "slots": 4,
                            "caches": {"m": {"n_layer": 2, "shape": [4, 128]}}},
                 "models": {},
                 "graphs": [
@@ -509,12 +551,50 @@ mod tests {
             codes::MANIFEST_KEY,
             codes::MANIFEST_GROUPS,
             codes::DECODE_RECORD,
+            codes::ARENA_SLOTS,
             codes::DECODE_BUCKET_GAP,
             codes::GRAPH_DUPLICATE,
             codes::GRAPH_FILE_MISSING,
         ] {
             assert!(codes.contains(&want), "missing {want} in {codes:?}");
         }
+    }
+
+    #[test]
+    fn decode_slots_arena_compatibility() {
+        // slots matching a decode bucket >= the largest is clean
+        let ctx = ctx_for(
+            "slots_ok",
+            r#"{"format": 1, "calib_batch": 32, "buckets": [8],
+                "groups": {"pc": 0},
+                "decode": {"buckets": [8, 32], "slots": 32, "caches": {}},
+                "models": {}, "graphs": []}"#,
+        );
+        assert!(run_lints(&ctx).is_empty());
+        // slots outside decode.buckets has no exported step graph
+        let ctx = ctx_for(
+            "slots_unexported",
+            r#"{"format": 1, "calib_batch": 32, "buckets": [8],
+                "groups": {"pc": 0},
+                "decode": {"buckets": [8, 32], "slots": 64, "caches": {}},
+                "models": {}, "graphs": []}"#,
+        );
+        let report = run_lints(&ctx);
+        assert_eq!(report.codes(), vec![codes::ARENA_SLOTS]);
+        assert!(
+            report.diagnostics[0].message.contains("no exported step graph"),
+            "{}",
+            report.diagnostics[0].message
+        );
+        // a non-numeric slots value is a schema violation, not an arena one
+        let ctx = ctx_for(
+            "slots_nan",
+            r#"{"format": 1, "calib_batch": 32, "buckets": [8],
+                "groups": {"pc": 0},
+                "decode": {"buckets": [8, 32], "slots": "many", "caches": {}},
+                "models": {}, "graphs": []}"#,
+        );
+        assert_eq!(run_lints(&ctx).codes(), vec![codes::DECODE_RECORD]);
     }
 
     #[test]

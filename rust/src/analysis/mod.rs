@@ -37,6 +37,7 @@
 //! | NT0107 | error | decode buckets cannot fit the largest main bucket | re-export with matching bucket sets |
 //! | NT0108 | warning | a graph's HLO file is listed but missing on disk | re-run `make artifacts` |
 //! | NT0109 | error | duplicate `(model, graph)` entry in `graphs` | re-run the AOT export |
+//! | NT0110 | error | `decode.slots` incompatible with the slot arena (below the largest decode bucket, or no exported step graph at that batch) | re-export with `slots` in `decode.buckets` |
 //! | NT0201 | error | checkpoint `.ntz` missing or unreadable | re-run `normtweak quantize` |
 //! | NT0202 | error | required checkpoint tensor missing or mistyped | re-quantize the checkpoint |
 //! | NT0203 | error | packed codes don't round-trip (bad `pbits` width or byte length) | re-quantize the checkpoint |
@@ -129,6 +130,7 @@ pub mod codes {
     pub const DECODE_BUCKET_GAP: &str = "NT0107";
     pub const GRAPH_FILE_MISSING: &str = "NT0108";
     pub const GRAPH_DUPLICATE: &str = "NT0109";
+    pub const ARENA_SLOTS: &str = "NT0110";
     pub const CKPT_UNREADABLE: &str = "NT0201";
     pub const CKPT_TENSOR: &str = "NT0202";
     pub const CKPT_PACK: &str = "NT0203";
@@ -179,6 +181,7 @@ pub mod codes {
         (DECODE_BUCKET_GAP, "decode buckets cannot fit the largest main bucket"),
         (GRAPH_FILE_MISSING, "graph HLO file listed but missing on disk"),
         (GRAPH_DUPLICATE, "duplicate (model, graph) entry in graphs"),
+        (ARENA_SLOTS, "decode.slots incompatible with the slot arena"),
         (CKPT_UNREADABLE, "checkpoint .ntz missing or unreadable"),
         (CKPT_TENSOR, "required checkpoint tensor missing or mistyped"),
         (CKPT_PACK, "packed codes do not round-trip"),

@@ -3,12 +3,15 @@
 //!
 //! Validates the Chrome trace-event JSON produced by `--trace` (parses,
 //! non-empty, ≥3 named tracks, per-track monotonic timestamps in file
-//! order, complete spans nest without partial overlap) and, when given,
-//! the enriched `BENCH_serve.json` schema (per-config `latency_us`
-//! percentile blocks for queue / prefill / decode_step / e2e, plus the
-//! `failed` counter).  Exits non-zero with an `error:` line naming the
-//! first violation, so a refactor that silently breaks the export fails
-//! at PR time instead of at the next debugging session.
+//! order, complete spans nest without partial overlap, and — guarding the
+//! decode fast path — no stacked-cache era span (`stack_layer` /
+//! `scatter_layer` / `cache_row`) ever appears on a `lane:*/decode`
+//! track) and, when given, the enriched `BENCH_serve.json` schema
+//! (per-config `latency_us` percentile blocks for queue / prefill /
+//! decode_step / e2e, the `fast_path` arena-occupancy / admission-batch
+//! block, plus the `failed` counter).  Exits non-zero with an `error:`
+//! line naming the first violation, so a refactor that silently breaks
+//! the export fails at PR time instead of at the next debugging session.
 
 use std::collections::HashMap;
 
@@ -33,6 +36,9 @@ fn check_trace(path: &str) -> Result<()> {
     }
 
     let mut tracks = 0usize;
+    // tid → declared track name (from "M" metadata events), so span rules
+    // can key on *which* track a span landed on
+    let mut track_names: HashMap<u64, String> = HashMap::new();
     let mut last_ts: HashMap<u64, f64> = HashMap::new();
     // per-track stack of open complete-span end times (file order = sorted
     // by start, parents before children)
@@ -45,14 +51,14 @@ fn check_trace(path: &str) -> Result<()> {
             .ok_or_else(|| fail(format!("{path}: event {i} has no ph")))?;
         let tid = ev.get("tid").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
         if ph == "M" {
-            let named = ev
+            let Some(name) = ev
                 .get("args")
                 .and_then(|a| a.get("name"))
                 .and_then(|n| n.as_str())
-                .is_some();
-            if !named {
+            else {
                 return Err(fail(format!("{path}: metadata event {i} has no track name")));
-            }
+            };
+            track_names.insert(tid, name.to_string());
             tracks += 1;
             continue;
         }
@@ -70,6 +76,23 @@ fn check_trace(path: &str) -> Result<()> {
         last_ts.insert(tid, ts);
         if ph == "X" {
             spans += 1;
+            // decode-track hygiene: the slot-arena fast path indexes KV
+            // caches in place, so a stacked-cache era span on a lane's
+            // decode track means per-step stack/scatter/row-copy crept
+            // back into the hot loop
+            let span = ev.get("name").and_then(|v| v.as_str()).unwrap_or("");
+            if let Some(track) = track_names.get(&tid) {
+                if track.starts_with("lane:")
+                    && track.ends_with("/decode")
+                    && matches!(span, "stack_layer" | "scatter_layer" | "cache_row")
+                {
+                    return Err(fail(format!(
+                        "{path}: span `{span}` (event {i}) on decode track `{track}`: \
+                         the decode fast path must not stack, scatter, or copy KV \
+                         rows per step"
+                    )));
+                }
+            }
             let dur = ev.get("dur").and_then(|v| v.as_f64()).unwrap_or(0.0);
             let stack = open.entry(tid).or_default();
             while stack.last().is_some_and(|end| *end <= ts) {
@@ -124,6 +147,22 @@ fn check_bench(path: &str) -> Result<()> {
                 if h.get(field).and_then(|v| v.as_f64()).is_none() {
                     return Err(fail(format!(
                         "{path}: config {i} latency_us.{phase}.{field} missing or \
+                         not a number"
+                    )));
+                }
+            }
+        }
+        let fp = c
+            .get("fast_path")
+            .ok_or_else(|| fail(format!("{path}: config {i} has no fast_path")))?;
+        for key in ["arena_occupancy", "admission_batch_size"] {
+            let h = fp.get(key).ok_or_else(|| {
+                fail(format!("{path}: config {i} fast_path has no `{key}`"))
+            })?;
+            for field in ["count", "p50", "p90", "p99", "max"] {
+                if h.get(field).and_then(|v| v.as_f64()).is_none() {
+                    return Err(fail(format!(
+                        "{path}: config {i} fast_path.{key}.{field} missing or \
                          not a number"
                     )));
                 }

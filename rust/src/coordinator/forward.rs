@@ -5,13 +5,18 @@
 //! exported buckets.
 //!
 //! When the manifest carries a `decode` record, both runners also override
-//! the [`LanguageModel`] session API: `prefill` runs the `block_fwd_kv`
-//! prefill graphs once per prompt batch and seeds per-request KV caches,
-//! and `decode_step` advances any mix of sessions by one token through the
-//! fixed-shape `embed_dec → block_dec[_q] × L → head_dec` step graphs
-//! (caches threaded as carried state via [`Runtime::run_carry`]).  Without
-//! the record the trait's full-context recompute fallback serves instead —
-//! a feature-gated degradation, never a failure.
+//! the [`LanguageModel`] session API with the slot-arena fast path: each
+//! runner owns one [`KvArena`] (allocated once at construction, sized by
+//! `decode.slots`), `prefill` runs the `block_fwd_kv` prefill graphs once
+//! per prompt batch and writes every newcomer's cache rows into reserved
+//! arena slots, and `decode_step` advances slot-resident sessions through
+//! the fixed-shape `embed_dec → block_dec[_q] × L → head_dec` step graphs
+//! with the arena tensors threaded as carried state via
+//! [`Runtime::run_carry`] — zero per-step cache assembly of any kind.
+//! Sessions admitted while the arena is full (or degraded by a failed
+//! step) get [`KvCache::Recompute`] instead and ride the full-context
+//! fallback; without the record the fallback serves everything — a
+//! feature-gated degradation, never a failure.
 
 // Justified unwraps: graph outputs and token rows are shape-checked at
 // load time; `last()`/`next()` on them cannot fail
@@ -20,7 +25,9 @@
 
 use crate::calib::vocab::PAD;
 use crate::error::{Error, Result};
-use crate::eval::decode::{self, DecodeSession, KvCache};
+use crate::eval::decode::{
+    self, lock_arena, ArenaSlot, DecodeSession, KvArena, KvCache, SharedKvArena,
+};
 use crate::eval::LanguageModel;
 use crate::model::{ModelConfig, ModelWeights, NormKind, QuantizedBlock, QuantizedModel};
 use crate::quant::act::fake_quant_per_row;
@@ -81,71 +88,52 @@ fn prompt_tensor(prompts: &[Vec<i32>], seq: usize) -> Result<Tensor> {
     Ok(Tensor::i32(&[b, seq], toks))
 }
 
-/// Split batched prefill outputs into per-request sessions: row `i` gets
-/// its logits at its own last prompt position plus its `[1, H, S, Dh]`
-/// slice of every layer's K/V cache.
-fn sessions_from_prefill(
-    prompts: &[Vec<i32>],
-    logits: &Tensor,
-    layer_kv: &[(Tensor, Tensor)],
-) -> Result<Vec<DecodeSession>> {
+/// The slot arena a runner's manifest calls for: `Some` iff the manifest
+/// has a decode record covering `name`.  Allocated once per runner at
+/// construction — `decode.slots` rows per layer, `[slots, H, S, Dh]`.
+pub(crate) fn arena_for(runtime: &Runtime, name: &str) -> Option<SharedKvArena> {
+    let dec = runtime.manifest.decode.as_ref()?;
+    let spec = runtime.manifest.decode_for(name)?;
+    Some(KvArena::shared(
+        spec.n_layer,
+        spec.shape[0],
+        spec.shape[1],
+        spec.shape[2],
+        dec.slots,
+    ))
+}
+
+/// Per-row logits at each prompt's own last position, sliced out of a
+/// batched `[B, S, V]` prefill head output.
+fn prefill_logit_rows(prompts: &[Vec<i32>], logits: &Tensor) -> Result<Vec<Vec<f32>>> {
     let (seq, vocab) = (logits.shape[1], logits.shape[2]);
     let lv = logits.as_f32()?;
-    let mut out = Vec::with_capacity(prompts.len());
-    for (i, p) in prompts.iter().enumerate() {
-        let kv: Vec<(Tensor, Tensor)> = layer_kv
-            .iter()
-            .map(|(k, v)| Ok((decode::cache_row(k, i)?, decode::cache_row(v, i)?)))
-            .collect::<Result<_>>()?;
-        let pos = p.len() - 1;
-        out.push(DecodeSession {
-            tokens: p.clone(),
-            logits: lv[(i * seq + pos) * vocab..][..vocab].to_vec(),
-            kv: KvCache::Layers(kv),
-        });
-    }
-    Ok(out)
+    Ok(prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let pos = p.len() - 1;
+            lv[(i * seq + pos) * vocab..][..vocab].to_vec()
+        })
+        .collect())
 }
 
-/// Build one step's `[bucket, 1]` token and `[bucket]` position inputs
-/// (pad rows decode token 0 at position 0 and are discarded).
-fn step_inputs(
-    sessions: &[&mut DecodeSession],
-    bucket: usize,
-    seq: usize,
-) -> Result<(Tensor, Tensor)> {
-    let mut tok = vec![0i32; bucket];
-    let mut pos = vec![0i32; bucket];
-    for (i, s) in sessions.iter().enumerate() {
-        if s.tokens.is_empty() {
-            return Err(Error::Config("decode: empty session".into()));
+/// Partition a step batch into slot-resident sessions and the rest
+/// (recompute fallbacks, plus any externally-built layered sessions) — the
+/// two halves advance through different paths and must not share a graph.
+fn split_slotted<'a>(
+    sessions: &'a mut [&mut DecodeSession],
+) -> (Vec<&'a mut DecodeSession>, Vec<&'a mut DecodeSession>) {
+    let mut slotted = Vec::new();
+    let mut rest = Vec::new();
+    for s in sessions.iter_mut() {
+        if matches!(s.kv, KvCache::Slot(_)) {
+            slotted.push(&mut **s);
+        } else {
+            rest.push(&mut **s);
         }
-        if s.tokens.len() > seq {
-            return Err(Error::Config(format!(
-                "decode session at {} tokens exceeds the model context {seq}",
-                s.tokens.len()
-            )));
-        }
-        tok[i] = *s.tokens.last().unwrap();
-        pos[i] = (s.tokens.len() - 1) as i32;
     }
-    Ok((Tensor::i32(&[bucket, 1], tok), Tensor::i32(&[bucket], pos)))
-}
-
-/// Copy one step's `[bucket, 1, V]` logits back into the live sessions.
-fn set_step_logits(sessions: &mut [&mut DecodeSession], logits: &Tensor) -> Result<()> {
-    let vocab = *logits.shape.last().unwrap();
-    let lv = logits.as_f32()?;
-    for (i, s) in sessions.iter_mut().enumerate() {
-        s.logits = lv[i * vocab..][..vocab].to_vec();
-    }
-    Ok(())
-}
-
-/// Whether every session carries a layered cache (a mixed batch falls back
-/// to recompute — it cannot ride one decode graph).
-fn all_layered(sessions: &[&mut DecodeSession]) -> bool {
-    sessions.iter().all(|s| matches!(s.kv, KvCache::Layers(_)))
+    (slotted, rest)
 }
 
 /// Append a quantized block's weight arguments in the canonical manifest
@@ -168,13 +156,20 @@ fn extend_qblock_args<'a>(blk: &'a QuantizedBlock, args: &mut Vec<&'a Tensor>) {
                  blk.fc2.codes_tensor(), &blk.fc2.scales, &blk.fc2.bias]);
 }
 
-/// Shared prefill driver: embed → per-layer KV block → head, split into
-/// per-request sessions.  The closures supply the model-specific graph
-/// calls (float vs quantized); padding, the layer loop, and cache slicing
-/// are identical by construction — one place to change the protocol.
+/// Shared prefill driver: one batched `embed → per-layer KV block → head`
+/// pass over the whole admission group, then slot admission — every
+/// newcomer's cache rows are written into reserved arena slots in one
+/// place.  The closures supply the model-specific graph calls (float vs
+/// quantized); padding, the layer loop, and admission are identical by
+/// construction — one place to change the protocol.
+///
+/// When the arena is absent, full, or degraded, the group still gets
+/// correct sessions: the logits just computed are kept and the sessions
+/// carry [`KvCache::Recompute`] — admission never fails for capacity.
 fn run_prefill(
     cfg: &ModelConfig,
     prompts: &[Vec<i32>],
+    arena: Option<&SharedKvArena>,
     embed: impl Fn(&Tensor) -> Result<Tensor>,
     block_kv: impl Fn(usize, &Tensor) -> Result<(Tensor, Tensor, Tensor)>,
     head: impl Fn(&Tensor) -> Result<Tensor>,
@@ -190,20 +185,77 @@ fn run_prefill(
         x = nx;
         layer_kv.push((k, v));
     }
-    sessions_from_prefill(prompts, &head(&x)?, &layer_kv)
+    let rows = prefill_logit_rows(prompts, &head(&x)?)?;
+
+    let ids = arena.and_then(|a| lock_arena(a).try_reserve(prompts.len()));
+    let (Some(a), Some(ids)) = (arena, ids) else {
+        // overflow admission: the group rides the recompute fallback on
+        // the logits already computed above
+        return Ok(prompts
+            .iter()
+            .zip(rows)
+            .map(|(p, logits)| DecodeSession {
+                tokens: p.clone(),
+                logits,
+                kv: KvCache::Recompute,
+            })
+            .collect());
+    };
+    {
+        let mut g = lock_arena(a);
+        let mut first_err = None;
+        'layers: for (l, (k, v)) in layer_kv.iter().enumerate() {
+            for (row, &slot) in ids.iter().enumerate() {
+                if let Err(e) = g.write_row(l, slot, k, v, row) {
+                    first_err = Some(e);
+                    break 'layers;
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            // hand the reservation back before surfacing the error — a
+            // failed admission must not leak slots
+            for &slot in &ids {
+                g.release(slot);
+            }
+            return Err(e);
+        }
+        for (p, &slot) in prompts.iter().zip(&ids) {
+            g.note(slot, *p.last().unwrap(), (p.len() - 1) as i32);
+        }
+    }
+    Ok(prompts
+        .iter()
+        .zip(rows)
+        .zip(ids)
+        .map(|((p, logits), slot)| DecodeSession {
+            tokens: p.clone(),
+            logits,
+            kv: KvCache::Slot(ArenaSlot::new(a.clone(), slot)),
+        })
+        .collect())
 }
 
-/// Shared one-token step driver: embed_dec → per-layer carried block step
-/// (`block_step(layer, bucket, x, pos, kv)`) → head_dec, with the caches
-/// stacked/scattered around each layer call and the refreshed logits
-/// written back into the sessions.  `head_act_bits` applies the W+A
-/// activation fake-quant to the head input (quantized models only).
+/// Shared one-token step driver over the slot arena: embed_dec →
+/// per-layer carried block step (`block_step(layer, bucket, x, pos, kv)`)
+/// → head_dec, always at the fixed `slots` bucket.  Each layer's arena
+/// tensors are moved out, carried through the graph, and moved back — no
+/// per-session assembly, copies, or allocations anywhere in the loop.
+/// `head_act_bits` applies the W+A activation fake-quant to the head
+/// input (quantized models only).
+///
+/// Row inputs: participants feed their newest `(token, position)`; every
+/// other live slot re-feeds its shadow, so the graph's in-place cache
+/// update rewrites values already there (deterministic kernels make that
+/// bitwise idempotent); free slots feed `(0, 0)` and their rows are
+/// overwritten by the next admission's prefill.
 #[allow(clippy::too_many_arguments)]
 fn run_decode_step(
     runtime: &Runtime,
     name: &str,
     cfg: &ModelConfig,
     sessions: &mut [&mut DecodeSession],
+    arena: &SharedKvArena,
     tok_emb: &Tensor,
     pos_emb: &Tensor,
     block_step: impl Fn(usize, usize, &Tensor, &Tensor, Vec<Tensor>) -> Result<(Tensor, Vec<Tensor>)>,
@@ -214,11 +266,47 @@ fn run_decode_step(
     if sessions.is_empty() {
         return Ok(());
     }
-    let dec = runtime.manifest.decode.as_ref().ok_or_else(|| {
-        Error::Artifact("decode step driven without a manifest decode record".into())
-    })?;
-    let bucket = dec.bucket_for(sessions.len())?;
-    let (tok_t, pos_t) = step_inputs(sessions, bucket, cfg.seq)?;
+    // participants: (slot, newest token, its position)
+    let mut rows = Vec::with_capacity(sessions.len());
+    for s in sessions.iter() {
+        let slot = match &s.kv {
+            KvCache::Slot(h) => h.index(),
+            _ => {
+                return Err(Error::Shape(
+                    "arena decode step over a session without a slot".into(),
+                ))
+            }
+        };
+        if s.tokens.is_empty() {
+            return Err(Error::Config("decode: empty session".into()));
+        }
+        if s.tokens.len() > cfg.seq {
+            return Err(Error::Config(format!(
+                "decode session at {} tokens exceeds the model context {}",
+                s.tokens.len(),
+                cfg.seq
+            )));
+        }
+        rows.push((slot, *s.tokens.last().unwrap(), (s.tokens.len() - 1) as i32));
+    }
+    let bucket;
+    let (tok_t, pos_t) = {
+        let g = lock_arena(arena);
+        bucket = g.slots();
+        let mut tok = vec![0i32; bucket];
+        let mut pos = vec![0i32; bucket];
+        for slot in 0..bucket {
+            if let Some((t, p)) = g.shadow(slot) {
+                tok[slot] = t;
+                pos[slot] = p;
+            }
+        }
+        for &(slot, t, p) in &rows {
+            tok[slot] = t;
+            pos[slot] = p;
+        }
+        (Tensor::i32(&[bucket, 1], tok), Tensor::i32(&[bucket], pos))
+    };
     let mut x = {
         let outs = runtime.run(
             name,
@@ -228,10 +316,21 @@ fn run_decode_step(
         outs.into_iter().next().unwrap()
     };
     for l in 0..cfg.n_layer {
-        let (k, v) = decode::stack_layer(sessions, l, bucket)?;
-        let (nx, carried) = block_step(l, bucket, &x, &pos_t, vec![k, v])?;
+        let kv = {
+            let (k, v) = lock_arena(arena).take_layer(l)?;
+            vec![k, v]
+        };
+        // if the graph call dies here the layer stays taken: the arena is
+        // degraded, refuses admissions, and heals once the slots drain
+        let (nx, mut carried) = block_step(l, bucket, &x, &pos_t, kv)?;
         x = nx;
-        decode::scatter_layer(sessions, l, &carried[0], &carried[1])?;
+        let v2 = carried
+            .pop()
+            .ok_or_else(|| Error::Shape("decode step carried no V cache".into()))?;
+        let k2 = carried
+            .pop()
+            .ok_or_else(|| Error::Shape("decode step carried no K cache".into()))?;
+        lock_arena(arena).put_layer(l, k2, v2)?;
     }
     let xh = match head_act_bits {
         Some(bits) => fake_quant_per_row(&x, bits)?,
@@ -243,13 +342,24 @@ fn run_decode_step(
     }
     args.push(tok_emb);
     let outs = runtime.run(name, &format!("head_dec.b{bucket}"), &args)?;
-    set_step_logits(sessions, &outs[0])
+    // logits come back slot-indexed: each session reads its own row
+    let vocab = *outs[0].shape.last().unwrap();
+    let lv = outs[0].as_f32()?;
+    let mut g = lock_arena(arena);
+    for (s, &(slot, t, p)) in sessions.iter_mut().zip(&rows) {
+        s.logits = lv[slot * vocab..][..vocab].to_vec();
+        g.note(slot, t, p);
+    }
+    Ok(())
 }
 
 /// Float model runner (the `fOut` stream + FP16-analog baseline evals).
 pub struct FloatModel<'rt, 'w> {
     pub runtime: &'rt Runtime,
     pub weights: &'w ModelWeights,
+    /// Slot-arena KV store for the decode fast path (`None` without a
+    /// manifest decode record — sessions then ride the recompute fallback).
+    pub arena: Option<SharedKvArena>,
 }
 
 impl<'rt, 'w> FloatModel<'rt, 'w> {
@@ -257,7 +367,8 @@ impl<'rt, 'w> FloatModel<'rt, 'w> {
         runtime.manifest.verify_model(&weights.config)?;
         // a drifted decode cache record must fail here, not mid-request
         runtime.manifest.verify_decode(&weights.config)?;
-        Ok(FloatModel { runtime, weights })
+        let arena = arena_for(runtime, &weights.config.name);
+        Ok(FloatModel { runtime, weights, arena })
     }
 
     fn name(&self) -> &str {
@@ -383,6 +494,7 @@ impl LanguageModel for FloatModel<'_, '_> {
         run_prefill(
             &self.weights.config,
             prompts,
+            self.arena.as_ref(),
             |t| self.embed(t),
             |l, x| self.block_fwd_kv(l, x),
             |x| self.head(x),
@@ -390,8 +502,20 @@ impl LanguageModel for FloatModel<'_, '_> {
     }
 
     fn decode_step(&self, sessions: &mut [&mut DecodeSession]) -> Result<()> {
-        if !self.supports_decode() || !all_layered(sessions) {
+        let Some(arena) = &self.arena else {
             return decode::recompute_decode_step(self, sessions);
+        };
+        let (mut slotted, mut rest) = split_slotted(sessions);
+        if !rest.is_empty() {
+            decode::recompute_decode_step(self, &mut rest)?;
+        }
+        if slotted.is_empty() {
+            return Ok(());
+        }
+        if lock_arena(arena).is_degraded() {
+            // demote-and-recompute: a degraded arena cannot step; the
+            // demotions free the slots and let it heal
+            return decode::recompute_decode_step(self, &mut slotted);
         }
         let cfg = &self.weights.config;
         let lnf_b = match cfg.norm {
@@ -402,7 +526,8 @@ impl LanguageModel for FloatModel<'_, '_> {
             self.runtime,
             self.name(),
             cfg,
-            sessions,
+            &mut slotted,
+            arena,
             self.weights.get("tok_emb")?,
             self.weights.get("pos_emb")?,
             |l, bucket, x, pos, kv| {
@@ -422,6 +547,10 @@ impl LanguageModel for FloatModel<'_, '_> {
             lnf_b,
         )
     }
+
+    fn kv_arena(&self) -> Option<SharedKvArena> {
+        self.arena.clone()
+    }
 }
 
 /// Quantized model runner (the `qOut` stream + quantized evals/serving).
@@ -433,6 +562,9 @@ pub struct QuantModel<'rt, 'q> {
     pub runtime: &'rt Runtime,
     pub model: &'q QuantizedModel,
     pub act_bits: Option<u8>,
+    /// Slot-arena KV store for the decode fast path (`None` without a
+    /// manifest decode record — sessions then ride the recompute fallback).
+    pub arena: Option<SharedKvArena>,
 }
 
 impl<'rt, 'q> QuantModel<'rt, 'q> {
@@ -444,7 +576,8 @@ impl<'rt, 'q> QuantModel<'rt, 'q> {
         // drifted decode cache record
         runtime.validate_grain(&model.scheme.group_tag())?;
         runtime.manifest.verify_decode(&model.config)?;
-        Ok(QuantModel { runtime, model, act_bits: None })
+        let arena = arena_for(runtime, &model.config.name);
+        Ok(QuantModel { runtime, model, act_bits: None, arena })
     }
 
     pub fn with_act_bits(mut self, bits: Option<u8>) -> Self {
@@ -536,7 +669,7 @@ impl<'rt, 'q> QuantModel<'rt, 'q> {
         Ok((slice_batch(x2, b), slice_batch(k, b), slice_batch(v, b)))
     }
 
-    /// One quantized one-token decode step over the stacked caches.
+    /// One quantized one-token decode step over the carried arena caches.
     fn block_dec_q(
         &self,
         layer: usize,
@@ -595,6 +728,7 @@ impl LanguageModel for QuantModel<'_, '_> {
         run_prefill(
             &self.model.config,
             prompts,
+            self.arena.as_ref(),
             |t| self.embed(t),
             |l, x| self.block_fwd_q_kv(l, x),
             |x| self.head(x),
@@ -602,14 +736,27 @@ impl LanguageModel for QuantModel<'_, '_> {
     }
 
     fn decode_step(&self, sessions: &mut [&mut DecodeSession]) -> Result<()> {
-        if !self.supports_decode() || !all_layered(sessions) {
+        let Some(arena) = &self.arena else {
             return decode::recompute_decode_step(self, sessions);
+        };
+        let (mut slotted, mut rest) = split_slotted(sessions);
+        if !rest.is_empty() {
+            decode::recompute_decode_step(self, &mut rest)?;
+        }
+        if slotted.is_empty() {
+            return Ok(());
+        }
+        if lock_arena(arena).is_degraded() {
+            // demote-and-recompute: a degraded arena cannot step; the
+            // demotions free the slots and let it heal
+            return decode::recompute_decode_step(self, &mut slotted);
         }
         run_decode_step(
             self.runtime,
             self.name(),
             &self.model.config,
-            sessions,
+            &mut slotted,
+            arena,
             &self.model.tok_emb,
             &self.model.pos_emb,
             |l, bucket, x, pos, kv| self.block_dec_q(l, bucket, x, pos, kv),
@@ -617,6 +764,10 @@ impl LanguageModel for QuantModel<'_, '_> {
             &self.model.lnf_g,
             self.model.lnf_b.as_ref(),
         )
+    }
+
+    fn kv_arena(&self) -> Option<SharedKvArena> {
+        self.arena.clone()
     }
 }
 

@@ -13,6 +13,7 @@ mod metrics;
 mod pipeline;
 
 pub use forward::{pad_batch, FloatModel, QuantModel};
+pub(crate) use forward::arena_for;
 pub use hessian::{collect_hessians, hessian_from_tap, hessian_from_tap_cpu};
 pub use metrics::{LayerMetrics, PipelineMetrics};
 pub use pipeline::{quantize_model, validate_scheme_artifacts, PipelineConfig};

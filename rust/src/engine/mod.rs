@@ -11,18 +11,48 @@
 //! # Continuous batching
 //!
 //! Requests occupy per-lane *slots* as [`crate::eval::DecodeSession`]s:
-//! the scheduler prefills newcomers into free slots, advances all live
-//! sessions of a lane by one token per turn (`decode_step`), and retires
-//! each session the moment it reaches its target — so a short request
-//! never waits for a long batch-mate, and a newly arrived request joins
-//! the running batch between steps instead of waiting for the next
-//! dispatch window.  On models whose artifacts carry the manifest's
-//! `decode` record the step is O(1) over per-request KV caches; on
-//! anything else it falls back to full-context recompute (same tokens,
-//! just O(S) per step).  Each request samples from its own seeded stream,
-//! so any mix of [`SampleConfig`]s shares a batch and results never depend
-//! on batch composition.  [`EngineStats`] splits prefill vs decode token
-//! counts and wall time (`prefill_tokens` / `decode_tokens`).
+//! the scheduler batch-prefills each admission round into free slots,
+//! advances all live sessions of a lane by one token per turn
+//! (`decode_step`), and retires each session the moment it reaches its
+//! target — so a short request never waits for a long batch-mate, and a
+//! newly arrived request joins the running batch between steps instead of
+//! waiting for the next dispatch window.  An admission round larger than
+//! the model's batch bucket is split into bucket-sized prefill chunks
+//! whose execution *interleaves* with the lane's decode turns, so a large
+//! backlog never stalls running sessions.  On models whose artifacts
+//! carry the manifest's `decode` record the step is O(1) over
+//! arena-resident KV caches; on anything else it falls back to
+//! full-context recompute (same tokens, just O(S) per step).  Each
+//! request samples from its own seeded stream, so any mix of
+//! [`SampleConfig`]s shares a batch and results never depend on batch
+//! composition.  [`EngineStats`] splits prefill vs decode token counts
+//! and wall time (`prefill_tokens` / `decode_tokens`).
+//!
+//! # Slot lifecycle (the KV arena)
+//!
+//! Models backed by AOT decode graphs own a
+//! [`crate::eval::KvArena`]: per layer, one `(K, V)` tensor pair of shape
+//! `[slots, H, S, Dh]`, allocated once when the runner is built (`slots`
+//! = the manifest's `decode.slots`).  A request's cache lives in one
+//! arena row for its whole life:
+//!
+//! ```text
+//!   admit     try_reserve(n) hands the prefill n free slot indices
+//!   prefill   one batched block_fwd*_kv pass; each newcomer's K/V rows
+//!             are written into its slot (the only copy it ever pays)
+//!   decode    every step runs at the fixed `slots` bucket with the arena
+//!             tensors carried through the step graph in place — zero
+//!             per-step stacking, scattering, or row copies
+//!   retire    dropping the session drops its ArenaSlot, which frees the
+//!             slot for the next admission round
+//! ```
+//!
+//! Admission rounds that find the arena full (or degraded by a failed
+//! step graph) still succeed: those sessions carry
+//! [`crate::eval::KvCache::Recompute`] and ride the full-context fallback
+//! until they retire.  The scheduler surfaces arena pressure as the
+//! `arena.occupancy` gauge and per-turn occupancy histogram in
+//! [`ModelStats`].
 //!
 //! # Lifecycle
 //!
@@ -544,6 +574,10 @@ pub struct ServableModel {
     runtime: Runtime,
     model: QuantizedModel,
     act_bits: Option<u8>,
+    /// One arena for the model's lifetime, shared by every runner view —
+    /// slot reservations made through one `runner()` call survive into
+    /// the next (sessions hold `ArenaSlot` handles into this object).
+    arena: Option<crate::eval::SharedKvArena>,
 }
 
 impl ServableModel {
@@ -562,7 +596,8 @@ impl ServableModel {
         runtime.manifest.verify_model(&model.config)?;
         runtime.validate_grain(&model.scheme.group_tag())?;
         runtime.manifest.verify_decode(&model.config)?;
-        Ok(ServableModel { runtime, model, act_bits: None })
+        let arena = crate::coordinator::arena_for(&runtime, &model.config.name);
+        Ok(ServableModel { runtime, model, act_bits: None, arena })
     }
 
     /// Serve with dynamic activation fake-quant (the W+A modes).
@@ -585,6 +620,7 @@ impl ServableModel {
             runtime: &self.runtime,
             model: &self.model,
             act_bits: self.act_bits,
+            arena: self.arena.clone(),
         }
     }
 }
@@ -616,6 +652,10 @@ impl LanguageModel for ServableModel {
 
     fn decode_step(&self, sessions: &mut [&mut crate::eval::DecodeSession]) -> Result<()> {
         self.runner().decode_step(sessions)
+    }
+
+    fn kv_arena(&self) -> Option<crate::eval::SharedKvArena> {
+        self.arena.clone()
     }
 }
 

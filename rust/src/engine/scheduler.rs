@@ -17,19 +17,25 @@
 //! token history, pending logits, and — on runners with exported decode
 //! graphs — its per-layer KV cache).  The loop interleaves three moves:
 //!
-//! 1. **Admit**: queued requests enter free slots and are *prefilled*
-//!    (chunked to the model's largest exported bucket).  An idle lane keeps
-//!    the classic readiness rules — full batch, closed batch window, or a
-//!    deadline's dispatch-due point — but a lane that is already streaming
-//!    admits immediately between steps: newcomers ride the running batch
-//!    instead of waiting out a window.
-//! 2. **Step**: one `decode_step` per scheduler turn advances *all* of a
-//!    lane's live sessions by one token (again chunked to the model
-//!    bucket); lanes with live sessions take turns round-robin, so a
-//!    backlogged model cannot starve its neighbours.
+//! 1. **Admit**: queued requests are drained as one *admission group* and
+//!    split into bucket-sized prefill chunks, which are *staged* on the
+//!    lane (`Lane::pending`) rather than executed inline.  An idle lane
+//!    keeps the classic readiness rules — full batch, closed batch window,
+//!    or a deadline's dispatch-due point — but a lane that is already
+//!    streaming admits immediately between steps: newcomers ride the
+//!    running batch instead of waiting out a window.
+//! 2. **Work**: each scheduler turn gives one busy lane (live sessions
+//!    *or* staged chunks; round-robin, so a backlogged model cannot
+//!    starve its neighbours) exactly one unit of graph work: either one
+//!    staged chunk's batched prefill or one `decode_step` over all live
+//!    sessions.  When a lane has both, prefill and decode turns
+//!    *interleave* (`Lane::last_turn_was_prefill` alternates them), so a
+//!    long admission backlog cannot stall running streams and a long
+//!    stream cannot stall admissions.
 //! 3. **Retire**: a session that reaches its target (or is cancelled, or
-//!    expires) leaves its slot *immediately* — the freed slot is available
-//!    to the next admission, not at end-of-batch.
+//!    expires) leaves its slot *immediately* — the freed slot (and its KV
+//!    arena slot, on decode-graph runners) is available to the next
+//!    admission, not at end-of-batch.
 //!
 //! Each request samples from its own seed's stream, so any mix of sample
 //! configs rides one step batch and results are reproducible regardless of
@@ -37,12 +43,14 @@
 //! admission group's dispatch instant with saturating math (riders of
 //! later prefill chunks are not charged earlier chunks' generation time).
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use crate::calib::rng::SplitMix64;
 use crate::error::{Error, Result};
+use crate::eval::decode::lock_arena;
 use crate::eval::generate::{sample_next, SampleConfig};
 use crate::eval::{DecodeSession, LanguageModel};
 use crate::obs::trace::TraceCollector;
@@ -227,12 +235,27 @@ impl Slot {
     }
 }
 
-/// One registered model, its waiting queue, and its occupied slots.
+/// One staged prefill chunk: riders drained from the queue, cut to the
+/// model's bucket, waiting for their prefill turn.  All chunks of one
+/// admission group share the group's dispatch instant, so queue time is
+/// charged up to the drain, not up to the (possibly later) prefill call.
+struct PrefillChunk {
+    riders: Vec<Pending>,
+    t_drain: Instant,
+}
+
+/// One registered model, its waiting queue, its staged prefill chunks,
+/// and its occupied slots.
 pub(crate) struct Lane<'m> {
     pub(crate) name: String,
     pub(crate) model: &'m dyn LanguageModel,
     pub(crate) tuning: ModelTuning,
     queue: Vec<Pending>,
+    /// admitted-but-not-yet-prefilled chunks; each costs one work turn
+    pending: VecDeque<PrefillChunk>,
+    /// alternation flag: when the lane has both staged chunks and live
+    /// sessions, prefill and decode turns take strict turns
+    last_turn_was_prefill: bool,
     active: Vec<Slot>,
     pub(crate) stats: ModelStats,
     /// live gauges (queue depth, slot occupancy, served) published for
@@ -249,6 +272,8 @@ impl<'m> Lane<'m> {
             model,
             tuning,
             queue: Vec::new(),
+            pending: VecDeque::new(),
+            last_turn_was_prefill: false,
             active: Vec::new(),
             stats: ModelStats::default(),
             gauges,
@@ -259,6 +284,19 @@ impl<'m> Lane<'m> {
     /// exported bucket; unbounded models take everything at once).
     fn chunk_cap(&self) -> usize {
         self.model.max_batch().unwrap_or(usize::MAX).max(1)
+    }
+
+    /// Riders staged in pending prefill chunks.  They already won their
+    /// admission slots, so the free-slot calculation counts them alongside
+    /// `active` — otherwise a second drain could over-admit past
+    /// `max_batch` before the first drain's chunks ever run.
+    fn staged(&self) -> usize {
+        self.pending.iter().map(|c| c.riders.len()).sum()
+    }
+
+    /// A lane with staged chunks or live sessions has graph work to do.
+    fn busy(&self) -> bool {
+        !self.pending.is_empty() || !self.active.is_empty()
     }
 }
 
@@ -327,12 +365,22 @@ impl<'m> Scheduler<'m> {
         }
     }
 
-    /// Publish queue depth / slot occupancy / served onto the lane gauges.
+    /// Publish queue depth / slot occupancy / served / KV-arena occupancy
+    /// onto the lane gauges.  Staged riders still count as queued: they
+    /// have not been prefilled yet.
     fn publish_gauges(&self) {
         for lane in &self.lanes {
-            lane.gauges.queue_depth.store(lane.queue.len(), Ordering::Relaxed);
+            lane.gauges.queue_depth.store(lane.queue.len() + lane.staged(), Ordering::Relaxed);
             lane.gauges.active_slots.store(lane.active.len(), Ordering::Relaxed);
             lane.gauges.served.store(lane.stats.served, Ordering::Relaxed);
+            if let Some(arena) = lane.model.kv_arena() {
+                let (slots, occ) = {
+                    let g = lock_arena(&arena);
+                    (g.slots(), g.occupancy())
+                };
+                lane.gauges.arena_slots.store(slots, Ordering::Relaxed);
+                lane.gauges.arena_occupancy.store(occ, Ordering::Relaxed);
+            }
         }
     }
 
@@ -394,14 +442,15 @@ impl<'m> Scheduler<'m> {
             // drop cancellations, expire deadlines (queued *and* live)
             self.sweep();
 
-            // admit queued requests into free slots on every lane, then
-            // advance one lane's live sessions by one token
+            // stage ready admission groups as prefill chunks on every
+            // lane, then give one busy lane one unit of graph work (one
+            // staged chunk's prefill, or one decode step — interleaved)
             let mut worked = false;
             for li in 0..self.lanes.len() {
                 worked |= self.admit_ready(li);
             }
-            if let Some(li) = self.next_active_lane() {
-                self.step(li);
+            if let Some(li) = self.next_busy_lane() {
+                self.turn(li);
                 worked = true;
             }
             self.publish_gauges();
@@ -410,7 +459,10 @@ impl<'m> Scheduler<'m> {
             }
 
             if self.draining
-                && self.lanes.iter().all(|l| l.queue.is_empty() && l.active.is_empty())
+                && self
+                    .lanes
+                    .iter()
+                    .all(|l| l.queue.is_empty() && l.pending.is_empty() && l.active.is_empty())
             {
                 // answer any last-gasp submissions still in the channel
                 loop {
@@ -565,6 +617,33 @@ impl<'m> Scheduler<'m> {
                 }
             }
 
+            // staged chunks are swept too — a cancelled rider should not
+            // hold its admission slot (nor ride the chunk's prefill);
+            // chunks emptied by the sweep vanish without costing a turn
+            let dirty = lane.pending.iter().flat_map(|c| c.riders.iter()).any(|p| {
+                p.cancel.load(Ordering::Relaxed)
+                    || matches!(p.deadline, Some(d) if now > d)
+            });
+            if dirty {
+                let pending = std::mem::take(&mut lane.pending);
+                for mut chunk in pending {
+                    let riders = std::mem::take(&mut chunk.riders);
+                    for p in riders {
+                        match triage(&p.cancel, p.deadline, now) {
+                            Triage::Cancelled => lane.stats.cancelled += 1,
+                            Triage::Expired => answer_expired(
+                                &mut lane.stats, &lane.name, "while staged",
+                                now, p.enqueued, p.reply,
+                            ),
+                            Triage::Live => chunk.riders.push(p),
+                        }
+                    }
+                    if !chunk.riders.is_empty() {
+                        lane.pending.push_back(chunk);
+                    }
+                }
+            }
+
             let dirty = lane.active.iter().any(|s| {
                 s.cancel.load(Ordering::Relaxed)
                     || matches!(s.deadline, Some(d) if now > d)
@@ -585,10 +664,10 @@ impl<'m> Scheduler<'m> {
         }
     }
 
-    /// Admit queued requests into this lane's free slots.  An idle lane
-    /// honours the classic readiness rules; a streaming lane admits
-    /// immediately between steps (continuous batching).  Returns whether a
-    /// dispatch happened.
+    /// Admit queued requests into this lane's free slots, staging them as
+    /// prefill chunks.  An idle lane honours the classic readiness rules;
+    /// a streaming lane admits immediately between steps (continuous
+    /// batching).  Returns whether a drain happened.
     fn admit_ready(&mut self, li: usize) -> bool {
         let draining = self.draining;
         let now = Instant::now();
@@ -597,11 +676,16 @@ impl<'m> Scheduler<'m> {
             if lane.queue.is_empty() {
                 return false;
             }
-            let free = lane.tuning.max_batch.saturating_sub(lane.active.len());
+            // staged riders already hold admission slots: counting them
+            // keeps a lane from over-admitting while its chunks wait
+            let free = lane
+                .tuning
+                .max_batch
+                .saturating_sub(lane.active.len() + lane.staged());
             if free == 0 {
                 return false;
             }
-            let ready = if draining || !lane.active.is_empty() {
+            let ready = if draining || lane.busy() {
                 true
             } else {
                 // emptiness was rejected above, so `min()` always yields;
@@ -632,9 +716,11 @@ impl<'m> Scheduler<'m> {
         true
     }
 
-    /// Admit one dispatch group: answer degenerate requests, then prefill
-    /// the rest in bucket-sized chunks.  All riders share the group's
-    /// dispatch instant for queue-time accounting.
+    /// Admit one dispatch group: answer degenerate requests, then cut the
+    /// rest into bucket-sized prefill chunks and stage them on the lane
+    /// (each chunk is executed by a later work turn, interleaved with
+    /// decode steps).  All riders share the group's dispatch instant for
+    /// queue-time accounting.
     fn admit_group(&mut self, li: usize, group: Vec<Pending>) {
         let t_drain = Instant::now();
         let seq = self.lanes[li].model.config().seq;
@@ -682,14 +768,21 @@ impl<'m> Scheduler<'m> {
             }
             pend.push(p);
         }
+        if pend.is_empty() {
+            return;
+        }
+        self.lanes[li].stats.admission_batch.record(pend.len() as u64);
+        crate::obs::global()
+            .histogram("admission.batch_size")
+            .record(pend.len() as u64);
         while !pend.is_empty() {
             let rest = if pend.len() > chunk_cap {
                 pend.split_off(chunk_cap)
             } else {
                 Vec::new()
             };
-            let chunk = std::mem::replace(&mut pend, rest);
-            self.prefill_chunk(li, chunk, t_drain);
+            let riders = std::mem::replace(&mut pend, rest);
+            self.lanes[li].pending.push_back(PrefillChunk { riders, t_drain });
         }
     }
 
@@ -802,12 +895,13 @@ impl<'m> Scheduler<'m> {
         }
     }
 
-    /// Next lane with live sessions, fair-share round-robin.
-    fn next_active_lane(&mut self) -> Option<usize> {
+    /// Next lane with graph work (staged chunks or live sessions),
+    /// fair-share round-robin.
+    fn next_busy_lane(&mut self) -> Option<usize> {
         let n = self.lanes.len();
         for off in 0..n {
             let li = (self.rr + off) % n;
-            if !self.lanes[li].active.is_empty() {
+            if self.lanes[li].busy() {
                 self.rr = (li + 1) % n;
                 return Some(li);
             }
@@ -815,10 +909,39 @@ impl<'m> Scheduler<'m> {
         None
     }
 
+    /// One unit of graph work for a busy lane: prefill the oldest staged
+    /// chunk, or decode-step the live sessions.  A lane holding both
+    /// strictly alternates, so chunked admissions *interleave* with
+    /// decode turns — newcomers start streaming without stalling running
+    /// sessions, and a deep admission backlog cannot monopolise the lane.
+    fn turn(&mut self, li: usize) {
+        let lane = &self.lanes[li];
+        let do_prefill =
+            !lane.pending.is_empty() && (lane.active.is_empty() || !lane.last_turn_was_prefill);
+        if do_prefill {
+            let Some(chunk) = self.lanes[li].pending.pop_front() else {
+                return; // unreachable: emptiness was rejected above
+            };
+            self.lanes[li].last_turn_was_prefill = true;
+            self.prefill_chunk(li, chunk.riders, chunk.t_drain);
+        } else {
+            self.lanes[li].last_turn_was_prefill = false;
+            self.step(li);
+        }
+    }
+
     /// Advance every live session of a lane by one token (one decode step,
     /// chunked to the model bucket), then retire finished rows.
     fn step(&mut self, li: usize) {
         let model = self.lanes[li].model;
+        // sample KV-arena occupancy once per decode turn (how many slots
+        // back the sessions about to step) — the distribution lands in
+        // `fast_path_json` so benches can show arena utilisation
+        if let Some(arena) = model.kv_arena() {
+            let occ = lock_arena(&arena).occupancy();
+            self.lanes[li].stats.arena_occupancy.record(occ as u64);
+            crate::obs::global().gauge("arena.occupancy").set(occ as i64);
+        }
         let cap = self.lanes[li].chunk_cap();
         let n = self.lanes[li].active.len();
         let mut start = 0;
@@ -933,8 +1056,8 @@ impl<'m> Scheduler<'m> {
 
     /// How long the scheduler may sleep before a window closes or a
     /// deadline expires; `None` when every queue is empty.  (Only
-    /// consulted when no lane has live sessions — a streaming lane never
-    /// sleeps.)
+    /// consulted when no lane is busy — staged chunks and live sessions
+    /// both count as work, so a busy lane never sleeps.)
     fn next_wakeup(&self) -> Option<Duration> {
         let now = Instant::now();
         let mut earliest: Option<Instant> = None;

@@ -73,6 +73,12 @@ pub struct ModelStats {
     pub decode_step_us: Hist,
     /// submit→answer end-to-end time per served request (µs)
     pub e2e_us: Hist,
+    /// occupied KV-arena slots sampled at each decode turn (empty on
+    /// models without an arena — the recompute fallback)
+    pub arena_occupancy: Hist,
+    /// riders per admission round, post-triage (how full the batched
+    /// prefill drains run)
+    pub admission_batch: Hist,
 }
 
 impl ModelStats {
@@ -173,6 +179,18 @@ impl ModelStats {
             ("e2e", hist_json(&self.e2e_us)),
         ])
     }
+
+    /// The `fast_path` block of the `BENCH_serve.json` schema: decode
+    /// fast-path health — KV-arena occupancy per decode turn and riders
+    /// per admission round.  Same stability rule as
+    /// [`Self::latency_us_json`]: both keys always present, `count: 0`
+    /// shapes when nothing was recorded (no arena, or no traffic).
+    pub fn fast_path_json(&self) -> Json {
+        json::obj(vec![
+            ("arena_occupancy", hist_json(&self.arena_occupancy)),
+            ("admission_batch_size", hist_json(&self.admission_batch)),
+        ])
+    }
 }
 
 /// Compact percentile view of one latency histogram; an empty histogram
@@ -198,6 +216,8 @@ pub(crate) struct LaneGauges {
     pub(crate) queue_depth: AtomicUsize,
     pub(crate) active_slots: AtomicUsize,
     pub(crate) served: AtomicUsize,
+    pub(crate) arena_slots: AtomicUsize,
+    pub(crate) arena_occupancy: AtomicUsize,
 }
 
 impl LaneGauges {
@@ -208,6 +228,8 @@ impl LaneGauges {
             queue_depth: AtomicUsize::new(0),
             active_slots: AtomicUsize::new(0),
             served: AtomicUsize::new(0),
+            arena_slots: AtomicUsize::new(0),
+            arena_occupancy: AtomicUsize::new(0),
         }
     }
 
@@ -218,6 +240,8 @@ impl LaneGauges {
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             active_slots: self.active_slots.load(Ordering::Relaxed),
             served: self.served.load(Ordering::Relaxed),
+            arena_slots: self.arena_slots.load(Ordering::Relaxed),
+            arena_occupancy: self.arena_occupancy.load(Ordering::Relaxed),
         }
     }
 }
@@ -236,6 +260,11 @@ pub struct LaneSnapshot {
     pub active_slots: usize,
     /// requests answered with tokens so far
     pub served: usize,
+    /// KV-arena capacity of the lane's model (0 = no arena: the model
+    /// serves decode by full-context recompute)
+    pub arena_slots: usize,
+    /// KV-arena slots currently held by live sessions
+    pub arena_occupancy: usize,
 }
 
 impl LaneSnapshot {
@@ -401,12 +430,44 @@ mod tests {
         g.queue_depth.store(3, Ordering::Relaxed);
         g.active_slots.store(2, Ordering::Relaxed);
         g.served.store(11, Ordering::Relaxed);
+        g.arena_slots.store(8, Ordering::Relaxed);
+        g.arena_occupancy.store(2, Ordering::Relaxed);
         let snap = g.snapshot();
         assert_eq!(snap.model, "w4");
         assert_eq!(snap.max_slots, 8);
         assert_eq!(snap.queue_depth, 3);
         assert_eq!(snap.active_slots, 2);
         assert_eq!(snap.served, 11);
+        assert_eq!(snap.arena_slots, 8);
+        assert_eq!(snap.arena_occupancy, 2);
         assert_eq!(snap.in_flight(), 5);
+    }
+
+    #[test]
+    fn fast_path_block_keeps_full_schema() {
+        // an arena-less (recompute) lane records nothing, yet both keys
+        // must still be present with the count-zero shape
+        let fp = ModelStats::default().fast_path_json();
+        for key in ["arena_occupancy", "admission_batch_size"] {
+            let h = fp.get(key).unwrap_or_else(|| panic!("missing key {key}"));
+            assert_eq!(h.get("count").and_then(|v| v.as_f64()), Some(0.0));
+        }
+        let mut s = ModelStats::default();
+        s.arena_occupancy.record(3);
+        s.arena_occupancy.record(5);
+        s.admission_batch.record(4);
+        let fp = s.fast_path_json();
+        assert_eq!(
+            fp.get("arena_occupancy").and_then(|h| h.get("count")).and_then(|v| v.as_f64()),
+            Some(2.0)
+        );
+        assert_eq!(
+            fp.get("arena_occupancy").and_then(|h| h.get("max")).and_then(|v| v.as_f64()),
+            Some(5.0)
+        );
+        assert_eq!(
+            fp.get("admission_batch_size").and_then(|h| h.get("p50")).and_then(|v| v.as_f64()),
+            Some(4.0)
+        );
     }
 }

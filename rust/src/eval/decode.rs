@@ -3,13 +3,33 @@
 //! [`LanguageModel`] (mocks included).
 //!
 //! A [`DecodeSession`] is the unit of continuous batching: it owns one
-//! request's token history, the logits row for its next position, and —
-//! when the model's artifacts carry the `decode` record — the per-layer
-//! (K, V) cache tensors of that request.  Sessions are created batched by
+//! request's token history, the logits row for its next position, and its
+//! cache residency.  Sessions are created batched by
 //! [`LanguageModel::prefill`] and advanced batched by
 //! [`LanguageModel::decode_step`]; the serving engine moves sessions in
 //! and out of a step batch freely, because each session is self-contained
 //! (rows of one step may sit at different sequence depths).
+//!
+//! # The slot arena
+//!
+//! On runners whose artifacts carry the manifest `decode` record, caches
+//! live in a [`KvArena`]: per layer, one owned `(K, V)` tensor pair of
+//! shape `[slots, H, S, Dh]` allocated once (slots = the manifest's
+//! `decode.slots`, the largest exported decode bucket).  A session is
+//! *admitted into a slot* ([`KvCache::Slot`]): prefill writes its rows
+//! into the arena once, every decode step threads the arena tensors
+//! through the step graph as carried state (zero per-step stacking,
+//! scattering, or row copies), and retirement — dropping the session —
+//! frees the slot through [`ArenaSlot`]'s `Drop`.
+//!
+//! Decode steps always run at the fixed `slots` bucket.  Rows whose
+//! sessions participate in the step feed their newest token; every other
+//! *live* slot re-feeds the last `(token, position)` it wrote (the arena's
+//! shadow state), so the graph's in-place cache update rewrites the same
+//! values — deterministic kernels make the rewrite bitwise idempotent —
+//! and any subset of sessions can ride one step without corrupting its
+//! batch-mates.  Free slots feed `(0, 0)`; whatever lands in their rows is
+//! fully overwritten by the next admission's prefill.
 //!
 //! Greedy decode through a session is **token-identical** to the classic
 //! full-recompute [`super::generate::generate`] path: causal attention
@@ -22,6 +42,8 @@
 //! admissible divergence is an argmax near-tie inside that tolerance; the
 //! artifact-gated test in `integration_eval.rs` enforces the bound.)
 
+use std::sync::{Arc, Mutex, MutexGuard};
+
 use crate::error::{Error, Result};
 use crate::tensor::Tensor;
 
@@ -32,12 +54,20 @@ pub enum KvCache {
     /// The model keeps no incremental state: every decode step re-runs the
     /// full fixed-shape forward over the session's token history.  Always
     /// correct, O(S) per token — the path taken when the manifest has no
-    /// `decode` record and by plain mocks.
+    /// `decode` record, by plain mocks, and by sessions admitted while the
+    /// arena was full.
     Recompute,
-    /// Per-layer `(k, v)` cache tensors, each `f32[1, H, S, Dh]`: the
-    /// decode graphs append one position per step and attend over the live
-    /// prefix only.  O(1) forwards per token.
+    /// Per-layer `(k, v)` cache tensors, each `f32[1, H, S, Dh]`, owned by
+    /// the session itself.  The legacy stacked-decode representation: a
+    /// step batch is assembled by [`stack_layer`] and disassembled by
+    /// [`scatter_layer`] around every graph call.  Kept for external
+    /// callers and the parity tests; the runners now admit into the arena.
     Layers(Vec<(Tensor, Tensor)>),
+    /// Slot-resident: the session's caches live inside a shared
+    /// [`KvArena`] at this slot and are indexed by the decode graphs in
+    /// place — zero per-step assembly.  Dropping the handle (retirement)
+    /// frees the slot.
+    Slot(ArenaSlot),
 }
 
 /// One request's decode state: token history, next-token logits, cache.
@@ -60,6 +90,246 @@ impl DecodeSession {
     /// Greedy choice from the current logits row.
     pub fn greedy_next(&self) -> i32 {
         argmax(&self.logits) as i32
+    }
+}
+
+/// A [`KvArena`] behind the lock that every slot handle shares.  The
+/// scheduler is single-threaded, so the lock is uncontended; it exists so
+/// [`ArenaSlot`]s can free their slot from `Drop` wherever the session
+/// dies.
+pub type SharedKvArena = Arc<Mutex<KvArena>>;
+
+/// Lock a shared arena, recovering from poisoning (the arena holds no
+/// invariants a panicked holder could have half-applied that matter more
+/// than serving the next request — a degraded arena already refuses
+/// reservations on its own flag).
+pub fn lock_arena(arena: &SharedKvArena) -> MutexGuard<'_, KvArena> {
+    arena.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The slot-arena KV store of one model runner: per layer, one owned
+/// `(K, V)` tensor pair of shape `[slots, H, S, Dh]`, allocated once, plus
+/// a free list and the per-slot *shadow* — the last `(token, position)`
+/// written into each live slot, re-fed on steps the slot's session sits
+/// out so the graph's cache update is an idempotent rewrite.
+///
+/// Slot lifecycle: [`KvArena::try_reserve`] at admission →
+/// [`KvArena::write_row`] per layer from the batched prefill outputs →
+/// [`KvArena::take_layer`]/[`KvArena::put_layer`] around each decode
+/// step's carried graph call → [`KvArena::release`] (via [`ArenaSlot`]'s
+/// `Drop`) at retirement.
+///
+/// If a step graph fails between `take_layer` and `put_layer`, the layer
+/// keeps its placeholder and the arena reports [`KvArena::is_degraded`]:
+/// reservations stop, resident sessions are demoted to recompute by the
+/// runners, and once the last slot drains the arena re-zeroes the taken
+/// layers and heals itself.
+pub struct KvArena {
+    slots: usize,
+    n_head: usize,
+    seq: usize,
+    d_head: usize,
+    /// per layer: (K, V), each `[slots, n_head, seq, d_head]`
+    layers: Vec<(Tensor, Tensor)>,
+    /// layers currently moved out by [`KvArena::take_layer`]
+    taken: Vec<bool>,
+    /// free slot indices (pop order: lowest first)
+    free: Vec<usize>,
+    /// per-slot shadow: last `(token, position)` written, `None` when free
+    /// or not yet prefilled
+    shadow: Vec<Option<(i32, i32)>>,
+}
+
+impl KvArena {
+    /// Allocate a zeroed arena for `n_layer` layers of `[slots, n_head,
+    /// seq, d_head]` caches.
+    pub fn new(n_layer: usize, n_head: usize, seq: usize, d_head: usize, slots: usize) -> Self {
+        let shape = [slots, n_head, seq, d_head];
+        KvArena {
+            slots,
+            n_head,
+            seq,
+            d_head,
+            layers: (0..n_layer)
+                .map(|_| (Tensor::zeros(&shape), Tensor::zeros(&shape)))
+                .collect(),
+            taken: vec![false; n_layer],
+            free: (0..slots).rev().collect(),
+            shadow: vec![None; slots],
+        }
+    }
+
+    /// [`KvArena::new`] wrapped for sharing with slot handles.
+    pub fn shared(n_layer: usize, n_head: usize, seq: usize, d_head: usize, slots: usize) -> SharedKvArena {
+        Arc::new(Mutex::new(KvArena::new(n_layer, n_head, seq, d_head, slots)))
+    }
+
+    /// Total slot capacity (== the fixed decode bucket the arena steps at).
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    /// Number of layers the arena holds caches for.
+    pub fn n_layer(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Slots currently reserved by live sessions.
+    pub fn occupancy(&self) -> usize {
+        self.slots - self.free.len()
+    }
+
+    /// A step graph failed mid-carry and left a layer without its cache
+    /// tensors: the arena refuses reservations until it drains and heals.
+    pub fn is_degraded(&self) -> bool {
+        self.taken.iter().any(|&t| t)
+    }
+
+    /// Reserve `n` slots, or `None` if the arena is degraded or has fewer
+    /// than `n` free (admission then falls back to recompute sessions).
+    pub fn try_reserve(&mut self, n: usize) -> Option<Vec<usize>> {
+        if self.is_degraded() || self.free.len() < n {
+            return None;
+        }
+        Some((0..n).filter_map(|_| self.free.pop()).collect())
+    }
+
+    /// Return a slot to the free list and clear its shadow.  Releasing an
+    /// already-free slot is a no-op (a demoted session may race its own
+    /// retirement).  Draining the last slot heals a degraded arena by
+    /// re-zeroing the layers a failed step left behind.
+    pub fn release(&mut self, slot: usize) {
+        if slot >= self.slots || self.free.contains(&slot) {
+            return;
+        }
+        self.shadow[slot] = None;
+        self.free.push(slot);
+        if self.occupancy() == 0 && self.is_degraded() {
+            let shape = [self.slots, self.n_head, self.seq, self.d_head];
+            for (l, taken) in self.taken.iter_mut().enumerate() {
+                if *taken {
+                    self.layers[l] = (Tensor::zeros(&shape), Tensor::zeros(&shape));
+                    *taken = false;
+                }
+            }
+        }
+    }
+
+    /// Record the last `(token, position)` written into `slot` — the value
+    /// its row re-feeds on steps this slot's session sits out.
+    pub fn note(&mut self, slot: usize, token: i32, position: i32) {
+        if let Some(s) = self.shadow.get_mut(slot) {
+            *s = Some((token, position));
+        }
+    }
+
+    /// The shadow of `slot` (`None` for free / not-yet-prefilled slots).
+    pub fn shadow(&self, slot: usize) -> Option<(i32, i32)> {
+        self.shadow.get(slot).copied().flatten()
+    }
+
+    /// Copy row `row` of a batched `[B, H, S, Dh]` prefill output pair into
+    /// `slot` of layer `layer` — the one copy a request pays, at admission.
+    pub fn write_row(
+        &mut self,
+        layer: usize,
+        slot: usize,
+        k: &Tensor,
+        v: &Tensor,
+        row: usize,
+    ) -> Result<()> {
+        if slot >= self.slots {
+            return Err(Error::Shape(format!(
+                "kv arena: slot {slot} out of range (slots = {})",
+                self.slots
+            )));
+        }
+        if self.taken.get(layer).copied().unwrap_or(true) {
+            return Err(Error::Shape(format!(
+                "kv arena: layer {layer} unavailable (out of range or mid-step)"
+            )));
+        }
+        let per = self.n_head * self.seq * self.d_head;
+        let (ks, kn) = row_span(k, row)?;
+        let (vs, vn) = row_span(v, row)?;
+        if kn != per || vn != per {
+            return Err(Error::Shape(format!(
+                "kv arena: prefill row of {kn}/{vn} elements does not match \
+                 the arena row of {per}"
+            )));
+        }
+        let (lk, lv) = &mut self.layers[layer];
+        lk.as_f32_mut()?[slot * per..][..per].copy_from_slice(&k.as_f32()?[ks..ks + kn]);
+        lv.as_f32_mut()?[slot * per..][..per].copy_from_slice(&v.as_f32()?[vs..vs + vn]);
+        Ok(())
+    }
+
+    /// Move layer `layer`'s `(K, V)` tensors out for a carried graph call.
+    /// The arena is degraded until [`KvArena::put_layer`] hands them back.
+    pub fn take_layer(&mut self, layer: usize) -> Result<(Tensor, Tensor)> {
+        if self.taken.get(layer).copied().unwrap_or(true) {
+            return Err(Error::Shape(format!(
+                "kv arena: layer {layer} unavailable (out of range or mid-step)"
+            )));
+        }
+        self.taken[layer] = true;
+        let placeholder = (Tensor::zeros(&[1]), Tensor::zeros(&[1]));
+        Ok(std::mem::replace(&mut self.layers[layer], placeholder))
+    }
+
+    /// Store the carried `(K, V)` back into layer `layer` (shape-checked).
+    pub fn put_layer(&mut self, layer: usize, k: Tensor, v: Tensor) -> Result<()> {
+        if !self.taken.get(layer).copied().unwrap_or(false) {
+            return Err(Error::Shape(format!(
+                "kv arena: put_layer({layer}) without a matching take_layer"
+            )));
+        }
+        let want = [self.slots, self.n_head, self.seq, self.d_head];
+        if k.shape != want || v.shape != want {
+            return Err(Error::Shape(format!(
+                "kv arena: carried layer {layer} shapes {:?}/{:?} != {want:?}",
+                k.shape, v.shape
+            )));
+        }
+        self.layers[layer] = (k, v);
+        self.taken[layer] = false;
+        Ok(())
+    }
+}
+
+/// A session's reservation inside a [`KvArena`].  Dropping the handle
+/// releases the slot — retirement is just letting the session go.
+pub struct ArenaSlot {
+    arena: SharedKvArena,
+    slot: usize,
+}
+
+impl ArenaSlot {
+    pub fn new(arena: SharedKvArena, slot: usize) -> Self {
+        ArenaSlot { arena, slot }
+    }
+
+    /// The slot index (== this session's row in every arena tensor and in
+    /// the step graph's batch dimension).
+    pub fn index(&self) -> usize {
+        self.slot
+    }
+
+    /// The arena this slot lives in.
+    pub fn arena(&self) -> &SharedKvArena {
+        &self.arena
+    }
+}
+
+impl Drop for ArenaSlot {
+    fn drop(&mut self) {
+        lock_arena(&self.arena).release(self.slot);
+    }
+}
+
+impl std::fmt::Debug for ArenaSlot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ArenaSlot").field("slot", &self.slot).finish()
     }
 }
 
@@ -128,12 +398,23 @@ pub fn recompute_prefill<M: LanguageModel + ?Sized>(
 
 /// Fallback decode step: re-run the full forward over each session's
 /// history and refresh its next-token logits.
+///
+/// A slot-resident session routed here is *demoted* to
+/// [`KvCache::Recompute`] first (freeing its slot): the recompute forward
+/// never updates the arena row, so the cache would silently go stale on
+/// the next arena step.  Demotion keeps the session correct at O(S)/token
+/// cost — the runners use this as the safety net when the arena degrades.
 pub fn recompute_decode_step<M: LanguageModel + ?Sized>(
     model: &M,
     sessions: &mut [&mut DecodeSession],
 ) -> Result<()> {
     if sessions.is_empty() {
         return Ok(());
+    }
+    for s in sessions.iter_mut() {
+        if matches!(s.kv, KvCache::Slot(_)) {
+            s.kv = KvCache::Recompute; // drops the ArenaSlot -> frees the slot
+        }
     }
     let logits = {
         let rows: Vec<&[i32]> = sessions.iter().map(|s| s.tokens.as_slice()).collect();
@@ -145,15 +426,31 @@ pub fn recompute_decode_step<M: LanguageModel + ?Sized>(
     Ok(())
 }
 
+/// Bounds-checked `(offset, len)` of row `row` in the leading dimension of
+/// a batched tensor — the flat span `[row * per .. row * per + per]` where
+/// `per` is the product of the trailing dims.
+pub(crate) fn row_span(t: &Tensor, row: usize) -> Result<(usize, usize)> {
+    let b = *t.shape.first().ok_or_else(|| {
+        Error::Shape("row_span: scalar tensor has no batch dimension".into())
+    })?;
+    if row >= b {
+        return Err(Error::Shape(format!(
+            "row_span: row {row} out of range (batch = {b})"
+        )));
+    }
+    let per: usize = t.shape[1..].iter().product();
+    Ok((row * per, per))
+}
+
 /// Slice row `i` of a `[B, H, S, Dh]` cache tensor into an owned
-/// `[1, H, S, Dh]` per-session cache (rows are contiguous in the leading
-/// dim, so this is one memcpy).
+/// `[1, H, S, Dh]` per-session cache — copies only the row's span (one
+/// memcpy; rows are contiguous in the leading dim).
 pub fn cache_row(stacked: &Tensor, i: usize) -> Result<Tensor> {
-    let per: usize = stacked.shape[1..].iter().product();
+    let (start, per) = row_span(stacked, i)?;
     let data = stacked.as_f32()?;
     let mut shape = stacked.shape.clone();
     shape[0] = 1;
-    Ok(Tensor::f32(&shape, data[i * per..][..per].to_vec()))
+    Ok(Tensor::f32(&shape, data[start..start + per].to_vec()))
 }
 
 /// Stack the layer-`layer` (K, V) caches of `sessions` into a pair of
@@ -178,6 +475,11 @@ pub fn stack_layer(
                     "cannot stack a recompute-fallback session into a decode batch".into(),
                 ))
             }
+            KvCache::Slot(_) => {
+                return Err(Error::Shape(
+                    "slot-resident sessions ride the arena, not stacked decode batches".into(),
+                ))
+            }
         };
         if shape.is_none() {
             shape = Some(k.shape.clone());
@@ -198,6 +500,8 @@ pub fn stack_layer(
 
 /// Write the updated `[bucket, H, S, Dh]` caches of one layer back into the
 /// live sessions (inverse of [`stack_layer`]; pad rows are dropped).
+/// Rewrites each session's existing cache tensors in place when the shapes
+/// match — no per-step allocation on the fallback path.
 pub fn scatter_layer(
     sessions: &mut [&mut DecodeSession],
     layer: usize,
@@ -205,14 +509,30 @@ pub fn scatter_layer(
     v: &Tensor,
 ) -> Result<()> {
     for (i, s) in sessions.iter_mut().enumerate() {
-        let pair = (cache_row(k, i)?, cache_row(v, i)?);
-        match &mut s.kv {
-            KvCache::Layers(l) => l[layer] = pair,
+        let layers = match &mut s.kv {
+            KvCache::Layers(l) => l,
             KvCache::Recompute => {
                 return Err(Error::Shape(
                     "cannot scatter a decode cache into a recompute session".into(),
                 ))
             }
+            KvCache::Slot(_) => {
+                return Err(Error::Shape(
+                    "slot-resident sessions ride the arena, not stacked decode batches".into(),
+                ))
+            }
+        };
+        let pair = layers.get_mut(layer).ok_or_else(|| {
+            Error::Shape(format!("decode session has no cache for layer {layer}"))
+        })?;
+        let (ks, kn) = row_span(k, i)?;
+        let (vs, vn) = row_span(v, i)?;
+        let fits = |t: &Tensor, n: usize| t.as_f32().map(|d| d.len() == n).unwrap_or(false);
+        if fits(&pair.0, kn) && fits(&pair.1, vn) {
+            pair.0.as_f32_mut()?.copy_from_slice(&k.as_f32()?[ks..ks + kn]);
+            pair.1.as_f32_mut()?.copy_from_slice(&v.as_f32()?[vs..vs + vn]);
+        } else {
+            *pair = (cache_row(k, i)?, cache_row(v, i)?);
         }
     }
     Ok(())
@@ -325,5 +645,142 @@ mod tests {
         let mut s0 = DecodeSession { tokens: vec![1], logits: vec![], kv: KvCache::Recompute };
         let refs = vec![&mut s0];
         assert!(stack_layer(&refs, 0, 2).is_err());
+    }
+
+    #[test]
+    fn arena_reserve_release_and_occupancy() {
+        let mut a = KvArena::new(2, 2, 4, 1, 3);
+        assert_eq!(a.slots(), 3);
+        assert_eq!(a.occupancy(), 0);
+        let ids = a.try_reserve(2).unwrap();
+        assert_eq!(ids, vec![0, 1]);
+        assert_eq!(a.occupancy(), 2);
+        // over-reservation refused without disturbing the free list
+        assert!(a.try_reserve(2).is_none());
+        assert_eq!(a.try_reserve(1).unwrap(), vec![2]);
+        a.release(1);
+        assert_eq!(a.occupancy(), 2);
+        // double release is a no-op
+        a.release(1);
+        assert_eq!(a.occupancy(), 2);
+        // freed slot is reused
+        assert_eq!(a.try_reserve(1).unwrap(), vec![1]);
+        // zero-slot reservation always succeeds
+        assert_eq!(a.try_reserve(0).unwrap(), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn arena_shadow_tracks_writes_and_clears_on_release() {
+        let mut a = KvArena::new(1, 2, 4, 1, 2);
+        let ids = a.try_reserve(1).unwrap();
+        assert_eq!(a.shadow(ids[0]), None);
+        a.note(ids[0], 7, 3);
+        assert_eq!(a.shadow(ids[0]), Some((7, 3)));
+        a.release(ids[0]);
+        assert_eq!(a.shadow(ids[0]), None);
+    }
+
+    #[test]
+    fn arena_write_row_copies_the_right_span() {
+        let mut a = KvArena::new(1, 2, 2, 1, 2);
+        // batched prefill output: 2 rows of 4 elements each
+        let k = Tensor::f32(&[2, 2, 2, 1], (0..8).map(|x| x as f32).collect());
+        let v = Tensor::f32(&[2, 2, 2, 1], (0..8).map(|x| -(x as f32)).collect());
+        // write prefill row 1 into arena slot 0
+        a.write_row(0, 0, &k, &v, 1).unwrap();
+        let (lk, lv) = a.take_layer(0).unwrap();
+        assert_eq!(&lk.as_f32().unwrap()[..4], &[4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(&lk.as_f32().unwrap()[4..], &[0.0; 4]);
+        assert_eq!(&lv.as_f32().unwrap()[..4], &[-4.0, -5.0, -6.0, -7.0]);
+        a.put_layer(0, lk, lv).unwrap();
+        // mismatched row width is a shape error
+        let small = Tensor::f32(&[2, 2], vec![0.0; 4]);
+        assert!(a.write_row(0, 0, &small, &small, 0).is_err());
+        // out-of-range slot / layer are shape errors
+        assert!(a.write_row(0, 9, &k, &v, 0).is_err());
+        assert!(a.write_row(9, 0, &k, &v, 0).is_err());
+    }
+
+    #[test]
+    fn arena_take_put_layer_and_degradation() {
+        let mut a = KvArena::new(2, 2, 2, 1, 2);
+        let ids = a.try_reserve(1).unwrap();
+        let (k, v) = a.take_layer(0).unwrap();
+        assert_eq!(k.shape, vec![2, 2, 2, 1]);
+        assert!(a.is_degraded());
+        // a degraded arena refuses new reservations and double takes
+        assert!(a.try_reserve(1).is_none());
+        assert!(a.take_layer(0).is_err());
+        assert!(a.write_row(0, ids[0], &k, &v, 0).is_err());
+        // handing the tensors back heals immediately
+        a.put_layer(0, k, v).unwrap();
+        assert!(!a.is_degraded());
+        // put without take, and wrong shapes, are rejected
+        let (k, v) = a.take_layer(1).unwrap();
+        assert!(a.put_layer(0, Tensor::zeros(&[1]), Tensor::zeros(&[1])).is_err());
+        assert!(a
+            .put_layer(1, Tensor::zeros(&[3, 2, 2, 1]), Tensor::zeros(&[3, 2, 2, 1]))
+            .is_err());
+        a.put_layer(1, k, v).unwrap();
+    }
+
+    #[test]
+    fn arena_heals_after_failed_step_once_drained() {
+        let mut a = KvArena::new(1, 1, 2, 1, 2);
+        let ids = a.try_reserve(2).unwrap();
+        let seed = Tensor::f32(&[1, 1, 2, 1], vec![1.0, 2.0]);
+        a.write_row(0, ids[0], &seed, &seed, 0).unwrap();
+        // simulate a step graph dying between take and put: the layer stays
+        // a placeholder and the arena degrades
+        let _lost = a.take_layer(0).unwrap();
+        assert!(a.is_degraded());
+        a.release(ids[0]);
+        assert!(a.is_degraded(), "heal waits for the last resident");
+        a.release(ids[1]);
+        assert!(!a.is_degraded(), "drained arena re-zeroes taken layers");
+        let (k, _v) = a.take_layer(0).unwrap();
+        assert_eq!(k.shape, vec![2, 1, 2, 1]);
+        assert_eq!(k.as_f32().unwrap(), &[0.0; 4]);
+    }
+
+    #[test]
+    fn arena_slot_drop_frees_and_demotion_releases() {
+        let arena = KvArena::shared(1, 1, 2, 1, 2);
+        let ids = lock_arena(&arena).try_reserve(1).unwrap();
+        let slot = ArenaSlot::new(arena.clone(), ids[0]);
+        assert_eq!(slot.index(), 0);
+        assert_eq!(lock_arena(&arena).occupancy(), 1);
+        drop(slot);
+        assert_eq!(lock_arena(&arena).occupancy(), 0);
+
+        // a slot session routed to the recompute fallback is demoted (and
+        // its slot freed) before the forward runs
+        let ids = lock_arena(&arena).try_reserve(1).unwrap();
+        let mut s = DecodeSession {
+            tokens: vec![1],
+            logits: vec![],
+            kv: KvCache::Slot(ArenaSlot::new(arena.clone(), ids[0])),
+        };
+        let m = PrefixSum(ModelConfig::builtin("nt-tiny").unwrap());
+        let mut refs = vec![&mut s];
+        recompute_decode_step(&m, &mut refs).unwrap();
+        assert!(matches!(s.kv, KvCache::Recompute));
+        assert_eq!(s.greedy_next(), 2);
+        assert_eq!(lock_arena(&arena).occupancy(), 0);
+    }
+
+    #[test]
+    fn slot_sessions_rejected_by_stack_and_scatter() {
+        let arena = KvArena::shared(1, 1, 2, 1, 1);
+        let ids = lock_arena(&arena).try_reserve(1).unwrap();
+        let mut s = DecodeSession {
+            tokens: vec![1],
+            logits: vec![],
+            kv: KvCache::Slot(ArenaSlot::new(arena, ids[0])),
+        };
+        let mut refs = vec![&mut s];
+        assert!(stack_layer(&refs, 0, 1).is_err());
+        let z = Tensor::zeros(&[1, 1, 2, 1]);
+        assert!(scatter_layer(&mut refs, 0, &z, &z).is_err());
     }
 }

@@ -13,7 +13,7 @@ use crate::error::Result;
 use crate::model::ModelConfig;
 use crate::tensor::Tensor;
 
-pub use decode::{DecodeSession, KvCache};
+pub use decode::{ArenaSlot, DecodeSession, KvArena, KvCache, SharedKvArena};
 
 /// Anything that maps token batches to logits — implemented by the float
 /// and quantized runners in `coordinator::forward`.
@@ -62,6 +62,13 @@ pub trait LanguageModel {
     /// Any subset of live sessions may ride one step (continuous batching).
     fn decode_step(&self, sessions: &mut [&mut DecodeSession]) -> Result<()> {
         decode::recompute_decode_step(self, sessions)
+    }
+    /// The slot-arena KV store backing this model's decode sessions, if it
+    /// has one.  Runners with exported decode graphs share their arena here
+    /// so the scheduler can watch occupancy; the recompute fallback has
+    /// none.
+    fn kv_arena(&self) -> Option<SharedKvArena> {
+        None
     }
 }
 

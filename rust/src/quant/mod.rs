@@ -64,7 +64,7 @@
 //! Rust change is needed: [`QuantScheme::group_tag`] derives the tag from
 //! `group_size`, and the runtime learns the exported set from the manifest.
 //!
-//! # Incremental decode graphs
+//! # Incremental decode graphs and the KV slot arena
 //!
 //! Serving no longer re-runs the full fixed-shape forward per generated
 //! token.  Alongside `block_fwd_q.{grain}.b{B}` the exporter emits, per
@@ -73,17 +73,37 @@
 //! variant `block_dec_q.{grain}.b{B}` (new-token activation + per-row
 //! position + KV caches → updated activation + caches), plus the shared
 //! `embed_dec` / `head_dec` graphs.  The manifest records the contract
-//! under its `decode` key (step buckets + per-model cache shape); the
-//! runtime parses it strictly when present, and a manifest exported with
-//! `--no-decode` simply has none — generation then falls back to
-//! full-context recompute (`eval::decode`), a feature-gated degradation
-//! rather than an error.  Greedy output is token-identical between the
-//! session loop and the recompute path whenever both run the same kernels
-//! (the offline contract pinned by `rust/tests/decode_parity.rs`); on real
-//! artifacts the step graphs use the jnp oracle kernels while the
-//! full-context graphs use Pallas, so the two paths may differ only at
-//! argmax near-ties inside the ~2e-4 kernel tolerance
-//! (`integration_eval.rs` gates on exactly that).
+//! under its `decode` key: step buckets, the per-model cache shape, and
+//! `slots` — the capacity of the *KV slot arena*.  The runtime parses the
+//! record strictly when present (`slots` must be an exported step bucket
+//! no smaller than the largest one; `normtweak check` lints the same
+//! invariant as NT0110), and a manifest exported with `--no-decode`
+//! simply has none — generation then falls back to full-context
+//! recompute (`eval::decode`), a feature-gated degradation rather than
+//! an error.
+//!
+//! **Cache layout.**  Session caches are not per-session tensors that get
+//! stacked into a batch each step and scattered back after.  Each layer
+//! owns one arena tensor pair `K,V: [slots, H, S, Dh]` allocated once at
+//! model load ([`crate::eval::KvArena`]); admission reserves a slot index
+//! per session, prefill writes the new rows in place, and every decode
+//! turn runs the `slots`-batch step graph directly over the arena via the
+//! runtime's carry calls — zero per-token stacking, scattering, or row
+//! copies on the hot path (the CI trace gate rejects `stack_layer` /
+//! `scatter_layer` / `cache_row` spans on decode tracks).  Retirement
+//! just frees the slot.  Rows that carry no live session feed their slot's
+//! shadow token/position, an *idempotent rewrite*: the step recomputes and
+//! rewrites exactly the cache row it wrote last turn, so vacant and
+//! retired rows stay byte-stable while costing no extra dispatch.
+//!
+//! Greedy output is token-identical between the arena session loop and
+//! the recompute path whenever both run the same kernels (the offline
+//! contract pinned by `rust/tests/decode_parity.rs`, which also pins
+//! arena-vs-stacked parity and slot-reuse stability); on real artifacts
+//! the step graphs use the jnp oracle kernels while the full-context
+//! graphs use Pallas, so the two paths may differ only at argmax
+//! near-ties inside the ~2e-4 kernel tolerance (`integration_eval.rs`
+//! gates on exactly that).
 //!
 //! # Graph contract
 //!

@@ -71,6 +71,13 @@ pub struct KvSpec {
 #[derive(Debug, Clone)]
 pub struct DecodeRecord {
     pub buckets: Vec<usize>,
+    /// Slot-arena capacity: the fixed batch bucket every arena decode step
+    /// runs at, and the leading dim of each layer's arena tensors.  Must be
+    /// one of `buckets` (the step graphs only exist at exported buckets)
+    /// and at least the largest of them (so any admitted batch fits).
+    /// Defaults to the largest decode bucket when the manifest predates
+    /// the field.
+    pub slots: usize,
     /// model name -> cache layout
     pub caches: HashMap<String, KvSpec>,
 }
@@ -255,7 +262,32 @@ impl ArtifactManifest {
                         KvSpec { n_layer: need_usize(c, "n_layer")?, shape },
                     );
                 }
-                let record = DecodeRecord { buckets: dbuckets, caches };
+                let dec_max = dbuckets.iter().copied().max().unwrap_or(0);
+                // `slots` sizes the slot arena; older manifests don't carry
+                // it, and the only always-valid value is the largest decode
+                // bucket, so that's the default
+                let slots = match d.get("slots") {
+                    None => dec_max,
+                    Some(s) => s.as_usize().ok_or_else(|| {
+                        Error::Artifact("manifest: `decode.slots` not a number".into())
+                    })?,
+                };
+                if slots < dec_max {
+                    return Err(Error::Artifact(format!(
+                        "decode.slots = {slots} is smaller than the largest decode \
+                         bucket {dec_max} — the arena could not hold a full step \
+                         batch; re-run the AOT export"
+                    )));
+                }
+                if !dbuckets.contains(&slots) {
+                    return Err(Error::Artifact(format!(
+                        "decode.slots = {slots} has no exported step graph \
+                         (decode buckets: {}) — arena steps run at the `slots` \
+                         bucket; re-run the AOT export",
+                        join_buckets(&dbuckets)
+                    )));
+                }
+                let record = DecodeRecord { buckets: dbuckets, slots, caches };
                 // the scheduler chunks decode steps by the *main* bucket
                 // cap; a decode record that cannot fit the largest main
                 // bucket would pass load and then fail mid-request on the
@@ -618,6 +650,64 @@ mod tests {
         assert_eq!(dec.bucket_for(9).unwrap(), 32);
         let err = dec.bucket_for(40).unwrap_err().to_string();
         assert!(err.contains("8, 32"), "{err}");
+        // a record without `slots` defaults to the largest decode bucket
+        assert_eq!(dec.slots, 32);
+    }
+
+    #[test]
+    fn decode_slots_parsed_and_validated() {
+        // explicit slots equal to the largest decode bucket loads
+        let dir = std::env::temp_dir().join("nt_manifest_slots_ok");
+        write_manifest(
+            &dir,
+            r#"{
+            "format": 1, "calib_batch": 32, "buckets": [8, 32],
+            "groups": {"pc": 0}, "models": {}, "graphs": [],
+            "decode": {"buckets": [8, 32], "slots": 32, "caches": {}}
+        }"#,
+        );
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.decode.as_ref().unwrap().slots, 32);
+
+        // slots smaller than the largest decode bucket cannot hold a full
+        // step batch
+        let dir = std::env::temp_dir().join("nt_manifest_slots_small");
+        write_manifest(
+            &dir,
+            r#"{
+            "format": 1, "calib_batch": 32, "buckets": [8, 32],
+            "groups": {"pc": 0}, "models": {}, "graphs": [],
+            "decode": {"buckets": [8, 32], "slots": 8, "caches": {}}
+        }"#,
+        );
+        let err = ArtifactManifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("decode.slots") && err.contains("32"), "{err}");
+
+        // slots outside the decode bucket set has no step graph to run at
+        let dir = std::env::temp_dir().join("nt_manifest_slots_nograph");
+        write_manifest(
+            &dir,
+            r#"{
+            "format": 1, "calib_batch": 32, "buckets": [8, 32],
+            "groups": {"pc": 0}, "models": {}, "graphs": [],
+            "decode": {"buckets": [8, 32], "slots": 64, "caches": {}}
+        }"#,
+        );
+        let err = ArtifactManifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("no exported step graph"), "{err}");
+
+        // non-numeric slots is a strict parse error
+        let dir = std::env::temp_dir().join("nt_manifest_slots_nan");
+        write_manifest(
+            &dir,
+            r#"{
+            "format": 1, "calib_batch": 32, "buckets": [8, 32],
+            "groups": {"pc": 0}, "models": {}, "graphs": [],
+            "decode": {"buckets": [8, 32], "slots": "many", "caches": {}}
+        }"#,
+        );
+        let err = ArtifactManifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("decode.slots"), "{err}");
     }
 
     #[test]

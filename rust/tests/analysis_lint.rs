@@ -158,7 +158,7 @@ fn good_fixture_is_clean() {
 
 #[test]
 fn bad_manifest_fixture_matches_golden_code_set() {
-    // tests/fixtures/analysis/bad/manifest.json packs six violation
+    // tests/fixtures/analysis/bad/manifest.json packs seven violation
     // classes; the walk must surface all of them in one run
     let ctx = CheckContext {
         manifest_dir: Some(fixture_dir("bad")),
@@ -168,6 +168,7 @@ fn bad_manifest_fixture_matches_golden_code_set() {
         codes::MANIFEST_KEY,       // no calib_batch
         codes::MANIFEST_GROUPS,    // {"g32": 64} tag/size drift
         codes::DECODE_RECORD,      // rank-2 decode cache shape
+        codes::ARENA_SLOTS,        // slots 4 < largest decode bucket 8
         codes::DECODE_BUCKET_GAP,  // decode max bucket 8 < main max 32
         codes::GRAPH_FILE_MISSING, // HLO file absent from the fixture dir
         codes::GRAPH_DUPLICATE,    // (nt-tiny, embed.b8) listed twice
@@ -612,7 +613,7 @@ fn garbage_recipe_fixture_is_nt0601() {
 fn corpus_covers_every_stable_code() {
     let mut fired: BTreeSet<&'static str> = BTreeSet::new();
 
-    // NT0101/NT0102/NT0104 + the bad fixture's six
+    // NT0101/NT0102/NT0104 + the bad fixture's seven
     fired.extend(code_set(&CheckContext {
         manifest_dir: Some(fixture_dir("bad")),
         ..CheckContext::default()

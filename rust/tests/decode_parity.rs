@@ -9,8 +9,9 @@
 //! cache-threading, masking, or position bug shows up as a token mismatch.
 
 use normtweak::error::{Error, Result};
+use normtweak::eval::decode::{self, lock_arena};
 use normtweak::eval::generate::{generate, SampleConfig};
-use normtweak::eval::{DecodeSession, KvCache, LanguageModel};
+use normtweak::eval::{ArenaSlot, DecodeSession, KvArena, KvCache, LanguageModel, SharedKvArena};
 use normtweak::model::ModelConfig;
 use normtweak::tensor::Tensor;
 
@@ -102,10 +103,126 @@ impl LanguageModel for Cached {
                 KvCache::Recompute => {
                     return Err(Error::Config("cached mock got a recompute session".into()))
                 }
+                KvCache::Slot(_) => {
+                    return Err(Error::Config("stacked mock got a slot-resident session".into()))
+                }
             };
             let state = Tensor::f32(&[1, 1, 1, 1], vec![sum as f32]);
             s.kv = KvCache::Layers(vec![(state.clone(), state)]);
             s.logits = one_hot(pref(sum, s.tokens.len(), v), v);
+        }
+        Ok(())
+    }
+}
+
+/// Slot-arena mock: the same prefix-sum semantics as [`Cached`], but the
+/// running sum lives inside a real [`KvArena`] — batched admission via
+/// `try_reserve`/`write_row`, per-step in-place arena updates through
+/// `take_layer`/`put_layer`, recompute fallback when the arena is full.
+/// Exactly the cache discipline the XLA runners use, minus the graphs.
+struct ArenaMock {
+    cfg: ModelConfig,
+    arena: SharedKvArena,
+}
+
+impl ArenaMock {
+    fn new(cfg: ModelConfig, slots: usize) -> Self {
+        let arena = KvArena::shared(1, 1, cfg.seq, 1, slots);
+        ArenaMock { cfg, arena }
+    }
+}
+
+impl LanguageModel for ArenaMock {
+    fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn logits(&self, tokens: &Tensor) -> Result<Tensor> {
+        mix_logits(&self.cfg, tokens)
+    }
+
+    fn supports_decode(&self) -> bool {
+        true
+    }
+
+    fn kv_arena(&self) -> Option<SharedKvArena> {
+        Some(self.arena.clone())
+    }
+
+    fn prefill(&self, prompts: &[Vec<i32>]) -> Result<Vec<DecodeSession>> {
+        let v = self.cfg.vocab;
+        let seq = self.cfg.seq;
+        let b = prompts.len();
+        let mut sums = Vec::with_capacity(b);
+        for p in prompts {
+            if p.is_empty() {
+                return Err(Error::Config("empty prompt".into()));
+            }
+            sums.push(p.iter().map(|&t| t as i64).sum::<i64>());
+        }
+        // batched admission: all-or-nothing; a full arena falls back to
+        // recompute sessions rather than failing the request
+        let Some(ids) = lock_arena(&self.arena).try_reserve(b) else {
+            return decode::recompute_prefill(self, prompts);
+        };
+        // one batched "prefill output": row r carries row r's running sum
+        let mut kd = vec![0.0f32; b * seq];
+        for (r, &sum) in sums.iter().enumerate() {
+            kd[r * seq] = sum as f32;
+        }
+        let k = Tensor::f32(&[b, 1, seq, 1], kd.clone());
+        let vv = Tensor::f32(&[b, 1, seq, 1], kd);
+        {
+            let mut g = lock_arena(&self.arena);
+            for (r, &slot) in ids.iter().enumerate() {
+                g.write_row(0, slot, &k, &vv, r)?;
+                g.note(slot, *prompts[r].last().unwrap(), (prompts[r].len() - 1) as i32);
+            }
+        }
+        Ok(prompts
+            .iter()
+            .zip(sums)
+            .zip(ids)
+            .map(|((p, sum), slot)| DecodeSession {
+                tokens: p.clone(),
+                logits: one_hot(pref(sum, p.len(), v), v),
+                kv: KvCache::Slot(ArenaSlot::new(self.arena.clone(), slot)),
+            })
+            .collect())
+    }
+
+    fn decode_step(&self, sessions: &mut [&mut DecodeSession]) -> Result<()> {
+        let v = self.cfg.vocab;
+        let seq = self.cfg.seq;
+        let mut slotted: Vec<(usize, &mut DecodeSession)> = Vec::new();
+        let mut rest: Vec<&mut DecodeSession> = Vec::new();
+        for s in sessions.iter_mut() {
+            let slot = match &s.kv {
+                KvCache::Slot(a) => Some(a.index()),
+                _ => None,
+            };
+            match slot {
+                Some(i) => slotted.push((i, &mut **s)),
+                None => rest.push(&mut **s),
+            }
+        }
+        if !slotted.is_empty() {
+            let mut g = lock_arena(&self.arena);
+            let (mut k, kv) = g.take_layer(0)?;
+            {
+                let kd = k.as_f32_mut()?;
+                for (slot, s) in slotted.iter_mut() {
+                    let last = *s.tokens.last().unwrap() as i64;
+                    let sum = kd[*slot * seq] as i64 + last;
+                    kd[*slot * seq] = sum as f32;
+                    s.logits = one_hot(pref(sum, s.tokens.len(), v), v);
+                    g.note(*slot, last as i32, (s.tokens.len() - 1) as i32);
+                }
+            }
+            g.put_layer(0, k, kv)?;
+        }
+        if !rest.is_empty() {
+            decode::recompute_decode_step(self, &mut rest)?;
         }
         Ok(())
     }
@@ -218,6 +335,119 @@ fn continuous_batching_interleave_matches_solo_generation() {
     }
     assert_eq!(sessions[0].tokens, solo_a[0]);
     assert_eq!(sessions[1].tokens, solo_b[0]);
+}
+
+#[test]
+fn arena_sessions_match_recompute_path_token_for_token() {
+    let cfg = ModelConfig::builtin("nt-tiny").unwrap();
+    let plain = Plain(cfg.clone());
+    let arena = ArenaMock::new(cfg, 4);
+    let prompts = vec![vec![2, 4, 6], vec![11], vec![300, 301]];
+    let a = generate(&plain, &prompts, 10, &greedy()).unwrap();
+    let b = generate(&arena, &prompts, 10, &greedy()).unwrap();
+    assert_eq!(a, b, "slot-arena decode must be token-identical to recompute");
+    // generate() retired every session; the arena must be fully drained
+    assert_eq!(lock_arena(&arena.arena).occupancy(), 0);
+}
+
+#[test]
+fn arena_matches_stacked_cached_path() {
+    // the arena is a drop-in replacement for the legacy stacked per-session
+    // caches: same tokens, greedy and stochastic
+    let cfg = ModelConfig::builtin("nt-tiny").unwrap();
+    let cached = Cached(cfg.clone());
+    let arena = ArenaMock::new(cfg, 4);
+    let prompts = vec![vec![2, 4, 6], vec![11], vec![300, 301]];
+    let a = generate(&cached, &prompts, 10, &greedy()).unwrap();
+    let b = generate(&arena, &prompts, 10, &greedy()).unwrap();
+    assert_eq!(a, b, "arena and stacked caches must agree");
+    let sc = SampleConfig { temperature: 0.8, stochastic_prefix: 6, seed: 0xFEED };
+    let a = generate(&cached, &prompts, 9, &sc).unwrap();
+    let b = generate(&arena, &prompts, 9, &sc).unwrap();
+    assert_eq!(a, b, "same seed, same logits -> same sampled stream");
+}
+
+#[test]
+fn arena_slots_are_reused_after_retirement() {
+    let cfg = ModelConfig::builtin("nt-tiny").unwrap();
+    let solo = generate(&Plain(cfg.clone()), &[vec![10, 20]], 8, &greedy()).unwrap();
+    let m = ArenaMock::new(cfg, 1);
+
+    let first = generate(&m, &[vec![10, 20]], 8, &greedy()).unwrap();
+    assert_eq!(first, solo);
+    assert_eq!(lock_arena(&m.arena).occupancy(), 0, "retirement must free the slot");
+
+    // the freed slot serves a second generation with no cross-talk from
+    // the first occupant's rows
+    let second = generate(&m, &[vec![10, 20]], 8, &greedy()).unwrap();
+    assert_eq!(second, solo);
+    assert_eq!(lock_arena(&m.arena).occupancy(), 0);
+}
+
+#[test]
+fn arena_exhaustion_falls_back_to_recompute_sessions() {
+    let cfg = ModelConfig::builtin("nt-tiny").unwrap();
+    let m = ArenaMock::new(cfg.clone(), 1);
+    // batched admission is all-or-nothing: two prompts cannot both fit a
+    // one-slot arena, so both ride the recompute fallback
+    let sessions = m.prefill(&[vec![5], vec![6]]).unwrap();
+    assert!(sessions.iter().all(|s| matches!(s.kv, KvCache::Recompute)));
+    assert_eq!(lock_arena(&m.arena).occupancy(), 0);
+    drop(sessions);
+    // and generation through the fallback still matches recompute
+    let prompts = vec![vec![2, 4, 6], vec![11]];
+    let a = generate(&Plain(cfg), &prompts, 10, &greedy()).unwrap();
+    let b = generate(&m, &prompts, 10, &greedy()).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn arena_chunked_admission_interleaves_with_decode() {
+    // admission chunks land at different times while earlier residents keep
+    // stepping — the engine's chunked-prefill interleaving — and every
+    // session still matches its solo generation
+    let cfg = ModelConfig::builtin("nt-tiny").unwrap();
+    let m = ArenaMock::new(cfg, 4);
+    let target = 8;
+    let solo_a = generate(&m, &[vec![10, 20]], target, &greedy()).unwrap();
+    let solo_b = generate(&m, &[vec![500]], target, &greedy()).unwrap();
+    let solo_c = generate(&m, &[vec![7, 8, 9]], target, &greedy()).unwrap();
+
+    // chunk 1: A admitted alone, takes a decode turn
+    let mut sessions = m.prefill(&[vec![10, 20]]).unwrap();
+    assert!(matches!(sessions[0].kv, KvCache::Slot(_)));
+    let tok = sessions[0].greedy_next();
+    sessions[0].tokens.push(tok);
+    {
+        let (first, _) = sessions.split_at_mut(1);
+        let mut refs = vec![&mut first[0]];
+        m.decode_step(&mut refs).unwrap();
+    }
+
+    // chunk 2: B and C admitted together mid-stream; everyone steps from here
+    sessions.extend(m.prefill(&[vec![500], vec![7, 8, 9]]).unwrap());
+    assert_eq!(lock_arena(&m.arena).occupancy(), 3);
+    loop {
+        for s in sessions.iter_mut() {
+            if s.tokens.len() < target {
+                let tok = s.greedy_next();
+                s.tokens.push(tok);
+            }
+        }
+        let mut refs: Vec<&mut DecodeSession> = sessions
+            .iter_mut()
+            .filter(|s| s.tokens.len() < target)
+            .collect();
+        if refs.is_empty() {
+            break;
+        }
+        m.decode_step(&mut refs).unwrap();
+    }
+    assert_eq!(sessions[0].tokens, solo_a[0]);
+    assert_eq!(sessions[1].tokens, solo_b[0]);
+    assert_eq!(sessions[2].tokens, solo_c[0]);
+    drop(sessions);
+    assert_eq!(lock_arena(&m.arena).occupancy(), 0);
 }
 
 #[test]

@@ -466,6 +466,94 @@ fn midstream_admission_joins_running_batch() {
 }
 
 #[test]
+fn chunked_admission_interleaves_with_decode_turns() {
+    // a deep admission backlog (5 riders, bucket 2 -> 3 prefill chunks)
+    // must not stall the stream that is already running: prefill and
+    // decode turns strictly alternate while both kinds of work exist
+    let log = log();
+    let mut mock = Mock::new("m", log.clone());
+    mock.cap = Some(2); // largest "exported bucket"
+    let mut engine = Engine::builder()
+        .model_with(
+            "m",
+            ModelTuning { max_batch: 8, batch_window: Duration::from_millis(5) },
+            mock.factory(),
+        )
+        .warmup(false)
+        .build()
+        .unwrap();
+    let client = engine.client();
+    // A streams for a while; B..E retire at their prefill
+    let a = client.submit("m", GenRequest::greedy(vec![1, 10], 4)).unwrap();
+    let rest: Vec<_> = (0..4)
+        .map(|i| client.submit("m", GenRequest::greedy(vec![1, 20 + i], 1)).unwrap())
+        .collect();
+    engine.start().unwrap();
+
+    assert_eq!(a.wait().unwrap().tokens, vec![1, 10, 11, 12, 13, 14]);
+    for (i, t) in rest.into_iter().enumerate() {
+        let tok = 20 + i as i32;
+        assert_eq!(t.wait().unwrap().tokens, vec![1, tok, tok + 1]);
+    }
+
+    let stats = engine.shutdown().unwrap();
+    let m = stats.model("m").unwrap();
+    assert_eq!(m.served, 5);
+    assert_eq!(m.batches, 3, "5 riders cut to bucket 2 = 3 prefill chunks");
+    assert_eq!(m.decode_steps, 3, "A decodes 3 tokens past its prefill");
+    // one admission drain staged all 5 riders at once
+    assert_eq!(m.admission_batch.count(), 1);
+    assert_eq!(m.admission_batch.max(), 5);
+    // the exact turn schedule: prefill[A,B], step[A], prefill[C,D],
+    // step[A], prefill[E], step[A] — chunks interleave with decode
+    let sizes: Vec<usize> = log.lock().unwrap().iter().map(|e| e.1).collect();
+    assert_eq!(sizes, vec![2, 1, 2, 1, 1, 1], "prefill chunks must interleave with decode turns");
+}
+
+#[test]
+fn deadline_rider_rides_the_first_prefill_chunk() {
+    // chunking follows queue order, and the queue is deadline-sorted: an
+    // urgent rider must land in the admission group's *first* chunk, not
+    // wait out earlier FIFO chunks' prefills
+    let log = log();
+    let mut mock = Mock::new("m", log.clone());
+    mock.cap = Some(2);
+    let mut engine = Engine::builder()
+        .model_with(
+            "m",
+            ModelTuning { max_batch: 8, batch_window: Duration::from_millis(5) },
+            mock.factory(),
+        )
+        .warmup(false)
+        .build()
+        .unwrap();
+    let client = engine.client();
+    let relaxed: Vec<_> = (0..3)
+        .map(|i| client.submit("m", GenRequest::greedy(vec![1, 50 + i], 1)).unwrap())
+        .collect();
+    let urgent = client
+        .submit(
+            "m",
+            GenRequest::greedy(vec![1, 60], 1).with_deadline(Duration::from_millis(300)),
+        )
+        .unwrap();
+    engine.start().unwrap();
+    urgent.wait().unwrap();
+    for t in relaxed {
+        t.wait().unwrap();
+    }
+    let stats = engine.shutdown().unwrap();
+    let m = stats.model("m").unwrap();
+    assert_eq!(m.served, 4);
+    assert_eq!(m.deadline_missed, 0);
+    assert_eq!(m.batches, 2, "4 riders cut to bucket 2 = 2 prefill chunks");
+    let order = log.lock().unwrap().clone();
+    let sizes: Vec<usize> = order.iter().map(|e| e.1).collect();
+    assert_eq!(sizes, vec![2, 2]);
+    assert_eq!(order[0].2, 60, "urgent rider must lead the first chunk: {order:?}");
+}
+
+#[test]
 fn mixed_sample_configs_ride_one_batch() {
     // per-request sampling streams: a greedy and a sampled request share
     // the same prefill and decode batches (the old scheduler split them)

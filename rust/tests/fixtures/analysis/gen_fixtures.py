@@ -76,6 +76,7 @@ def manifest_header(cfg):
         "groups": GROUPS,
         "decode": {
             "buckets": aot.EXPORT_BUCKETS,
+            "slots": max(aot.EXPORT_BUCKETS),
             "caches": {cfg.name: {
                 "n_layer": cfg.n_layer,
                 "shape": [cfg.n_head, cfg.seq, cfg.d_head],
